@@ -1,0 +1,65 @@
+//! Resource contention: TonY/YARN vs ad-hoc launch scripts (paper §1).
+//!
+//! Reproduces the paper's motivation table: co-tenant jobs on a shared
+//! pool, sweeping oversubscription.  The ad-hoc pool loses jobs to OOM
+//! and config errors; the managed path queues instead and finishes
+//! everything.
+//!
+//! ```sh
+//! cargo run --release --example contention
+//! ```
+
+use tony::baseline::{run_adhoc_pool, run_managed_pool, synthetic_jobs, AdhocOutcome, AdhocParams};
+use tony::yarn::Resource;
+
+fn main() {
+    tony::util::logging::init_from_env();
+    let hosts = vec![Resource::mem_cores(8192, 8); 4]; // 32 GiB pool
+    println!("pool: 4 hosts x 8 GiB; jobs: 2 tasks x 2 GiB each, 60 s runtime\n");
+    println!(
+        "{:>6} {:>8} | {:>9} {:>6} {:>8} | {:>9} {:>12}",
+        "jobs", "demand", "adhoc-ok", "oom", "misconf", "tony-ok", "tony-makespan"
+    );
+
+    for n_jobs in [4u32, 8, 12, 16, 24, 32] {
+        let jobs = synthetic_jobs(n_jobs, 2, 2048, 60_000);
+        let demand = (n_jobs as u64 * 2 * 2048) as f64 / (4.0 * 8192.0);
+
+        // Average the ad-hoc outcome over several seeds (users place by
+        // hand differently every time).
+        let mut ok = 0usize;
+        let mut oom = 0usize;
+        let mut mis = 0usize;
+        let seeds = 20u64;
+        for seed in 0..seeds {
+            let params = AdhocParams { per_host_config_error: 0.02, seed };
+            for r in run_adhoc_pool(&hosts, &jobs, &params) {
+                match r.outcome {
+                    AdhocOutcome::Succeeded => ok += 1,
+                    AdhocOutcome::OomKilled => oom += 1,
+                    AdhocOutcome::Misconfigured => mis += 1,
+                }
+            }
+        }
+        let tot = (n_jobs as usize * seeds as usize) as f64;
+
+        let managed = run_managed_pool(&hosts, &jobs);
+        let tony_ok = managed.iter().filter(|r| r.outcome == AdhocOutcome::Succeeded).count();
+        let makespan = managed.iter().map(|r| r.finished_at_ms).max().unwrap_or(0);
+
+        println!(
+            "{:>6} {:>7.0}% | {:>8.1}% {:>5.1}% {:>7.1}% | {:>8.1}% {:>11.1}s",
+            n_jobs,
+            demand * 100.0,
+            ok as f64 / tot * 100.0,
+            oom as f64 / tot * 100.0,
+            mis as f64 / tot * 100.0,
+            tony_ok as f64 / n_jobs as f64 * 100.0,
+            makespan as f64 / 1e3,
+        );
+    }
+    println!(
+        "\nTonY keeps success at 100% by queuing (makespan grows); the ad-hoc pool \
+         sheds jobs via OOM as oversubscription rises — the paper's §1 story."
+    );
+}

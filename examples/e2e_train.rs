@@ -1,0 +1,126 @@
+//! End-to-end validation driver (DESIGN.md §5): train the transformer LM
+//! through the FULL stack — client → RM → AM → TaskExecutors → PS/worker
+//! TCP protocol → PJRT-executed AOT artifacts — for a few hundred steps,
+//! log the loss curve, inject a mid-run worker kill to demonstrate
+//! checkpoint-restore, and write the run record EXPERIMENTS.md cites.
+//!
+//! ```sh
+//! make artifacts PRESETS=tiny,small
+//! cargo run --release --example e2e_train -- [preset] [steps] [workers] [ps]
+//! # defaults: small 300 2 2
+//! ```
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use tony::chaos::{ChaosInjector, Fault};
+use tony::client::TonyClient;
+use tony::portal::Portal;
+use tony::tonyconf::JobConfBuilder;
+use tony::yarn::{AppState, Resource, ResourceManager};
+
+fn main() -> anyhow::Result<()> {
+    tony::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(|s| s.as_str()).unwrap_or("small").to_string();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let workers: u32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let ps: u32 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let artifacts = std::path::PathBuf::from(format!("artifacts/{preset}"));
+    anyhow::ensure!(
+        artifacts.join("meta.json").exists(),
+        "run `make artifacts PRESETS={preset}` first"
+    );
+    let meta = tony::runtime::ArtifactMeta::load(&artifacts)?;
+    println!(
+        "== e2e: preset={preset} ({} params), {steps} steps, {workers} workers + {ps} ps ==",
+        meta.n_params
+    );
+
+    // 6-node cluster.
+    let rm = ResourceManager::start_uniform(6, Resource::new(8192, 8, 0));
+    let ckpt = std::env::temp_dir().join(format!("tony-e2e-{preset}"));
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    let conf = JobConfBuilder::new("e2e-train")
+        .instances("worker", workers)
+        .memory("worker", "2g")
+        .instances("ps", ps)
+        .memory("ps", "2g")
+        .train(artifacts.to_str().unwrap(), &preset, steps)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "50")
+        .set("tony.train.eval-every", "50")
+        .set("tony.train.lr", "0.001")
+        .set("tony.application.max-attempts", "3")
+        .build();
+
+    let t0 = Instant::now();
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &artifacts)?;
+    let portal = Portal::start(handle.am_state.clone(), rm.clone())?;
+    println!("portal: {} (open /losses for the live curve)", portal.url());
+
+    // Mid-run fault: kill worker 1 around 40% of the run to demonstrate
+    // the §2.2 teardown → relaunch → checkpoint-restore loop.
+    let kill_at = (steps * 2) / 5;
+    let chaos = ChaosInjector::start(
+        rm.clone(),
+        handle.am_state.clone(),
+        vec![Fault::KillTask { task_type: "worker".into(), index: workers - 1, after_step: kill_at }],
+    );
+
+    let report = handle.wait(Duration::from_secs(3600))?;
+    let records = chaos.join();
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(report.state == AppState::Finished, "job failed: {}", report.diagnostics);
+
+    let m = handle.am_state.chief_metrics().unwrap();
+    let attempts = handle.am_state.attempt();
+    println!(
+        "finished in {wall:.1}s over {attempts} attempt(s); final loss {:.4}, eval {:.4}",
+        m.loss, m.eval_loss
+    );
+    println!("tokens trained: {} ({:.0} tokens/s)", m.tokens_done, m.tokens_done as f64 / wall);
+    for r in &records {
+        println!(
+            "fault injected at t+{}ms (chief step {}): {:?}",
+            r.injected_at_ms, r.chief_step_at_injection, r.fault
+        );
+    }
+
+    // Persist the loss curve + run record.
+    std::fs::create_dir_all("runs")?;
+    let csv_path = format!("runs/e2e_{preset}_loss.csv");
+    let mut csv = std::fs::File::create(&csv_path)?;
+    writeln!(csv, "step,loss")?;
+    for (s, l) in &m.loss_history {
+        writeln!(csv, "{s},{l}")?;
+    }
+    let rec_path = format!("runs/e2e_{preset}_record.md");
+    let mut rec = std::fs::File::create(&rec_path)?;
+    writeln!(
+        rec,
+        "# e2e run record\n\n- preset: {preset} ({} params)\n- topology: {workers} workers + {ps} ps (sync)\n\
+         - steps: {steps} (fault at step {kill_at}, attempts used: {attempts})\n\
+         - wall: {wall:.1}s, {:.2} steps/s, {:.0} tokens/s\n- first loss: {:.4}\n- final loss: {:.4}\n\
+         - final eval loss: {:.4}\n- loss curve: {csv_path}\n",
+        meta.n_params,
+        steps as f64 / wall,
+        m.tokens_done as f64 / wall,
+        m.loss_history.first().map(|x| x.1).unwrap_or(f32::NAN),
+        m.loss,
+        m.eval_loss
+    )?;
+    println!("wrote {rec_path} and {csv_path}");
+
+    let first = m.loss_history.first().map(|x| x.1).unwrap_or(f32::NAN);
+    anyhow::ensure!(
+        m.loss < first,
+        "loss did not decrease: {first} -> {}",
+        m.loss
+    );
+    let _ = std::fs::remove_dir_all(&ckpt);
+    Ok(())
+}

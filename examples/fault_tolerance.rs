@@ -1,0 +1,97 @@
+//! Fault-tolerance walkthrough (paper §2.2): watch the AM recover from a
+//! task kill AND a node kill, printing the recovery timeline.
+//!
+//! ```sh
+//! cargo run --release --example fault_tolerance
+//! ```
+
+use std::time::{Duration, Instant};
+
+use tony::chaos::{ChaosInjector, Fault};
+use tony::client::TonyClient;
+use tony::tonyconf::JobConfBuilder;
+use tony::yarn::{AppState, NodeSpec, QueueConf, Resource, ResourceManager};
+
+fn main() -> anyhow::Result<()> {
+    tony::util::logging::init_from_env();
+    let artifacts = std::path::Path::new("artifacts/tiny");
+    anyhow::ensure!(
+        artifacts.join("meta.json").exists(),
+        "run `make artifacts` first"
+    );
+
+    // Node 0 fits only the AM, so node kills never take the master down.
+    let specs = vec![
+        NodeSpec::new(0, Resource::new(1024, 2, 0)),
+        NodeSpec::new(1, Resource::new(8192, 8, 0)),
+        NodeSpec::new(2, Resource::new(8192, 8, 0)),
+        NodeSpec::new(3, Resource::new(8192, 8, 0)),
+    ];
+    let rm = ResourceManager::start(specs, QueueConf::default_only());
+    let ckpt = std::env::temp_dir().join("tony-ft-example");
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    let steps = 24u64;
+    let conf = JobConfBuilder::new("ft-demo")
+        .instances("worker", 2)
+        .memory("worker", "1g")
+        .instances("ps", 1)
+        .memory("ps", "1g")
+        .train(artifacts.to_str().unwrap(), "tiny", steps)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "4")
+        .set("tony.application.max-attempts", "4")
+        .build();
+
+    let t0 = Instant::now();
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, artifacts)?;
+
+    println!("schedule: kill worker:1 after step 6, then kill node1 after step 14");
+    let chaos = ChaosInjector::start(
+        rm.clone(),
+        handle.am_state.clone(),
+        vec![
+            Fault::KillTask { task_type: "worker".into(), index: 1, after_step: 6 },
+            Fault::KillNode { node: 1, after_step: 14 },
+        ],
+    );
+
+    // Timeline printer.
+    let state = handle.am_state.clone();
+    let timeline = std::thread::spawn(move || {
+        let mut last = (0u32, String::new(), 0u64);
+        loop {
+            let phase = format!("{:?}", state.phase());
+            let attempt = state.attempt();
+            let step = state.chief_metrics().map(|m| m.step).unwrap_or(0);
+            if (attempt, phase.clone(), step) != last {
+                println!(
+                    "[t+{:>6.1}s] attempt={attempt} phase={phase} chief_step={step}",
+                    t0.elapsed().as_secs_f64()
+                );
+                last = (attempt, phase.clone(), step);
+            }
+            if phase == "Succeeded" || phase == "Failed" {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    });
+
+    let report = handle.wait(Duration::from_secs(900))?;
+    let records = chaos.join();
+    let _ = timeline.join();
+
+    println!("\nfinal: {:?} in {:.1}s — {}", report.state, t0.elapsed().as_secs_f64(), report.diagnostics);
+    for r in &records {
+        println!("  fault fired at t+{}ms (chief step {}): {:?}", r.injected_at_ms, r.chief_step_at_injection, r.fault);
+    }
+    println!("  attempts used: {}", handle.am_state.attempt());
+    println!("  alive nodes:   {}/{}", rm.alive_node_count(), rm.node_count());
+    let m = handle.am_state.chief_metrics().unwrap();
+    println!("  chief reached step {} (target {steps}); final loss {:.4}", m.step, m.loss);
+    anyhow::ensure!(report.state == AppState::Finished, "expected recovery");
+    let _ = std::fs::remove_dir_all(&ckpt);
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Workflow-manager integration (paper §2.1): a distributed training job
+//! as one node of a larger pipeline — data-prep → train (TonY job type)
+//! → evaluate → deploy — on the Azkaban-role DAG engine.
+//!
+//! ```sh
+//! cargo run --release --example workflow_pipeline
+//! ```
+
+use std::time::Duration;
+
+use tony::tonyconf::JobConfBuilder;
+use tony::workflow::{JobStatus, Workflow};
+use tony::yarn::{Resource, ResourceManager};
+
+fn main() -> anyhow::Result<()> {
+    tony::util::logging::init_from_env();
+    let artifacts = std::path::Path::new("artifacts/tiny");
+    anyhow::ensure!(
+        artifacts.join("meta.json").exists(),
+        "run `make artifacts` first"
+    );
+    let rm = ResourceManager::start_uniform(4, Resource::new(8192, 8, 0));
+
+    let work = std::env::temp_dir().join("tony-wf-example");
+    let _ = std::fs::remove_dir_all(&work);
+    std::fs::create_dir_all(&work)?;
+    let corpus_path = work.join("corpus.txt");
+    let ckpt = work.join("ckpt");
+    let model_out = work.join("model-release");
+
+    let conf = JobConfBuilder::new("wf-train")
+        .instances("worker", 2)
+        .memory("worker", "1g")
+        .instances("ps", 1)
+        .memory("ps", "1g")
+        .train(artifacts.to_str().unwrap(), "tiny", 10)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "5")
+        .build();
+
+    let mut wf = Workflow::new("ml-pipeline");
+    // 1. Data prep (the Spark/MapReduce stand-in): generate a corpus file.
+    {
+        let corpus_path = corpus_path.clone();
+        wf.add_command("data-prep", &[], move || {
+            let c = tony::data::SyntheticCorpus::new(256, 7);
+            let toks = c.sequence(0, 0, 0, 64 * 1024);
+            std::fs::write(&corpus_path, tony::data::decode_bytes(&toks))?;
+            println!("[data-prep] wrote {} bytes", std::fs::metadata(&corpus_path)?.len());
+            Ok(())
+        });
+    }
+    // 2. Distributed training via the TonY job-type plugin.
+    wf.add_tony_job("train", &["data-prep"], conf, artifacts);
+    // 3. Evaluate: load the final checkpoint and sanity-check it.
+    {
+        let ckpt = ckpt.clone();
+        wf.add_command("evaluate", &["train"], move || {
+            let store = tony::checkpoint::CheckpointStore::new(&ckpt);
+            let latest = store
+                .latest()?
+                .ok_or_else(|| anyhow::anyhow!("no checkpoint produced"))?;
+            anyhow::ensure!(latest.params.iter().all(|p| p.is_finite()));
+            println!(
+                "[evaluate] checkpoint step {} with {} finite params — OK",
+                latest.step,
+                latest.params.len()
+            );
+            Ok(())
+        });
+    }
+    // 4. Deploy: "publish" the model artifact.
+    {
+        let ckpt = ckpt.clone();
+        let model_out = model_out.clone();
+        wf.add_command("deploy", &["evaluate"], move || {
+            std::fs::create_dir_all(&model_out)?;
+            let store = tony::checkpoint::CheckpointStore::new(&ckpt);
+            let latest = store.latest()?.unwrap();
+            std::fs::write(model_out.join("model.tony"), latest.encode())?;
+            println!("[deploy] published to {}", model_out.display());
+            Ok(())
+        });
+    }
+
+    let records = wf.run(&rm, Duration::from_secs(600))?;
+    println!("\npipeline results:");
+    println!("{:<12} {:<10} {:>8} {:>9}", "job", "status", "attempts", "ms");
+    for r in &records {
+        println!("{:<12} {:<10?} {:>8} {:>9}", r.name, r.status, r.attempts, r.duration_ms);
+    }
+    anyhow::ensure!(
+        records.iter().all(|r| r.status == JobStatus::Succeeded),
+        "pipeline failed"
+    );
+    let _ = std::fs::remove_dir_all(&work);
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT pipeline: lower the L2/L1 computations to HLO text artifacts.
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  (See /opt/xla-example/README.md.)
+
+Per preset this emits into ``artifacts/<preset>/``:
+
+  worker_step.hlo.txt   (params f32[N], tokens i32[B,S+1]) -> (loss, grads)
+  eval_loss.hlo.txt     (params f32[N], tokens i32[B,S+1]) -> (loss,)
+  init_params.hlo.txt   (seed u32)                         -> (params f32[N],)
+  ps_adam.hlo.txt       (p,g,m,v f32[C], step f32, lr f32) -> (p',m',v')
+  meta.json             model dims, N, chunk length C, Adam hypers
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary loads
+these artifacts via PJRT and is self-contained afterwards.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Flat parameter chunk length per PS shard unit.  Shards hold
+# ceil(share / CHUNK) chunks; the tail chunk is zero-padded (pad lanes stay
+# exactly zero under Adam with zero grads — tested in test_adam.py).
+DEFAULT_CHUNK = 1 << 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(preset: str, chunk: int = DEFAULT_CHUNK):
+    """Return {artifact_name: hlo_text} plus the meta dict for one preset."""
+    cfg = M.PRESETS[preset]
+    n = M.n_params(cfg)
+    chunk = min(chunk, n)
+
+    params_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    chunk_spec = jax.ShapeDtypeStruct((chunk,), jnp.float32)
+    scalar_f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    def worker_step(p, t):
+        return M.worker_step(cfg, p, t)
+
+    def eval_loss(p, t):
+        return (M.eval_loss(cfg, p, t),)
+
+    def init_fn(seed):
+        return (M.init_params(cfg, seed),)
+
+    def ps_adam(p, g, m, v, step, lr):
+        return M.adam_chunk_update(p, g, m, v, step, lr)
+
+    arts = {
+        "worker_step": jax.jit(worker_step).lower(params_spec, tokens_spec),
+        "eval_loss": jax.jit(eval_loss).lower(params_spec, tokens_spec),
+        "init_params": jax.jit(init_fn).lower(seed_spec),
+        "ps_adam": jax.jit(ps_adam).lower(
+            chunk_spec, chunk_spec, chunk_spec, chunk_spec, scalar_f32, scalar_f32),
+    }
+    meta = {
+        "preset": preset,
+        "model": dataclasses.asdict(cfg),
+        "n_params": n,
+        "chunk_len": chunk,
+        "adam": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-8},
+        "artifacts": {k: f"{k}.hlo.txt" for k in arts},
+        # IO signatures the Rust runtime asserts against (shape, dtype).
+        "signatures": {
+            "worker_step": {"in": [["f32", [n]], ["i32", [cfg.batch, cfg.seq_len + 1]]],
+                            "out": [["f32", []], ["f32", [n]]]},
+            "eval_loss": {"in": [["f32", [n]], ["i32", [cfg.batch, cfg.seq_len + 1]]],
+                          "out": [["f32", []]]},
+            "init_params": {"in": [["u32", []]], "out": [["f32", [n]]]},
+            "ps_adam": {"in": [["f32", [chunk]]] * 4 + [["f32", []], ["f32", []]],
+                        "out": [["f32", [chunk]]] * 3},
+        },
+    }
+    return {k: to_hlo_text(v) for k, v in arts.items()}, meta
+
+
+def emit(preset: str, out_dir: str, chunk: int = DEFAULT_CHUNK) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    texts, meta = lower_artifacts(preset, chunk)
+    for name, text in texts.items():
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    total = sum(len(t) for t in texts.values())
+    print(f"[aot] preset={preset} n_params={meta['n_params']} "
+          f"chunk={meta['chunk_len']} -> {out_dir} ({total} chars of HLO)")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts root (per-preset subdirs are created)")
+    ap.add_argument("--presets", default="tiny,small",
+                    help="comma-separated preset names (see model.PRESETS)")
+    ap.add_argument("--chunk", type=int, default=DEFAULT_CHUNK)
+    args = ap.parse_args()
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if preset not in M.PRESETS:
+            raise SystemExit(f"unknown preset {preset!r}; have {list(M.PRESETS)}")
+        emit(preset, os.path.join(args.out, preset), args.chunk)
+
+
+if __name__ == "__main__":
+    main()

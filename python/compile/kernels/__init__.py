@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .adam import adam_update  # noqa: F401
+from .flash_attention import flash_attention, flash_lse  # noqa: F401

@@ -1,0 +1,81 @@
+"""Fused Adam update as a Pallas kernel.
+
+This is the Layer-1 hot-spot of the parameter-server side of the workload:
+each PS shard applies this update to its flat parameter chunk every step.
+Fusing p/m/v into one kernel pass means each operand streams HBM->VMEM
+exactly once per step (vs. >=6 passes for the naive jnp expression before
+XLA fusion); on TPU the whole update is VPU-bound and the BlockSpec below
+tiles the vectors so each program touches one VMEM-resident block.
+
+Checked against ``ref.adam_ref`` by pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Per-program block length.  8192 f32 x 5 operands = 160 KiB of VMEM per
+# program, comfortably inside a TensorCore's ~16 MiB while long enough to
+# amortize grid overhead.
+DEFAULT_BLOCK = 8192
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, step_ref, lr_ref,
+                 p_out, m_out, v_out, *, beta1, beta2, eps):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    step = step_ref[0]
+    lr = lr_ref[0]
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    # Bias correction: beta**step via exp(step * log(beta)) keeps the whole
+    # kernel elementwise (no integer powers in the loop body).
+    c1 = 1.0 - jnp.exp(step * jnp.log(beta1))
+    c2 = 1.0 - jnp.exp(step * jnp.log(beta2))
+    mhat = m2 / c1
+    vhat = v2 / c2
+    p_out[...] = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    m_out[...] = m2
+    v_out[...] = v2
+
+
+def adam_update(p, g, m, v, step, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+                block=DEFAULT_BLOCK, interpret=True):
+    """Fused Adam step over flat f32[N] vectors.
+
+    Args:
+      p, g, m, v: f32[N] (N need not be a multiple of ``block``; the vectors
+        are zero-padded internally and the pad lanes provably stay zero).
+      step: f32 scalar (1-based).
+      lr: f32 scalar.
+
+    Returns:
+      (p', m', v') each f32[N].
+    """
+    n = p.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        z = jnp.zeros((pad,), p.dtype)
+        p, g, m, v = (jnp.concatenate([a, z]) for a in (p, g, m, v))
+    step = jnp.asarray(step, jnp.float32).reshape(1)
+    lr = jnp.asarray(lr, jnp.float32).reshape(1)
+    grid = (p.shape[0] // block,)
+    kernel = functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    p2, m2, v2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec, vec, vec, vec, scalar, scalar],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, jnp.float32)] * 3,
+        interpret=interpret,
+    )(p, g, m, v, step, lr)
+    if pad:
+        p2, m2, v2 = p2[:n], m2[:n], v2[:n]
+    return p2, m2, v2

@@ -1,0 +1,129 @@
+"""Analytic TPU performance model for the Pallas kernels (L1 §Perf).
+
+Pallas on this testbed runs interpret=True (CPU), so wallclock is not a
+TPU proxy.  Instead we estimate, per (block_q, block_k) configuration:
+
+- VMEM footprint per program (must fit ~16 MiB/core with double-buffering),
+- MXU utilization: fraction of each matmul tile that fills the 128x128
+  systolic array,
+- HBM traffic per attention head (the flash refetch factor vs naive), and
+- an arithmetic-intensity-based roofline estimate for a v4-class core
+  (275 TFLOP/s bf16, 1.2 TB/s HBM).
+
+Run ``python -m compile.kernels.estimate`` to print the block-shape sweep
+table recorded in EXPERIMENTS.md §Perf; test_estimate.py asserts the
+invariants (chosen config fits VMEM, utilization maximal among fits).
+"""
+
+import dataclasses
+
+MXU = 128                      # systolic array edge
+VMEM_BYTES = 16 * 2**20        # per-core VMEM
+PEAK_FLOPS = 275e12            # v4-class bf16 peak
+HBM_BW = 1.2e12                # bytes/s
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnShape:
+    seq: int
+    d_head: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockEstimate:
+    block_q: int
+    block_k: int
+    vmem_bytes: int
+    fits_vmem: bool
+    mxu_utilization: float
+    hbm_bytes_per_head: int
+    flops_per_head: float
+    arithmetic_intensity: float
+    est_tflops: float
+
+    @property
+    def roofline_fraction(self) -> float:
+        return self.est_tflops * 1e12 / PEAK_FLOPS
+
+
+def _tile_util(rows: int, cols: int) -> float:
+    """Fraction of the MXU filled by an (rows x cols) matmul tile."""
+    def eff(n):
+        full, rem = divmod(n, MXU)
+        tiles = full + (1 if rem else 0)
+        return n / (tiles * MXU)
+    return eff(rows) * eff(cols)
+
+
+def estimate_attention(shape: AttnShape, block_q: int, block_k: int,
+                       dtype_bytes: int = 4) -> BlockEstimate:
+    s, d = shape.seq, shape.d_head
+    bq, bk = min(block_q, s), min(block_k, s)
+
+    # VMEM per program: Q tile + K tile + V tile + acc + m/l rows, double-
+    # buffered K/V streams (x2).
+    vmem = dtype_bytes * (bq * d + 2 * 2 * bk * d + bq * d + 2 * bq)
+    # Two matmuls per inner tile: (bq x d)@(d x bk) and (bq x bk)@(bk x d).
+    util = 0.5 * (_tile_util(bq, bk) * _tile_util_inner(d)
+                  + _tile_util(bq, d) * _tile_util_inner(bk))
+    # Flash HBM traffic per (b,h): Q once, K/V once per q-row-block pass is
+    # avoided by the online softmax -> K/V read once per q block.
+    n_qb = (s + bq - 1) // bq
+    hbm = dtype_bytes * (s * d        # Q
+                         + n_qb * 2 * s * d   # K+V streamed per q block
+                         + s * d)     # O
+    flops = 4.0 * s * s * d  # 2 matmuls x 2 flops, causal ~ /2 skipped (cons.)
+    ai = flops / hbm
+    est = min(PEAK_FLOPS * util, ai * HBM_BW) / 1e12
+    return BlockEstimate(
+        block_q=bq,
+        block_k=bk,
+        vmem_bytes=vmem,
+        fits_vmem=vmem <= VMEM_BYTES,
+        mxu_utilization=util,
+        hbm_bytes_per_head=hbm,
+        flops_per_head=flops,
+        arithmetic_intensity=ai,
+        est_tflops=est,
+    )
+
+
+def _tile_util_inner(k: int) -> float:
+    """Contraction-dimension fill of the MXU."""
+    full, rem = divmod(k, MXU)
+    tiles = full + (1 if rem else 0)
+    return k / (tiles * MXU)
+
+
+def sweep(shape: AttnShape, blocks=(32, 64, 128, 256)):
+    out = []
+    for bq in blocks:
+        for bk in blocks:
+            out.append(estimate_attention(shape, bq, bk))
+    return out
+
+
+def best_config(shape: AttnShape, blocks=(32, 64, 128, 256)) -> BlockEstimate:
+    candidates = [e for e in sweep(shape, blocks) if e.fits_vmem]
+    return max(candidates, key=lambda e: (e.est_tflops, -e.vmem_bytes))
+
+
+def main():
+    for name, shape in [("small (s=128,d=32)", AttnShape(128, 32)),
+                        ("large (s=256,d=64)", AttnShape(256, 64)),
+                        ("long  (s=2048,d=64)", AttnShape(2048, 64))]:
+        print(f"\n== {name} ==")
+        print(f"{'bq':>5} {'bk':>5} {'vmem-KiB':>9} {'fits':>5} "
+              f"{'mxu%':>6} {'AI':>6} {'est-TF':>7} {'roof%':>6}")
+        for e in sweep(shape):
+            print(f"{e.block_q:>5} {e.block_k:>5} {e.vmem_bytes >> 10:>9} "
+                  f"{str(e.fits_vmem):>5} {e.mxu_utilization * 100:>5.1f} "
+                  f"{e.arithmetic_intensity:>6.1f} {e.est_tflops:>7.1f} "
+                  f"{e.roofline_fraction * 100:>5.1f}")
+        b = best_config(shape)
+        print(f"best: bq={b.block_q} bk={b.block_k} "
+              f"-> {b.est_tflops:.1f} TFLOP/s ({b.roofline_fraction * 100:.0f}% of peak)")
+
+
+if __name__ == "__main__":
+    main()

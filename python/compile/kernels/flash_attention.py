@@ -1,0 +1,284 @@
+"""Flash-attention as a Pallas kernel (forward + custom-VJP backward).
+
+This is the Layer-1 compute hot-spot of the workload TonY orchestrates: the
+attention inner loop of the transformer LM defined in ``compile.model``.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the CUDA
+flash-attention schedule (threadblocks over Q tiles, K/V streamed through
+shared memory) is re-expressed for TPU as a Pallas grid over
+``(batch, head, q_block)`` with BlockSpecs that pin a ``(block_q, d)`` Q
+tile in VMEM and stream ``(block_k, d)`` K/V tiles with an online-softmax
+accumulator; matmul tiles are shaped for the MXU (multiples of the 128-lane
+register/systolic geometry where the model dims allow).
+
+On this testbed Pallas MUST run with ``interpret=True`` (the CPU PJRT
+client cannot execute Mosaic custom-calls), so the kernel lowers to plain
+HLO and the TPU efficiency claim is estimated analytically in
+EXPERIMENTS.md §Perf.  Correctness vs ``ref.mha_ref`` is enforced by
+pytest + hypothesis (python/tests/test_kernel.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default tile sizes. 64 keeps the tiny/small presets exact multiples; the
+# block-shape sweep in python/tests/test_block_sweep.py and EXPERIMENTS.md
+# §Perf covers {32, 64, 128}.
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k, causal, sm_scale):
+    """One (batch, head, q-block) program of the flash forward pass.
+
+    Ref block shapes:
+      q_ref: [block_q, d]     -- this program's Q tile (VMEM-resident)
+      k_ref: [s, d]           -- full K for the (b, h) slice; streamed in
+      v_ref: [s, d]              block_k-sized tiles via pl.dynamic_slice
+      o_ref: [block_q, d]     -- output tile
+      lse_ref: [block_q]      -- log-sum-exp rows (saved for the backward)
+    """
+    block_q, d = q_ref.shape
+    s = k_ref.shape[0]
+    qi = pl.program_id(2)
+    q = q_ref[...] * sm_scale
+
+    def body(ki, carry):
+        acc, m_i, l_i = carry
+        start = ki * block_k
+        k = pl.load(k_ref, (pl.dslice(start, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(start, block_k), slice(None)))
+        logits = q @ k.T  # [block_q, block_k]
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            cols = start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            logits = jnp.where(rows >= cols, logits, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+
+    if causal:
+        # Only K blocks at or before this Q block's last row contribute.
+        num_kb = jnp.minimum(pl.cdiv((qi + 1) * block_q, block_k), pl.cdiv(s, block_k))
+    else:
+        num_kb = pl.cdiv(s, block_k)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+
+    o_ref[...] = acc / l_i[:, None]
+    lse_ref[...] = m_i + jnp.log(l_i)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               *, block_k, causal, sm_scale):
+    """dQ for one (batch, head, q-block) program.
+
+    dS = P * (dP - delta) with dP = dO @ V^T, P = exp(S - lse);
+    dQ = dS @ K * sm_scale.
+    """
+    block_q, d = q_ref.shape
+    s = k_ref.shape[0]
+    qi = pl.program_id(2)
+    q = q_ref[...] * sm_scale
+    do = do_ref[...]
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+
+    def body(ki, dq):
+        start = ki * block_k
+        k = pl.load(k_ref, (pl.dslice(start, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(start, block_k), slice(None)))
+        logits = q @ k.T
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            cols = start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            logits = jnp.where(rows >= cols, logits, NEG_INF)
+        p = jnp.exp(logits - lse[:, None])
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        return dq + ds @ k
+
+    if causal:
+        num_kb = jnp.minimum(pl.cdiv((qi + 1) * block_q, block_k), pl.cdiv(s, block_k))
+    else:
+        num_kb = pl.cdiv(s, block_k)
+    dq = jax.lax.fori_loop(0, num_kb, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = dq * sm_scale
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+                *, block_q, causal, sm_scale):
+    """dK, dV for one (batch, head, k-block) program.
+
+    dV = P^T @ dO; dK = dS^T @ Q * sm_scale.
+    """
+    block_k, d = k_ref.shape
+    s = q_ref.shape[0]
+    ki = pl.program_id(2)
+    k = k_ref[...]
+    v = v_ref[...]
+
+    def body(qi, carry):
+        dk, dv = carry
+        start = qi * block_q
+        q = pl.load(q_ref, (pl.dslice(start, block_q), slice(None))) * sm_scale
+        do = pl.load(do_ref, (pl.dslice(start, block_q), slice(None)))
+        lse = pl.load(lse_ref, (pl.dslice(start, block_q),))
+        delta = pl.load(delta_ref, (pl.dslice(start, block_q),))
+        logits = q @ k.T  # [block_q, block_k]
+        if causal:
+            rows = start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            logits = jnp.where(rows >= cols, logits, NEG_INF)
+        p = jnp.exp(logits - lse[:, None])
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        dk = dk + ds.T @ q
+        return dk, dv
+
+    nqb = pl.cdiv(s, block_q)
+    if causal:
+        # Q blocks strictly before this K block see none of it.
+        first_qb = (ki * block_k) // block_q
+    else:
+        first_qb = 0
+    dk0 = jnp.zeros((block_k, d), jnp.float32)
+    dv0 = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(first_qb, nqb, body, (dk0, dv0))
+    dk_ref[...] = dk  # q already carried sm_scale
+    dv_ref[...] = dv
+
+
+def _fit_block(block, s):
+    """Largest power-of-two-ish block <= ``block`` that divides ``s``.
+
+    XLA dynamic-slice clamps out-of-range starts, so a K/V tile that
+    overhangs the sequence would silently read shifted rows; snapping the
+    tile size to a divisor of ``s`` makes every tile exact instead.
+    """
+    b = min(block, s)
+    while s % b:
+        b -= 1
+    return b
+
+
+def _fwd(q, k, v, causal, block_q, block_k, interpret):
+    b, h, s, d = q.shape
+    block_q = _fit_block(block_q, s)
+    block_k = _fit_block(block_k, s)
+    sm_scale = 1.0 / (d ** 0.5)
+    grid = (b, h, pl.cdiv(s, block_q))
+    kernel = functools.partial(
+        _fwd_kernel, block_k=block_k, causal=causal, sm_scale=sm_scale)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, block_q), lambda bi, hi, qi: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+def _bwd(q, k, v, o, lse, do, causal, block_q, block_k, interpret):
+    b, h, s, d = q.shape
+    block_q = _fit_block(block_q, s)
+    block_k = _fit_block(block_k, s)
+    sm_scale = 1.0 / (d ** 0.5)
+    delta = jnp.sum(do * o, axis=-1)  # [b, h, s]
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_k=block_k, causal=causal, sm_scale=sm_scale),
+        grid=(b, h, pl.cdiv(s, block_q)),
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, block_q), lambda bi, hi, qi: (bi, hi, qi)),
+            pl.BlockSpec((None, None, block_q), lambda bi, hi, qi: (bi, hi, qi)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=block_q, causal=causal, sm_scale=sm_scale),
+        grid=(b, h, pl.cdiv(s, block_k)),
+        in_specs=[
+            pl.BlockSpec((None, None, s, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, block_k, d), lambda bi, hi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((None, None, block_k, d), lambda bi, hi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((None, None, s, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, s), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((None, None, s), lambda bi, hi, ki: (bi, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, block_k, d), lambda bi, hi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((None, None, block_k, d), lambda bi, hi, ki: (bi, hi, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True,
+                    block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                    interpret=True):
+    """Tiled online-softmax attention.  q, k, v: f32[B, H, S, D] -> f32[B, H, S, D].
+
+    Differentiable via a custom VJP whose backward pass is itself two Pallas
+    kernels (dQ, and dK/dV).  ``interpret=True`` is required on CPU PJRT.
+    """
+    o, _ = _fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, causal, block_q, block_k, interpret):
+    o, lse = _fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _bwd(q, k, v, o, lse, do, causal, block_q, block_k, interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_lse(q, k, v, causal=True, block_q=DEFAULT_BLOCK_Q,
+              block_k=DEFAULT_BLOCK_K, interpret=True):
+    """Expose the forward pass's log-sum-exp rows (tested vs mha_lse_ref)."""
+    _, lse = _fwd(q, k, v, causal, block_q, block_k, interpret)
+    return lse

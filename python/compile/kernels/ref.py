@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signals: every Pallas kernel in this package
+is checked against these references by pytest/hypothesis (see
+python/tests/).  They are deliberately written as straight-line jnp with no
+tiling so they are easy to audit.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, causal=True):
+    """Multi-head attention reference.
+
+    Args:
+      q, k, v: f32[B, H, S, D]
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      f32[B, H, S, D]
+    """
+    d = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def mha_lse_ref(q, k, v, causal=True):
+    """Log-sum-exp rows of the attention logits (used by the flash bwd)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    return jax.scipy.special.logsumexp(logits, axis=-1)
+
+
+def adam_ref(p, g, m, v, step, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Adam update reference (Kingma & Ba), bias-corrected.
+
+    Args:
+      p, g, m, v: f32[N] parameter / gradient / first / second moment.
+      step: f32 scalar, 1-based step count.
+      lr: f32 scalar learning rate.
+
+    Returns:
+      (p', m', v')
+    """
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**step)
+    vhat = v2 / (1.0 - beta2**step)
+    p2 = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p2, m2, v2

@@ -1,0 +1,230 @@
+"""Layer-2: the transformer LM that TonY's distributed job trains.
+
+A pre-LN causal transformer language model written in JAX, with the
+attention inner loop delegated to the Layer-1 Pallas kernel
+(``kernels.flash_attention``).  Parameters live in a **flat f32[N] vector**
+with a deterministic layout (``param_specs``) so the Rust parameter-server
+shards (rust/src/framework/) can slice, shard, pad, and checkpoint them
+without knowing anything about the model structure.
+
+Everything here is build-time only: ``compile.aot`` lowers
+``worker_step`` / ``adam_chunk_update`` / ``eval_loss`` / ``init_params``
+to HLO text once, and the Rust runtime executes the artifacts via PJRT.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.adam import adam_update
+from .kernels.flash_attention import flash_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyperparameters (fixed at AOT time)."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    seq_len: int = 64
+    batch: int = 4
+    block_q: int = 64
+    block_k: int = 64
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Layer parameters are stacked along a leading n_layers axis so the forward
+# pass can lax.scan over layers (bounds HLO size for deep presets) and the
+# flat layout stays independent of depth-unrolling decisions.
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) layout of the flat parameter vector.
+
+    The order here IS the wire format: Rust's PS shards and checkpoints
+    address parameters purely by offset into the flat vector.
+    """
+    L, D, F, V, S = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    return [
+        ("embed", (V, D)),
+        ("pos", (S, D)),
+        ("ln1_scale", (L, D)),
+        ("ln1_bias", (L, D)),
+        ("wq", (L, D, D)),
+        ("wk", (L, D, D)),
+        ("wv", (L, D, D)),
+        ("wo", (L, D, D)),
+        ("ln2_scale", (L, D)),
+        ("ln2_bias", (L, D)),
+        ("w_up", (L, D, F)),
+        ("b_up", (L, F)),
+        ("w_down", (L, F, D)),
+        ("b_down", (L, D)),
+        ("lnf_scale", (D,)),
+        ("lnf_bias", (D,)),
+    ]
+
+
+def n_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_specs(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+def unpack(cfg: ModelConfig, flat: jax.Array) -> Dict[str, jax.Array]:
+    """Slice the flat vector back into named parameter arrays."""
+    out = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = flat[off:off + size].reshape(shape)
+        off += size
+    assert off == flat.shape[0], (off, flat.shape)
+    return out
+
+
+def pack(cfg: ModelConfig, params: Dict[str, jax.Array]) -> jax.Array:
+    """Flatten named parameters into the canonical flat vector."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_specs(cfg)])
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> jax.Array:
+    """Initialize the flat parameter vector from a uint32 seed.
+
+    Scaled-normal init: embeddings/projections at 1/sqrt(fan_in), residual
+    output projections additionally shrunk by 1/sqrt(2*L) (GPT-2 style),
+    layernorm at scale=1 bias=0.
+    """
+    key = jax.random.PRNGKey(seed)
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    parts = []
+    for (name, shape), k in zip(specs, keys):
+        if name.startswith("ln") or name.endswith("_bias") or name.startswith("b_"):
+            val = (jnp.ones(shape, jnp.float32) if "scale" in name
+                   else jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            if name in ("wo", "w_down"):
+                std = std * resid_scale
+            val = std * jax.random.normal(k, shape, jnp.float32)
+        parts.append(val.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _block(cfg: ModelConfig, x, layer):
+    """One pre-LN transformer block.  x: [B, S, D]."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+
+    h = _layernorm(x, layer["ln1_scale"], layer["ln1_bias"])
+    q = (h @ layer["wq"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    k = (h @ layer["wk"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    v = (h @ layer["wv"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    attn = flash_attention(q, k, v, True, cfg.block_q, cfg.block_k)
+    attn = attn.transpose(0, 2, 1, 3).reshape(B, S, D)
+    x = x + attn @ layer["wo"]
+
+    h = _layernorm(x, layer["ln2_scale"], layer["ln2_bias"])
+    h = _gelu(h @ layer["w_up"] + layer["b_up"])
+    x = x + h @ layer["w_down"] + layer["b_down"]
+    return x
+
+
+_LAYER_KEYS = ("ln1_scale", "ln1_bias", "wq", "wk", "wv", "wo",
+               "ln2_scale", "ln2_bias", "w_up", "b_up", "w_down", "b_down")
+
+
+def forward(cfg: ModelConfig, flat_params: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Logits for a token batch.  tokens: i32[B, S] -> f32[B, S, V]."""
+    p = unpack(cfg, flat_params)
+    x = p["embed"][tokens] + p["pos"][None, :tokens.shape[1]]
+
+    stacked = {k: p[k] for k in _LAYER_KEYS}
+
+    def scan_body(x, layer):
+        return _block(cfg, x, layer), None
+
+    x, _ = jax.lax.scan(scan_body, x, stacked)
+    x = _layernorm(x, p["lnf_scale"], p["lnf_bias"])
+    # Weight-tied output head.
+    return x @ p["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, flat_params: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy.  tokens: i32[B, S+1] -> f32 scalar."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(cfg, flat_params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def worker_step(cfg: ModelConfig, flat_params: jax.Array, tokens: jax.Array):
+    """The worker-task hot path: (params, batch) -> (loss, grads).
+
+    This is what each TonY worker container executes every step via PJRT.
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(flat_params)
+    return loss, grads
+
+
+def eval_loss(cfg: ModelConfig, flat_params: jax.Array, tokens: jax.Array):
+    """Evaluation-only loss (no backward), used by the chief/eval task."""
+    return loss_fn(cfg, flat_params, tokens)
+
+
+def adam_chunk_update(chunk, grad, m, v, step, lr,
+                      beta1=0.9, beta2=0.999, eps=1e-8):
+    """The PS-task hot path: fused Adam over one flat parameter chunk.
+
+    Zero-padded tail lanes provably stay zero: g=0 with m=v=0 yields an
+    exactly-zero update, so shard padding never leaks into the model.
+    """
+    return adam_update(chunk, grad, m, v, step, lr,
+                       beta1=beta1, beta2=beta2, eps=eps)
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # Unit tests / microbenches: compiles in seconds.
+    "tiny": ModelConfig(vocab=256, d_model=64, n_heads=4, n_layers=2,
+                        d_ff=256, seq_len=64, batch=4),
+    # The recorded end-to-end training run (examples/e2e_train.rs): ~3.4M
+    # params, <1 s/step on CPU PJRT.
+    "small": ModelConfig(vocab=256, d_model=256, n_heads=8, n_layers=4,
+                         d_ff=1024, seq_len=128, batch=8),
+    # ~19M params: the config the C6 throughput bench scales to.
+    "medium": ModelConfig(vocab=256, d_model=512, n_heads=8, n_layers=6,
+                          d_ff=2048, seq_len=128, batch=8),
+    # ~107M params (GPT-2-small class): smoke-run only on this CPU testbed;
+    # see DESIGN.md §5 for the substitution note.
+    "large": ModelConfig(vocab=32000, d_model=768, n_heads=12, n_layers=12,
+                         d_ff=3072, seq_len=256, batch=4, block_q=128, block_k=128),
+}

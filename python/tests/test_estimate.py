@@ -1,0 +1,58 @@
+"""Invariants of the analytic TPU estimator (L1 §Perf substitute)."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.estimate import (
+    AttnShape, VMEM_BYTES, best_config, estimate_attention, sweep)
+
+
+def test_vmem_monotonic_in_blocks():
+    s = AttnShape(2048, 64)
+    small = estimate_attention(s, 32, 32)
+    big = estimate_attention(s, 256, 256)
+    assert small.vmem_bytes < big.vmem_bytes
+
+
+def test_mxu_utilization_peaks_at_multiples_of_128():
+    s = AttnShape(2048, 128)
+    full = estimate_attention(s, 128, 128)
+    partial = estimate_attention(s, 96, 96)
+    assert full.mxu_utilization > partial.mxu_utilization
+    assert full.mxu_utilization == 1.0
+
+
+def test_best_config_fits_and_dominates():
+    for shape in [AttnShape(128, 32), AttnShape(2048, 64), AttnShape(8192, 128)]:
+        best = best_config(shape)
+        assert best.fits_vmem
+        for e in sweep(shape):
+            if e.fits_vmem:
+                assert best.est_tflops >= e.est_tflops
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seq=st.sampled_from([64, 128, 256, 1024, 4096]),
+    d=st.sampled_from([32, 64, 128]),
+    bq=st.sampled_from([32, 64, 128, 256]),
+    bk=st.sampled_from([32, 64, 128, 256]),
+)
+def test_estimates_are_sane(seq, d, bq, bk):
+    e = estimate_attention(AttnShape(seq, d), bq, bk)
+    assert 0 < e.mxu_utilization <= 1.0
+    assert e.vmem_bytes > 0
+    assert e.est_tflops > 0
+    assert e.roofline_fraction <= 1.0 + 1e-9
+    assert e.fits_vmem == (e.vmem_bytes <= VMEM_BYTES)
+    # Blocks are clamped to seq.
+    assert e.block_q <= seq and e.block_k <= seq
+
+
+def test_flash_hbm_traffic_beats_naive():
+    # Naive attention materializes the s x s score matrix in HBM.
+    shape = AttnShape(4096, 64)
+    e = estimate_attention(shape, 128, 128)
+    # Naive round-trips the s x s scores and probs through HBM:
+    # write scores, read for softmax, write probs, read for P@V.
+    naive_bytes = 4 * (4 * shape.seq * shape.seq + 4 * shape.seq * shape.d_head)
+    assert e.hbm_bytes_per_head < naive_bytes / 3

@@ -1,0 +1,102 @@
+//! C2 (§1 "Tedious and error-prone configuration"): central cluster-spec
+//! assembly.  Measures AM-side spec construction + TF_CONFIG rendering +
+//! parse-back cost vs task count, and verifies the spec is complete,
+//! consistent and duplicate-free at every size; contrasts with the
+//! per-host manual-config error model of the ad-hoc baseline.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::am::protocol::{RegisterMsg, AM_REGISTER};
+use tony::am::state::{AmRpcHandler, AmState};
+use tony::bench::{bench, f2, n, Table};
+use tony::framework::ClusterSpec;
+use tony::net::rpc::RpcHandler;
+use tony::net::wire::Wire;
+use tony::tonyconf::{JobConfBuilder, JobSpec};
+
+fn main() {
+    let mut table = Table::new(&[
+        "tasks", "register-all(ms)", "render-TF_CONFIG(us)", "parse(us)", "consistent",
+    ]);
+    for total in [2u32, 4, 8, 16, 32, 64, 128, 256] {
+        let workers = total / 2;
+        let ps = total - workers;
+        let conf = JobConfBuilder::new("spec")
+            .instances("worker", workers)
+            .instances("ps", ps)
+            .build();
+        let job = JobSpec::from_conf(&conf).unwrap();
+
+        // Time the full registration+build path through the RPC handler.
+        let (reg_stats, spec) = {
+            let state = Arc::new(AmState::new(&job));
+            let handler = AmRpcHandler::new(state.clone());
+            let register_all = |state: &Arc<AmState>, handler: &AmRpcHandler| {
+                state.begin_attempt(1);
+                let mut port = 10_000u16;
+                for ty in ["worker", "ps"] {
+                    let count = if ty == "worker" { workers } else { ps };
+                    for i in 0..count {
+                        let msg = RegisterMsg {
+                            task_type: ty.to_string(),
+                            index: i,
+                            host: "127.0.0.1".into(),
+                            port,
+                            ui_url: None,
+                            spec_version: 1,
+                        };
+                        handler.handle(AM_REGISTER, &msg.to_bytes()).unwrap();
+                        port += 1;
+                    }
+                }
+                assert!(state.try_build_spec(1));
+            };
+            let stats = bench(1, 200, Duration::from_millis(400), || {
+                register_all(&state, &handler);
+            });
+            register_all(&state, &handler);
+            let json = state.snapshot_json();
+            let _ = json;
+            // Re-derive the spec for validation below.
+            let handler2 = AmRpcHandler::new(state.clone());
+            let bytes = handler2
+                .handle(tony::am::protocol::AM_GET_SPEC,
+                        &tony::am::protocol::GetSpecMsg { spec_version: 1, timeout_ms: 100 }.to_bytes())
+                .unwrap();
+            let (spec, _, _) = ClusterSpec::from_tf_config(&String::from_utf8(bytes).unwrap()).unwrap();
+            (stats, spec)
+        };
+
+        // Consistency invariants: complete, no duplicate endpoints.
+        let mut endpoints = std::collections::BTreeSet::new();
+        let mut complete = spec.endpoints("worker").len() == workers as usize
+            && spec.endpoints("ps").len() == ps as usize;
+        for eps in spec.tasks.values() {
+            for e in eps {
+                complete &= endpoints.insert(e.to_string());
+            }
+        }
+
+        let tf = spec.to_tf_config("worker", 0);
+        let render = bench(3, 2000, Duration::from_millis(300), || {
+            std::hint::black_box(spec.to_tf_config("worker", 0));
+        });
+        let parse = bench(3, 2000, Duration::from_millis(300), || {
+            std::hint::black_box(ClusterSpec::from_tf_config(&tf).unwrap());
+        });
+        table.row(&[
+            n(total),
+            f2(reg_stats.mean_ms()),
+            f2(render.mean_ns / 1e3),
+            f2(parse.mean_ns / 1e3),
+            n(complete),
+        ]);
+    }
+    table.print("C2: cluster-spec assembly vs task count (central, always consistent)");
+    println!(
+        "\ncontrast: ad-hoc per-host config at 2% error/host gives P(all correct) = 0.98^N \
+         (N=64 → {:.0}%); TonY's central spec is consistent at every size above.",
+        0.98f64.powi(64) * 100.0
+    );
+}

@@ -1,0 +1,45 @@
+//! C1 (§1 "Resource contention"): ad-hoc unmanaged pool vs TonY/YARN
+//! managed pool under increasing oversubscription.  Job success rate and
+//! makespan; regenerates the EXPERIMENTS.md C1 table.
+
+use tony::baseline::{run_adhoc_pool, run_managed_pool, synthetic_jobs, AdhocOutcome, AdhocParams};
+use tony::bench::{f1, n, Table};
+use tony::yarn::Resource;
+
+fn main() {
+    let hosts = vec![Resource::mem_cores(8192, 8); 4];
+    let mut table = Table::new(&[
+        "jobs", "demand%", "adhoc-ok%", "oom%", "misconf%", "tony-ok%", "tony-makespan-s",
+    ]);
+    for n_jobs in [4u32, 8, 12, 16, 24, 32, 48] {
+        let jobs = synthetic_jobs(n_jobs, 2, 2048, 60_000);
+        let demand = (n_jobs as f64 * 2.0 * 2048.0) / (4.0 * 8192.0) * 100.0;
+        let (mut ok, mut oom, mut mis) = (0usize, 0usize, 0usize);
+        let seeds = 50u64;
+        for seed in 0..seeds {
+            let params = AdhocParams { per_host_config_error: 0.02, seed };
+            for r in run_adhoc_pool(&hosts, &jobs, &params) {
+                match r.outcome {
+                    AdhocOutcome::Succeeded => ok += 1,
+                    AdhocOutcome::OomKilled => oom += 1,
+                    AdhocOutcome::Misconfigured => mis += 1,
+                }
+            }
+        }
+        let tot = (n_jobs as u64 * seeds) as f64;
+        let managed = run_managed_pool(&hosts, &jobs);
+        let tony_ok = managed.iter().filter(|r| r.outcome == AdhocOutcome::Succeeded).count();
+        let makespan = managed.iter().map(|r| r.finished_at_ms).max().unwrap_or(0);
+        table.row(&[
+            n(n_jobs),
+            f1(demand),
+            f1(ok as f64 / tot * 100.0),
+            f1(oom as f64 / tot * 100.0),
+            f1(mis as f64 / tot * 100.0),
+            f1(tony_ok as f64 / n_jobs as f64 * 100.0),
+            f1(makespan as f64 / 1e3),
+        ]);
+    }
+    table.print("C1: contention — ad-hoc pool vs TonY (4 hosts x 8 GiB; 2 x 2 GiB tasks/job; 50 seeds)");
+    println!("\nexpected shape: TonY holds 100% success with queue-growth makespan; ad-hoc success collapses past 100% demand.");
+}

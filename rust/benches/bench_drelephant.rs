@@ -1,0 +1,105 @@
+//! C7 (§3 / Dr. Elephant): heuristic analyzer quality + throughput.
+//! Plants known issues into synthetic telemetry and checks the analyzer
+//! finds exactly them (precision/recall over a seeded corpus), then
+//! measures analysis cost.
+
+use std::time::Duration;
+
+use tony::bench::{bench, f1, f2, n, Table};
+use tony::drelephant::{analyze, JobTelemetry};
+use tony::framework::TaskMetrics;
+use tony::util::SplitMix64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Planted {
+    OverMem,
+    Straggler,
+    PsImbalance,
+    NoCheckpoint,
+}
+
+fn gen_case(rng: &mut SplitMix64, plant: &[Planted]) -> (JobTelemetry, Vec<&'static str>) {
+    let workers = 4u32;
+    let base_ms = 10.0 + rng.next_f64() * 5.0;
+    let mut tasks = Vec::new();
+    for i in 0..workers {
+        let mut ms = base_ms * (1.0 + rng.next_f64() * 0.05);
+        if plant.contains(&Planted::Straggler) && i == workers - 1 {
+            ms *= 4.0;
+        }
+        tasks.push((
+            format!("worker:{i}"),
+            TaskMetrics { step: 100, step_ms_avg: ms, mem_used_mb: 256, ..Default::default() },
+        ));
+    }
+    for i in 0..2u32 {
+        let updates = if plant.contains(&Planted::PsImbalance) && i == 0 { 500 } else { 100 };
+        tasks.push((
+            format!("ps:{i}"),
+            TaskMetrics { updates_applied: updates, ..Default::default() },
+        ));
+    }
+    let req_mem = if plant.contains(&Planted::OverMem) { 8192 } else { 512 };
+    let telemetry = JobTelemetry {
+        tasks,
+        requested_mem_mb: vec![("worker".into(), req_mem), ("ps".into(), 512)],
+        checkpoint_every: if plant.contains(&Planted::NoCheckpoint) { 0 } else { 25 },
+        flops_per_step: 5e10, // keeps low-utilization out of the way
+    };
+    let mut expect = Vec::new();
+    for p in plant {
+        expect.push(match p {
+            Planted::OverMem => "memory-over-provisioning",
+            Planted::Straggler => "straggler",
+            Planted::PsImbalance => "ps-imbalance",
+            Planted::NoCheckpoint => "checkpointing-disabled",
+        });
+    }
+    (telemetry, expect)
+}
+
+fn main() {
+    let all = [Planted::OverMem, Planted::Straggler, Planted::PsImbalance, Planted::NoCheckpoint];
+    let mut rng = SplitMix64::new(42);
+    let (mut tp, mut fn_, mut fp) = (0usize, 0usize, 0usize);
+    let cases = 500;
+    for case in 0..cases {
+        // Random subset of planted issues.
+        let mut plant = Vec::new();
+        for p in all {
+            if rng.chance(0.4) {
+                plant.push(p);
+            }
+        }
+        let (telemetry, expect) = gen_case(&mut rng, &plant);
+        let findings = analyze(&telemetry);
+        let found: std::collections::BTreeSet<&str> =
+            findings.iter().map(|f| f.heuristic).collect();
+        for e in &expect {
+            if found.contains(e) {
+                tp += 1;
+            } else {
+                fn_ += 1;
+                eprintln!("case {case}: missed {e}");
+            }
+        }
+        for f in &found {
+            if !expect.contains(f) {
+                fp += 1;
+            }
+        }
+    }
+    let precision = tp as f64 / (tp + fp).max(1) as f64;
+    let recall = tp as f64 / (tp + fn_).max(1) as f64;
+
+    let (telemetry, _) = gen_case(&mut rng, &all);
+    let speed = bench(10, 10_000, Duration::from_secs(2), || {
+        std::hint::black_box(analyze(&telemetry));
+    });
+
+    let mut table = Table::new(&["cases", "precision", "recall", "analyze-us"]);
+    table.row(&[n(cases), f2(precision), f2(recall), f1(speed.mean_ns / 1e3)]);
+    table.print("C7: Dr. Elephant heuristic quality over seeded-issue corpus");
+    assert!(recall > 0.99, "analyzer must find every planted issue");
+    assert!(precision > 0.9, "analyzer must not spam false findings");
+}

@@ -1,0 +1,91 @@
+//! FIG1: walk every arrow of the paper's Figure 1 and time each stage of
+//! the job lifecycle: client submit → AM up → containers granted → all
+//! TaskExecutors registered (cluster spec built) → training running →
+//! job finished.  Regenerates the EXPERIMENTS.md FIG1 table.
+
+use std::time::{Duration, Instant};
+
+use tony::am::JobPhase;
+use tony::bench::{f1, n, Table};
+use tony::client::TonyClient;
+use tony::tonyconf::JobConfBuilder;
+use tony::yarn::{AppState, Resource, ResourceManager};
+
+fn main() {
+    tony::util::logging::init_from_env();
+    let artifacts = std::path::Path::new("artifacts/tiny");
+    if !artifacts.join("meta.json").exists() {
+        eprintln!("SKIP bench_fig1_lifecycle: run `make artifacts`");
+        return;
+    }
+    let mut table = Table::new(&[
+        "topology", "submit→AM", "AM→spec", "spec→step1", "train", "teardown", "total(ms)",
+    ]);
+
+    for (workers, ps) in [(1u32, 1u32), (2, 2), (4, 2)] {
+        let rm = ResourceManager::start_uniform(6, Resource::new(8192, 8, 0));
+        let ckpt = std::env::temp_dir().join(format!("tony-fig1-{workers}-{ps}"));
+        let _ = std::fs::remove_dir_all(&ckpt);
+        let steps = 3u64;
+        let conf = JobConfBuilder::new("fig1")
+            .instances("worker", workers)
+            .memory("worker", "1g")
+            .instances("ps", ps)
+            .memory("ps", "1g")
+            .train(artifacts.to_str().unwrap(), "tiny", steps)
+            .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+            .set("tony.train.checkpoint-every", "0")
+            .build();
+
+        let t0 = Instant::now();
+        let client = TonyClient::new(rm.clone());
+        let handle = client.submit(&conf, artifacts).unwrap();
+
+        // Sample phase transitions.
+        let mut am_up_ms = None;
+        let mut spec_ms = None;
+        let mut step1_ms = None;
+        loop {
+            let el = t0.elapsed().as_secs_f64() * 1e3;
+            let phase = handle.am_state.phase();
+            if am_up_ms.is_none() && handle.am_state.attempt() >= 1 {
+                am_up_ms = Some(el);
+            }
+            if spec_ms.is_none() && phase == JobPhase::Running {
+                spec_ms = Some(el);
+            }
+            if step1_ms.is_none()
+                && handle.am_state.chief_metrics().map(|m| m.step).unwrap_or(0) >= 1
+            {
+                step1_ms = Some(el);
+            }
+            if matches!(phase, JobPhase::Succeeded | JobPhase::Failed) {
+                break;
+            }
+            if el > 240_000.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let trained_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let report = handle.wait(Duration::from_secs(60)).unwrap();
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+
+        let am_up = am_up_ms.unwrap_or(0.0);
+        let spec = spec_ms.unwrap_or(total_ms);
+        let step1 = step1_ms.unwrap_or(total_ms);
+        table.row(&[
+            format!("{workers}w+{ps}ps"),
+            f1(am_up),
+            f1(spec - am_up),
+            f1(step1 - spec),
+            f1(trained_ms - step1),
+            f1(total_ms - trained_ms),
+            n(total_ms as u64),
+        ]);
+        let _ = std::fs::remove_dir_all(&ckpt);
+    }
+    table.print("FIG1: lifecycle stage latency (tiny preset, 3 steps; spec column includes PJRT compile)");
+    println!("\nnote: AM→spec is dominated by per-executor PJRT compilation of the AOT artifacts.");
+}

@@ -1,0 +1,163 @@
+//! PERF: hot-path microbenches feeding EXPERIMENTS.md §Perf — RPC
+//! round-trip + bulk gradient transfer, wire codec, JSON/XML parse,
+//! scheduler pass, checkpoint encode, and PJRT step latency.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::bench::{bench, f1, f2, Table};
+use tony::net::rpc::{RpcClient, RpcServer};
+use tony::net::wire::{Wire, Writer};
+use tony::runtime::{Engine, Tensor};
+
+fn main() {
+    tony::util::logging::init_from_env();
+    let mut table = Table::new(&["bench", "mean", "unit", "throughput"]);
+
+    // --- RPC round-trip (empty payload) ---
+    let srv = RpcServer::serve(Arc::new(|_m: u16, p: &[u8]| Ok(p.to_vec()))).unwrap();
+    let cli = RpcClient::connect(&srv.addr()).unwrap();
+    let s = bench(50, 20_000, Duration::from_secs(2), || {
+        std::hint::black_box(cli.call(1, b"x").unwrap());
+    });
+    table.row(&[
+        "rpc round-trip (1B)".into(),
+        f1(s.mean_ns / 1e3),
+        "us".into(),
+        format!("{:.0}/s", s.per_sec()),
+    ]);
+
+    // --- RPC bulk transfer (1 MiB f32 gradients, like a PS push) ---
+    let grads = vec![1.0f32; 256 * 1024];
+    let payload = grads.to_bytes();
+    let s = bench(5, 2000, Duration::from_secs(2), || {
+        std::hint::black_box(cli.call(2, &payload).unwrap());
+    });
+    let mibps = (payload.len() as f64 * 2.0) / (s.mean_ns / 1e9) / (1 << 20) as f64;
+    table.row(&[
+        "rpc 1MiB f32 echo".into(),
+        f2(s.mean_ms()),
+        "ms".into(),
+        format!("{mibps:.0} MiB/s"),
+    ]);
+
+    // --- wire codec: encode/decode 1M f32 ---
+    let v = vec![0.5f32; 1 << 20];
+    let s = bench(3, 500, Duration::from_secs(1), || {
+        let mut w = Writer::with_capacity(v.len() * 4 + 8);
+        w.f32_slice(&v);
+        std::hint::black_box(w.buf.len());
+    });
+    let gbps = (v.len() * 4) as f64 / (s.mean_ns / 1e9) / 1e9;
+    table.row(&["wire encode 4MiB f32".into(), f2(s.mean_ms()), "ms".into(), format!("{gbps:.1} GB/s")]);
+    let bytes = v.to_bytes();
+    let s = bench(3, 500, Duration::from_secs(1), || {
+        std::hint::black_box(Vec::<f32>::from_bytes(&bytes).unwrap());
+    });
+    let gbps = (v.len() * 4) as f64 / (s.mean_ns / 1e9) / 1e9;
+    table.row(&["wire decode 4MiB f32".into(), f2(s.mean_ms()), "ms".into(), format!("{gbps:.1} GB/s")]);
+
+    // --- JSON parse (a realistic cluster-spec doc) ---
+    let mut spec = tony::framework::ClusterSpec::new(1);
+    for i in 0..64u16 {
+        spec.tasks
+            .entry(if i % 2 == 0 { "worker".into() } else { "ps".into() })
+            .or_default()
+            .push(tony::util::HostPort::localhost(10_000 + i));
+    }
+    let doc = spec.to_tf_config("worker", 0);
+    let s = bench(10, 20_000, Duration::from_secs(1), || {
+        std::hint::black_box(tony::json::Json::parse(&doc).unwrap());
+    });
+    table.row(&[
+        format!("json parse ({}B spec)", doc.len()),
+        f1(s.mean_ns / 1e3),
+        "us".into(),
+        format!("{:.0} MB/s", doc.len() as f64 / (s.mean_ns / 1e9) / 1e6),
+    ]);
+
+    // --- XML conf parse ---
+    let conf = tony::tonyconf::JobConfBuilder::new("x")
+        .instances("worker", 4)
+        .memory("worker", "4g")
+        .instances("ps", 2)
+        .train("artifacts", "tiny", 100)
+        .build();
+    let xml = conf.to_xml();
+    let s = bench(10, 20_000, Duration::from_secs(1), || {
+        std::hint::black_box(tony::xmlconf::Configuration::from_xml_str(&xml).unwrap());
+    });
+    table.row(&[
+        format!("xml conf parse ({}B)", xml.len()),
+        f1(s.mean_ns / 1e3),
+        "us".into(),
+        format!("{:.0} MB/s", xml.len() as f64 / (s.mean_ns / 1e9) / 1e6),
+    ]);
+
+    // --- checkpoint encode (1M params + moments) ---
+    let ckpt = tony::checkpoint::Checkpoint {
+        step: 100,
+        params: vec![0.1; 1 << 20],
+        moments: Some((vec![0.0; 1 << 20], vec![0.0; 1 << 20])),
+    };
+    let s = bench(2, 100, Duration::from_secs(2), || {
+        std::hint::black_box(ckpt.encode().len());
+    });
+    let gbps = (3 * (1 << 20) * 4) as f64 / (s.mean_ns / 1e9) / 1e9;
+    table.row(&["checkpoint encode 12MiB".into(), f2(s.mean_ms()), "ms".into(), format!("{gbps:.1} GB/s")]);
+
+    // --- PJRT step latency (tiny preset) ---
+    let artifacts = std::path::Path::new("artifacts/tiny");
+    if artifacts.join("meta.json").exists() {
+        let engine = Engine::start(artifacts, Some(&["worker_step", "init_params", "ps_adam"])).unwrap();
+        let h = engine.handle();
+        let meta = h.meta().clone();
+        let params = h
+            .execute("init_params", vec![Tensor::scalar_u32(0)])
+            .unwrap()
+            .remove(0);
+        let corpus = tony::data::SyntheticCorpus::new(meta.dims.vocab, 0);
+        let tokens = corpus.batch(0, 0, meta.dims.batch, meta.dims.seq_len);
+        let batch = Tensor::i32(&[meta.dims.batch, meta.dims.seq_len + 1], tokens);
+        let s = bench(3, 200, Duration::from_secs(5), || {
+            std::hint::black_box(
+                h.execute("worker_step", vec![params.clone(), batch.clone()]).unwrap(),
+            );
+        });
+        let flops = meta.flops_per_step();
+        table.row(&[
+            "pjrt worker_step (tiny)".into(),
+            f2(s.mean_ms()),
+            "ms".into(),
+            format!("{:.2} GFLOP/s", flops / (s.mean_ns / 1e9) / 1e9),
+        ]);
+        let chunk = meta.chunk_len;
+        let z = Tensor::f32(&[chunk], vec![0.0; chunk]);
+        let s = bench(3, 500, Duration::from_secs(3), || {
+            std::hint::black_box(
+                h.execute(
+                    "ps_adam",
+                    vec![
+                        z.clone(),
+                        z.clone(),
+                        z.clone(),
+                        z.clone(),
+                        Tensor::scalar_f32(1.0),
+                        Tensor::scalar_f32(1e-3),
+                    ],
+                )
+                .unwrap(),
+            );
+        });
+        table.row(&[
+            format!("pjrt ps_adam ({chunk} f32)"),
+            f2(s.mean_ms()),
+            "ms".into(),
+            format!("{:.2} Gelem/s", chunk as f64 / (s.mean_ns / 1e9) / 1e9),
+        ]);
+    } else {
+        eprintln!("(pjrt rows skipped: run `make artifacts`)");
+    }
+
+    table.print("PERF: hot-path microbenches");
+}

@@ -1,0 +1,328 @@
+//! The TonY ApplicationMaster (paper §2.2) — the heart of the system.
+//!
+//! Responsibilities, exactly as the paper lays them out:
+//!
+//! 1. negotiate with the RM for all task containers, with heterogeneous
+//!    requests per task type (GPU workers, CPU-only PS);
+//! 2. launch a TaskExecutor in every granted container;
+//! 3. collect each TaskExecutor's (host, port) registration; when all
+//!    have registered, construct the **global cluster spec** and hand it
+//!    back to every executor;
+//! 4. monitor heartbeats and task exit statuses;
+//! 5. on any tracked-task failure: tear down the remaining tasks, request
+//!    fresh containers, build a new cluster spec (bumped version), and
+//!    relaunch — tasks restore from the last checkpoint;
+//! 6. report the first worker's UI URL + task logs to the client via the
+//!    RM tracking URL.
+
+pub mod protocol;
+pub mod state;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::executor::{run_task_executor, ExecutorParams};
+use crate::net::rpc::RpcServer;
+use crate::tonyconf::JobSpec;
+use crate::util::ids::{ApplicationId, TaskId};
+use crate::util::HostPort;
+use crate::yarn::{Container, ContainerCtx, ExitStatus, ResourceManager};
+use crate::{tdebug, tinfo, twarn};
+
+pub use protocol::{AmCommand, FinishedMsg, HeartbeatMsg, RegisterMsg};
+pub use state::{AmState, AttemptOutcome, JobPhase, TaskRecord};
+
+/// Result of one whole AM run (exposed for tests/portal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobResult {
+    pub succeeded: bool,
+    pub attempts_used: u32,
+    pub diagnostics: String,
+}
+
+/// Everything the AM needs besides the RM connection.
+pub struct AmContext {
+    pub rm: Arc<ResourceManager>,
+    pub app: ApplicationId,
+    pub job: Arc<JobSpec>,
+    pub preset_dir: PathBuf,
+    /// Shared state — the portal reads this concurrently.
+    pub state: Arc<AmState>,
+}
+
+/// Run the ApplicationMaster to completion.  Returns the container exit
+/// code (0 = job succeeded within the attempt budget).
+pub fn run_application_master(am: AmContext, ctx: &ContainerCtx) -> i32 {
+    match am_body(&am, ctx) {
+        Ok(result) => {
+            am.rm
+                .finish_application(am.app, result.succeeded, &result.diagnostics);
+            if result.succeeded {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            twarn!("am", "{} AM error: {e:#}", am.app);
+            am.rm.finish_application(am.app, false, &format!("AM error: {e:#}"));
+            1
+        }
+    }
+}
+
+fn am_body(am: &AmContext, ctx: &ContainerCtx) -> Result<JobResult> {
+    let job = &am.job;
+    am.rm.register_am(am.app, None).context("registering AM")?;
+
+    // The AM's RPC endpoint that all TaskExecutors talk to.
+    let server = RpcServer::serve(Arc::new(state::AmRpcHandler::new(am.state.clone())))
+        .map_err(|e| anyhow::anyhow!("am rpc server: {e}"))?;
+    let am_addr = server.addr();
+    tinfo!("am", "{} AM up at {am_addr}; job '{}' ({} tasks)", am.app, job.name, job.total_tasks());
+
+    let mut attempts_used = 0;
+    let mut last_error = String::new();
+    while attempts_used < job.max_attempts {
+        attempts_used += 1;
+        am.state.begin_attempt(attempts_used);
+        tinfo!("am", "{} attempt {attempts_used}/{}", am.app, job.max_attempts);
+        match run_attempt(am, ctx, &am_addr, attempts_used) {
+            Ok(AttemptOutcome::Succeeded) => {
+                am.state.set_phase(JobPhase::Succeeded);
+                return Ok(JobResult {
+                    succeeded: true,
+                    attempts_used,
+                    diagnostics: format!("all tracked tasks succeeded (attempt {attempts_used})"),
+                });
+            }
+            Ok(AttemptOutcome::TaskFailed(reason)) => {
+                twarn!("am", "{} attempt {attempts_used} failed: {reason}", am.app);
+                last_error = reason;
+                // Paper §2.2: tear down remaining tasks, re-request, relaunch.
+                teardown_attempt(am, attempts_used);
+            }
+            Ok(AttemptOutcome::AmKilled) => {
+                teardown_attempt(am, attempts_used);
+                return Ok(JobResult {
+                    succeeded: false,
+                    attempts_used,
+                    diagnostics: "AM container killed".to_string(),
+                });
+            }
+            Err(e) => {
+                last_error = format!("{e:#}");
+                teardown_attempt(am, attempts_used);
+            }
+        }
+    }
+    am.state.set_phase(JobPhase::Failed);
+    Ok(JobResult {
+        succeeded: false,
+        attempts_used,
+        diagnostics: format!("exhausted {} attempts; last error: {last_error}", job.max_attempts),
+    })
+}
+
+/// Priority encodes the task type so RM grants can be matched back to the
+/// request that produced them (YARN matches on priority + resource).
+fn type_priority(job: &JobSpec, ty: &str) -> u8 {
+    let idx = job.task_types.iter().position(|t| t.name == ty).unwrap_or(0);
+    (idx as u8) + 2
+}
+
+fn priority_type(job: &JobSpec, prio: u8) -> Option<String> {
+    let idx = prio.checked_sub(2)? as usize;
+    job.task_types.get(idx).map(|t| t.name.clone())
+}
+
+fn run_attempt(
+    am: &AmContext,
+    ctx: &ContainerCtx,
+    am_addr: &HostPort,
+    attempt: u32,
+) -> Result<AttemptOutcome> {
+    let job = &am.job;
+    let rm = &am.rm;
+
+    // ---- 1. negotiate containers (heterogeneous asks) ----
+    let asks: Vec<_> = job
+        .task_types
+        .iter()
+        .map(|t| {
+            let mut req = t.to_request();
+            req.priority = type_priority(job, &t.name);
+            req
+        })
+        .collect();
+    let mut next_index: BTreeMap<String, u32> =
+        job.task_types.iter().map(|t| (t.name.clone(), 0u32)).collect();
+    let mut launched = 0u32;
+    let total = job.total_tasks();
+    let mut first_alloc = true;
+
+    let hb_interval = Duration::from_millis(job.heartbeat_ms.max(5));
+    let liveness_budget =
+        Duration::from_millis(job.heartbeat_ms.max(5) * job.max_missed_heartbeats as u64);
+    let attempt_start = Instant::now();
+    // Generous ceiling: PJRT compilation dominates task start; scale with
+    // model size via a conf knob.
+    let launch_timeout =
+        Duration::from_millis(job.conf.get_u64("tony.task.launch-timeout-ms", 120_000));
+
+    loop {
+        if ctx.killed() {
+            return Ok(AttemptOutcome::AmKilled);
+        }
+        // ---- allocate heartbeat: new grants + completed containers ----
+        let resp = rm.allocate(am.app, if first_alloc { &asks } else { &[] }, &[])?;
+        first_alloc = false;
+
+        for container in resp.allocated {
+            let Some(ty) = priority_type(job, container.priority) else {
+                twarn!("am", "grant with unknown priority {}", container.priority);
+                continue;
+            };
+            let index = {
+                let slot = next_index.get_mut(&ty).unwrap();
+                let i = *slot;
+                *slot += 1;
+                i
+            };
+            let task = TaskId::new(ty.clone(), index);
+            launch_executor(am, am_addr, attempt, &container, &task)?;
+            launched += 1;
+            tdebug!(
+                "am",
+                "{} launched {task} in {} on {} ({launched}/{total})",
+                am.app,
+                container.id,
+                container.node
+            );
+        }
+
+        // ---- container-level failures (incl. node loss) ----
+        for status in resp.completed {
+            if let Some(task) = am.state.task_for_container(status.id) {
+                let record_exit = am.state.task_exit(&task);
+                match status.exit {
+                    ExitStatus::Success => {}
+                    bad => {
+                        // If the task already reported success via RPC this
+                        // is benign teardown noise; otherwise it's a failure.
+                        if record_exit != Some(0) {
+                            return Ok(AttemptOutcome::TaskFailed(format!(
+                                "container for {task} exited: {bad:?}"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- spec construction once everyone registered ----
+        am.state.try_build_spec(attempt);
+
+        // ---- RPC-reported task exits ----
+        if let Some((task, code)) = am.state.first_tracked_failure(job) {
+            return Ok(AttemptOutcome::TaskFailed(format!("{task} exited with code {code}")));
+        }
+        if am.state.all_tracked_succeeded(job) {
+            tinfo!("am", "{} all tracked tasks succeeded; stopping services", am.app);
+            stop_untracked(am, job);
+            return Ok(AttemptOutcome::Succeeded);
+        }
+
+        // ---- liveness: registration + heartbeat staleness ----
+        if launched < total && attempt_start.elapsed() > launch_timeout {
+            return Ok(AttemptOutcome::TaskFailed(format!(
+                "only {launched}/{total} containers granted within {launch_timeout:?} \
+                 (cluster too busy or labels unsatisfiable)"
+            )));
+        }
+        if let Some(task) = am.state.stale_task(liveness_budget) {
+            return Ok(AttemptOutcome::TaskFailed(format!(
+                "{task} missed {} heartbeats",
+                job.max_missed_heartbeats
+            )));
+        }
+
+        std::thread::sleep(hb_interval.min(Duration::from_millis(20)));
+    }
+}
+
+fn launch_executor(
+    am: &AmContext,
+    am_addr: &HostPort,
+    attempt: u32,
+    container: &Container,
+    task: &TaskId,
+) -> Result<()> {
+    let params = ExecutorParams {
+        am_addr: am_addr.clone(),
+        job: am.job.clone(),
+        preset_dir: am.preset_dir.clone(),
+        task: task.clone(),
+        spec_version: attempt,
+    };
+    am.state.record_launch(task.clone(), container.id);
+    // The launch-context env mirrors what real TonY sets before exec-ing
+    // the executor; the executor re-reads these rather than trusting the
+    // closure, keeping the env the source of truth.
+    let mut env = BTreeMap::new();
+    env.insert("TASK_TYPE".to_string(), task.job_type.clone());
+    env.insert("TASK_INDEX".to_string(), task.index.to_string());
+    env.insert("AM_ADDR".to_string(), am_addr.to_string());
+    env.insert("SPEC_VERSION".to_string(), attempt.to_string());
+    am.rm
+        .start_container(container, env, Box::new(move |cctx| run_task_executor(cctx, params)))
+        .with_context(|| format!("starting executor for {task}"))
+}
+
+/// Ask every untracked service task (PS, evaluator) to stop, then give
+/// them a moment to exit cleanly.
+fn stop_untracked(am: &AmContext, job: &JobSpec) {
+    am.state.command_all_untracked(job, AmCommand::Stop);
+    let deadline = Instant::now() + Duration::from_secs(3);
+    while Instant::now() < deadline {
+        if am.state.all_untracked_done(job) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Hard-stop stragglers via the NM.
+    for cid in am.state.live_containers() {
+        am.rm.stop_container(cid);
+    }
+}
+
+/// Tear down every container of the current attempt and wait for the dust
+/// to settle so the next attempt starts from a clean slate.
+fn teardown_attempt(am: &AmContext, attempt: u32) {
+    am.state.set_phase(JobPhase::Restarting);
+    let containers = am.state.live_containers();
+    tinfo!("am", "{} tearing down attempt {attempt} ({} containers)", am.app, containers.len());
+    for cid in &containers {
+        am.rm.stop_container(*cid);
+    }
+    // Drain completion events so released capacity is visible before we
+    // re-request (avoids double-booking the cluster).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        let resp = match am.rm.allocate(am.app, &[], &[]) {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        for st in resp.completed {
+            am.state.forget_container(st.id);
+        }
+        if am.state.live_containers().is_empty() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,173 @@
+//! TaskExecutor <-> AM RPC messages (registration, spec fetch, heartbeat,
+//! final status) — the control-plane protocol of paper §2.2.
+
+use crate::framework::protocol::TaskMetrics;
+use crate::net::wire::{Reader, Wire, WireError, Writer};
+
+pub const AM_REGISTER: u16 = 10;
+pub const AM_GET_SPEC: u16 = 11;
+pub const AM_HEARTBEAT: u16 = 12;
+pub const AM_FINISHED: u16 = 13;
+pub const AM_STATUS: u16 = 14;
+
+/// Commands the AM piggybacks on heartbeat responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AmCommand {
+    None = 0,
+    /// Service task should exit cleanly (job finished).
+    Stop = 1,
+    /// Task belongs to a dead attempt; die immediately.
+    Abort = 2,
+}
+
+impl AmCommand {
+    pub fn from_u8(v: u8) -> AmCommand {
+        match v {
+            1 => AmCommand::Stop,
+            2 => AmCommand::Abort,
+            _ => AmCommand::None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterMsg {
+    pub task_type: String,
+    pub index: u32,
+    pub host: String,
+    pub port: u16,
+    /// First worker's visualization UI, if it started one (§2.2).
+    pub ui_url: Option<String>,
+    pub spec_version: u32,
+}
+
+impl Wire for RegisterMsg {
+    fn encode(&self, w: &mut Writer) {
+        w.str(&self.task_type);
+        w.u32(self.index);
+        w.str(&self.host);
+        w.u16(self.port);
+        self.ui_url.encode(w);
+        w.u32(self.spec_version);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(RegisterMsg {
+            task_type: r.str()?,
+            index: r.u32()?,
+            host: r.str()?,
+            port: r.u16()?,
+            ui_url: Option::<String>::decode(r)?,
+            spec_version: r.u32()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetSpecMsg {
+    pub spec_version: u32,
+    pub timeout_ms: u64,
+}
+
+impl Wire for GetSpecMsg {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.spec_version);
+        w.u64(self.timeout_ms);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(GetSpecMsg { spec_version: r.u32()?, timeout_ms: r.u64()? })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeartbeatMsg {
+    pub task_type: String,
+    pub index: u32,
+    pub spec_version: u32,
+    pub metrics: TaskMetrics,
+}
+
+impl Wire for HeartbeatMsg {
+    fn encode(&self, w: &mut Writer) {
+        w.str(&self.task_type);
+        w.u32(self.index);
+        w.u32(self.spec_version);
+        self.metrics.encode(w);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(HeartbeatMsg {
+            task_type: r.str()?,
+            index: r.u32()?,
+            spec_version: r.u32()?,
+            metrics: TaskMetrics::decode(r)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FinishedMsg {
+    pub task_type: String,
+    pub index: u32,
+    pub spec_version: u32,
+    pub exit_code: i64,
+}
+
+impl Wire for FinishedMsg {
+    fn encode(&self, w: &mut Writer) {
+        w.str(&self.task_type);
+        w.u32(self.index);
+        w.u32(self.spec_version);
+        w.i64(self.exit_code);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(FinishedMsg {
+            task_type: r.str()?,
+            index: r.u32()?,
+            spec_version: r.u32()?,
+            exit_code: r.i64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let reg = RegisterMsg {
+            task_type: "worker".into(),
+            index: 2,
+            host: "127.0.0.1".into(),
+            port: 9999,
+            ui_url: Some("http://127.0.0.1:8080".into()),
+            spec_version: 1,
+        };
+        assert_eq!(RegisterMsg::from_bytes(&reg.to_bytes()).unwrap(), reg);
+
+        let hb = HeartbeatMsg {
+            task_type: "ps".into(),
+            index: 0,
+            spec_version: 3,
+            metrics: TaskMetrics { step: 5, loss: 1.5, ..Default::default() },
+        };
+        assert_eq!(HeartbeatMsg::from_bytes(&hb.to_bytes()).unwrap(), hb);
+
+        let fin = FinishedMsg { task_type: "worker".into(), index: 1, spec_version: 2, exit_code: -9 };
+        assert_eq!(FinishedMsg::from_bytes(&fin.to_bytes()).unwrap(), fin);
+
+        let gs = GetSpecMsg { spec_version: 1, timeout_ms: 500 };
+        assert_eq!(GetSpecMsg::from_bytes(&gs.to_bytes()).unwrap(), gs);
+    }
+
+    #[test]
+    fn command_codes() {
+        assert_eq!(AmCommand::from_u8(0), AmCommand::None);
+        assert_eq!(AmCommand::from_u8(1), AmCommand::Stop);
+        assert_eq!(AmCommand::from_u8(2), AmCommand::Abort);
+        assert_eq!(AmCommand::from_u8(77), AmCommand::None);
+    }
+}

@@ -1,0 +1,583 @@
+//! Shared AM state: task registry, cluster-spec assembly, heartbeat
+//! liveness, and the RPC handler the TaskExecutors talk to.  The portal
+//! reads snapshots of this concurrently.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::framework::protocol::{ClusterSpec, TaskMetrics};
+use crate::json::Json;
+use crate::net::rpc::RpcHandler;
+use crate::net::wire::Wire;
+use crate::tonyconf::JobSpec;
+use crate::util::ids::{ContainerId, TaskId};
+use crate::util::HostPort;
+
+use super::protocol::*;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPhase {
+    Negotiating,
+    Running,
+    Restarting,
+    Succeeded,
+    Failed,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task: TaskId,
+    pub container: Option<ContainerId>,
+    pub endpoint: Option<HostPort>,
+    pub ui_url: Option<String>,
+    pub last_heartbeat: Option<Instant>,
+    pub metrics: TaskMetrics,
+    pub exit_code: Option<i64>,
+    pub command: AmCommand,
+    pub spec_version: u32,
+}
+
+impl TaskRecord {
+    fn new(task: TaskId, spec_version: u32) -> TaskRecord {
+        TaskRecord {
+            task,
+            container: None,
+            endpoint: None,
+            ui_url: None,
+            last_heartbeat: None,
+            metrics: TaskMetrics::default(),
+            exit_code: None,
+            command: AmCommand::None,
+            spec_version,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    attempt: u32,
+    phase: JobPhase,
+    tasks: BTreeMap<TaskId, TaskRecord>,
+    expected: Vec<TaskId>,
+    spec: Option<ClusterSpec>,
+    started_at: Instant,
+}
+
+/// The outcome of one attempt, as decided by the AM monitor loop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttemptOutcome {
+    Succeeded,
+    TaskFailed(String),
+    AmKilled,
+}
+
+pub struct AmState {
+    inner: Mutex<Inner>,
+    cond: Condvar,
+    expected_from: Box<dyn Fn(u32) -> Vec<TaskId> + Send + Sync>,
+}
+
+impl AmState {
+    pub fn new(job: &JobSpec) -> AmState {
+        let types: Vec<(String, u32)> = job
+            .task_types
+            .iter()
+            .map(|t| (t.name.clone(), t.instances))
+            .collect();
+        let expected_from = Box::new(move |_attempt: u32| {
+            let mut out = Vec::new();
+            for (ty, n) in &types {
+                for i in 0..*n {
+                    out.push(TaskId::new(ty.clone(), i));
+                }
+            }
+            out
+        });
+        AmState {
+            inner: Mutex::new(Inner {
+                attempt: 0,
+                phase: JobPhase::Negotiating,
+                tasks: BTreeMap::new(),
+                expected: Vec::new(),
+                spec: None,
+                started_at: Instant::now(),
+            }),
+            cond: Condvar::new(),
+            expected_from,
+        }
+    }
+
+    pub fn begin_attempt(&self, attempt: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.attempt = attempt;
+        inner.phase = JobPhase::Negotiating;
+        inner.spec = None;
+        inner.expected = (self.expected_from)(attempt);
+        inner.tasks = inner
+            .expected
+            .iter()
+            .map(|t| (t.clone(), TaskRecord::new(t.clone(), attempt)))
+            .collect();
+        self.cond.notify_all();
+    }
+
+    pub fn set_phase(&self, phase: JobPhase) {
+        self.inner.lock().unwrap().phase = phase;
+        self.cond.notify_all();
+    }
+
+    pub fn phase(&self) -> JobPhase {
+        self.inner.lock().unwrap().phase
+    }
+
+    pub fn attempt(&self) -> u32 {
+        self.inner.lock().unwrap().attempt
+    }
+
+    pub fn record_launch(&self, task: TaskId, container: ContainerId) {
+        let mut inner = self.inner.lock().unwrap();
+        let attempt = inner.attempt;
+        let rec = inner
+            .tasks
+            .entry(task.clone())
+            .or_insert_with(|| TaskRecord::new(task, attempt));
+        rec.container = Some(container);
+        rec.last_heartbeat = Some(Instant::now()); // launch counts as life
+    }
+
+    pub fn task_for_container(&self, container: ContainerId) -> Option<TaskId> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tasks
+            .values()
+            .find(|r| r.container == Some(container))
+            .map(|r| r.task.clone())
+    }
+
+    pub fn forget_container(&self, container: ContainerId) {
+        let mut inner = self.inner.lock().unwrap();
+        for r in inner.tasks.values_mut() {
+            if r.container == Some(container) {
+                r.container = None;
+            }
+        }
+    }
+
+    pub fn live_containers(&self) -> Vec<ContainerId> {
+        let inner = self.inner.lock().unwrap();
+        inner.tasks.values().filter_map(|r| r.container).collect()
+    }
+
+    /// The container currently hosting `task`, if it is still live
+    /// (chaos-injection targeting).
+    pub fn live_containers_for(&self, task: &TaskId) -> Option<ContainerId> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tasks
+            .get(task)
+            .filter(|r| r.exit_code.is_none())
+            .and_then(|r| r.container)
+    }
+
+    pub fn task_exit(&self, task: &TaskId) -> Option<i64> {
+        let inner = self.inner.lock().unwrap();
+        inner.tasks.get(task).and_then(|r| r.exit_code)
+    }
+
+    /// Build the cluster spec if every expected task has registered.
+    pub fn try_build_spec(&self, attempt: u32) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.attempt != attempt || inner.spec.is_some() {
+            return inner.spec.is_some();
+        }
+        let all_registered = inner
+            .expected
+            .iter()
+            .all(|t| inner.tasks.get(t).map(|r| r.endpoint.is_some()).unwrap_or(false));
+        if !all_registered {
+            return false;
+        }
+        let mut spec = ClusterSpec::new(attempt as u64);
+        for t in &inner.expected {
+            let ep = inner.tasks[t].endpoint.clone().unwrap();
+            spec.tasks.entry(t.job_type.clone()).or_default().push(ep);
+        }
+        inner.spec = Some(spec);
+        inner.phase = JobPhase::Running;
+        self.cond.notify_all();
+        true
+    }
+
+    /// Blocking spec fetch used by the RPC handler.
+    fn wait_spec(&self, version: u32, timeout: Duration) -> Option<ClusterSpec> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.attempt == version {
+                if let Some(spec) = &inner.spec {
+                    return Some(spec.clone());
+                }
+            }
+            if inner.attempt > version {
+                return None; // dead attempt
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self
+                .cond
+                .wait_timeout(inner, (deadline - now).min(Duration::from_millis(50)))
+                .unwrap();
+            inner = g;
+        }
+    }
+
+    pub fn first_tracked_failure(&self, job: &JobSpec) -> Option<(TaskId, i64)> {
+        let inner = self.inner.lock().unwrap();
+        for r in inner.tasks.values() {
+            if r.spec_version != inner.attempt {
+                continue;
+            }
+            let tracked = job.task_type(&r.task.job_type).map(|t| t.tracked).unwrap_or(true);
+            if !tracked {
+                continue;
+            }
+            if let Some(code) = r.exit_code {
+                if code != 0 {
+                    return Some((r.task.clone(), code));
+                }
+            }
+        }
+        None
+    }
+
+    pub fn all_tracked_succeeded(&self, job: &JobSpec) -> bool {
+        let inner = self.inner.lock().unwrap();
+        if inner.expected.is_empty() {
+            return false;
+        }
+        inner.expected.iter().all(|t| {
+            let tracked = job.task_type(&t.job_type).map(|tt| tt.tracked).unwrap_or(true);
+            if !tracked {
+                return true;
+            }
+            inner.tasks.get(t).and_then(|r| r.exit_code) == Some(0)
+        })
+    }
+
+    pub fn all_untracked_done(&self, job: &JobSpec) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.expected.iter().all(|t| {
+            let tracked = job.task_type(&t.job_type).map(|tt| tt.tracked).unwrap_or(true);
+            tracked || inner.tasks.get(t).map(|r| r.exit_code.is_some()).unwrap_or(true)
+        })
+    }
+
+    pub fn command_all_untracked(&self, job: &JobSpec, cmd: AmCommand) {
+        let mut inner = self.inner.lock().unwrap();
+        for r in inner.tasks.values_mut() {
+            let tracked = job.task_type(&r.task.job_type).map(|t| t.tracked).unwrap_or(true);
+            if !tracked && r.exit_code.is_none() {
+                r.command = cmd;
+            }
+        }
+    }
+
+    /// A task that *registered* but has stopped heartbeating.  Tasks that
+    /// are still starting up (engine compilation can take tens of seconds)
+    /// are covered by the AM's launch timeout instead.
+    pub fn stale_task(&self, budget: Duration) -> Option<TaskId> {
+        let inner = self.inner.lock().unwrap();
+        for r in inner.tasks.values() {
+            if r.exit_code.is_some() || r.spec_version != inner.attempt || r.endpoint.is_none() {
+                continue;
+            }
+            if let Some(last) = r.last_heartbeat {
+                if last.elapsed() > budget {
+                    return Some(r.task.clone());
+                }
+            }
+        }
+        None
+    }
+
+    /// First worker's UI URL (the TensorBoard stand-in, §2.2).
+    pub fn ui_url(&self) -> Option<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tasks
+            .values()
+            .find_map(|r| r.ui_url.clone())
+    }
+
+    /// Portal snapshot: whole-job status as JSON.
+    pub fn snapshot_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut tasks = Vec::new();
+        for r in inner.tasks.values() {
+            let mut t = Json::obj();
+            t.set("task", r.task.to_string());
+            t.set(
+                "container",
+                r.container.map(|c| Json::Str(c.to_string())).unwrap_or(Json::Null),
+            );
+            t.set(
+                "endpoint",
+                r.endpoint
+                    .as_ref()
+                    .map(|e| Json::Str(e.to_string()))
+                    .unwrap_or(Json::Null),
+            );
+            t.set("step", r.metrics.step);
+            t.set("loss", r.metrics.loss as f64);
+            t.set("tokens", r.metrics.tokens_done);
+            t.set("step_ms", r.metrics.step_ms_avg);
+            t.set("mem_mb", r.metrics.mem_used_mb);
+            t.set("updates", r.metrics.updates_applied);
+            t.set(
+                "exit",
+                r.exit_code.map(Json::from).unwrap_or(Json::Null),
+            );
+            t.set(
+                "log_url",
+                Json::Str(format!("/logs/{}", r.task)), // portal route
+            );
+            if let Some(u) = &r.ui_url {
+                t.set("ui_url", u.as_str());
+            }
+            tasks.push(t);
+        }
+        let mut j = Json::obj();
+        j.set("phase", format!("{:?}", inner.phase));
+        j.set("attempt", inner.attempt as u64);
+        j.set("uptime_ms", inner.started_at.elapsed().as_millis() as u64);
+        j.set("tasks", Json::Arr(tasks));
+        j.set(
+            "spec_ready",
+            inner.spec.is_some(),
+        );
+        j
+    }
+
+    /// Aggregate chief metrics (portal's loss curve).
+    pub fn chief_metrics(&self) -> Option<TaskMetrics> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tasks
+            .get(&TaskId::new("worker", 0))
+            .map(|r| r.metrics.clone())
+    }
+}
+
+/// RPC dispatch for the executor-facing AM server.
+pub struct AmRpcHandler {
+    state: std::sync::Arc<AmState>,
+}
+
+impl AmRpcHandler {
+    pub fn new(state: std::sync::Arc<AmState>) -> AmRpcHandler {
+        AmRpcHandler { state }
+    }
+}
+
+impl RpcHandler for AmRpcHandler {
+    fn handle(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>, String> {
+        match method {
+            AM_REGISTER => {
+                let msg = RegisterMsg::from_bytes(payload).map_err(|e| e.to_string())?;
+                let task = TaskId::new(msg.task_type.clone(), msg.index);
+                let mut inner = self.state.inner.lock().unwrap();
+                if msg.spec_version != inner.attempt {
+                    return Err(format!(
+                        "stale registration from {task} (attempt {} != {})",
+                        msg.spec_version, inner.attempt
+                    ));
+                }
+                let attempt = inner.attempt;
+                let rec = inner
+                    .tasks
+                    .entry(task.clone())
+                    .or_insert_with(|| TaskRecord::new(task, attempt));
+                rec.endpoint = Some(HostPort::new(msg.host.clone(), msg.port));
+                rec.ui_url = msg.ui_url.clone();
+                rec.last_heartbeat = Some(Instant::now());
+                drop(inner);
+                self.state.cond.notify_all();
+                self.state.try_build_spec(msg.spec_version);
+                Ok(Vec::new())
+            }
+            AM_GET_SPEC => {
+                let msg = GetSpecMsg::from_bytes(payload).map_err(|e| e.to_string())?;
+                match self
+                    .state
+                    .wait_spec(msg.spec_version, Duration::from_millis(msg.timeout_ms))
+                {
+                    Some(spec) => Ok(spec.to_tf_config("", 0).into_bytes()),
+                    None => Err("spec not ready".to_string()),
+                }
+            }
+            AM_HEARTBEAT => {
+                let msg = HeartbeatMsg::from_bytes(payload).map_err(|e| e.to_string())?;
+                let task = TaskId::new(msg.task_type.clone(), msg.index);
+                let mut inner = self.state.inner.lock().unwrap();
+                if msg.spec_version != inner.attempt {
+                    // Zombie from a torn-down attempt: tell it to die.
+                    return Ok(vec![AmCommand::Abort as u8]);
+                }
+                let cmd = match inner.tasks.get_mut(&task) {
+                    Some(rec) => {
+                        rec.last_heartbeat = Some(Instant::now());
+                        rec.metrics = msg.metrics;
+                        rec.command
+                    }
+                    None => AmCommand::Abort,
+                };
+                Ok(vec![cmd as u8])
+            }
+            AM_FINISHED => {
+                let msg = FinishedMsg::from_bytes(payload).map_err(|e| e.to_string())?;
+                let task = TaskId::new(msg.task_type.clone(), msg.index);
+                let mut inner = self.state.inner.lock().unwrap();
+                if msg.spec_version == inner.attempt {
+                    if let Some(rec) = inner.tasks.get_mut(&task) {
+                        rec.exit_code = Some(msg.exit_code);
+                        rec.metrics.finished = true;
+                    }
+                }
+                Ok(Vec::new())
+            }
+            AM_STATUS => Ok(self.state.snapshot_json().render().into_bytes()),
+            m => Err(format!("unknown AM method {m}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tonyconf::{JobConfBuilder, JobSpec};
+
+    fn job() -> JobSpec {
+        let conf = JobConfBuilder::new("t")
+            .instances("worker", 2)
+            .instances("ps", 1)
+            .build();
+        JobSpec::from_conf(&conf).unwrap()
+    }
+
+    #[test]
+    fn spec_builds_when_all_registered() {
+        let job = job();
+        let state = AmState::new(&job);
+        state.begin_attempt(1);
+        assert!(!state.try_build_spec(1));
+        let handler = AmRpcHandler::new(std::sync::Arc::new(AmState::new(&job)));
+        let _ = handler; // separate handler instance unused below
+        {
+            let mut inner = state.inner.lock().unwrap();
+            for (i, t) in inner.expected.clone().iter().enumerate() {
+                inner.tasks.get_mut(t).unwrap().endpoint =
+                    Some(HostPort::localhost(6000 + i as u16));
+            }
+        }
+        assert!(state.try_build_spec(1));
+        let spec = state.wait_spec(1, Duration::from_millis(10)).unwrap();
+        assert_eq!(spec.endpoints("worker").len(), 2);
+        assert_eq!(spec.endpoints("ps").len(), 1);
+        assert_eq!(spec.version, 1);
+    }
+
+    #[test]
+    fn tracked_success_and_failure_detection() {
+        let job = job();
+        let state = AmState::new(&job);
+        state.begin_attempt(1);
+        assert!(!state.all_tracked_succeeded(&job));
+        {
+            let mut inner = state.inner.lock().unwrap();
+            inner.tasks.get_mut(&TaskId::new("worker", 0)).unwrap().exit_code = Some(0);
+            inner.tasks.get_mut(&TaskId::new("worker", 1)).unwrap().exit_code = Some(0);
+        }
+        // PS still running but untracked -> job counts as done.
+        assert!(state.all_tracked_succeeded(&job));
+        assert!(state.first_tracked_failure(&job).is_none());
+        {
+            let mut inner = state.inner.lock().unwrap();
+            inner.tasks.get_mut(&TaskId::new("worker", 1)).unwrap().exit_code = Some(1);
+        }
+        let (t, code) = state.first_tracked_failure(&job).unwrap();
+        assert_eq!(t, TaskId::new("worker", 1));
+        assert_eq!(code, 1);
+    }
+
+    #[test]
+    fn heartbeat_and_stale_detection() {
+        let job = job();
+        let state = std::sync::Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+        // Register worker:0 so it is subject to heartbeat liveness.
+        let reg = RegisterMsg {
+            task_type: "worker".into(),
+            index: 0,
+            host: "127.0.0.1".into(),
+            port: 1234,
+            ui_url: None,
+            spec_version: 1,
+        };
+        handler.handle(AM_REGISTER, &reg.to_bytes()).unwrap();
+        let hb = HeartbeatMsg {
+            task_type: "worker".into(),
+            index: 0,
+            spec_version: 1,
+            metrics: TaskMetrics { step: 3, ..Default::default() },
+        };
+        let resp = handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
+        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::None);
+        // Zombie heartbeat from an old attempt gets Abort.
+        let old = HeartbeatMsg { spec_version: 0, ..hb.clone() };
+        let resp = handler.handle(AM_HEARTBEAT, &old.to_bytes()).unwrap();
+        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::Abort);
+        // The heartbeated task is fresh; others have no heartbeat at all
+        // (never launched) and are not stale either.
+        assert!(state.stale_task(Duration::from_secs(60)).is_none());
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(
+            state.stale_task(Duration::from_millis(1)),
+            Some(TaskId::new("worker", 0))
+        );
+    }
+
+    #[test]
+    fn untracked_stop_commands() {
+        let job = job();
+        let state = std::sync::Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        state.command_all_untracked(&job, AmCommand::Stop);
+        let handler = AmRpcHandler::new(state.clone());
+        let hb = HeartbeatMsg {
+            task_type: "ps".into(),
+            index: 0,
+            spec_version: 1,
+            metrics: TaskMetrics::default(),
+        };
+        let resp = handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
+        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::Stop);
+        // Worker heartbeats still get None.
+        let hbw = HeartbeatMsg { task_type: "worker".into(), ..hb };
+        let resp = handler.handle(AM_HEARTBEAT, &hbw.to_bytes()).unwrap();
+        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::None);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let job = job();
+        let state = AmState::new(&job);
+        state.begin_attempt(2);
+        let j = state.snapshot_json();
+        assert_eq!(j.get("attempt").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("tasks").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

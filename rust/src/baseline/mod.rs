@@ -1,0 +1,288 @@
+//! The ad-hoc baseline: what ML engineers did *before* TonY (paper §1).
+//!
+//! A pool of unmanaged machines and a launch script that copies the
+//! program to hand-picked hosts and starts tasks with **no resource
+//! isolation, no admission control, no monitoring, and no restarts**.
+//! Used by the C1 contention bench and `examples/contention.rs` to
+//! quantify §1's four challenges against TonY's managed path.
+//!
+//! Failure model (matching the paper's complaints):
+//! - Tasks land on user-chosen (here: round-robin/random) hosts without
+//!   checking capacity; if a host's *physical* memory is exceeded by its
+//!   co-resident tasks, the overcommitted task OOMs (probabilistically,
+//!   proportional to overcommit) — "jobs may fail with out-of-memory
+//!   exceptions or errors allocating GPUs".
+//! - Each host's config must be assembled by hand; with `n` hosts the
+//!   chance of a copy-paste error grows (modeled with a per-host error
+//!   rate), yielding mis-configured jobs that waste their runtime before
+//!   failing.
+//! - A failed task is NOT restarted; the job is lost.
+
+use crate::util::SplitMix64;
+use crate::yarn::Resource;
+
+/// One unmanaged host.
+#[derive(Debug, Clone)]
+pub struct AdhocHost {
+    pub capacity: Resource,
+    pub committed: Resource,
+}
+
+/// A task the user wants to run somewhere.
+#[derive(Debug, Clone)]
+pub struct AdhocTask {
+    pub job: u32,
+    pub need: Resource,
+    /// Runtime if all goes well, ms (virtual).
+    pub runtime_ms: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdhocOutcome {
+    Succeeded,
+    OomKilled,
+    Misconfigured,
+}
+
+#[derive(Debug, Clone)]
+pub struct AdhocJobResult {
+    pub job: u32,
+    pub outcome: AdhocOutcome,
+    /// Virtual completion time (ms since pool start), if it ran at all.
+    pub finished_at_ms: u64,
+}
+
+/// Simulation parameters for the ad-hoc pool.
+#[derive(Debug, Clone)]
+pub struct AdhocParams {
+    /// Probability a hand-copied per-host config is wrong.
+    pub per_host_config_error: f64,
+    pub seed: u64,
+}
+
+impl Default for AdhocParams {
+    fn default() -> Self {
+        AdhocParams { per_host_config_error: 0.02, seed: 0 }
+    }
+}
+
+/// Run a set of jobs (each a list of tasks) on an unmanaged pool and
+/// report per-job outcomes.  Virtual time: all tasks start immediately
+/// (nobody queues in the ad-hoc world — that is exactly the problem).
+pub fn run_adhoc_pool(
+    hosts: &[Resource],
+    jobs: &[Vec<AdhocTask>],
+    params: &AdhocParams,
+) -> Vec<AdhocJobResult> {
+    let mut rng = SplitMix64::new(params.seed);
+    let mut pool: Vec<AdhocHost> = hosts
+        .iter()
+        .map(|c| AdhocHost { capacity: *c, committed: Resource::ZERO })
+        .collect();
+
+    // Placement: users pick hosts by hand; model as random choice.
+    // Every task gets placed (no admission control).
+    struct Placed {
+        job: u32,
+        host: usize,
+        need: Resource,
+        runtime_ms: u64,
+        misconfigured: bool,
+    }
+    let mut placed = Vec::new();
+    for tasks in jobs {
+        for t in tasks {
+            let host = rng.next_below(pool.len() as u64) as usize;
+            pool[host].committed += t.need;
+            let misconfigured = rng.chance(params.per_host_config_error);
+            placed.push(Placed {
+                job: t.job,
+                host,
+                need: t.need,
+                runtime_ms: t.runtime_ms,
+                misconfigured,
+            });
+        }
+    }
+
+    // OOM: on each host, if commitment exceeds capacity, tasks die with
+    // probability proportional to the overcommit fraction (the kernel's
+    // OOM killer takes someone).
+    let mut task_outcomes: Vec<AdhocOutcome> = Vec::with_capacity(placed.len());
+    for p in &placed {
+        if p.misconfigured {
+            task_outcomes.push(AdhocOutcome::Misconfigured);
+            continue;
+        }
+        let h = &pool[p.host];
+        let over = h.committed.memory_mb as f64 / h.capacity.memory_mb.max(1) as f64;
+        if over > 1.0 {
+            // Overcommit ratio 1.5 -> ~1/3 of memory demand unservable.
+            let p_oom = ((over - 1.0) / over).clamp(0.0, 1.0);
+            // Bigger tasks are likelier victims.
+            let weight =
+                p.need.memory_mb as f64 / h.committed.memory_mb.max(1) as f64;
+            if rng.chance((p_oom * (0.5 + weight)).min(0.95)) {
+                task_outcomes.push(AdhocOutcome::OomKilled);
+                continue;
+            }
+        }
+        task_outcomes.push(AdhocOutcome::Succeeded);
+    }
+
+    // Job outcome = all its tasks succeeded (no restarts in ad-hoc land).
+    let n_jobs = jobs.len() as u32;
+    (0..n_jobs)
+        .map(|job| {
+            let mut outcome = AdhocOutcome::Succeeded;
+            let mut finish = 0u64;
+            for (p, o) in placed.iter().zip(&task_outcomes) {
+                if p.job != job {
+                    continue;
+                }
+                finish = finish.max(p.runtime_ms);
+                match o {
+                    AdhocOutcome::Succeeded => {}
+                    bad => {
+                        outcome = *bad;
+                    }
+                }
+            }
+            AdhocJobResult { job, outcome, finished_at_ms: finish }
+        })
+        .collect()
+}
+
+/// Managed (TonY/YARN) counterpart in the same virtual-time model:
+/// admission-controlled placement — jobs queue until capacity frees, no
+/// OOM (containers are isolated), no config errors (central spec).
+/// Returns per-job finish times; all jobs succeed.
+pub fn run_managed_pool(hosts: &[Resource], jobs: &[Vec<AdhocTask>]) -> Vec<AdhocJobResult> {
+    #[derive(Clone)]
+    struct Running {
+        host: usize,
+        need: Resource,
+        done_at: u64,
+        job: u32,
+    }
+    let mut free: Vec<Resource> = hosts.to_vec();
+    let mut running: Vec<Running> = Vec::new();
+    let mut queue: Vec<(u32, AdhocTask)> = jobs
+        .iter()
+        .flat_map(|tasks| tasks.iter().map(|t| (t.job, t.clone())))
+        .collect();
+    let mut now = 0u64;
+    let mut finished_at = vec![0u64; jobs.len()];
+
+    while !queue.is_empty() || !running.is_empty() {
+        // Start everything that fits (first-fit).
+        let mut i = 0;
+        while i < queue.len() {
+            let (job, t) = &queue[i];
+            match free.iter().position(|f| f.fits(&t.need)) {
+                Some(h) => {
+                    free[h] -= t.need;
+                    running.push(Running {
+                        host: h,
+                        need: t.need,
+                        done_at: now + t.runtime_ms,
+                        job: *job,
+                    });
+                    queue.remove(i);
+                }
+                None => i += 1,
+            }
+        }
+        // Advance virtual time to the next completion.
+        let Some(next) = running.iter().map(|r| r.done_at).min() else {
+            if queue.is_empty() {
+                break;
+            }
+            // Nothing runs and nothing fits: impossible jobs. Guard.
+            break;
+        };
+        now = next;
+        let mut j = 0;
+        while j < running.len() {
+            if running[j].done_at <= now {
+                let r = running.remove(j);
+                free[r.host] += r.need;
+                finished_at[r.job as usize] = finished_at[r.job as usize].max(now);
+            } else {
+                j += 1;
+            }
+        }
+    }
+    (0..jobs.len() as u32)
+        .map(|job| AdhocJobResult {
+            job,
+            outcome: AdhocOutcome::Succeeded,
+            finished_at_ms: finished_at[job as usize],
+        })
+        .collect()
+}
+
+/// Workload generator: `n_jobs` identical PS/worker-style jobs.
+pub fn synthetic_jobs(n_jobs: u32, tasks_per_job: u32, mem_mb: u64, runtime_ms: u64) -> Vec<Vec<AdhocTask>> {
+    (0..n_jobs)
+        .map(|job| {
+            (0..tasks_per_job)
+                .map(|_| AdhocTask {
+                    job,
+                    need: Resource::mem_cores(mem_mb, 1),
+                    runtime_ms,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn undersubscribed_adhoc_pool_mostly_succeeds() {
+        let hosts = vec![Resource::mem_cores(16384, 16); 8];
+        let jobs = synthetic_jobs(4, 2, 1024, 1000);
+        let params = AdhocParams { per_host_config_error: 0.0, seed: 1 };
+        let results = run_adhoc_pool(&hosts, &jobs, &params);
+        assert!(results.iter().all(|r| r.outcome == AdhocOutcome::Succeeded));
+    }
+
+    #[test]
+    fn oversubscribed_adhoc_pool_looses_jobs() {
+        let hosts = vec![Resource::mem_cores(4096, 8); 2];
+        // 16 jobs x 2 tasks x 2 GiB = 64 GiB onto 8 GiB of hosts.
+        let jobs = synthetic_jobs(16, 2, 2048, 1000);
+        let params = AdhocParams { per_host_config_error: 0.0, seed: 2 };
+        let results = run_adhoc_pool(&hosts, &jobs, &params);
+        let failed = results.iter().filter(|r| r.outcome != AdhocOutcome::Succeeded).count();
+        assert!(failed > 8, "expected heavy OOM carnage, got {failed}/16 failures");
+    }
+
+    #[test]
+    fn managed_pool_queues_and_finishes_everything() {
+        let hosts = vec![Resource::mem_cores(4096, 8); 2];
+        let jobs = synthetic_jobs(16, 2, 2048, 1000);
+        let results = run_managed_pool(&hosts, &jobs);
+        assert!(results.iter().all(|r| r.outcome == AdhocOutcome::Succeeded));
+        // With 8 GiB total and 4 GiB per job, at most 2 jobs run at once:
+        // makespan must reflect queuing (≥ 8 waves x 1000 ms).
+        let makespan = results.iter().map(|r| r.finished_at_ms).max().unwrap();
+        assert!(makespan >= 8000, "makespan {makespan}");
+    }
+
+    #[test]
+    fn config_errors_scale_with_hosts() {
+        let hosts = vec![Resource::mem_cores(65536, 64); 16];
+        let jobs = synthetic_jobs(50, 8, 512, 100);
+        let params = AdhocParams { per_host_config_error: 0.05, seed: 3 };
+        let results = run_adhoc_pool(&hosts, &jobs, &params);
+        let misconfigured = results
+            .iter()
+            .filter(|r| r.outcome == AdhocOutcome::Misconfigured)
+            .count();
+        assert!(misconfigured > 5, "8 tasks x 5% per-host error should bite: {misconfigured}");
+    }
+}

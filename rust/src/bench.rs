@@ -1,0 +1,161 @@
+//! Micro bench harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is `harness = false` and uses this:
+//! warmup + timed iterations, median/mean/p95 reporting, and aligned
+//! table printing so every bench regenerates its EXPERIMENTS.md table
+//! verbatim.  `cargo bench` runs them all.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns.max(1e-9)
+    }
+}
+
+/// Time `f` for up to `max_iters` iterations or `budget`, whichever first
+/// (after `warmup` untimed runs).  Returns per-iteration stats.
+pub fn bench<F: FnMut()>(warmup: usize, max_iters: usize, budget: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(max_iters.min(4096));
+    let start = Instant::now();
+    for _ in 0..max_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    stats_from(samples)
+}
+
+/// Build stats from raw per-iteration samples (ns).
+pub fn stats_from(mut samples: Vec<f64>) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    Stats {
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        min_ns: samples[0],
+    }
+}
+
+/// One measured wall-clock run (for end-to-end benches where iterating is
+/// too expensive): returns elapsed ms.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Aligned table printer.  Benches print their rows through this so the
+/// output is diff-stable for EXPERIMENTS.md.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n### {title}");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// `fmt!`-lite helpers for bench rows.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn n(v: impl std::fmt::Display) -> String {
+    format!("{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench(2, 100, Duration::from_millis(200), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters > 10);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new(&["a", "long-header"]);
+        t.row(&[n(1), f1(2.5)]);
+        t.print("test"); // just must not panic
+    }
+
+    #[test]
+    fn stats_from_percentiles() {
+        let s = stats_from((1..=100).map(|v| v as f64).collect());
+        assert_eq!(s.median_ns, 51.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert!(s.p95_ns >= 95.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Failure injection: deterministic kill schedules against running jobs.
+//!
+//! Exercises the paper's fault-tolerance loop (§2.2): kill a task
+//! container or a whole node at a chosen moment and let the AM tear down,
+//! re-negotiate, and relaunch from the last checkpoint.  Used by
+//! `examples/fault_tolerance.rs`, the C4 bench, and the integration tests.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::am::AmState;
+use crate::util::ids::NodeId;
+use crate::util::SplitMix64;
+use crate::yarn::ResourceManager;
+use crate::{tinfo, twarn};
+
+/// One planned failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Kill the container of task `type:index` once its chief passes
+    /// `after_step` (or after `after_ms` if the job has no step signal).
+    KillTask { task_type: String, index: u32, after_step: u64 },
+    /// Kill a whole node after the chief passes `after_step`.
+    KillNode { node: u32, after_step: u64 },
+}
+
+/// Outcome record for reporting (EXPERIMENTS.md / benches).
+#[derive(Debug, Clone)]
+pub struct InjectionRecord {
+    pub fault: Fault,
+    pub injected_at_ms: u64,
+    pub chief_step_at_injection: u64,
+}
+
+/// Watches a job's AM state and fires faults per schedule.  Runs on its
+/// own thread; returns records through `join`.
+pub struct ChaosInjector {
+    handle: Option<std::thread::JoinHandle<Vec<InjectionRecord>>>,
+}
+
+impl ChaosInjector {
+    pub fn start(
+        rm: Arc<ResourceManager>,
+        am_state: Arc<AmState>,
+        schedule: Vec<Fault>,
+    ) -> ChaosInjector {
+        let handle = std::thread::Builder::new()
+            .name("chaos".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let mut records = Vec::new();
+                let mut pending = schedule;
+                // At most one fault per AM attempt: killing twice within
+                // the same attempt is indistinguishable from one failure
+                // (the AM tears everything down anyway).
+                let mut last_fired_attempt = 0u32;
+                while !pending.is_empty() {
+                    let phase = am_state.phase();
+                    if matches!(
+                        phase,
+                        crate::am::JobPhase::Succeeded | crate::am::JobPhase::Failed
+                    ) {
+                        twarn!("chaos", "job ended with {} faults unfired", pending.len());
+                        break;
+                    }
+                    let attempt = am_state.attempt();
+                    if attempt == last_fired_attempt {
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                    let step = am_state.chief_metrics().map(|m| m.step).unwrap_or(0);
+                    let mut fired = Vec::new();
+                    for (i, fault) in pending.iter().enumerate() {
+                        if !fired.is_empty() {
+                            break; // one per attempt
+                        }
+                        let due = match fault {
+                            Fault::KillTask { after_step, .. }
+                            | Fault::KillNode { after_step, .. } => step >= *after_step,
+                        };
+                        if !due {
+                            continue;
+                        }
+                        match fault {
+                            Fault::KillTask { task_type, index, .. } => {
+                                let task = crate::util::ids::TaskId::new(task_type.clone(), *index);
+                                if let Some(cid) = am_state
+                                    .live_containers_for(&task)
+                                {
+                                    tinfo!("chaos", "killing {task} (container {cid}) at step {step}");
+                                    rm.stop_container(cid);
+                                    fired.push(i);
+                                }
+                            }
+                            Fault::KillNode { node, .. } => {
+                                tinfo!("chaos", "killing node{node} at step {step}");
+                                rm.kill_node(NodeId(*node));
+                                fired.push(i);
+                            }
+                        }
+                    }
+                    if !fired.is_empty() {
+                        last_fired_attempt = attempt;
+                    }
+                    for &i in fired.iter().rev() {
+                        records.push(InjectionRecord {
+                            fault: pending.remove(i),
+                            injected_at_ms: t0.elapsed().as_millis() as u64,
+                            chief_step_at_injection: step,
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                records
+            })
+            .expect("spawn chaos thread");
+        ChaosInjector { handle: Some(handle) }
+    }
+
+    pub fn join(mut self) -> Vec<InjectionRecord> {
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+/// Random fault schedule generator (property tests / soak runs).
+pub fn random_schedule(seed: u64, n_workers: u32, n_faults: usize, max_step: u64) -> Vec<Fault> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n_faults)
+        .map(|_| {
+            if rng.chance(0.7) {
+                Fault::KillTask {
+                    task_type: "worker".to_string(),
+                    index: rng.next_below(n_workers.max(1) as u64) as u32,
+                    after_step: rng.range_u64(1, max_step.max(2)),
+                }
+            } else {
+                Fault::KillNode {
+                    node: rng.next_below(4) as u32,
+                    after_step: rng.range_u64(1, max_step.max(2)),
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_schedule_is_deterministic_and_bounded() {
+        let a = random_schedule(7, 4, 10, 50);
+        let b = random_schedule(7, 4, 10, 50);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        for f in &a {
+            match f {
+                Fault::KillTask { index, after_step, .. } => {
+                    assert!(*index < 4);
+                    assert!((1..=50).contains(after_step));
+                }
+                Fault::KillNode { node, after_step } => {
+                    assert!(*node < 4);
+                    assert!((1..=50).contains(after_step));
+                }
+            }
+        }
+    }
+}

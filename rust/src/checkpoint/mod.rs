@@ -1,0 +1,304 @@
+//! Checkpoint store: atomic, versioned snapshots of the flat parameter
+//! vector (+ optimizer moments), enabling the paper's restart semantics
+//! ("the ML tasks can then restore from the last checkpoint and continue
+//! training", §2.2).
+//!
+//! Format (little-endian):
+//! ```text
+//!   magic "TONYCKPT" | u32 version | u64 step | u64 n | f32[n] params
+//!   | u8 has_moments | (u64 n, f32[n] m, f32[n] v)?
+//!   | u64 fletcher-ish checksum over the payload
+//! ```
+//! Writes go to `ckpt-<step>.tony.tmp` then rename — a torn write never
+//! shadows the previous checkpoint.  `latest()` picks the highest step
+//! whose checksum validates, so a corrupt file falls back to the previous
+//! snapshot instead of failing the restore.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"TONYCKPT";
+const FORMAT_VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    /// Adam moments per parameter (kept so restores are exact).
+    pub moments: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+fn checksum(bytes: &[u8]) -> u64 {
+    // Fletcher-style rolling sum; fast and adequate for torn-write
+    // detection (not cryptographic).
+    let (mut a, mut b) = (1u64, 0u64);
+    for chunk in bytes.chunks(4096) {
+        for &x in chunk {
+            a = a.wrapping_add(x as u64);
+            b = b.wrapping_add(a);
+        }
+        a %= 0xFFFF_FFFB;
+        b %= 0xFFFF_FFFB;
+    }
+    (b << 32) | a
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    let raw = unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+    out.extend_from_slice(raw);
+}
+
+fn read_u64(b: &[u8], pos: &mut usize) -> Result<u64> {
+    if *pos + 8 > b.len() {
+        bail!("truncated checkpoint");
+    }
+    let v = u64::from_le_bytes(b[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+fn read_f32s(b: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
+    let n = read_u64(b, pos)? as usize;
+    let bytes = n.checked_mul(4).context("overflow")?;
+    if *pos + bytes > b.len() {
+        bail!("truncated checkpoint payload");
+    }
+    let mut out = vec![0f32; n];
+    unsafe {
+        std::ptr::copy_nonoverlapping(b[*pos..].as_ptr(), out.as_mut_ptr() as *mut u8, bytes);
+    }
+    *pos += bytes;
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.params.len() * 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        push_f32s(&mut out, &self.params);
+        match &self.moments {
+            None => out.push(0),
+            Some((m, v)) => {
+                out.push(1);
+                push_f32s(&mut out, m);
+                push_f32s(&mut out, v);
+            }
+        }
+        let sum = checksum(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < MAGIC.len() + 4 + 8 + 8 {
+            bail!("checkpoint too short");
+        }
+        if &bytes[..8] != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let (payload, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if checksum(payload) != stored {
+            bail!("checkpoint checksum mismatch");
+        }
+        let mut pos = 8;
+        let ver = u32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap());
+        pos += 4;
+        if ver != FORMAT_VERSION {
+            bail!("unsupported checkpoint version {ver}");
+        }
+        let step = read_u64(payload, &mut pos)?;
+        let params = read_f32s(payload, &mut pos)?;
+        let moments = match payload.get(pos) {
+            Some(0) => {
+                pos += 1;
+                None
+            }
+            Some(1) => {
+                pos += 1;
+                let m = read_f32s(payload, &mut pos)?;
+                let v = read_f32s(payload, &mut pos)?;
+                if m.len() != params.len() || v.len() != params.len() {
+                    bail!("moment length mismatch");
+                }
+                Some((m, v))
+            }
+            _ => bail!("truncated moments flag"),
+        };
+        if pos != payload.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(Checkpoint { step, params, moments })
+    }
+}
+
+/// Directory of versioned checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    /// Keep at most this many snapshots (oldest pruned). 0 = unlimited.
+    pub keep: usize,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl Into<PathBuf>) -> CheckpointStore {
+        CheckpointStore { dir: dir.into(), keep: 3 }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, step: u64) -> PathBuf {
+        self.dir.join(format!("ckpt-{step:012}.tony"))
+    }
+
+    /// Atomic write (tmp + rename) and prune.
+    pub fn save(&self, ckpt: &Checkpoint) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        let final_path = self.path_for(ckpt.step);
+        let tmp = final_path.with_extension("tony.tmp");
+        std::fs::write(&tmp, ckpt.encode())?;
+        std::fs::rename(&tmp, &final_path)?;
+        if self.keep > 0 {
+            let mut steps = self.list()?;
+            while steps.len() > self.keep {
+                let oldest = steps.remove(0);
+                let _ = std::fs::remove_file(self.path_for(oldest));
+            }
+        }
+        Ok(final_path)
+    }
+
+    /// All checkpoint steps, ascending.
+    pub fn list(&self) -> Result<Vec<u64>> {
+        let mut steps = Vec::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(steps),
+        };
+        for ent in entries.flatten() {
+            let name = ent.file_name().to_string_lossy().into_owned();
+            if let Some(rest) = name.strip_prefix("ckpt-") {
+                if let Some(num) = rest.strip_suffix(".tony") {
+                    if let Ok(step) = num.parse::<u64>() {
+                        steps.push(step);
+                    }
+                }
+            }
+        }
+        steps.sort_unstable();
+        Ok(steps)
+    }
+
+    /// Newest checkpoint that decodes cleanly (corrupt ones are skipped).
+    pub fn latest(&self) -> Result<Option<Checkpoint>> {
+        let steps = self.list()?;
+        for step in steps.into_iter().rev() {
+            let path = self.path_for(step);
+            match std::fs::read(&path).map_err(anyhow::Error::from).and_then(|b| Checkpoint::decode(&b)) {
+                Ok(c) => return Ok(Some(c)),
+                Err(e) => {
+                    crate::twarn!("ckpt", "skipping corrupt {}: {e}", path.display());
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    pub fn clear(&self) -> Result<()> {
+        if self.dir.exists() {
+            std::fs::remove_dir_all(&self.dir)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tony-ckpt-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(step: u64, n: usize) -> Checkpoint {
+        Checkpoint {
+            step,
+            params: (0..n).map(|i| (i as f32 * 0.1).sin()).collect(),
+            moments: Some((vec![0.1; n], vec![0.2; n])),
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let c = sample(42, 1000);
+        assert_eq!(Checkpoint::decode(&c.encode()).unwrap(), c);
+        let no_moments = Checkpoint { moments: None, ..sample(7, 10) };
+        assert_eq!(Checkpoint::decode(&no_moments.encode()).unwrap(), no_moments);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = sample(1, 100);
+        let mut b = c.encode();
+        let mid = b.len() / 2;
+        b[mid] ^= 0xFF;
+        assert!(Checkpoint::decode(&b).is_err());
+        assert!(Checkpoint::decode(&b[..b.len() - 3]).is_err());
+        assert!(Checkpoint::decode(b"short").is_err());
+    }
+
+    #[test]
+    fn store_save_list_latest() {
+        let dir = tmpdir("store");
+        let store = CheckpointStore::new(&dir);
+        for step in [10, 20, 30] {
+            store.save(&sample(step, 50)).unwrap();
+        }
+        assert_eq!(store.list().unwrap(), vec![10, 20, 30]);
+        assert_eq!(store.latest().unwrap().unwrap().step, 30);
+        store.clear().unwrap();
+        assert!(store.latest().unwrap().is_none());
+    }
+
+    #[test]
+    fn prune_keeps_newest() {
+        let dir = tmpdir("prune");
+        let mut store = CheckpointStore::new(&dir);
+        store.keep = 2;
+        for step in 1..=5 {
+            store.save(&sample(step, 10)).unwrap();
+        }
+        assert_eq!(store.list().unwrap(), vec![4, 5]);
+        store.clear().unwrap();
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back() {
+        let dir = tmpdir("fallback");
+        let store = CheckpointStore::new(&dir);
+        store.save(&sample(10, 20)).unwrap();
+        store.save(&sample(20, 20)).unwrap();
+        // Corrupt the newest file on disk.
+        let newest = dir.join("ckpt-000000000020.tony");
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x55;
+        std::fs::write(&newest, bytes).unwrap();
+        let latest = store.latest().unwrap().unwrap();
+        assert_eq!(latest.step, 10, "falls back past the corrupt snapshot");
+        store.clear().unwrap();
+    }
+}

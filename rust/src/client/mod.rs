@@ -1,0 +1,211 @@
+//! The TonY Client (paper §2.1): the library users call to launch
+//! distributed ML jobs.
+//!
+//! Users describe resources in an XML configuration (see
+//! [`crate::tonyconf`]), the client validates it, packages the
+//! configuration + program spec into a staging directory (the archive the
+//! real client ships to HDFS), submits the application to the scheduler,
+//! and then surfaces the AM's tracking/UI URLs and final status.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::am::{run_application_master, AmContext, AmState};
+use crate::portal::Portal;
+use crate::tinfo;
+use crate::tonyconf::JobSpec;
+use crate::util::ids::ApplicationId;
+use crate::xmlconf::Configuration;
+use crate::yarn::{AppReport, AppState, ResourceManager, SubmissionContext};
+
+/// A submitted job: the client-side handle.
+pub struct JobHandle {
+    pub app_id: ApplicationId,
+    pub rm: Arc<ResourceManager>,
+    pub am_state: Arc<AmState>,
+    pub staging_dir: Option<PathBuf>,
+    /// The job's monitoring portal (its URL is the RM tracking URL).
+    pub portal: Option<Portal>,
+}
+
+impl JobHandle {
+    pub fn report(&self) -> Option<AppReport> {
+        self.rm.app_report(self.app_id)
+    }
+
+    /// Block until the job reaches a terminal state.
+    pub fn wait(&self, timeout: Duration) -> Result<AppReport> {
+        self.rm.wait_for_completion(self.app_id, timeout)
+    }
+
+    /// The first worker's visualization UI URL, once registered (§2.2).
+    pub fn ui_url(&self) -> Option<String> {
+        self.am_state.ui_url()
+    }
+
+    /// Live job status JSON (what the portal serves).
+    pub fn status_json(&self) -> crate::json::Json {
+        self.am_state.snapshot_json()
+    }
+
+    pub fn kill(&self) {
+        self.rm.kill_application(self.app_id);
+    }
+
+    /// Portal URL (also the RM tracking URL), if the portal started.
+    pub fn portal_url(&self) -> Option<String> {
+        self.portal.as_ref().map(|p| p.url())
+    }
+
+    /// Persist this job's final record into a history store.
+    pub fn record_history(
+        &self,
+        store: &crate::history::HistoryStore,
+        wall_ms: u64,
+    ) -> anyhow::Result<std::path::PathBuf> {
+        let report = self
+            .report()
+            .ok_or_else(|| anyhow::anyhow!("no report for {}", self.app_id))?;
+        store.record_from(self.app_id, &report, &self.am_state, wall_ms)
+    }
+}
+
+/// The TonY client.
+pub struct TonyClient {
+    rm: Arc<ResourceManager>,
+    /// Where job archives are staged (the HDFS stand-in).
+    pub staging_root: PathBuf,
+}
+
+impl TonyClient {
+    pub fn new(rm: Arc<ResourceManager>) -> TonyClient {
+        TonyClient {
+            rm,
+            staging_root: std::env::temp_dir().join("tony-staging"),
+        }
+    }
+
+    /// Validate, stage, and submit a job described by `conf`.
+    /// `preset_dir` points at the AOT artifacts the tasks will execute.
+    pub fn submit(&self, conf: &Configuration, preset_dir: &std::path::Path) -> Result<JobHandle> {
+        let spec = Arc::new(JobSpec::from_conf(conf).context("invalid job configuration")?);
+
+        // Fail fast if the job can never fit (the resource-contention
+        // story of §1 is about *queuing*, not impossible jobs).
+        // Only checked against total capacity; transient contention queues.
+        let total_needed = spec.total_task_resources() + spec.am_resource;
+        let cluster: crate::yarn::Resource = self
+            .rm
+            .node_usage()
+            .iter()
+            .fold(crate::yarn::Resource::ZERO, |acc, (_, _, cap)| acc + *cap);
+        if !cluster.fits(&total_needed) {
+            bail!(
+                "job needs {total_needed} but the cluster only has {cluster}; \
+                 reduce instances or memory"
+            );
+        }
+        if !preset_dir.join("meta.json").exists() {
+            bail!(
+                "artifacts missing at {} (run `make artifacts`)",
+                preset_dir.display()
+            );
+        }
+
+        // Stage the "archive": conf + program metadata, like the client
+        // packaging the virtualenv/ML program for the cluster (§2.2).
+        let staging = self.stage(&spec, conf)?;
+
+        let am_state = Arc::new(AmState::new(&spec));
+        let rm = self.rm.clone();
+        let am_ctx_state = am_state.clone();
+        let preset_dir = preset_dir.to_path_buf();
+        let spec_for_am = spec.clone();
+
+        // The AM launchable: what the RM runs in the AM container.
+        let rm_for_am = rm.clone();
+        let submission = SubmissionContext {
+            name: spec.name.clone(),
+            queue: spec.queue.clone(),
+            am_resource: spec.am_resource,
+        };
+        let app_id_cell = Arc::new(std::sync::OnceLock::new());
+        let app_id_for_am = app_id_cell.clone();
+        let am_code: crate::yarn::container::Launchable = Box::new(move |cctx| {
+            let app = *app_id_for_am.wait();
+            let am = AmContext {
+                rm: rm_for_am,
+                app,
+                job: spec_for_am,
+                preset_dir,
+                state: am_ctx_state,
+            };
+            run_application_master(am, &cctx)
+        });
+        let app_id = rm.submit_application(submission, am_code)?;
+        let _ = app_id_cell.set(app_id);
+        // Central monitoring portal (paper challenge #3); its URL becomes
+        // the application's tracking URL, like YARN's proxy link.
+        let portal = match Portal::start(am_state.clone(), rm.clone()) {
+            Ok(p) => {
+                rm.set_tracking_url(app_id, p.url());
+                Some(p)
+            }
+            Err(e) => {
+                crate::twarn!("client", "portal failed to start: {e:#}");
+                None
+            }
+        };
+        tinfo!("client", "submitted {} ('{}'), staged at {}", app_id, spec.name, staging.display());
+        Ok(JobHandle { app_id, rm, am_state, staging_dir: Some(staging), portal })
+    }
+
+    /// Submit from a tony.xml file on disk.
+    pub fn submit_xml_file(
+        &self,
+        xml_path: &std::path::Path,
+        preset_dir: &std::path::Path,
+    ) -> Result<JobHandle> {
+        let conf = Configuration::from_xml_file(xml_path)?;
+        self.submit(&conf, preset_dir)
+    }
+
+    fn stage(&self, spec: &JobSpec, conf: &Configuration) -> Result<PathBuf> {
+        let dir = self
+            .staging_root
+            .join(format!("{}-{}", spec.name, crate::util::ids::next_seq()));
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join("tony.xml"), conf.to_xml())?;
+        std::fs::write(
+            dir.join("MANIFEST"),
+            format!(
+                "name={}\nqueue={}\ntasks={}\npreset={}\n",
+                spec.name,
+                spec.queue,
+                spec.total_tasks(),
+                spec.train.preset
+            ),
+        )?;
+        Ok(dir)
+    }
+}
+
+/// Convenience: submit and wait, returning (report, final chief metrics).
+pub fn run_job_blocking(
+    rm: &Arc<ResourceManager>,
+    conf: &Configuration,
+    preset_dir: &std::path::Path,
+    timeout: Duration,
+) -> Result<(AppReport, Option<crate::framework::TaskMetrics>)> {
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(conf, preset_dir)?;
+    let report = handle.wait(timeout)?;
+    let metrics = handle.am_state.chief_metrics();
+    if report.state != AppState::Finished {
+        tinfo!("client", "job ended unsuccessfully: {}", report.diagnostics);
+    }
+    Ok((report, metrics))
+}

@@ -1,0 +1,338 @@
+//! Dr. Elephant-style analysis (paper §3 / future work): aggregate the
+//! per-task metrics the TaskExecutors collected and run tuning heuristics
+//! that "suggest new settings for the ML jobs that would improve
+//! performance and resource utilization".
+//!
+//! Heuristics implemented (each returns severity + a concrete suggestion):
+//! - **Memory over-provisioning**: requested container memory ≫ observed
+//!   working set.
+//! - **Straggler detection**: one worker's step time ≫ the median.
+//! - **PS imbalance**: one PS shard applies far more updates / bytes than
+//!   the others (hot chunk distribution).
+//! - **Too-frequent checkpoints**: checkpoint interval below step time ×
+//!   threshold (training stalls on I/O).
+//! - **Low MXU/arith utilization**: achieved FLOP/s far below the preset's
+//!   roofline estimate (batch too small, sync barrier dominated).
+
+use crate::framework::TaskMetrics;
+use crate::runtime::ArtifactMeta;
+use crate::tonyconf::JobSpec;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    None,
+    Low,
+    Moderate,
+    Severe,
+}
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub heuristic: &'static str,
+    pub severity: Severity,
+    pub task: String,
+    pub detail: String,
+    pub suggestion: String,
+}
+
+/// Everything the analyzer consumes about one finished (or running) job.
+#[derive(Debug, Clone, Default)]
+pub struct JobTelemetry {
+    /// (task id string, metrics) for every task.
+    pub tasks: Vec<(String, TaskMetrics)>,
+    /// Requested memory per task type, MB.
+    pub requested_mem_mb: Vec<(String, u64)>,
+    pub checkpoint_every: u64,
+    /// FLOPs per step (from ArtifactMeta) for utilization accounting.
+    pub flops_per_step: f64,
+}
+
+impl JobTelemetry {
+    pub fn from_job(job: &JobSpec, meta: &ArtifactMeta, tasks: Vec<(String, TaskMetrics)>) -> Self {
+        JobTelemetry {
+            tasks,
+            requested_mem_mb: job
+                .task_types
+                .iter()
+                .map(|t| (t.name.clone(), t.resource.memory_mb))
+                .collect(),
+            checkpoint_every: job.train.checkpoint_every,
+            flops_per_step: meta.flops_per_step(),
+        }
+    }
+}
+
+/// Assumed single-node peak for utilization heuristics (CPU testbed).
+/// Deliberately conservative; see EXPERIMENTS.md §Perf for calibration.
+pub const PEAK_FLOPS: f64 = 5.0e10;
+
+pub fn analyze(t: &JobTelemetry) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    memory_heuristic(t, &mut findings);
+    straggler_heuristic(t, &mut findings);
+    ps_imbalance_heuristic(t, &mut findings);
+    checkpoint_heuristic(t, &mut findings);
+    utilization_heuristic(t, &mut findings);
+    findings
+}
+
+fn task_type_of(id: &str) -> &str {
+    id.split(':').next().unwrap_or(id)
+}
+
+fn memory_heuristic(t: &JobTelemetry, out: &mut Vec<Finding>) {
+    for (task, m) in &t.tasks {
+        let ty = task_type_of(task);
+        let Some((_, req)) = t.requested_mem_mb.iter().find(|(n, _)| n == ty) else {
+            continue;
+        };
+        if *req == 0 || m.mem_used_mb == 0 {
+            continue;
+        }
+        let ratio = *req as f64 / m.mem_used_mb.max(1) as f64;
+        let severity = if ratio >= 16.0 {
+            Severity::Severe
+        } else if ratio >= 8.0 {
+            Severity::Moderate
+        } else if ratio >= 4.0 {
+            Severity::Low
+        } else {
+            Severity::None
+        };
+        if severity > Severity::None {
+            let suggest = (m.mem_used_mb * 2).max(256);
+            out.push(Finding {
+                heuristic: "memory-over-provisioning",
+                severity,
+                task: task.clone(),
+                detail: format!("requested {req} MB, observed working set {} MB", m.mem_used_mb),
+                suggestion: format!("set tony.{ty}.memory to ~{suggest}m (2x observed)"),
+            });
+        }
+    }
+}
+
+fn straggler_heuristic(t: &JobTelemetry, out: &mut Vec<Finding>) {
+    let mut worker_times: Vec<(&str, f64)> = t
+        .tasks
+        .iter()
+        .filter(|(id, m)| task_type_of(id) == "worker" && m.step_ms_avg > 0.0)
+        .map(|(id, m)| (id.as_str(), m.step_ms_avg))
+        .collect();
+    if worker_times.len() < 2 {
+        return;
+    }
+    worker_times.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let median = worker_times[worker_times.len() / 2].1;
+    for (id, ms) in &worker_times {
+        let ratio = ms / median.max(1e-9);
+        let severity = if ratio >= 3.0 {
+            Severity::Severe
+        } else if ratio >= 2.0 {
+            Severity::Moderate
+        } else if ratio >= 1.5 {
+            Severity::Low
+        } else {
+            Severity::None
+        };
+        if severity > Severity::None {
+            out.push(Finding {
+                heuristic: "straggler",
+                severity,
+                task: id.to_string(),
+                detail: format!("step time {ms:.1} ms vs median {median:.1} ms"),
+                suggestion: "check the node's co-tenants or use a node label to avoid it; \
+                             in sync mode a straggler gates every step"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn ps_imbalance_heuristic(t: &JobTelemetry, out: &mut Vec<Finding>) {
+    let ps: Vec<(&str, u64)> = t
+        .tasks
+        .iter()
+        .filter(|(id, _)| task_type_of(id) == "ps")
+        .map(|(id, m)| (id.as_str(), m.updates_applied))
+        .collect();
+    if ps.len() < 2 {
+        return;
+    }
+    let max = ps.iter().map(|(_, u)| *u).max().unwrap_or(0);
+    let min = ps.iter().map(|(_, u)| *u).min().unwrap_or(0);
+    if max == 0 {
+        return;
+    }
+    let ratio = max as f64 / min.max(1) as f64;
+    let severity = if ratio >= 4.0 {
+        Severity::Severe
+    } else if ratio >= 2.0 {
+        Severity::Moderate
+    } else {
+        Severity::None
+    };
+    if severity > Severity::None {
+        out.push(Finding {
+            heuristic: "ps-imbalance",
+            severity,
+            task: "ps:*".to_string(),
+            detail: format!("update counts range {min}..{max} across shards"),
+            suggestion: "chunk count should be >= several x n_ps for round-robin balance; \
+                         lower chunk_len at AOT time or reduce tony.ps.instances"
+                .to_string(),
+        });
+    }
+}
+
+fn checkpoint_heuristic(t: &JobTelemetry, out: &mut Vec<Finding>) {
+    if t.checkpoint_every == 0 {
+        out.push(Finding {
+            heuristic: "checkpointing-disabled",
+            severity: Severity::Moderate,
+            task: "worker:0".to_string(),
+            detail: "checkpointing is off".to_string(),
+            suggestion: "set tony.train.checkpoint-every > 0 or a task failure restarts \
+                         training from step 0"
+                .to_string(),
+        });
+        return;
+    }
+    if t.checkpoint_every <= 2 {
+        out.push(Finding {
+            heuristic: "checkpoint-too-frequent",
+            severity: Severity::Low,
+            task: "worker:0".to_string(),
+            detail: format!("checkpoint every {} steps", t.checkpoint_every),
+            suggestion: "checkpointing each step serializes the full parameter vector; \
+                         raise tony.train.checkpoint-every"
+                .to_string(),
+        });
+    }
+}
+
+fn utilization_heuristic(t: &JobTelemetry, out: &mut Vec<Finding>) {
+    for (task, m) in &t.tasks {
+        if task_type_of(task) != "worker" || m.step_ms_avg <= 0.0 || t.flops_per_step <= 0.0 {
+            continue;
+        }
+        let achieved = t.flops_per_step / (m.step_ms_avg / 1e3);
+        let util = achieved / PEAK_FLOPS;
+        if util < 0.05 {
+            out.push(Finding {
+                heuristic: "low-utilization",
+                severity: Severity::Low,
+                task: task.clone(),
+                detail: format!(
+                    "achieved ~{:.2} GFLOP/s ({:.1}% of assumed peak)",
+                    achieved / 1e9,
+                    util * 100.0
+                ),
+                suggestion: "increase batch size at AOT time, or use async mode if the \
+                             sync barrier dominates"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Render findings as the report table the paper's §3 envisions.
+pub fn render_report(findings: &[Finding]) -> String {
+    if findings.is_empty() {
+        return "Dr. Elephant: no findings — job looks healthy.\n".to_string();
+    }
+    let mut out = String::from(
+        "Dr. Elephant report\nseverity  heuristic                    task        detail\n",
+    );
+    for f in findings {
+        out.push_str(&format!(
+            "{:<9} {:<28} {:<11} {}\n          -> {}\n",
+            format!("{:?}", f.severity),
+            f.heuristic,
+            f.task,
+            f.detail,
+            f.suggestion
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wm(step_ms: f64, mem: u64) -> TaskMetrics {
+        TaskMetrics { step_ms_avg: step_ms, mem_used_mb: mem, step: 100, ..Default::default() }
+    }
+
+    #[test]
+    fn over_provisioned_memory_flagged() {
+        let t = JobTelemetry {
+            tasks: vec![("worker:0".into(), wm(10.0, 64))],
+            requested_mem_mb: vec![("worker".into(), 4096)],
+            checkpoint_every: 10,
+            flops_per_step: 1e9,
+        };
+        let f = analyze(&t);
+        let mem = f.iter().find(|f| f.heuristic == "memory-over-provisioning").unwrap();
+        assert_eq!(mem.severity, Severity::Severe);
+        assert!(mem.suggestion.contains("tony.worker.memory"));
+    }
+
+    #[test]
+    fn straggler_flagged() {
+        let t = JobTelemetry {
+            tasks: vec![
+                ("worker:0".into(), wm(10.0, 0)),
+                ("worker:1".into(), wm(11.0, 0)),
+                ("worker:2".into(), wm(40.0, 0)),
+            ],
+            requested_mem_mb: vec![],
+            checkpoint_every: 10,
+            flops_per_step: 0.0,
+        };
+        let f = analyze(&t);
+        let s = f.iter().find(|f| f.heuristic == "straggler").unwrap();
+        assert_eq!(s.task, "worker:2");
+        assert_eq!(s.severity, Severity::Severe);
+    }
+
+    #[test]
+    fn ps_imbalance_flagged() {
+        let mk = |u: u64| TaskMetrics { updates_applied: u, ..Default::default() };
+        let t = JobTelemetry {
+            tasks: vec![("ps:0".into(), mk(100)), ("ps:1".into(), mk(10))],
+            requested_mem_mb: vec![],
+            checkpoint_every: 10,
+            flops_per_step: 0.0,
+        };
+        let f = analyze(&t);
+        assert!(f.iter().any(|f| f.heuristic == "ps-imbalance"));
+    }
+
+    #[test]
+    fn checkpoint_heuristics() {
+        let base = JobTelemetry { checkpoint_every: 0, ..Default::default() };
+        assert!(analyze(&base).iter().any(|f| f.heuristic == "checkpointing-disabled"));
+        let freq = JobTelemetry { checkpoint_every: 1, ..Default::default() };
+        assert!(analyze(&freq).iter().any(|f| f.heuristic == "checkpoint-too-frequent"));
+        let fine = JobTelemetry { checkpoint_every: 25, ..Default::default() };
+        assert!(!analyze(&fine).iter().any(|f| f.heuristic.starts_with("checkpoint")));
+    }
+
+    #[test]
+    fn healthy_job_clean_report() {
+        let t = JobTelemetry {
+            tasks: vec![
+                ("worker:0".into(), wm(10.0, 512)),
+                ("worker:1".into(), wm(10.5, 512)),
+            ],
+            requested_mem_mb: vec![("worker".into(), 1024)],
+            checkpoint_every: 25,
+            flops_per_step: 5e10, // keeps utilization above threshold
+        };
+        let f = analyze(&t);
+        assert!(f.is_empty(), "{f:?}");
+        assert!(render_report(&f).contains("healthy"));
+    }
+}

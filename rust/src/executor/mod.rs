@@ -1,0 +1,399 @@
+//! The TaskExecutor (paper §2.2): the per-container agent that
+//!
+//! 1. allocates a port for its task and registers it with the AM,
+//! 2. receives the global cluster spec and materializes it (plus
+//!    task-specific config) into the task's environment as TF_CONFIG,
+//! 3. spawns the ML task as a child (here: a task thread),
+//! 4. monitors it and heartbeats status/metrics to the AM,
+//! 5. registers the final exit status with the AM before terminating.
+//!
+//! The executor for worker:0 additionally starts the visualization UI
+//! (TensorBoard stand-in) and registers its URL.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::am::protocol::*;
+use crate::framework::protocol::{new_metrics_cell, ClusterSpec, MetricsCell};
+use crate::framework::{ps, worker};
+use crate::net::rpc::RpcClient;
+use crate::net::wire::Wire;
+use crate::runtime::Engine;
+use crate::tonyconf::{JobSpec, EVALUATOR, PS, WORKER};
+use crate::util::ids::TaskId;
+use crate::util::HostPort;
+use crate::yarn::ContainerCtx;
+use crate::{tdebug, terror, tinfo};
+
+/// Everything the AM hands an executor at launch (the closure-captured
+/// analogue of the packaged conf + localized resources).
+#[derive(Clone)]
+pub struct ExecutorParams {
+    pub am_addr: HostPort,
+    pub job: Arc<JobSpec>,
+    pub preset_dir: PathBuf,
+    pub task: TaskId,
+    pub spec_version: u32,
+}
+
+/// Executor main — the container entrypoint for every task container.
+/// Returns the container exit code.
+pub fn run_task_executor(ctx: ContainerCtx, params: ExecutorParams) -> i32 {
+    match executor_body(&ctx, &params) {
+        Ok(code) => code,
+        Err(e) => {
+            terror!("executor", "{} executor error: {e:#}", params.task);
+            // Best-effort final status so the AM learns quickly.
+            if let Ok(am) = RpcClient::connect(&params.am_addr) {
+                let _ = am.call(
+                    AM_FINISHED,
+                    &FinishedMsg {
+                        task_type: params.task.job_type.clone(),
+                        index: params.task.index,
+                        spec_version: params.spec_version,
+                        exit_code: 1,
+                    }
+                    .to_bytes(),
+                );
+            }
+            1
+        }
+    }
+}
+
+fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
+    let task = &params.task;
+    // The env set by the AM is the source of truth (paper: executors are
+    // configured through the launch context).
+    let env_type = ctx.env("TASK_TYPE").unwrap_or(&task.job_type);
+    let env_index: u32 = ctx
+        .env("TASK_INDEX")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(task.index);
+    anyhow::ensure!(
+        env_type == task.job_type && env_index == task.index,
+        "launch env/task mismatch: {env_type}:{env_index} vs {task}"
+    );
+
+    let am = Arc::new(
+        RpcClient::connect_timeout(&params.am_addr, Duration::from_secs(5))
+            .map_err(|e| anyhow!("connecting to AM at {}: {e}", params.am_addr))?,
+    );
+    let kill = Arc::new(AtomicBool::new(false));
+    let metrics: MetricsCell = new_metrics_cell();
+
+    // ---- start the engine with only the artifacts this task needs ----
+    let is_chief = task.job_type == WORKER && task.index == 0;
+    let artifacts: Vec<&str> = if task.job_type == PS {
+        vec!["ps_adam"]
+    } else if task.job_type == EVALUATOR {
+        vec!["eval_loss"]
+    } else if is_chief {
+        vec!["worker_step", "init_params", "eval_loss"]
+    } else {
+        vec!["worker_step"]
+    };
+    let engine = Engine::start(&params.preset_dir, Some(&artifacts))
+        .with_context(|| format!("starting PJRT engine for {task}"))?;
+    tdebug!("executor", "{task} engine ready ({} artifacts)", artifacts.len());
+
+    // ---- allocate the task port ----
+    // PS: the shard's RPC server binds it for real.  Workers: reserve a
+    // port with a live listener so the spec entry is a real endpoint.
+    let (port, ps_handle, port_guard): (u16, Option<std::thread::JoinHandle<i32>>, Option<TcpListener>);
+    if task.job_type == PS {
+        let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+        let n_ps = params.job.n_ps();
+        let index = task.index;
+        let eng = engine.handle();
+        let k = kill.clone();
+        let m = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("task-ps-{index}"))
+            .spawn(move || ps::ps_main(index, n_ps, eng, k, m, move |p| {
+                let _ = port_tx.send(p);
+            }))
+            .context("spawning ps task")?;
+        let p = port_rx
+            .recv_timeout(Duration::from_secs(10))
+            .context("ps never reported its port")?;
+        (port, ps_handle, port_guard) = (p, Some(handle), None);
+    } else {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let p = listener.local_addr()?.port();
+        (port, ps_handle, port_guard) = (p, None, Some(listener));
+    }
+
+    // ---- worker:0 visualization UI (TensorBoard stand-in) ----
+    let ui_url = if is_chief {
+        match start_task_ui(metrics.clone(), kill.clone()) {
+            Ok(url) => Some(url),
+            Err(e) => {
+                tdebug!("executor", "{task} UI failed to start: {e}");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    // ---- register with the AM ----
+    am.call(
+        AM_REGISTER,
+        &RegisterMsg {
+            task_type: task.job_type.clone(),
+            index: task.index,
+            host: "127.0.0.1".to_string(),
+            port,
+            ui_url: ui_url.clone(),
+            spec_version: params.spec_version,
+        }
+        .to_bytes(),
+    )
+    .map_err(|e| anyhow!("registering {task}: {e}"))?;
+    tdebug!("executor", "{task} registered port {port}");
+
+    // ---- heartbeat thread (covers spec-wait AND task runtime) ----
+    // The AM's liveness check starts at registration, so heartbeats must
+    // flow from this moment on, even while we block waiting for the spec.
+    let hb_done = Arc::new(AtomicBool::new(false));
+    let hb_thread = {
+        // Dedicated connection: the main thread's blocking GET_SPEC call
+        // holds its connection for up to a second at a time, and heartbeats
+        // must never queue behind it.
+        let am = Arc::new(
+            RpcClient::connect_timeout(&params.am_addr, Duration::from_secs(5))
+                .map_err(|e| anyhow!("hb connection to AM: {e}"))?,
+        );
+        let kill = kill.clone();
+        let metrics = metrics.clone();
+        let done = hb_done.clone();
+        let task = task.clone();
+        let spec_version = params.spec_version;
+        let hb_every = Duration::from_millis(params.job.heartbeat_ms.max(5));
+        std::thread::Builder::new()
+            .name(format!("hb-{task}"))
+            .spawn(move || {
+                while !done.load(Ordering::Relaxed) {
+                    let m = metrics.lock().unwrap().clone();
+                    match am.call(
+                        AM_HEARTBEAT,
+                        &HeartbeatMsg {
+                            task_type: task.job_type.clone(),
+                            index: task.index,
+                            spec_version,
+                            metrics: m,
+                        }
+                        .to_bytes(),
+                    ) {
+                        Ok(resp) => match AmCommand::from_u8(resp.first().copied().unwrap_or(0)) {
+                            AmCommand::None => {}
+                            AmCommand::Stop | AmCommand::Abort => {
+                                tdebug!("executor", "{task} commanded to stop");
+                                kill.store(true, Ordering::Relaxed);
+                            }
+                        },
+                        Err(e) => {
+                            terror!("executor", "{task} lost AM: {e}");
+                            kill.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    std::thread::sleep(hb_every);
+                }
+            })
+            .context("spawning heartbeat thread")?
+    };
+
+    // ---- fetch the global cluster spec (blocking with retry) ----
+    let spec_timeout =
+        Duration::from_millis(params.job.conf.get_u64("tony.task.spec-timeout-ms", 120_000));
+    let deadline = std::time::Instant::now() + spec_timeout;
+    let spec = loop {
+        if ctx.killed() || kill.load(Ordering::Relaxed) {
+            hb_done.store(true, Ordering::Relaxed);
+            let _ = hb_thread.join();
+            return finish(&am, params, 143, ps_handle, kill.clone(), Some(&metrics));
+        }
+        match am.call(
+            AM_GET_SPEC,
+            &GetSpecMsg { spec_version: params.spec_version, timeout_ms: 1000 }.to_bytes(),
+        ) {
+            Ok(bytes) => {
+                let text = String::from_utf8_lossy(&bytes);
+                let (spec, _, _) = ClusterSpec::from_tf_config(&text)?;
+                break spec;
+            }
+            Err(_) if std::time::Instant::now() < deadline => continue,
+            Err(e) => return Err(anyhow!("cluster spec never completed: {e}")),
+        }
+    };
+    // Materialize the spec into the task environment, as real TonY does.
+    let tf_config = spec.to_tf_config(&task.job_type, task.index);
+    tdebug!("executor", "{task} got spec v{} ({} tasks)", spec.version, spec.n_tasks());
+
+    // ---- spawn the ML task ----
+    let task_thread: Option<std::thread::JoinHandle<i32>> = if task.job_type == WORKER {
+        let wctx = worker::WorkerContext {
+            index: task.index,
+            n_workers: params.job.n_workers(),
+            ps_endpoints: spec.endpoints(PS).to_vec(),
+            engine: engine.handle(),
+            train: params.job.train.clone(),
+            kill: kill.clone(),
+            metrics: metrics.clone(),
+        };
+        let name = format!("task-worker-{}", task.index);
+        let _ = &tf_config; // env formally constructed above
+        Some(
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || worker::worker_main(wctx))
+                .context("spawning worker task")?,
+        )
+    } else if task.job_type == EVALUATOR {
+        let eng = engine.handle();
+        let train = params.job.train.clone();
+        let k = kill.clone();
+        let m = metrics.clone();
+        let index = task.index;
+        Some(
+            std::thread::Builder::new()
+                .name(format!("task-evaluator-{index}"))
+                .spawn(move || crate::framework::evaluator_main(index, eng, train, k, m))
+                .context("spawning evaluator task")?,
+        )
+    } else {
+        // PS task is already running (its server started before
+        // registration so the port could be registered).
+        debug_assert!(ps_handle.is_some());
+        None
+    };
+    let mut task_thread = task_thread;
+    let mut ps_handle = ps_handle;
+
+    // ---- monitor loop (heartbeats flow from the hb thread) ----
+    let poll_every = Duration::from_millis(params.job.heartbeat_ms.clamp(2, 20));
+    let exit_code: i32 = loop {
+        // Container kill (AM teardown, node death, preemption).
+        if ctx.killed() {
+            kill.store(true, Ordering::Relaxed);
+        }
+        // Task completion?
+        if let Some(t) = &task_thread {
+            if t.is_finished() {
+                break task_thread.take().unwrap().join().unwrap_or(1);
+            }
+        } else if let Some(t) = &ps_handle {
+            if t.is_finished() {
+                break ps_handle.take().unwrap().join().unwrap_or(1);
+            }
+        }
+        std::thread::sleep(poll_every);
+    };
+    hb_done.store(true, Ordering::Relaxed);
+    let _ = hb_thread.join();
+    drop(port_guard);
+
+    // Graceful stop path: a task killed by Stop reports success for
+    // service tasks (ps exits 0 by design) and 143 for workers.
+    finish(&am, params, exit_code, None, kill, Some(&metrics))
+}
+
+fn finish(
+    am: &RpcClient,
+    params: &ExecutorParams,
+    code: i32,
+    ps_handle: Option<std::thread::JoinHandle<i32>>,
+    kill: Arc<AtomicBool>,
+    metrics: Option<&MetricsCell>,
+) -> Result<i32> {
+    kill.store(true, Ordering::Relaxed);
+    if let Some(h) = ps_handle {
+        let _ = h.join();
+    }
+    // Flush one final metrics heartbeat so the AM's last snapshot of this
+    // task (step count, loss, tokens) is exact, not heartbeat-quantized.
+    if let Some(m) = metrics {
+        let m = m.lock().unwrap().clone();
+        let _ = am.call(
+            AM_HEARTBEAT,
+            &HeartbeatMsg {
+                task_type: params.task.job_type.clone(),
+                index: params.task.index,
+                spec_version: params.spec_version,
+                metrics: m,
+            }
+            .to_bytes(),
+        );
+    }
+    let _ = am.call(
+        AM_FINISHED,
+        &FinishedMsg {
+            task_type: params.task.job_type.clone(),
+            index: params.task.index,
+            spec_version: params.spec_version,
+            exit_code: code as i64,
+        }
+        .to_bytes(),
+    );
+    tinfo!("executor", "{} finished with code {code}", params.task);
+    Ok(code)
+}
+
+/// Minimal HTTP/1.0 UI serving the chief's live metrics as JSON — the
+/// TensorBoard stand-in whose URL flows AM -> RM -> client (§2.2).
+fn start_task_ui(metrics: MetricsCell, kill: Arc<AtomicBool>) -> Result<String> {
+    use std::io::{Read, Write};
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    std::thread::Builder::new()
+        .name("task-ui".into())
+        .spawn(move || {
+            while !kill.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        let mut buf = [0u8; 1024];
+                        let _ = stream.read(&mut buf);
+                        let m = metrics.lock().unwrap().clone();
+                        let mut j = crate::json::Json::obj();
+                        j.set("step", m.step);
+                        j.set("loss", m.loss as f64);
+                        j.set("eval_loss", m.eval_loss as f64);
+                        j.set("tokens", m.tokens_done);
+                        j.set("step_ms_avg", m.step_ms_avg);
+                        j.set(
+                            "loss_history",
+                            crate::json::Json::Arr(
+                                m.loss_history
+                                    .iter()
+                                    .map(|(s, l)| {
+                                        let mut e = crate::json::Json::obj();
+                                        e.set("step", *s).set("loss", *l as f64);
+                                        e
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        let body = j.render_pretty();
+                        let _ = write!(
+                            stream,
+                            "HTTP/1.0 200 OK\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+                            body.len(),
+                            body
+                        );
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+    Ok(format!("http://{addr}"))
+}

@@ -1,0 +1,81 @@
+//! Evaluator task: an *untracked* service task (like TonY's evaluator /
+//! TensorBoard job types) that periodically loads the chief's latest
+//! checkpoint and scores it on held-out batches via the `eval_loss`
+//! artifact.  It never gates job completion; the AM stops it once all
+//! tracked tasks succeed.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::checkpoint::CheckpointStore;
+use crate::data::SyntheticCorpus;
+use crate::runtime::{EngineHandle, Tensor};
+use crate::tonyconf::TrainSpec;
+use crate::{tdebug, tinfo};
+
+use super::protocol::MetricsCell;
+
+/// Evaluator main loop.  Returns the container exit code.
+pub fn evaluator_main(
+    index: u32,
+    engine: EngineHandle,
+    train: TrainSpec,
+    kill: Arc<AtomicBool>,
+    metrics: MetricsCell,
+) -> i32 {
+    let meta = engine.meta().clone();
+    let store = CheckpointStore::new(&train.checkpoint_dir);
+    // Held-out stream: worker indices never reach 20_000+.
+    let corpus = SyntheticCorpus::new(meta.dims.vocab, train.seed);
+    let mut last_step = u64::MAX;
+    tdebug!("evaluator", "evaluator:{index} watching {}", train.checkpoint_dir);
+
+    while !kill.load(Ordering::Relaxed) {
+        match store.latest() {
+            Ok(Some(ckpt)) if ckpt.step != last_step => {
+                let tokens = corpus.batch(
+                    20_000 + index,
+                    ckpt.step,
+                    meta.dims.batch,
+                    meta.dims.seq_len,
+                );
+                let batch = Tensor::i32(&[meta.dims.batch, meta.dims.seq_len + 1], tokens);
+                match engine.execute(
+                    "eval_loss",
+                    vec![Tensor::f32(&[meta.n_params], ckpt.params), batch],
+                ) {
+                    Ok(out) => {
+                        let loss = out[0].scalar().unwrap_or(f32::NAN);
+                        if !loss.is_finite() {
+                            crate::terror!(
+                                "evaluator",
+                                "evaluator:{index} non-finite eval loss at step {}",
+                                ckpt.step
+                            );
+                            return 1;
+                        }
+                        tinfo!(
+                            "evaluator",
+                            "evaluator:{index} step {}: held-out loss {loss:.4}",
+                            ckpt.step
+                        );
+                        let mut m = metrics.lock().unwrap();
+                        m.step = ckpt.step;
+                        m.eval_loss = loss;
+                        m.loss_history.push((ckpt.step, loss));
+                        last_step = ckpt.step;
+                    }
+                    Err(e) => {
+                        crate::terror!("evaluator", "evaluator:{index} eval failed: {e:#}");
+                        return 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    tdebug!("evaluator", "evaluator:{index} stopped cleanly");
+    0
+}

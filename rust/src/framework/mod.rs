@@ -1,0 +1,35 @@
+//! The distributed training framework TonY orchestrates — the role
+//! TensorFlow's PS/worker runtime plays in the paper (§2.2: "Once all the
+//! ML jobs start up, they will communicate and coordinate with one another
+//! via the ML framework's distributed protocol").
+//!
+//! Architecture: synchronous (or async) data-parallel training with
+//! parameter servers.
+//!
+//! - The flat f32[N] parameter vector (layout fixed by
+//!   python/compile/model.py::param_specs) is split into fixed-size chunks
+//!   (`meta.chunk_len`, zero-padded tail); chunk `c` lives on PS shard
+//!   `c % n_ps`.
+//! - Workers pull all chunks at version `t`, run the AOT `worker_step`
+//!   executable (loss + grads) via PJRT, and push per-chunk gradient
+//!   slices tagged `t`.
+//! - In sync mode each PS shard averages the `W` worker gradients for a
+//!   chunk, applies the AOT fused-Adam `ps_adam` executable, and bumps the
+//!   chunk to version `t+1`; pulls for `t+1` block until then.  In async
+//!   mode pushes apply immediately (hogwild-style).
+//! - worker:0 is the chief: it initializes (or restores) parameters,
+//!   checkpoints every `k` steps (with exact Adam moments), and runs
+//!   periodic evals.
+//!
+//! Everything crosses real TCP via `crate::net::rpc`, so the cluster spec
+//! the AM distributes is load-bearing exactly as in the paper.
+
+pub mod evaluator;
+pub mod protocol;
+pub mod ps;
+pub mod worker;
+
+pub use protocol::{ClusterSpec, TaskMetrics};
+pub use evaluator::evaluator_main;
+pub use ps::{ps_main, PsServer};
+pub use worker::{worker_main, WorkerContext};

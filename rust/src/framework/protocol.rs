@@ -1,0 +1,391 @@
+//! Wire messages for the PS <-> worker protocol + the TF_CONFIG-style
+//! cluster spec, and the metrics block tasks report to their executor.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::json::Json;
+use crate::net::wire::{Reader, Wire, WireError, Writer};
+use crate::util::HostPort;
+
+// ---- PS RPC method ids ----
+pub const PS_INIT: u16 = 1;
+pub const PS_PULL: u16 = 2;
+pub const PS_PUSH: u16 = 3;
+pub const PS_STATE: u16 = 4;
+pub const PS_MOMENTS: u16 = 5;
+
+/// Training modes.
+pub const MODE_SYNC: u8 = 0;
+pub const MODE_ASYNC: u8 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitChunk {
+    pub chunk: u32,
+    /// Version to seed (the restore step; 0 for fresh init).
+    pub version: u64,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Wire for InitChunk {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.chunk);
+        w.u64(self.version);
+        w.f32_slice(&self.params);
+        w.f32_slice(&self.m);
+        w.f32_slice(&self.v);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(InitChunk {
+            chunk: r.u32()?,
+            version: r.u64()?,
+            params: r.f32_vec()?,
+            m: r.f32_vec()?,
+            v: r.f32_vec()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PullRequest {
+    pub chunk: u32,
+    /// Block until the chunk reaches at least this version.
+    pub min_version: u64,
+    pub timeout_ms: u64,
+}
+
+impl Wire for PullRequest {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.chunk);
+        w.u64(self.min_version);
+        w.u64(self.timeout_ms);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(PullRequest { chunk: r.u32()?, min_version: r.u64()?, timeout_ms: r.u64()? })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PullResponse {
+    pub version: u64,
+    pub params: Vec<f32>,
+}
+
+impl Wire for PullResponse {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(self.version);
+        w.f32_slice(&self.params);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(PullResponse { version: r.u64()?, params: r.f32_vec()? })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PushRequest {
+    pub chunk: u32,
+    /// The parameter version the gradient was computed against.
+    pub step: u64,
+    pub grads: Vec<f32>,
+    pub n_workers: u32,
+    pub lr: f32,
+    pub mode: u8,
+}
+
+impl Wire for PushRequest {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.chunk);
+        w.u64(self.step);
+        w.f32_slice(&self.grads);
+        w.u32(self.n_workers);
+        w.f32(self.lr);
+        w.u8(self.mode);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(PushRequest {
+            chunk: r.u32()?,
+            step: r.u64()?,
+            grads: r.f32_vec()?,
+            n_workers: r.u32()?,
+            lr: r.f32()?,
+            mode: r.u8()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MomentsResponse {
+    pub version: u64,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Wire for MomentsResponse {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(self.version);
+        w.f32_slice(&self.m);
+        w.f32_slice(&self.v);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(MomentsResponse { version: r.u64()?, m: r.f32_vec()?, v: r.f32_vec()? })
+    }
+}
+
+/// PS shard statistics (PS_STATE) — consumed by monitoring/Dr. Elephant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PsStats {
+    pub owned_chunks: u32,
+    pub min_version: u64,
+    pub applied_updates: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl Wire for PsStats {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.owned_chunks);
+        w.u64(self.min_version);
+        w.u64(self.applied_updates);
+        w.u64(self.bytes_in);
+        w.u64(self.bytes_out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(PsStats {
+            owned_chunks: r.u32()?,
+            min_version: r.u64()?,
+            applied_updates: r.u64()?,
+            bytes_in: r.u64()?,
+            bytes_out: r.u64()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cluster spec (the TF_CONFIG analogue)
+// ---------------------------------------------------------------------
+
+/// The global cluster spec the AM assembles from TaskExecutor
+/// registrations and broadcasts back (paper §2.2).  JSON shape mirrors
+/// TF_CONFIG: `{"cluster": {"worker": ["h:p", ...], "ps": [...]},
+/// "task": {"type": "worker", "index": 0}, "version": 2}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// job type -> endpoints ordered by task index.
+    pub tasks: BTreeMap<String, Vec<HostPort>>,
+    /// Bumped on every AM rebuild (task relaunch) so stale tasks notice.
+    pub version: u64,
+}
+
+impl ClusterSpec {
+    pub fn new(version: u64) -> ClusterSpec {
+        ClusterSpec { tasks: BTreeMap::new(), version }
+    }
+
+    pub fn endpoints(&self, job_type: &str) -> &[HostPort] {
+        self.tasks.get(job_type).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.values().map(|v| v.len()).sum()
+    }
+
+    /// Render as TF_CONFIG-style JSON for one task's env.
+    pub fn to_tf_config(&self, task_type: &str, index: u32) -> String {
+        let mut cluster = Json::obj();
+        for (ty, eps) in &self.tasks {
+            cluster.set(
+                ty,
+                Json::Arr(eps.iter().map(|e| Json::Str(e.to_string())).collect()),
+            );
+        }
+        let mut task = Json::obj();
+        task.set("type", task_type).set("index", index as u64);
+        let mut root = Json::obj();
+        root.set("cluster", cluster).set("task", task).set("version", self.version);
+        root.render()
+    }
+
+    pub fn from_tf_config(s: &str) -> Result<(ClusterSpec, String, u32)> {
+        let j = Json::parse(s).map_err(|e| anyhow!("bad TF_CONFIG: {e}"))?;
+        let mut spec = ClusterSpec::new(j.get("version").and_then(|v| v.as_u64()).unwrap_or(0));
+        let cluster = j
+            .get("cluster")
+            .and_then(|c| c.as_obj())
+            .ok_or_else(|| anyhow!("TF_CONFIG missing cluster"))?;
+        for (ty, eps) in cluster {
+            let list = eps
+                .as_arr()
+                .ok_or_else(|| anyhow!("cluster.{ty} must be array"))?
+                .iter()
+                .map(|e| {
+                    e.as_str()
+                        .and_then(HostPort::parse)
+                        .ok_or_else(|| anyhow!("bad endpoint in cluster.{ty}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            spec.tasks.insert(ty.clone(), list);
+        }
+        let ty = j
+            .at(&["task", "type"])
+            .and_then(|t| t.as_str())
+            .ok_or_else(|| anyhow!("TF_CONFIG missing task.type"))?
+            .to_string();
+        let index = j
+            .at(&["task", "index"])
+            .and_then(|i| i.as_u64())
+            .ok_or_else(|| anyhow!("TF_CONFIG missing task.index"))? as u32;
+        Ok((spec, ty, index))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Task metrics (task -> executor -> AM heartbeats -> portal/Dr. Elephant)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaskMetrics {
+    pub step: u64,
+    pub loss: f32,
+    pub eval_loss: f32,
+    pub tokens_done: u64,
+    pub step_ms_avg: f64,
+    /// Estimated working-set (params + moments + buffers), MB.
+    pub mem_used_mb: u64,
+    pub updates_applied: u64,
+    pub finished: bool,
+    pub loss_history: Vec<(u64, f32)>,
+}
+
+impl Wire for TaskMetrics {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(self.step);
+        w.f32(self.loss);
+        w.f32(self.eval_loss);
+        w.u64(self.tokens_done);
+        w.f64(self.step_ms_avg);
+        w.u64(self.mem_used_mb);
+        w.u64(self.updates_applied);
+        w.bool(self.finished);
+        w.u32(self.loss_history.len() as u32);
+        for (s, l) in &self.loss_history {
+            w.u64(*s);
+            w.f32(*l);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let mut m = TaskMetrics {
+            step: r.u64()?,
+            loss: r.f32()?,
+            eval_loss: r.f32()?,
+            tokens_done: r.u64()?,
+            step_ms_avg: r.f64()?,
+            mem_used_mb: r.u64()?,
+            updates_applied: r.u64()?,
+            finished: r.bool()?,
+            loss_history: Vec::new(),
+        };
+        let n = r.u32()? as usize;
+        for _ in 0..n.min(1 << 20) {
+            m.loss_history.push((r.u64()?, r.f32()?));
+        }
+        Ok(m)
+    }
+}
+
+/// Shared metrics cell between a task thread and its TaskExecutor.
+pub type MetricsCell = Arc<Mutex<TaskMetrics>>;
+
+pub fn new_metrics_cell() -> MetricsCell {
+    Arc::new(Mutex::new(TaskMetrics::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_round_trip() {
+        let init = InitChunk {
+            chunk: 3,
+            version: 10,
+            params: vec![1.0, 2.0],
+            m: vec![0.0; 2],
+            v: vec![0.5; 2],
+        };
+        assert_eq!(InitChunk::from_bytes(&init.to_bytes()).unwrap(), init);
+
+        let push = PushRequest {
+            chunk: 1,
+            step: 9,
+            grads: vec![0.25; 8],
+            n_workers: 4,
+            lr: 1e-3,
+            mode: MODE_SYNC,
+        };
+        assert_eq!(PushRequest::from_bytes(&push.to_bytes()).unwrap(), push);
+
+        let pull = PullRequest { chunk: 0, min_version: 7, timeout_ms: 100 };
+        assert_eq!(PullRequest::from_bytes(&pull.to_bytes()).unwrap(), pull);
+
+        let stats = PsStats {
+            owned_chunks: 2,
+            min_version: 5,
+            applied_updates: 10,
+            bytes_in: 100,
+            bytes_out: 200,
+        };
+        assert_eq!(PsStats::from_bytes(&stats.to_bytes()).unwrap(), stats);
+    }
+
+    #[test]
+    fn tf_config_round_trip() {
+        let mut spec = ClusterSpec::new(2);
+        spec.tasks.insert(
+            "worker".into(),
+            vec![HostPort::localhost(5000), HostPort::localhost(5001)],
+        );
+        spec.tasks.insert("ps".into(), vec![HostPort::localhost(6000)]);
+        let s = spec.to_tf_config("worker", 1);
+        let (parsed, ty, idx) = ClusterSpec::from_tf_config(&s).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(ty, "worker");
+        assert_eq!(idx, 1);
+        assert_eq!(parsed.endpoints("ps").len(), 1);
+        assert_eq!(parsed.n_tasks(), 3);
+    }
+
+    #[test]
+    fn tf_config_errors() {
+        assert!(ClusterSpec::from_tf_config("{}").is_err());
+        assert!(ClusterSpec::from_tf_config("not json").is_err());
+        let missing_task = r#"{"cluster": {"worker": ["127.0.0.1:1"]}}"#;
+        assert!(ClusterSpec::from_tf_config(missing_task).is_err());
+    }
+
+    #[test]
+    fn metrics_round_trip() {
+        let m = TaskMetrics {
+            step: 100,
+            loss: 2.5,
+            eval_loss: 2.4,
+            tokens_done: 25_600,
+            step_ms_avg: 12.5,
+            mem_used_mb: 64,
+            updates_applied: 0,
+            finished: true,
+            loss_history: vec![(1, 5.5), (50, 3.0), (100, 2.5)],
+        };
+        assert_eq!(TaskMetrics::from_bytes(&m.to_bytes()).unwrap(), m);
+    }
+}

@@ -1,0 +1,349 @@
+//! Worker task: pull params → run the AOT `worker_step` (loss + grads) →
+//! push gradient slices to the owning PS shards.  worker:0 is the chief:
+//! it also initializes/restores parameters, checkpoints with exact Adam
+//! moments, and runs periodic evals through the `eval_loss` artifact.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint::{Checkpoint, CheckpointStore};
+use crate::data::SyntheticCorpus;
+use crate::net::rpc::RpcClient;
+use crate::net::wire::Wire;
+use crate::runtime::{EngineHandle, Tensor};
+use crate::tonyconf::TrainSpec;
+use crate::util::HostPort;
+use crate::{tdebug, tinfo};
+
+use super::protocol::*;
+
+/// How long pulls wait for the barrier before declaring the job wedged.
+const PULL_TIMEOUT_MS: u64 = 30_000;
+
+/// Everything a worker needs to run (assembled by the TaskExecutor from
+/// the cluster spec + job conf).
+pub struct WorkerContext {
+    pub index: u32,
+    pub n_workers: u32,
+    pub ps_endpoints: Vec<HostPort>,
+    pub engine: EngineHandle,
+    pub train: TrainSpec,
+    pub kill: Arc<AtomicBool>,
+    pub metrics: MetricsCell,
+}
+
+/// Client view of the sharded parameter store.
+pub struct PsClient {
+    clients: Vec<RpcClient>,
+    n_params: usize,
+    chunk_len: usize,
+}
+
+impl PsClient {
+    pub fn connect(endpoints: &[HostPort], n_params: usize, chunk_len: usize) -> Result<PsClient> {
+        let mut clients = Vec::with_capacity(endpoints.len());
+        for ep in endpoints {
+            clients.push(
+                RpcClient::connect_timeout(ep, Duration::from_secs(5))
+                    .map_err(|e| anyhow!("connecting to ps {ep}: {e}"))?,
+            );
+        }
+        if clients.is_empty() {
+            bail!("no parameter servers in cluster spec");
+        }
+        Ok(PsClient { clients, n_params, chunk_len })
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n_params.div_ceil(self.chunk_len)
+    }
+
+    fn owner(&self, chunk: usize) -> &RpcClient {
+        &self.clients[chunk % self.clients.len()]
+    }
+
+    /// Push initial chunk states (chief only).
+    pub fn init(&self, params: &[f32], moments: Option<&(Vec<f32>, Vec<f32>)>, version: u64) -> Result<()> {
+        for c in 0..self.n_chunks() {
+            let lo = c * self.chunk_len;
+            let hi = ((c + 1) * self.chunk_len).min(self.n_params);
+            let mut chunk = vec![0f32; self.chunk_len];
+            chunk[..hi - lo].copy_from_slice(&params[lo..hi]);
+            let (mut m, mut v) = (vec![0f32; self.chunk_len], vec![0f32; self.chunk_len]);
+            if let Some((mm, vv)) = moments {
+                m[..hi - lo].copy_from_slice(&mm[lo..hi]);
+                v[..hi - lo].copy_from_slice(&vv[lo..hi]);
+            }
+            let msg = InitChunk { chunk: c as u32, version, params: chunk, m, v };
+            self.owner(c)
+                .call(PS_INIT, &msg.to_bytes())
+                .map_err(|e| anyhow!("init chunk {c}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Pull the full flat parameter vector at `min_version`.  Returns the
+    /// (common) version and the assembled vector.
+    pub fn pull(&self, min_version: u64) -> Result<(u64, Vec<f32>)> {
+        let mut flat = vec![0f32; self.n_params];
+        let mut version = u64::MAX;
+        for c in 0..self.n_chunks() {
+            let req = PullRequest {
+                chunk: c as u32,
+                min_version,
+                timeout_ms: PULL_TIMEOUT_MS,
+            };
+            let resp = self
+                .owner(c)
+                .call(PS_PULL, &req.to_bytes())
+                .map_err(|e| anyhow!("pull chunk {c}: {e}"))?;
+            let resp = PullResponse::from_bytes(&resp).context("decoding pull")?;
+            let lo = c * self.chunk_len;
+            let hi = ((c + 1) * self.chunk_len).min(self.n_params);
+            flat[lo..hi].copy_from_slice(&resp.params[..hi - lo]);
+            version = version.min(resp.version);
+        }
+        Ok((version, flat))
+    }
+
+    /// Push one step's gradient, sliced per chunk.  The request encoding
+    /// is built once into a reused buffer per chunk (§Perf L3 pass 2: no
+    /// per-chunk Vec churn on the hot path).
+    pub fn push(
+        &self,
+        grads: &[f32],
+        step: u64,
+        n_workers: u32,
+        lr: f32,
+        mode: u8,
+    ) -> Result<()> {
+        let mut chunk = vec![0f32; self.chunk_len];
+        let mut buf = crate::net::wire::Writer::with_capacity(self.chunk_len * 4 + 32);
+        for c in 0..self.n_chunks() {
+            let lo = c * self.chunk_len;
+            let hi = ((c + 1) * self.chunk_len).min(self.n_params);
+            chunk[..hi - lo].copy_from_slice(&grads[lo..hi]);
+            chunk[hi - lo..].fill(0.0);
+            buf.buf.clear();
+            buf.u32(c as u32);
+            buf.u64(step);
+            buf.f32_slice(&chunk);
+            buf.u32(n_workers);
+            buf.f32(lr);
+            buf.u8(mode);
+            self.owner(c)
+                .call(PS_PUSH, &buf.buf)
+                .map_err(|e| anyhow!("push chunk {c}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Fetch Adam moments for an exact checkpoint (chief only).
+    pub fn moments(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut m = vec![0f32; self.n_params];
+        let mut v = vec![0f32; self.n_params];
+        for c in 0..self.n_chunks() {
+            let resp = self
+                .owner(c)
+                .call(PS_MOMENTS, &(c as u32).to_bytes())
+                .map_err(|e| anyhow!("moments chunk {c}: {e}"))?;
+            let resp = MomentsResponse::from_bytes(&resp).context("decoding moments")?;
+            let lo = c * self.chunk_len;
+            let hi = ((c + 1) * self.chunk_len).min(self.n_params);
+            m[lo..hi].copy_from_slice(&resp.m[..hi - lo]);
+            v[lo..hi].copy_from_slice(&resp.v[..hi - lo]);
+        }
+        Ok((m, v))
+    }
+
+    pub fn stats(&self) -> Result<Vec<PsStats>> {
+        self.clients
+            .iter()
+            .map(|c| {
+                let b = c.call(PS_STATE, &[]).map_err(|e| anyhow!("stats: {e}"))?;
+                PsStats::from_bytes(&b).map_err(|e| anyhow!("{e}"))
+            })
+            .collect()
+    }
+}
+
+fn clip_grads(grads: &mut [f32], max_norm: f64) {
+    if max_norm <= 0.0 {
+        return;
+    }
+    let norm: f64 = grads.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>().sqrt();
+    if norm > max_norm {
+        let scale = (max_norm / norm) as f32;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+}
+
+/// Worker task body.  Returns Ok(final_step) or an error (task failure —
+/// the TaskExecutor reports it and the AM's fault-tolerance kicks in).
+pub fn run_worker(ctx: &WorkerContext) -> Result<u64> {
+    let meta = ctx.engine.meta().clone();
+    let mode = if ctx.train.mode == "async" { MODE_ASYNC } else { MODE_SYNC };
+    let ps = PsClient::connect(&ctx.ps_endpoints, meta.n_params, meta.chunk_len)?;
+    let corpus = SyntheticCorpus::new(meta.dims.vocab, ctx.train.seed);
+    let store = CheckpointStore::new(&ctx.train.checkpoint_dir);
+    let is_chief = ctx.index == 0;
+
+    // ---- init / restore (chief) ----
+    if is_chief {
+        let restored = store.latest()?;
+        let (params, moments, start) = match restored {
+            Some(ckpt) => {
+                tinfo!("worker", "chief restoring checkpoint at step {}", ckpt.step);
+                (ckpt.params, ckpt.moments, ckpt.step)
+            }
+            None => {
+                let out = ctx
+                    .engine
+                    .execute("init_params", vec![Tensor::scalar_u32(ctx.train.seed as u32)])
+                    .context("init_params")?;
+                (out[0].as_f32().unwrap().to_vec(), None, 0)
+            }
+        };
+        ps.init(&params, moments.as_ref(), start)?;
+        tinfo!("worker", "chief initialized {} chunks at version {start}", ps.n_chunks());
+    }
+
+    // ---- resolve starting step (everyone) ----
+    let (start_version, mut params) = ps.pull(0)?;
+    let mut step = start_version;
+    let target = ctx.train.steps;
+    let mut step_ms_hist: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    tdebug!("worker", "worker:{} starting at step {step}/{target}", ctx.index);
+
+    while step < target {
+        if ctx.kill.load(Ordering::Relaxed) {
+            bail!("worker:{} killed at step {step}", ctx.index);
+        }
+        let iter_start = Instant::now();
+        let tokens = corpus.batch(ctx.index, step, meta.dims.batch, meta.dims.seq_len);
+        let batch = Tensor::i32(&[meta.dims.batch, meta.dims.seq_len + 1], tokens);
+        // `params` is re-pulled after the push, so the engine can consume
+        // this copy by move (§Perf L3 pass 2: -1 full-vector clone/step).
+        let params_t = Tensor::f32(&[meta.n_params], std::mem::take(&mut params));
+        let mut out = ctx
+            .engine
+            .execute("worker_step", vec![params_t, batch])
+            .with_context(|| format!("worker_step at step {step}"))?;
+        let loss = out[0].scalar().ok_or_else(|| anyhow!("loss not scalar"))?;
+        if !loss.is_finite() {
+            bail!("non-finite loss {loss} at step {step}");
+        }
+        let mut grads = out.pop().unwrap().into_f32().ok_or_else(|| anyhow!("bad grads"))?;
+        clip_grads(&mut grads, ctx.train.grad_clip);
+        ps.push(&grads, step, ctx.n_workers, ctx.train.lr as f32, mode)?;
+
+        // In sync mode the pull for step+1 doubles as the barrier.
+        let next = if mode == MODE_SYNC { step + 1 } else { 0 };
+        let (_v, new_params) = ps.pull(next)?;
+        params = new_params;
+        step += 1;
+
+        let ms = iter_start.elapsed().as_secs_f64() * 1e3;
+        step_ms_hist.push(ms);
+        if step_ms_hist.len() > 50 {
+            step_ms_hist.remove(0);
+        }
+        {
+            let mut m = ctx.metrics.lock().unwrap();
+            m.step = step;
+            m.loss = loss;
+            m.tokens_done += meta.tokens_per_step() as u64;
+            m.step_ms_avg = step_ms_hist.iter().sum::<f64>() / step_ms_hist.len() as f64;
+            m.mem_used_mb = ((meta.n_params * 8 + meta.tokens_per_step() * 4) >> 20) as u64;
+            if step % 5 == 0 || step == target {
+                m.loss_history.push((step, loss));
+            }
+        }
+
+        if is_chief {
+            if ctx.train.checkpoint_every > 0 && step % ctx.train.checkpoint_every == 0 {
+                let (m, v) = ps.moments()?;
+                store.save(&Checkpoint { step, params: params.clone(), moments: Some((m, v)) })?;
+                tdebug!("worker", "chief checkpointed at step {step}");
+            }
+            if ctx.train.eval_every > 0 && step % ctx.train.eval_every == 0 {
+                let tokens =
+                    corpus.batch(10_000 + ctx.index, step, meta.dims.batch, meta.dims.seq_len);
+                let batch = Tensor::i32(&[meta.dims.batch, meta.dims.seq_len + 1], tokens);
+                let out = ctx
+                    .engine
+                    .execute(
+                        "eval_loss",
+                        vec![Tensor::f32(&[meta.n_params], params.clone()), batch],
+                    )
+                    .context("eval_loss")?;
+                let ev = out[0].scalar().unwrap_or(f32::NAN);
+                ctx.metrics.lock().unwrap().eval_loss = ev;
+                tinfo!("worker", "eval at step {step}: loss={ev:.4}");
+            }
+        }
+    }
+
+    // Final checkpoint so the next attempt (or a resumed job) starts here.
+    if is_chief && ctx.train.checkpoint_every > 0 {
+        let (m, v) = ps.moments()?;
+        store.save(&Checkpoint { step, params, moments: Some((m, v)) })?;
+    }
+    {
+        let mut m = ctx.metrics.lock().unwrap();
+        m.finished = true;
+        m.step = step;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    tinfo!(
+        "worker",
+        "worker:{} done: {} steps in {dt:.1}s ({:.1} steps/s)",
+        ctx.index,
+        step - start_version,
+        (step - start_version) as f64 / dt.max(1e-9)
+    );
+    Ok(step)
+}
+
+/// Worker task main: adapts `run_worker` to the container exit-code
+/// convention.
+pub fn worker_main(ctx: WorkerContext) -> i32 {
+    match run_worker(&ctx) {
+        Ok(_) => 0,
+        Err(e) => {
+            crate::terror!("worker", "worker:{} failed: {e:#}", ctx.index);
+            if ctx.kill.load(Ordering::Relaxed) {
+                // Killed by the framework: report "killed", not "failed".
+                143
+            } else {
+                1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_grads_caps_norm() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        clip_grads(&mut g, 1.0);
+        let norm: f32 = g.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // No-op cases.
+        let mut g2 = vec![0.1f32, 0.1];
+        clip_grads(&mut g2, 10.0);
+        assert_eq!(g2, vec![0.1, 0.1]);
+        let mut g3 = vec![3.0f32];
+        clip_grads(&mut g3, 0.0);
+        assert_eq!(g3, vec![3.0]);
+    }
+}

@@ -1,0 +1,287 @@
+//! Job-history store: persistent records of finished applications, the
+//! TonY-history-server / Dr. Elephant-ingest role.  Each finished job is
+//! written as one JSON document; the store can list, load, and aggregate
+//! them (e.g. feeding `drelephant::analyze` after the fact), and the CLI
+//! renders them.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::framework::TaskMetrics;
+use crate::json::Json;
+use crate::util::ids::ApplicationId;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub app_id: String,
+    pub name: String,
+    pub queue: String,
+    pub succeeded: bool,
+    pub attempts: u32,
+    pub wall_ms: u64,
+    pub diagnostics: String,
+    /// (task id, metrics) snapshots at completion.
+    pub tasks: Vec<(String, TaskMetrics)>,
+}
+
+impl JobRecord {
+    pub fn to_json(&self) -> Json {
+        let mut tasks = Vec::new();
+        for (id, m) in &self.tasks {
+            let mut t = Json::obj();
+            t.set("task", id.as_str());
+            t.set("step", m.step);
+            t.set("loss", m.loss as f64);
+            t.set("eval_loss", m.eval_loss as f64);
+            t.set("tokens", m.tokens_done);
+            t.set("step_ms_avg", m.step_ms_avg);
+            t.set("mem_used_mb", m.mem_used_mb);
+            t.set("updates_applied", m.updates_applied);
+            t.set("finished", m.finished);
+            tasks.push(t);
+        }
+        let mut j = Json::obj();
+        j.set("app_id", self.app_id.as_str());
+        j.set("name", self.name.as_str());
+        j.set("queue", self.queue.as_str());
+        j.set("succeeded", self.succeeded);
+        j.set("attempts", self.attempts as u64);
+        j.set("wall_ms", self.wall_ms);
+        j.set("diagnostics", self.diagnostics.as_str());
+        j.set("tasks", Json::Arr(tasks));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobRecord> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("history record missing '{k}'"))
+        };
+        let mut tasks = Vec::new();
+        for t in j.get("tasks").and_then(|t| t.as_arr()).unwrap_or(&[]) {
+            let id = t
+                .get("task")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("task record missing id"))?
+                .to_string();
+            tasks.push((
+                id,
+                TaskMetrics {
+                    step: t.get("step").and_then(|v| v.as_u64()).unwrap_or(0),
+                    loss: t.get("loss").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+                    eval_loss: t.get("eval_loss").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+                    tokens_done: t.get("tokens").and_then(|v| v.as_u64()).unwrap_or(0),
+                    step_ms_avg: t.get("step_ms_avg").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    mem_used_mb: t.get("mem_used_mb").and_then(|v| v.as_u64()).unwrap_or(0),
+                    updates_applied: t
+                        .get("updates_applied")
+                        .and_then(|v| v.as_u64())
+                        .unwrap_or(0),
+                    finished: t.get("finished").and_then(|v| v.as_bool()).unwrap_or(false),
+                    loss_history: Vec::new(),
+                },
+            ));
+        }
+        Ok(JobRecord {
+            app_id: s("app_id")?,
+            name: s("name")?,
+            queue: s("queue")?,
+            succeeded: j.get("succeeded").and_then(|v| v.as_bool()).unwrap_or(false),
+            attempts: j.get("attempts").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+            wall_ms: j.get("wall_ms").and_then(|v| v.as_u64()).unwrap_or(0),
+            diagnostics: s("diagnostics").unwrap_or_default(),
+            tasks,
+        })
+    }
+}
+
+/// Directory-backed history store.
+#[derive(Debug, Clone)]
+pub struct HistoryStore {
+    dir: PathBuf,
+}
+
+impl HistoryStore {
+    pub fn new(dir: impl Into<PathBuf>) -> HistoryStore {
+        HistoryStore { dir: dir.into() }
+    }
+
+    pub fn default_location() -> HistoryStore {
+        HistoryStore::new(std::env::temp_dir().join("tony-history"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn record(&self, rec: &JobRecord) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.dir.join(format!("{}.json", rec.app_id));
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, rec.to_json().render_pretty())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// Capture a record from a live job handle + RM report.
+    pub fn record_from(
+        &self,
+        app_id: ApplicationId,
+        report: &crate::yarn::AppReport,
+        am_state: &crate::am::AmState,
+        wall_ms: u64,
+    ) -> Result<PathBuf> {
+        let snap = am_state.snapshot_json();
+        let mut tasks = Vec::new();
+        if let Some(arr) = snap.get("tasks").and_then(|t| t.as_arr()) {
+            for t in arr {
+                let id = t.get("task").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                tasks.push((
+                    id,
+                    TaskMetrics {
+                        step: t.get("step").and_then(|v| v.as_u64()).unwrap_or(0),
+                        loss: t.get("loss").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+                        step_ms_avg: t.get("step_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        mem_used_mb: t.get("mem_mb").and_then(|v| v.as_u64()).unwrap_or(0),
+                        updates_applied: t.get("updates").and_then(|v| v.as_u64()).unwrap_or(0),
+                        tokens_done: t.get("tokens").and_then(|v| v.as_u64()).unwrap_or(0),
+                        ..Default::default()
+                    },
+                ));
+            }
+        }
+        self.record(&JobRecord {
+            app_id: app_id.to_string(),
+            name: report.name.clone(),
+            queue: report.queue.clone(),
+            succeeded: report.state == crate::yarn::AppState::Finished,
+            attempts: am_state.attempt(),
+            wall_ms,
+            diagnostics: report.diagnostics.clone(),
+            tasks,
+        })
+    }
+
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(out),
+        };
+        for ent in entries.flatten() {
+            let name = ent.file_name().to_string_lossy().into_owned();
+            if let Some(id) = name.strip_suffix(".json") {
+                out.push(id.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    pub fn load(&self, app_id: &str) -> Result<JobRecord> {
+        let path = self.dir.join(format!("{app_id}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        JobRecord::from_json(&Json::parse(&text)?)
+    }
+
+    /// Aggregate success-rate / attempt statistics across all records —
+    /// the fleet-level view a Dr. Elephant dashboard would chart.
+    pub fn summary(&self) -> Result<HistorySummary> {
+        let mut s = HistorySummary::default();
+        for id in self.list()? {
+            let rec = self.load(&id)?;
+            s.jobs += 1;
+            if rec.succeeded {
+                s.succeeded += 1;
+            }
+            s.total_attempts += rec.attempts as u64;
+            s.total_wall_ms += rec.wall_ms;
+            s.total_tokens += rec
+                .tasks
+                .iter()
+                .filter(|(id, _)| id.starts_with("worker"))
+                .map(|(_, m)| m.tokens_done)
+                .sum::<u64>();
+        }
+        Ok(s)
+    }
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistorySummary {
+    pub jobs: u64,
+    pub succeeded: u64,
+    pub total_attempts: u64,
+    pub total_wall_ms: u64,
+    pub total_tokens: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(tag: &str) -> HistoryStore {
+        let d = std::env::temp_dir().join(format!(
+            "tony-hist-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        HistoryStore::new(d)
+    }
+
+    fn sample(id: &str, ok: bool) -> JobRecord {
+        JobRecord {
+            app_id: id.to_string(),
+            name: "j".into(),
+            queue: "default".into(),
+            succeeded: ok,
+            attempts: 2,
+            wall_ms: 1000,
+            diagnostics: "d".into(),
+            tasks: vec![(
+                "worker:0".into(),
+                TaskMetrics { step: 10, loss: 2.0, tokens_done: 2560, ..Default::default() },
+            )],
+        }
+    }
+
+    #[test]
+    fn record_load_round_trip() {
+        let s = store("rt");
+        let rec = sample("application_1_0001", true);
+        s.record(&rec).unwrap();
+        let back = s.load("application_1_0001").unwrap();
+        assert_eq!(back.app_id, rec.app_id);
+        assert_eq!(back.succeeded, rec.succeeded);
+        assert_eq!(back.tasks.len(), 1);
+        assert_eq!(back.tasks[0].1.tokens_done, 2560);
+        let _ = std::fs::remove_dir_all(s.dir());
+    }
+
+    #[test]
+    fn list_and_summary() {
+        let s = store("sum");
+        s.record(&sample("application_1_0001", true)).unwrap();
+        s.record(&sample("application_1_0002", false)).unwrap();
+        assert_eq!(s.list().unwrap().len(), 2);
+        let sum = s.summary().unwrap();
+        assert_eq!(sum.jobs, 2);
+        assert_eq!(sum.succeeded, 1);
+        assert_eq!(sum.total_attempts, 4);
+        assert_eq!(sum.total_tokens, 2 * 2560);
+        let _ = std::fs::remove_dir_all(s.dir());
+    }
+
+    #[test]
+    fn missing_record_errors() {
+        let s = store("missing");
+        assert!(s.load("nope").is_err());
+        assert_eq!(s.list().unwrap().len(), 0);
+        assert_eq!(s.summary().unwrap(), HistorySummary::default());
+    }
+}

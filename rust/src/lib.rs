@@ -1,0 +1,38 @@
+//! # TonY - an orchestrator for distributed machine learning jobs
+//!
+//! Full-system reproduction of *TonY: An Orchestrator for Distributed
+//! Machine Learning Jobs* (Hsu et al., LinkedIn, OpML '19) as a
+//! three-layer Rust + JAX + Pallas stack.  See DESIGN.md for the system
+//! inventory and README.md for the quickstart.
+//!
+//! Layer map:
+//! - **L3 (this crate)**: the TonY client / ApplicationMaster /
+//!   TaskExecutor orchestration system, a YARN-compatible cluster
+//!   simulator it negotiates with, the parameter-server training framework
+//!   it launches, and supporting substrates (RPC, XML config, JSON, HTTP
+//!   portal, workflow engine, metrics analyzer, checkpointing).
+//! - **L2/L1 (python/compile/)**: the JAX transformer LM + Pallas kernels,
+//!   AOT-lowered once to `artifacts/<preset>/*.hlo.txt` and executed from
+//!   `runtime::Engine` via PJRT.  Python never runs on the job path.
+
+pub mod am;
+pub mod chaos;
+pub mod checkpoint;
+pub mod baseline;
+pub mod bench;
+pub mod client;
+pub mod drelephant;
+pub mod portal;
+pub mod workflow;
+pub mod data;
+pub mod executor;
+pub mod framework;
+pub mod history;
+pub mod json;
+pub mod tonyconf;
+pub mod net;
+pub mod proptest;
+pub mod runtime;
+pub mod yarn;
+pub mod util;
+pub mod xmlconf;

@@ -1,0 +1,213 @@
+//! `tony` — the CLI entrypoint: boot a simulated cluster, submit a job
+//! from a tony.xml, watch it, and print the Dr. Elephant report.
+//!
+//! ```text
+//! tony submit --conf job.xml --artifacts artifacts/tiny [--nodes 4]
+//!             [--node-mem 8g] [--node-cores 8]
+//! tony demo   [--artifacts artifacts/tiny] [--steps 10]
+//! tony version
+//! ```
+//!
+//! (Hand-rolled flag parsing — this offline build has no clap.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::client::TonyClient;
+use tony::drelephant;
+use tony::runtime::ArtifactMeta;
+use tony::tonyconf::{JobConfBuilder, JobSpec};
+use tony::util::bytes::parse_size;
+use tony::xmlconf::Configuration;
+use tony::yarn::{Resource, ResourceManager};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  tony submit --conf <tony.xml> --artifacts <dir> [--nodes N] \
+         [--node-mem 8g] [--node-cores 8] [--node-gpus 0] [--timeout-s 600]\n  \
+         tony demo [--artifacts artifacts/tiny] [--steps 10]\n  tony history\n  tony version"
+    );
+    std::process::exit(2);
+}
+
+fn boot_cluster(flags: &BTreeMap<String, String>) -> Arc<ResourceManager> {
+    let nodes: u32 = flags.get("nodes").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let mem = flags
+        .get("node-mem")
+        .and_then(|s| parse_size(s))
+        .unwrap_or(8 << 30)
+        >> 20;
+    let cores: u32 = flags.get("node-cores").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let gpus: u32 = flags.get("node-gpus").and_then(|s| s.parse().ok()).unwrap_or(0);
+    ResourceManager::start_uniform(nodes, Resource::new(mem, cores, gpus))
+}
+
+fn run_and_report(
+    rm: Arc<ResourceManager>,
+    conf: &Configuration,
+    artifacts: &PathBuf,
+    timeout: Duration,
+) -> i32 {
+    let client = TonyClient::new(rm.clone());
+    let handle = match client.submit(conf, artifacts) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("submit failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("submitted {}", handle.app_id);
+    if let Some(url) = handle.portal_url() {
+        println!("portal (tracking URL): {url}");
+    }
+    let t0 = std::time::Instant::now();
+    let report = match handle.wait(timeout) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("wait failed: {e:#}");
+            handle.kill();
+            return 1;
+        }
+    };
+    println!("final state: {:?} ({})", report.state, report.diagnostics);
+    let store = tony::history::HistoryStore::default_location();
+    match handle.record_history(&store, t0.elapsed().as_millis() as u64) {
+        Ok(path) => println!("history recorded: {}", path.display()),
+        Err(e) => eprintln!("history record failed: {e:#}"),
+    }
+    if let Some(url) = handle.ui_url() {
+        println!("chief UI was at: {url}");
+    }
+    println!("--- status snapshot ---\n{}", handle.status_json().render_pretty());
+
+    // Dr. Elephant report over the collected telemetry.
+    if let (Ok(spec), Ok(meta)) = (JobSpec::from_conf(conf), ArtifactMeta::load(artifacts)) {
+        let snap = handle.status_json();
+        let mut tasks = Vec::new();
+        if let Some(arr) = snap.get("tasks").and_then(|t| t.as_arr()) {
+            for t in arr {
+                let id = t.get("task").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                let m = tony::framework::TaskMetrics {
+                    step: t.get("step").and_then(|v| v.as_u64()).unwrap_or(0),
+                    step_ms_avg: t.get("step_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    mem_used_mb: t.get("mem_mb").and_then(|v| v.as_u64()).unwrap_or(0),
+                    updates_applied: t.get("updates").and_then(|v| v.as_u64()).unwrap_or(0),
+                    ..Default::default()
+                };
+                tasks.push((id, m));
+            }
+        }
+        let telemetry = drelephant::JobTelemetry::from_job(&spec, &meta, tasks);
+        print!("{}", drelephant::render_report(&drelephant::analyze(&telemetry)));
+    }
+    if report.state == tony::yarn::AppState::Finished {
+        0
+    } else {
+        1
+    }
+}
+
+fn main() {
+    tony::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let (_pos, flags) = parse_flags(&args[1..]);
+
+    let code = match cmd.as_str() {
+        "history" => {
+            let store = tony::history::HistoryStore::default_location();
+            let ids = store.list().unwrap_or_default();
+            if ids.is_empty() {
+                println!("no recorded jobs at {}", store.dir().display());
+            }
+            for id in &ids {
+                if let Ok(rec) = store.load(id) {
+                    println!(
+                        "{id}  '{}'  {}  attempts={}  wall={}ms  queue={}",
+                        rec.name,
+                        if rec.succeeded { "FINISHED" } else { "FAILED" },
+                        rec.attempts,
+                        rec.wall_ms,
+                        rec.queue
+                    );
+                }
+            }
+            if let Ok(s) = store.summary() {
+                if s.jobs > 0 {
+                    println!(
+                        "-- {} jobs, {} succeeded, {} total attempts, {} tokens trained",
+                        s.jobs, s.succeeded, s.total_attempts, s.total_tokens
+                    );
+                }
+            }
+            0
+        }
+        "version" => {
+            println!("tony 0.1.0 (OpML'19 reproduction; rust+jax+pallas, AOT via XLA/PJRT)");
+            0
+        }
+        "submit" => {
+            let Some(conf_path) = flags.get("conf") else { usage() };
+            let Some(artifacts) = flags.get("artifacts") else { usage() };
+            let conf = match Configuration::from_xml_file(std::path::Path::new(conf_path)) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("bad conf {conf_path}: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            let timeout = Duration::from_secs(
+                flags.get("timeout-s").and_then(|s| s.parse().ok()).unwrap_or(600),
+            );
+            let rm = boot_cluster(&flags);
+            run_and_report(rm, &conf, &PathBuf::from(artifacts), timeout)
+        }
+        "demo" => {
+            let artifacts = PathBuf::from(
+                flags
+                    .get("artifacts")
+                    .cloned()
+                    .unwrap_or_else(|| "artifacts/tiny".to_string()),
+            );
+            let steps: u64 = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(10);
+            let ckpt = std::env::temp_dir().join(format!("tony-demo-{}", std::process::id()));
+            let conf = JobConfBuilder::new("demo")
+                .instances("worker", 2)
+                .memory("worker", "1g")
+                .instances("ps", 1)
+                .memory("ps", "1g")
+                .train(artifacts.to_str().unwrap(), "tiny", steps)
+                .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+                .build();
+            let rm = boot_cluster(&flags);
+            let code = run_and_report(rm, &conf, &artifacts, Duration::from_secs(600));
+            let _ = std::fs::remove_dir_all(&ckpt);
+            code
+        }
+        _ => usage(),
+    };
+    std::process::exit(code);
+}

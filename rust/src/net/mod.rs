@@ -1,0 +1,16 @@
+//! Networking substrate: wire codec + length-prefixed TCP RPC.
+//!
+//! The paper's tasks talk over two protocols: (1) TaskExecutor <-> AM
+//! registration/heartbeat RPC, and (2) the ML framework's own distributed
+//! protocol between workers and parameter servers (§2.2: "they will
+//! communicate and coordinate with one another via the ML framework's
+//! distributed protocol").  Both run over this module: a simple
+//! request/response RPC with a 4-byte length prefix, a method id, and
+//! hand-rolled binary serialization (`Wire`).  Thread-per-connection on
+//! `std::net` — no tokio in this offline build.
+
+pub mod rpc;
+pub mod wire;
+
+pub use rpc::{RpcClient, RpcError, RpcHandler, RpcServer};
+pub use wire::{Reader, Wire, WireError, Writer};

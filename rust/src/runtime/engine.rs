@@ -1,0 +1,247 @@
+//! The PJRT execution engine: loads `artifacts/<preset>/*.hlo.txt`,
+//! compiles them on a CPU PJRT client, and executes them on behalf of the
+//! rest of the system.
+//!
+//! `xla`'s types wrap raw C++ pointers and are not `Send`, so the client
+//! and every compiled executable live on ONE dedicated engine thread; the
+//! rest of the system talks to it through a cloneable, thread-safe
+//! [`EngineHandle`] carrying plain [`Tensor`] buffers over channels.  This
+//! is also faithful to the paper's deployment shape: each task container
+//! runs its own runtime instance (here: its own engine thread).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::meta::{ArtifactMeta, Signature};
+use super::tensor::Tensor;
+
+enum Cmd {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::SyncSender<Result<(Vec<Tensor>, f64)>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to a running engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Cmd>,
+    meta: Arc<ArtifactMeta>,
+}
+
+/// Owns the engine thread; dropping it shuts the thread down.
+pub struct Engine {
+    handle: EngineHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+    let lit = match t {
+        Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+        Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        Tensor::U32 { data, .. } => xla::Literal::vec1(data),
+    };
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("reshape {:?} failed: {e}", t.shape()))
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let t = match shape.ty() {
+        xla::ElementType::F32 => Tensor::F32 {
+            shape: dims,
+            data: lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+        },
+        xla::ElementType::S32 => Tensor::I32 {
+            shape: dims,
+            data: lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+        },
+        xla::ElementType::U32 => Tensor::U32 {
+            shape: dims,
+            data: lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e}"))?,
+        },
+        other => bail!("unsupported output element type {other:?}"),
+    };
+    Ok(t)
+}
+
+fn check_inputs(sig: &Signature, inputs: &[Tensor]) -> Result<()> {
+    if sig.inputs.len() != inputs.len() {
+        bail!("expected {} inputs, got {}", sig.inputs.len(), inputs.len());
+    }
+    for (i, ((dtype, shape), t)) in sig.inputs.iter().zip(inputs).enumerate() {
+        if t.dtype_str() != dtype {
+            bail!("input {i}: expected dtype {dtype}, got {}", t.dtype_str());
+        }
+        if t.shape() != shape.as_slice() {
+            bail!("input {i}: expected shape {:?}, got {:?}", shape, t.shape());
+        }
+    }
+    Ok(())
+}
+
+fn engine_main(
+    meta: Arc<ArtifactMeta>,
+    artifacts: Vec<String>,
+    rx: mpsc::Receiver<Cmd>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    // Compile phase: failures are reported through `ready`.
+    let setup = (|| -> Result<HashMap<String, xla::PjRtLoadedExecutable>> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let mut exes = HashMap::new();
+        for name in &artifacts {
+            let path: PathBuf = meta
+                .hlo_path(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in meta.json"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(exes)
+    })();
+
+    let exes = match setup {
+        Ok(exes) => {
+            let _ = ready.send(Ok(()));
+            exes
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Shutdown => break,
+            Cmd::Execute { name, inputs, reply } => {
+                let result = (|| -> Result<(Vec<Tensor>, f64)> {
+                    let exe = exes
+                        .get(&name)
+                        .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+                    if let Some(sig) = meta.signature(&name) {
+                        check_inputs(sig, &inputs)?;
+                    }
+                    let lits: Vec<xla::Literal> =
+                        inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+                    let start = Instant::now();
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| anyhow!("execute {name}: {e}"))?;
+                    let out_lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("fetch result: {e}"))?;
+                    let exec_ms = start.elapsed().as_secs_f64() * 1e3;
+                    // aot.py lowers with return_tuple=True: always a tuple.
+                    let parts = out_lit
+                        .to_tuple()
+                        .map_err(|e| anyhow!("decompose tuple: {e}"))?;
+                    let outs = parts
+                        .iter()
+                        .map(literal_to_tensor)
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((outs, exec_ms))
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+impl Engine {
+    /// Load + compile the named artifacts from a preset dir and start the
+    /// engine thread.  `artifacts = None` compiles everything in meta.json.
+    pub fn start(preset_dir: &std::path::Path, artifacts: Option<&[&str]>) -> Result<Engine> {
+        let meta = Arc::new(ArtifactMeta::load(preset_dir)?);
+        Self::start_with_meta(meta, artifacts)
+    }
+
+    pub fn start_with_meta(meta: Arc<ArtifactMeta>, artifacts: Option<&[&str]>) -> Result<Engine> {
+        let names: Vec<String> = match artifacts {
+            Some(list) => list.iter().map(|s| s.to_string()).collect(),
+            None => meta.artifacts.iter().map(|(n, _)| n.clone()).collect(),
+        };
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::sync_channel(1);
+        let meta2 = meta.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("pjrt-engine-{}", meta.preset))
+            .spawn(move || engine_main(meta2, names, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during setup")??;
+        Ok(Engine { handle: EngineHandle { tx, meta }, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Cmd::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute one artifact; returns outputs and device execution time.
+    pub fn execute_timed(&self, name: &str, inputs: Vec<Tensor>) -> Result<(Vec<Tensor>, f64)> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Cmd::Execute { name: name.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        Ok(self.execute_timed(name, inputs)?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests against real artifacts live in rust/tests/; these
+    // unit tests cover the signature checker only (no PJRT needed).
+    #[test]
+    fn signature_mismatches_detected() {
+        let sig = Signature {
+            inputs: vec![("f32".into(), vec![4]), ("i32".into(), vec![2, 3])],
+            outputs: vec![],
+        };
+        let ok = vec![Tensor::zeros_f32(&[4]), Tensor::i32(&[2, 3], vec![0; 6])];
+        assert!(check_inputs(&sig, &ok).is_ok());
+        let wrong_count = vec![Tensor::zeros_f32(&[4])];
+        assert!(check_inputs(&sig, &wrong_count).is_err());
+        let wrong_dtype = vec![Tensor::i32(&[4], vec![0; 4]), Tensor::i32(&[2, 3], vec![0; 6])];
+        assert!(check_inputs(&sig, &wrong_dtype).is_err());
+        let wrong_shape = vec![Tensor::zeros_f32(&[5]), Tensor::i32(&[2, 3], vec![0; 6])];
+        assert!(check_inputs(&sig, &wrong_shape).is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! `artifacts/<preset>/meta.json` — the contract between the AOT pipeline
+//! (python/compile/aot.py) and the Rust runtime.  Shapes and dtypes are
+//! asserted at engine start so a stale artifact directory fails loudly
+//! instead of feeding garbage into training.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamHyper {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// One artifact's IO signature: ordered (dtype, shape) pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Signature {
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub preset: String,
+    pub dims: ModelDims,
+    pub n_params: usize,
+    pub chunk_len: usize,
+    pub adam: AdamHyper,
+    /// Artifact name -> HLO file name (relative to the preset dir).
+    pub artifacts: Vec<(String, String)>,
+    pub signatures: Vec<(String, Signature)>,
+    pub dir: PathBuf,
+}
+
+fn parse_sig_list(j: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("signature list must be array"))?;
+    let mut out = Vec::new();
+    for ent in arr {
+        let pair = ent.as_arr().ok_or_else(|| anyhow!("signature entry must be [dtype, shape]"))?;
+        if pair.len() != 2 {
+            bail!("signature entry must have 2 elements");
+        }
+        let dtype = pair[0].as_str().ok_or_else(|| anyhow!("dtype must be string"))?.to_string();
+        let shape = pair[1]
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape must be array"))?
+            .iter()
+            .map(|d| d.as_u64().map(|v| v as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        out.push((dtype, shape));
+    }
+    Ok(out)
+}
+
+impl ArtifactMeta {
+    pub fn load(preset_dir: &Path) -> Result<ArtifactMeta> {
+        let meta_path = preset_dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", meta_path.display()))?;
+
+        let model = j.get("model").ok_or_else(|| anyhow!("meta.json missing 'model'"))?;
+        let dim = |k: &str| -> Result<usize> {
+            model
+                .get(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("meta.json model.{k} missing"))
+        };
+        let dims = ModelDims {
+            vocab: dim("vocab")?,
+            d_model: dim("d_model")?,
+            n_heads: dim("n_heads")?,
+            n_layers: dim("n_layers")?,
+            d_ff: dim("d_ff")?,
+            seq_len: dim("seq_len")?,
+            batch: dim("batch")?,
+        };
+        let adam = j.get("adam").ok_or_else(|| anyhow!("meta.json missing 'adam'"))?;
+        let adam = AdamHyper {
+            beta1: adam.get("beta1").and_then(|v| v.as_f64()).unwrap_or(0.9),
+            beta2: adam.get("beta2").and_then(|v| v.as_f64()).unwrap_or(0.999),
+            eps: adam.get("eps").and_then(|v| v.as_f64()).unwrap_or(1e-8),
+        };
+        let mut artifacts = Vec::new();
+        for (name, file) in j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("meta.json missing 'artifacts'"))?
+        {
+            artifacts.push((
+                name.clone(),
+                file.as_str().ok_or_else(|| anyhow!("artifact path must be string"))?.to_string(),
+            ));
+        }
+        let mut signatures = Vec::new();
+        if let Some(sigs) = j.get("signatures").and_then(|s| s.as_obj()) {
+            for (name, sig) in sigs {
+                signatures.push((
+                    name.clone(),
+                    Signature {
+                        inputs: parse_sig_list(
+                            sig.get("in").ok_or_else(|| anyhow!("sig missing 'in'"))?,
+                        )?,
+                        outputs: parse_sig_list(
+                            sig.get("out").ok_or_else(|| anyhow!("sig missing 'out'"))?,
+                        )?,
+                    },
+                ));
+            }
+        }
+        Ok(ArtifactMeta {
+            preset: j
+                .get("preset")
+                .and_then(|p| p.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            dims,
+            n_params: j
+                .get("n_params")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("meta.json missing n_params"))? as usize,
+            chunk_len: j
+                .get("chunk_len")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("meta.json missing chunk_len"))? as usize,
+            adam,
+            artifacts,
+            signatures,
+            dir: preset_dir.to_path_buf(),
+        })
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&Signature> {
+        self.signatures.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Option<PathBuf> {
+        self.artifacts
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, f)| self.dir.join(f))
+    }
+
+    /// Number of padded chunks a flat vector of `n_params` splits into.
+    pub fn n_chunks(&self) -> usize {
+        self.n_params.div_ceil(self.chunk_len)
+    }
+
+    /// Tokens-per-step for throughput accounting (batch * seq predictions).
+    pub fn tokens_per_step(&self) -> usize {
+        self.dims.batch * self.dims.seq_len
+    }
+
+    /// Approximate FLOPs per training step (fwd+bwd ~ 6 * params * tokens,
+    /// the standard transformer estimate) — used by Dr. Elephant heuristics
+    /// and the §Perf roofline table.
+    pub fn flops_per_step(&self) -> f64 {
+        6.0 * self.n_params as f64 * self.tokens_per_step() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta_json() -> String {
+        r#"{
+          "preset": "tiny",
+          "model": {"vocab": 256, "d_model": 64, "n_heads": 4, "n_layers": 2,
+                    "d_ff": 256, "seq_len": 64, "batch": 4,
+                    "block_q": 64, "block_k": 64},
+          "n_params": 120064,
+          "chunk_len": 65536,
+          "adam": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-8},
+          "artifacts": {"worker_step": "worker_step.hlo.txt",
+                        "ps_adam": "ps_adam.hlo.txt"},
+          "signatures": {
+            "worker_step": {"in": [["f32", [120064]], ["i32", [4, 65]]],
+                            "out": [["f32", []], ["f32", [120064]]]}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn load_meta() {
+        let dir = std::env::temp_dir().join(format!("tony-meta-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), sample_meta_json()).unwrap();
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.dims.d_model, 64);
+        assert_eq!(m.n_params, 120064);
+        assert_eq!(m.n_chunks(), 2);
+        assert_eq!(m.tokens_per_step(), 256);
+        let sig = m.signature("worker_step").unwrap();
+        assert_eq!(sig.inputs[1].1, vec![4, 65]);
+        assert_eq!(m.hlo_path("ps_adam").unwrap(), dir.join("ps_adam.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let dir = std::env::temp_dir().join(format!("tony-meta-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), "{}").unwrap();
+        assert!(ArtifactMeta::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! See DESIGN.md §2.  The flow mirrors /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute`, wrapped in a thread-owning [`Engine`] so
+//! the non-`Send` xla types never cross threads.
+
+pub mod engine;
+pub mod meta;
+pub mod tensor;
+
+pub use engine::{Engine, EngineHandle};
+pub use meta::{AdamHyper, ArtifactMeta, ModelDims, Signature};
+pub use tensor::Tensor;

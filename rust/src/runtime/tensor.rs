@@ -1,0 +1,199 @@
+//! Host-side tensors passed between coordinator threads and the PJRT
+//! engine thread.  `xla::Literal` wraps C++ pointers and is not `Send`,
+//! so everything that crosses a thread boundary is one of these plain
+//! buffers; conversion to/from literals happens on the engine thread only.
+
+use crate::net::wire::{Reader, Wire, WireError, Writer};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl Tensor {
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::U32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::U32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+            Tensor::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+            Tensor::U32 { .. } => "u32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn into_f32(self) -> Option<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Scalar f32 value (accepts rank-0 or single-element tensors).
+    pub fn scalar(&self) -> Option<f32> {
+        match self {
+            Tensor::F32 { data, .. } if data.len() == 1 => Some(data[0]),
+            _ => None,
+        }
+    }
+}
+
+impl Wire for Tensor {
+    fn encode(&self, w: &mut Writer) {
+        let shape = self.shape();
+        w.u32(shape.len() as u32);
+        for s in shape {
+            w.u64(*s as u64);
+        }
+        match self {
+            Tensor::F32 { data, .. } => {
+                w.u8(0);
+                w.f32_slice(data);
+            }
+            Tensor::I32 { data, .. } => {
+                w.u8(1);
+                w.i32_slice(data);
+            }
+            Tensor::U32 { data, .. } => {
+                w.u8(2);
+                w.u32(data.len() as u32);
+                for v in data {
+                    w.u32(*v);
+                }
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let rank = r.u32()? as usize;
+        if rank > 16 {
+            return Err(WireError(format!("absurd tensor rank {rank}")));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u64()? as usize);
+        }
+        let expect: usize = shape.iter().product();
+        let t = match r.u8()? {
+            0 => Tensor::F32 { shape, data: r.f32_vec()? },
+            1 => Tensor::I32 { shape, data: r.i32_vec()? },
+            2 => {
+                let n = r.u32()? as usize;
+                let mut data = Vec::with_capacity(n.min(1 << 24));
+                for _ in 0..n {
+                    data.push(r.u32()?);
+                }
+                Tensor::U32 { shape, data }
+            }
+            d => return Err(WireError(format!("bad dtype tag {d}"))),
+        };
+        if t.len() != expect {
+            return Err(WireError(format!(
+                "tensor shape {:?} expects {} elements, got {}",
+                t.shape(),
+                expect,
+                t.len()
+            )));
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(&[2, 3], vec![1.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype_str(), "f32");
+        assert!(t.as_f32().is_some());
+        assert!(t.as_i32().is_none());
+        assert_eq!(Tensor::scalar_f32(2.5).scalar(), Some(2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::f32(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        for t in [
+            Tensor::f32(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]),
+            Tensor::i32(&[3], vec![-1, 0, 7]),
+            Tensor::U32 { shape: vec![], data: vec![42] },
+            Tensor::zeros_f32(&[0]),
+        ] {
+            let b = t.to_bytes();
+            assert_eq!(Tensor::from_bytes(&b).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn wire_rejects_shape_mismatch() {
+        let t = Tensor::f32(&[4], vec![0.0; 4]);
+        let mut b = t.to_bytes();
+        // Corrupt the rank-1 dim from 4 to 5.
+        b[4] = 5;
+        assert!(Tensor::from_bytes(&b).is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! TonY configuration: the `tony.xml` key schema and its typed view.
+//!
+//! Paper §2.1: users describe the resources their job needs in an XML
+//! file — worker/PS instance counts, memory, GPUs per instance, plus
+//! scheduler settings (queue, node label).  This module defines the key
+//! namespace (mirroring the real TonY's `tony.*` keys), parses a
+//! [`crate::xmlconf::Configuration`] into a validated [`JobSpec`], and
+//! carries the training-job settings the framework tasks consume.
+
+
+use anyhow::{bail, Result};
+
+use crate::xmlconf::Configuration;
+use crate::yarn::{ContainerRequest, Resource};
+
+/// Well-known task types (any other string is allowed too; these get
+/// defaults).  `worker:0` doubles as the chief unless a `chief` type is
+/// configured, matching TonY's behaviour.
+pub const WORKER: &str = "worker";
+pub const PS: &str = "ps";
+pub const CHIEF: &str = "chief";
+pub const EVALUATOR: &str = "evaluator";
+
+/// Resource + placement demands for one task type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskTypeSpec {
+    pub name: String,
+    pub instances: u32,
+    pub resource: Resource,
+    pub node_label: Option<String>,
+    /// Untracked types don't gate job completion (e.g. TensorBoard).
+    pub tracked: bool,
+}
+
+impl TaskTypeSpec {
+    pub fn to_request(&self) -> ContainerRequest {
+        let mut req = ContainerRequest::new(self.resource, self.instances);
+        if let Some(l) = &self.node_label {
+            req = req.with_label(l.clone());
+        }
+        req
+    }
+}
+
+/// Parsed + validated job description.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub queue: String,
+    pub am_resource: Resource,
+    pub task_types: Vec<TaskTypeSpec>,
+    /// Whole-job restart budget on task failure (paper §2.2 relaunch).
+    pub max_attempts: u32,
+    pub heartbeat_ms: u64,
+    pub max_missed_heartbeats: u32,
+    pub train: TrainSpec,
+    /// The raw configuration (executors receive it verbatim, like the
+    /// packaged conf archive in real TonY).
+    pub conf: Configuration,
+}
+
+/// Training-workload settings consumed by the framework tasks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainSpec {
+    pub artifacts_dir: String,
+    pub preset: String,
+    pub steps: u64,
+    pub lr: f64,
+    pub seed: u64,
+    pub checkpoint_dir: String,
+    pub checkpoint_every: u64,
+    pub eval_every: u64,
+    /// "sync" (barrier data-parallel) or "async" (hogwild-style).
+    pub mode: String,
+    pub grad_clip: f64,
+}
+
+impl JobSpec {
+    pub fn from_conf(conf: &Configuration) -> Result<JobSpec> {
+        let name = conf.get_or("tony.application.name", "tony-job");
+        let queue = conf.get_or("tony.application.queue", "default");
+        let am_resource = Resource::new(
+            conf.get_size("tony.am.memory", 512 << 20) >> 20,
+            conf.get_u32("tony.am.vcores", 1),
+            0,
+        );
+        let mut task_types = Vec::new();
+        for ty in [WORKER, PS, CHIEF, EVALUATOR] {
+            let instances = conf.get_u32(&format!("tony.{ty}.instances"), 0);
+            if instances == 0 {
+                continue;
+            }
+            task_types.push(TaskTypeSpec {
+                name: ty.to_string(),
+                instances,
+                resource: Resource::new(
+                    conf.get_size(&format!("tony.{ty}.memory"), 1 << 30) >> 20,
+                    conf.get_u32(&format!("tony.{ty}.vcores"), 1),
+                    conf.get_u32(&format!("tony.{ty}.gpus"), 0),
+                ),
+                node_label: conf.get(&format!("tony.{ty}.node-label")),
+                // Job completion gates on *tracked* types only: workers
+                // (and chief).  PS/evaluator tasks are service-like and get a
+                // Stop command once the tracked set succeeds — mirroring
+                // TonY's tracked/untracked job types.
+                tracked: conf.get_bool(
+                    &format!("tony.{ty}.tracked"),
+                    matches!(ty, WORKER | CHIEF),
+                ),
+            });
+        }
+        if task_types.is_empty() {
+            bail!("job must configure at least one task type (tony.worker.instances etc.)");
+        }
+        if !task_types.iter().any(|t| t.name == WORKER && t.instances > 0) {
+            bail!("job must have at least one worker (tony.worker.instances)");
+        }
+        let train = TrainSpec {
+            artifacts_dir: conf.get_or("tony.train.artifacts-dir", "artifacts"),
+            preset: conf.get_or("tony.train.preset", "tiny"),
+            steps: conf.get_u64("tony.train.steps", 50),
+            lr: conf.get_f64("tony.train.lr", 1e-3),
+            seed: conf.get_u64("tony.train.seed", 0),
+            checkpoint_dir: conf.get_or("tony.train.checkpoint-dir", "/tmp/tony-ckpt"),
+            checkpoint_every: conf.get_u64("tony.train.checkpoint-every", 25),
+            eval_every: conf.get_u64("tony.train.eval-every", 0),
+            mode: conf.get_or("tony.train.mode", "sync"),
+            grad_clip: conf.get_f64("tony.train.grad-clip", 0.0),
+        };
+        if train.mode != "sync" && train.mode != "async" {
+            bail!("tony.train.mode must be 'sync' or 'async', got '{}'", train.mode);
+        }
+        Ok(JobSpec {
+            name,
+            queue,
+            am_resource,
+            task_types,
+            max_attempts: conf.get_u32("tony.application.max-attempts", 3),
+            heartbeat_ms: conf.get_u64("tony.task.heartbeat-ms", 50),
+            max_missed_heartbeats: conf.get_u32("tony.task.max-missed-heartbeats", 20),
+            train,
+            conf: conf.clone(),
+        })
+    }
+
+    pub fn task_type(&self, name: &str) -> Option<&TaskTypeSpec> {
+        self.task_types.iter().find(|t| t.name == name)
+    }
+
+    pub fn total_tasks(&self) -> u32 {
+        self.task_types.iter().map(|t| t.instances).sum()
+    }
+
+    pub fn tracked_tasks(&self) -> u32 {
+        self.task_types.iter().filter(|t| t.tracked).map(|t| t.instances).sum()
+    }
+
+    pub fn n_workers(&self) -> u32 {
+        self.task_type(WORKER).map(|t| t.instances).unwrap_or(0)
+    }
+
+    pub fn n_ps(&self) -> u32 {
+        self.task_type(PS).map(|t| t.instances).unwrap_or(0)
+    }
+
+    /// Aggregate resources (excluding AM) — used by the client for a
+    /// fits-in-cluster sanity check and by Dr. Elephant.
+    pub fn total_task_resources(&self) -> Resource {
+        self.task_types.iter().fold(Resource::ZERO, |acc, t| {
+            let mut r = Resource::ZERO;
+            for _ in 0..t.instances {
+                r += t.resource;
+            }
+            acc + r
+        })
+    }
+}
+
+/// Builder for job configurations in code (examples/tests); writes the
+/// same `tony.*` keys an XML file would.
+#[derive(Debug, Default, Clone)]
+pub struct JobConfBuilder {
+    conf: Configuration,
+}
+
+impl JobConfBuilder {
+    pub fn new(name: &str) -> JobConfBuilder {
+        let mut conf = Configuration::new();
+        conf.set("tony.application.name", name);
+        JobConfBuilder { conf }
+    }
+
+    pub fn queue(mut self, q: &str) -> Self {
+        self.conf.set("tony.application.queue", q);
+        self
+    }
+
+    pub fn instances(mut self, ty: &str, n: u32) -> Self {
+        self.conf.set(&format!("tony.{ty}.instances"), n.to_string());
+        self
+    }
+
+    pub fn memory(mut self, ty: &str, mem: &str) -> Self {
+        self.conf.set(&format!("tony.{ty}.memory"), mem);
+        self
+    }
+
+    pub fn gpus(mut self, ty: &str, n: u32) -> Self {
+        self.conf.set(&format!("tony.{ty}.gpus"), n.to_string());
+        self
+    }
+
+    pub fn node_label(mut self, ty: &str, label: &str) -> Self {
+        self.conf.set(&format!("tony.{ty}.node-label"), label);
+        self
+    }
+
+    pub fn set(mut self, key: &str, value: &str) -> Self {
+        self.conf.set(key, value);
+        self
+    }
+
+    pub fn train(mut self, artifacts_dir: &str, preset: &str, steps: u64) -> Self {
+        self.conf.set("tony.train.artifacts-dir", artifacts_dir);
+        self.conf.set("tony.train.preset", preset);
+        self.conf.set("tony.train.steps", steps.to_string());
+        self
+    }
+
+    pub fn build(self) -> Configuration {
+        self.conf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Configuration {
+        JobConfBuilder::new("mnist")
+            .queue("ml")
+            .instances(WORKER, 4)
+            .memory(WORKER, "4g")
+            .gpus(WORKER, 1)
+            .node_label(WORKER, "gpu")
+            .instances(PS, 2)
+            .memory(PS, "2g")
+            .train("artifacts", "tiny", 100)
+            .build()
+    }
+
+    #[test]
+    fn parse_job_spec() {
+        let spec = JobSpec::from_conf(&sample()).unwrap();
+        assert_eq!(spec.name, "mnist");
+        assert_eq!(spec.queue, "ml");
+        assert_eq!(spec.n_workers(), 4);
+        assert_eq!(spec.n_ps(), 2);
+        let w = spec.task_type(WORKER).unwrap();
+        assert_eq!(w.resource, Resource::new(4096, 1, 1));
+        assert_eq!(w.node_label.as_deref(), Some("gpu"));
+        assert!(w.tracked);
+        let ps = spec.task_type(PS).unwrap();
+        assert_eq!(ps.resource.gpus, 0, "PS stays CPU-only (heterogeneous asks)");
+        assert_eq!(spec.total_tasks(), 6);
+        assert_eq!(spec.train.steps, 100);
+    }
+
+    #[test]
+    fn requests_carry_labels() {
+        let spec = JobSpec::from_conf(&sample()).unwrap();
+        let req = spec.task_type(WORKER).unwrap().to_request();
+        assert_eq!(req.count, 4);
+        assert_eq!(req.node_label.as_deref(), Some("gpu"));
+    }
+
+    #[test]
+    fn rejects_empty_and_workerless() {
+        assert!(JobSpec::from_conf(&Configuration::new()).is_err());
+        let only_ps = JobConfBuilder::new("x").instances(PS, 2).build();
+        assert!(JobSpec::from_conf(&only_ps).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_mode() {
+        let c = JobConfBuilder::new("x")
+            .instances(WORKER, 1)
+            .set("tony.train.mode", "chaotic")
+            .build();
+        assert!(JobSpec::from_conf(&c).is_err());
+    }
+
+    #[test]
+    fn xml_round_trip_preserves_spec() {
+        let conf = sample();
+        let xml = conf.to_xml();
+        let conf2 = Configuration::from_xml_str(&xml).unwrap();
+        let a = JobSpec::from_conf(&conf).unwrap();
+        let b = JobSpec::from_conf(&conf2).unwrap();
+        assert_eq!(a.task_types, b.task_types);
+        assert_eq!(a.train, b.train);
+    }
+
+    #[test]
+    fn total_resources() {
+        let spec = JobSpec::from_conf(&sample()).unwrap();
+        let total = spec.total_task_resources();
+        assert_eq!(total.memory_mb, 4 * 4096 + 2 * 2048);
+        assert_eq!(total.gpus, 4);
+    }
+
+    #[test]
+    fn evaluator_untracked_by_default() {
+        let c = JobConfBuilder::new("x")
+            .instances(WORKER, 1)
+            .instances(EVALUATOR, 1)
+            .build();
+        let spec = JobSpec::from_conf(&c).unwrap();
+        assert!(!spec.task_type(EVALUATOR).unwrap().tracked);
+        assert_eq!(spec.tracked_tasks(), 1);
+    }
+}

@@ -1,0 +1,89 @@
+//! Human-readable byte quantities ("4g", "2048m") as used by tony.xml
+//! resource settings, mirroring Hadoop's configuration conventions.
+
+/// Parse "512", "512k", "64m", "4g", "1t" (case-insensitive) into bytes.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.chars().last().unwrap().to_ascii_lowercase() {
+        'k' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' => (&s[..s.len() - 1], 1u64 << 30),
+        't' => (&s[..s.len() - 1], 1u64 << 40),
+        c if c.is_ascii_digit() => (s, 1),
+        _ => return None,
+    };
+    let num = num.trim();
+    if let Ok(v) = num.parse::<u64>() {
+        return v.checked_mul(mult);
+    }
+    // Accept decimals like "1.5g" (format_size emits these).
+    let v: f64 = num.parse().ok()?;
+    if !(v.is_finite() && v >= 0.0) {
+        return None;
+    }
+    Some((v * mult as f64).round() as u64)
+}
+
+/// Format bytes with the largest exact-ish unit, e.g. 4294967296 -> "4.0g".
+pub fn format_size(bytes: u64) -> String {
+    const UNITS: [(&str, u64); 4] =
+        [("t", 1 << 40), ("g", 1 << 30), ("m", 1 << 20), ("k", 1 << 10)];
+    for (suffix, mult) in UNITS {
+        if bytes >= mult {
+            return format!("{:.1}{}", bytes as f64 / mult as f64, suffix);
+        }
+    }
+    format!("{bytes}b")
+}
+
+/// Format a duration in ms as "1.2s" / "340ms" / "2m03s".
+pub fn format_ms(ms: u64) -> String {
+    if ms >= 60_000 {
+        format!("{}m{:02}s", ms / 60_000, (ms % 60_000) / 1000)
+    } else if ms >= 1000 {
+        format!("{:.1}s", ms as f64 / 1000.0)
+    } else {
+        format!("{ms}ms")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("2k"), Some(2048));
+        assert_eq!(parse_size("64m"), Some(64 << 20));
+        assert_eq!(parse_size("4G"), Some(4 << 30));
+        assert_eq!(parse_size("1t"), Some(1 << 40));
+        assert_eq!(parse_size(""), None);
+        assert_eq!(parse_size("x"), None);
+        assert_eq!(parse_size("4x"), None);
+    }
+
+    #[test]
+    fn format_sizes() {
+        assert_eq!(format_size(512), "512b");
+        assert_eq!(format_size(4 << 30), "4.0g");
+        assert_eq!(format_size(1536), "1.5k");
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(format_ms(340), "340ms");
+        assert_eq!(format_ms(1200), "1.2s");
+        assert_eq!(format_ms(123_000), "2m03s");
+    }
+
+    #[test]
+    fn size_round_trippish() {
+        for v in [1u64 << 10, 1 << 20, 1 << 30] {
+            assert_eq!(parse_size(&format_size(v)).unwrap(), v);
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! `host:port` endpoints as passed around in cluster specs.
+
+use std::fmt;
+use std::net::SocketAddr;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct HostPort {
+    pub host: String,
+    pub port: u16,
+}
+
+impl HostPort {
+    pub fn new(host: impl Into<String>, port: u16) -> Self {
+        HostPort { host: host.into(), port }
+    }
+
+    pub fn localhost(port: u16) -> Self {
+        HostPort::new("127.0.0.1", port)
+    }
+
+    pub fn parse(s: &str) -> Option<HostPort> {
+        let (h, p) = s.rsplit_once(':')?;
+        if h.is_empty() {
+            return None;
+        }
+        Some(HostPort { host: h.to_string(), port: p.parse().ok()? })
+    }
+
+    pub fn from_addr(a: SocketAddr) -> Self {
+        HostPort { host: a.ip().to_string(), port: a.port() }
+    }
+}
+
+impl fmt::Display for HostPort {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.host, self.port)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let hp = HostPort::localhost(8080);
+        assert_eq!(hp.to_string(), "127.0.0.1:8080");
+        assert_eq!(HostPort::parse("127.0.0.1:8080"), Some(hp));
+        assert_eq!(HostPort::parse("nohost"), None);
+        assert_eq!(HostPort::parse(":80"), None);
+        assert_eq!(HostPort::parse("h:notaport"), None);
+    }
+}

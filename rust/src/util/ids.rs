@@ -1,0 +1,106 @@
+//! Cluster entity identifiers, modeled on YARN's id scheme:
+//! `application_<clusterTs>_<seq>`, `container_<appSeq>_<seq>`, plus TonY
+//! task ids `<jobtype>:<index>` (e.g. `worker:0`, `ps:1`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide monotonic sequence (cheap unique ids inside the sim).
+static GLOBAL_SEQ: AtomicU64 = AtomicU64::new(1);
+
+pub fn next_seq() -> u64 {
+    GLOBAL_SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ApplicationId {
+    pub cluster_ts: u64,
+    pub seq: u64,
+}
+
+impl fmt::Display for ApplicationId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "application_{}_{:04}", self.cluster_ts, self.seq)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContainerId {
+    pub app: ApplicationId,
+    pub seq: u64,
+}
+
+impl fmt::Display for ContainerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "container_{}_{:04}_{:06}", self.app.cluster_ts, self.app.seq, self.seq)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node{:03}", self.0)
+    }
+}
+
+/// A TonY task identity: job type ("worker", "ps", "chief", "evaluator")
+/// plus index within the type — exactly how TF_CONFIG addresses tasks.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId {
+    pub job_type: String,
+    pub index: u32,
+}
+
+impl TaskId {
+    pub fn new(job_type: impl Into<String>, index: u32) -> Self {
+        TaskId { job_type: job_type.into(), index }
+    }
+
+    pub fn parse(s: &str) -> Option<TaskId> {
+        let (ty, idx) = s.rsplit_once(':')?;
+        if ty.is_empty() {
+            return None;
+        }
+        Some(TaskId { job_type: ty.to_string(), index: idx.parse().ok()? })
+    }
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.job_type, self.index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let app = ApplicationId { cluster_ts: 1700000000, seq: 12 };
+        assert_eq!(app.to_string(), "application_1700000000_0012");
+        let c = ContainerId { app, seq: 3 };
+        assert_eq!(c.to_string(), "container_1700000000_0012_000003");
+        assert_eq!(NodeId(5).to_string(), "node005");
+    }
+
+    #[test]
+    fn task_id_round_trip() {
+        let t = TaskId::new("worker", 3);
+        assert_eq!(t.to_string(), "worker:3");
+        assert_eq!(TaskId::parse("worker:3"), Some(t));
+        assert_eq!(TaskId::parse("ps:0"), Some(TaskId::new("ps", 0)));
+        assert_eq!(TaskId::parse("nope"), None);
+        assert_eq!(TaskId::parse(":1"), None);
+        assert_eq!(TaskId::parse("worker:x"), None);
+    }
+
+    #[test]
+    fn seq_monotonic() {
+        let a = next_seq();
+        let b = next_seq();
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal leveled logger with per-component tags.
+//!
+//! Every daemon in the simulated cluster (RM, NMs, AM, TaskExecutors, PS
+//! and worker tasks) logs through this so integration tests and the
+//! examples produce a single interleaved, timestamped trace — the moral
+//! equivalent of the per-container log files a YARN cluster would give
+//! you, which the TonY portal links back to (paper §2.2).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Trace => "TRACE",
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO",
+            Level::Warn => "WARN",
+            Level::Error => "ERROR",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "trace" => Some(Level::Trace),
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+static MIN_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+/// Optional capture sink used by tests to assert on log output.
+static CAPTURE: OnceLock<Mutex<Option<Vec<String>>>> = OnceLock::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
+
+/// Initialize from `TONY_LOG` (trace|debug|info|warn|error); idempotent.
+pub fn init_from_env() {
+    start();
+    if let Ok(v) = std::env::var("TONY_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+pub fn set_level(l: Level) {
+    MIN_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match MIN_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Trace,
+        1 => Level::Debug,
+        2 => Level::Info,
+        3 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l >= level()
+}
+
+/// Begin capturing log lines (in addition to stderr). Tests only.
+pub fn capture_start() {
+    let m = CAPTURE.get_or_init(|| Mutex::new(None));
+    *m.lock().unwrap() = Some(Vec::new());
+}
+
+/// Stop capturing and return the captured lines.
+pub fn capture_take() -> Vec<String> {
+    let m = CAPTURE.get_or_init(|| Mutex::new(None));
+    m.lock().unwrap().take().unwrap_or_default()
+}
+
+pub fn log(l: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let elapsed = start().elapsed();
+    let line = format!(
+        "[{:>9.3}s {:5} {}] {}",
+        elapsed.as_secs_f64(),
+        l.as_str(),
+        component,
+        msg
+    );
+    if let Some(m) = CAPTURE.get() {
+        if let Some(buf) = m.lock().unwrap().as_mut() {
+            buf.push(line.clone());
+        }
+    }
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{line}");
+}
+
+#[macro_export]
+macro_rules! tlog {
+    ($lvl:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($lvl, $comp, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! tinfo {
+    ($comp:expr, $($arg:tt)*) => { $crate::tlog!($crate::util::logging::Level::Info, $comp, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! twarn {
+    ($comp:expr, $($arg:tt)*) => { $crate::tlog!($crate::util::logging::Level::Warn, $comp, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! terror {
+    ($comp:expr, $($arg:tt)*) => { $crate::tlog!($crate::util::logging::Level::Error, $comp, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! tdebug {
+    ($comp:expr, $($arg:tt)*) => { $crate::tlog!($crate::util::logging::Level::Debug, $comp, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+        assert!(Level::Trace < Level::Error);
+    }
+
+    #[test]
+    fn capture_records_lines() {
+        let old = level();
+        set_level(Level::Info);
+        capture_start();
+        crate::tinfo!("test", "hello {}", 42);
+        let lines = capture_take();
+        set_level(old);
+        assert!(lines.iter().any(|l| l.contains("hello 42")), "{lines:?}");
+    }
+}

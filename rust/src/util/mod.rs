@@ -1,0 +1,16 @@
+//! Small shared utilities: logging, clocks, deterministic PRNG, id
+//! generation, host:port parsing, human-readable byte sizes.
+//!
+//! This repo builds fully offline on `std` + the vendored `xla`/`anyhow`
+//! crates only, so these are hand-rolled rather than pulled from crates.io.
+
+pub mod bytes;
+pub mod clock;
+pub mod hostport;
+pub mod ids;
+pub mod logging;
+pub mod prng;
+
+pub use clock::{Clock, ManualClock, SystemClock};
+pub use hostport::HostPort;
+pub use prng::SplitMix64;

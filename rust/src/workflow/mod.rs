@@ -1,0 +1,292 @@
+//! Workflow engine (the Azkaban role, paper §2.1): DAG of jobs with
+//! dependencies, job types, per-job status, and retries — plus the TonY
+//! job-type plugin so a distributed training job slots into a larger
+//! pipeline next to data-prep and deploy steps, exactly as §2.1
+//! describes ("lets users add distributed ML jobs in the same workflow
+//! alongside Spark, MapReduce, and other jobs").
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::client::TonyClient;
+use crate::tinfo;
+use crate::xmlconf::Configuration;
+use crate::yarn::{AppState, ResourceManager};
+
+/// Status of one workflow node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+    Skipped,
+}
+
+/// What a workflow node runs.  `Command` stands in for the Spark /
+/// MapReduce / shell job types Azkaban hosts; `Tony` is our plugin.
+pub enum JobType {
+    /// Arbitrary in-process work (the data-prep / deploy stand-in).
+    Command(Box<dyn FnMut() -> Result<()> + Send>),
+    /// A TonY distributed-training job (the plugin of §2.1).
+    Tony { conf: Configuration, preset_dir: std::path::PathBuf },
+}
+
+pub struct JobNode {
+    pub name: String,
+    pub job_type: JobType,
+    pub deps: Vec<String>,
+    pub retries: u32,
+}
+
+/// Execution record for reporting.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub name: String,
+    pub status: JobStatus,
+    pub attempts: u32,
+    pub duration_ms: u64,
+    pub detail: String,
+}
+
+pub struct Workflow {
+    pub name: String,
+    nodes: Vec<JobNode>,
+}
+
+impl Workflow {
+    pub fn new(name: &str) -> Workflow {
+        Workflow { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    pub fn add(&mut self, node: JobNode) -> &mut Self {
+        self.nodes.push(node);
+        self
+    }
+
+    pub fn add_command(
+        &mut self,
+        name: &str,
+        deps: &[&str],
+        f: impl FnMut() -> Result<()> + Send + 'static,
+    ) -> &mut Self {
+        self.add(JobNode {
+            name: name.to_string(),
+            job_type: JobType::Command(Box::new(f)),
+            deps: deps.iter().map(|s| s.to_string()).collect(),
+            retries: 0,
+        })
+    }
+
+    pub fn add_tony_job(
+        &mut self,
+        name: &str,
+        deps: &[&str],
+        conf: Configuration,
+        preset_dir: &std::path::Path,
+    ) -> &mut Self {
+        self.add(JobNode {
+            name: name.to_string(),
+            job_type: JobType::Tony { conf, preset_dir: preset_dir.to_path_buf() },
+            deps: deps.iter().map(|s| s.to_string()).collect(),
+            retries: 0,
+        })
+    }
+
+    /// Validate the DAG: unique names, known deps, acyclic.
+    pub fn validate(&self) -> Result<Vec<String>> {
+        let mut names = BTreeSet::new();
+        for n in &self.nodes {
+            if !names.insert(n.name.clone()) {
+                bail!("duplicate job name '{}'", n.name);
+            }
+        }
+        for n in &self.nodes {
+            for d in &n.deps {
+                if !names.contains(d) {
+                    bail!("job '{}' depends on unknown job '{d}'", n.name);
+                }
+            }
+        }
+        // Kahn topological sort.
+        let mut indeg: BTreeMap<&str, usize> =
+            self.nodes.iter().map(|n| (n.name.as_str(), n.deps.len())).collect();
+        let mut order = Vec::new();
+        let mut ready: Vec<&str> = indeg
+            .iter()
+            .filter(|(_, d)| **d == 0)
+            .map(|(n, _)| *n)
+            .collect();
+        while let Some(n) = ready.pop() {
+            order.push(n.to_string());
+            for m in &self.nodes {
+                if m.deps.iter().any(|d| d == n) {
+                    let e = indeg.get_mut(m.name.as_str()).unwrap();
+                    *e -= 1;
+                    if *e == 0 {
+                        ready.push(&m.name);
+                    }
+                }
+            }
+        }
+        if order.len() != self.nodes.len() {
+            bail!("workflow '{}' has a dependency cycle", self.name);
+        }
+        Ok(order)
+    }
+
+    /// Run the DAG to completion (sequential in topological order; a
+    /// failure marks all transitive dependents Skipped).
+    pub fn run(mut self, rm: &Arc<ResourceManager>, timeout: Duration) -> Result<Vec<JobRecord>> {
+        let order = self.validate()?;
+        let mut status: BTreeMap<String, JobStatus> =
+            order.iter().map(|n| (n.clone(), JobStatus::Pending)).collect();
+        let mut records = Vec::new();
+        tinfo!("workflow", "'{}': {} jobs, order {:?}", self.name, order.len(), order);
+
+        for name in &order {
+            let node = self.nodes.iter_mut().find(|n| n.name == *name).unwrap();
+            // Dependency gate.
+            let blocked = node
+                .deps
+                .iter()
+                .any(|d| status[d] != JobStatus::Succeeded);
+            if blocked {
+                status.insert(name.clone(), JobStatus::Skipped);
+                records.push(JobRecord {
+                    name: name.clone(),
+                    status: JobStatus::Skipped,
+                    attempts: 0,
+                    duration_ms: 0,
+                    detail: "upstream failed".to_string(),
+                });
+                continue;
+            }
+            status.insert(name.clone(), JobStatus::Running);
+            let started = std::time::Instant::now();
+            let mut attempts = 0;
+            let mut last_err = String::new();
+            let mut ok = false;
+            while attempts <= node.retries {
+                attempts += 1;
+                let result: Result<()> = match &mut node.job_type {
+                    JobType::Command(f) => f(),
+                    JobType::Tony { conf, preset_dir } => {
+                        let client = TonyClient::new(rm.clone());
+                        let handle = client.submit(conf, preset_dir)?;
+                        let report = handle.wait(timeout)?;
+                        if report.state == AppState::Finished {
+                            Ok(())
+                        } else {
+                            Err(anyhow!("tony job failed: {}", report.diagnostics))
+                        }
+                    }
+                };
+                match result {
+                    Ok(()) => {
+                        ok = true;
+                        break;
+                    }
+                    Err(e) => last_err = format!("{e:#}"),
+                }
+            }
+            let st = if ok { JobStatus::Succeeded } else { JobStatus::Failed };
+            status.insert(name.clone(), st);
+            tinfo!("workflow", "'{}': job '{}' -> {:?}", self.name, name, st);
+            records.push(JobRecord {
+                name: name.clone(),
+                status: st,
+                attempts,
+                duration_ms: started.elapsed().as_millis() as u64,
+                detail: if ok { String::new() } else { last_err },
+            });
+        }
+        Ok(records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yarn::Resource;
+
+    fn rm() -> Arc<ResourceManager> {
+        ResourceManager::start_uniform(2, Resource::new(4096, 4, 0))
+    }
+
+    #[test]
+    fn linear_dag_runs_in_order() {
+        let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut wf = Workflow::new("linear");
+        for (name, dep) in [("a", vec![]), ("b", vec!["a"]), ("c", vec!["b"])] {
+            let log = log.clone();
+            let n = name.to_string();
+            wf.add_command(name, &dep, move || {
+                log.lock().unwrap().push(n.clone());
+                Ok(())
+            });
+        }
+        let records = wf.run(&rm(), Duration::from_secs(5)).unwrap();
+        assert!(records.iter().all(|r| r.status == JobStatus::Succeeded));
+        assert_eq!(*log.lock().unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn failure_skips_dependents() {
+        let mut wf = Workflow::new("skippy");
+        wf.add_command("prep", &[], || Ok(()));
+        wf.add_command("bad", &["prep"], || anyhow::bail!("boom"));
+        wf.add_command("train", &["bad"], || Ok(()));
+        wf.add_command("independent", &["prep"], || Ok(()));
+        let records = wf.run(&rm(), Duration::from_secs(5)).unwrap();
+        let by_name: BTreeMap<_, _> =
+            records.iter().map(|r| (r.name.clone(), r.status)).collect();
+        assert_eq!(by_name["prep"], JobStatus::Succeeded);
+        assert_eq!(by_name["bad"], JobStatus::Failed);
+        assert_eq!(by_name["train"], JobStatus::Skipped);
+        assert_eq!(by_name["independent"], JobStatus::Succeeded);
+    }
+
+    #[test]
+    fn retries_work() {
+        let attempts = Arc::new(std::sync::Mutex::new(0));
+        let mut wf = Workflow::new("retry");
+        let a = attempts.clone();
+        wf.add(JobNode {
+            name: "flaky".to_string(),
+            job_type: JobType::Command(Box::new(move || {
+                let mut n = a.lock().unwrap();
+                *n += 1;
+                if *n < 3 {
+                    anyhow::bail!("transient");
+                }
+                Ok(())
+            })),
+            deps: vec![],
+            retries: 3,
+        });
+        let records = wf.run(&rm(), Duration::from_secs(5)).unwrap();
+        assert_eq!(records[0].status, JobStatus::Succeeded);
+        assert_eq!(records[0].attempts, 3);
+    }
+
+    #[test]
+    fn cycle_and_unknown_dep_detected() {
+        let mut wf = Workflow::new("cycle");
+        wf.add_command("a", &["b"], || Ok(()));
+        wf.add_command("b", &["a"], || Ok(()));
+        assert!(wf.validate().is_err());
+
+        let mut wf = Workflow::new("unknown");
+        wf.add_command("a", &["ghost"], || Ok(()));
+        assert!(wf.validate().is_err());
+
+        let mut wf = Workflow::new("dup");
+        wf.add_command("a", &[], || Ok(()));
+        wf.add_command("a", &[], || Ok(()));
+        assert!(wf.validate().is_err());
+    }
+}

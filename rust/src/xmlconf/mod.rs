@@ -1,0 +1,618 @@
+//! Hadoop-style XML configuration (`tony.xml`), with our own XML parser.
+//!
+//! Paper §2.1: "Users describe in an XML file the resources required by
+//! their job."  This module reproduces the `Configuration` idiom from
+//! Hadoop/TonY: `<configuration><property><name>..</name><value>..</value>
+//! </property>...</configuration>`, with typed getters, defaults, and
+//! `${var}` interpolation against previously-set keys.
+//!
+//! The parser is a deliberately small subset of XML 1.0 sufficient for
+//! configuration files: elements, attributes, text, comments, CDATA, and
+//! the five predefined entities.  No DTDs, no processing instructions
+//! beyond the `<?xml ...?>` prolog.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+// ---------------------------------------------------------------------
+// XML tree
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Element {
+    pub name: String,
+    pub attrs: BTreeMap<String, String>,
+    pub children: Vec<Node>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    Elem(Element),
+    Text(String),
+}
+
+impl Element {
+    pub fn new(name: impl Into<String>) -> Element {
+        Element { name: name.into(), attrs: BTreeMap::new(), children: Vec::new() }
+    }
+
+    /// Concatenated text content of this element (direct text children).
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for c in &self.children {
+            if let Node::Text(t) = c {
+                out.push_str(t);
+            }
+        }
+        out
+    }
+
+    pub fn child(&self, name: &str) -> Option<&Element> {
+        self.children.iter().find_map(|c| match c {
+            Node::Elem(e) if e.name == name => Some(e),
+            _ => None,
+        })
+    }
+
+    pub fn children_named<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a Element> {
+        self.children.iter().filter_map(move |c| match c {
+            Node::Elem(e) if e.name == name => Some(e),
+            _ => None,
+        })
+    }
+
+    pub fn add_text_child(&mut self, name: &str, text: &str) {
+        let mut e = Element::new(name);
+        e.children.push(Node::Text(text.to_string()));
+        self.children.push(Node::Elem(e));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("<?xml version=\"1.0\"?>\n");
+        self.write(&mut out, 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent);
+        out.push_str(&pad);
+        out.push('<');
+        out.push_str(&self.name);
+        for (k, v) in &self.attrs {
+            out.push_str(&format!(" {}=\"{}\"", k, escape(v)));
+        }
+        if self.children.is_empty() {
+            out.push_str("/>\n");
+            return;
+        }
+        let only_text = self.children.iter().all(|c| matches!(c, Node::Text(_)));
+        out.push('>');
+        if only_text {
+            out.push_str(&escape(&self.text()));
+        } else {
+            out.push('\n');
+            for c in &self.children {
+                match c {
+                    Node::Elem(e) => e.write(out, indent + 1),
+                    Node::Text(t) if t.trim().is_empty() => {}
+                    Node::Text(t) => {
+                        out.push_str(&"  ".repeat(indent + 1));
+                        out.push_str(&escape(t.trim()));
+                        out.push('\n');
+                    }
+                }
+            }
+            out.push_str(&pad);
+        }
+        out.push_str(&format!("</{}>\n", self.name));
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+        .replace('"', "&quot;")
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct XmlError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for XmlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xml error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for XmlError {}
+
+pub fn parse_xml(s: &str) -> Result<Element, XmlError> {
+    let mut p = XParser { b: s.as_bytes(), i: 0 };
+    p.skip_misc();
+    let root = p.element()?;
+    p.skip_misc();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing content after root element"));
+    }
+    Ok(root)
+}
+
+struct XParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> XParser<'a> {
+    fn err(&self, msg: &str) -> XmlError {
+        XmlError { pos: self.i, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn starts(&self, s: &str) -> bool {
+        self.b[self.i..].starts_with(s.as_bytes())
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    /// Skip whitespace, comments, and the <?xml?> prolog between elements.
+    fn skip_misc(&mut self) {
+        loop {
+            self.skip_ws();
+            if self.starts("<!--") {
+                if let Some(end) = find(self.b, self.i + 4, b"-->") {
+                    self.i = end + 3;
+                    continue;
+                }
+                self.i = self.b.len();
+                return;
+            }
+            if self.starts("<?") {
+                if let Some(end) = find(self.b, self.i + 2, b"?>") {
+                    self.i = end + 2;
+                    continue;
+                }
+                self.i = self.b.len();
+                return;
+            }
+            return;
+        }
+    }
+
+    fn name(&mut self) -> Result<String, XmlError> {
+        let start = self.i;
+        while self
+            .peek()
+            .map(|c| c.is_ascii_alphanumeric() || matches!(c, b'_' | b'-' | b'.' | b':'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(self.err("expected name"));
+        }
+        Ok(std::str::from_utf8(&self.b[start..self.i]).unwrap().to_string())
+    }
+
+    fn element(&mut self) -> Result<Element, XmlError> {
+        if self.peek() != Some(b'<') {
+            return Err(self.err("expected '<'"));
+        }
+        self.i += 1;
+        let name = self.name()?;
+        let mut elem = Element::new(&name);
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'/') => {
+                    self.i += 1;
+                    if self.peek() != Some(b'>') {
+                        return Err(self.err("expected '>' after '/'"));
+                    }
+                    self.i += 1;
+                    return Ok(elem); // self-closing
+                }
+                Some(b'>') => {
+                    self.i += 1;
+                    break;
+                }
+                Some(_) => {
+                    let k = self.name()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b'=') {
+                        return Err(self.err("expected '=' in attribute"));
+                    }
+                    self.i += 1;
+                    self.skip_ws();
+                    let quote = self.peek().ok_or_else(|| self.err("eof in attribute"))?;
+                    if quote != b'"' && quote != b'\'' {
+                        return Err(self.err("expected quoted attribute value"));
+                    }
+                    self.i += 1;
+                    let start = self.i;
+                    while self.peek().map(|c| c != quote).unwrap_or(false) {
+                        self.i += 1;
+                    }
+                    if self.peek() != Some(quote) {
+                        return Err(self.err("unterminated attribute value"));
+                    }
+                    let raw = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    elem.attrs.insert(k, unescape(raw));
+                    self.i += 1;
+                }
+                None => return Err(self.err("eof in tag")),
+            }
+        }
+        // Content until matching close tag.
+        loop {
+            if self.starts("<!--") {
+                if let Some(end) = find(self.b, self.i + 4, b"-->") {
+                    self.i = end + 3;
+                    continue;
+                }
+                return Err(self.err("unterminated comment"));
+            }
+            if self.starts("<![CDATA[") {
+                let start = self.i + 9;
+                if let Some(end) = find(self.b, start, b"]]>") {
+                    let txt = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    elem.children.push(Node::Text(txt.to_string()));
+                    self.i = end + 3;
+                    continue;
+                }
+                return Err(self.err("unterminated CDATA"));
+            }
+            if self.starts("</") {
+                self.i += 2;
+                let close = self.name()?;
+                if close != name {
+                    return Err(self.err(&format!("mismatched close tag: <{name}> vs </{close}>")));
+                }
+                self.skip_ws();
+                if self.peek() != Some(b'>') {
+                    return Err(self.err("expected '>' in close tag"));
+                }
+                self.i += 1;
+                return Ok(elem);
+            }
+            match self.peek() {
+                Some(b'<') => {
+                    elem.children.push(Node::Elem(self.element()?));
+                }
+                Some(_) => {
+                    let start = self.i;
+                    while self.peek().map(|c| c != b'<').unwrap_or(false) {
+                        self.i += 1;
+                    }
+                    let raw = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    if !raw.trim().is_empty() {
+                        elem.children.push(Node::Text(unescape(raw)));
+                    }
+                }
+                None => return Err(self.err("eof inside element")),
+            }
+        }
+    }
+}
+
+fn find(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    if from > hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(amp) = rest.find('&') {
+        out.push_str(&rest[..amp]);
+        rest = &rest[amp..];
+        let semi = match rest.find(';') {
+            Some(p) => p,
+            None => {
+                out.push_str(rest);
+                return out;
+            }
+        };
+        let ent = &rest[1..semi];
+        match ent {
+            "amp" => out.push('&'),
+            "lt" => out.push('<'),
+            "gt" => out.push('>'),
+            "quot" => out.push('"'),
+            "apos" => out.push('\''),
+            _ if ent.starts_with("#x") || ent.starts_with("#X") => {
+                if let Ok(v) = u32::from_str_radix(&ent[2..], 16) {
+                    if let Some(c) = char::from_u32(v) {
+                        out.push(c);
+                    }
+                }
+            }
+            _ if ent.starts_with('#') => {
+                if let Ok(v) = ent[1..].parse::<u32>() {
+                    if let Some(c) = char::from_u32(v) {
+                        out.push(c);
+                    }
+                }
+            }
+            _ => {
+                // Unknown entity: keep verbatim.
+                out.push_str(&rest[..=semi]);
+            }
+        }
+        rest = &rest[semi + 1..];
+    }
+    out.push_str(rest);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Hadoop-style Configuration
+// ---------------------------------------------------------------------
+
+/// Ordered name/value configuration with typed getters and `${key}`
+/// variable interpolation, mirroring `org.apache.hadoop.conf.Configuration`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Configuration {
+    values: BTreeMap<String, String>,
+}
+
+impl Configuration {
+    pub fn new() -> Configuration {
+        Configuration::default()
+    }
+
+    pub fn set(&mut self, key: &str, value: impl Into<String>) -> &mut Self {
+        self.values.insert(key.to_string(), value.into());
+        self
+    }
+
+    pub fn get_raw(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Get with `${var}` interpolation (up to 8 levels, like Hadoop's 20).
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.get_raw(key).map(|v| self.interpolate(v, 8))
+    }
+
+    fn interpolate(&self, s: &str, depth: u32) -> String {
+        if depth == 0 || !s.contains("${") {
+            return s.to_string();
+        }
+        let mut out = String::new();
+        let mut rest = s;
+        while let Some(start) = rest.find("${") {
+            out.push_str(&rest[..start]);
+            match rest[start + 2..].find('}') {
+                Some(end) => {
+                    let var = &rest[start + 2..start + 2 + end];
+                    match self.get_raw(var) {
+                        Some(v) => out.push_str(&self.interpolate(v, depth - 1)),
+                        None => out.push_str(&format!("${{{var}}}")),
+                    }
+                    rest = &rest[start + 2 + end + 1..];
+                }
+                None => {
+                    out.push_str(rest);
+                    return out;
+                }
+            }
+        }
+        out.push_str(rest);
+        out
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key).as_deref().map(str::trim) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    /// Parse a byte-size value like "4g" (see `util::bytes`).
+    pub fn get_size(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| crate::util::bytes::parse_size(&v))
+            .unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Keys beginning with a prefix, e.g. every `tony.worker.*` setting.
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = (&'a str, &'a str)> {
+        self.values
+            .iter()
+            .filter(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Merge another configuration over this one (other wins).
+    pub fn merge(&mut self, other: &Configuration) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn from_xml_str(s: &str) -> Result<Configuration, XmlError> {
+        let root = parse_xml(s)?;
+        if root.name != "configuration" {
+            return Err(XmlError {
+                pos: 0,
+                msg: format!("root element must be <configuration>, got <{}>", root.name),
+            });
+        }
+        let mut conf = Configuration::new();
+        for prop in root.children_named("property") {
+            let name = prop.child("name").map(|e| e.text());
+            let value = prop.child("value").map(|e| e.text());
+            match (name, value) {
+                (Some(n), Some(v)) if !n.trim().is_empty() => {
+                    conf.set(n.trim(), v.trim().to_string());
+                }
+                _ => {
+                    return Err(XmlError {
+                        pos: 0,
+                        msg: "property requires <name> and <value>".to_string(),
+                    })
+                }
+            }
+        }
+        Ok(conf)
+    }
+
+    pub fn from_xml_file(path: &std::path::Path) -> anyhow::Result<Configuration> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Configuration::from_xml_str(&text)?)
+    }
+
+    pub fn to_xml(&self) -> String {
+        let mut root = Element::new("configuration");
+        for (k, v) in &self.values {
+            let mut prop = Element::new("property");
+            prop.add_text_child("name", k);
+            prop.add_text_child("value", v);
+            root.children.push(Node::Elem(prop));
+        }
+        root.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"<?xml version="1.0"?>
+<!-- a tony job file -->
+<configuration>
+  <property>
+    <name>tony.worker.instances</name>
+    <value>4</value>
+  </property>
+  <property>
+    <name>tony.worker.memory</name>
+    <value>4g</value>
+  </property>
+  <property>
+    <name>tony.application.name</name>
+    <value>mnist &amp; friends</value>
+  </property>
+</configuration>"#;
+
+    #[test]
+    fn parse_sample_conf() {
+        let c = Configuration::from_xml_str(SAMPLE).unwrap();
+        assert_eq!(c.get_u32("tony.worker.instances", 0), 4);
+        assert_eq!(c.get_size("tony.worker.memory", 0), 4 << 30);
+        assert_eq!(c.get("tony.application.name").unwrap(), "mnist & friends");
+    }
+
+    #[test]
+    fn xml_round_trip() {
+        let c = Configuration::from_xml_str(SAMPLE).unwrap();
+        let xml = c.to_xml();
+        let c2 = Configuration::from_xml_str(&xml).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn interpolation() {
+        let mut c = Configuration::new();
+        c.set("base.dir", "/data");
+        c.set("out.dir", "${base.dir}/out");
+        c.set("deep", "${out.dir}/x");
+        assert_eq!(c.get("deep").unwrap(), "/data/out/x");
+        c.set("cycle", "${cycle}");
+        // Cycles terminate (depth-bounded), leaving the unresolved var.
+        assert!(c.get("cycle").unwrap().contains("cycle"));
+    }
+
+    #[test]
+    fn missing_var_left_verbatim() {
+        let mut c = Configuration::new();
+        c.set("a", "${nope}/x");
+        assert_eq!(c.get("a").unwrap(), "${nope}/x");
+    }
+
+    #[test]
+    fn attributes_and_self_closing() {
+        let e = parse_xml(r#"<a x="1" y='2'><b/><c>t</c></a>"#).unwrap();
+        assert_eq!(e.attrs["x"], "1");
+        assert_eq!(e.attrs["y"], "2");
+        assert!(e.child("b").unwrap().children.is_empty());
+        assert_eq!(e.child("c").unwrap().text(), "t");
+    }
+
+    #[test]
+    fn cdata_and_entities() {
+        let e = parse_xml("<a><![CDATA[1 < 2 & 3]]></a>").unwrap();
+        assert_eq!(e.text(), "1 < 2 & 3");
+        let e = parse_xml("<a>&#65;&#x42;&amp;</a>").unwrap();
+        assert_eq!(e.text(), "AB&");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_xml("<a><b></a>").is_err());
+        assert!(parse_xml("<a>").is_err());
+        assert!(parse_xml("<a></a><b></b>").is_err());
+        assert!(Configuration::from_xml_str("<notconf/>").is_err());
+        assert!(Configuration::from_xml_str(
+            "<configuration><property><name>x</name></property></configuration>"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn typed_getters_defaults() {
+        let c = Configuration::new();
+        assert_eq!(c.get_u64("missing", 7), 7);
+        assert!(c.get_bool("missing", true));
+        let mut c = Configuration::new();
+        c.set("b", "yes");
+        assert!(c.get_bool("b", false));
+    }
+}

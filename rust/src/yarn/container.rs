@@ -1,0 +1,150 @@
+//! Containers: the unit of allocation and execution.
+//!
+//! A [`ContainerRequest`] is what an AM asks the RM for (priority,
+//! resources, optional node label — "high-memory", "gpu").  A granted
+//! [`Container`] names the node it landed on.  Launched container code
+//! receives a [`ContainerCtx`]: the simulated process environment (env
+//! map à la YARN's launch context + a kill flag standing in for SIGKILL).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::ids::{ApplicationId, ContainerId, NodeId};
+
+use super::resources::Resource;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ContainerRequest {
+    pub priority: u8,
+    pub resource: Resource,
+    /// Node-label expression; `None` targets the default (unlabeled)
+    /// partition, exactly like YARN's default node-label behaviour.
+    pub node_label: Option<String>,
+    /// How many containers of this shape.
+    pub count: u32,
+}
+
+impl ContainerRequest {
+    pub fn new(resource: Resource, count: u32) -> ContainerRequest {
+        ContainerRequest { priority: 1, resource, node_label: None, count }
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> ContainerRequest {
+        self.node_label = Some(label.into());
+        self
+    }
+
+    pub fn with_priority(mut self, p: u8) -> ContainerRequest {
+        self.priority = p;
+        self
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Container {
+    pub id: ContainerId,
+    pub app: ApplicationId,
+    pub node: NodeId,
+    pub resource: Resource,
+    pub priority: u8,
+}
+
+/// Terminal state of a container, mirroring YARN's ContainerExitStatus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitStatus {
+    Success,
+    /// Non-zero exit from the task process.
+    Failed(i32),
+    /// Killed by the framework (preemption / AM teardown).
+    Killed,
+    /// Lost because its node died.
+    NodeLost,
+}
+
+impl ExitStatus {
+    pub fn is_success(&self) -> bool {
+        matches!(self, ExitStatus::Success)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ContainerStatus {
+    pub id: ContainerId,
+    pub exit: ExitStatus,
+    pub diagnostics: String,
+}
+
+/// The simulated process environment a launched container runs with.
+#[derive(Clone)]
+pub struct ContainerCtx {
+    pub container: Container,
+    /// Launch-context environment variables (the AM sets the cluster spec
+    /// and task-specific config here — paper §2.2).
+    pub env: BTreeMap<String, String>,
+    kill: Arc<AtomicBool>,
+}
+
+impl ContainerCtx {
+    pub fn new(container: Container, env: BTreeMap<String, String>) -> ContainerCtx {
+        ContainerCtx { container, env, kill: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// The kill switch the NM flips on stop_container / node death.
+    pub fn kill_flag(&self) -> Arc<AtomicBool> {
+        self.kill.clone()
+    }
+
+    pub fn killed(&self) -> bool {
+        self.kill.load(Ordering::Relaxed)
+    }
+
+    pub fn env(&self, key: &str) -> Option<&str> {
+        self.env.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Code the AM hands to an NM to run inside a container (stands in for
+/// the container launch command).  Returns the process exit code.
+pub type Launchable = Box<dyn FnOnce(ContainerCtx) -> i32 + Send + 'static>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cid() -> Container {
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        Container {
+            id: ContainerId { app, seq: 1 },
+            app,
+            node: NodeId(0),
+            resource: Resource::new(1024, 1, 0),
+            priority: 1,
+        }
+    }
+
+    #[test]
+    fn request_builders() {
+        let r = ContainerRequest::new(Resource::new(2048, 2, 1), 4)
+            .with_label("gpu")
+            .with_priority(3);
+        assert_eq!(r.count, 4);
+        assert_eq!(r.node_label.as_deref(), Some("gpu"));
+        assert_eq!(r.priority, 3);
+    }
+
+    #[test]
+    fn ctx_kill_flag() {
+        let ctx = ContainerCtx::new(cid(), BTreeMap::new());
+        assert!(!ctx.killed());
+        ctx.kill_flag().store(true, Ordering::Relaxed);
+        assert!(ctx.killed());
+    }
+
+    #[test]
+    fn exit_status() {
+        assert!(ExitStatus::Success.is_success());
+        assert!(!ExitStatus::Failed(1).is_success());
+        assert!(!ExitStatus::NodeLost.is_success());
+    }
+}

@@ -1,0 +1,33 @@
+//! A faithful-in-structure Hadoop YARN simulator — the cluster scheduler
+//! substrate TonY negotiates with (paper §2.2).
+//!
+//! What is reproduced from YARN:
+//! - **ResourceManager (RM)**: application lifecycle (submit → AM launch →
+//!   AM registration → allocate heartbeats → finish), container
+//!   allocation/release protocol, completed-container notifications, node
+//!   tracking and failure propagation.
+//! - **CapacityScheduler**: hierarchical queues with capacity /
+//!   max-capacity fractions, FIFO within a queue, node-label partitions
+//!   (e.g. `gpu`, `high-memory`), heterogeneous resource requests
+//!   (memory / vcores / GPUs per ask — §2.2's GPU-workers + CPU-only-PS).
+//! - **NodeManagers (NM)**: per-node capacities, container start/stop,
+//!   liveness, failure injection (a killed node kills its containers and
+//!   the RM reports them lost to the owning AM).
+//!
+//! What is simulated: nodes are structs, containers are threads launched
+//! with a [`ContainerCtx`] whose kill-flag stands in for SIGKILL, and the
+//! client/AM protocols are method calls on `Arc<ResourceManager>` instead
+//! of Hadoop RPC.  The *protocol structure* — who asks whom for what, in
+//! which order, and what failure events propagate — matches YARN.
+
+pub mod container;
+pub mod node;
+pub mod resources;
+pub mod rm;
+pub mod scheduler;
+
+pub use container::{Container, ContainerCtx, ContainerRequest, ContainerStatus, ExitStatus};
+pub use node::{NodeHandle, NodeSpec};
+pub use resources::Resource;
+pub use rm::{AllocateResponse, AppReport, AppState, ResourceManager, SubmissionContext};
+pub use scheduler::{CapacityScheduler, QueueConf};

@@ -1,0 +1,259 @@
+//! NodeManager simulation: one struct per cluster node.
+//!
+//! Containers launch as named threads; `stop_container` flips the
+//! container's kill flag (the simulated SIGKILL — launched code is
+//! expected to poll it, which our TaskExecutors do on every heartbeat),
+//! and a watcher thread reports the exit status upward through the
+//! completion callback, standing in for the NM→RM status stream.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::util::ids::{ContainerId, NodeId};
+
+use super::container::{Container, ContainerCtx, ExitStatus, Launchable};
+use super::resources::Resource;
+
+/// Static description of a node.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub id: NodeId,
+    pub capacity: Resource,
+    pub label: Option<String>,
+}
+
+impl NodeSpec {
+    pub fn new(id: u32, capacity: Resource) -> NodeSpec {
+        NodeSpec { id: NodeId(id), capacity, label: None }
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> NodeSpec {
+        self.label = Some(label.into());
+        self
+    }
+}
+
+/// Callback invoked when a container's code returns (or is killed).
+pub type CompletionFn = Arc<dyn Fn(NodeId, ContainerId, ExitStatus) + Send + Sync>;
+
+struct Running {
+    kill: Arc<AtomicBool>,
+    resource: Resource,
+}
+
+/// Live node state: running containers + the alive bit.
+pub struct NodeHandle {
+    pub spec: NodeSpec,
+    alive: AtomicBool,
+    running: Mutex<HashMap<ContainerId, Running>>,
+    on_complete: CompletionFn,
+}
+
+impl NodeHandle {
+    pub fn new(spec: NodeSpec, on_complete: CompletionFn) -> NodeHandle {
+        NodeHandle {
+            spec,
+            alive: AtomicBool::new(true),
+            running: Mutex::new(HashMap::new()),
+            on_complete,
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    pub fn used(&self) -> Resource {
+        self.running
+            .lock()
+            .unwrap()
+            .values()
+            .fold(Resource::ZERO, |acc, r| acc + r.resource)
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.lock().unwrap().len()
+    }
+
+    /// Launch container code on this node.  The RM has already reserved
+    /// the capacity; this enforces the node-level invariant again as a
+    /// belt-and-braces check (a real NM refuses over-commit too).
+    pub fn start_container(
+        self: &Arc<Self>,
+        container: Container,
+        ctx: ContainerCtx,
+        launch: Launchable,
+    ) -> Result<()> {
+        if !self.is_alive() {
+            bail!("node {} is dead", self.spec.id);
+        }
+        let kill = ctx.kill_flag();
+        {
+            let mut running = self.running.lock().unwrap();
+            let used = running
+                .values()
+                .fold(Resource::ZERO, |acc, r| acc + r.resource);
+            if !(self.spec.capacity - used).fits(&container.resource) {
+                bail!(
+                    "node {} over-commit: capacity {}, used {}, asked {}",
+                    self.spec.id,
+                    self.spec.capacity,
+                    used,
+                    container.resource
+                );
+            }
+            running.insert(container.id, Running { kill: kill.clone(), resource: container.resource });
+        }
+        let node = self.clone();
+        let cid = container.id;
+        std::thread::Builder::new()
+            .name(format!("container-{cid}"))
+            .spawn(move || {
+                // A panic in task code is a crash of the "process", not of
+                // the NM: report exit 137 instead of leaking the container.
+                let code = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    launch(ctx)
+                }))
+                .unwrap_or(137);
+                let was_killed = kill.load(Ordering::Relaxed);
+                let node_dead = !node.is_alive();
+                node.running.lock().unwrap().remove(&cid);
+                let status = if node_dead {
+                    ExitStatus::NodeLost
+                } else if was_killed {
+                    ExitStatus::Killed
+                } else if code == 0 {
+                    ExitStatus::Success
+                } else {
+                    ExitStatus::Failed(code)
+                };
+                (node.on_complete)(node.spec.id, cid, status);
+            })
+            .expect("spawn container thread");
+        Ok(())
+    }
+
+    /// Ask the container to die (kill flag; container code polls it).
+    pub fn stop_container(&self, id: ContainerId) -> bool {
+        let running = self.running.lock().unwrap();
+        if let Some(r) = running.get(&id) {
+            r.kill.store(true, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Chaos: node dies.  All containers get their kill flag set and will
+    /// be reported as `NodeLost`.
+    pub fn kill_node(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+        let running = self.running.lock().unwrap();
+        for r in running.values() {
+            r.kill.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::ApplicationId;
+    use std::collections::BTreeMap;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn mk(cap: Resource) -> (Arc<NodeHandle>, mpsc::Receiver<(ContainerId, ExitStatus)>) {
+        let (tx, rx) = mpsc::channel();
+        let cb: CompletionFn = Arc::new(move |_n, c, s| {
+            let _ = tx.send((c, s));
+        });
+        (Arc::new(NodeHandle::new(NodeSpec::new(0, cap), cb)), rx)
+    }
+
+    fn container(seq: u64, r: Resource) -> Container {
+        let app = ApplicationId { cluster_ts: 9, seq: 1 };
+        Container { id: ContainerId { app, seq }, app, node: NodeId(0), resource: r, priority: 1 }
+    }
+
+    #[test]
+    fn run_to_success() {
+        let (node, rx) = mk(Resource::new(1024, 2, 0));
+        let c = container(1, Resource::new(512, 1, 0));
+        let ctx = ContainerCtx::new(c.clone(), BTreeMap::new());
+        node.start_container(c, ctx, Box::new(|_| 0)).unwrap();
+        let (cid, status) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(cid.seq, 1);
+        assert_eq!(status, ExitStatus::Success);
+        assert_eq!(node.running_count(), 0);
+    }
+
+    #[test]
+    fn nonzero_exit_is_failure() {
+        let (node, rx) = mk(Resource::new(1024, 2, 0));
+        let c = container(2, Resource::new(512, 1, 0));
+        let ctx = ContainerCtx::new(c.clone(), BTreeMap::new());
+        node.start_container(c, ctx, Box::new(|_| 3)).unwrap();
+        let (_, status) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(status, ExitStatus::Failed(3));
+    }
+
+    #[test]
+    fn stop_container_reports_killed() {
+        let (node, rx) = mk(Resource::new(1024, 2, 0));
+        let c = container(3, Resource::new(512, 1, 0));
+        let ctx = ContainerCtx::new(c.clone(), BTreeMap::new());
+        node.start_container(
+            c.clone(),
+            ctx,
+            Box::new(|ctx| {
+                while !ctx.killed() {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                1 // exit code irrelevant once killed
+            }),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(node.stop_container(c.id));
+        let (_, status) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(status, ExitStatus::Killed);
+    }
+
+    #[test]
+    fn node_kill_reports_node_lost() {
+        let (node, rx) = mk(Resource::new(1024, 2, 0));
+        let c = container(4, Resource::new(512, 1, 0));
+        let ctx = ContainerCtx::new(c.clone(), BTreeMap::new());
+        node.start_container(
+            c,
+            ctx,
+            Box::new(|ctx| {
+                while !ctx.killed() {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                0
+            }),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        node.kill_node();
+        let (_, status) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(status, ExitStatus::NodeLost);
+        // Dead node refuses new containers.
+        let c2 = container(5, Resource::new(128, 1, 0));
+        let ctx2 = ContainerCtx::new(c2.clone(), BTreeMap::new());
+        assert!(node.start_container(c2, ctx2, Box::new(|_| 0)).is_err());
+    }
+
+    #[test]
+    fn over_commit_refused() {
+        let (node, _rx) = mk(Resource::new(1024, 2, 0));
+        let c = container(6, Resource::new(2048, 1, 0));
+        let ctx = ContainerCtx::new(c.clone(), BTreeMap::new());
+        assert!(node.start_container(c, ctx, Box::new(|_| 0)).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Multi-dimensional container resources: memory, vcores, GPUs.
+//!
+//! The GPU dimension is what makes TonY's heterogeneous requests
+//! meaningful: worker containers ask for GPUs, parameter-server containers
+//! don't (paper §2.2), and the scheduler must track both without letting
+//! either dimension oversubscribe.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Resource {
+    pub memory_mb: u64,
+    pub vcores: u32,
+    pub gpus: u32,
+}
+
+impl Resource {
+    pub const ZERO: Resource = Resource { memory_mb: 0, vcores: 0, gpus: 0 };
+
+    pub fn new(memory_mb: u64, vcores: u32, gpus: u32) -> Resource {
+        Resource { memory_mb, vcores, gpus }
+    }
+
+    pub fn mem_cores(memory_mb: u64, vcores: u32) -> Resource {
+        Resource { memory_mb, vcores, gpus: 0 }
+    }
+
+    /// True iff every dimension of `other` fits inside `self`.
+    pub fn fits(&self, other: &Resource) -> bool {
+        other.memory_mb <= self.memory_mb
+            && other.vcores <= self.vcores
+            && other.gpus <= self.gpus
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Resource::ZERO
+    }
+
+    /// Dominant share of `self` within `total` (DRF-style scalarization;
+    /// used for queue utilization accounting).
+    pub fn dominant_share(&self, total: &Resource) -> f64 {
+        let mut share: f64 = 0.0;
+        if total.memory_mb > 0 {
+            share = share.max(self.memory_mb as f64 / total.memory_mb as f64);
+        }
+        if total.vcores > 0 {
+            share = share.max(self.vcores as f64 / total.vcores as f64);
+        }
+        if total.gpus > 0 {
+            share = share.max(self.gpus as f64 / total.gpus as f64);
+        }
+        share
+    }
+
+    pub fn checked_sub(&self, other: &Resource) -> Option<Resource> {
+        if !self.fits(other) {
+            return None;
+        }
+        Some(Resource {
+            memory_mb: self.memory_mb - other.memory_mb,
+            vcores: self.vcores - other.vcores,
+            gpus: self.gpus - other.gpus,
+        })
+    }
+}
+
+impl Add for Resource {
+    type Output = Resource;
+
+    fn add(self, o: Resource) -> Resource {
+        Resource {
+            memory_mb: self.memory_mb + o.memory_mb,
+            vcores: self.vcores + o.vcores,
+            gpus: self.gpus + o.gpus,
+        }
+    }
+}
+
+impl AddAssign for Resource {
+    fn add_assign(&mut self, o: Resource) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Resource {
+    type Output = Resource;
+
+    fn sub(self, o: Resource) -> Resource {
+        Resource {
+            memory_mb: self.memory_mb.saturating_sub(o.memory_mb),
+            vcores: self.vcores.saturating_sub(o.vcores),
+            gpus: self.gpus.saturating_sub(o.gpus),
+        }
+    }
+}
+
+impl SubAssign for Resource {
+    fn sub_assign(&mut self, o: Resource) {
+        *self = *self - o;
+    }
+}
+
+impl fmt::Display for Resource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<mem {}MB, {} vcores, {} gpus>", self.memory_mb, self.vcores, self.gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_checks_all_dimensions() {
+        let node = Resource::new(8192, 8, 2);
+        assert!(node.fits(&Resource::new(4096, 4, 1)));
+        assert!(node.fits(&node));
+        assert!(!node.fits(&Resource::new(9000, 1, 0)));
+        assert!(!node.fits(&Resource::new(1024, 9, 0)));
+        assert!(!node.fits(&Resource::new(1024, 1, 3)));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Resource::new(4096, 4, 1);
+        let b = Resource::new(1024, 1, 1);
+        assert_eq!(a + b, Resource::new(5120, 5, 2));
+        assert_eq!(a - b, Resource::new(3072, 3, 0));
+        assert_eq!(a.checked_sub(&b), Some(Resource::new(3072, 3, 0)));
+        assert_eq!(b.checked_sub(&a), None);
+        let mut c = a;
+        c += b;
+        c -= b;
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn dominant_share() {
+        let total = Resource::new(10000, 10, 2);
+        let used = Resource::new(1000, 5, 1);
+        // max(0.1, 0.5, 0.5) = 0.5
+        assert!((used.dominant_share(&total) - 0.5).abs() < 1e-9);
+        assert_eq!(Resource::ZERO.dominant_share(&total), 0.0);
+    }
+}

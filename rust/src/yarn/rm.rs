@@ -1,0 +1,673 @@
+//! The ResourceManager: application lifecycle + the AM allocate protocol.
+//!
+//! Protocol structure mirrors YARN:
+//!
+//! ```text
+//!   client ── submit_application ──▶ RM ── schedules AM container ──▶ NM
+//!   AM ── register_application_master ──▶ RM
+//!   AM ── allocate(asks, releases) ◀──▶ RM   (heartbeat-style; returns
+//!                                             newly granted + completed)
+//!   AM ── start_container(grant, env, code) ──▶ NM
+//!   AM ── finish_application ──▶ RM
+//! ```
+//!
+//! Failure propagation: a dead node's containers surface in the owning
+//! AM's next `allocate` response as `NodeLost`, which is what lets the
+//! TonY AM implement the paper's fault-tolerance loop (§2.2: "if any task
+//! fails, the TonY AM will automatically tear down the remaining tasks,
+//! request new task containers ... and relaunch the tasks").
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::ids::{ApplicationId, ContainerId, NodeId};
+use crate::{tdebug, tinfo, twarn};
+
+use super::container::{Container, ContainerCtx, ContainerRequest, ContainerStatus, ExitStatus, Launchable};
+use super::node::{NodeHandle, NodeSpec};
+use super::resources::Resource;
+use super::scheduler::{CapacityScheduler, QueueConf, SchedNode};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppState {
+    Submitted,
+    Running,
+    Finished,
+    Failed,
+    Killed,
+}
+
+impl AppState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, AppState::Finished | AppState::Failed | AppState::Killed)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AppReport {
+    pub id: ApplicationId,
+    pub name: String,
+    pub queue: String,
+    pub state: AppState,
+    pub diagnostics: String,
+    pub tracking_url: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SubmissionContext {
+    pub name: String,
+    pub queue: String,
+    pub am_resource: Resource,
+}
+
+#[derive(Debug, Default)]
+pub struct AllocateResponse {
+    pub allocated: Vec<Container>,
+    pub completed: Vec<ContainerStatus>,
+}
+
+struct LiveContainer {
+    node: NodeId,
+    resource: Resource,
+    app: ApplicationId,
+    queue: String,
+    started: bool,
+}
+
+struct App {
+    name: String,
+    queue: String,
+    state: AppState,
+    diagnostics: String,
+    tracking_url: Option<String>,
+    am_container: Option<ContainerId>,
+    allocated_ready: Vec<Container>,
+    completed_ready: Vec<ContainerStatus>,
+}
+
+struct Inner {
+    nodes: Vec<Arc<NodeHandle>>,
+    /// Scheduler's free view (capacity minus granted, including grants the
+    /// AM hasn't started yet — reservations are held from grant time).
+    node_free: HashMap<NodeId, Resource>,
+    scheduler: CapacityScheduler,
+    apps: HashMap<ApplicationId, App>,
+    containers: HashMap<ContainerId, LiveContainer>,
+    /// AM launchables awaiting their container grant, keyed by ask tag.
+    pending_am: HashMap<u64, (ApplicationId, Launchable)>,
+    next_app_seq: u64,
+    next_container_seq: u64,
+    next_tag: u64,
+}
+
+/// The simulated cluster: RM + NMs.  Create with [`ResourceManager::start`].
+pub struct ResourceManager {
+    pub cluster_ts: u64,
+    inner: Mutex<Inner>,
+}
+
+impl ResourceManager {
+    pub fn start(specs: Vec<NodeSpec>, queues: Vec<QueueConf>) -> Arc<ResourceManager> {
+        let cluster_ts = 1_700_000_000 + crate::util::ids::next_seq();
+        Arc::new_cyclic(|weak: &Weak<ResourceManager>| {
+            let weak = weak.clone();
+            let cb: super::node::CompletionFn = Arc::new(move |node, cid, status| {
+                if let Some(rm) = weak.upgrade() {
+                    rm.on_container_complete(node, cid, status);
+                }
+            });
+            let total = specs
+                .iter()
+                .fold(Resource::ZERO, |acc, s| acc + s.capacity);
+            let node_free = specs.iter().map(|s| (s.id, s.capacity)).collect();
+            let nodes = specs
+                .into_iter()
+                .map(|s| Arc::new(NodeHandle::new(s, cb.clone())))
+                .collect();
+            ResourceManager {
+                cluster_ts,
+                inner: Mutex::new(Inner {
+                    nodes,
+                    node_free,
+                    scheduler: CapacityScheduler::new(queues, total),
+                    apps: HashMap::new(),
+                    containers: HashMap::new(),
+                    pending_am: HashMap::new(),
+                    next_app_seq: 1,
+                    next_container_seq: 1,
+                    next_tag: 1,
+                }),
+            }
+        })
+    }
+
+    /// Convenience: N identical unlabeled nodes, single `default` queue.
+    pub fn start_uniform(n_nodes: u32, per_node: Resource) -> Arc<ResourceManager> {
+        let specs = (0..n_nodes).map(|i| NodeSpec::new(i, per_node)).collect();
+        Self::start(specs, QueueConf::default_only())
+    }
+
+    // ---------------- client protocol ----------------
+
+    /// Submit an application: the RM will schedule the AM container and run
+    /// `am_code` in it.  Mirrors `YarnClient.submitApplication`.
+    pub fn submit_application(
+        self: &Arc<Self>,
+        ctx: SubmissionContext,
+        am_code: Launchable,
+    ) -> Result<ApplicationId> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = ApplicationId { cluster_ts: self.cluster_ts, seq: inner.next_app_seq };
+        inner.next_app_seq += 1;
+        inner.apps.insert(
+            id,
+            App {
+                name: ctx.name.clone(),
+                queue: ctx.queue.clone(),
+                state: AppState::Submitted,
+                diagnostics: String::new(),
+                tracking_url: None,
+                am_container: None,
+                allocated_ready: Vec::new(),
+                completed_ready: Vec::new(),
+            },
+        );
+        let tag = inner.next_tag;
+        let am_ask = ContainerRequest::new(ctx.am_resource, 1).with_priority(10);
+        inner.next_tag = inner.scheduler.add_asks(id, &ctx.queue, &[am_ask], tag);
+        inner.pending_am.insert(tag, (id, am_code));
+        tinfo!("rm", "submitted {id} '{}' to queue '{}'", ctx.name, ctx.queue);
+        self.schedule_locked(&mut inner);
+        Ok(id)
+    }
+
+    pub fn app_report(&self, id: ApplicationId) -> Option<AppReport> {
+        let inner = self.inner.lock().unwrap();
+        inner.apps.get(&id).map(|a| AppReport {
+            id,
+            name: a.name.clone(),
+            queue: a.queue.clone(),
+            state: a.state,
+            diagnostics: a.diagnostics.clone(),
+            tracking_url: a.tracking_url.clone(),
+        })
+    }
+
+    /// Block until the app reaches a terminal state (test/CLI helper).
+    pub fn wait_for_completion(&self, id: ApplicationId, timeout: Duration) -> Result<AppReport> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let report = self
+                .app_report(id)
+                .ok_or_else(|| anyhow!("unknown application {id}"))?;
+            if report.state.is_terminal() {
+                return Ok(report);
+            }
+            if std::time::Instant::now() > deadline {
+                bail!("timeout waiting for {id}; state={:?}", report.state);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Client-initiated kill (`yarn application -kill`).
+    pub fn kill_application(&self, id: ApplicationId) {
+        let mut inner = self.inner.lock().unwrap();
+        self.teardown_app_locked(&mut inner, id, AppState::Killed, "killed by client");
+    }
+
+    // ---------------- AM protocol ----------------
+
+    /// `registerApplicationMaster`.  Transitions Submitted → Running.
+    pub fn register_am(&self, id: ApplicationId, tracking_url: Option<String>) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let app = inner.apps.get_mut(&id).ok_or_else(|| anyhow!("unknown app {id}"))?;
+        app.state = AppState::Running;
+        if tracking_url.is_some() {
+            app.tracking_url = tracking_url;
+        }
+        tdebug!("rm", "AM registered for {id}");
+        Ok(())
+    }
+
+    /// The allocate heartbeat: submit new asks, release containers, and
+    /// collect newly granted containers + completed-container statuses.
+    pub fn allocate(
+        &self,
+        id: ApplicationId,
+        asks: &[ContainerRequest],
+        releases: &[ContainerId],
+    ) -> Result<AllocateResponse> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.apps.get(&id) {
+            None => bail!("unknown app {id}"),
+            // YARN throws ApplicationAttemptNotRunning here; erroring lets
+            // a zombie AM notice its app was killed out from under it.
+            Some(app) if app.state.is_terminal() => {
+                bail!("app {id} is terminal ({:?})", app.state)
+            }
+            Some(_) => {}
+        }
+        // Releases first: they create room for the new asks.
+        for cid in releases {
+            self.release_container_locked(&mut inner, *cid);
+        }
+        if !asks.is_empty() {
+            let queue = inner.apps[&id].queue.clone();
+            let tag = inner.next_tag;
+            inner.next_tag = inner.scheduler.add_asks(id, &queue, asks, tag);
+        }
+        self.schedule_locked(&mut inner);
+        let app = inner.apps.get_mut(&id).unwrap();
+        Ok(AllocateResponse {
+            allocated: std::mem::take(&mut app.allocated_ready),
+            completed: std::mem::take(&mut app.completed_ready),
+        })
+    }
+
+    /// Launch task code in a granted container (NM `startContainer`).
+    pub fn start_container(
+        &self,
+        container: &Container,
+        env: BTreeMap<String, String>,
+        launch: Launchable,
+    ) -> Result<()> {
+        let node = {
+            let mut inner = self.inner.lock().unwrap();
+            let live = inner
+                .containers
+                .get_mut(&container.id)
+                .ok_or_else(|| anyhow!("unknown container {}", container.id))?;
+            if live.started {
+                bail!("container {} already started", container.id);
+            }
+            live.started = true;
+            let nid = live.node;
+            inner
+                .nodes
+                .iter()
+                .find(|n| n.spec.id == nid)
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown node {nid}"))?
+        };
+        let ctx = ContainerCtx::new(container.clone(), env);
+        node.start_container(container.clone(), ctx, launch)
+    }
+
+    /// Ask the NM to kill a running container.
+    pub fn stop_container(&self, id: ContainerId) {
+        let node = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .containers
+                .get(&id)
+                .and_then(|c| inner.nodes.iter().find(|n| n.spec.id == c.node).cloned())
+        };
+        if let Some(node) = node {
+            node.stop_container(id);
+        }
+    }
+
+    /// `finishApplicationMaster`: terminal state chosen by the AM.
+    pub fn finish_application(&self, id: ApplicationId, success: bool, diagnostics: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let state = if success { AppState::Finished } else { AppState::Failed };
+        self.teardown_app_locked(&mut inner, id, state, diagnostics);
+    }
+
+    // ---------------- chaos / introspection ----------------
+
+    /// Kill a node: its containers die (`NodeLost`) and it leaves the
+    /// scheduler's free pool.
+    pub fn kill_node(&self, node: NodeId) {
+        let handle = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.node_free.remove(&node);
+            let total = inner
+                .nodes
+                .iter()
+                .filter(|n| n.spec.id != node && n.is_alive())
+                .fold(Resource::ZERO, |acc, n| acc + n.spec.capacity);
+            inner.scheduler.set_cluster_total(total);
+            inner.nodes.iter().find(|n| n.spec.id == node).cloned()
+        };
+        if let Some(h) = handle {
+            twarn!("rm", "node {node} killed (chaos)");
+            h.kill_node();
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.inner.lock().unwrap().nodes.len()
+    }
+
+    pub fn alive_node_count(&self) -> usize {
+        self.inner.lock().unwrap().nodes.iter().filter(|n| n.is_alive()).count()
+    }
+
+    /// (free, capacity) per node — for the portal and the contention bench.
+    pub fn node_usage(&self) -> Vec<(NodeId, Resource, Resource)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .nodes
+            .iter()
+            .map(|n| {
+                let free = inner.node_free.get(&n.spec.id).copied().unwrap_or(Resource::ZERO);
+                (n.spec.id, free, n.spec.capacity)
+            })
+            .collect()
+    }
+
+    pub fn queue_usage(&self) -> Vec<(String, Resource)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .scheduler
+            .queue_names()
+            .into_iter()
+            .map(|n| {
+                let used = inner.scheduler.queue_used(&n).unwrap_or(Resource::ZERO);
+                (n, used)
+            })
+            .collect()
+    }
+
+    pub fn set_tracking_url(&self, id: ApplicationId, url: String) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(app) = inner.apps.get_mut(&id) {
+            app.tracking_url = Some(url);
+        }
+    }
+
+    // ---------------- internals ----------------
+
+    fn release_container_locked(&self, inner: &mut Inner, cid: ContainerId) {
+        if let Some(live) = inner.containers.get(&cid) {
+            if live.started {
+                // Running: ask the NM to kill; accounting happens on the
+                // completion callback.
+                let node = inner.nodes.iter().find(|n| n.spec.id == live.node).cloned();
+                if let Some(n) = node {
+                    n.stop_container(cid);
+                }
+            } else {
+                // Granted but never started: free immediately.
+                let live = inner.containers.remove(&cid).unwrap();
+                if let Some(free) = inner.node_free.get_mut(&live.node) {
+                    *free += live.resource;
+                }
+                inner.scheduler.release(&live.queue, live.resource);
+            }
+        }
+    }
+
+    fn schedule_locked(&self, inner: &mut Inner) {
+        // Build the scheduler's node view from alive nodes only.
+        let mut view: Vec<SchedNode> = inner
+            .nodes
+            .iter()
+            .filter(|n| n.is_alive())
+            .filter_map(|n| {
+                inner.node_free.get(&n.spec.id).map(|free| SchedNode {
+                    id: n.spec.id,
+                    label: n.spec.label.clone(),
+                    free: *free,
+                })
+            })
+            .collect();
+        let grants = inner.scheduler.schedule(&mut view);
+        for n in &view {
+            inner.node_free.insert(n.id, n.free);
+        }
+        for grant in grants {
+            let cid = ContainerId { app: grant.ask.app, seq: inner.next_container_seq };
+            inner.next_container_seq += 1;
+            let container = Container {
+                id: cid,
+                app: grant.ask.app,
+                node: grant.node,
+                resource: grant.ask.resource,
+                priority: grant.ask.priority,
+            };
+            inner.containers.insert(
+                cid,
+                LiveContainer {
+                    node: grant.node,
+                    resource: grant.ask.resource,
+                    app: grant.ask.app,
+                    queue: grant.ask.queue.clone(),
+                    started: false,
+                },
+            );
+            if let Some((app_id, am_code)) = inner.pending_am.remove(&grant.ask.tag) {
+                // This grant is an AM container: launch it now.
+                let app = inner.apps.get_mut(&app_id).unwrap();
+                app.am_container = Some(cid);
+                let node = inner
+                    .nodes
+                    .iter()
+                    .find(|n| n.spec.id == grant.node)
+                    .cloned()
+                    .expect("granted node exists");
+                let live = inner.containers.get_mut(&cid).unwrap();
+                live.started = true;
+                let mut env = BTreeMap::new();
+                env.insert("APP_ID".to_string(), app_id.to_string());
+                let ctx = ContainerCtx::new(container.clone(), env);
+                tdebug!("rm", "launching AM for {app_id} in {cid} on {}", grant.node);
+                if let Err(e) = node.start_container(container, ctx, am_code) {
+                    twarn!("rm", "AM launch failed for {app_id}: {e}");
+                    self.teardown_app_locked(inner, app_id, AppState::Failed, &e.to_string());
+                }
+            } else if let Some(app) = inner.apps.get_mut(&grant.ask.app) {
+                app.allocated_ready.push(container);
+            }
+        }
+    }
+
+    fn on_container_complete(&self, node: NodeId, cid: ContainerId, status: ExitStatus) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(live) = inner.containers.remove(&cid) else { return };
+        // Return capacity (node may be dead and absent from node_free).
+        if let Some(free) = inner.node_free.get_mut(&live.node) {
+            *free += live.resource;
+        }
+        inner.scheduler.release(&live.queue, live.resource);
+        let app_id = live.app;
+        let is_am = inner
+            .apps
+            .get(&app_id)
+            .and_then(|a| a.am_container)
+            .map(|am| am == cid)
+            .unwrap_or(false);
+        if is_am {
+            // AM exit decides the app outcome unless already terminal.
+            let needs_teardown = inner
+                .apps
+                .get(&app_id)
+                .map(|a| !a.state.is_terminal())
+                .unwrap_or(false);
+            if needs_teardown {
+                let (state, diag) = match status {
+                    ExitStatus::Success => (AppState::Finished, "AM exited 0".to_string()),
+                    other => (AppState::Failed, format!("AM exited abnormally: {other:?}")),
+                };
+                twarn!("rm", "AM container for {app_id} exited: {status:?}");
+                self.teardown_app_locked(&mut inner, app_id, state, &diag);
+            }
+        } else if let Some(app) = inner.apps.get_mut(&app_id) {
+            app.completed_ready.push(ContainerStatus {
+                id: cid,
+                exit: status,
+                diagnostics: format!("container on {node} exited: {status:?}"),
+            });
+        }
+        // Freed capacity may unblock pending asks.
+        self.schedule_locked(&mut inner);
+    }
+
+    fn teardown_app_locked(
+        &self,
+        inner: &mut Inner,
+        id: ApplicationId,
+        state: AppState,
+        diagnostics: &str,
+    ) {
+        let Some(app) = inner.apps.get_mut(&id) else { return };
+        if app.state.is_terminal() {
+            return;
+        }
+        app.state = state;
+        app.diagnostics = diagnostics.to_string();
+        tinfo!("rm", "{id} -> {state:?} ({diagnostics})");
+        inner.scheduler.remove_app(id);
+        // Kill every container of this app that is still alive.
+        let to_kill: Vec<(ContainerId, NodeId, bool)> = inner
+            .containers
+            .iter()
+            .filter(|(_, c)| c.app == id)
+            .map(|(cid, c)| (*cid, c.node, c.started))
+            .collect();
+        for (cid, nid, started) in to_kill {
+            if started {
+                if let Some(n) = inner.nodes.iter().find(|n| n.spec.id == nid).cloned() {
+                    n.stop_container(cid);
+                }
+            } else {
+                self.release_container_locked(inner, cid);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rm4() -> Arc<ResourceManager> {
+        ResourceManager::start_uniform(4, Resource::new(4096, 4, 0))
+    }
+
+    #[test]
+    fn trivial_am_finishes_app() {
+        let rm = rm4();
+        let rm2 = rm.clone();
+        let id = rm
+            .submit_application(
+                SubmissionContext {
+                    name: "noop".into(),
+                    queue: "default".into(),
+                    am_resource: Resource::new(512, 1, 0),
+                },
+                Box::new(move |ctx| {
+                    let app = ApplicationId {
+                        cluster_ts: rm2.cluster_ts,
+                        seq: 1,
+                    };
+                    assert_eq!(ctx.env("APP_ID").unwrap(), app.to_string());
+                    rm2.register_am(app, None).unwrap();
+                    rm2.finish_application(app, true, "done");
+                    0
+                }),
+            )
+            .unwrap();
+        let report = rm.wait_for_completion(id, Duration::from_secs(5)).unwrap();
+        assert_eq!(report.state, AppState::Finished);
+    }
+
+    #[test]
+    fn am_gets_task_containers_and_completions() {
+        let rm = rm4();
+        let rm2 = rm.clone();
+        let id = rm
+            .submit_application(
+                SubmissionContext {
+                    name: "two-tasks".into(),
+                    queue: "default".into(),
+                    am_resource: Resource::new(512, 1, 0),
+                },
+                Box::new(move |ctx| {
+                    let app = crate::util::ids::ApplicationId {
+                        cluster_ts: rm2.cluster_ts,
+                        seq: 1,
+                    };
+                    let _ = ctx;
+                    rm2.register_am(app, Some("http://am".into())).unwrap();
+                    let mut got = Vec::new();
+                    let asks = vec![ContainerRequest::new(Resource::new(1024, 1, 0), 2)];
+                    let mut asked = false;
+                    let mut completed = 0;
+                    while completed < 2 {
+                        let resp = rm2
+                            .allocate(app, if asked { &[] } else { &asks }, &[])
+                            .unwrap();
+                        asked = true;
+                        for c in resp.allocated {
+                            rm2.start_container(&c, BTreeMap::new(), Box::new(|_| 0)).unwrap();
+                            got.push(c);
+                        }
+                        completed += resp
+                            .completed
+                            .iter()
+                            .filter(|s| s.exit.is_success())
+                            .count();
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    assert_eq!(got.len(), 2);
+                    rm2.finish_application(app, true, "all tasks done");
+                    0
+                }),
+            )
+            .unwrap();
+        let report = rm.wait_for_completion(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+        assert_eq!(report.tracking_url.as_deref(), Some("http://am"));
+        // All capacity returned.
+        for (_, free, cap) in rm.node_usage() {
+            assert_eq!(free, cap);
+        }
+    }
+
+    #[test]
+    fn am_crash_fails_app() {
+        let rm = rm4();
+        let rm2 = rm.clone();
+        let id = rm
+            .submit_application(
+                SubmissionContext {
+                    name: "crash".into(),
+                    queue: "default".into(),
+                    am_resource: Resource::new(512, 1, 0),
+                },
+                Box::new(move |_ctx| {
+                    let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                    rm2.register_am(app, None).unwrap();
+                    7 // crash
+                }),
+            )
+            .unwrap();
+        let report = rm.wait_for_completion(id, Duration::from_secs(5)).unwrap();
+        assert_eq!(report.state, AppState::Failed);
+    }
+
+    #[test]
+    fn oversized_job_waits_and_kill_works() {
+        let rm = ResourceManager::start_uniform(1, Resource::new(1024, 1, 0));
+        let id = rm
+            .submit_application(
+                SubmissionContext {
+                    name: "too-big".into(),
+                    queue: "default".into(),
+                    am_resource: Resource::new(4096, 1, 0), // never fits
+                },
+                Box::new(|_| 0),
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(rm.app_report(id).unwrap().state, AppState::Submitted);
+        rm.kill_application(id);
+        assert_eq!(rm.app_report(id).unwrap().state, AppState::Killed);
+    }
+}

@@ -1,0 +1,426 @@
+//! CapacityScheduler: hierarchical-capacity queue scheduling over
+//! label-partitioned nodes.
+//!
+//! Pure logic (no threads, no clock) so it is directly unit- and
+//! property-testable: `schedule()` takes the current node free-list and
+//! returns grants; the RM applies them.  Invariants enforced here and
+//! checked by `rust/tests/prop_scheduler.rs`:
+//!
+//! 1. a grant never exceeds the free capacity of its node (no dimension
+//!    oversubscribes),
+//! 2. label partitions are respected (an ask with label L is only placed
+//!    on nodes with label L; unlabeled asks go to unlabeled nodes),
+//! 3. a queue's usage never exceeds `max_capacity` × cluster total
+//!    (dominant-share), and
+//! 4. FIFO order within a queue per priority level.
+
+use std::collections::VecDeque;
+
+use crate::util::ids::{ApplicationId, NodeId};
+
+use super::container::ContainerRequest;
+use super::resources::Resource;
+
+/// Static queue configuration (fractions of the cluster).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueConf {
+    pub name: String,
+    /// Guaranteed share of cluster capacity, in [0, 1].
+    pub capacity: f64,
+    /// Hard ceiling, in [0, 1] (>= capacity).
+    pub max_capacity: f64,
+}
+
+impl QueueConf {
+    pub fn new(name: &str, capacity: f64, max_capacity: f64) -> QueueConf {
+        QueueConf { name: name.to_string(), capacity, max_capacity }
+    }
+
+    /// A single `default` queue owning the whole cluster.
+    pub fn default_only() -> Vec<QueueConf> {
+        vec![QueueConf::new("default", 1.0, 1.0)]
+    }
+}
+
+/// One outstanding single-container ask.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ask {
+    pub app: ApplicationId,
+    pub queue: String,
+    pub resource: Resource,
+    pub node_label: Option<String>,
+    pub priority: u8,
+    /// Opaque correlation id chosen by the asker.
+    pub tag: u64,
+}
+
+/// A scheduling decision: place `ask` on `node`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grant {
+    pub ask: Ask,
+    pub node: NodeId,
+}
+
+/// Scheduler's view of one node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedNode {
+    pub id: NodeId,
+    pub label: Option<String>,
+    pub free: Resource,
+}
+
+#[derive(Debug)]
+struct Queue {
+    conf: QueueConf,
+    used: Resource,
+    /// FIFO of pending asks (stable order; higher priority first is
+    /// achieved by scanning priorities descending).
+    pending: VecDeque<Ask>,
+}
+
+#[derive(Debug)]
+pub struct CapacityScheduler {
+    queues: Vec<Queue>,
+    cluster_total: Resource,
+}
+
+impl CapacityScheduler {
+    pub fn new(queues: Vec<QueueConf>, cluster_total: Resource) -> CapacityScheduler {
+        assert!(!queues.is_empty(), "need at least one queue");
+        let sum: f64 = queues.iter().map(|q| q.capacity).sum();
+        assert!(
+            (sum - 1.0).abs() < 1e-6,
+            "queue capacities must sum to 1.0, got {sum}"
+        );
+        CapacityScheduler {
+            queues: queues
+                .into_iter()
+                .map(|conf| Queue { conf, used: Resource::ZERO, pending: VecDeque::new() })
+                .collect(),
+            cluster_total,
+        }
+    }
+
+    pub fn set_cluster_total(&mut self, total: Resource) {
+        self.cluster_total = total;
+    }
+
+    pub fn cluster_total(&self) -> Resource {
+        self.cluster_total
+    }
+
+    pub fn queue_names(&self) -> Vec<String> {
+        self.queues.iter().map(|q| q.conf.name.clone()).collect()
+    }
+
+    pub fn queue_used(&self, name: &str) -> Option<Resource> {
+        self.queues.iter().find(|q| q.conf.name == name).map(|q| q.used)
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.queues.iter().map(|q| q.pending.len()).sum()
+    }
+
+    fn queue_mut(&mut self, name: &str) -> Option<&mut Queue> {
+        self.queues.iter_mut().find(|q| q.conf.name == name)
+    }
+
+    /// Enqueue asks from an AM heartbeat (expanding multi-count requests).
+    /// Unknown queues fall back to the first queue.
+    pub fn add_asks(
+        &mut self,
+        app: ApplicationId,
+        queue: &str,
+        requests: &[ContainerRequest],
+        mut tag_start: u64,
+    ) -> u64 {
+        let qname = if self.queue_mut(queue).is_some() {
+            queue.to_string()
+        } else {
+            self.queues[0].conf.name.clone()
+        };
+        let q = self.queue_mut(&qname).unwrap();
+        for req in requests {
+            for _ in 0..req.count {
+                q.pending.push_back(Ask {
+                    app,
+                    queue: qname.clone(),
+                    resource: req.resource,
+                    node_label: req.node_label.clone(),
+                    priority: req.priority,
+                    tag: tag_start,
+                });
+                tag_start += 1;
+            }
+        }
+        tag_start
+    }
+
+    /// Remove all pending asks of an app (teardown / app finished).
+    pub fn remove_app(&mut self, app: ApplicationId) {
+        for q in &mut self.queues {
+            q.pending.retain(|a| a.app != app);
+        }
+    }
+
+    /// Record capacity returned by a released/completed container.
+    pub fn release(&mut self, queue: &str, resource: Resource) {
+        if let Some(q) = self.queue_mut(queue) {
+            q.used -= resource;
+        }
+    }
+
+    /// Would granting `r` keep queue under its max-capacity ceiling?
+    fn queue_headroom_ok(&self, qi: usize, r: &Resource) -> bool {
+        let q = &self.queues[qi];
+        let after = q.used + *r;
+        after.dominant_share(&self.cluster_total) <= q.conf.max_capacity + 1e-9
+    }
+
+    /// One scheduling pass: match pending asks against free node capacity.
+    /// Queues are visited most-underserved-first (used/capacity ratio);
+    /// within a queue, priorities descend, FIFO within a priority.
+    pub fn schedule(&mut self, nodes: &mut [SchedNode]) -> Vec<Grant> {
+        let mut grants = Vec::new();
+        loop {
+            // Order queues by relative usage each round so capacity
+            // fractions steer who gets the next container.
+            let mut order: Vec<usize> = (0..self.queues.len())
+                .filter(|&i| !self.queues[i].pending.is_empty())
+                .collect();
+            if order.is_empty() {
+                break;
+            }
+            order.sort_by(|&a, &b| {
+                let ra = self.relative_usage(a);
+                let rb = self.relative_usage(b);
+                ra.partial_cmp(&rb).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut made_progress = false;
+            for qi in order {
+                if let Some(grant) = self.try_queue(qi, nodes) {
+                    grants.push(grant);
+                    made_progress = true;
+                    break; // re-evaluate queue order after every grant
+                }
+            }
+            if !made_progress {
+                break;
+            }
+        }
+        grants
+    }
+
+    fn relative_usage(&self, qi: usize) -> f64 {
+        let q = &self.queues[qi];
+        let share = q.used.dominant_share(&self.cluster_total);
+        if q.conf.capacity <= 0.0 {
+            f64::INFINITY
+        } else {
+            share / q.conf.capacity
+        }
+    }
+
+    /// Try to place the first placeable ask of queue `qi` (priority-major,
+    /// FIFO-minor).  Skips asks that cannot currently be placed without
+    /// blocking later placeable ones (avoids convoy starvation on mixed
+    /// GPU/CPU asks, which YARN handles via separate resource-requests).
+    fn try_queue(&mut self, qi: usize, nodes: &mut [SchedNode]) -> Option<Grant> {
+        let plen = self.queues[qi].pending.len();
+        let mut best: Option<(usize, usize)> = None; // (pending idx, node idx)
+        let mut best_prio = 0u8;
+        for i in 0..plen {
+            let ask = &self.queues[qi].pending[i];
+            if let Some(existing) = best {
+                let _ = existing;
+                if ask.priority <= best_prio {
+                    continue;
+                }
+            }
+            if !self.queue_headroom_ok(qi, &ask.resource) {
+                continue;
+            }
+            if let Some(ni) = pick_node(nodes, ask) {
+                best_prio = ask.priority;
+                best = Some((i, ni));
+            }
+        }
+        let (i, ni) = best?;
+        let ask = self.queues[qi].pending.remove(i).unwrap();
+        nodes[ni].free -= ask.resource;
+        self.queues[qi].used += ask.resource;
+        Some(Grant { ask, node: nodes[ni].id })
+    }
+}
+
+/// Best-fit node choice: among nodes matching the label with room, pick
+/// the one whose remaining free dominant-share is smallest after
+/// placement (packs tightly, preserving big slots for big asks).
+fn pick_node(nodes: &[SchedNode], ask: &Ask) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, n) in nodes.iter().enumerate() {
+        if n.label != ask.node_label {
+            continue;
+        }
+        if !n.free.fits(&ask.resource) {
+            continue;
+        }
+        let leftover = n.free.memory_mb - ask.resource.memory_mb;
+        match best {
+            Some((_, b)) if leftover >= b => {}
+            _ => best = Some((i, leftover)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app(seq: u64) -> ApplicationId {
+        ApplicationId { cluster_ts: 1, seq }
+    }
+
+    fn nodes2() -> Vec<SchedNode> {
+        vec![
+            SchedNode { id: NodeId(0), label: None, free: Resource::new(8192, 8, 0) },
+            SchedNode { id: NodeId(1), label: Some("gpu".into()), free: Resource::new(8192, 8, 4) },
+        ]
+    }
+
+    #[test]
+    fn grants_respect_capacity_and_labels() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(16384, 16, 4));
+        let mut nodes = nodes2();
+        s.add_asks(
+            app(1),
+            "default",
+            &[
+                ContainerRequest::new(Resource::new(2048, 2, 1), 2).with_label("gpu"),
+                ContainerRequest::new(Resource::new(2048, 2, 0), 2),
+            ],
+            0,
+        );
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 4);
+        for g in &grants {
+            if g.ask.node_label.as_deref() == Some("gpu") {
+                assert_eq!(g.node, NodeId(1), "gpu asks must land on the gpu node");
+            } else {
+                assert_eq!(g.node, NodeId(0), "unlabeled asks stay on the default partition");
+            }
+        }
+        // No oversubscription.
+        assert!(nodes[0].free.memory_mb <= 8192);
+        assert_eq!(nodes[1].free.gpus, 2);
+    }
+
+    #[test]
+    fn unsatisfiable_asks_stay_pending() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(8192, 8, 0));
+        let mut nodes = vec![SchedNode {
+            id: NodeId(0),
+            label: None,
+            free: Resource::new(4096, 4, 0),
+        }];
+        s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(8192, 1, 0), 1)], 0);
+        let grants = s.schedule(&mut nodes);
+        assert!(grants.is_empty());
+        assert_eq!(s.pending_count(), 1);
+    }
+
+    #[test]
+    fn max_capacity_is_a_ceiling() {
+        // Queue limited to 50% of a 8 GiB cluster: second 3 GiB ask must wait.
+        let queues = vec![
+            QueueConf::new("ml", 0.5, 0.5),
+            QueueConf::new("etl", 0.5, 1.0),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
+        let mut nodes = vec![SchedNode {
+            id: NodeId(0),
+            label: None,
+            free: Resource::new(8192, 8, 0),
+        }];
+        s.add_asks(app(1), "ml", &[ContainerRequest::new(Resource::new(3072, 1, 0), 2)], 0);
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 1, "only one 3GiB ask fits under the 50% cap");
+        assert_eq!(s.pending_count(), 1);
+        // After release, the pending ask can go.
+        s.release("ml", Resource::new(3072, 1, 0));
+        nodes[0].free += Resource::new(3072, 1, 0);
+        assert_eq!(s.schedule(&mut nodes).len(), 1);
+    }
+
+    #[test]
+    fn capacity_fractions_steer_sharing() {
+        // 75/25 split: with both queues asking for everything, ml should
+        // end up with ~3x etl's containers.
+        let queues = vec![
+            QueueConf::new("ml", 0.75, 1.0),
+            QueueConf::new("etl", 0.25, 1.0),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(8192, 64, 0));
+        let mut nodes = vec![SchedNode {
+            id: NodeId(0),
+            label: None,
+            free: Resource::new(8192, 64, 0),
+        }];
+        let shape = ContainerRequest::new(Resource::new(1024, 1, 0), 8);
+        s.add_asks(app(1), "ml", &[shape.clone()], 0);
+        s.add_asks(app(2), "etl", &[shape], 100);
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 8, "cluster fits exactly 8 containers");
+        let ml = grants.iter().filter(|g| g.ask.queue == "ml").count();
+        assert_eq!(ml, 6, "75% queue gets 6 of 8");
+    }
+
+    #[test]
+    fn priority_order_within_queue() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
+        let mut nodes = vec![SchedNode {
+            id: NodeId(0),
+            label: None,
+            free: Resource::new(1024, 1, 0),
+        }];
+        // Low priority first in FIFO order, then high priority.
+        s.add_asks(
+            app(1),
+            "default",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 1).with_priority(1)],
+            0,
+        );
+        s.add_asks(
+            app(1),
+            "default",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 1).with_priority(5)],
+            10,
+        );
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].ask.priority, 5, "high priority wins the single slot");
+    }
+
+    #[test]
+    fn remove_app_clears_pending() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(8192, 8, 0));
+        s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(1024, 1, 0), 3)], 0);
+        s.add_asks(app(2), "default", &[ContainerRequest::new(Resource::new(1024, 1, 0), 2)], 50);
+        s.remove_app(app(1));
+        assert_eq!(s.pending_count(), 2);
+    }
+
+    #[test]
+    fn best_fit_packs_tightly() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(12288, 12, 0));
+        let mut nodes = vec![
+            SchedNode { id: NodeId(0), label: None, free: Resource::new(8192, 8, 0) },
+            SchedNode { id: NodeId(1), label: None, free: Resource::new(2048, 2, 0) },
+        ];
+        s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(2048, 1, 0), 1)], 0);
+        let grants = s.schedule(&mut nodes);
+        // Best fit: lands on the small node, preserving the big slot.
+        assert_eq!(grants[0].node, NodeId(1));
+    }
+}

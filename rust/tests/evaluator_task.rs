@@ -1,0 +1,67 @@
+//! Integration: a job with an untracked evaluator task — the evaluator
+//! scores checkpoints as they appear and stops cleanly when the tracked
+//! workers finish (TonY's untracked job types).
+
+use std::time::Duration;
+
+use tony::client::TonyClient;
+use tony::tonyconf::JobConfBuilder;
+use tony::util::ids::TaskId;
+use tony::yarn::{AppState, Resource, ResourceManager};
+
+fn tiny_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/tiny missing; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn evaluator_scores_checkpoints_and_job_finishes() {
+    let Some(dir) = tiny_dir() else { return };
+    let rm = ResourceManager::start_uniform(4, Resource::new(8192, 8, 0));
+    let ckpt = std::env::temp_dir().join(format!(
+        "tony-eval-{}-{}",
+        std::process::id(),
+        tony::util::ids::next_seq()
+    ));
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let conf = JobConfBuilder::new("with-evaluator")
+        .instances("worker", 1)
+        .memory("worker", "1g")
+        .instances("ps", 1)
+        .memory("ps", "1g")
+        .instances("evaluator", 1)
+        .memory("evaluator", "1g")
+        .train(dir.to_str().unwrap(), "tiny", 12)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "4")
+        .build();
+
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    let report = handle.wait(Duration::from_secs(300)).unwrap();
+    // Job success gates only on the tracked worker, per TonY semantics.
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+
+    // The evaluator produced held-out scores from at least one checkpoint
+    // and exited 0 on the Stop command.
+    let snap = handle.status_json();
+    let tasks = snap.get("tasks").unwrap().as_arr().unwrap();
+    let eval = tasks
+        .iter()
+        .find(|t| t.get("task").unwrap().as_str() == Some("evaluator:0"))
+        .expect("evaluator task present in spec");
+    assert_eq!(eval.get("exit").unwrap().as_i64(), Some(0), "{}", snap.render_pretty());
+    // AmState should have evaluator metrics with a step > 0.
+    let _ = TaskId::new("evaluator", 0);
+    assert!(
+        eval.get("step").unwrap().as_u64().unwrap() >= 4,
+        "evaluator never scored a checkpoint: {}",
+        snap.render_pretty()
+    );
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

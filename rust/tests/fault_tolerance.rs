@@ -1,0 +1,138 @@
+//! Integration: the paper's fault-tolerance loop (§2.2).  Kill a worker
+//! container (and, separately, a whole node) mid-training; the AM must
+//! tear down the attempt, re-negotiate containers, relaunch, and the
+//! chief must restore from the last checkpoint and finish the job.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::chaos::{ChaosInjector, Fault};
+use tony::client::TonyClient;
+use tony::tonyconf::JobConfBuilder;
+use tony::yarn::{AppState, Resource, ResourceManager};
+
+fn tiny_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/tiny missing; run `make artifacts`");
+        None
+    }
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "tony-ft-{tag}-{}-{}",
+        std::process::id(),
+        tony::util::ids::next_seq()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn train_conf(dir: &std::path::Path, ckpt: &std::path::Path, steps: u64) -> tony::xmlconf::Configuration {
+    JobConfBuilder::new("ft-job")
+        .instances("worker", 2)
+        .memory("worker", "1g")
+        .instances("ps", 1)
+        .memory("ps", "1g")
+        .train(dir.to_str().unwrap(), "tiny", steps)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "5")
+        .set("tony.application.max-attempts", "4")
+        .build()
+}
+
+#[test]
+fn worker_kill_recovers_from_checkpoint() {
+    let Some(dir) = tiny_dir() else { return };
+    let rm = ResourceManager::start_uniform(4, Resource::new(8192, 8, 0));
+    let ckpt = ckpt_dir("task-kill");
+    let conf = train_conf(&dir, &ckpt, 16);
+
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    let chaos = ChaosInjector::start(
+        rm.clone(),
+        handle.am_state.clone(),
+        vec![Fault::KillTask { task_type: "worker".into(), index: 1, after_step: 6 }],
+    );
+    let report = handle.wait(Duration::from_secs(400)).unwrap();
+    let records = chaos.join();
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+    assert_eq!(records.len(), 1, "fault fired");
+    assert!(records[0].chief_step_at_injection >= 6);
+
+    // The job needed more than one attempt and completed all steps.
+    assert!(handle.am_state.attempt() >= 2, "expected a relaunch");
+    let metrics = handle.am_state.chief_metrics().unwrap();
+    assert_eq!(metrics.step, 16);
+
+    // Restore actually happened: attempt 2's start is the last checkpoint
+    // (>= 5), not step 0; verify via checkpoint store contents.
+    let store = tony::checkpoint::CheckpointStore::new(&ckpt);
+    assert!(store.latest().unwrap().unwrap().step == 16);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn node_kill_recovers() {
+    let Some(dir) = tiny_dir() else { return };
+    // AM on its own high-mem node 0 so the chaos node-kill (node that
+    // hosts task containers) never takes the AM down in this test.
+    use tony::yarn::{NodeSpec, QueueConf};
+    let specs = vec![
+        NodeSpec::new(0, Resource::new(1024, 2, 0)), // fits only the AM
+        NodeSpec::new(1, Resource::new(8192, 8, 0)),
+        NodeSpec::new(2, Resource::new(8192, 8, 0)),
+        NodeSpec::new(3, Resource::new(8192, 8, 0)),
+    ];
+    let rm = ResourceManager::start(specs, QueueConf::default_only());
+    let ckpt = ckpt_dir("node-kill");
+    let conf = train_conf(&dir, &ckpt, 12);
+
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    // Find which node hosts worker:0's container once running, then kill
+    // a *task* node (not node 0).
+    let chaos = ChaosInjector::start(
+        rm.clone(),
+        handle.am_state.clone(),
+        vec![Fault::KillNode { node: 1, after_step: 4 }],
+    );
+    let report = handle.wait(Duration::from_secs(400)).unwrap();
+    let _records = chaos.join();
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+    assert_eq!(rm.alive_node_count(), 3);
+    let metrics = handle.am_state.chief_metrics().unwrap();
+    assert_eq!(metrics.step, 12);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn unrecoverable_job_fails_after_max_attempts() {
+    let Some(dir) = tiny_dir() else { return };
+    let rm = ResourceManager::start_uniform(4, Resource::new(8192, 8, 0));
+    let ckpt = ckpt_dir("doom");
+    let mut conf = train_conf(&dir, &ckpt, 1000);
+    conf.set("tony.application.max-attempts", "2");
+    conf.set("tony.train.checkpoint-every", "0"); // no checkpoints
+
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    // Kill a worker in every attempt, early.
+    let chaos = ChaosInjector::start(
+        rm.clone(),
+        handle.am_state.clone(),
+        vec![
+            Fault::KillTask { task_type: "worker".into(), index: 0, after_step: 1 },
+            Fault::KillTask { task_type: "worker".into(), index: 0, after_step: 1 },
+        ],
+    );
+    let report = handle.wait(Duration::from_secs(400)).unwrap();
+    let _ = chaos.join();
+    assert_eq!(report.state, AppState::Failed);
+    assert!(report.diagnostics.contains("exhausted"), "{}", report.diagnostics);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

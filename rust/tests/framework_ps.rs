@@ -1,0 +1,189 @@
+//! Framework-level integration: the PS/worker protocol in isolation
+//! (no YARN, no AM) — sync barrier semantics, stale-push rejection,
+//! moment fetch for exact checkpoints, async mode, and shutdown.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use tony::framework::protocol::*;
+use tony::framework::ps::PsServer;
+use tony::framework::worker::PsClient;
+use tony::net::rpc::RpcClient;
+use tony::net::wire::Wire;
+use tony::runtime::Engine;
+
+fn tiny_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/tiny missing; run `make artifacts`");
+        None
+    }
+}
+
+struct Shard {
+    ps: Vec<PsServer>,
+    kill: Arc<AtomicBool>,
+    _engines: Vec<Engine>,
+}
+
+fn start_ps(dir: &std::path::Path, n_ps: u32) -> Shard {
+    let kill = Arc::new(AtomicBool::new(false));
+    let mut ps = Vec::new();
+    let mut engines = Vec::new();
+    for i in 0..n_ps {
+        let engine = Engine::start(dir, Some(&["ps_adam"])).unwrap();
+        ps.push(PsServer::start(i, n_ps, engine.handle(), kill.clone()).unwrap());
+        engines.push(engine);
+    }
+    Shard { ps, kill, _engines: engines }
+}
+
+#[test]
+fn init_pull_push_cycle_sync() {
+    let Some(dir) = tiny_dir() else { return };
+    let shard = start_ps(&dir, 2);
+    let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
+    let endpoints: Vec<_> = shard.ps.iter().map(|p| p.addr()).collect();
+    let client = PsClient::connect(&endpoints, meta.n_params, meta.chunk_len).unwrap();
+
+    // Chief-style init at version 0.
+    let params: Vec<f32> = (0..meta.n_params).map(|i| (i as f32 * 1e-4).sin()).collect();
+    client.init(&params, None, 0).unwrap();
+
+    let (v, got) = client.pull(0).unwrap();
+    assert_eq!(v, 0);
+    assert_eq!(got, params);
+
+    // Two workers push for step 0; version must advance to 1 exactly once.
+    let grads: Vec<f32> = vec![0.01; meta.n_params];
+    client.push(&grads, 0, 2, 1e-3, MODE_SYNC).unwrap();
+    // Barrier: a pull for version 1 should NOT complete yet — verify the
+    // version is still 0 via a non-blocking pull(0).
+    let (v, _) = client.pull(0).unwrap();
+    assert_eq!(v, 0, "one of two pushes must not advance the barrier");
+    client.push(&grads, 0, 2, 1e-3, MODE_SYNC).unwrap();
+    let (v, new_params) = client.pull(1).unwrap();
+    assert_eq!(v, 1);
+    assert_ne!(new_params, params, "adam must have moved the params");
+
+    // Moments are now nonzero and fetchable.
+    let (m, vv) = client.moments().unwrap();
+    assert_eq!(m.len(), meta.n_params);
+    assert!(m.iter().any(|x| *x != 0.0));
+    assert!(vv.iter().any(|x| *x != 0.0));
+    shard.kill.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn stale_push_rejected() {
+    let Some(dir) = tiny_dir() else { return };
+    let shard = start_ps(&dir, 1);
+    let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
+    let endpoints: Vec<_> = shard.ps.iter().map(|p| p.addr()).collect();
+    let client = PsClient::connect(&endpoints, meta.n_params, meta.chunk_len).unwrap();
+    client.init(&vec![0.0; meta.n_params], None, 5).unwrap();
+    // Push tagged for an old step (3) while chunks sit at version 5.
+    let err = client.push(&vec![0.1; meta.n_params], 3, 1, 1e-3, MODE_SYNC);
+    assert!(err.is_err(), "stale push must be rejected");
+    assert!(format!("{:#}", err.unwrap_err()).contains("stale"));
+    shard.kill.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn push_before_init_rejected() {
+    let Some(dir) = tiny_dir() else { return };
+    let shard = start_ps(&dir, 1);
+    let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
+    let endpoints: Vec<_> = shard.ps.iter().map(|p| p.addr()).collect();
+    let client = PsClient::connect(&endpoints, meta.n_params, meta.chunk_len).unwrap();
+    assert!(client.push(&vec![0.1; meta.n_params], 0, 1, 1e-3, MODE_SYNC).is_err());
+    shard.kill.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn async_mode_applies_immediately() {
+    let Some(dir) = tiny_dir() else { return };
+    let shard = start_ps(&dir, 2);
+    let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
+    let endpoints: Vec<_> = shard.ps.iter().map(|p| p.addr()).collect();
+    let client = PsClient::connect(&endpoints, meta.n_params, meta.chunk_len).unwrap();
+    client.init(&vec![1.0; meta.n_params], None, 0).unwrap();
+    for k in 0..3 {
+        client
+            .push(&vec![0.05; meta.n_params], k, 99 /* ignored */, 1e-3, MODE_ASYNC)
+            .unwrap();
+    }
+    let (v, _) = client.pull(3).unwrap();
+    assert_eq!(v, 3, "each async push applies immediately");
+    let total: u64 = shard.ps.iter().map(|p| p.applied_updates()).sum();
+    assert_eq!(total, 3 * meta.n_chunks() as u64);
+    shard.kill.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn pull_timeout_and_shutdown_wakeups() {
+    let Some(dir) = tiny_dir() else { return };
+    let shard = start_ps(&dir, 1);
+    let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
+    let addr = shard.ps[0].addr();
+    // Raw RPC pull with a short timeout against an uninitialized chunk.
+    let cli = RpcClient::connect(&addr).unwrap();
+    let req = PullRequest { chunk: 0, min_version: 0, timeout_ms: 100 };
+    let t0 = std::time::Instant::now();
+    let resp = cli.call(PS_PULL, &req.to_bytes());
+    assert!(resp.is_err(), "pull on uninitialized chunk must time out");
+    assert!(t0.elapsed().as_millis() >= 90);
+
+    // A parked pull must wake promptly on shutdown.
+    let cli2 = RpcClient::connect(&addr).unwrap();
+    let waiter = std::thread::spawn(move || {
+        let req = PullRequest { chunk: 0, min_version: 0, timeout_ms: 30_000 };
+        cli2.call(PS_PULL, &req.to_bytes())
+    });
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    shard.ps[0].shutdown();
+    let out = waiter.join().unwrap();
+    assert!(out.is_err(), "shutdown must fail parked pulls");
+    let _ = meta;
+}
+
+#[test]
+fn chunk_ownership_enforced() {
+    let Some(dir) = tiny_dir() else { return };
+    let shard = start_ps(&dir, 2);
+    let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
+    // Ask shard 0 for a chunk owned by shard 1.
+    let cli = RpcClient::connect(&shard.ps[0].addr()).unwrap();
+    let msg = InitChunk {
+        chunk: 1, // 1 % 2 == 1 -> owned by ps:1
+        version: 0,
+        params: vec![0.0; meta.chunk_len],
+        m: vec![0.0; meta.chunk_len],
+        v: vec![0.0; meta.chunk_len],
+    };
+    assert!(cli.call(PS_INIT, &msg.to_bytes()).is_err());
+    shard.kill.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn restore_resumes_from_checkpoint_version() {
+    let Some(dir) = tiny_dir() else { return };
+    let shard = start_ps(&dir, 2);
+    let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
+    let endpoints: Vec<_> = shard.ps.iter().map(|p| p.addr()).collect();
+    let client = PsClient::connect(&endpoints, meta.n_params, meta.chunk_len).unwrap();
+    // Restore at step 42 with nonzero moments (as the chief does).
+    let params = vec![0.5; meta.n_params];
+    let m = vec![0.1; meta.n_params];
+    let v = vec![0.2; meta.n_params];
+    client.init(&params, Some(&(m.clone(), v.clone())), 42).unwrap();
+    let (ver, got) = client.pull(42).unwrap();
+    assert_eq!(ver, 42);
+    assert_eq!(got, params);
+    let (gm, gv) = client.moments().unwrap();
+    assert_eq!(gm, m);
+    assert_eq!(gv, v);
+    shard.kill.store(true, Ordering::Relaxed);
+}

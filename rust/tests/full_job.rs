@@ -1,0 +1,178 @@
+//! End-to-end integration: a full TonY job through the whole stack —
+//! client → RM → AM container → task containers → TaskExecutors →
+//! cluster-spec rendezvous → PS/worker training over TCP → PJRT HLO
+//! execution → job completion.  Requires `make artifacts` (tiny preset).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::client::TonyClient;
+use tony::tonyconf::JobConfBuilder;
+use tony::yarn::{AppState, Resource, ResourceManager};
+
+fn tiny_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/tiny missing; run `make artifacts`");
+        None
+    }
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "tony-test-{tag}-{}-{}",
+        std::process::id(),
+        tony::util::ids::next_seq()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn single_worker_single_ps_job_trains() {
+    let Some(dir) = tiny_dir() else { return };
+    let rm = ResourceManager::start_uniform(3, Resource::new(8192, 8, 0));
+    let ckpt = ckpt_dir("1w1p");
+    let conf = JobConfBuilder::new("tiny-train")
+        .instances("worker", 1)
+        .memory("worker", "1g")
+        .instances("ps", 1)
+        .memory("ps", "1g")
+        .train(dir.to_str().unwrap(), "tiny", 8)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "4")
+        .set("tony.train.eval-every", "4")
+        .build();
+
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    let report = handle.wait(Duration::from_secs(180)).unwrap();
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+
+    // Chief trained to the target step and recorded losses.
+    let metrics = handle.am_state.chief_metrics().unwrap();
+    assert_eq!(metrics.step, 8);
+    assert!(metrics.loss.is_finite() && metrics.loss > 0.0);
+    assert!(metrics.finished);
+    assert!(!metrics.loss_history.is_empty());
+    assert!(metrics.eval_loss > 0.0, "eval ran");
+
+    // Checkpoints exist (steps 4 and 8).
+    let store = tony::checkpoint::CheckpointStore::new(&ckpt);
+    let steps = store.list().unwrap();
+    assert!(steps.contains(&8), "final checkpoint saved: {steps:?}");
+
+    // Cluster capacity fully returned.
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leaked");
+    }
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn multi_worker_multi_ps_sync_training_converges() {
+    let Some(dir) = tiny_dir() else { return };
+    let rm = ResourceManager::start_uniform(4, Resource::new(8192, 8, 0));
+    let ckpt = ckpt_dir("2w2p");
+    let steps = 20u64;
+    let conf = JobConfBuilder::new("sync-train")
+        .instances("worker", 2)
+        .memory("worker", "1g")
+        .instances("ps", 2)
+        .memory("ps", "1g")
+        .train(dir.to_str().unwrap(), "tiny", steps)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "10")
+        .set("tony.train.lr", "0.002")
+        .build();
+
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    // The chief's UI URL must flow back to the client (paper §2.2).
+    let report = handle.wait(Duration::from_secs(300)).unwrap();
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+    assert!(handle.ui_url().is_some(), "worker:0 registered a UI URL");
+
+    let metrics = handle.am_state.chief_metrics().unwrap();
+    assert_eq!(metrics.step, steps);
+    // Loss must drop from the ~ln(256)=5.55 random-init level.
+    let first = metrics.loss_history.first().unwrap().1;
+    let last = metrics.loss_history.last().unwrap().1;
+    assert!(
+        last < first && last < 5.0,
+        "loss should decrease: first={first} last={last}"
+    );
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn async_mode_trains_too() {
+    let Some(dir) = tiny_dir() else { return };
+    let rm = ResourceManager::start_uniform(3, Resource::new(8192, 8, 0));
+    let ckpt = ckpt_dir("async");
+    let conf = JobConfBuilder::new("async-train")
+        .instances("worker", 2)
+        .memory("worker", "1g")
+        .instances("ps", 1)
+        .memory("ps", "1g")
+        .train(dir.to_str().unwrap(), "tiny", 6)
+        .set("tony.train.mode", "async")
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "0")
+        .build();
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    let report = handle.wait(Duration::from_secs(180)).unwrap();
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn client_rejects_impossible_and_stale_jobs() {
+    let Some(dir) = tiny_dir() else { return };
+    let rm = ResourceManager::start_uniform(1, Resource::new(2048, 2, 0));
+    let client = TonyClient::new(rm.clone());
+    // Too big for the cluster, ever.
+    let conf = JobConfBuilder::new("huge")
+        .instances("worker", 64)
+        .memory("worker", "4g")
+        .train(dir.to_str().unwrap(), "tiny", 1)
+        .build();
+    assert!(client.submit(&conf, &dir).is_err());
+    // Bad artifacts dir.
+    let conf = JobConfBuilder::new("noart")
+        .instances("worker", 1)
+        .train("/nonexistent", "tiny", 1)
+        .build();
+    assert!(client.submit(&conf, std::path::Path::new("/nonexistent")).is_err());
+}
+
+#[test]
+fn gpu_labeled_workers_schedule_on_gpu_nodes() {
+    let Some(dir) = tiny_dir() else { return };
+    use tony::yarn::{NodeSpec, QueueConf};
+    let specs = vec![
+        NodeSpec::new(0, Resource::new(8192, 8, 0)),
+        NodeSpec::new(1, Resource::new(8192, 8, 2)).with_label("gpu"),
+    ];
+    let rm = ResourceManager::start(specs, QueueConf::default_only());
+    let ckpt = ckpt_dir("gpu");
+    let conf = JobConfBuilder::new("gpu-job")
+        .instances("worker", 2)
+        .memory("worker", "1g")
+        .gpus("worker", 1)
+        .node_label("worker", "gpu")
+        .instances("ps", 1)
+        .memory("ps", "1g")
+        .train(dir.to_str().unwrap(), "tiny", 4)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "0")
+        .build();
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, &dir).unwrap();
+    let report = handle.wait(Duration::from_secs(180)).unwrap();
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

@@ -1,0 +1,192 @@
+//! Property tests on coordinator state: cluster-spec completeness /
+//! consistency for random task topologies, AM failure/success detection,
+//! and RM teardown capacity conservation under random app mixes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::am::protocol::{FinishedMsg, RegisterMsg, AM_FINISHED, AM_REGISTER};
+use tony::am::state::{AmRpcHandler, AmState};
+use tony::framework::ClusterSpec;
+use tony::net::rpc::RpcHandler;
+use tony::net::wire::Wire;
+use tony::proptest::{check, Gen};
+use tony::tonyconf::{JobConfBuilder, JobSpec};
+use tony::yarn::{Resource, ResourceManager, SubmissionContext};
+use tony::{prop_assert, prop_assert_eq};
+
+fn gen_job(g: &mut Gen) -> JobSpec {
+    let mut b = JobConfBuilder::new("prop").instances("worker", g.range(1, 6) as u32);
+    if g.bool() {
+        b = b.instances("ps", g.range(1, 4) as u32);
+    }
+    if g.bool() {
+        b = b.instances("evaluator", 1);
+    }
+    JobSpec::from_conf(&b.build()).unwrap()
+}
+
+#[test]
+fn cluster_spec_complete_consistent_duplicate_free() {
+    check("spec completeness", 150, |g| {
+        let job = gen_job(g);
+        let state = Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+
+        // Register everyone in a random order with unique ports.
+        let mut tasks: Vec<(String, u32)> = job
+            .task_types
+            .iter()
+            .flat_map(|t| (0..t.instances).map(move |i| (t.name.clone(), i)))
+            .collect();
+        g.rng.shuffle(&mut tasks);
+        let mut port = 7000u16;
+        for (ty, idx) in &tasks {
+            // Spec must not exist before the LAST registration.
+            prop_assert!(!state.try_build_spec(1) || port > 7000 + tasks.len() as u16 - 1);
+            let msg = RegisterMsg {
+                task_type: ty.clone(),
+                index: *idx,
+                host: "127.0.0.1".into(),
+                port,
+                ui_url: None,
+                spec_version: 1,
+            };
+            handler.handle(AM_REGISTER, &msg.to_bytes()).map_err(|e| e)?;
+            port += 1;
+        }
+        prop_assert!(state.try_build_spec(1), "spec must build once all registered");
+        let bytes = handler
+            .handle(
+                tony::am::protocol::AM_GET_SPEC,
+                &tony::am::protocol::GetSpecMsg { spec_version: 1, timeout_ms: 50 }.to_bytes(),
+            )
+            .map_err(|e| e)?;
+        let (spec, _, _) =
+            ClusterSpec::from_tf_config(&String::from_utf8_lossy(&bytes)).map_err(|e| e.to_string())?;
+
+        // Complete: every task type has exactly its instance count.
+        for t in &job.task_types {
+            prop_assert_eq!(spec.endpoints(&t.name).len(), t.instances as usize);
+        }
+        // Duplicate-free endpoints.
+        let mut seen = std::collections::BTreeSet::new();
+        for eps in spec.tasks.values() {
+            for e in eps {
+                prop_assert!(seen.insert(e.to_string()), "duplicate endpoint {e}");
+            }
+        }
+        // Consistent: rendering for any task parses back identically.
+        let (ty, idx) = g.pick(&tasks).clone();
+        let doc = spec.to_tf_config(&ty, idx);
+        let (spec2, pty, pidx) = ClusterSpec::from_tf_config(&doc).map_err(|e| e.to_string())?;
+        prop_assert_eq!(spec2, spec);
+        prop_assert_eq!(pty, ty);
+        prop_assert_eq!(pidx, idx);
+        Ok(())
+    });
+}
+
+#[test]
+fn tracked_outcome_detection_is_exact() {
+    check("outcome detection", 150, |g| {
+        let job = gen_job(g);
+        let state = Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+
+        // Randomly finish tasks with random exit codes.
+        let mut any_tracked_failed = false;
+        let mut all_tracked_done = true;
+        for t in &job.task_types {
+            for i in 0..t.instances {
+                let finish = g.chance(0.8);
+                if !finish {
+                    if t.tracked {
+                        all_tracked_done = false;
+                    }
+                    continue;
+                }
+                let code: i64 = if g.chance(0.3) { g.range(1, 9) as i64 } else { 0 };
+                if t.tracked && code != 0 {
+                    any_tracked_failed = true;
+                }
+                let msg = FinishedMsg {
+                    task_type: t.name.clone(),
+                    index: i,
+                    spec_version: 1,
+                    exit_code: code,
+                };
+                handler.handle(AM_FINISHED, &msg.to_bytes()).map_err(|e| e)?;
+            }
+        }
+        prop_assert_eq!(
+            state.first_tracked_failure(&job).is_some(),
+            any_tracked_failed
+        );
+        prop_assert_eq!(
+            state.all_tracked_succeeded(&job),
+            all_tracked_done && !any_tracked_failed
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn rm_conserves_capacity_across_random_app_mixes() {
+    check("rm capacity conservation", 20, |g| {
+        let rm = ResourceManager::start_uniform(g.range(2, 5) as u32, Resource::new(4096, 8, 0));
+        let n_apps = g.range(1, 5);
+        let mut ids = Vec::new();
+        for i in 0..n_apps {
+            let crash = g.bool();
+            let rm2 = rm.clone();
+            let seq = i + 1;
+            let id = rm
+                .submit_application(
+                    SubmissionContext {
+                        name: format!("app{i}"),
+                        queue: "default".into(),
+                        am_resource: Resource::new(512, 1, 0),
+                    },
+                    Box::new(move |_ctx| {
+                        let app = tony::util::ids::ApplicationId {
+                            cluster_ts: rm2.cluster_ts,
+                            seq,
+                        };
+                        rm2.register_am(app, None).ok();
+                        if crash {
+                            3
+                        } else {
+                            rm2.finish_application(app, true, "ok");
+                            0
+                        }
+                    }),
+                )
+                .map_err(|e| e.to_string())?;
+            ids.push(id);
+        }
+        for id in ids {
+            let report = rm
+                .wait_for_completion(id, Duration::from_secs(10))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(report.state.is_terminal());
+        }
+        // Give completion callbacks a beat to release capacity.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        loop {
+            let ok = rm.node_usage().iter().all(|(_, free, cap)| free == cap);
+            if ok {
+                break;
+            }
+            if std::time::Instant::now() > deadline {
+                for (id, free, cap) in rm.node_usage() {
+                    prop_assert!(free == cap, "node {id} leaked: {free} != {cap}");
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,180 @@
+//! Property tests: CapacityScheduler invariants under random workloads
+//! (DESIGN.md §7) — the coordinator-correctness core of the repro.
+
+use std::collections::BTreeMap;
+
+use tony::proptest::{check, Gen};
+use tony::util::ids::{ApplicationId, NodeId};
+use tony::yarn::scheduler::SchedNode;
+use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
+use tony::{prop_assert, prop_assert_eq};
+
+fn gen_nodes(g: &mut Gen) -> Vec<SchedNode> {
+    let n = g.range(1, 20) as u32;
+    (0..n)
+        .map(|i| SchedNode {
+            id: NodeId(i),
+            label: match g.usize_up_to(3) {
+                0 => Some("gpu".to_string()),
+                1 => Some("high-memory".to_string()),
+                _ => None,
+            },
+            free: Resource::new(g.range(1024, 32768), g.range(1, 32) as u32, g.range(0, 4) as u32),
+        })
+        .collect()
+}
+
+fn gen_asks(g: &mut Gen) -> Vec<ContainerRequest> {
+    let n = g.range(1, 12);
+    (0..n)
+        .map(|_| {
+            let mut req = ContainerRequest::new(
+                Resource::new(g.range(128, 8192), g.range(1, 8) as u32, g.range(0, 2) as u32),
+                g.range(1, 6) as u32,
+            )
+            .with_priority(g.range(1, 5) as u8);
+            match g.usize_up_to(3) {
+                0 => req = req.with_label("gpu"),
+                1 => req = req.with_label("high-memory"),
+                _ => {}
+            }
+            req
+        })
+        .collect()
+}
+
+#[test]
+fn never_oversubscribes_any_dimension() {
+    check("no oversubscription", 200, |g| {
+        let mut nodes = gen_nodes(g);
+        let orig: BTreeMap<u32, Resource> = nodes.iter().map(|n| (n.id.0, n.free)).collect();
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let mut sched = CapacityScheduler::new(QueueConf::default_only(), total);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        sched.add_asks(app, "default", &gen_asks(g), 0);
+        let grants = sched.schedule(&mut nodes);
+
+        // Per-node conservation: free + granted == original, no negatives.
+        let mut granted_per_node: BTreeMap<u32, Resource> = BTreeMap::new();
+        for gr in &grants {
+            *granted_per_node.entry(gr.node.0).or_insert(Resource::ZERO) += gr.ask.resource;
+        }
+        for n in &nodes {
+            let used = granted_per_node.get(&n.id.0).copied().unwrap_or(Resource::ZERO);
+            let orig_free = orig[&n.id.0];
+            prop_assert_eq!(n.free + used, orig_free);
+            prop_assert!(
+                orig_free.fits(&used),
+                "node {} oversubscribed: {used} > {orig_free}",
+                n.id.0
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn labels_always_respected() {
+    check("label partitions", 200, |g| {
+        let mut nodes = gen_nodes(g);
+        let labels: BTreeMap<u32, Option<String>> =
+            nodes.iter().map(|n| (n.id.0, n.label.clone())).collect();
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let mut sched = CapacityScheduler::new(QueueConf::default_only(), total);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        sched.add_asks(app, "default", &gen_asks(g), 0);
+        for gr in sched.schedule(&mut nodes) {
+            prop_assert_eq!(&labels[&gr.node.0], &gr.ask.node_label);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn queue_max_capacity_is_never_exceeded() {
+    check("queue ceilings", 200, |g| {
+        let cap_a = 0.1 + g.f64() * 0.8;
+        let max_a = (cap_a + g.f64() * (1.0 - cap_a)).min(1.0);
+        let queues = vec![
+            QueueConf::new("a", cap_a, max_a),
+            QueueConf::new("b", 1.0 - cap_a, 1.0),
+        ];
+        let mut nodes = gen_nodes(g);
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let mut sched = CapacityScheduler::new(queues, total);
+        let app1 = ApplicationId { cluster_ts: 1, seq: 1 };
+        let app2 = ApplicationId { cluster_ts: 1, seq: 2 };
+        let t = sched.add_asks(app1, "a", &gen_asks(g), 0);
+        sched.add_asks(app2, "b", &gen_asks(g), t);
+        sched.schedule(&mut nodes);
+        let used_a = sched.queue_used("a").unwrap();
+        prop_assert!(
+            used_a.dominant_share(&total) <= max_a + 1e-6,
+            "queue a used {used_a} > {max_a} of {total}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduling_is_deterministic() {
+    check("determinism", 100, |g| {
+        let nodes = gen_nodes(g);
+        let asks = gen_asks(g);
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        let run = || {
+            let mut sched = CapacityScheduler::new(QueueConf::default_only(), total);
+            sched.add_asks(app, "default", &asks, 0);
+            let mut view = nodes.clone();
+            sched.schedule(&mut view)
+        };
+        prop_assert_eq!(run(), run());
+        Ok(())
+    });
+}
+
+#[test]
+fn release_enables_pending_work() {
+    check("release unblocks", 100, |g| {
+        // One node exactly big enough for one container at a time.
+        let shape = Resource::new(1024 + g.range(0, 1024), 1, 0);
+        let mut nodes = vec![SchedNode { id: NodeId(0), label: None, free: shape }];
+        let mut sched = CapacityScheduler::new(QueueConf::default_only(), shape);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        let count = g.range(2, 6) as u32;
+        sched.add_asks(app, "default", &[ContainerRequest::new(shape, count)], 0);
+        let mut granted = 0;
+        for _ in 0..count {
+            let grants = sched.schedule(&mut nodes);
+            prop_assert_eq!(grants.len(), 1);
+            granted += 1;
+            // Simulate completion: return capacity.
+            sched.release("default", shape);
+            nodes[0].free += shape;
+        }
+        prop_assert_eq!(granted, count);
+        prop_assert_eq!(sched.pending_count(), 0);
+        Ok(())
+    });
+}
+
+#[test]
+fn grants_never_exceed_asks() {
+    check("grant conservation", 150, |g| {
+        let mut nodes = gen_nodes(g);
+        let asks = gen_asks(g);
+        let asked: u32 = asks.iter().map(|a| a.count).sum();
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let mut sched = CapacityScheduler::new(QueueConf::default_only(), total);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        sched.add_asks(app, "default", &asks, 0);
+        let grants = sched.schedule(&mut nodes);
+        prop_assert!(grants.len() as u32 <= asked);
+        prop_assert_eq!(grants.len() + sched.pending_count(), asked as usize);
+        // Second pass with no new capacity grants nothing.
+        let again = sched.schedule(&mut nodes);
+        prop_assert_eq!(again.len(), 0);
+        Ok(())
+    });
+}

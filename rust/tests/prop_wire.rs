@@ -1,0 +1,157 @@
+//! Property tests: wire codec, tensors, protocol messages round-trip for
+//! arbitrary values, and corrupt/truncated buffers never decode silently.
+
+use tony::framework::protocol::{InitChunk, PullRequest, PushRequest, TaskMetrics};
+use tony::net::wire::{Reader, Wire, Writer};
+use tony::proptest::check;
+use tony::runtime::Tensor;
+use tony::{prop_assert, prop_assert_eq};
+
+#[test]
+fn f32_vectors_round_trip() {
+    check("f32 vec round trip", 300, |g| {
+        let v = g.vec_f32(5000);
+        let b = v.to_bytes();
+        let back = Vec::<f32>::from_bytes(&b).map_err(|e| e.to_string())?;
+        prop_assert_eq!(v.len(), back.len());
+        for (a, x) in v.iter().zip(&back) {
+            prop_assert!(a.to_bits() == x.to_bits(), "bit mismatch {a} vs {x}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn strings_round_trip() {
+    check("string round trip", 300, |g| {
+        let s = g.string(200);
+        let b = s.to_bytes();
+        prop_assert_eq!(String::from_bytes(&b).map_err(|e| e.to_string())?, s);
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_frames_round_trip() {
+    check("mixed frame", 200, |g| {
+        let mut w = Writer::new();
+        let a = g.u64();
+        let b = g.f32();
+        let c = g.string(50);
+        let d = g.vec_f32(100);
+        let e = g.bool();
+        w.u64(a);
+        w.f32(b);
+        w.str(&c);
+        w.f32_slice(&d);
+        w.bool(e);
+        let mut r = Reader::new(&w.buf);
+        prop_assert_eq!(r.u64().map_err(|x| x.to_string())?, a);
+        prop_assert!(r.f32().map_err(|x| x.to_string())?.to_bits() == b.to_bits(), "f32");
+        prop_assert_eq!(r.str().map_err(|x| x.to_string())?, c);
+        prop_assert_eq!(r.f32_vec().map_err(|x| x.to_string())?, d);
+        prop_assert_eq!(r.bool().map_err(|x| x.to_string())?, e);
+        prop_assert_eq!(r.remaining(), 0);
+        Ok(())
+    });
+}
+
+#[test]
+fn truncation_always_errors() {
+    check("truncation detected", 300, |g| {
+        let v = g.vec_f32(500);
+        if v.is_empty() {
+            return Ok(());
+        }
+        let b = v.to_bytes();
+        let cut = g.usize_up_to(b.len() - 1);
+        // Truncated decode must error OR (if cut lands on a valid prefix
+        // boundary) from_bytes still errors due to trailing-byte check.
+        prop_assert!(
+            Vec::<f32>::from_bytes(&b[..cut]).is_err(),
+            "truncated to {cut}/{} decoded",
+            b.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn tensors_round_trip() {
+    check("tensor round trip", 200, |g| {
+        let t = match g.usize_up_to(2) {
+            0 => {
+                let d = g.vec_f32(300);
+                Tensor::F32 { shape: vec![d.len()], data: d }
+            }
+            1 => {
+                let n = g.len(100);
+                Tensor::I32 {
+                    shape: vec![n],
+                    data: (0..n).map(|_| g.u32() as i32).collect(),
+                }
+            }
+            _ => Tensor::U32 { shape: vec![], data: vec![g.u32()] },
+        };
+        let b = t.to_bytes();
+        prop_assert_eq!(Tensor::from_bytes(&b).map_err(|e| e.to_string())?, t);
+        Ok(())
+    });
+}
+
+#[test]
+fn protocol_messages_round_trip() {
+    check("protocol messages", 200, |g| {
+        let init = InitChunk {
+            chunk: g.u32() % 1000,
+            version: g.u64(),
+            params: g.vec_f32(200),
+            m: g.vec_f32(200),
+            v: g.vec_f32(200),
+        };
+        prop_assert_eq!(
+            InitChunk::from_bytes(&init.to_bytes()).map_err(|e| e.to_string())?,
+            init
+        );
+        let push = PushRequest {
+            chunk: g.u32(),
+            step: g.u64(),
+            grads: g.vec_f32(300),
+            n_workers: g.u32() % 100,
+            lr: g.f32(),
+            mode: (g.u32() % 2) as u8,
+        };
+        let back = PushRequest::from_bytes(&push.to_bytes()).map_err(|e| e.to_string())?;
+        prop_assert!(back.lr.to_bits() == push.lr.to_bits(), "lr bits");
+        prop_assert_eq!(back.grads.len(), push.grads.len());
+        let pull = PullRequest { chunk: g.u32(), min_version: g.u64(), timeout_ms: g.u64() };
+        prop_assert_eq!(
+            PullRequest::from_bytes(&pull.to_bytes()).map_err(|e| e.to_string())?,
+            pull
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn metrics_round_trip_with_history() {
+    check("metrics", 200, |g| {
+        let n = g.len(50);
+        let m = TaskMetrics {
+            step: g.u64(),
+            loss: g.f32(),
+            eval_loss: g.f32(),
+            tokens_done: g.u64(),
+            step_ms_avg: g.f64() * 1000.0,
+            mem_used_mb: g.u64() % 100_000,
+            updates_applied: g.u64(),
+            finished: g.bool(),
+            loss_history: (0..n).map(|i| (i as u64, g.f32())).collect(),
+        };
+        let back = TaskMetrics::from_bytes(&m.to_bytes()).map_err(|e| e.to_string())?;
+        prop_assert_eq!(back.loss_history.len(), m.loss_history.len());
+        prop_assert_eq!(back.step, m.step);
+        prop_assert_eq!(back.finished, m.finished);
+        Ok(())
+    });
+}

@@ -1,0 +1,152 @@
+//! Integration: the Rust PJRT engine executes the real AOT artifacts.
+//!
+//! Requires `make artifacts` (the tiny preset).  Tests skip gracefully if
+//! artifacts are absent so `cargo test` stays runnable standalone, but the
+//! Makefile's `test` target always builds artifacts first.
+
+use tony::runtime::{Engine, Tensor};
+
+fn tiny_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/tiny missing; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn init_params_is_deterministic_and_finite() {
+    let Some(dir) = tiny_dir() else { return };
+    let engine = Engine::start(&dir, Some(&["init_params"])).unwrap();
+    let h = engine.handle();
+    let n = h.meta().n_params;
+
+    let out1 = h.execute("init_params", vec![Tensor::scalar_u32(42)]).unwrap();
+    let out2 = h.execute("init_params", vec![Tensor::scalar_u32(42)]).unwrap();
+    let p1 = out1[0].as_f32().unwrap();
+    let p2 = out2[0].as_f32().unwrap();
+    assert_eq!(p1.len(), n);
+    assert_eq!(p1, p2, "same seed must give identical params");
+    assert!(p1.iter().all(|v| v.is_finite()));
+    // Different seed -> different params.
+    let out3 = h.execute("init_params", vec![Tensor::scalar_u32(7)]).unwrap();
+    assert_ne!(out3[0].as_f32().unwrap(), p1);
+}
+
+#[test]
+fn worker_step_produces_loss_and_grads() {
+    let Some(dir) = tiny_dir() else { return };
+    let engine = Engine::start(&dir, Some(&["init_params", "worker_step", "eval_loss"])).unwrap();
+    let h = engine.handle();
+    let meta = h.meta();
+    let (b, s, v) = (meta.dims.batch, meta.dims.seq_len, meta.dims.vocab);
+
+    let params = h.execute("init_params", vec![Tensor::scalar_u32(0)]).unwrap().remove(0);
+    let tokens: Vec<i32> = (0..b * (s + 1)).map(|i| (i * 7 % v) as i32).collect();
+    let batch = Tensor::i32(&[b, s + 1], tokens);
+
+    let out = h.execute("worker_step", vec![params.clone(), batch.clone()]).unwrap();
+    assert_eq!(out.len(), 2);
+    let loss = out[0].scalar().unwrap();
+    let grads = out[1].as_f32().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // Random init on uniform-ish tokens: loss should be near ln(vocab).
+    let ln_v = (v as f32).ln();
+    assert!((loss - ln_v).abs() < 2.0, "loss={loss} ln_v={ln_v}");
+    assert_eq!(grads.len(), meta.n_params);
+    assert!(grads.iter().all(|g| g.is_finite()));
+    let grad_norm: f32 = grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(grad_norm > 1e-6, "gradients must be nonzero");
+
+    // eval_loss agrees with worker_step's loss on the same inputs.
+    let ev = h.execute("eval_loss", vec![params, batch]).unwrap();
+    let eloss = ev[0].scalar().unwrap();
+    assert!((eloss - loss).abs() < 1e-4, "{eloss} vs {loss}");
+}
+
+#[test]
+fn ps_adam_matches_scalar_reference() {
+    let Some(dir) = tiny_dir() else { return };
+    let engine = Engine::start(&dir, Some(&["ps_adam"])).unwrap();
+    let h = engine.handle();
+    let c = h.meta().chunk_len;
+    let adam = &h.meta().adam;
+
+    let p: Vec<f32> = (0..c).map(|i| (i as f32 * 0.001).sin()).collect();
+    let g: Vec<f32> = (0..c).map(|i| (i as f32 * 0.002).cos()).collect();
+    let m = vec![0.01f32; c];
+    let v = vec![0.5f32; c];
+    let (step, lr) = (3.0f32, 1e-3f32);
+
+    let out = h
+        .execute(
+            "ps_adam",
+            vec![
+                Tensor::f32(&[c], p.clone()),
+                Tensor::f32(&[c], g.clone()),
+                Tensor::f32(&[c], m.clone()),
+                Tensor::f32(&[c], v.clone()),
+                Tensor::scalar_f32(step),
+                Tensor::scalar_f32(lr),
+            ],
+        )
+        .unwrap();
+    let (p2, m2, v2) = (
+        out[0].as_f32().unwrap(),
+        out[1].as_f32().unwrap(),
+        out[2].as_f32().unwrap(),
+    );
+    let (b1, b2, eps) = (adam.beta1 as f32, adam.beta2 as f32, adam.eps as f32);
+    for i in (0..c).step_by(997) {
+        let em = b1 * m[i] + (1.0 - b1) * g[i];
+        let ev = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        let mhat = em / (1.0 - b1.powf(step));
+        let vhat = ev / (1.0 - b2.powf(step));
+        let ep = p[i] - lr * mhat / (vhat.sqrt() + eps);
+        assert!((m2[i] - em).abs() < 1e-5, "m[{i}]");
+        assert!((v2[i] - ev).abs() < 1e-5, "v[{i}]");
+        assert!((p2[i] - ep).abs() < 1e-5, "p[{i}]: {} vs {ep}", p2[i]);
+    }
+}
+
+#[test]
+fn zero_grad_zero_state_is_fixed_point() {
+    // The shard-padding invariant: pad lanes (p=g=m=v=0) stay exactly 0.
+    let Some(dir) = tiny_dir() else { return };
+    let engine = Engine::start(&dir, Some(&["ps_adam"])).unwrap();
+    let h = engine.handle();
+    let c = h.meta().chunk_len;
+    let z = vec![0.0f32; c];
+    let out = h
+        .execute(
+            "ps_adam",
+            vec![
+                Tensor::f32(&[c], z.clone()),
+                Tensor::f32(&[c], z.clone()),
+                Tensor::f32(&[c], z.clone()),
+                Tensor::f32(&[c], z.clone()),
+                Tensor::scalar_f32(1.0),
+                Tensor::scalar_f32(0.1),
+            ],
+        )
+        .unwrap();
+    for t in &out {
+        assert!(t.as_f32().unwrap().iter().all(|x| *x == 0.0));
+    }
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let Some(dir) = tiny_dir() else { return };
+    let engine = Engine::start(&dir, Some(&["worker_step"])).unwrap();
+    let h = engine.handle();
+    // Wrong arity.
+    assert!(h.execute("worker_step", vec![]).is_err());
+    // Wrong shape.
+    let bad = vec![Tensor::zeros_f32(&[3]), Tensor::i32(&[1], vec![0])];
+    assert!(h.execute("worker_step", bad).is_err());
+    // Unknown artifact.
+    assert!(h.execute("nope", vec![]).is_err());
+}

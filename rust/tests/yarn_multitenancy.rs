@@ -1,0 +1,177 @@
+//! YARN-level integration: multiple concurrent applications sharing the
+//! simulated cluster — queue isolation, queuing under contention, and
+//! capacity conservation across interleaved lifecycles.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::util::ids::ApplicationId;
+use tony::yarn::{
+    AppState, ContainerRequest, NodeSpec, QueueConf, Resource, ResourceManager,
+    SubmissionContext,
+};
+
+/// An AM that requests `n` containers of `shape`, runs trivial tasks in
+/// them, waits for all to succeed, then finishes.
+fn simple_am(
+    rm: Arc<ResourceManager>,
+    seq: u64,
+    n: u32,
+    shape: Resource,
+    task_ms: u64,
+) -> tony::yarn::container::Launchable {
+    Box::new(move |_ctx| {
+        let app = ApplicationId { cluster_ts: rm.cluster_ts, seq };
+        rm.register_am(app, None).unwrap();
+        let asks = vec![ContainerRequest::new(shape, n)];
+        let mut asked = false;
+        let mut done = 0u32;
+        while done < n {
+            let resp = rm.allocate(app, if asked { &[] } else { &asks }, &[]).unwrap();
+            asked = true;
+            for c in resp.allocated {
+                rm.start_container(
+                    &c,
+                    BTreeMap::new(),
+                    Box::new(move |ctx| {
+                        let deadline =
+                            std::time::Instant::now() + Duration::from_millis(task_ms);
+                        while std::time::Instant::now() < deadline {
+                            if ctx.killed() {
+                                return 1;
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        0
+                    }),
+                )
+                .unwrap();
+            }
+            done += resp.completed.iter().filter(|s| s.exit.is_success()).count() as u32;
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        rm.finish_application(app, true, "done");
+        0
+    })
+}
+
+#[test]
+fn contending_apps_all_finish_by_queuing() {
+    // 2 nodes x 4 GiB; 4 apps each wanting 2x 2 GiB tasks + small AM ->
+    // heavy contention; everything must still finish.
+    let rm = ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+    let mut ids = Vec::new();
+    for i in 0..4u64 {
+        let am = simple_am(rm.clone(), i + 1, 2, Resource::new(1536, 1, 0), 80);
+        let id = rm
+            .submit_application(
+                SubmissionContext {
+                    name: format!("job{i}"),
+                    queue: "default".into(),
+                    am_resource: Resource::new(256, 1, 0),
+                },
+                am,
+            )
+            .unwrap();
+        ids.push(id);
+    }
+    for id in ids {
+        let report = rm.wait_for_completion(id, Duration::from_secs(30)).unwrap();
+        assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+    }
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leak after 4 concurrent apps");
+    }
+}
+
+#[test]
+fn queue_isolation_under_pressure() {
+    // prod gets 75%, adhoc 25% with a hard 30% ceiling: a greedy adhoc
+    // app must never push the prod app out.
+    let queues = vec![
+        QueueConf::new("prod", 0.75, 1.0),
+        QueueConf::new("adhoc", 0.25, 0.3),
+    ];
+    let specs = vec![
+        NodeSpec::new(0, Resource::new(8192, 16, 0)),
+        NodeSpec::new(1, Resource::new(8192, 16, 0)),
+    ];
+    let rm = ResourceManager::start(specs, queues);
+
+    let greedy = simple_am(rm.clone(), 1, 12, Resource::new(1024, 1, 0), 150);
+    let greedy_id = rm
+        .submit_application(
+            SubmissionContext {
+                name: "greedy".into(),
+                queue: "adhoc".into(),
+                am_resource: Resource::new(256, 1, 0),
+            },
+            greedy,
+        )
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    let prod = simple_am(rm.clone(), 2, 8, Resource::new(1024, 1, 0), 80);
+    let prod_id = rm
+        .submit_application(
+            SubmissionContext {
+                name: "prod".into(),
+                queue: "prod".into(),
+                am_resource: Resource::new(256, 1, 0),
+            },
+            prod,
+        )
+        .unwrap();
+
+    // While both run, adhoc usage must respect its 30% ceiling.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let total = Resource::new(16384, 32, 0);
+    let mut prod_done = false;
+    while std::time::Instant::now() < deadline {
+        for (q, used) in rm.queue_usage() {
+            if q == "adhoc" {
+                let share = used.dominant_share(&total);
+                assert!(share <= 0.30 + 1e-6, "adhoc at {share} > ceiling");
+            }
+        }
+        if rm.app_report(prod_id).unwrap().state.is_terminal() {
+            prod_done = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(prod_done, "prod app starved by greedy adhoc app");
+    assert_eq!(rm.app_report(prod_id).unwrap().state, AppState::Finished);
+    let greedy_report = rm.wait_for_completion(greedy_id, Duration::from_secs(60)).unwrap();
+    assert_eq!(greedy_report.state, AppState::Finished);
+}
+
+#[test]
+fn client_kill_releases_everything() {
+    let rm = ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+    let am = simple_am(rm.clone(), 1, 4, Resource::new(1024, 1, 0), 60_000); // long tasks
+    let id = rm
+        .submit_application(
+            SubmissionContext {
+                name: "victim".into(),
+                queue: "default".into(),
+                am_resource: Resource::new(256, 1, 0),
+            },
+            am,
+        )
+        .unwrap();
+    // Let it get some containers running.
+    std::thread::sleep(Duration::from_millis(200));
+    rm.kill_application(id);
+    assert_eq!(rm.app_report(id).unwrap().state, AppState::Killed);
+    // All containers die and capacity returns.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let clean = rm.node_usage().iter().all(|(_, free, cap)| free == cap);
+        if clean {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "capacity not returned after kill");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

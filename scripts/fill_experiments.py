@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Splice measured outputs into EXPERIMENTS.md.
+
+Reads:
+  bench_output.txt            (cargo bench | tee)
+  runs/e2e_small_record.md    (examples/e2e_train.rs)
+  the L1 estimator sweep      (computed in-process)
+
+and replaces the `<!-- BENCH:x -->`, `<!-- E2E -->`, `<!-- L1SWEEP -->`
+placeholder blocks.  Idempotent: rerunning replaces the fenced block that
+follows each marker.
+"""
+
+import io
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MARKER_TO_TITLE = {
+    "FIG1": "FIG1: lifecycle stage latency",
+    "C1": "C1: contention",
+    "C2": "C2: cluster-spec assembly",
+    "C3": "C3: AM heartbeat fan-in",
+    "C4": "C4: recovery after worker kill",
+    "C5": "C5: CapacityScheduler pass",
+    "C6": "C6: full-stack training throughput",
+    "C7": "C7: Dr. Elephant heuristic quality",
+    "PERF": "PERF: hot-path microbenches",
+}
+
+
+def extract_table(bench_text: str, title_prefix: str) -> str:
+    """Grab a `### title` block (including trailing notes) from bench output."""
+    lines = bench_text.splitlines()
+    out = []
+    grabbing = False
+    for i, line in enumerate(lines):
+        if line.startswith("### ") and title_prefix in line:
+            grabbing = True
+            out.append(line)
+            continue
+        if grabbing:
+            if line.startswith("### ") or line.startswith("     Running") or line.startswith("   Compiling"):
+                break
+            out.append(line)
+    text = "\n".join(out).rstrip()
+    return text if text else "(bench output not found — rerun `cargo bench`)"
+
+
+def splice(md: str, marker: str, content: str) -> str:
+    pattern = re.compile(
+        r"(<!-- " + re.escape(marker) + r" -->\n```\n).*?(\n```)", re.DOTALL)
+    repl = r"\1" + content.replace("\\", "\\\\") + r"\2"
+    new, n = pattern.subn(repl, md)
+    if n == 0:
+        print(f"warning: marker {marker} not found", file=sys.stderr)
+        return md
+    return new
+
+
+def l1_sweep() -> str:
+    sys.path.insert(0, os.path.join(ROOT, "python"))
+    from compile.kernels import estimate as est  # noqa: E402
+
+    buf = io.StringIO()
+    stdout = sys.stdout
+    sys.stdout = buf
+    try:
+        est.main()
+    finally:
+        sys.stdout = stdout
+    return buf.getvalue().strip()
+
+
+def main():
+    md_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    md = open(md_path).read()
+
+    bench_path = os.path.join(ROOT, "bench_output.txt")
+    if os.path.exists(bench_path):
+        bench = open(bench_path).read()
+        for marker, title in MARKER_TO_TITLE.items():
+            md = splice(md, f"BENCH:{marker}", extract_table(bench, title))
+    else:
+        print("warning: bench_output.txt missing; bench tables not updated",
+              file=sys.stderr)
+
+    rec_path = os.path.join(ROOT, "runs", "e2e_small_record.md")
+    if os.path.exists(rec_path):
+        md = splice(md, "E2E", open(rec_path).read().strip())
+
+    md = splice(md, "L1SWEEP", l1_sweep())
+
+    open(md_path, "w").write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
