@@ -1,0 +1,158 @@
+//! Gateway throughput bench: accepted-submissions/sec through the HTTP
+//! API, and end-to-end job throughput at 1 / 8 / 32 concurrent jobs on
+//! one shared simulated cluster — the multi-tenant operating point the
+//! paper's orchestration story targets (and the C1 contention tables
+//! only approximate with synthetic jobs).
+//!
+//! Per level: start `serve`-equivalent machinery (Gateway + API), POST
+//! 2×level jobs (min 8), wait for all to reach a terminal state, then
+//! verify the invariants the gateway exists to provide: admission
+//! decisions visible via `GET /api/v1/jobs`, every job FINISHED, every
+//! finished job recorded in the HistoryStore, and all RM capacity
+//! returned.
+
+use std::time::{Duration, Instant};
+
+use tony::bench::{f1, f2, n, Table};
+use tony::gateway::{api, Gateway, GatewayConf, JobState};
+use tony::json::Json;
+use tony::portal::http_request;
+use tony::tonyconf::JobConfBuilder;
+use tony::xmlconf::Configuration;
+use tony::yarn::{Resource, ResourceManager};
+
+fn job_conf(name: &str, steps: u64) -> Configuration {
+    JobConfBuilder::new(name)
+        .instances("worker", 1)
+        .memory("worker", "256m")
+        .instances("ps", 1)
+        .memory("ps", "256m")
+        .set("tony.am.memory", "256m")
+        .set("tony.train.steps", &steps.to_string())
+        .set("tony.train.checkpoint-every", "0")
+        .build()
+}
+
+struct LevelResult {
+    jobs: usize,
+    submit_per_sec: f64,
+    e2e_ms: f64,
+    jobs_per_sec: f64,
+    peak_running: usize,
+    finished: usize,
+    in_history: usize,
+}
+
+fn run_level(concurrency: usize) -> LevelResult {
+    let base = std::env::temp_dir().join(format!(
+        "tony-bench-gw-{}-{}",
+        std::process::id(),
+        concurrency
+    ));
+    let _ = std::fs::remove_dir_all(&base);
+    // 16 nodes x 4 GiB / 16 cores: 32 jobs (768 MiB each) fit fully, so
+    // the bench measures orchestration throughput, not queueing stalls.
+    let rm = ResourceManager::start_uniform(16, Resource::new(4096, 16, 0));
+    let mut conf = GatewayConf::new(base.join("artifacts"));
+    conf.history_dir = base.join("history");
+    conf.workers = concurrency;
+    conf.queue_depth = 256;
+    conf.quotas.max_active_per_user = 10_000; // throughput, not quotas
+    let gw = Gateway::start(rm, conf).expect("gateway start");
+    let api_srv = api::GatewayApi::start(gw.clone(), 0).expect("api start");
+    let hostport = api_srv.addr.to_string();
+
+    let jobs = (concurrency * 2).max(8);
+    let t_submit = Instant::now();
+    let mut ids = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        let user = format!("user{}", i % 8);
+        let (id, _) =
+            api::submit_remote(&hostport, &user, 1 + (i % 3) as u8, &job_conf(&format!("j{i}"), 3))
+                .expect("accept");
+        ids.push(id);
+    }
+    let submit_s = t_submit.elapsed().as_secs_f64();
+
+    // Watch the run: track the peak number of concurrently RUNNING jobs.
+    let mut peak_running = 0usize;
+    let t0 = Instant::now();
+    loop {
+        let (_, running) = gw.live_counts();
+        peak_running = peak_running.max(running);
+        if gw.wait_idle(Duration::from_millis(20)) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(600),
+            "gateway wedged at concurrency {concurrency}"
+        );
+    }
+    let e2e_s = t0.elapsed().as_secs_f64();
+
+    // Admission decisions visible over the API.
+    let (status, body) =
+        http_request("GET", &format!("http://{hostport}/api/v1/jobs"), "").expect("GET jobs");
+    assert_eq!(status, 200);
+    let listing = Json::parse(&body).expect("jobs json");
+    let listed = listing.get("jobs").and_then(|a| a.as_arr()).map(|a| a.len()).unwrap_or(0);
+    assert_eq!(listed, jobs, "every submission visible via GET /api/v1/jobs");
+
+    let finished =
+        ids.iter().filter(|id| gw.job_state(**id) == Some(JobState::Finished)).count();
+    let in_history = gw.history().list().expect("history list").len();
+    for (_, free, cap) in gw.rm().node_usage() {
+        assert_eq!(free, cap, "capacity leaked at concurrency {concurrency}");
+    }
+    gw.shutdown();
+    let _ = std::fs::remove_dir_all(&base);
+
+    LevelResult {
+        jobs,
+        submit_per_sec: jobs as f64 / submit_s.max(1e-9),
+        e2e_ms: e2e_s * 1e3,
+        jobs_per_sec: jobs as f64 / e2e_s.max(1e-9),
+        peak_running,
+        finished,
+        in_history,
+    }
+}
+
+fn main() {
+    let mut table = Table::new(&[
+        "concurrency",
+        "jobs",
+        "submits/s",
+        "e2e-ms",
+        "jobs/s",
+        "peak-running",
+        "finished",
+        "in-history",
+    ]);
+    for concurrency in [1usize, 8, 32] {
+        let r = run_level(concurrency);
+        assert_eq!(r.finished, r.jobs, "all jobs must finish at concurrency {concurrency}");
+        assert!(
+            r.in_history >= r.jobs,
+            "every finished job must land in the history store \
+             ({} < {} at concurrency {concurrency})",
+            r.in_history,
+            r.jobs
+        );
+        table.row(&[
+            n(concurrency),
+            n(r.jobs),
+            f1(r.submit_per_sec),
+            f1(r.e2e_ms),
+            f2(r.jobs_per_sec),
+            n(r.peak_running),
+            n(r.finished),
+            n(r.in_history),
+        ]);
+    }
+    table.print("G1: gateway multi-tenant throughput (accepted submissions + end-to-end jobs)");
+    println!(
+        "\n(64 jobs at concurrency 32 ran on one shared 16-node simulated cluster; \
+         quotas disabled so the table isolates orchestration throughput.)"
+    );
+}

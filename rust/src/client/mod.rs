@@ -21,6 +21,21 @@ use crate::util::ids::ApplicationId;
 use crate::xmlconf::Configuration;
 use crate::yarn::{AppReport, AppState, ResourceManager, SubmissionContext};
 
+/// Submission knobs (see [`TonyClient::submit_opts`]).
+pub struct SubmitOpts {
+    /// Start a per-job monitoring portal (the single-job CLI default).
+    pub start_portal: bool,
+    /// Tracking URL to register with the RM when no portal is started
+    /// (the gateway points this at its own `/api/v1/jobs/<id>` route).
+    pub tracking_url: Option<String>,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> SubmitOpts {
+        SubmitOpts { start_portal: true, tracking_url: None }
+    }
+}
+
 /// A submitted job: the client-side handle.
 pub struct JobHandle {
     pub app_id: ApplicationId,
@@ -91,6 +106,19 @@ impl TonyClient {
     /// Validate, stage, and submit a job described by `conf`.
     /// `preset_dir` points at the AOT artifacts the tasks will execute.
     pub fn submit(&self, conf: &Configuration, preset_dir: &std::path::Path) -> Result<JobHandle> {
+        self.submit_opts(conf, preset_dir, SubmitOpts::default())
+    }
+
+    /// Like [`TonyClient::submit`], with knobs for multi-job hosts: the
+    /// gateway runs dozens of jobs in one process and serves one central
+    /// API, so it suppresses the per-job portal and installs its own
+    /// job-status URL as the RM tracking URL instead.
+    pub fn submit_opts(
+        &self,
+        conf: &Configuration,
+        preset_dir: &std::path::Path,
+        opts: SubmitOpts,
+    ) -> Result<JobHandle> {
         let spec = Arc::new(JobSpec::from_conf(conf).context("invalid job configuration")?);
 
         // Fail fast if the job can never fit (the resource-contention
@@ -149,15 +177,22 @@ impl TonyClient {
         let _ = app_id_cell.set(app_id);
         // Central monitoring portal (paper challenge #3); its URL becomes
         // the application's tracking URL, like YARN's proxy link.
-        let portal = match Portal::start(am_state.clone(), rm.clone()) {
-            Ok(p) => {
-                rm.set_tracking_url(app_id, p.url());
-                Some(p)
+        let portal = if opts.start_portal {
+            match Portal::start(am_state.clone(), rm.clone()) {
+                Ok(p) => {
+                    rm.set_tracking_url(app_id, p.url());
+                    Some(p)
+                }
+                Err(e) => {
+                    crate::twarn!("client", "portal failed to start: {e:#}");
+                    None
+                }
             }
-            Err(e) => {
-                crate::twarn!("client", "portal failed to start: {e:#}");
-                None
+        } else {
+            if let Some(url) = opts.tracking_url {
+                rm.set_tracking_url(app_id, url);
             }
+            None
         };
         tinfo!("client", "submitted {} ('{}'), staged at {}", app_id, spec.name, staging.display());
         Ok(JobHandle { app_id, rm, am_state, staging_dir: Some(staging), portal })

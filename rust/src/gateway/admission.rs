@@ -1,0 +1,317 @@
+//! Admission control for the gateway: spec validation, queue mapping,
+//! and per-user / per-queue quotas, with a machine-readable reject
+//! reason for every refusal (the paper's shared-cluster story depends on
+//! the scheduler seeing only *plausible* work; hopeless or abusive specs
+//! are bounced at the front door).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::tonyconf::JobSpec;
+use crate::yarn::Resource;
+
+/// Static quota configuration.
+#[derive(Debug, Clone)]
+pub struct QuotaConf {
+    /// Max jobs per user that may be pending or running at once.
+    pub max_active_per_user: u32,
+    /// Max jobs per scheduler queue that may be pending or running at
+    /// once (None = no per-queue job cap).
+    pub max_active_per_queue: Option<u32>,
+    /// Aggregate in-flight resources (tasks + AM) a single user may hold
+    /// (None = unlimited).
+    pub max_user_resource: Option<Resource>,
+    /// User → queue mapping applied when a spec leaves its queue at
+    /// `default` (LinkedIn-style org queues).
+    pub user_queues: BTreeMap<String, String>,
+}
+
+impl Default for QuotaConf {
+    fn default() -> QuotaConf {
+        QuotaConf {
+            max_active_per_user: 8,
+            max_active_per_queue: None,
+            max_user_resource: None,
+            user_queues: BTreeMap::new(),
+        }
+    }
+}
+
+/// Why a submission was refused.  `code()` is stable for API clients;
+/// Display is the human version.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RejectReason {
+    InvalidSpec(String),
+    JobTooLarge { needed: Resource, cluster: Resource },
+    UnknownQueue(String),
+    UserQuotaExceeded { user: String, active: u32, limit: u32 },
+    QueueQuotaExceeded { queue: String, active: u32, limit: u32 },
+    UserResourceExceeded { user: String, needed: Resource, limit: Resource },
+    Backpressure(String),
+}
+
+impl RejectReason {
+    pub fn code(&self) -> &'static str {
+        match self {
+            RejectReason::InvalidSpec(_) => "invalid-spec",
+            RejectReason::JobTooLarge { .. } => "job-too-large",
+            RejectReason::UnknownQueue(_) => "unknown-queue",
+            RejectReason::UserQuotaExceeded { .. } => "user-quota",
+            RejectReason::QueueQuotaExceeded { .. } => "queue-quota",
+            RejectReason::UserResourceExceeded { .. } => "user-resources",
+            RejectReason::Backpressure(_) => "backpressure",
+        }
+    }
+
+    /// Whether a client could succeed by simply retrying later (quota /
+    /// backpressure rejects) as opposed to fixing the spec.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            RejectReason::UserQuotaExceeded { .. }
+                | RejectReason::QueueQuotaExceeded { .. }
+                | RejectReason::UserResourceExceeded { .. }
+                | RejectReason::Backpressure(_)
+        )
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::InvalidSpec(e) => write!(f, "invalid job spec: {e}"),
+            RejectReason::JobTooLarge { needed, cluster } => write!(
+                f,
+                "job needs {needed} but the whole cluster is only {cluster}"
+            ),
+            RejectReason::UnknownQueue(q) => write!(f, "queue '{q}' is not configured"),
+            RejectReason::UserQuotaExceeded { user, active, limit } => write!(
+                f,
+                "user '{user}' already has {active}/{limit} jobs in flight"
+            ),
+            RejectReason::QueueQuotaExceeded { queue, active, limit } => write!(
+                f,
+                "queue '{queue}' already has {active}/{limit} jobs in flight"
+            ),
+            RejectReason::UserResourceExceeded { user, needed, limit } => write!(
+                f,
+                "user '{user}' in-flight resources would exceed {limit} (requested {needed})"
+            ),
+            RejectReason::Backpressure(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+/// The gateway state admission decides against (built under the
+/// gateway's lock, so decisions are atomic with the bookkeeping).
+pub struct AdmissionView<'a> {
+    pub user_active: &'a BTreeMap<String, u32>,
+    pub queue_active: &'a BTreeMap<String, u32>,
+    pub user_resources: &'a BTreeMap<String, Resource>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionController {
+    pub quotas: QuotaConf,
+}
+
+impl AdmissionController {
+    pub fn new(quotas: QuotaConf) -> AdmissionController {
+        AdmissionController { quotas }
+    }
+
+    /// Resolve the scheduler queue for `(user, spec)`.  A spec that names
+    /// a queue explicitly must name a configured one; a spec on
+    /// `default` follows the user mapping when present.
+    pub fn map_queue(
+        &self,
+        user: &str,
+        spec: &JobSpec,
+        known_queues: &[String],
+    ) -> Result<String, RejectReason> {
+        let wants = if spec.queue == "default" {
+            self.quotas.user_queues.get(user).cloned().unwrap_or_else(|| spec.queue.clone())
+        } else {
+            spec.queue.clone()
+        };
+        if known_queues.iter().any(|q| *q == wants) {
+            Ok(wants)
+        } else {
+            Err(RejectReason::UnknownQueue(wants))
+        }
+    }
+
+    /// The full admission decision: returns the target queue, or the
+    /// first reason to refuse.
+    pub fn decide(
+        &self,
+        user: &str,
+        spec: &JobSpec,
+        cluster_total: Resource,
+        known_queues: &[String],
+        view: &AdmissionView<'_>,
+    ) -> Result<String, RejectReason> {
+        // 1. The job must be satisfiable at all: transient contention
+        //    queues, impossible jobs bounce (paper §1).
+        let needed = spec.total_task_resources() + spec.am_resource;
+        if !cluster_total.fits(&needed) {
+            return Err(RejectReason::JobTooLarge { needed, cluster: cluster_total });
+        }
+
+        // 2. Queue mapping + existence.
+        let queue = self.map_queue(user, spec, known_queues)?;
+
+        // 3. Per-user job-count quota.
+        let active = view.user_active.get(user).copied().unwrap_or(0);
+        if active >= self.quotas.max_active_per_user {
+            return Err(RejectReason::UserQuotaExceeded {
+                user: user.to_string(),
+                active,
+                limit: self.quotas.max_active_per_user,
+            });
+        }
+
+        // 4. Per-queue job-count quota.
+        if let Some(limit) = self.quotas.max_active_per_queue {
+            let qactive = view.queue_active.get(&queue).copied().unwrap_or(0);
+            if qactive >= limit {
+                return Err(RejectReason::QueueQuotaExceeded {
+                    queue,
+                    active: qactive,
+                    limit,
+                });
+            }
+        }
+
+        // 5. Per-user aggregate resource quota.
+        if let Some(limit) = self.quotas.max_user_resource {
+            let held = view.user_resources.get(user).copied().unwrap_or(Resource::ZERO);
+            let after = held + needed;
+            if !limit.fits(&after) {
+                return Err(RejectReason::UserResourceExceeded {
+                    user: user.to_string(),
+                    needed,
+                    limit,
+                });
+            }
+        }
+
+        Ok(queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tonyconf::{JobConfBuilder, JobSpec};
+
+    fn spec(queue: &str, workers: u32, mem: &str) -> JobSpec {
+        let conf = JobConfBuilder::new("j")
+            .queue(queue)
+            .instances("worker", workers)
+            .memory("worker", mem)
+            .build();
+        JobSpec::from_conf(&conf).unwrap()
+    }
+
+    fn empty_view() -> (BTreeMap<String, u32>, BTreeMap<String, u32>, BTreeMap<String, Resource>)
+    {
+        (BTreeMap::new(), BTreeMap::new(), BTreeMap::new())
+    }
+
+    fn queues() -> Vec<String> {
+        vec!["default".to_string(), "ml".to_string()]
+    }
+
+    #[test]
+    fn admits_reasonable_job() {
+        let ac = AdmissionController::default();
+        let (ua, qa, ur) = empty_view();
+        let view = AdmissionView { user_active: &ua, queue_active: &qa, user_resources: &ur };
+        let q = ac
+            .decide("alice", &spec("ml", 2, "1g"), Resource::new(65536, 64, 0), &queues(), &view)
+            .unwrap();
+        assert_eq!(q, "ml");
+    }
+
+    #[test]
+    fn rejects_oversized_job() {
+        let ac = AdmissionController::default();
+        let (ua, qa, ur) = empty_view();
+        let view = AdmissionView { user_active: &ua, queue_active: &qa, user_resources: &ur };
+        let err = ac
+            .decide("alice", &spec("ml", 64, "8g"), Resource::new(4096, 4, 0), &queues(), &view)
+            .unwrap_err();
+        assert_eq!(err.code(), "job-too-large");
+        assert!(!err.is_retryable());
+    }
+
+    #[test]
+    fn rejects_unknown_queue_and_maps_users() {
+        let mut quotas = QuotaConf::default();
+        quotas.user_queues.insert("alice".to_string(), "ml".to_string());
+        let ac = AdmissionController::new(quotas);
+        let (ua, qa, ur) = empty_view();
+        let view = AdmissionView { user_active: &ua, queue_active: &qa, user_resources: &ur };
+        let total = Resource::new(65536, 64, 0);
+
+        // Explicit unknown queue: bounced.
+        let err =
+            ac.decide("bob", &spec("etl", 1, "1g"), total, &queues(), &view).unwrap_err();
+        assert_eq!(err, RejectReason::UnknownQueue("etl".to_string()));
+
+        // alice's default-queue jobs land on her mapped queue.
+        let q = ac.decide("alice", &spec("default", 1, "1g"), total, &queues(), &view).unwrap();
+        assert_eq!(q, "ml");
+        // bob has no mapping: stays on default.
+        let q = ac.decide("bob", &spec("default", 1, "1g"), total, &queues(), &view).unwrap();
+        assert_eq!(q, "default");
+    }
+
+    #[test]
+    fn enforces_user_and_queue_quotas() {
+        let quotas = QuotaConf {
+            max_active_per_user: 2,
+            max_active_per_queue: Some(3),
+            ..QuotaConf::default()
+        };
+        let ac = AdmissionController::new(quotas);
+        let total = Resource::new(65536, 64, 0);
+        let mut ua = BTreeMap::new();
+        ua.insert("alice".to_string(), 2u32);
+        let mut qa = BTreeMap::new();
+        qa.insert("ml".to_string(), 3u32);
+        let ur = BTreeMap::new();
+        let view = AdmissionView { user_active: &ua, queue_active: &qa, user_resources: &ur };
+
+        let err = ac.decide("alice", &spec("default", 1, "1g"), total, &queues(), &view);
+        assert_eq!(err.unwrap_err().code(), "user-quota");
+
+        let err = ac.decide("bob", &spec("ml", 1, "1g"), total, &queues(), &view);
+        assert_eq!(err.unwrap_err().code(), "queue-quota");
+        // Another queue still admits bob.
+        assert!(ac.decide("bob", &spec("default", 1, "1g"), total, &queues(), &view).is_ok());
+    }
+
+    #[test]
+    fn enforces_user_resource_quota() {
+        let quotas = QuotaConf {
+            max_user_resource: Some(Resource::new(4096, 8, 0)),
+            ..QuotaConf::default()
+        };
+        let ac = AdmissionController::new(quotas);
+        let total = Resource::new(65536, 64, 0);
+        let ua = BTreeMap::new();
+        let qa = BTreeMap::new();
+        let mut ur = BTreeMap::new();
+        ur.insert("alice".to_string(), Resource::new(3584, 2, 0));
+        let view = AdmissionView { user_active: &ua, queue_active: &qa, user_resources: &ur };
+        // 1g worker + 512m AM on top of 3.5g held busts the 4g cap.
+        let err = ac.decide("alice", &spec("default", 1, "1g"), total, &queues(), &view);
+        let err = err.unwrap_err();
+        assert_eq!(err.code(), "user-resources");
+        assert!(err.is_retryable());
+        // A fresh user is fine.
+        assert!(ac.decide("bob", &spec("default", 1, "1g"), total, &queues(), &view).is_ok());
+    }
+}

@@ -1,0 +1,375 @@
+//! The gateway's HTTP JSON API, reusing the portal's hand-rolled HTTP
+//! plumbing (`portal::read_http_request` / `portal::http_response`).
+//!
+//! Routes:
+//!
+//! - `POST   /api/v1/jobs`      — submit (`{"user", "priority", "conf": {...}}`)
+//! - `GET    /api/v1/jobs`      — every job + its admission decision
+//! - `GET    /api/v1/jobs/<id>` — one job
+//! - `DELETE /api/v1/jobs/<id>` — kill (queued or running)
+//! - `GET    /api/v1/cluster`   — RM utilization + gateway counters
+//!
+//! Status codes: 201 accepted, 400 spec problems (invalid / too large /
+//! unknown queue), 429 retryable refusals (quota, backpressure), 404
+//! unknown id.  Every reject body carries `code` (stable, from
+//! [`RejectReason::code`]) and a human `error` string.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{Gateway, RejectReason, SubmitOutcome};
+use crate::json::Json;
+use crate::portal::{http_request, http_response, read_http_request};
+use crate::util::HostPort;
+use crate::xmlconf::Configuration;
+use crate::{tinfo, twarn};
+
+pub struct GatewayApi {
+    pub addr: HostPort,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A parsed submission request body.
+pub struct SubmitBody {
+    pub user: String,
+    pub priority: u8,
+    pub conf: Configuration,
+}
+
+/// Parse `{"user": ..., "priority": ..., "name": ..., "conf": {...}}`.
+/// Conf values may be JSON strings or numbers (rendered verbatim).
+pub fn parse_submit_body(body: &str) -> Result<SubmitBody, String> {
+    let j = Json::parse(body).map_err(|e| format!("bad JSON: {e}"))?;
+    let user = j
+        .get("user")
+        .and_then(|u| u.as_str())
+        .unwrap_or("anonymous")
+        .to_string();
+    let priority = j.get("priority").and_then(|p| p.as_u64()).unwrap_or(1).min(10) as u8;
+    let conf_obj = j
+        .get("conf")
+        .and_then(|c| c.as_obj())
+        .ok_or_else(|| "missing 'conf' object".to_string())?;
+    let mut conf = Configuration::new();
+    for (k, v) in conf_obj {
+        let val = match v {
+            Json::Str(s) => s.clone(),
+            other => other.render(),
+        };
+        conf.set(k, val);
+    }
+    if let Some(name) = j.get("name").and_then(|n| n.as_str()) {
+        conf.set("tony.application.name", name);
+    }
+    Ok(SubmitBody { user, priority, conf })
+}
+
+/// Encode a conf + identity as the wire body `parse_submit_body` reads.
+pub fn render_submit_body(user: &str, priority: u8, conf: &Configuration) -> String {
+    let mut c = Json::obj();
+    for k in conf.keys() {
+        if let Some(v) = conf.get(k) {
+            c.set(k, v);
+        }
+    }
+    let mut j = Json::obj();
+    j.set("user", user);
+    j.set("priority", priority as u64);
+    j.set("conf", c);
+    j.render()
+}
+
+fn reject_status(reason: &RejectReason) -> &'static str {
+    if reason.is_retryable() {
+        "429 Too Many Requests"
+    } else {
+        "400 Bad Request"
+    }
+}
+
+fn job_id_from_path(path: &str, prefix: &str) -> Option<u64> {
+    path.strip_prefix(prefix).and_then(|rest| rest.parse().ok())
+}
+
+fn handle(gw: &Gateway, stream: &mut std::net::TcpStream) {
+    let req = match read_http_request(stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let msg = e.to_string();
+            let status = if msg.contains("exceeds") {
+                "413 Payload Too Large"
+            } else {
+                "400 Bad Request"
+            };
+            let mut j = Json::obj();
+            j.set("error", msg.as_str());
+            http_response(stream, status, "application/json", &j.render_pretty());
+            return;
+        }
+    };
+    let method = req.method.as_str();
+    let path = req.path.as_str();
+    match (method, path) {
+        ("POST", "/api/v1/jobs") => match parse_submit_body(&req.body) {
+            Err(msg) => {
+                let mut j = Json::obj();
+                j.set("error", msg.as_str());
+                j.set("code", "bad-request");
+                http_response(stream, "400 Bad Request", "application/json", &j.render_pretty());
+            }
+            Ok(body) => match gw.submit_conf(&body.user, body.priority, body.conf) {
+                SubmitOutcome::Accepted { id } => {
+                    let mut j = Json::obj();
+                    j.set("id", id);
+                    j.set("state", "PENDING");
+                    http_response(stream, "201 Created", "application/json", &j.render_pretty());
+                }
+                SubmitOutcome::Rejected { id, reason } => {
+                    let mut j = Json::obj();
+                    j.set("id", id);
+                    j.set("state", "REJECTED");
+                    j.set("error", reason.to_string());
+                    j.set("code", reason.code());
+                    http_response(stream, reject_status(&reason), "application/json", &j.render_pretty());
+                }
+            },
+        },
+        ("GET", "/api/v1/jobs") => {
+            http_response(stream, "200 OK", "application/json", &gw.jobs_json().render_pretty());
+        }
+        ("GET", "/api/v1/cluster") => {
+            http_response(stream, "200 OK", "application/json", &gw.cluster_json().render_pretty());
+        }
+        ("GET", p) if p.starts_with("/api/v1/jobs/") => {
+            match job_id_from_path(p, "/api/v1/jobs/").and_then(|id| gw.job_json(id)) {
+                Some(j) => http_response(stream, "200 OK", "application/json", &j.render_pretty()),
+                None => http_response(stream, "404 Not Found", "application/json", "{\"error\": \"no such job\"}"),
+            }
+        }
+        ("DELETE", p) if p.starts_with("/api/v1/jobs/") => {
+            let killed = job_id_from_path(p, "/api/v1/jobs/").and_then(|id| {
+                gw.kill(id).map(|state| (id, state))
+            });
+            match killed {
+                Some((id, state)) => {
+                    let mut j = Json::obj();
+                    j.set("id", id);
+                    j.set("state", state.as_str());
+                    j.set("kill", "requested");
+                    http_response(stream, "200 OK", "application/json", &j.render_pretty());
+                }
+                None => http_response(stream, "404 Not Found", "application/json", "{\"error\": \"no such job\"}"),
+            }
+        }
+        _ => http_response(stream, "404 Not Found", "text/plain", "not found"),
+    }
+}
+
+impl GatewayApi {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and serve the API.  The
+    /// bound URL is installed as the gateway's tracking-URL base.
+    pub fn start(gw: Arc<Gateway>, port: u16) -> Result<GatewayApi> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding gateway API on port {port}"))?;
+        let addr = HostPort::from_addr(listener.local_addr()?);
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        gw.set_api_url(format!("http://{addr}"));
+        let thread = std::thread::Builder::new().name("gw-api".into()).spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        // Thread-per-connection: one slow or malicious
+                        // client must not starve every other tenant's
+                        // submit/status/kill calls.
+                        let g = gw.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("gw-api-conn".into())
+                            .spawn(move || handle(&g, &mut stream));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        twarn!("gateway", "api accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        })?;
+        tinfo!("gateway", "API listening at http://{addr}");
+        Ok(GatewayApi { addr, stop, thread: Some(thread) })
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for GatewayApi {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------- client side (used by `tony submit --gateway`) ----------------
+
+/// Submit a conf to a remote gateway.  Returns (job id, state) on accept;
+/// rejects surface as errors carrying the server's reason.
+pub fn submit_remote(
+    gateway: &str,
+    user: &str,
+    priority: u8,
+    conf: &Configuration,
+) -> Result<(u64, String)> {
+    let body = render_submit_body(user, priority, conf);
+    let (status, resp) =
+        http_request("POST", &format!("http://{gateway}/api/v1/jobs"), &body)?;
+    let j = Json::parse(&resp).map_err(|e| anyhow!("bad gateway response: {e}"))?;
+    if status != 201 {
+        let err = j.get("error").and_then(|e| e.as_str()).unwrap_or("unknown reason");
+        anyhow::bail!("gateway rejected the job (HTTP {status}): {err}");
+    }
+    let id = j
+        .get("id")
+        .and_then(|i| i.as_u64())
+        .ok_or_else(|| anyhow!("gateway response missing job id"))?;
+    let state = j.get("state").and_then(|s| s.as_str()).unwrap_or("PENDING").to_string();
+    Ok((id, state))
+}
+
+/// Fetch one job's JSON from a remote gateway.
+pub fn job_remote(gateway: &str, id: u64) -> Result<Json> {
+    let (status, resp) = http_request("GET", &format!("http://{gateway}/api/v1/jobs/{id}"), "")?;
+    if status != 200 {
+        anyhow::bail!("gateway returned HTTP {status} for job {id}");
+    }
+    Json::parse(&resp).map_err(|e| anyhow!("bad gateway response: {e}"))
+}
+
+/// Poll a remote gateway until the job reaches a terminal state.
+pub fn wait_remote(gateway: &str, id: u64, timeout: Duration) -> Result<(String, Json)> {
+    let deadline = std::time::Instant::now() + timeout;
+    loop {
+        let j = job_remote(gateway, id)?;
+        let state = j
+            .get("state")
+            .and_then(|s| s.as_str())
+            .unwrap_or("UNKNOWN")
+            .to_string();
+        match state.as_str() {
+            "PENDING" | "RUNNING" => {}
+            _ => return Ok((state, j)),
+        }
+        if std::time::Instant::now() > deadline {
+            anyhow::bail!("timed out waiting for job {id} (last state {state})");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::GatewayConf;
+    use crate::tonyconf::JobConfBuilder;
+    use crate::yarn::{Resource, ResourceManager};
+
+    fn gw(tag: &str) -> Arc<Gateway> {
+        let base = std::env::temp_dir().join(format!(
+            "tony-apitest-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        let mut conf = GatewayConf::new(base.join("artifacts"));
+        conf.history_dir = base.join("history");
+        conf.workers = 2;
+        let rm = ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+        Gateway::start(rm, conf).unwrap()
+    }
+
+    fn job_conf(name: &str) -> Configuration {
+        JobConfBuilder::new(name)
+            .instances("worker", 1)
+            .memory("worker", "512m")
+            .instances("ps", 1)
+            .memory("ps", "512m")
+            .set("tony.am.memory", "256m")
+            .set("tony.train.steps", "2")
+            .build()
+    }
+
+    #[test]
+    fn submit_body_round_trips() {
+        let conf = job_conf("rt");
+        let body = render_submit_body("alice", 3, &conf);
+        let parsed = parse_submit_body(&body).unwrap();
+        assert_eq!(parsed.user, "alice");
+        assert_eq!(parsed.priority, 3);
+        assert_eq!(parsed.conf.get("tony.worker.instances"), conf.get("tony.worker.instances"));
+        assert!(parse_submit_body("{\"user\": \"x\"}").is_err(), "conf is required");
+        assert!(parse_submit_body("not json").is_err());
+    }
+
+    #[test]
+    fn api_end_to_end_over_http() {
+        let gw = gw("http");
+        let api = GatewayApi::start(gw.clone(), 0).unwrap();
+        let hostport = api.addr.to_string();
+
+        // Submit, watch it finish, see it in the listing.
+        let (id, state) = submit_remote(&hostport, "alice", 2, &job_conf("via-http")).unwrap();
+        assert_eq!(state, "PENDING");
+        let (final_state, j) = wait_remote(&hostport, id, Duration::from_secs(120)).unwrap();
+        assert_eq!(final_state, "FINISHED", "job json: {}", j.render_pretty());
+        assert_eq!(j.get("user").and_then(|u| u.as_str()), Some("alice"));
+
+        let (status, body) =
+            http_request("GET", &format!("http://{hostport}/api/v1/jobs"), "").unwrap();
+        assert_eq!(status, 200);
+        let listing = Json::parse(&body).unwrap();
+        assert_eq!(listing.get("jobs").and_then(|a| a.as_arr()).unwrap().len(), 1);
+
+        // Cluster view includes the gateway block.
+        let (status, body) =
+            http_request("GET", &format!("http://{hostport}/api/v1/cluster"), "").unwrap();
+        assert_eq!(status, 200);
+        let cluster = Json::parse(&body).unwrap();
+        assert!(cluster.get("gateway").is_some());
+        assert!(cluster.get("nodes").is_some());
+
+        // Rejects carry a code and the right status class.
+        let big = JobConfBuilder::new("big").instances("worker", 64).memory("worker", "8g").build();
+        let err = submit_remote(&hostport, "bob", 1, &big).unwrap_err();
+        assert!(format!("{err:#}").contains("HTTP 400"), "{err:#}");
+
+        // Unknown job id → 404.
+        let (status, _) =
+            http_request("GET", &format!("http://{hostport}/api/v1/jobs/999"), "").unwrap();
+        assert_eq!(status, 404);
+
+        // DELETE is a no-op state echo for a finished job.
+        let (status, body) =
+            http_request("DELETE", &format!("http://{hostport}/api/v1/jobs/{id}"), "").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(
+            Json::parse(&body).unwrap().get("state").and_then(|s| s.as_str()),
+            Some("FINISHED")
+        );
+
+        gw.shutdown();
+    }
+}

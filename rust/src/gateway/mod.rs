@@ -1,0 +1,821 @@
+//! The TonY gateway: a long-running, multi-tenant job-submission service
+//! (the paper's L3 coordination contribution, scaled from one
+//! `TonyClient` invocation to a shared daemon).
+//!
+//! One gateway process owns the [`ResourceManager`] and runs many TonY
+//! jobs concurrently against it:
+//!
+//! ```text
+//!   users ── POST /api/v1/jobs ─▶ admission ─▶ pending queue ─▶ worker pool
+//!                                   │ reject              (N concurrent AM
+//!                                   ▼ with reason          lifecycles)
+//!                               job table ◀── state updates ── TonyClient
+//!                                   │                             │
+//!            GET /api/v1/jobs ◀─────┘            HistoryStore ◀───┘
+//! ```
+//!
+//! - [`admission`]: spec validation, queue mapping, per-user/per-queue
+//!   quotas — every refusal carries a machine-readable reason;
+//! - [`queue`]: bounded priority queue with backpressure and fair FIFO
+//!   within a priority level;
+//! - [`api`]: the HTTP JSON API (`/api/v1/jobs`, `/api/v1/cluster`),
+//!   reusing the portal's hand-rolled HTTP plumbing;
+//! - this module: the job table, the worker pool that drives each
+//!   accepted job through its full AM lifecycle (with gateway-level
+//!   retry on AM failure), kill propagation, and automatic
+//!   [`HistoryStore`] recording for every job that ran.
+
+pub mod admission;
+pub mod api;
+pub mod queue;
+
+pub use admission::{AdmissionController, AdmissionView, QuotaConf, RejectReason};
+pub use api::GatewayApi;
+pub use queue::{PendingQueue, PushError};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::client::{SubmitOpts, TonyClient};
+use crate::history::{HistoryStore, JobRecord};
+use crate::json::Json;
+use crate::tonyconf::JobSpec;
+use crate::util::ids::ApplicationId;
+use crate::xmlconf::Configuration;
+use crate::yarn::{AppState, Resource, ResourceManager};
+use crate::{tinfo, twarn};
+
+/// Gateway-side job lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Finished,
+    Failed,
+    Killed,
+    Rejected,
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Pending | JobState::Running)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Pending => "PENDING",
+            JobState::Running => "RUNNING",
+            JobState::Finished => "FINISHED",
+            JobState::Failed => "FAILED",
+            JobState::Killed => "KILLED",
+            JobState::Rejected => "REJECTED",
+        }
+    }
+}
+
+/// Gateway configuration.
+#[derive(Debug, Clone)]
+pub struct GatewayConf {
+    /// Worker-pool size: how many jobs run their AM lifecycle at once.
+    pub workers: usize,
+    /// Bound on the pending queue (admission backpressure past this).
+    pub queue_depth: usize,
+    /// Admission quotas.
+    pub quotas: QuotaConf,
+    /// Gateway-level retries when an application ends FAILED (the AM
+    /// already retries task failures internally; this re-runs the whole
+    /// application, e.g. after an AM crash).
+    pub max_submit_attempts: u32,
+    /// AOT artifacts the jobs execute (synthetic preset generated here
+    /// when missing, sim builds only).
+    pub artifacts_dir: PathBuf,
+    /// Where finished jobs are recorded.
+    pub history_dir: PathBuf,
+    /// Per-attempt wall-clock ceiling.
+    pub job_timeout: Duration,
+    /// Retention cap for the in-memory job table: once exceeded, the
+    /// oldest *terminal* entries are evicted (the daemon runs forever;
+    /// an unbounded table would let reject spam grow memory without
+    /// limit).  Live jobs are never evicted.
+    pub max_retained_jobs: usize,
+}
+
+impl GatewayConf {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> GatewayConf {
+        GatewayConf {
+            workers: 8,
+            queue_depth: 64,
+            quotas: QuotaConf::default(),
+            max_submit_attempts: 2,
+            artifacts_dir: artifacts_dir.into(),
+            history_dir: std::env::temp_dir().join("tony-history"),
+            job_timeout: Duration::from_secs(600),
+            max_retained_jobs: 10_000,
+        }
+    }
+}
+
+/// Counters exposed on `/api/v1/cluster`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GatewayStats {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub finished: u64,
+    pub failed: u64,
+    pub killed: u64,
+}
+
+struct Job {
+    id: u64,
+    user: String,
+    name: String,
+    queue: String,
+    priority: u8,
+    state: JobState,
+    detail: String,
+    app_id: Option<ApplicationId>,
+    attempts: u32,
+    wall_ms: u64,
+    /// Tasks + AM, for per-user resource quota release.
+    resources: Resource,
+    kill_requested: bool,
+    conf: Configuration,
+}
+
+struct GwInner {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    user_active: BTreeMap<String, u32>,
+    queue_active: BTreeMap<String, u32>,
+    user_resources: BTreeMap<String, Resource>,
+    stats: GatewayStats,
+}
+
+/// The accept/reject verdict for one submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitOutcome {
+    Accepted { id: u64 },
+    Rejected { id: u64, reason: RejectReason },
+}
+
+pub struct Gateway {
+    rm: Arc<ResourceManager>,
+    conf: GatewayConf,
+    admission: AdmissionController,
+    queue: PendingQueue,
+    history: HistoryStore,
+    inner: Mutex<GwInner>,
+    stop: AtomicBool,
+    api_url: Mutex<Option<String>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Gateway {
+    /// Start the gateway: verify/generate artifacts and spin up the
+    /// worker pool.  Callers must invoke [`Gateway::shutdown`] when done
+    /// (the worker threads hold `Arc<Gateway>` references).
+    pub fn start(rm: Arc<ResourceManager>, conf: GatewayConf) -> Result<Arc<Gateway>> {
+        crate::runtime::synthetic::ensure_preset(&conf.artifacts_dir)
+            .context("preparing artifacts for the gateway")?;
+        let gw = Arc::new(Gateway {
+            rm,
+            admission: AdmissionController::new(conf.quotas.clone()),
+            queue: PendingQueue::new(conf.queue_depth),
+            history: HistoryStore::new(&conf.history_dir),
+            inner: Mutex::new(GwInner {
+                jobs: BTreeMap::new(),
+                next_id: 1,
+                user_active: BTreeMap::new(),
+                queue_active: BTreeMap::new(),
+                user_resources: BTreeMap::new(),
+                stats: GatewayStats::default(),
+            }),
+            stop: AtomicBool::new(false),
+            api_url: Mutex::new(None),
+            workers: Mutex::new(Vec::new()),
+            conf,
+        });
+        let n = gw.conf.workers.max(1);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let g = gw.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gw-worker-{i}"))
+                    .spawn(move || g.worker_loop())
+                    .context("spawning gateway worker")?,
+            );
+        }
+        *gw.workers.lock().unwrap() = handles;
+        tinfo!("gateway", "gateway up: {} workers, queue depth {}", n, gw.conf.queue_depth);
+        Ok(gw)
+    }
+
+    pub fn rm(&self) -> &Arc<ResourceManager> {
+        &self.rm
+    }
+
+    pub fn history(&self) -> &HistoryStore {
+        &self.history
+    }
+
+    pub fn conf(&self) -> &GatewayConf {
+        &self.conf
+    }
+
+    pub fn set_api_url(&self, url: String) {
+        *self.api_url.lock().unwrap() = Some(url);
+    }
+
+    pub fn api_url(&self) -> Option<String> {
+        self.api_url.lock().unwrap().clone()
+    }
+
+    /// Submit a job on behalf of `user`.  Runs admission, records the
+    /// decision in the job table either way, and enqueues on accept.
+    pub fn submit_conf(&self, user: &str, priority: u8, conf: Configuration) -> SubmitOutcome {
+        let mut conf = conf;
+        let spec = match JobSpec::from_conf(&conf) {
+            Ok(s) => s,
+            Err(e) => {
+                return self.reject(user, priority, &conf, RejectReason::InvalidSpec(
+                    format!("{e:#}"),
+                ))
+            }
+        };
+        let cluster_total = self.cluster_total();
+        let known: Vec<String> =
+            self.rm.queue_usage().into_iter().map(|(name, _)| name).collect();
+        let needed = spec.total_task_resources() + spec.am_resource;
+
+        let mut inner = self.inner.lock().unwrap();
+        let view = AdmissionView {
+            user_active: &inner.user_active,
+            queue_active: &inner.queue_active,
+            user_resources: &inner.user_resources,
+        };
+        let queue = match self.admission.decide(user, &spec, cluster_total, &known, &view) {
+            Ok(q) => q,
+            Err(reason) => {
+                drop(inner);
+                return self.reject(user, priority, &conf, reason);
+            }
+        };
+
+        let id = inner.next_id;
+        inner.next_id += 1;
+        // Multi-tenant hygiene: pin the job to its mapped queue and give
+        // it a private checkpoint dir unless the user chose one.
+        conf.set("tony.application.queue", queue.as_str());
+        if conf.get("tony.train.checkpoint-dir").is_none() {
+            // Unique per process AND per gateway instance: job ids restart
+            // at 1 for every gateway, so they alone would collide.
+            let ckpt = std::env::temp_dir().join(format!(
+                "tony-gateway-ckpt-{}-{}",
+                std::process::id(),
+                crate::util::ids::next_seq()
+            ));
+            conf.set("tony.train.checkpoint-dir", ckpt.to_string_lossy().to_string());
+        }
+        let job = Job {
+            id,
+            user: user.to_string(),
+            name: spec.name.clone(),
+            queue: queue.clone(),
+            priority,
+            state: JobState::Pending,
+            detail: String::new(),
+            app_id: None,
+            attempts: 0,
+            wall_ms: 0,
+            resources: needed,
+            kill_requested: false,
+            conf,
+        };
+        if let Err(e) = self.queue.try_push(priority, id) {
+            // Backpressure: record the refusal (id already burned).
+            let mut j = job;
+            j.state = JobState::Rejected;
+            j.detail = RejectReason::Backpressure(e.to_string()).to_string();
+            inner.jobs.insert(id, j);
+            inner.stats.rejected += 1;
+            return SubmitOutcome::Rejected {
+                id,
+                reason: RejectReason::Backpressure(e.to_string()),
+            };
+        }
+        *inner.user_active.entry(user.to_string()).or_insert(0) += 1;
+        *inner.queue_active.entry(queue.clone()).or_insert(0) += 1;
+        let held = inner.user_resources.entry(user.to_string()).or_insert(Resource::ZERO);
+        *held += needed;
+        inner.jobs.insert(id, job);
+        inner.stats.accepted += 1;
+        self.prune_locked(&mut inner);
+        tinfo!("gateway", "job {id} accepted for '{user}' on queue '{queue}' (prio {priority})");
+        SubmitOutcome::Accepted { id }
+    }
+
+    /// Evict the oldest terminal entries once the table outgrows the
+    /// retention cap (history keeps the durable record; this is only the
+    /// serving view).
+    fn prune_locked(&self, inner: &mut GwInner) {
+        let cap = self.conf.max_retained_jobs.max(1);
+        while inner.jobs.len() > cap {
+            let victim = inner
+                .jobs
+                .iter()
+                .find(|(_, j)| j.state.is_terminal())
+                .map(|(id, _)| *id);
+            match victim {
+                Some(id) => {
+                    inner.jobs.remove(&id);
+                }
+                None => break, // everything live: never evict running work
+            }
+        }
+    }
+
+    fn reject(
+        &self,
+        user: &str,
+        priority: u8,
+        conf: &Configuration,
+        reason: RejectReason,
+    ) -> SubmitOutcome {
+        let name = conf.get_or("tony.application.name", "?");
+        let queue = conf.get_or("tony.application.queue", "default");
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.jobs.insert(
+            id,
+            Job {
+                id,
+                user: user.to_string(),
+                name,
+                queue,
+                priority,
+                state: JobState::Rejected,
+                detail: reason.to_string(),
+                app_id: None,
+                attempts: 0,
+                wall_ms: 0,
+                resources: Resource::ZERO,
+                kill_requested: false,
+                conf: conf.clone(),
+            },
+        );
+        inner.stats.rejected += 1;
+        self.prune_locked(&mut inner);
+        tinfo!("gateway", "job {id} rejected for '{user}': {reason}");
+        SubmitOutcome::Rejected { id, reason }
+    }
+
+    /// Kill a job: drop it from the queue if still pending, or kill the
+    /// live application.  Returns the state observed (the worker finishes
+    /// the transition for running jobs).  None = unknown id.
+    pub fn kill(&self, id: u64) -> Option<JobState> {
+        let mut inner = self.inner.lock().unwrap();
+        let job = inner.jobs.get_mut(&id)?;
+        let state = job.state;
+        match state {
+            JobState::Pending => {
+                job.kill_requested = true;
+                if self.queue.remove(id) {
+                    self.finalize_locked(&mut inner, id, JobState::Killed, "killed while queued", 0);
+                    Some(JobState::Killed)
+                } else {
+                    // A worker already popped it; the flag is honored there.
+                    Some(JobState::Pending)
+                }
+            }
+            JobState::Running => {
+                job.kill_requested = true;
+                let app = job.app_id;
+                drop(inner);
+                if let Some(app) = app {
+                    self.rm.kill_application(app);
+                }
+                Some(JobState::Running)
+            }
+            s => Some(s),
+        }
+    }
+
+    pub fn job_state(&self, id: u64) -> Option<JobState> {
+        self.inner.lock().unwrap().jobs.get(&id).map(|j| j.state)
+    }
+
+    pub fn stats(&self) -> GatewayStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Live (pending or running) job count per user — the quantity the
+    /// per-user quota bounds.
+    pub fn user_active_counts(&self) -> BTreeMap<String, u32> {
+        self.inner.lock().unwrap().user_active.clone()
+    }
+
+    /// (pending, running) counts.
+    pub fn live_counts(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        let pending = inner.jobs.values().filter(|j| j.state == JobState::Pending).count();
+        let running = inner.jobs.values().filter(|j| j.state == JobState::Running).count();
+        (pending, running)
+    }
+
+    /// Wait until every tracked job reached a terminal state.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let inner = self.inner.lock().unwrap();
+                if inner.jobs.values().all(|j| j.state.is_terminal()) {
+                    return true;
+                }
+            }
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Stop accepting work, drain the workers, and join them.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.close();
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    // ---------------- JSON views (served by api.rs) ----------------
+
+    fn job_to_json(job: &Job) -> Json {
+        let mut j = Json::obj();
+        j.set("id", job.id);
+        j.set("user", job.user.as_str());
+        j.set("name", job.name.as_str());
+        j.set("queue", job.queue.as_str());
+        j.set("priority", job.priority as u64);
+        j.set("state", job.state.as_str());
+        j.set("detail", job.detail.as_str());
+        match job.app_id {
+            Some(app) => j.set("app_id", app.to_string()),
+            None => j.set("app_id", Json::Null),
+        };
+        j.set("attempts", job.attempts as u64);
+        j.set("wall_ms", job.wall_ms);
+        j.set("mem_mb", job.resources.memory_mb);
+        j.set("vcores", job.resources.vcores as u64);
+        j.set("gpus", job.resources.gpus as u64);
+        j
+    }
+
+    pub fn jobs_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let jobs: Vec<Json> = inner.jobs.values().map(Self::job_to_json).collect();
+        let mut j = Json::obj();
+        j.set("jobs", Json::Arr(jobs));
+        j.set("stats", Self::stats_json(&inner.stats));
+        j
+    }
+
+    pub fn job_json(&self, id: u64) -> Option<Json> {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.get(&id).map(Self::job_to_json)
+    }
+
+    fn stats_json(stats: &GatewayStats) -> Json {
+        let mut s = Json::obj();
+        s.set("accepted", stats.accepted);
+        s.set("rejected", stats.rejected);
+        s.set("finished", stats.finished);
+        s.set("failed", stats.failed);
+        s.set("killed", stats.killed);
+        s
+    }
+
+    /// RM utilization plus gateway counters.
+    pub fn cluster_json(&self) -> Json {
+        let mut j = crate::portal::cluster_json(&self.rm);
+        let (pending, running) = self.live_counts();
+        let mut gw = Json::obj();
+        gw.set("workers", self.conf.workers as u64);
+        gw.set("queue_depth", self.conf.queue_depth as u64);
+        gw.set("pending", pending as u64);
+        gw.set("running", running as u64);
+        gw.set("stats", Self::stats_json(&self.stats()));
+        j.set("gateway", gw);
+        j
+    }
+
+    // ---------------- worker pool ----------------
+
+    fn cluster_total(&self) -> Resource {
+        self.rm
+            .node_usage()
+            .iter()
+            .fold(Resource::ZERO, |acc, (_, _, cap)| acc + *cap)
+    }
+
+    fn worker_loop(&self) {
+        while !self.stop.load(Ordering::Relaxed) {
+            let Some(id) = self.queue.pop_timeout(Duration::from_millis(100)) else {
+                if self.queue.is_empty() && self.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            };
+            self.run_job(id);
+        }
+        // Drain: finish what was already queued before shutdown.
+        while let Some(id) = self.queue.pop_timeout(Duration::from_millis(1)) {
+            self.run_job(id);
+        }
+    }
+
+    /// Drive one accepted job through its full AM lifecycle, retrying
+    /// failed applications up to `max_submit_attempts`, and record the
+    /// outcome in the history store.
+    fn run_job(&self, id: u64) {
+        let conf = {
+            let mut inner = self.inner.lock().unwrap();
+            let Some(job) = inner.jobs.get_mut(&id) else { return };
+            if job.kill_requested {
+                self.finalize_locked(&mut inner, id, JobState::Killed, "killed before start", 0);
+                return;
+            }
+            job.state = JobState::Running;
+            job.conf.clone()
+        };
+
+        let t0 = Instant::now();
+        let max_attempts = self.conf.max_submit_attempts.max(1);
+        let mut attempt = 0u32;
+        let mut final_state = JobState::Failed;
+        let mut detail = String::new();
+        let mut recorded = false;
+
+        while attempt < max_attempts {
+            attempt += 1;
+            let client = TonyClient::new(self.rm.clone());
+            let opts = SubmitOpts {
+                start_portal: false,
+                tracking_url: self.api_url().map(|u| format!("{u}/api/v1/jobs/{id}")),
+            };
+            let handle = match client.submit_opts(&conf, &self.conf.artifacts_dir, opts) {
+                Ok(h) => h,
+                Err(e) => {
+                    detail = format!("submit failed: {e:#}");
+                    break;
+                }
+            };
+            let kill_raced = {
+                let mut inner = self.inner.lock().unwrap();
+                match inner.jobs.get_mut(&id) {
+                    Some(job) => {
+                        job.app_id = Some(handle.app_id);
+                        job.attempts = attempt;
+                        job.kill_requested
+                    }
+                    None => false,
+                }
+            };
+            if kill_raced {
+                handle.kill();
+            }
+            let wall = || t0.elapsed().as_millis() as u64;
+            let report = match handle.wait(self.conf.job_timeout) {
+                Ok(r) => r,
+                Err(e) => {
+                    twarn!("gateway", "job {id} attempt {attempt} timed out: {e:#}");
+                    handle.kill();
+                    let _ = self
+                        .rm
+                        .wait_for_completion(handle.app_id, Duration::from_secs(10));
+                    let _ = handle.record_history(&self.history, wall());
+                    recorded = true;
+                    detail = format!("timed out after {:?}", self.conf.job_timeout);
+                    break;
+                }
+            };
+            if handle.record_history(&self.history, wall()).is_ok() {
+                recorded = true;
+            }
+            detail = report.diagnostics.clone();
+            match report.state {
+                AppState::Finished => {
+                    final_state = JobState::Finished;
+                    break;
+                }
+                AppState::Killed => {
+                    final_state = JobState::Killed;
+                    break;
+                }
+                _ => {
+                    let killed = {
+                        let inner = self.inner.lock().unwrap();
+                        inner.jobs.get(&id).map(|j| j.kill_requested).unwrap_or(false)
+                    };
+                    if killed {
+                        final_state = JobState::Killed;
+                        break;
+                    }
+                    if attempt < max_attempts {
+                        twarn!(
+                            "gateway",
+                            "job {id} attempt {attempt}/{max_attempts} failed ({}); retrying",
+                            report.diagnostics
+                        );
+                        continue;
+                    }
+                    final_state = JobState::Failed;
+                }
+            }
+        }
+
+        let wall_ms = t0.elapsed().as_millis() as u64;
+        if !recorded {
+            // The application never produced a report (e.g. submission
+            // itself failed) — still leave a trace in the history store.
+            let (user, name, queue) = {
+                let inner = self.inner.lock().unwrap();
+                inner
+                    .jobs
+                    .get(&id)
+                    .map(|j| (j.user.clone(), j.name.clone(), j.queue.clone()))
+                    .unwrap_or_default()
+            };
+            let _ = self.history.record(&JobRecord {
+                app_id: format!("gateway-job-{id:06}"),
+                name,
+                queue,
+                succeeded: false,
+                attempts: attempt,
+                wall_ms,
+                diagnostics: format!("[user {user}] {detail}"),
+                tasks: Vec::new(),
+            });
+        }
+        let mut inner = self.inner.lock().unwrap();
+        self.finalize_locked(&mut inner, id, final_state, &detail, wall_ms);
+    }
+
+    /// Terminalize a job and release its quota bookkeeping.  Idempotent:
+    /// only the Pending/Running → terminal edge mutates counters.
+    fn finalize_locked(
+        &self,
+        inner: &mut GwInner,
+        id: u64,
+        state: JobState,
+        detail: &str,
+        wall_ms: u64,
+    ) {
+        let Some(job) = inner.jobs.get_mut(&id) else { return };
+        if job.state.is_terminal() {
+            return;
+        }
+        job.state = state;
+        job.detail = detail.to_string();
+        job.wall_ms = wall_ms;
+        let (user, queue, resources) = (job.user.clone(), job.queue.clone(), job.resources);
+        if let Some(n) = inner.user_active.get_mut(&user) {
+            *n = n.saturating_sub(1);
+        }
+        if let Some(n) = inner.queue_active.get_mut(&queue) {
+            *n = n.saturating_sub(1);
+        }
+        if let Some(held) = inner.user_resources.get_mut(&user) {
+            *held = held.checked_sub(&resources).unwrap_or(Resource::ZERO);
+        }
+        match state {
+            JobState::Finished => inner.stats.finished += 1,
+            JobState::Killed => inner.stats.killed += 1,
+            _ => inner.stats.failed += 1,
+        }
+        tinfo!("gateway", "job {id} -> {} ({detail})", state.as_str());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tonyconf::JobConfBuilder;
+
+    fn test_conf(tag: &str) -> GatewayConf {
+        let base = std::env::temp_dir().join(format!(
+            "tony-gwtest-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        let mut conf = GatewayConf::new(base.join("artifacts"));
+        conf.history_dir = base.join("history");
+        conf.workers = 2;
+        conf.job_timeout = Duration::from_secs(60);
+        conf
+    }
+
+    fn job_xml(name: &str, steps: u64) -> Configuration {
+        JobConfBuilder::new(name)
+            .instances("worker", 1)
+            .memory("worker", "512m")
+            .instances("ps", 1)
+            .memory("ps", "512m")
+            .set("tony.am.memory", "256m")
+            .set("tony.train.steps", &steps.to_string())
+            .build()
+    }
+
+    #[test]
+    fn accepted_job_runs_to_finished_and_lands_in_history() {
+        let rm = crate::yarn::ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+        let gw = Gateway::start(rm, test_conf("e2e")).unwrap();
+        let out = gw.submit_conf("alice", 1, job_xml("one", 2));
+        let SubmitOutcome::Accepted { id } = out else { panic!("expected accept: {out:?}") };
+        assert!(gw.wait_idle(Duration::from_secs(120)), "job never settled");
+        assert_eq!(gw.job_state(id), Some(JobState::Finished));
+        // Capacity fully returned and the job is in the history store.
+        for (_, free, cap) in gw.rm().node_usage() {
+            assert_eq!(free, cap, "capacity leaked");
+        }
+        let ids = gw.history().list().unwrap();
+        assert_eq!(ids.len(), 1, "history: {ids:?}");
+        assert!(gw.history().load(&ids[0]).unwrap().succeeded);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn rejects_are_recorded_with_reasons() {
+        let rm = crate::yarn::ResourceManager::start_uniform(1, Resource::new(4096, 8, 0));
+        let mut conf = test_conf("rej");
+        conf.quotas.max_active_per_user = 1;
+        let gw = Gateway::start(rm, conf).unwrap();
+
+        // Too large for the 4 GiB cluster.
+        let big = JobConfBuilder::new("big")
+            .instances("worker", 4)
+            .memory("worker", "8g")
+            .build();
+        let out = gw.submit_conf("alice", 1, big);
+        let SubmitOutcome::Rejected { id, reason } = out else { panic!("expected reject") };
+        assert_eq!(reason.code(), "job-too-large");
+        assert_eq!(gw.job_state(id), Some(JobState::Rejected));
+
+        // Invalid spec (no workers).
+        let out = gw.submit_conf("alice", 1, JobConfBuilder::new("empty").build());
+        let SubmitOutcome::Rejected { reason, .. } = out else { panic!("expected reject") };
+        assert_eq!(reason.code(), "invalid-spec");
+
+        // Quota: one active job per user, second submission bounces.
+        let out1 = gw.submit_conf("alice", 1, job_xml("a", 2));
+        assert!(matches!(out1, SubmitOutcome::Accepted { .. }));
+        let out2 = gw.submit_conf("alice", 1, job_xml("b", 2));
+        let SubmitOutcome::Rejected { reason, .. } = out2 else { panic!("expected reject") };
+        assert_eq!(reason.code(), "user-quota");
+        assert!(reason.is_retryable());
+
+        assert!(gw.wait_idle(Duration::from_secs(120)));
+        assert_eq!(gw.stats().rejected, 3);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn kill_pending_and_running_jobs() {
+        let rm = crate::yarn::ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+        let mut conf = test_conf("kill");
+        conf.workers = 1; // serialize: the second job stays queued
+        let gw = Gateway::start(rm, conf).unwrap();
+        let SubmitOutcome::Accepted { id: run } =
+            gw.submit_conf("alice", 5, job_xml("long", 400))
+        else {
+            panic!()
+        };
+        let SubmitOutcome::Accepted { id: queued } =
+            gw.submit_conf("bob", 1, job_xml("queued", 2))
+        else {
+            panic!()
+        };
+        // The queued job dies immediately.
+        assert_eq!(gw.kill(queued), Some(JobState::Killed));
+        // Wait for the first to actually start, then kill it.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while gw.job_state(run) == Some(JobState::Pending) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        gw.kill(run);
+        assert!(gw.wait_idle(Duration::from_secs(60)), "killed job never settled");
+        assert_eq!(gw.job_state(run), Some(JobState::Killed));
+        for (_, free, cap) in gw.rm().node_usage() {
+            assert_eq!(free, cap, "capacity leaked after kill");
+        }
+        gw.shutdown();
+    }
+}

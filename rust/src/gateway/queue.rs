@@ -1,0 +1,197 @@
+//! The gateway's pending-job queue: bounded (backpressure, not OOM),
+//! priority-ordered, FIFO within a priority level, with kill-from-queue
+//! support and a close signal that wakes every waiting worker.
+//!
+//! Pure data structure + condvar; no knowledge of jobs beyond their id,
+//! so it is directly unit-testable.
+
+use std::cmp::Reverse;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a push was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at capacity: the caller should surface backpressure
+    /// (HTTP 429) instead of buffering unboundedly.
+    Full { capacity: usize },
+    /// The gateway is shutting down.
+    Closed,
+}
+
+impl fmt::Display for PushError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PushError::Full { capacity } => {
+                write!(f, "pending queue full ({capacity} jobs); retry later")
+            }
+            PushError::Closed => write!(f, "gateway is shutting down"),
+        }
+    }
+}
+
+struct Inner {
+    /// Keyed by (Reverse(priority), seq): iteration order is highest
+    /// priority first, then submission order (fair FIFO within priority).
+    entries: BTreeMap<(Reverse<u8>, u64), u64>,
+    next_seq: u64,
+    closed: bool,
+}
+
+pub struct PendingQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl PendingQueue {
+    pub fn new(capacity: usize) -> PendingQueue {
+        PendingQueue {
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue a job id at `priority` (higher pops first).  Fails fast
+    /// when full or closed — admission turns that into a reject.
+    pub fn try_push(&self, priority: u8, job: u64) -> Result<(), PushError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed);
+        }
+        if inner.entries.len() >= self.capacity {
+            return Err(PushError::Full { capacity: self.capacity });
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.entries.insert((Reverse(priority), seq), job);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop the highest-priority, oldest job, waiting up to `timeout`.
+    /// Returns None on timeout or when the queue is closed and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<u64> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let head = inner.entries.keys().next().copied();
+            if let Some(key) = head {
+                return inner.entries.remove(&key);
+            }
+            if inner.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Remove a specific pending job (kill-before-run).  Returns whether
+    /// it was still queued.
+    pub fn remove(&self, job: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let key = inner
+            .entries
+            .iter()
+            .find(|(_, j)| **j == job)
+            .map(|(k, _)| *k);
+        match key {
+            Some(k) => {
+                inner.entries.remove(&k);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stop accepting pushes and wake all waiting poppers; once drained,
+    /// every `pop_timeout` returns None immediately.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn priority_major_fifo_minor() {
+        let q = PendingQueue::new(16);
+        q.try_push(1, 10).unwrap();
+        q.try_push(5, 20).unwrap();
+        q.try_push(5, 21).unwrap();
+        q.try_push(3, 30).unwrap();
+        let order: Vec<u64> =
+            (0..4).filter_map(|_| q.pop_timeout(Duration::from_millis(1))).collect();
+        assert_eq!(order, vec![20, 21, 30, 10]);
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn bounded_with_backpressure() {
+        let q = PendingQueue::new(2);
+        q.try_push(1, 1).unwrap();
+        q.try_push(1, 2).unwrap();
+        assert_eq!(q.try_push(1, 3), Err(PushError::Full { capacity: 2 }));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        q.try_push(1, 3).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn remove_only_hits_queued_jobs() {
+        let q = PendingQueue::new(4);
+        q.try_push(2, 7).unwrap();
+        assert!(q.remove(7));
+        assert!(!q.remove(7));
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn close_wakes_blocked_poppers_and_rejects_pushes() {
+        let q = Arc::new(PendingQueue::new(4));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+        assert_eq!(q.try_push(1, 1), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn close_still_drains_queued_work() {
+        let q = PendingQueue::new(4);
+        q.try_push(1, 9).unwrap();
+        q.close();
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(9));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+}

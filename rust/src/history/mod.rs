@@ -117,13 +117,61 @@ impl HistoryStore {
         &self.dir
     }
 
+    /// Persist one record, crash- and concurrency-safe: the document is
+    /// written to a temp file named uniquely per writer (pid + process
+    /// sequence), fsynced, then atomically renamed into place.  Concurrent
+    /// gateway jobs — or two attempts racing on the same app id — can
+    /// therefore never interleave bytes or leave a torn record; readers
+    /// observe either the old document or the new one.  Orphaned `.tmp`
+    /// files from a crash are invisible to `list`/`load` (wrong suffix)
+    /// and are swept here once they are old enough that no live writer
+    /// can still own them.
     pub fn record(&self, rec: &JobRecord) -> Result<PathBuf> {
         std::fs::create_dir_all(&self.dir)?;
+        self.sweep_stale_tmp();
         let path = self.dir.join(format!("{}.json", rec.app_id));
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, rec.to_json().render_pretty())?;
-        std::fs::rename(&tmp, &path)?;
+        let tmp = self.dir.join(format!(
+            ".{}.{}-{}.tmp",
+            rec.app_id,
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(rec.to_json().render_pretty().as_bytes())?;
+            f.sync_all()?;
+        }
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("publishing {}", path.display()));
+        }
         Ok(path)
+    }
+
+    /// Best-effort removal of temp files abandoned by crashed writers.
+    /// Only files untouched for an hour are removed, so a concurrent
+    /// writer's in-flight temp file is never yanked out from under its
+    /// rename.
+    fn sweep_stale_tmp(&self) {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        for ent in entries.flatten() {
+            let name = ent.file_name().to_string_lossy().into_owned();
+            if !(name.starts_with('.') && name.ends_with(".tmp")) {
+                continue;
+            }
+            let stale = ent
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .map(|age| age.as_secs() > 3600)
+                .unwrap_or(false);
+            if stale {
+                let _ = std::fs::remove_file(ent.path());
+            }
+        }
     }
 
     /// Capture a record from a live job handle + RM report.
@@ -274,6 +322,32 @@ mod tests {
         assert_eq!(sum.succeeded, 1);
         assert_eq!(sum.total_attempts, 4);
         assert_eq!(sum.total_tokens, 2 * 2560);
+        let _ = std::fs::remove_dir_all(s.dir());
+    }
+
+    #[test]
+    fn concurrent_records_never_tear() {
+        let s = store("conc");
+        let mut handles = Vec::new();
+        for w in 0..8u32 {
+            let s2 = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..20u32 {
+                    let mut rec = sample("application_9_0001", w % 2 == 0);
+                    rec.wall_ms = (w * 100 + i) as u64;
+                    s2.record(&rec).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // The surviving record parses cleanly: concurrent writers can race
+        // on who wins, but never interleave or tear the document.
+        let rec = s.load("application_9_0001").unwrap();
+        assert_eq!(rec.app_id, "application_9_0001");
+        // And no stray temp files are visible to the store.
+        assert_eq!(s.list().unwrap(), vec!["application_9_0001".to_string()]);
         let _ = std::fs::remove_dir_all(s.dir());
     }
 

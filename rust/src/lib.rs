@@ -7,13 +7,17 @@
 //!
 //! Layer map:
 //! - **L3 (this crate)**: the TonY client / ApplicationMaster /
-//!   TaskExecutor orchestration system, a YARN-compatible cluster
-//!   simulator it negotiates with, the parameter-server training framework
-//!   it launches, and supporting substrates (RPC, XML config, JSON, HTTP
-//!   portal, workflow engine, metrics analyzer, checkpointing).
+//!   TaskExecutor orchestration system, the multi-tenant [`gateway`]
+//!   daemon that runs many such jobs concurrently, a YARN-compatible
+//!   cluster simulator they negotiate with, the parameter-server training
+//!   framework the jobs launch, and supporting substrates (RPC, XML
+//!   config, JSON, HTTP portal, workflow engine, metrics analyzer,
+//!   checkpointing, job history).
 //! - **L2/L1 (python/compile/)**: the JAX transformer LM + Pallas kernels,
 //!   AOT-lowered once to `artifacts/<preset>/*.hlo.txt` and executed from
-//!   `runtime::Engine` via PJRT.  Python never runs on the job path.
+//!   `runtime::Engine` via PJRT (`--features pjrt`) or the deterministic
+//!   simulation backend (`runtime::sim`, the offline default).  Python
+//!   never runs on the job path.
 
 pub mod am;
 pub mod chaos;
@@ -22,6 +26,7 @@ pub mod baseline;
 pub mod bench;
 pub mod client;
 pub mod drelephant;
+pub mod gateway;
 pub mod portal;
 pub mod workflow;
 pub mod data;

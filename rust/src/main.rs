@@ -1,10 +1,17 @@
 //! `tony` — the CLI entrypoint: boot a simulated cluster, submit a job
-//! from a tony.xml, watch it, and print the Dr. Elephant report.
+//! from a tony.xml, watch it, and print the Dr. Elephant report — or run
+//! the multi-tenant gateway daemon and submit to it over HTTP.
 //!
 //! ```text
 //! tony submit --conf job.xml --artifacts artifacts/tiny [--nodes 4]
 //!             [--node-mem 8g] [--node-cores 8]
+//! tony submit --gateway 127.0.0.1:8080 --conf job.xml [--user alice]
+//!             [--priority 3] [--no-wait]
+//! tony serve  [--nodes 8] [--port 8080] [--workers 8] [--queue-depth 64]
+//!             [--queues ml:0.6:0.8,etl:0.4:1.0] [--map alice=ml,bob=etl]
+//!             [--max-user-active 8] [--artifacts DIR]
 //! tony demo   [--artifacts artifacts/tiny] [--steps 10]
+//! tony history
 //! tony version
 //! ```
 //!
@@ -17,11 +24,12 @@ use std::time::Duration;
 
 use tony::client::TonyClient;
 use tony::drelephant;
+use tony::gateway::{api as gwapi, Gateway, GatewayConf};
 use tony::runtime::ArtifactMeta;
 use tony::tonyconf::{JobConfBuilder, JobSpec};
 use tony::util::bytes::parse_size;
 use tony::xmlconf::Configuration;
-use tony::yarn::{Resource, ResourceManager};
+use tony::yarn::{QueueConf, Resource, ResourceManager};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
     let mut pos = Vec::new();
@@ -48,9 +56,42 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  tony submit --conf <tony.xml> --artifacts <dir> [--nodes N] \
          [--node-mem 8g] [--node-cores 8] [--node-gpus 0] [--timeout-s 600]\n  \
+         tony submit --gateway <host:port> --conf <tony.xml> [--user U] \
+         [--priority 1..10] [--no-wait]\n  \
+         tony serve [--nodes 8] [--port 8080] [--workers 8] [--queue-depth 64] \
+         [--queues name:cap:max,...] [--map user=queue,...] [--max-user-active 8] \
+         [--artifacts DIR]\n  \
          tony demo [--artifacts artifacts/tiny] [--steps 10]\n  tony history\n  tony version"
     );
     std::process::exit(2);
+}
+
+/// Parse `ml:0.6:0.8,etl:0.4:1.0` into queue configs (falls back to the
+/// single `default` queue on absent/bad input).
+fn parse_queues(flags: &BTreeMap<String, String>) -> Vec<QueueConf> {
+    let Some(spec) = flags.get("queues") else { return QueueConf::default_only() };
+    let mut queues = Vec::new();
+    for part in spec.split(',') {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() != 3 {
+            eprintln!("ignoring malformed queue spec '{part}' (want name:cap:max)");
+            return QueueConf::default_only();
+        }
+        let (cap, max) = match (fields[1].parse::<f64>(), fields[2].parse::<f64>()) {
+            (Ok(c), Ok(m)) => (c, m),
+            _ => {
+                eprintln!("ignoring malformed queue spec '{part}' (bad fractions)");
+                return QueueConf::default_only();
+            }
+        };
+        queues.push(QueueConf::new(fields[0], cap, max));
+    }
+    let sum: f64 = queues.iter().map(|q| q.capacity).sum();
+    if queues.is_empty() || (sum - 1.0).abs() > 1e-6 {
+        eprintln!("queue capacities must sum to 1.0 (got {sum}); using the default queue");
+        return QueueConf::default_only();
+    }
+    queues
 }
 
 fn boot_cluster(flags: &BTreeMap<String, String>) -> Arc<ResourceManager> {
@@ -62,7 +103,10 @@ fn boot_cluster(flags: &BTreeMap<String, String>) -> Arc<ResourceManager> {
         >> 20;
     let cores: u32 = flags.get("node-cores").and_then(|s| s.parse().ok()).unwrap_or(8);
     let gpus: u32 = flags.get("node-gpus").and_then(|s| s.parse().ok()).unwrap_or(0);
-    ResourceManager::start_uniform(nodes, Resource::new(mem, cores, gpus))
+    let specs = (0..nodes)
+        .map(|i| tony::yarn::NodeSpec::new(i, Resource::new(mem, cores, gpus)))
+        .collect();
+    ResourceManager::start(specs, parse_queues(flags))
 }
 
 fn run_and_report(
@@ -171,7 +215,6 @@ fn main() {
         }
         "submit" => {
             let Some(conf_path) = flags.get("conf") else { usage() };
-            let Some(artifacts) = flags.get("artifacts") else { usage() };
             let conf = match Configuration::from_xml_file(std::path::Path::new(conf_path)) {
                 Ok(c) => c,
                 Err(e) => {
@@ -182,16 +225,132 @@ fn main() {
             let timeout = Duration::from_secs(
                 flags.get("timeout-s").and_then(|s| s.parse().ok()).unwrap_or(600),
             );
+            if let Some(gateway) = flags.get("gateway") {
+                // Client mode: ship the conf to a running `tony serve`.
+                let user = flags
+                    .get("user")
+                    .cloned()
+                    .or_else(|| std::env::var("USER").ok())
+                    .unwrap_or_else(|| "anonymous".to_string());
+                let priority: u8 =
+                    flags.get("priority").and_then(|s| s.parse().ok()).unwrap_or(1);
+                match gwapi::submit_remote(gateway, &user, priority, &conf) {
+                    Err(e) => {
+                        eprintln!("gateway submit failed: {e:#}");
+                        1
+                    }
+                    Ok((id, state)) => {
+                        println!("job {id} submitted as '{user}' -> {state}");
+                        println!("status: http://{gateway}/api/v1/jobs/{id}");
+                        if flags.contains_key("no-wait") {
+                            0
+                        } else {
+                            match gwapi::wait_remote(gateway, id, timeout) {
+                                Ok((state, j)) => {
+                                    println!("final state: {state}");
+                                    println!("{}", j.render_pretty());
+                                    if state == "FINISHED" {
+                                        0
+                                    } else {
+                                        1
+                                    }
+                                }
+                                Err(e) => {
+                                    eprintln!("wait failed: {e:#}");
+                                    1
+                                }
+                            }
+                        }
+                    }
+                }
+            } else {
+                let Some(artifacts) = flags.get("artifacts") else { usage() };
+                let rm = boot_cluster(&flags);
+                run_and_report(rm, &conf, &PathBuf::from(artifacts), timeout)
+            }
+        }
+        "serve" => {
             let rm = boot_cluster(&flags);
-            run_and_report(rm, &conf, &PathBuf::from(artifacts), timeout)
+            let artifacts = flags
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| "artifacts/tiny".to_string());
+            let mut gconf = GatewayConf::new(&artifacts);
+            if let Some(w) = flags.get("workers").and_then(|s| s.parse().ok()) {
+                gconf.workers = w;
+            }
+            if let Some(d) = flags.get("queue-depth").and_then(|s| s.parse().ok()) {
+                gconf.queue_depth = d;
+            }
+            if let Some(n) = flags.get("max-user-active").and_then(|s| s.parse().ok()) {
+                gconf.quotas.max_active_per_user = n;
+            }
+            if let Some(n) = flags.get("max-queue-active").and_then(|s| s.parse().ok()) {
+                gconf.quotas.max_active_per_queue = Some(n);
+            }
+            if let Some(n) = flags.get("attempts").and_then(|s| s.parse().ok()) {
+                gconf.max_submit_attempts = n;
+            }
+            if let Some(s) = flags.get("timeout-s").and_then(|s| s.parse().ok()) {
+                gconf.job_timeout = Duration::from_secs(s);
+            }
+            if let Some(map) = flags.get("map") {
+                for pair in map.split(',') {
+                    if let Some((user, queue)) = pair.split_once('=') {
+                        gconf
+                            .quotas
+                            .user_queues
+                            .insert(user.trim().to_string(), queue.trim().to_string());
+                    }
+                }
+            }
+            let port: u16 = flags.get("port").and_then(|s| s.parse().ok()).unwrap_or(8080);
+            let gw = match Gateway::start(rm, gconf) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("gateway failed to start: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            let api = match gwapi::GatewayApi::start(gw.clone(), port) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("gateway API failed to bind: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            println!("tony gateway up at {}", api.url());
+            println!("  POST   {}/api/v1/jobs", api.url());
+            println!("  GET    {}/api/v1/jobs", api.url());
+            println!("  GET    {}/api/v1/jobs/<id>", api.url());
+            println!("  DELETE {}/api/v1/jobs/<id>", api.url());
+            println!("  GET    {}/api/v1/cluster", api.url());
+            println!("submit with: tony submit --gateway {} --conf job.xml", api.addr);
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
         }
         "demo" => {
-            let artifacts = PathBuf::from(
+            let mut artifacts = PathBuf::from(
                 flags
                     .get("artifacts")
                     .cloned()
                     .unwrap_or_else(|| "artifacts/tiny".to_string()),
             );
+            // No real artifacts around?  Sim builds fall back to a
+            // generated synthetic preset so the demo always runs.
+            if !artifacts.join("meta.json").exists()
+                && tony::runtime::synthetic::sim_backend_active()
+            {
+                match tony::runtime::synthetic::default_dir() {
+                    Ok(d) => {
+                        println!("artifacts missing at {}; using synthetic preset {}",
+                            artifacts.display(), d.display());
+                        artifacts = d;
+                    }
+                    Err(e) => eprintln!("synthetic preset unavailable: {e:#}"),
+                }
+            }
             let steps: u64 = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(10);
             let ckpt = std::env::temp_dir().join(format!("tony-demo-{}", std::process::id()));
             let conf = JobConfBuilder::new("demo")

@@ -32,12 +32,87 @@ pub struct Portal {
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
-fn http_response(stream: &mut std::net::TcpStream, status: &str, ctype: &str, body: &str) {
+/// Write a complete HTTP/1.0 response (shared by the portal and the
+/// gateway API server).
+pub fn http_response(stream: &mut std::net::TcpStream, status: &str, ctype: &str, body: &str) {
     let _ = write!(
         stream,
         "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
+}
+
+/// A parsed incoming HTTP request: method, path, and (for POSTs) the
+/// body as declared by Content-Length.
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read and parse one HTTP request from a freshly accepted connection.
+/// Headers are capped at 64 KiB; bodies over 1 MiB are rejected with an
+/// error (the gateway API maps it to 413).  Reads use a 5 s timeout so a
+/// stalled client cannot hold a handler thread indefinitely.
+pub fn read_http_request(stream: &mut std::net::TcpStream) -> std::io::Result<HttpRequest> {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 2048];
+    let header_end = loop {
+        if let Some(i) = find_subslice(&buf, b"\r\n\r\n") {
+            break Some(i);
+        }
+        if buf.len() > 64 * 1024 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request headers too large",
+            ));
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            break None; // connection closed before a blank line
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let (head, rest): (&[u8], &[u8]) = match header_end {
+        Some(i) => (&buf[..i], &buf[i + 4..]),
+        None => (&buf[..], &[]),
+    };
+    let head = String::from_utf8_lossy(head).into_owned();
+    let mut lines = head.lines();
+    let req_line = lines.next().unwrap_or("");
+    let mut parts = req_line.split_whitespace();
+    let method = parts.next().unwrap_or("GET").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_len = 0usize;
+    for l in lines {
+        if let Some((k, v)) = l.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_len > 1 << 20 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "request body exceeds 1 MiB",
+        ));
+    }
+    let mut body = rest.to_vec();
+    while body.len() < content_len {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            break;
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_len);
+    Ok(HttpRequest { method, path, body: String::from_utf8_lossy(&body).into_owned() })
 }
 
 fn render_html(state: &AmState) -> String {
@@ -80,7 +155,8 @@ fn render_html(state: &AmState) -> String {
     )
 }
 
-fn cluster_json(rm: &ResourceManager) -> Json {
+/// RM node/queue utilization as JSON (shared with the gateway API).
+pub fn cluster_json(rm: &ResourceManager) -> Json {
     let mut nodes = Vec::new();
     for (id, free, cap) in rm.node_usage() {
         let mut n = Json::obj();
@@ -144,15 +220,8 @@ impl Portal {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((mut stream, _)) => {
-                        let mut buf = [0u8; 2048];
-                        let n = stream.read(&mut buf).unwrap_or(0);
-                        let req = String::from_utf8_lossy(&buf[..n]);
-                        let path = req
-                            .lines()
-                            .next()
-                            .and_then(|l| l.split_whitespace().nth(1))
-                            .unwrap_or("/")
-                            .to_string();
+                        let Ok(req) = read_http_request(&mut stream) else { continue };
+                        let path = req.path;
                         match path.as_str() {
                             "/" => http_response(
                                 &mut stream,
@@ -219,6 +288,12 @@ impl Drop for Portal {
 
 /// Blocking HTTP GET helper (tests + workflow health checks).
 pub fn http_get(url: &str) -> Result<(u16, String)> {
+    http_request("GET", url, "")
+}
+
+/// Blocking HTTP request helper: any method, optional body (sent as JSON
+/// when non-empty).  Returns (status code, response body).
+pub fn http_request(method: &str, url: &str, body: &str) -> Result<(u16, String)> {
     let rest = url
         .strip_prefix("http://")
         .ok_or_else(|| anyhow::anyhow!("only http:// URLs supported"))?;
@@ -227,8 +302,17 @@ pub fn http_get(url: &str) -> Result<(u16, String)> {
         None => (rest, "/"),
     };
     let mut stream = std::net::TcpStream::connect(hostport)?;
-    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
-    write!(stream, "GET {path} HTTP/1.0\r\nHost: {hostport}\r\n\r\n")?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    if body.is_empty() {
+        write!(stream, "{method} {path} HTTP/1.0\r\nHost: {hostport}\r\n\r\n")?;
+    } else {
+        write!(
+            stream,
+            "{method} {path} HTTP/1.0\r\nHost: {hostport}\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )?;
+    }
     let mut resp = String::new();
     stream.read_to_string(&mut resp)?;
     let status: u16 = resp

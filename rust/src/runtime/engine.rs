@@ -1,16 +1,25 @@
-//! The PJRT execution engine: loads `artifacts/<preset>/*.hlo.txt`,
-//! compiles them on a CPU PJRT client, and executes them on behalf of the
-//! rest of the system.
+//! The execution engine: loads `artifacts/<preset>/*.hlo.txt` and
+//! executes them on behalf of the rest of the system.
 //!
-//! `xla`'s types wrap raw C++ pointers and are not `Send`, so the client
-//! and every compiled executable live on ONE dedicated engine thread; the
-//! rest of the system talks to it through a cloneable, thread-safe
-//! [`EngineHandle`] carrying plain [`Tensor`] buffers over channels.  This
-//! is also faithful to the paper's deployment shape: each task container
-//! runs its own runtime instance (here: its own engine thread).
+//! Two backends, selected at compile time:
+//!
+//! - **`pjrt` feature**: the real thing — HLO text is compiled on a CPU
+//!   PJRT client via the `xla` crate.  `xla`'s types wrap raw C++
+//!   pointers and are not `Send`, so the client and every compiled
+//!   executable live on ONE dedicated engine thread; the rest of the
+//!   system talks to it through a cloneable, thread-safe
+//!   [`EngineHandle`] carrying plain [`Tensor`] buffers over channels.
+//! - **default (no `pjrt`)**: the deterministic simulation backend in
+//!   [`super::sim`] — same artifact names, same signatures, same engine
+//!   thread discipline, but the "kernels" are closed-form host math.
+//!   This is what lets the orchestration stack (client/AM/executor/
+//!   gateway) run end-to-end in offline builds and CI where the `xla`
+//!   crate cannot be fetched.
+//!
+//! Either way the threading shape is faithful to the paper's deployment:
+//! each task container runs its own runtime instance (here: its own
+//! engine thread).
 
-use std::collections::HashMap;
-use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -19,6 +28,11 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::meta::{ArtifactMeta, Signature};
 use super::tensor::Tensor;
+
+#[cfg(feature = "pjrt")]
+use self::pjrt_backend as backend;
+#[cfg(not(feature = "pjrt"))]
+use super::sim as backend;
 
 enum Cmd {
     Execute {
@@ -42,38 +56,6 @@ pub struct Engine {
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
-fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
-    let lit = match t {
-        Tensor::F32 { data, .. } => xla::Literal::vec1(data),
-        Tensor::I32 { data, .. } => xla::Literal::vec1(data),
-        Tensor::U32 { data, .. } => xla::Literal::vec1(data),
-    };
-    lit.reshape(&dims)
-        .map_err(|e| anyhow!("reshape {:?} failed: {e}", t.shape()))
-}
-
-fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
-    let t = match shape.ty() {
-        xla::ElementType::F32 => Tensor::F32 {
-            shape: dims,
-            data: lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
-        },
-        xla::ElementType::S32 => Tensor::I32 {
-            shape: dims,
-            data: lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
-        },
-        xla::ElementType::U32 => Tensor::U32 {
-            shape: dims,
-            data: lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e}"))?,
-        },
-        other => bail!("unsupported output element type {other:?}"),
-    };
-    Ok(t)
-}
-
 fn check_inputs(sig: &Signature, inputs: &[Tensor]) -> Result<()> {
     if sig.inputs.len() != inputs.len() {
         bail!("expected {} inputs, got {}", sig.inputs.len(), inputs.len());
@@ -89,17 +71,62 @@ fn check_inputs(sig: &Signature, inputs: &[Tensor]) -> Result<()> {
     Ok(())
 }
 
-fn engine_main(
-    meta: Arc<ArtifactMeta>,
-    artifacts: Vec<String>,
-    rx: mpsc::Receiver<Cmd>,
-    ready: mpsc::SyncSender<Result<()>>,
-) {
-    // Compile phase: failures are reported through `ready`.
-    let setup = (|| -> Result<HashMap<String, xla::PjRtLoadedExecutable>> {
+/// The real PJRT backend (needs the unvendorable `xla` crate; see the
+/// `pjrt` feature notes in Cargo.toml).
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    use anyhow::{anyhow, bail, Result};
+
+    use super::super::meta::ArtifactMeta;
+    use super::super::tensor::Tensor;
+
+    pub struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+        let lit = match t {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims)
+            .map_err(|e| anyhow!("reshape {:?} failed: {e}", t.shape()))
+    }
+
+    fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        let t = match shape.ty() {
+            xla::ElementType::F32 => Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+            },
+            xla::ElementType::S32 => Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+            },
+            xla::ElementType::U32 => Tensor::U32 {
+                shape: dims,
+                data: lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e}"))?,
+            },
+            other => bail!("unsupported output element type {other:?}"),
+        };
+        Ok(t)
+    }
+
+    pub fn compile_all(
+        meta: &Arc<ArtifactMeta>,
+        names: &[String],
+    ) -> Result<HashMap<String, Compiled>> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
         let mut exes = HashMap::new();
-        for name in &artifacts {
+        for name in names {
             let path: PathBuf = meta
                 .hlo_path(name)
                 .ok_or_else(|| anyhow!("artifact '{name}' not in meta.json"))?;
@@ -111,12 +138,37 @@ fn engine_main(
             let exe = client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-            exes.insert(name.clone(), exe);
+            exes.insert(name.clone(), Compiled { exe });
         }
         Ok(exes)
-    })();
+    }
 
-    let exes = match setup {
+    pub fn execute(exe: &Compiled, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let bufs = exe
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let out_lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e}"))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+fn engine_main(
+    meta: Arc<ArtifactMeta>,
+    artifacts: Vec<String>,
+    rx: mpsc::Receiver<Cmd>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    // Compile phase: failures are reported through `ready`.
+    let exes = match backend::compile_all(&meta, &artifacts) {
         Ok(exes) => {
             let _ = ready.send(Ok(()));
             exes
@@ -138,24 +190,9 @@ fn engine_main(
                     if let Some(sig) = meta.signature(&name) {
                         check_inputs(sig, &inputs)?;
                     }
-                    let lits: Vec<xla::Literal> =
-                        inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
                     let start = Instant::now();
-                    let bufs = exe
-                        .execute::<xla::Literal>(&lits)
-                        .map_err(|e| anyhow!("execute {name}: {e}"))?;
-                    let out_lit = bufs[0][0]
-                        .to_literal_sync()
-                        .map_err(|e| anyhow!("fetch result: {e}"))?;
+                    let outs = backend::execute(exe, &name, inputs)?;
                     let exec_ms = start.elapsed().as_secs_f64() * 1e3;
-                    // aot.py lowers with return_tuple=True: always a tuple.
-                    let parts = out_lit
-                        .to_tuple()
-                        .map_err(|e| anyhow!("decompose tuple: {e}"))?;
-                    let outs = parts
-                        .iter()
-                        .map(literal_to_tensor)
-                        .collect::<Result<Vec<_>>>()?;
                     Ok((outs, exec_ms))
                 })();
                 let _ = reply.send(result);
@@ -181,7 +218,7 @@ impl Engine {
         let (ready_tx, ready_rx) = mpsc::sync_channel(1);
         let meta2 = meta.clone();
         let thread = std::thread::Builder::new()
-            .name(format!("pjrt-engine-{}", meta.preset))
+            .name(format!("engine-{}", meta.preset))
             .spawn(move || engine_main(meta2, names, rx, ready_tx))
             .context("spawning engine thread")?;
         ready_rx
@@ -227,8 +264,8 @@ impl EngineHandle {
 mod tests {
     use super::*;
 
-    // Integration tests against real artifacts live in rust/tests/; these
-    // unit tests cover the signature checker only (no PJRT needed).
+    // Integration tests against artifacts live in rust/tests/; these unit
+    // tests cover the signature checker only (no backend needed).
     #[test]
     fn signature_mismatches_detected() {
         let sig = Signature {

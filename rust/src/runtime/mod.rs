@@ -1,12 +1,17 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Runtime: load AOT artifacts (HLO text) and execute them.
 //!
-//! See DESIGN.md §2.  The flow mirrors /opt/xla-example/load_hlo:
-//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
-//! `client.compile` -> `execute`, wrapped in a thread-owning [`Engine`] so
-//! the non-`Send` xla types never cross threads.
+//! See DESIGN.md §2.  With the `pjrt` feature the flow mirrors
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`,
+//! wrapped in a thread-owning [`Engine`] so the non-`Send` xla types
+//! never cross threads.  The default (offline) build swaps in the
+//! deterministic simulation backend in [`sim`], fed by generated presets
+//! from [`synthetic`].
 
 pub mod engine;
 pub mod meta;
+pub mod sim;
+pub mod synthetic;
 pub mod tensor;
 
 pub use engine::{Engine, EngineHandle};

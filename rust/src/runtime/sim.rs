@@ -1,0 +1,260 @@
+//! Deterministic simulation backend for the engine (default build).
+//!
+//! The offline build cannot fetch the `xla` PJRT bindings, so this module
+//! stands in for them: it "compiles" the same artifact names the AOT
+//! pipeline emits (`init_params`, `worker_step`, `eval_loss`, `ps_adam`)
+//! and executes them as closed-form host math with the same input/output
+//! signatures.  The math is chosen so distributed training *behaves*
+//! realistically end-to-end:
+//!
+//! - `init_params(seed)` draws parameters uniformly from [-1, 1)
+//!   (SplitMix64, fully deterministic per seed);
+//! - `worker_step(params, batch)` returns
+//!   `loss = 0.5 + mean(params²) + jitter(batch)` and `grads = params`
+//!   (the gradient of ½‖p‖² — descending it genuinely reduces the loss);
+//! - `eval_loss(params, batch)` is the same loss without the batch jitter;
+//! - `ps_adam(p, g, m, v, step, lr)` is an exact Adam update with the
+//!   hyperparameters from meta.json.
+//!
+//! So losses are finite, strictly positive, batch-dependent, and decrease
+//! as the PS applies updates — which is what the AM/executor/framework
+//! layers, Dr. Elephant heuristics, and the gateway benches observe.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::meta::ArtifactMeta;
+use super::tensor::Tensor;
+use crate::util::SplitMix64;
+
+/// A "compiled" simulated artifact: its name plus the meta it executes
+/// against (n_params for init, Adam hyperparameters for the optimizer).
+pub struct Compiled {
+    meta: Arc<ArtifactMeta>,
+}
+
+const KNOWN: &[&str] = &["init_params", "worker_step", "eval_loss", "ps_adam"];
+
+pub fn compile_all(
+    meta: &Arc<ArtifactMeta>,
+    names: &[String],
+) -> Result<HashMap<String, Compiled>> {
+    let mut exes = HashMap::new();
+    for name in names {
+        let path = meta
+            .hlo_path(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in meta.json"))?;
+        // Mirror the real backend's stale-artifact loudness: the HLO file
+        // must exist even though the simulator does not parse it.
+        if !path.exists() {
+            bail!("artifact file missing: {}", path.display());
+        }
+        if !KNOWN.contains(&name.as_str()) {
+            bail!("sim backend has no semantics for artifact '{name}' (pjrt feature required)");
+        }
+        exes.insert(name.clone(), Compiled { meta: meta.clone() });
+    }
+    Ok(exes)
+}
+
+fn mean_sq(params: &[f32]) -> f32 {
+    if params.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = params.iter().map(|p| (*p as f64) * (*p as f64)).sum();
+    (s / params.len() as f64) as f32
+}
+
+/// Deterministic per-batch perturbation in [0, 0.01): makes successive
+/// steps' losses wiggle like minibatch noise without hiding the trend.
+fn batch_jitter(batch: &[i32]) -> f32 {
+    let mut h: u64 = 0x9E37_79B9;
+    for t in batch {
+        h = h.wrapping_mul(0x100_0000_01B3).wrapping_add(*t as u32 as u64);
+    }
+    (h % 1000) as f32 * 1e-5
+}
+
+fn loss_of(params: &[f32]) -> f32 {
+    0.5 + mean_sq(params)
+}
+
+/// Any one-element tensor as u64 (`Tensor::scalar` is f32-only).
+fn scalar_u64(t: &Tensor) -> Option<u64> {
+    match t {
+        Tensor::U32 { data, .. } if data.len() == 1 => Some(data[0] as u64),
+        Tensor::I32 { data, .. } if data.len() == 1 => Some(data[0] as u64),
+        Tensor::F32 { data, .. } if data.len() == 1 => Some(data[0] as u64),
+        _ => None,
+    }
+}
+
+pub fn execute(exe: &Compiled, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+    match name {
+        "init_params" => {
+            let seed = inputs
+                .first()
+                .and_then(scalar_u64)
+                .ok_or_else(|| anyhow!("init_params: seed must be a scalar"))?;
+            let n = exe.meta.n_params;
+            let mut rng = SplitMix64::new(seed ^ 0x746F_6E79); // "tony"
+            let params: Vec<f32> = (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+            Ok(vec![Tensor::f32(&[n], params)])
+        }
+        "worker_step" => {
+            let mut it = inputs.into_iter();
+            let params = it
+                .next()
+                .and_then(|t| t.into_f32())
+                .ok_or_else(|| anyhow!("worker_step: params must be f32"))?;
+            let batch = it.next().ok_or_else(|| anyhow!("worker_step: missing batch"))?;
+            let batch = batch
+                .as_i32()
+                .ok_or_else(|| anyhow!("worker_step: batch must be i32"))?;
+            let loss = loss_of(&params) + batch_jitter(batch);
+            let n = params.len();
+            // grads = d/dp [½‖p‖²] = p: descending it reduces the loss.
+            Ok(vec![Tensor::scalar_f32(loss), Tensor::f32(&[n], params)])
+        }
+        "eval_loss" => {
+            let params = inputs
+                .first()
+                .and_then(|t| t.as_f32())
+                .ok_or_else(|| anyhow!("eval_loss: params must be f32"))?;
+            Ok(vec![Tensor::scalar_f32(loss_of(params))])
+        }
+        "ps_adam" => {
+            let mut it = inputs.into_iter();
+            let mut take = |what: &str| -> Result<Vec<f32>> {
+                it.next()
+                    .and_then(|t| t.into_f32())
+                    .ok_or_else(|| anyhow!("ps_adam: {what} must be f32"))
+            };
+            let mut p = take("params")?;
+            let g = take("grads")?;
+            let mut m = take("m")?;
+            let mut v = take("v")?;
+            let step = it
+                .next()
+                .and_then(|t| t.scalar())
+                .ok_or_else(|| anyhow!("ps_adam: step must be a scalar"))?;
+            let lr = it
+                .next()
+                .and_then(|t| t.scalar())
+                .ok_or_else(|| anyhow!("ps_adam: lr must be a scalar"))?;
+            if g.len() != p.len() || m.len() != p.len() || v.len() != p.len() {
+                bail!(
+                    "ps_adam: length mismatch (p={}, g={}, m={}, v={})",
+                    p.len(),
+                    g.len(),
+                    m.len(),
+                    v.len()
+                );
+            }
+            let hy = &exe.meta.adam;
+            let (b1, b2, eps) = (hy.beta1, hy.beta2, hy.eps);
+            let t = (step as f64).max(1.0);
+            let bc1 = 1.0 - b1.powf(t);
+            let bc2 = 1.0 - b2.powf(t);
+            for i in 0..p.len() {
+                let gi = g[i] as f64;
+                let mi = b1 * m[i] as f64 + (1.0 - b1) * gi;
+                let vi = b2 * v[i] as f64 + (1.0 - b2) * gi * gi;
+                m[i] = mi as f32;
+                v[i] = vi as f32;
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                p[i] = (p[i] as f64 - lr as f64 * mhat / (vhat.sqrt() + eps)) as f32;
+            }
+            let n = p.len();
+            Ok(vec![Tensor::f32(&[n], p), Tensor::f32(&[n], m), Tensor::f32(&[n], v)])
+        }
+        other => bail!("sim backend has no semantics for artifact '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::synthetic::SyntheticPreset;
+
+    fn sim_exe() -> Compiled {
+        let dir = std::env::temp_dir().join(format!(
+            "tony-sim-test-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        SyntheticPreset::tiny().write(&dir).unwrap();
+        let meta = Arc::new(ArtifactMeta::load(&dir).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+        Compiled { meta }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let exe = sim_exe();
+        let a = execute(&exe, "init_params", vec![Tensor::scalar_u32(7)]).unwrap();
+        let b = execute(&exe, "init_params", vec![Tensor::scalar_u32(7)]).unwrap();
+        let c = execute(&exe, "init_params", vec![Tensor::scalar_u32(8)]).unwrap();
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+        assert_ne!(a[0].as_f32().unwrap(), c[0].as_f32().unwrap());
+        assert_eq!(a[0].len(), exe.meta.n_params);
+        assert!(a[0].as_f32().unwrap().iter().all(|p| p.abs() <= 1.0));
+    }
+
+    #[test]
+    fn adam_descent_reduces_loss() {
+        let exe = sim_exe();
+        let n = exe.meta.n_params;
+        let mut p = execute(&exe, "init_params", vec![Tensor::scalar_u32(1)])
+            .unwrap()
+            .remove(0)
+            .into_f32()
+            .unwrap();
+        let mut m = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        let batch: Vec<i32> = (0..10).collect();
+        let first = loss_of(&p);
+        for step in 1..=50u32 {
+            let out = execute(
+                &exe,
+                "worker_step",
+                vec![Tensor::f32(&[n], p.clone()), Tensor::i32(&[10], batch.clone())],
+            )
+            .unwrap();
+            let loss = out[0].scalar().unwrap();
+            assert!(loss.is_finite() && loss > 0.0);
+            let grads = out[1].as_f32().unwrap().to_vec();
+            let upd = execute(
+                &exe,
+                "ps_adam",
+                vec![
+                    Tensor::f32(&[n], p),
+                    Tensor::f32(&[n], grads),
+                    Tensor::f32(&[n], m),
+                    Tensor::f32(&[n], v),
+                    Tensor::scalar_f32(step as f32),
+                    Tensor::scalar_f32(0.01),
+                ],
+            )
+            .unwrap();
+            let mut it = upd.into_iter();
+            p = it.next().unwrap().into_f32().unwrap();
+            m = it.next().unwrap().into_f32().unwrap();
+            v = it.next().unwrap().into_f32().unwrap();
+        }
+        let last = loss_of(&p);
+        assert!(
+            last < first,
+            "50 Adam steps should reduce the loss ({first} -> {last})"
+        );
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let exe = sim_exe();
+        assert!(execute(&exe, "mystery_kernel", vec![]).is_err());
+    }
+}

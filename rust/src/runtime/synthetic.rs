@@ -1,0 +1,215 @@
+//! Synthetic artifact presets: a generated `meta.json` + placeholder HLO
+//! files that the simulation backend (`runtime::sim`) can "compile" and
+//! execute.
+//!
+//! The real artifacts are produced by `python/compile/aot.py` ("make
+//! artifacts"), which needs JAX — unavailable in offline builds.  Tests,
+//! benches, and `tony serve`/`tony demo` fall back to a synthetic preset
+//! so the full client → RM → AM → executor → PS/worker path still runs
+//! end-to-end.  Under the `pjrt` feature the placeholders are NOT valid
+//! HLO, so [`ensure_preset`] refuses to fabricate them and real artifacts
+//! must be supplied instead.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+/// Dimensions for a generated preset (kept deliberately small: gateway
+/// benches run dozens of these jobs concurrently).
+#[derive(Debug, Clone)]
+pub struct SyntheticPreset {
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub chunk_len: usize,
+}
+
+fn sig_entry(dtype: &str, shape: &[usize]) -> Json {
+    Json::Arr(vec![
+        Json::Str(dtype.to_string()),
+        Json::Arr(shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+    ])
+}
+
+fn sig(inputs: Vec<Json>, outputs: Vec<Json>) -> Json {
+    let mut s = Json::obj();
+    s.set("in", Json::Arr(inputs));
+    s.set("out", Json::Arr(outputs));
+    s
+}
+
+impl SyntheticPreset {
+    /// The default preset: ~4k parameters in 2 PS chunks, 2×16-token
+    /// batches — a job completes in well under a second of simulated
+    /// training per step.
+    pub fn tiny() -> SyntheticPreset {
+        SyntheticPreset {
+            preset: "synthetic-tiny".to_string(),
+            vocab: 256,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 16,
+            batch: 2,
+            n_params: 4096,
+            chunk_len: 2048,
+        }
+    }
+
+    fn meta_json(&self) -> Json {
+        let mut model = Json::obj();
+        model.set("vocab", self.vocab);
+        model.set("d_model", self.d_model);
+        model.set("n_heads", self.n_heads);
+        model.set("n_layers", self.n_layers);
+        model.set("d_ff", self.d_ff);
+        model.set("seq_len", self.seq_len);
+        model.set("batch", self.batch);
+
+        let mut adam = Json::obj();
+        adam.set("beta1", 0.9);
+        adam.set("beta2", 0.999);
+        adam.set("eps", 1e-8);
+
+        let mut artifacts = Json::obj();
+        for name in ["init_params", "worker_step", "eval_loss", "ps_adam"] {
+            artifacts.set(name, format!("{name}.hlo.txt"));
+        }
+
+        let n = self.n_params;
+        let c = self.chunk_len;
+        let batch_shape = [self.batch, self.seq_len + 1];
+        let mut signatures = Json::obj();
+        signatures.set(
+            "init_params",
+            sig(vec![sig_entry("u32", &[])], vec![sig_entry("f32", &[n])]),
+        );
+        signatures.set(
+            "worker_step",
+            sig(
+                vec![sig_entry("f32", &[n]), sig_entry("i32", &batch_shape)],
+                vec![sig_entry("f32", &[]), sig_entry("f32", &[n])],
+            ),
+        );
+        signatures.set(
+            "eval_loss",
+            sig(
+                vec![sig_entry("f32", &[n]), sig_entry("i32", &batch_shape)],
+                vec![sig_entry("f32", &[])],
+            ),
+        );
+        signatures.set(
+            "ps_adam",
+            sig(
+                vec![
+                    sig_entry("f32", &[c]),
+                    sig_entry("f32", &[c]),
+                    sig_entry("f32", &[c]),
+                    sig_entry("f32", &[c]),
+                    sig_entry("f32", &[]),
+                    sig_entry("f32", &[]),
+                ],
+                vec![sig_entry("f32", &[c]), sig_entry("f32", &[c]), sig_entry("f32", &[c])],
+            ),
+        );
+
+        let mut j = Json::obj();
+        j.set("preset", self.preset.as_str());
+        j.set("model", model);
+        j.set("n_params", self.n_params);
+        j.set("chunk_len", self.chunk_len);
+        j.set("adam", adam);
+        j.set("artifacts", artifacts);
+        j.set("signatures", signatures);
+        j
+    }
+
+    /// Write the preset into `dir` (created if needed), overwriting any
+    /// previous synthetic preset there.
+    pub fn write(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating preset dir {}", dir.display()))?;
+        for name in ["init_params", "worker_step", "eval_loss", "ps_adam"] {
+            std::fs::write(
+                dir.join(format!("{name}.hlo.txt")),
+                format!(
+                    "// synthetic placeholder for artifact '{name}' \
+                     (executed by tony's runtime::sim backend, not PJRT)\n"
+                ),
+            )?;
+        }
+        std::fs::write(dir.join("meta.json"), self.meta_json().render_pretty())?;
+        Ok(())
+    }
+}
+
+/// True when this build executes artifacts with the simulation backend
+/// (i.e. synthetic placeholder presets are runnable).
+pub fn sim_backend_active() -> bool {
+    !cfg!(feature = "pjrt")
+}
+
+/// Make sure `dir` holds a runnable preset: keep real artifacts if
+/// present, otherwise generate the synthetic tiny preset (sim builds
+/// only — with `pjrt` enabled placeholders would fail to compile, so
+/// missing artifacts stay a hard error).
+pub fn ensure_preset(dir: &Path) -> Result<()> {
+    if dir.join("meta.json").exists() {
+        return Ok(());
+    }
+    if !sim_backend_active() {
+        bail!(
+            "artifacts missing at {} and this is a pjrt build; run `make artifacts`",
+            dir.display()
+        );
+    }
+    SyntheticPreset::tiny().write(dir)
+}
+
+/// A process-scoped synthetic preset directory (generated on first use).
+/// Separate processes get separate directories, so concurrently running
+/// test binaries never race on the files.
+pub fn default_dir() -> Result<PathBuf> {
+    let dir = std::env::temp_dir().join(format!("tony-synthetic-{}", std::process::id()));
+    ensure_preset(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactMeta;
+
+    #[test]
+    fn written_preset_round_trips_through_meta() {
+        let dir = std::env::temp_dir().join(format!(
+            "tony-synth-test-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        let p = SyntheticPreset::tiny();
+        p.write(&dir).unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.preset, "synthetic-tiny");
+        assert_eq!(meta.n_params, p.n_params);
+        assert_eq!(meta.n_chunks(), 2);
+        let ws = meta.signature("worker_step").unwrap();
+        assert_eq!(ws.inputs[0].1, vec![p.n_params]);
+        assert_eq!(ws.inputs[1].1, vec![p.batch, p.seq_len + 1]);
+        for (_, file) in &meta.artifacts {
+            assert!(dir.join(file).exists());
+        }
+        // Idempotent: ensure_preset keeps an existing preset.
+        ensure_preset(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,163 @@
+//! Gateway property test: under random admit/reject/kill mixes across
+//! multiple tenants,
+//!
+//! 1. per-user quotas are never exceeded (sampled after every submit),
+//! 2. every accepted job reaches a terminal state (and non-killed jobs
+//!    actually FINISH),
+//! 3. the RM's capacity is fully returned once the gateway drains, and
+//! 4. every job that ran left a history record.
+//!
+//! Runs entirely on the simulation backend (synthetic artifacts), so it
+//! is deterministic-ish in outcomes even though thread interleavings
+//! vary.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use tony::gateway::{Gateway, GatewayConf, JobState, QuotaConf, SubmitOutcome};
+use tony::proptest::{check, Gen};
+use tony::tonyconf::JobConfBuilder;
+use tony::xmlconf::Configuration;
+use tony::yarn::{QueueConf, Resource, ResourceManager};
+use tony::{prop_assert, prop_assert_eq};
+
+const USERS: &[&str] = &["alice", "bob", "carol"];
+
+fn random_conf(g: &mut Gen, i: usize) -> Configuration {
+    let name = format!("prop-{i}");
+    match g.usize_up_to(10) {
+        // ~20%: invalid spec (no workers at all).
+        0 | 1 => JobConfBuilder::new(&name).instances("ps", 1).build(),
+        // ~10%: hopeless resources (bounced by admission, not queued).
+        2 => JobConfBuilder::new(&name)
+            .instances("worker", 8)
+            .memory("worker", "64g")
+            .build(),
+        // ~10%: unknown queue.
+        3 => JobConfBuilder::new(&name)
+            .queue("etl")
+            .instances("worker", 1)
+            .memory("worker", "256m")
+            .build(),
+        // ~60%: legitimate small jobs (1-2 workers + 1 PS; the training
+        // framework requires at least one parameter server).
+        _ => JobConfBuilder::new(&name)
+            .instances("worker", 1 + g.usize_up_to(1) as u32)
+            .memory("worker", if g.bool() { "256m" } else { "512m" })
+            .instances("ps", 1)
+            .memory("ps", "256m")
+            .set("tony.am.memory", "256m")
+            .set("tony.train.steps", &(1 + g.usize_up_to(3)).to_string())
+            .set("tony.train.checkpoint-every", "0")
+            .build(),
+    }
+}
+
+#[test]
+fn gateway_quota_terminal_and_capacity_invariants() {
+    check("gateway invariants", 3, |g| {
+        let base = std::env::temp_dir().join(format!(
+            "tony-propgw-{}-{}",
+            std::process::id(),
+            tony::util::ids::next_seq()
+        ));
+        let rm = ResourceManager::start(
+            (0..4).map(|i| tony::yarn::NodeSpec::new(i, Resource::new(4096, 8, 0))).collect(),
+            vec![QueueConf::new("default", 0.7, 1.0), QueueConf::new("ml", 0.3, 1.0)],
+        );
+        let mut conf = GatewayConf::new(base.join("artifacts"));
+        conf.history_dir = base.join("history");
+        conf.workers = 4;
+        conf.queue_depth = 8;
+        conf.max_submit_attempts = 1;
+        conf.job_timeout = Duration::from_secs(120);
+        conf.quotas = QuotaConf {
+            max_active_per_user: 3,
+            max_active_per_queue: Some(6),
+            max_user_resource: Some(Resource::new(8192, 24, 0)),
+            user_queues: [("alice".to_string(), "ml".to_string())].into_iter().collect(),
+        };
+        let quota = conf.quotas.max_active_per_user;
+        let gw = Gateway::start(rm, conf).map_err(|e| format!("gateway start: {e:#}"))?;
+
+        let n_jobs = 8 + g.usize_up_to(6);
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..n_jobs {
+            let user = g.pick(USERS);
+            let priority = 1 + g.usize_up_to(5) as u8;
+            match gw.submit_conf(user, priority, random_conf(g, i)) {
+                SubmitOutcome::Accepted { id } => accepted.push(id),
+                SubmitOutcome::Rejected { id, .. } => {
+                    rejected += 1;
+                    prop_assert_eq!(gw.job_state(id), Some(JobState::Rejected));
+                }
+            }
+            // Invariant 1: quotas hold at every observable instant.
+            for (user, active) in gw.user_active_counts() {
+                prop_assert!(
+                    active <= quota,
+                    "user {user} has {active} active jobs (quota {quota})"
+                );
+            }
+            if g.chance(0.3) {
+                std::thread::sleep(Duration::from_millis(g.range(0, 30)));
+            }
+        }
+
+        // Random kills on ~25% of accepted jobs, at random moments.
+        let mut killed: HashSet<u64> = HashSet::new();
+        for id in &accepted {
+            if g.chance(0.25) {
+                std::thread::sleep(Duration::from_millis(g.range(0, 50)));
+                if gw.kill(*id).is_some() {
+                    killed.insert(*id);
+                }
+            }
+        }
+
+        // Invariant 2: everything accepted reaches a terminal state.
+        prop_assert!(
+            gw.wait_idle(Duration::from_secs(180)),
+            "gateway did not drain: {:?}",
+            gw.live_counts()
+        );
+        for id in &accepted {
+            let state = gw.job_state(*id).ok_or("job vanished")?;
+            prop_assert!(state.is_terminal(), "job {id} ended non-terminal: {state:?}");
+            if !killed.contains(id) {
+                prop_assert_eq!(state, JobState::Finished);
+            }
+        }
+
+        // Invariant 3: all cluster capacity returned.
+        for (node, free, cap) in gw.rm().node_usage() {
+            prop_assert!(
+                free == cap,
+                "capacity leaked on {node}: free {free} != cap {cap}"
+            );
+        }
+        // Bookkeeping drained with the jobs.
+        for (user, active) in gw.user_active_counts() {
+            prop_assert!(active == 0, "user {user} still has {active} active after drain");
+        }
+
+        // Invariant 4: at least every accepted-and-run job left a record
+        // (kills can land before the first attempt, so allow that gap).
+        let records = gw.history().list().map_err(|e| format!("history: {e:#}"))?;
+        prop_assert!(
+            records.len() >= accepted.len().saturating_sub(killed.len()),
+            "history has {} records for {} accepted / {} killed jobs",
+            records.len(),
+            accepted.len(),
+            killed.len()
+        );
+        let stats = gw.stats();
+        prop_assert_eq!(stats.accepted as usize, accepted.len());
+        prop_assert_eq!(stats.rejected as usize, rejected);
+
+        gw.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+        Ok(())
+    });
+}

@@ -1,0 +1,183 @@
+//! Offline-vendored, API-compatible subset of `anyhow` (the real crate is
+//! unreachable in this no-network build).  Implements the surface the tony
+//! crate uses: [`Error`], [`Result`], the [`Context`] trait on `Result`
+//! and `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror upstream where it matters:
+//! - `{}` displays the outermost message only; `{:#}` joins the whole
+//!   context chain with `": "`; `{:?}` prints the chain as a
+//!   "Caused by:" list.
+//! - `Error` deliberately does NOT implement `std::error::Error`, so the
+//!   blanket `From<E: std::error::Error>` conversion (what makes `?`
+//!   work) cannot collide with the reflexive `From<Error>`.
+
+use std::fmt;
+
+/// An error chain: `chain[0]` is the outermost (most recent) context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with one more layer of context (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (upstream: `Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost message (upstream: `Error::root_cause`).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond))
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn question_mark_and_macros() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+
+        fn bails(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(bails(2).unwrap(), 2);
+        assert!(bails(3).is_err());
+        assert!(format!("{:#}", bails(12).unwrap_err()).contains("12"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+}

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: release build + full test suite + formatting.
+# Usage: scripts/ci.sh   (from anywhere; cd's to the repo root)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+else
+    echo "==> rustfmt unavailable; skipping cargo fmt --check"
+fi
+
+echo "CI gate passed."
