@@ -1,9 +1,13 @@
-//! Fault-tolerance walkthrough (paper §2.2): watch the AM recover from a
-//! task kill AND a node kill, printing the recovery timeline.
+//! Fault-tolerance walkthrough: watch the AM *surgically* recover from a
+//! task kill AND a node kill — replacing only the dead containers while
+//! survivors keep running — printing the recovery timeline.
 //!
 //! ```sh
 //! cargo run --release --example fault_tolerance
 //! ```
+//!
+//! Uses `artifacts/tiny` when present; otherwise falls back to the
+//! synthetic preset (sim backend), so it runs in offline CI too.
 
 use std::time::{Duration, Instant};
 
@@ -14,11 +18,13 @@ use tony::yarn::{AppState, NodeSpec, QueueConf, Resource, ResourceManager};
 
 fn main() -> anyhow::Result<()> {
     tony::util::logging::init_from_env();
-    let artifacts = std::path::Path::new("artifacts/tiny");
-    anyhow::ensure!(
-        artifacts.join("meta.json").exists(),
-        "run `make artifacts` first"
-    );
+    let real = std::path::PathBuf::from("artifacts/tiny");
+    let artifacts = if real.join("meta.json").exists() {
+        real
+    } else {
+        println!("artifacts/tiny missing; using the synthetic preset (sim backend)");
+        tony::runtime::synthetic::default_dir()?
+    };
 
     // Node 0 fits only the AM, so node kills never take the master down.
     let specs = vec![
@@ -28,7 +34,10 @@ fn main() -> anyhow::Result<()> {
         NodeSpec::new(3, Resource::new(8192, 8, 0)),
     ];
     let rm = ResourceManager::start(specs, QueueConf::default_only());
-    let ckpt = std::env::temp_dir().join("tony-ft-example");
+    let ckpt = std::env::temp_dir().join(format!(
+        "tony-ft-example-{}",
+        std::process::id()
+    ));
     let _ = std::fs::remove_dir_all(&ckpt);
 
     let steps = 24u64;
@@ -45,7 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     let t0 = Instant::now();
     let client = TonyClient::new(rm.clone());
-    let handle = client.submit(&conf, artifacts)?;
+    let handle = client.submit(&conf, &artifacts)?;
 
     println!("schedule: kill worker:1 after step 6, then kill node1 after step 14");
     let chaos = ChaosInjector::start(
@@ -60,17 +69,18 @@ fn main() -> anyhow::Result<()> {
     // Timeline printer.
     let state = handle.am_state.clone();
     let timeline = std::thread::spawn(move || {
-        let mut last = (0u32, String::new(), 0u64);
+        let mut last = (0u32, 0u32, String::new(), 0u64);
         loop {
             let phase = format!("{:?}", state.phase());
             let attempt = state.attempt();
+            let version = state.spec_version();
             let step = state.chief_metrics().map(|m| m.step).unwrap_or(0);
-            if (attempt, phase.clone(), step) != last {
+            if (attempt, version, phase.clone(), step) != last {
                 println!(
-                    "[t+{:>6.1}s] attempt={attempt} phase={phase} chief_step={step}",
+                    "[t+{:>6.1}s] attempt={attempt} spec_v{version} phase={phase} chief_step={step}",
                     t0.elapsed().as_secs_f64()
                 );
-                last = (attempt, phase.clone(), step);
+                last = (attempt, version, phase.clone(), step);
             }
             if phase == "Succeeded" || phase == "Failed" {
                 break;
@@ -85,13 +95,24 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nfinal: {:?} in {:.1}s — {}", report.state, t0.elapsed().as_secs_f64(), report.diagnostics);
     for r in &records {
-        println!("  fault fired at t+{}ms (chief step {}): {:?}", r.injected_at_ms, r.chief_step_at_injection, r.fault);
+        println!(
+            "  fault fired at t+{}ms (chief step {}, spec v{}): {:?}",
+            r.injected_at_ms, r.chief_step_at_injection, r.version_at_injection, r.fault
+        );
     }
-    println!("  attempts used: {}", handle.am_state.attempt());
+    println!(
+        "  attempts used: {} (surgical recoveries: {})",
+        handle.am_state.attempt(),
+        handle.am_state.recoveries()
+    );
     println!("  alive nodes:   {}/{}", rm.alive_node_count(), rm.node_count());
     let m = handle.am_state.chief_metrics().unwrap();
     println!("  chief reached step {} (target {steps}); final loss {:.4}", m.step, m.loss);
     anyhow::ensure!(report.state == AppState::Finished, "expected recovery");
+    anyhow::ensure!(
+        handle.am_state.recoveries() >= 1,
+        "expected at least one surgical recovery"
+    );
     let _ = std::fs::remove_dir_all(&ckpt);
     Ok(())
 }

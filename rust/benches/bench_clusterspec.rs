@@ -34,6 +34,10 @@ fn main() {
             let handler = AmRpcHandler::new(state.clone());
             let register_all = |state: &Arc<AmState>, handler: &AmRpcHandler| {
                 state.begin_attempt(1);
+                // The spec version is monotonic across begin_attempt
+                // calls, so each bench iteration registers at the live
+                // version rather than a hardcoded 1.
+                let version = state.spec_version();
                 let mut port = 10_000u16;
                 for ty in ["worker", "ps"] {
                     let count = if ty == "worker" { workers } else { ps };
@@ -44,13 +48,13 @@ fn main() {
                             host: "127.0.0.1".into(),
                             port,
                             ui_url: None,
-                            spec_version: 1,
+                            spec_version: version,
                         };
                         handler.handle(AM_REGISTER, &msg.to_bytes()).unwrap();
                         port += 1;
                     }
                 }
-                assert!(state.try_build_spec(1));
+                assert!(state.try_build_spec(version));
             };
             let stats = bench(1, 200, Duration::from_millis(400), || {
                 register_all(&state, &handler);

@@ -2,6 +2,10 @@
 //! task kill — teardown → re-negotiate → relaunch → restore-from-
 //! checkpoint — and the work preserved by checkpointing, vs the ad-hoc
 //! baseline where a failed job is simply lost.
+//!
+//! This bench pins `tony.task.max-restarts=0` to measure the paper's
+//! *full-restart* loop in isolation; `bench_recovery` compares it
+//! against the surgical per-task recovery path.
 
 use std::time::{Duration, Instant};
 
@@ -26,6 +30,7 @@ fn run_case(ckpt_every: u64, artifacts: &std::path::Path) -> (f64, u64, bool) {
         .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
         .set("tony.train.checkpoint-every", &ckpt_every.to_string())
         .set("tony.application.max-attempts", "3")
+        .set("tony.task.max-restarts", "0") // full-restart policy under test
         .build();
     let client = TonyClient::new(rm.clone());
     let handle = client.submit(&conf, artifacts).unwrap();
@@ -41,7 +46,7 @@ fn run_case(ckpt_every: u64, artifacts: &std::path::Path) -> (f64, u64, bool) {
     let t_end = Instant::now() + Duration::from_secs(400);
     loop {
         match handle.am_state.phase() {
-            JobPhase::Restarting => {
+            JobPhase::Restarting | JobPhase::Recovering => {
                 restart_seen.get_or_insert_with(Instant::now);
             }
             JobPhase::Running => {

@@ -1,0 +1,212 @@
+//! R1 (surgical recovery): kill-to-training-resumed latency after a
+//! single worker kill, surgical per-task recovery vs the paper's
+//! full-restart loop, at 4/16/64 workers.
+//!
+//! Measured window: from the moment the AM leaves `Running`
+//! (Recovering/Restarting) until the chief's step counter advances past
+//! its value at that moment — i.e. until training has *regained* the
+//! progress point it was at when the fault hit.  This charges the
+//! full-restart policy for its rollback-and-recompute, which is exactly
+//! the cost surgical recovery exists to avoid.
+//!
+//! Also verified per run: the surgical path relaunches exactly ONE
+//! container and every survivor keeps its original ContainerId.
+//!
+//! `TONY_BENCH_SMOKE=1` runs the 4-worker pair only (CI smoke).
+
+use std::time::{Duration, Instant};
+
+use tony::am::JobPhase;
+use tony::bench::{f1, n, Table};
+use tony::chaos::{ChaosInjector, Fault};
+use tony::client::TonyClient;
+use tony::tonyconf::JobConfBuilder;
+use tony::util::ids::TaskId;
+use tony::yarn::{AppState, Resource, ResourceManager};
+
+struct Outcome {
+    kill_to_resume_ms: f64,
+    relaunched: usize,
+    survivors_stable: bool,
+    attempts: u32,
+    recoveries: u32,
+    finished: bool,
+}
+
+fn run_case(workers: u32, surgical: bool, dir: &std::path::Path) -> Outcome {
+    let per_node = Resource::new(((workers as u64) * 256).max(2048), workers.max(8), 0);
+    let rm = ResourceManager::start_uniform(4, per_node);
+    let ckpt = std::env::temp_dir().join(format!(
+        "tony-rec-{workers}-{surgical}-{}",
+        tony::util::ids::next_seq()
+    ));
+    let _ = std::fs::remove_dir_all(&ckpt);
+    // Enough post-kill steps that the chaos injector's 10ms poll cannot
+    // miss its firing window on a fast sim run.
+    let steps = 40u64;
+    let conf = JobConfBuilder::new("recovery")
+        .instances("worker", workers)
+        .memory("worker", "256m")
+        .instances("ps", 1)
+        .memory("ps", "256m")
+        .train(dir.to_str().unwrap(), "tiny", steps)
+        .set("tony.train.checkpoint-dir", ckpt.to_str().unwrap())
+        .set("tony.train.checkpoint-every", "5")
+        .set("tony.application.max-attempts", "3")
+        .set("tony.task.max-restarts", if surgical { "3" } else { "0" })
+        .build();
+    let client = TonyClient::new(rm.clone());
+    let handle = client.submit(&conf, dir).unwrap();
+    let victim = TaskId::new("worker", workers - 1); // never the chief
+
+    // Pre-kill container map, captured once the rendezvous completes.
+    let t_end = Instant::now() + Duration::from_secs(300);
+    while Instant::now() < t_end {
+        if handle.am_state.phase() == JobPhase::Running
+            && handle.am_state.container_map().values().all(|c| c.is_some())
+        {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let pre = handle.am_state.container_map();
+
+    let chaos = ChaosInjector::start(
+        rm.clone(),
+        handle.am_state.clone(),
+        vec![Fault::KillTask {
+            task_type: "worker".into(),
+            index: workers - 1,
+            after_step: 2,
+        }],
+    );
+
+    // Watch for the disruption window (latency, best-effort) and capture
+    // the post-recovery container map deterministically: the moment the
+    // victim has a fresh container and every task has one (mid-flight,
+    // before successful exits start clearing container records).
+    let mut t_disrupt: Option<(Instant, u64)> = None; // (when, chief step then)
+    let mut resume_ms: Option<f64> = None;
+    let mut post: Option<_> = None;
+    while Instant::now() < t_end {
+        let phase = handle.am_state.phase();
+        if post.is_none() {
+            let m = handle.am_state.container_map();
+            let replaced = m.get(&victim).copied().flatten().is_some()
+                && m.get(&victim).copied().flatten() != pre.get(&victim).copied().flatten();
+            let rendezvous_done = if surgical {
+                handle.am_state.recoveries() >= 1
+            } else {
+                handle.am_state.attempt() >= 2
+            };
+            if rendezvous_done && replaced && m.values().all(|c| c.is_some()) {
+                post = Some(m);
+            }
+        }
+        match phase {
+            JobPhase::Recovering | JobPhase::Restarting => {
+                if t_disrupt.is_none() {
+                    let step = handle.am_state.chief_metrics().map(|m| m.step).unwrap_or(0);
+                    t_disrupt = Some((Instant::now(), step));
+                }
+            }
+            JobPhase::Running => {
+                if let (Some((t0, step0)), None) = (t_disrupt, resume_ms) {
+                    let step = handle.am_state.chief_metrics().map(|m| m.step).unwrap_or(0);
+                    if step > step0 {
+                        resume_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+            }
+            JobPhase::Succeeded | JobPhase::Failed => break,
+            _ => {}
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let report = handle.wait(Duration::from_secs(60)).unwrap();
+    let records = chaos.join();
+    assert_eq!(records.len(), 1, "fault must fire ({workers} workers, surgical={surgical})");
+
+    let post = post.expect("post-recovery container map captured");
+    let mut relaunched = 0usize;
+    let mut survivors_stable = true;
+    for (task, pre_cid) in &pre {
+        let post_cid = post.get(task).copied().flatten();
+        if post_cid != *pre_cid {
+            relaunched += 1;
+            if *task != victim {
+                survivors_stable = false;
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&ckpt);
+    Outcome {
+        kill_to_resume_ms: resume_ms.unwrap_or(f64::NAN),
+        relaunched,
+        survivors_stable,
+        attempts: handle.am_state.attempt(),
+        recoveries: handle.am_state.recoveries(),
+        finished: report.state == AppState::Finished,
+    }
+}
+
+fn main() {
+    tony::util::logging::init_from_env();
+    if !tony::runtime::synthetic::sim_backend_active() {
+        eprintln!("SKIP bench_recovery: pjrt build, synthetic preset unavailable");
+        return;
+    }
+    let dir = tony::runtime::synthetic::default_dir().unwrap();
+    let smoke = std::env::var("TONY_BENCH_SMOKE").is_ok();
+    let sizes: &[u32] = if smoke { &[4] } else { &[4, 16, 64] };
+
+    let mut table = Table::new(&[
+        "workers",
+        "policy",
+        "kill->resume(ms)",
+        "relaunched",
+        "survivors-stable",
+        "attempts",
+        "recoveries",
+        "outcome",
+    ]);
+    for &workers in sizes {
+        let mut pair = Vec::new();
+        for (label, surgical) in [("surgical", true), ("full-restart", false)] {
+            let o = run_case(workers, surgical, &dir);
+            assert!(o.finished, "{label} job at {workers} workers must finish");
+            if surgical {
+                assert_eq!(o.relaunched, 1, "surgical must relaunch exactly one container");
+                assert!(o.survivors_stable, "survivors must keep their ContainerIds");
+                assert_eq!(o.attempts, 1, "surgical recovery stays within the attempt");
+            } else {
+                assert!(o.attempts >= 2, "full-restart must burn an attempt");
+            }
+            table.row(&[
+                n(workers),
+                label.to_string(),
+                f1(o.kill_to_resume_ms),
+                n(o.relaunched),
+                n(o.survivors_stable),
+                n(o.attempts),
+                n(o.recoveries),
+                n(if o.finished { "Finished" } else { "Failed" }),
+            ]);
+            pair.push(o.kill_to_resume_ms);
+        }
+        if pair.len() == 2 && pair[0].is_finite() && pair[1].is_finite() {
+            println!(
+                "  {workers} workers: surgical {:.1}ms vs full-restart {:.1}ms ({:.1}x)",
+                pair[0],
+                pair[1],
+                pair[1] / pair[0].max(1e-9)
+            );
+        }
+    }
+    table.print("R1: single-worker-kill recovery, surgical vs full restart (tiny preset, sync)");
+    println!(
+        "\nkill->resume = AM leaves Running -> chief step passes its pre-fault value;\n\
+         surgical relaunches 1 container and never restarts survivors, so it dodges\n\
+         the re-negotiation + re-registration + rollback the full restart pays."
+    );
+}

@@ -1,24 +1,33 @@
 //! The TonY ApplicationMaster (paper §2.2) — the heart of the system.
 //!
-//! Responsibilities, exactly as the paper lays them out:
+//! Responsibilities, extending the paper's fault-tolerance loop with
+//! surgical per-task recovery:
 //!
 //! 1. negotiate with the RM for all task containers, with heterogeneous
-//!    requests per task type (GPU workers, CPU-only PS);
+//!    requests per task type (GPU workers, CPU-only PS); grants that
+//!    match no pending task are released back to the RM, never leaked;
 //! 2. launch a TaskExecutor in every granted container;
 //! 3. collect each TaskExecutor's (host, port) registration; when all
 //!    have registered, construct the **global cluster spec** and hand it
 //!    back to every executor;
-//! 4. monitor heartbeats and task exit statuses;
-//! 5. on any tracked-task failure: tear down the remaining tasks, request
-//!    fresh containers, build a new cluster spec (bumped version), and
-//!    relaunch — tasks restore from the last checkpoint;
-//! 6. report the first worker's UI URL + task logs to the client via the
+//! 4. monitor heartbeats, registration deadlines, and task exit
+//!    statuses;
+//! 5. on a tracked-task failure (or node loss): re-request containers
+//!    *only* for the dead tasks, relaunch them at a bumped spec version,
+//!    patch the cluster spec in place, and push it to the surviving
+//!    executors over the heartbeat channel (`AmCommand::Reconfigure`) —
+//!    survivors rejoin at the new version without their containers ever
+//!    stopping; replacements restore from the last checkpoint;
+//! 6. escalate to the paper's full teardown-and-relaunch only after
+//!    `tony.task.max-restarts` surgical recoveries fail within one
+//!    attempt;
+//! 7. report the first worker's UI URL + task logs to the client via the
 //!    RM tracking URL.
 
 pub mod protocol;
 pub mod state;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -28,12 +37,12 @@ use anyhow::{Context, Result};
 use crate::executor::{run_task_executor, ExecutorParams};
 use crate::net::rpc::RpcServer;
 use crate::tonyconf::JobSpec;
-use crate::util::ids::{ApplicationId, TaskId};
+use crate::util::ids::{ApplicationId, ContainerId, TaskId};
 use crate::util::HostPort;
-use crate::yarn::{Container, ContainerCtx, ExitStatus, ResourceManager};
+use crate::yarn::{Container, ContainerCtx, ContainerRequest, ExitStatus, ResourceManager};
 use crate::{tdebug, tinfo, twarn};
 
-pub use protocol::{AmCommand, FinishedMsg, HeartbeatMsg, RegisterMsg};
+pub use protocol::{AmCommand, FinishedMsg, HeartbeatMsg, HeartbeatReply, RegisterMsg};
 pub use state::{AmState, AttemptOutcome, JobPhase, TaskRecord};
 
 /// Result of one whole AM run (exposed for tests/portal).
@@ -103,7 +112,8 @@ fn am_body(am: &AmContext, ctx: &ContainerCtx) -> Result<JobResult> {
             Ok(AttemptOutcome::TaskFailed(reason)) => {
                 twarn!("am", "{} attempt {attempts_used} failed: {reason}", am.app);
                 last_error = reason;
-                // Paper §2.2: tear down remaining tasks, re-request, relaunch.
+                // Escalation (paper §2.2): tear down remaining tasks,
+                // re-request, relaunch the whole attempt.
                 teardown_attempt(am, attempts_used);
             }
             Ok(AttemptOutcome::AmKilled) => {
@@ -140,6 +150,82 @@ fn priority_type(job: &JobSpec, prio: u8) -> Option<String> {
     job.task_types.get(idx).map(|t| t.name.clone())
 }
 
+/// Matches RM grants back to the tasks awaiting (re)launch, accumulates
+/// the container asks those tasks need, and queues unmatched grants for
+/// release.  Centralizing this is what fixes the historical leak where a
+/// grant with an unknown priority was logged and dropped — its node
+/// capacity stayed booked for the life of the job.
+struct GrantRouter {
+    /// task type -> indices awaiting (re)launch, FIFO.
+    pending: BTreeMap<String, VecDeque<u32>>,
+    /// Instances enqueued since the last `take_asks` (per type).
+    unasked: BTreeMap<String, u32>,
+    /// Grants to hand back on the next allocate call.
+    releases: Vec<ContainerId>,
+}
+
+impl GrantRouter {
+    fn new(job: &JobSpec) -> GrantRouter {
+        let mut pending = BTreeMap::new();
+        let mut unasked = BTreeMap::new();
+        for t in &job.task_types {
+            pending.insert(t.name.clone(), (0..t.instances).collect::<VecDeque<u32>>());
+            unasked.insert(t.name.clone(), t.instances);
+        }
+        GrantRouter { pending, unasked, releases: Vec::new() }
+    }
+
+    /// Tasks granted nothing yet (still awaiting a container).
+    fn outstanding(&self) -> usize {
+        self.pending.values().map(|q| q.len()).sum()
+    }
+
+    /// Queue a task for relaunch (surgical recovery).
+    fn enqueue(&mut self, task: &TaskId) {
+        self.pending
+            .entry(task.job_type.clone())
+            .or_default()
+            .push_back(task.index);
+        *self.unasked.entry(task.job_type.clone()).or_insert(0) += 1;
+    }
+
+    /// Container asks covering everything enqueued since the last call.
+    fn take_asks(&mut self, job: &JobSpec) -> Vec<ContainerRequest> {
+        let mut asks = Vec::new();
+        for (ty, n) in self.unasked.iter_mut() {
+            if *n == 0 {
+                continue;
+            }
+            if let Some(t) = job.task_type(ty) {
+                let mut req = t.to_request();
+                req.count = *n;
+                req.priority = type_priority(job, ty);
+                asks.push(req);
+            }
+            *n = 0;
+        }
+        asks
+    }
+
+    /// Match a grant to a pending task.  A grant whose priority maps to
+    /// no task type — or to a type with nothing pending (surplus) — is
+    /// queued for release instead of leaking its node capacity.
+    fn route(&mut self, job: &JobSpec, container: &Container) -> Option<TaskId> {
+        if let Some(ty) = priority_type(job, container.priority) {
+            if let Some(idx) = self.pending.get_mut(&ty).and_then(|q| q.pop_front()) {
+                return Some(TaskId::new(ty, idx));
+            }
+        }
+        self.releases.push(container.id);
+        None
+    }
+
+    /// Grants to release via the next allocate call.
+    fn take_releases(&mut self) -> Vec<ContainerId> {
+        std::mem::take(&mut self.releases)
+    }
+}
+
 fn run_attempt(
     am: &AmContext,
     ctx: &ContainerCtx,
@@ -149,75 +235,94 @@ fn run_attempt(
     let job = &am.job;
     let rm = &am.rm;
 
-    // ---- 1. negotiate containers (heterogeneous asks) ----
-    let asks: Vec<_> = job
-        .task_types
-        .iter()
-        .map(|t| {
-            let mut req = t.to_request();
-            req.priority = type_priority(job, &t.name);
-            req
-        })
-        .collect();
-    let mut next_index: BTreeMap<String, u32> =
-        job.task_types.iter().map(|t| (t.name.clone(), 0u32)).collect();
-    let mut launched = 0u32;
+    let mut router = GrantRouter::new(job);
     let total = job.total_tasks();
-    let mut first_alloc = true;
+    let mut launched = 0u32;
 
     let hb_interval = Duration::from_millis(job.heartbeat_ms.max(5));
     let liveness_budget =
         Duration::from_millis(job.heartbeat_ms.max(5) * job.max_missed_heartbeats as u64);
-    let attempt_start = Instant::now();
-    // Generous ceiling: PJRT compilation dominates task start; scale with
-    // model size via a conf knob.
+    // Generous ceilings: PJRT compilation dominates task start; scale
+    // with model size via conf knobs.
     let launch_timeout =
         Duration::from_millis(job.conf.get_u64("tony.task.launch-timeout-ms", 120_000));
+    let registration_timeout =
+        Duration::from_millis(job.conf.get_u64("tony.task.registration-timeout-ms", 120_000));
+    // Surgical-recovery budget per attempt; 0 restores the paper's pure
+    // teardown-everything behaviour.
+    let max_task_restarts = job.conf.get_u64("tony.task.max-restarts", 3) as u32;
+    let mut surgical_used = 0u32;
+    // Start of the current negotiation or recovery window (relaunch
+    // grants must arrive within `launch_timeout` of this).
+    let mut phase_started = Instant::now();
+    let mut recovering = false;
 
     loop {
         if ctx.killed() {
             return Ok(AttemptOutcome::AmKilled);
         }
-        // ---- allocate heartbeat: new grants + completed containers ----
-        let resp = rm.allocate(am.app, if first_alloc { &asks } else { &[] }, &[])?;
-        first_alloc = false;
+        // ---- allocate heartbeat: asks + releases in, grants + completed
+        //      containers out ----
+        let asks = router.take_asks(job);
+        let releases = router.take_releases();
+        if !releases.is_empty() {
+            am.state.note_released_grants(releases.len() as u64);
+        }
+        let resp = rm.allocate(am.app, &asks, &releases)?;
 
         for container in resp.allocated {
-            let Some(ty) = priority_type(job, container.priority) else {
-                twarn!("am", "grant with unknown priority {}", container.priority);
+            let Some(task) = router.route(job, &container) else {
+                twarn!(
+                    "am",
+                    "{} grant {} (priority {}) matches no pending task; releasing",
+                    am.app,
+                    container.id,
+                    container.priority
+                );
                 continue;
             };
-            let index = {
-                let slot = next_index.get_mut(&ty).unwrap();
-                let i = *slot;
-                *slot += 1;
-                i
-            };
-            let task = TaskId::new(ty.clone(), index);
-            launch_executor(am, am_addr, attempt, &container, &task)?;
-            launched += 1;
-            tdebug!(
-                "am",
-                "{} launched {task} in {} on {} ({launched}/{total})",
-                am.app,
-                container.id,
-                container.node
-            );
+            match launch_executor(am, am_addr, &container, &task) {
+                Ok(()) => {
+                    launched += 1;
+                    tdebug!(
+                        "am",
+                        "{} launched {task} in {} on {} ({launched}/{total})",
+                        am.app,
+                        container.id,
+                        container.node
+                    );
+                }
+                Err(e) => {
+                    // Node died between grant and start: drop the corpse
+                    // and re-ask instead of burning the whole attempt.
+                    twarn!("am", "{} launch of {task} failed: {e:#}; re-requesting", am.app);
+                    am.state.forget_container(container.id);
+                    router.enqueue(&task);
+                }
+            }
         }
 
-        // ---- container-level failures (incl. node loss) ----
+        // ---- collect this tick's failures ----
+        let mut failed: BTreeMap<TaskId, String> = BTreeMap::new();
+
+        // Container-level failures (incl. node loss).
         for status in resp.completed {
             if let Some(task) = am.state.task_for_container(status.id) {
                 let record_exit = am.state.task_exit(&task);
                 match status.exit {
-                    ExitStatus::Success => {}
+                    ExitStatus::Success => {
+                        am.state.forget_container(status.id);
+                    }
                     bad => {
-                        // If the task already reported success via RPC this
-                        // is benign teardown noise; otherwise it's a failure.
-                        if record_exit != Some(0) {
-                            return Ok(AttemptOutcome::TaskFailed(format!(
-                                "container for {task} exited: {bad:?}"
-                            )));
+                        // If the task already reported success via RPC
+                        // this is benign teardown noise; otherwise it's a
+                        // failure.
+                        if record_exit == Some(0) {
+                            am.state.forget_container(status.id);
+                        } else {
+                            failed
+                                .entry(task.clone())
+                                .or_insert_with(|| format!("container for {task} exited: {bad:?}"));
                         }
                     }
                 }
@@ -225,49 +330,129 @@ fn run_attempt(
         }
 
         // ---- spec construction once everyone registered ----
-        am.state.try_build_spec(attempt);
+        am.state.try_build_spec(am.state.spec_version());
 
-        // ---- RPC-reported task exits ----
+        // RPC-reported task exits.
         if let Some((task, code)) = am.state.first_tracked_failure(job) {
-            return Ok(AttemptOutcome::TaskFailed(format!("{task} exited with code {code}")));
+            failed
+                .entry(task.clone())
+                .or_insert_with(|| format!("{task} exited with code {code}"));
         }
-        if am.state.all_tracked_succeeded(job) {
+
+        if failed.is_empty() && am.state.all_tracked_succeeded(job) {
             tinfo!("am", "{} all tracked tasks succeeded; stopping services", am.app);
             stop_untracked(am, job);
             return Ok(AttemptOutcome::Succeeded);
         }
 
-        // ---- liveness: registration + heartbeat staleness ----
-        if launched < total && attempt_start.elapsed() > launch_timeout {
+        // ---- liveness: heartbeat staleness + registration deadline ----
+        if let Some(task) = am.state.stale_task(liveness_budget) {
+            failed.entry(task.clone()).or_insert_with(|| {
+                format!("{task} missed {} heartbeats", job.max_missed_heartbeats)
+            });
+        }
+        if let Some(task) = am.state.unregistered_task(registration_timeout) {
+            failed.entry(task.clone()).or_insert_with(|| {
+                format!(
+                    "{task} launched but never registered within {registration_timeout:?}"
+                )
+            });
+        }
+
+        // ---- surgical recovery (or escalation) ----
+        if !failed.is_empty() {
+            let summary = failed
+                .iter()
+                .map(|(_, reason)| reason.clone())
+                .collect::<Vec<_>>()
+                .join("; ");
+            if surgical_used >= max_task_restarts {
+                return Ok(AttemptOutcome::TaskFailed(format!(
+                    "{summary} (surgical restart budget {max_task_restarts} exhausted)"
+                )));
+            }
+            surgical_used += 1;
+            let dead: Vec<TaskId> = failed.keys().cloned().collect();
+            recover_tasks(am, &mut router, &dead, surgical_used, max_task_restarts);
+            recovering = true;
+            phase_started = Instant::now();
+            continue;
+        }
+
+        // ---- progress deadlines ----
+        if router.outstanding() > 0 && phase_started.elapsed() > launch_timeout {
             return Ok(AttemptOutcome::TaskFailed(format!(
-                "only {launched}/{total} containers granted within {launch_timeout:?} \
-                 (cluster too busy or labels unsatisfiable)"
+                "{} container(s) not granted within {launch_timeout:?} \
+                 (cluster too busy or labels unsatisfiable)",
+                router.outstanding()
             )));
         }
-        if let Some(task) = am.state.stale_task(liveness_budget) {
-            return Ok(AttemptOutcome::TaskFailed(format!(
-                "{task} missed {} heartbeats",
-                job.max_missed_heartbeats
-            )));
+        if recovering {
+            if am.state.recovery_complete() {
+                recovering = false;
+                am.state.set_phase(JobPhase::Running);
+                tinfo!(
+                    "am",
+                    "{} surgical recovery complete at spec v{} (attempt {attempt})",
+                    am.app,
+                    am.state.spec_version()
+                );
+            } else if phase_started.elapsed() > launch_timeout + registration_timeout {
+                return Ok(AttemptOutcome::TaskFailed(
+                    "surgical recovery timed out (survivors never acked the patched spec)"
+                        .to_string(),
+                ));
+            }
         }
 
         std::thread::sleep(hb_interval.min(Duration::from_millis(20)));
     }
 }
 
+/// Begin a surgical recovery for `dead`: stop their old containers, bump
+/// the spec version, and queue replacements for relaunch.  Survivors are
+/// untouched — they learn the new spec via `Reconfigure` on their next
+/// heartbeat once the replacements have registered.
+fn recover_tasks(
+    am: &AmContext,
+    router: &mut GrantRouter,
+    dead: &[TaskId],
+    used: u32,
+    budget: u32,
+) {
+    // Capture the corpses before the records are reset.
+    let doomed: Vec<ContainerId> =
+        dead.iter().filter_map(|t| am.state.container_of(t)).collect();
+    let version = am.state.begin_recovery(dead);
+    for cid in &doomed {
+        am.rm.stop_container(*cid);
+    }
+    for task in dead {
+        router.enqueue(task);
+    }
+    let names: Vec<String> = dead.iter().map(|t| t.to_string()).collect();
+    twarn!(
+        "am",
+        "{} surgical recovery {used}/{budget}: relaunching [{}] at spec v{version}; \
+         survivors keep running",
+        am.app,
+        names.join(", ")
+    );
+}
+
 fn launch_executor(
     am: &AmContext,
     am_addr: &HostPort,
-    attempt: u32,
     container: &Container,
     task: &TaskId,
 ) -> Result<()> {
+    let spec_version = am.state.spec_version();
     let params = ExecutorParams {
         am_addr: am_addr.clone(),
         job: am.job.clone(),
         preset_dir: am.preset_dir.clone(),
         task: task.clone(),
-        spec_version: attempt,
+        spec_version,
     };
     am.state.record_launch(task.clone(), container.id);
     // The launch-context env mirrors what real TonY sets before exec-ing
@@ -277,7 +462,7 @@ fn launch_executor(
     env.insert("TASK_TYPE".to_string(), task.job_type.clone());
     env.insert("TASK_INDEX".to_string(), task.index.to_string());
     env.insert("AM_ADDR".to_string(), am_addr.to_string());
-    env.insert("SPEC_VERSION".to_string(), attempt.to_string());
+    env.insert("SPEC_VERSION".to_string(), spec_version.to_string());
     am.rm
         .start_container(container, env, Box::new(move |cctx| run_task_executor(cctx, params)))
         .with_context(|| format!("starting executor for {task}"))
@@ -324,5 +509,92 @@ fn teardown_attempt(am: &AmContext, attempt: u32) {
             break;
         }
         std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tonyconf::JobConfBuilder;
+    use crate::util::ids::ApplicationId;
+    use crate::yarn::Resource;
+
+    fn job() -> Arc<JobSpec> {
+        let conf = JobConfBuilder::new("router")
+            .instances("worker", 2)
+            .instances("ps", 1)
+            .build();
+        Arc::new(JobSpec::from_conf(&conf).unwrap())
+    }
+
+    fn grant(app: ApplicationId, seq: u64, priority: u8) -> Container {
+        Container {
+            id: ContainerId { app, seq },
+            app,
+            node: crate::util::ids::NodeId(0),
+            resource: Resource::new(1024, 1, 0),
+            priority,
+        }
+    }
+
+    #[test]
+    fn router_routes_known_priorities_in_order() {
+        let job = job();
+        let mut router = GrantRouter::new(&job);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        assert_eq!(router.outstanding(), 3);
+        let asks = router.take_asks(&job);
+        assert_eq!(asks.len(), 2, "one ask per task type");
+        assert!(router.take_asks(&job).is_empty(), "asks are consumed");
+
+        // worker priority = 2, ps priority = 3 (index + 2).
+        assert_eq!(router.route(&job, &grant(app, 1, 2)), Some(TaskId::new("worker", 0)));
+        assert_eq!(router.route(&job, &grant(app, 2, 3)), Some(TaskId::new("ps", 0)));
+        assert_eq!(router.route(&job, &grant(app, 3, 2)), Some(TaskId::new("worker", 1)));
+        assert_eq!(router.outstanding(), 0);
+        assert!(router.take_releases().is_empty());
+    }
+
+    #[test]
+    fn router_releases_unknown_and_surplus_grants() {
+        // Regression for the container leak: a grant whose priority maps
+        // to no task type used to be logged and dropped, leaking its
+        // node capacity for the life of the job.  It must be queued for
+        // release via the next allocate call instead.
+        let job = job();
+        let mut router = GrantRouter::new(&job);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        assert_eq!(router.route(&job, &grant(app, 1, 99)), None);
+
+        // Surplus grant for a known type with nothing pending leaks the
+        // same way; it must also be released.
+        assert_eq!(router.route(&job, &grant(app, 2, 3)), Some(TaskId::new("ps", 0)));
+        assert_eq!(router.route(&job, &grant(app, 3, 3)), None);
+
+        let releases = router.take_releases();
+        assert_eq!(releases.len(), 2);
+        assert_eq!(releases[0].seq, 1);
+        assert_eq!(releases[1].seq, 3);
+        assert!(router.take_releases().is_empty(), "releases are consumed");
+    }
+
+    #[test]
+    fn router_enqueue_reasks_for_replacements() {
+        let job = job();
+        let mut router = GrantRouter::new(&job);
+        let app = ApplicationId { cluster_ts: 1, seq: 1 };
+        let _ = router.take_asks(&job);
+        for (seq, prio) in [(1, 2), (2, 2), (3, 3)] {
+            assert!(router.route(&job, &grant(app, seq, prio)).is_some());
+        }
+        // worker:1 dies -> enqueue produces exactly one worker ask.
+        router.enqueue(&TaskId::new("worker", 1));
+        assert_eq!(router.outstanding(), 1);
+        let asks = router.take_asks(&job);
+        assert_eq!(asks.len(), 1);
+        assert_eq!(asks[0].count, 1);
+        assert_eq!(asks[0].priority, 2);
+        // The replacement grant routes back to worker:1 specifically.
+        assert_eq!(router.route(&job, &grant(app, 4, 2)), Some(TaskId::new("worker", 1)));
     }
 }

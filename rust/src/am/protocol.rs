@@ -16,8 +16,12 @@ pub enum AmCommand {
     None = 0,
     /// Service task should exit cleanly (job finished).
     Stop = 1,
-    /// Task belongs to a dead attempt; die immediately.
+    /// Task belongs to a dead incarnation; die immediately.
     Abort = 2,
+    /// The cluster spec changed underneath a surviving task (surgical
+    /// recovery relaunched a peer): re-fetch the spec at the version in
+    /// [`HeartbeatReply::spec_version`] and keep running.
+    Reconfigure = 3,
 }
 
 impl AmCommand {
@@ -25,8 +29,39 @@ impl AmCommand {
         match v {
             1 => AmCommand::Stop,
             2 => AmCommand::Abort,
+            3 => AmCommand::Reconfigure,
             _ => AmCommand::None,
         }
+    }
+}
+
+/// Heartbeat response: the command byte first (older readers that only
+/// inspect byte 0 still work), then the AM's current cluster-spec
+/// version — the payload of a `Reconfigure`, and a cheap consistency
+/// signal otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeartbeatReply {
+    pub command: AmCommand,
+    pub spec_version: u32,
+}
+
+impl HeartbeatReply {
+    pub fn to_bytes(self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(5);
+        out.push(self.command as u8);
+        out.extend_from_slice(&self.spec_version.to_le_bytes());
+        out
+    }
+
+    /// Lenient decode: a bare command byte (no version) is accepted so
+    /// old-style replies keep parsing.
+    pub fn from_bytes(bytes: &[u8]) -> HeartbeatReply {
+        let command = AmCommand::from_u8(bytes.first().copied().unwrap_or(0));
+        let spec_version = bytes
+            .get(1..5)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .unwrap_or(0);
+        HeartbeatReply { command, spec_version }
     }
 }
 
@@ -168,6 +203,18 @@ mod tests {
         assert_eq!(AmCommand::from_u8(0), AmCommand::None);
         assert_eq!(AmCommand::from_u8(1), AmCommand::Stop);
         assert_eq!(AmCommand::from_u8(2), AmCommand::Abort);
+        assert_eq!(AmCommand::from_u8(3), AmCommand::Reconfigure);
         assert_eq!(AmCommand::from_u8(77), AmCommand::None);
+    }
+
+    #[test]
+    fn heartbeat_reply_round_trips() {
+        let r = HeartbeatReply { command: AmCommand::Reconfigure, spec_version: 7 };
+        assert_eq!(HeartbeatReply::from_bytes(&r.to_bytes()), r);
+        // Bare command byte (legacy shape) still decodes.
+        let bare = HeartbeatReply::from_bytes(&[AmCommand::Stop as u8]);
+        assert_eq!(bare.command, AmCommand::Stop);
+        assert_eq!(bare.spec_version, 0);
+        assert_eq!(HeartbeatReply::from_bytes(&[]).command, AmCommand::None);
     }
 }

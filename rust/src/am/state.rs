@@ -1,6 +1,15 @@
 //! Shared AM state: task registry, cluster-spec assembly, heartbeat
 //! liveness, and the RPC handler the TaskExecutors talk to.  The portal
 //! reads snapshots of this concurrently.
+//!
+//! Versioning model: the *cluster-spec version* is a monotonic counter
+//! bumped on every full attempt **and** on every surgical recovery.  Each
+//! task record remembers the version its current incarnation was launched
+//! at (`spec_version`) plus the last version its executor heartbeated
+//! with (`acked_version`).  A heartbeat older than the record's launch
+//! version is a zombie from a replaced incarnation (Abort); a heartbeat
+//! older than the cluster version from a live incarnation is a survivor
+//! that needs the patched spec (Reconfigure).
 
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
@@ -20,6 +29,10 @@ use super::protocol::*;
 pub enum JobPhase {
     Negotiating,
     Running,
+    /// Surgical recovery in flight: replacements are being relaunched
+    /// while the surviving containers keep running.
+    Recovering,
+    /// Full teardown + relaunch of the whole attempt (escalation path).
     Restarting,
     Succeeded,
     Failed,
@@ -35,7 +48,14 @@ pub struct TaskRecord {
     pub metrics: TaskMetrics,
     pub exit_code: Option<i64>,
     pub command: AmCommand,
+    /// Cluster-spec version this incarnation was launched at.
     pub spec_version: u32,
+    /// Last cluster-spec version the executor heartbeated/registered
+    /// with — the "spec applied" ack used by the recovery barrier.
+    pub acked_version: u32,
+    /// How many times this task has been (re)launched within the current
+    /// attempt (0 = original launch).
+    pub generation: u32,
 }
 
 impl TaskRecord {
@@ -50,6 +70,8 @@ impl TaskRecord {
             exit_code: None,
             command: AmCommand::None,
             spec_version,
+            acked_version: 0,
+            generation: 0,
         }
     }
 }
@@ -57,11 +79,19 @@ impl TaskRecord {
 #[derive(Debug)]
 struct Inner {
     attempt: u32,
+    /// Monotonic cluster-spec version (never reused across attempts or
+    /// recoveries, so zombie detection stays exact).
+    version: u32,
     phase: JobPhase,
     tasks: BTreeMap<TaskId, TaskRecord>,
     expected: Vec<TaskId>,
     spec: Option<ClusterSpec>,
     started_at: Instant,
+    /// Surgical recoveries performed over the job's lifetime.
+    recoveries: u32,
+    /// Grants released back to the RM because they matched no task
+    /// (unknown priority or surplus) — diagnostic for the leak fix.
+    released_grants: u64,
 }
 
 /// The outcome of one attempt, as decided by the AM monitor loop.
@@ -97,11 +127,14 @@ impl AmState {
         AmState {
             inner: Mutex::new(Inner {
                 attempt: 0,
+                version: 0,
                 phase: JobPhase::Negotiating,
                 tasks: BTreeMap::new(),
                 expected: Vec::new(),
                 spec: None,
                 started_at: Instant::now(),
+                recoveries: 0,
+                released_grants: 0,
             }),
             cond: Condvar::new(),
             expected_from,
@@ -111,15 +144,46 @@ impl AmState {
     pub fn begin_attempt(&self, attempt: u32) {
         let mut inner = self.inner.lock().unwrap();
         inner.attempt = attempt;
+        inner.version += 1;
         inner.phase = JobPhase::Negotiating;
         inner.spec = None;
         inner.expected = (self.expected_from)(attempt);
+        let version = inner.version;
         inner.tasks = inner
             .expected
             .iter()
-            .map(|t| (t.clone(), TaskRecord::new(t.clone(), attempt)))
+            .map(|t| (t.clone(), TaskRecord::new(t.clone(), version)))
             .collect();
         self.cond.notify_all();
+    }
+
+    /// Start a surgical recovery: bump the spec version, reset the dead
+    /// tasks' records for relaunch, and invalidate the spec.  Surviving
+    /// records keep their container, endpoint, and metrics.  Returns the
+    /// new cluster-spec version the replacements must launch at.
+    pub fn begin_recovery(&self, dead: &[TaskId]) -> u32 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.version += 1;
+        inner.spec = None;
+        inner.phase = JobPhase::Recovering;
+        inner.recoveries += 1;
+        let version = inner.version;
+        for t in dead {
+            if let Some(r) = inner.tasks.get_mut(t) {
+                r.container = None;
+                r.endpoint = None;
+                r.exit_code = None;
+                r.metrics.finished = false;
+                // Relaunch grace: the clock restarts so the liveness
+                // checks measure the replacement, not the corpse.
+                r.last_heartbeat = Some(Instant::now());
+                r.generation += 1;
+                r.spec_version = version;
+                r.acked_version = 0;
+            }
+        }
+        self.cond.notify_all();
+        version
     }
 
     pub fn set_phase(&self, phase: JobPhase) {
@@ -135,14 +199,36 @@ impl AmState {
         self.inner.lock().unwrap().attempt
     }
 
+    /// Current cluster-spec version (monotonic across attempts and
+    /// surgical recoveries).
+    pub fn spec_version(&self) -> u32 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Surgical recoveries performed so far (job lifetime).
+    pub fn recoveries(&self) -> u32 {
+        self.inner.lock().unwrap().recoveries
+    }
+
+    /// Containers released because their grant matched no task (see the
+    /// unknown-grant leak fix in `am::run_attempt`).
+    pub fn released_grants(&self) -> u64 {
+        self.inner.lock().unwrap().released_grants
+    }
+
+    pub fn note_released_grants(&self, n: u64) {
+        self.inner.lock().unwrap().released_grants += n;
+    }
+
     pub fn record_launch(&self, task: TaskId, container: ContainerId) {
         let mut inner = self.inner.lock().unwrap();
-        let attempt = inner.attempt;
+        let version = inner.version;
         let rec = inner
             .tasks
             .entry(task.clone())
-            .or_insert_with(|| TaskRecord::new(task, attempt));
+            .or_insert_with(|| TaskRecord::new(task, version));
         rec.container = Some(container);
+        rec.spec_version = version;
         rec.last_heartbeat = Some(Instant::now()); // launch counts as life
     }
 
@@ -180,15 +266,36 @@ impl AmState {
             .and_then(|r| r.container)
     }
 
+    /// The container recorded for `task`, dead or alive — the recovery
+    /// path uses this to stop a failed task's old container.
+    pub fn container_of(&self, task: &TaskId) -> Option<ContainerId> {
+        let inner = self.inner.lock().unwrap();
+        inner.tasks.get(task).and_then(|r| r.container)
+    }
+
+    /// Snapshot of every task's current container — benches and tests use
+    /// this to prove survivors kept their containers across a recovery.
+    pub fn container_map(&self) -> BTreeMap<TaskId, Option<ContainerId>> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tasks
+            .values()
+            .map(|r| (r.task.clone(), r.container))
+            .collect()
+    }
+
     pub fn task_exit(&self, task: &TaskId) -> Option<i64> {
         let inner = self.inner.lock().unwrap();
         inner.tasks.get(task).and_then(|r| r.exit_code)
     }
 
-    /// Build the cluster spec if every expected task has registered.
-    pub fn try_build_spec(&self, attempt: u32) -> bool {
+    /// Build the cluster spec if every expected task has an endpoint.
+    /// After a surgical recovery the survivors' endpoints are still in
+    /// place, so this completes as soon as the replacements register —
+    /// a *partial* rebuild from the AM's point of view.
+    pub fn try_build_spec(&self, version: u32) -> bool {
         let mut inner = self.inner.lock().unwrap();
-        if inner.attempt != attempt || inner.spec.is_some() {
+        if inner.version != version || inner.spec.is_some() {
             return inner.spec.is_some();
         }
         let all_registered = inner
@@ -198,29 +305,53 @@ impl AmState {
         if !all_registered {
             return false;
         }
-        let mut spec = ClusterSpec::new(attempt as u64);
+        let mut spec = ClusterSpec::new(version as u64);
         for t in &inner.expected {
             let ep = inner.tasks[t].endpoint.clone().unwrap();
             spec.tasks.entry(t.job_type.clone()).or_default().push(ep);
         }
         inner.spec = Some(spec);
-        inner.phase = JobPhase::Running;
+        // The initial rendezvous transitions to Running here; a recovery
+        // stays in Recovering until the survivors ack the new version
+        // (see `recovery_complete`).
+        if inner.phase == JobPhase::Negotiating {
+            inner.phase = JobPhase::Running;
+        }
         self.cond.notify_all();
         true
     }
 
-    /// Blocking spec fetch used by the RPC handler.
+    /// True when the patched spec is built *and* every live task has
+    /// acked the current version — the recovery barrier.
+    pub fn recovery_complete(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        let spec_ready = inner
+            .spec
+            .as_ref()
+            .map(|s| s.version == inner.version as u64)
+            .unwrap_or(false);
+        spec_ready
+            && inner.expected.iter().all(|t| {
+                inner
+                    .tasks
+                    .get(t)
+                    .map(|r| r.exit_code.is_some() || r.acked_version == inner.version)
+                    .unwrap_or(false)
+            })
+    }
+
+    /// Blocking spec fetch used by the RPC handler.  Succeeds once a spec
+    /// at `version` *or newer* exists: a survivor asking for the version
+    /// its Reconfigure named may race a further recovery, and the newest
+    /// spec is always the right answer.
     fn wait_spec(&self, version: u32, timeout: Duration) -> Option<ClusterSpec> {
         let deadline = Instant::now() + timeout;
         let mut inner = self.inner.lock().unwrap();
         loop {
-            if inner.attempt == version {
-                if let Some(spec) = &inner.spec {
+            if let Some(spec) = &inner.spec {
+                if spec.version >= version as u64 {
                     return Some(spec.clone());
                 }
-            }
-            if inner.attempt > version {
-                return None; // dead attempt
             }
             let now = Instant::now();
             if now >= deadline {
@@ -237,9 +368,6 @@ impl AmState {
     pub fn first_tracked_failure(&self, job: &JobSpec) -> Option<(TaskId, i64)> {
         let inner = self.inner.lock().unwrap();
         for r in inner.tasks.values() {
-            if r.spec_version != inner.attempt {
-                continue;
-            }
             let tracked = job.task_type(&r.task.job_type).map(|t| t.tracked).unwrap_or(true);
             if !tracked {
                 continue;
@@ -285,17 +413,35 @@ impl AmState {
         }
     }
 
-    /// A task that *registered* but has stopped heartbeating.  Tasks that
-    /// are still starting up (engine compilation can take tens of seconds)
-    /// are covered by the AM's launch timeout instead.
+    /// A task that *registered* but has stopped heartbeating.
     pub fn stale_task(&self, budget: Duration) -> Option<TaskId> {
         let inner = self.inner.lock().unwrap();
         for r in inner.tasks.values() {
-            if r.exit_code.is_some() || r.spec_version != inner.attempt || r.endpoint.is_none() {
+            if r.exit_code.is_some() || r.endpoint.is_none() {
                 continue;
             }
             if let Some(last) = r.last_heartbeat {
                 if last.elapsed() > budget {
+                    return Some(r.task.clone());
+                }
+            }
+        }
+        None
+    }
+
+    /// A task whose container launched but whose executor never
+    /// registered within `budget`.  Without this check an executor that
+    /// wedges between launch and registration hangs the attempt forever:
+    /// the AM's launch timeout only covers *granting* containers, and the
+    /// heartbeat staleness check only covers *registered* tasks.
+    pub fn unregistered_task(&self, budget: Duration) -> Option<TaskId> {
+        let inner = self.inner.lock().unwrap();
+        for r in inner.tasks.values() {
+            if r.exit_code.is_some() || r.endpoint.is_some() || r.container.is_none() {
+                continue;
+            }
+            if let Some(launched) = r.last_heartbeat {
+                if launched.elapsed() > budget {
                     return Some(r.task.clone());
                 }
             }
@@ -330,6 +476,7 @@ impl AmState {
                     .map(|e| Json::Str(e.to_string()))
                     .unwrap_or(Json::Null),
             );
+            t.set("generation", r.generation as u64);
             t.set("step", r.metrics.step);
             t.set("loss", r.metrics.loss as f64);
             t.set("tokens", r.metrics.tokens_done);
@@ -352,6 +499,9 @@ impl AmState {
         let mut j = Json::obj();
         j.set("phase", format!("{:?}", inner.phase));
         j.set("attempt", inner.attempt as u64);
+        j.set("version", inner.version as u64);
+        j.set("recoveries", inner.recoveries as u64);
+        j.set("released_grants", inner.released_grants);
         j.set("uptime_ms", inner.started_at.elapsed().as_millis() as u64);
         j.set("tasks", Json::Arr(tasks));
         j.set(
@@ -389,20 +539,24 @@ impl RpcHandler for AmRpcHandler {
                 let msg = RegisterMsg::from_bytes(payload).map_err(|e| e.to_string())?;
                 let task = TaskId::new(msg.task_type.clone(), msg.index);
                 let mut inner = self.state.inner.lock().unwrap();
-                if msg.spec_version != inner.attempt {
-                    return Err(format!(
-                        "stale registration from {task} (attempt {} != {})",
-                        msg.spec_version, inner.attempt
-                    ));
-                }
-                let attempt = inner.attempt;
+                let version = inner.version;
                 let rec = inner
                     .tasks
                     .entry(task.clone())
-                    .or_insert_with(|| TaskRecord::new(task, attempt));
+                    .or_insert_with(|| TaskRecord::new(task.clone(), version));
+                // A registration is valid only from the incarnation we
+                // launched (its launch version); anything older is a
+                // zombie from a replaced incarnation.
+                if msg.spec_version != rec.spec_version {
+                    return Err(format!(
+                        "stale registration from {task} (version {} != {})",
+                        msg.spec_version, rec.spec_version
+                    ));
+                }
                 rec.endpoint = Some(HostPort::new(msg.host.clone(), msg.port));
                 rec.ui_url = msg.ui_url.clone();
                 rec.last_heartbeat = Some(Instant::now());
+                rec.acked_version = msg.spec_version;
                 drop(inner);
                 self.state.cond.notify_all();
                 self.state.try_build_spec(msg.spec_version);
@@ -422,26 +576,40 @@ impl RpcHandler for AmRpcHandler {
                 let msg = HeartbeatMsg::from_bytes(payload).map_err(|e| e.to_string())?;
                 let task = TaskId::new(msg.task_type.clone(), msg.index);
                 let mut inner = self.state.inner.lock().unwrap();
-                if msg.spec_version != inner.attempt {
-                    // Zombie from a torn-down attempt: tell it to die.
-                    return Ok(vec![AmCommand::Abort as u8]);
-                }
+                let version = inner.version;
+                let spec_ready = inner
+                    .spec
+                    .as_ref()
+                    .map(|s| s.version == version as u64)
+                    .unwrap_or(false);
                 let cmd = match inner.tasks.get_mut(&task) {
-                    Some(rec) => {
+                    Some(rec) if msg.spec_version >= rec.spec_version => {
                         rec.last_heartbeat = Some(Instant::now());
                         rec.metrics = msg.metrics;
-                        rec.command
+                        rec.acked_version = msg.spec_version.min(version);
+                        if rec.command != AmCommand::None {
+                            rec.command
+                        } else if msg.spec_version < version && spec_ready {
+                            // Survivor of a surgical recovery: hand it
+                            // the patched spec version to re-fetch.
+                            AmCommand::Reconfigure
+                        } else {
+                            AmCommand::None
+                        }
                     }
-                    None => AmCommand::Abort,
+                    // Zombie from a replaced incarnation or a torn-down
+                    // attempt: tell it to die.
+                    _ => AmCommand::Abort,
                 };
-                Ok(vec![cmd as u8])
+                Ok(HeartbeatReply { command: cmd, spec_version: version }.to_bytes())
             }
             AM_FINISHED => {
                 let msg = FinishedMsg::from_bytes(payload).map_err(|e| e.to_string())?;
                 let task = TaskId::new(msg.task_type.clone(), msg.index);
                 let mut inner = self.state.inner.lock().unwrap();
-                if msg.spec_version == inner.attempt {
-                    if let Some(rec) = inner.tasks.get_mut(&task) {
+                if let Some(rec) = inner.tasks.get_mut(&task) {
+                    // Only the current incarnation may report an exit.
+                    if msg.spec_version >= rec.spec_version {
                         rec.exit_code = Some(msg.exit_code);
                         rec.metrics.finished = true;
                     }
@@ -473,8 +641,6 @@ mod tests {
         let state = AmState::new(&job);
         state.begin_attempt(1);
         assert!(!state.try_build_spec(1));
-        let handler = AmRpcHandler::new(std::sync::Arc::new(AmState::new(&job)));
-        let _ = handler; // separate handler instance unused below
         {
             let mut inner = state.inner.lock().unwrap();
             for (i, t) in inner.expected.clone().iter().enumerate() {
@@ -535,11 +701,11 @@ mod tests {
             metrics: TaskMetrics { step: 3, ..Default::default() },
         };
         let resp = handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
-        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::None);
-        // Zombie heartbeat from an old attempt gets Abort.
+        assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::None);
+        // Zombie heartbeat from an old incarnation gets Abort.
         let old = HeartbeatMsg { spec_version: 0, ..hb.clone() };
         let resp = handler.handle(AM_HEARTBEAT, &old.to_bytes()).unwrap();
-        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::Abort);
+        assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::Abort);
         // The heartbeated task is fresh; others have no heartbeat at all
         // (never launched) and are not stale either.
         assert!(state.stale_task(Duration::from_secs(60)).is_none());
@@ -548,6 +714,117 @@ mod tests {
             state.stale_task(Duration::from_millis(1)),
             Some(TaskId::new("worker", 0))
         );
+    }
+
+    #[test]
+    fn launched_but_unregistered_task_is_flagged() {
+        let job = job();
+        let state = AmState::new(&job);
+        state.begin_attempt(1);
+        // Nothing launched -> nothing can be flagged, ever.
+        assert!(state.unregistered_task(Duration::from_millis(0)).is_none());
+        let cid = ContainerId {
+            app: crate::util::ids::ApplicationId { cluster_ts: 1, seq: 1 },
+            seq: 1,
+        };
+        state.record_launch(TaskId::new("worker", 1), cid);
+        // Fresh launch is within its registration grace.
+        assert!(state.unregistered_task(Duration::from_secs(60)).is_none());
+        std::thread::sleep(Duration::from_millis(30));
+        // Past the deadline with no registration -> flagged (this is the
+        // regression for the pre-registration wedge hang).
+        assert_eq!(
+            state.unregistered_task(Duration::from_millis(1)),
+            Some(TaskId::new("worker", 1))
+        );
+        // Once registered, the registration deadline no longer applies.
+        {
+            let mut inner = state.inner.lock().unwrap();
+            inner.tasks.get_mut(&TaskId::new("worker", 1)).unwrap().endpoint =
+                Some(HostPort::localhost(7001));
+        }
+        assert!(state.unregistered_task(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn surgical_recovery_reconfigures_survivors() {
+        let job = job();
+        let state = std::sync::Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+        // Everyone registers at version 1; spec builds.
+        let mut port = 6000u16;
+        for t in [("worker", 0), ("worker", 1), ("ps", 0)] {
+            let reg = RegisterMsg {
+                task_type: t.0.into(),
+                index: t.1,
+                host: "127.0.0.1".into(),
+                port,
+                ui_url: None,
+                spec_version: 1,
+            };
+            handler.handle(AM_REGISTER, &reg.to_bytes()).unwrap();
+            port += 1;
+        }
+        assert!(state.try_build_spec(1));
+        assert_eq!(state.phase(), JobPhase::Running);
+
+        // worker:1 dies; surgical recovery begins at version 2.
+        let v2 = state.begin_recovery(&[TaskId::new("worker", 1)]);
+        assert_eq!(v2, 2);
+        assert_eq!(state.phase(), JobPhase::Recovering);
+        assert!(!state.recovery_complete());
+
+        // Survivor heartbeats at version 1: alive, but no Reconfigure
+        // until the patched spec exists.
+        let hb = HeartbeatMsg {
+            task_type: "worker".into(),
+            index: 0,
+            spec_version: 1,
+            metrics: TaskMetrics::default(),
+        };
+        let resp = handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
+        assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::None);
+
+        // Zombie of the replaced worker:1 (old incarnation) is aborted.
+        let zombie = HeartbeatMsg { index: 1, ..hb.clone() };
+        let resp = handler.handle(AM_HEARTBEAT, &zombie.to_bytes()).unwrap();
+        assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::Abort);
+
+        // Replacement registers at version 2 -> spec rebuilds (partial:
+        // survivors kept their endpoints).
+        let reg = RegisterMsg {
+            task_type: "worker".into(),
+            index: 1,
+            host: "127.0.0.1".into(),
+            port: 6100,
+            ui_url: None,
+            spec_version: 2,
+        };
+        handler.handle(AM_REGISTER, &reg.to_bytes()).unwrap();
+        assert!(state.try_build_spec(2));
+        let spec = state.wait_spec(2, Duration::from_millis(10)).unwrap();
+        assert_eq!(spec.version, 2);
+        assert_eq!(spec.endpoints("worker")[1], HostPort::localhost(6100));
+        // Survivor endpoints untouched.
+        assert_eq!(spec.endpoints("worker")[0], HostPort::localhost(6000));
+
+        // Now the survivor's old-version heartbeat earns a Reconfigure.
+        let resp = handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
+        let reply = HeartbeatReply::from_bytes(&resp);
+        assert_eq!(reply.command, AmCommand::Reconfigure);
+        assert_eq!(reply.spec_version, 2);
+        assert!(!state.recovery_complete(), "survivors have not acked v2 yet");
+
+        // Survivors ack by heartbeating at the new version.
+        for idx in [0u32] {
+            let hb2 = HeartbeatMsg { index: idx, spec_version: 2, ..hb.clone() };
+            let resp = handler.handle(AM_HEARTBEAT, &hb2.to_bytes()).unwrap();
+            assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::None);
+        }
+        let ps_hb = HeartbeatMsg { task_type: "ps".into(), index: 0, spec_version: 2, ..hb };
+        handler.handle(AM_HEARTBEAT, &ps_hb.to_bytes()).unwrap();
+        assert!(state.recovery_complete());
     }
 
     #[test]
@@ -564,11 +841,11 @@ mod tests {
             metrics: TaskMetrics::default(),
         };
         let resp = handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
-        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::Stop);
+        assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::Stop);
         // Worker heartbeats still get None.
         let hbw = HeartbeatMsg { task_type: "worker".into(), ..hb };
         let resp = handler.handle(AM_HEARTBEAT, &hbw.to_bytes()).unwrap();
-        assert_eq!(AmCommand::from_u8(resp[0]), AmCommand::None);
+        assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::None);
     }
 
     #[test]
@@ -578,6 +855,8 @@ mod tests {
         state.begin_attempt(2);
         let j = state.snapshot_json();
         assert_eq!(j.get("attempt").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("recoveries").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("released_grants").unwrap().as_u64(), Some(0));
         assert_eq!(j.get("tasks").unwrap().as_arr().unwrap().len(), 3);
     }
 }

@@ -1,9 +1,10 @@
 //! Failure injection: deterministic kill schedules against running jobs.
 //!
-//! Exercises the paper's fault-tolerance loop (§2.2): kill a task
-//! container or a whole node at a chosen moment and let the AM tear down,
-//! re-negotiate, and relaunch from the last checkpoint.  Used by
-//! `examples/fault_tolerance.rs`, the C4 bench, and the integration tests.
+//! Exercises the fault-tolerance loop (§2.2 + surgical recovery): kill a
+//! task container or a whole node at a chosen moment and let the AM
+//! relaunch just the dead tasks (or, on escalation, tear down and
+//! relaunch the whole attempt).  Used by `examples/fault_tolerance.rs`,
+//! the recovery benches, and the integration tests.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -30,6 +31,8 @@ pub struct InjectionRecord {
     pub fault: Fault,
     pub injected_at_ms: u64,
     pub chief_step_at_injection: u64,
+    /// Cluster-spec version the job was at when the fault fired.
+    pub version_at_injection: u32,
 }
 
 /// Watches a job's AM state and fires faults per schedule.  Runs on its
@@ -50,10 +53,13 @@ impl ChaosInjector {
                 let t0 = Instant::now();
                 let mut records = Vec::new();
                 let mut pending = schedule;
-                // At most one fault per AM attempt: killing twice within
-                // the same attempt is indistinguishable from one failure
-                // (the AM tears everything down anyway).
-                let mut last_fired_attempt = 0u32;
+                // At most one fault per cluster-spec version: a surgical
+                // recovery bumps the version without starting a new
+                // attempt, so gating on the version lets faults fire
+                // *within* a surviving attempt (kill, recover, kill
+                // again) while still never double-killing one
+                // incarnation.
+                let mut last_fired_version = 0u32;
                 while !pending.is_empty() {
                     let phase = am_state.phase();
                     if matches!(
@@ -63,8 +69,8 @@ impl ChaosInjector {
                         twarn!("chaos", "job ended with {} faults unfired", pending.len());
                         break;
                     }
-                    let attempt = am_state.attempt();
-                    if attempt == last_fired_attempt {
+                    let version = am_state.spec_version();
+                    if version == last_fired_version || phase != crate::am::JobPhase::Running {
                         std::thread::sleep(Duration::from_millis(10));
                         continue;
                     }
@@ -72,7 +78,7 @@ impl ChaosInjector {
                     let mut fired = Vec::new();
                     for (i, fault) in pending.iter().enumerate() {
                         if !fired.is_empty() {
-                            break; // one per attempt
+                            break; // one per spec version
                         }
                         let due = match fault {
                             Fault::KillTask { after_step, .. }
@@ -100,13 +106,14 @@ impl ChaosInjector {
                         }
                     }
                     if !fired.is_empty() {
-                        last_fired_attempt = attempt;
+                        last_fired_version = version;
                     }
                     for &i in fired.iter().rev() {
                         records.push(InjectionRecord {
                             fault: pending.remove(i),
                             injected_at_ms: t0.elapsed().as_millis() as u64,
                             chief_step_at_injection: step,
+                            version_at_injection: version,
                         });
                     }
                     std::thread::sleep(Duration::from_millis(10));

@@ -217,6 +217,55 @@ impl CheckpointStore {
         }
         Ok(())
     }
+
+    // ---- restore markers (per-generation recovery audit trail) ----
+    //
+    // Every time a chief (re)seeds the parameter servers — initial
+    // launch, full-attempt restart, or a surgical PS recovery — it
+    // records the cluster-spec version it did so at and the step it
+    // restored from.  A surgical *worker* recovery seeds nothing, so it
+    // leaves no marker: tests and benches use the marker count to prove
+    // survivors were never rolled back.
+
+    fn marker_path(&self, version: u64) -> PathBuf {
+        self.dir.join(format!("restore-v{version:06}.marker"))
+    }
+
+    /// Record that the incarnation at cluster-spec `version` (re)seeded
+    /// training state from `step`.  Idempotent per version (atomic
+    /// tmp+rename, same torn-write discipline as snapshots).
+    pub fn mark_restore(&self, version: u64, step: u64) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        let path = self.marker_path(version);
+        let tmp = path.with_extension("marker.tmp");
+        std::fs::write(&tmp, format!("{step}\n"))?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// All restore markers as (spec version, restored-from step),
+    /// ascending by version.
+    pub fn restore_markers(&self) -> Result<Vec<(u64, u64)>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(out),
+        };
+        for ent in entries.flatten() {
+            let name = ent.file_name().to_string_lossy().into_owned();
+            let Some(rest) = name.strip_prefix("restore-v") else { continue };
+            let Some(num) = rest.strip_suffix(".marker") else { continue };
+            let Ok(version) = num.parse::<u64>() else { continue };
+            let step = std::fs::read_to_string(ent.path())
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+                .unwrap_or(0);
+            out.push((version, step));
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -282,6 +331,23 @@ mod tests {
             store.save(&sample(step, 10)).unwrap();
         }
         assert_eq!(store.list().unwrap(), vec![4, 5]);
+        store.clear().unwrap();
+    }
+
+    #[test]
+    fn restore_markers_round_trip() {
+        let dir = tmpdir("markers");
+        let store = CheckpointStore::new(&dir);
+        assert!(store.restore_markers().unwrap().is_empty());
+        store.mark_restore(1, 0).unwrap();
+        store.mark_restore(4, 10).unwrap();
+        // Re-marking the same version overwrites, not duplicates.
+        store.mark_restore(4, 10).unwrap();
+        assert_eq!(store.restore_markers().unwrap(), vec![(1, 0), (4, 10)]);
+        // Markers do not pollute the snapshot listing.
+        store.save(&sample(20, 10)).unwrap();
+        assert_eq!(store.list().unwrap(), vec![20]);
+        assert_eq!(store.latest().unwrap().unwrap().step, 20);
         store.clear().unwrap();
     }
 

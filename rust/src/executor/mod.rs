@@ -12,7 +12,7 @@
 
 use std::net::TcpListener;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -20,6 +20,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::am::protocol::*;
 use crate::framework::protocol::{new_metrics_cell, ClusterSpec, MetricsCell};
+use crate::framework::worker::{new_reconfig_cell, ReconfigCell};
 use crate::framework::{ps, worker};
 use crate::net::rpc::RpcClient;
 use crate::net::wire::Wire;
@@ -28,7 +29,7 @@ use crate::tonyconf::{JobSpec, EVALUATOR, PS, WORKER};
 use crate::util::ids::TaskId;
 use crate::util::HostPort;
 use crate::yarn::ContainerCtx;
-use crate::{tdebug, terror, tinfo};
+use crate::{tdebug, terror, tinfo, twarn};
 
 /// Everything the AM hands an executor at launch (the closure-captured
 /// analogue of the packaged conf + localized resources).
@@ -79,6 +80,20 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         env_type == task.job_type && env_index == task.index,
         "launch env/task mismatch: {env_type}:{env_index} vs {task}"
     );
+
+    // Chaos knob: wedge this executor *before* it registers with the AM,
+    // simulating a container that launches but never comes up (the
+    // registration-hang regression).  The AM's registration deadline must
+    // catch this; without it the attempt hangs forever.
+    if let Some(wedge) = params.job.conf.get("tony.chaos.wedge-preregister") {
+        if wedge == params.task.to_string() {
+            twarn!("executor", "{task} wedging pre-registration (chaos knob)");
+            while !ctx.killed() {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            return Ok(137);
+        }
+    }
 
     let am = Arc::new(
         RpcClient::connect_timeout(&params.am_addr, Duration::from_secs(5))
@@ -161,7 +176,15 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     // ---- heartbeat thread (covers spec-wait AND task runtime) ----
     // The AM's liveness check starts at registration, so heartbeats must
     // flow from this moment on, even while we block waiting for the spec.
+    // The thread also drives mid-run reconfiguration: on a `Reconfigure`
+    // command it re-fetches the patched cluster spec, adopts its version
+    // (the ack the AM's recovery barrier waits for), and hands the spec
+    // to the task through `reconfig`.
     let hb_done = Arc::new(AtomicBool::new(false));
+    // The spec version this executor currently runs at; starts at the
+    // launch version and advances as patched specs are adopted.
+    let cur_version = Arc::new(AtomicU32::new(params.spec_version));
+    let reconfig: ReconfigCell = new_reconfig_cell();
     let hb_thread = {
         // Dedicated connection: the main thread's blocking GET_SPEC call
         // holds its connection for up to a second at a time, and heartbeats
@@ -174,8 +197,20 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         let metrics = metrics.clone();
         let done = hb_done.clone();
         let task = task.clone();
-        let spec_version = params.spec_version;
+        let cur_version = cur_version.clone();
+        let reconfig = reconfig.clone();
         let hb_every = Duration::from_millis(params.job.heartbeat_ms.max(5));
+        // The Reconfigure spec re-fetch runs on this thread, so it must
+        // never block long enough for the AM to miss our heartbeats: cap
+        // it at a quarter of the liveness budget.  The AM only sends
+        // Reconfigure once the patched spec exists, so the fetch returns
+        // immediately unless a further recovery just invalidated it — in
+        // which case timing out and retrying next heartbeat is exactly
+        // right.
+        let spec_fetch_ms = (params.job.heartbeat_ms.max(5)
+            * params.job.max_missed_heartbeats as u64
+            / 4)
+        .clamp(50, 1000);
         std::thread::Builder::new()
             .name(format!("hb-{task}"))
             .spawn(move || {
@@ -186,13 +221,50 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                         &HeartbeatMsg {
                             task_type: task.job_type.clone(),
                             index: task.index,
-                            spec_version,
+                            spec_version: cur_version.load(Ordering::Relaxed),
                             metrics: m,
                         }
                         .to_bytes(),
                     ) {
-                        Ok(resp) => match AmCommand::from_u8(resp.first().copied().unwrap_or(0)) {
+                        Ok(resp) => match HeartbeatReply::from_bytes(&resp).command {
                             AmCommand::None => {}
+                            AmCommand::Reconfigure => {
+                                let want = HeartbeatReply::from_bytes(&resp).spec_version;
+                                if want > cur_version.load(Ordering::Relaxed) {
+                                    match am.call(
+                                        AM_GET_SPEC,
+                                        &GetSpecMsg {
+                                            spec_version: want,
+                                            timeout_ms: spec_fetch_ms,
+                                        }
+                                        .to_bytes(),
+                                    ) {
+                                        Ok(bytes) => {
+                                            let text = String::from_utf8_lossy(&bytes);
+                                            match ClusterSpec::from_tf_config(&text) {
+                                                Ok((spec, _, _)) => {
+                                                    let v = spec.version;
+                                                    tinfo!(
+                                                        "executor",
+                                                        "{task} adopting patched spec v{v}"
+                                                    );
+                                                    cur_version
+                                                        .store(v as u32, Ordering::Relaxed);
+                                                    *reconfig.lock().unwrap() = Some(spec);
+                                                }
+                                                Err(e) => tdebug!(
+                                                    "executor",
+                                                    "{task} bad patched spec: {e}; will retry"
+                                                ),
+                                            }
+                                        }
+                                        Err(e) => tdebug!(
+                                            "executor",
+                                            "{task} spec refetch failed: {e}; will retry"
+                                        ),
+                                    }
+                                }
+                            }
                             AmCommand::Stop | AmCommand::Abort => {
                                 tdebug!("executor", "{task} commanded to stop");
                                 kill.store(true, Ordering::Relaxed);
@@ -217,7 +289,8 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         if ctx.killed() || kill.load(Ordering::Relaxed) {
             hb_done.store(true, Ordering::Relaxed);
             let _ = hb_thread.join();
-            return finish(&am, params, 143, ps_handle, kill.clone(), Some(&metrics));
+            let v = cur_version.load(Ordering::Relaxed);
+            return finish(&am, params, v, 143, ps_handle, kill.clone(), Some(&metrics));
         }
         match am.call(
             AM_GET_SPEC,
@@ -226,6 +299,10 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
             Ok(bytes) => {
                 let text = String::from_utf8_lossy(&bytes);
                 let (spec, _, _) = ClusterSpec::from_tf_config(&text)?;
+                // The spec handed back may already be newer than the
+                // launch version (a recovery raced our startup); adopt
+                // whatever version we actually received.
+                cur_version.store(spec.version as u32, Ordering::Relaxed);
                 break spec;
             }
             Err(_) if std::time::Instant::now() < deadline => continue,
@@ -246,6 +323,8 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
             train: params.job.train.clone(),
             kill: kill.clone(),
             metrics: metrics.clone(),
+            spec_version: spec.version,
+            reconfig: Some(reconfig.clone()),
         };
         let name = format!("task-worker-{}", task.index);
         let _ = &tf_config; // env formally constructed above
@@ -300,13 +379,19 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     drop(port_guard);
 
     // Graceful stop path: a task killed by Stop reports success for
-    // service tasks (ps exits 0 by design) and 143 for workers.
-    finish(&am, params, exit_code, None, kill, Some(&metrics))
+    // service tasks (ps exits 0 by design) and 143 for workers.  A
+    // *container* kill (chaos, preemption, teardown) is different: even a
+    // service task that unwinds cleanly must report 143, otherwise the
+    // AM reads a chaos-killed PS as a benign exit and never recovers it.
+    let exit_code = if ctx.killed() && exit_code == 0 { 143 } else { exit_code };
+    let v = cur_version.load(Ordering::Relaxed);
+    finish(&am, params, v, exit_code, None, kill, Some(&metrics))
 }
 
 fn finish(
     am: &RpcClient,
     params: &ExecutorParams,
+    spec_version: u32,
     code: i32,
     ps_handle: Option<std::thread::JoinHandle<i32>>,
     kill: Arc<AtomicBool>,
@@ -325,7 +410,7 @@ fn finish(
             &HeartbeatMsg {
                 task_type: params.task.job_type.clone(),
                 index: params.task.index,
-                spec_version: params.spec_version,
+                spec_version,
                 metrics: m,
             }
             .to_bytes(),
@@ -336,7 +421,7 @@ fn finish(
         &FinishedMsg {
             task_type: params.task.job_type.clone(),
             index: params.task.index,
-            spec_version: params.spec_version,
+            spec_version,
             exit_code: code as i64,
         }
         .to_bytes(),

@@ -93,6 +93,10 @@ pub struct PushRequest {
     pub chunk: u32,
     /// The parameter version the gradient was computed against.
     pub step: u64,
+    /// Index of the pushing worker.  The sync barrier counts *distinct*
+    /// contributors, so a relaunched worker re-pushing a step its dead
+    /// incarnation already delivered is a no-op instead of a double count.
+    pub worker: u32,
     pub grads: Vec<f32>,
     pub n_workers: u32,
     pub lr: f32,
@@ -103,6 +107,7 @@ impl Wire for PushRequest {
     fn encode(&self, w: &mut Writer) {
         w.u32(self.chunk);
         w.u64(self.step);
+        w.u32(self.worker);
         w.f32_slice(&self.grads);
         w.u32(self.n_workers);
         w.f32(self.lr);
@@ -113,6 +118,7 @@ impl Wire for PushRequest {
         Ok(PushRequest {
             chunk: r.u32()?,
             step: r.u64()?,
+            worker: r.u32()?,
             grads: r.f32_vec()?,
             n_workers: r.u32()?,
             lr: r.f32()?,
@@ -328,6 +334,7 @@ mod tests {
         let push = PushRequest {
             chunk: 1,
             step: 9,
+            worker: 2,
             grads: vec![0.25; 8],
             n_workers: 4,
             lr: 1e-3,

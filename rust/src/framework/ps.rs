@@ -7,7 +7,7 @@
 //! `t+1` block on a condvar until then.  All heavy math (average + Adam)
 //! runs through the PJRT engine — Python is nowhere near this path.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -26,8 +26,11 @@ struct ChunkState {
     m: Vec<f32>,
     v: Vec<f32>,
     version: u64,
-    /// Sync-mode accumulator: (step, sum-of-grads, #contributions).
-    pending: Option<(u64, Vec<f32>, u32)>,
+    /// Sync-mode accumulator: (step, sum-of-grads, contributing workers).
+    /// Tracking *which* workers contributed (not just a count) makes the
+    /// barrier idempotent: a relaunched worker re-pushing the step its
+    /// dead incarnation already delivered cannot double-count.
+    pending: Option<(u64, Vec<f32>, BTreeSet<u32>)>,
 }
 
 struct Shard {
@@ -188,32 +191,40 @@ impl RpcHandler for PsHandler {
                     let version = state.version;
                     self.shard.cond.notify_all();
                     version.to_bytes()
+                } else if req.step != state.version {
+                    // Sync push tagged for a version this chunk is not at:
+                    // either a straggler whose barrier already completed
+                    // (step < version) or a worker ahead of a shard that a
+                    // PS relaunch rolled back to an older checkpoint
+                    // (step > version).  Drop the gradient and report the
+                    // live version — the worker resyncs off the response
+                    // instead of dying, which is what keeps survivors
+                    // alive across surgical recoveries.
+                    state.version.to_bytes()
                 } else {
                     // Sync barrier path.
-                    if req.step != state.version {
-                        // Stale gradient from a previous incarnation or a
-                        // straggler: reject so the worker resyncs.
-                        return Err(format!(
-                            "stale push for chunk {}: step {} != version {}",
-                            req.chunk, req.step, state.version
-                        ));
-                    }
                     match &mut state.pending {
                         None => {
-                            state.pending = Some((req.step, req.grads.clone(), 1));
+                            state.pending =
+                                Some((req.step, req.grads.clone(), BTreeSet::from([req.worker])));
                         }
-                        Some((step, acc, count)) => {
+                        Some((step, acc, who)) => {
                             debug_assert_eq!(*step, req.step);
-                            for (a, g) in acc.iter_mut().zip(&req.grads) {
-                                *a += g;
+                            // Duplicate contributor (relaunched worker):
+                            // the batch is deterministic per (worker,
+                            // step), so the gradient is already in `acc`.
+                            if who.insert(req.worker) {
+                                for (a, g) in acc.iter_mut().zip(&req.grads) {
+                                    *a += g;
+                                }
                             }
-                            *count += 1;
                         }
                     }
-                    let ready = matches!(&state.pending, Some((_, _, c)) if *c >= req.n_workers);
+                    let ready =
+                        matches!(&state.pending, Some((_, _, who)) if who.len() >= req.n_workers as usize);
                     if ready {
-                        let (_, acc, count) = state.pending.take().unwrap();
-                        let scale = 1.0 / count as f32;
+                        let (_, acc, who) = state.pending.take().unwrap();
+                        let scale = 1.0 / who.len() as f32;
                         self.apply_update(state, &acc, scale, req.lr)?;
                         self.shard.cond.notify_all();
                     }

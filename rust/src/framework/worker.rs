@@ -2,9 +2,19 @@
 //! push gradient slices to the owning PS shards.  worker:0 is the chief:
 //! it also initializes/restores parameters, checkpoints with exact Adam
 //! moments, and runs periodic evals through the `eval_loss` artifact.
+//!
+//! Surgical recovery: when the AM relaunches a failed peer it hands the
+//! survivors a patched cluster spec mid-run (through the executor's
+//! heartbeat thread and the [`ReconfigCell`]).  A surviving worker
+//! reconnects to the (possibly new) PS endpoints, resyncs its step off
+//! the live parameter version, and keeps training — its container never
+//! stops.  Barrier pulls are sliced so a pending reconfiguration (or a
+//! kill) can interrupt them; transient PS outages are retried rather
+//! than treated as fatal, because a replacement PS is usually seconds
+//! away.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -14,7 +24,7 @@ use crate::data::SyntheticCorpus;
 use crate::net::rpc::RpcClient;
 use crate::net::wire::Wire;
 use crate::runtime::{EngineHandle, Tensor};
-use crate::tonyconf::TrainSpec;
+use crate::tonyconf::{TrainSpec, PS};
 use crate::util::HostPort;
 use crate::{tdebug, tinfo};
 
@@ -22,6 +32,20 @@ use super::protocol::*;
 
 /// How long pulls wait for the barrier before declaring the job wedged.
 const PULL_TIMEOUT_MS: u64 = 30_000;
+
+/// Slice length for interruptible barrier pulls: a pending kill or
+/// reconfiguration is noticed within this bound instead of after the
+/// full pull timeout.
+const PULL_SLICE_MS: u64 = 250;
+
+/// A patched cluster spec delivered to a running task (surgical
+/// recovery).  The executor's heartbeat thread fills it; the task drains
+/// it at the top of its step loop.
+pub type ReconfigCell = Arc<Mutex<Option<ClusterSpec>>>;
+
+pub fn new_reconfig_cell() -> ReconfigCell {
+    Arc::new(Mutex::new(None))
+}
 
 /// Everything a worker needs to run (assembled by the TaskExecutor from
 /// the cluster spec + job conf).
@@ -33,6 +57,10 @@ pub struct WorkerContext {
     pub train: TrainSpec,
     pub kill: Arc<AtomicBool>,
     pub metrics: MetricsCell,
+    /// Cluster-spec version this worker launched at.
+    pub spec_version: u64,
+    /// Mid-run spec updates from the executor (None in direct harnesses).
+    pub reconfig: Option<ReconfigCell>,
 }
 
 /// Client view of the sharded parameter store.
@@ -65,6 +93,29 @@ impl PsClient {
         &self.clients[chunk % self.clients.len()]
     }
 
+    /// Chunks shard `i` is expected to own once initialized.
+    fn expected_owned(&self, i: usize) -> usize {
+        let n_ps = self.clients.len();
+        let n_chunks = self.n_chunks();
+        if i >= n_chunks {
+            0
+        } else {
+            (n_chunks - i).div_ceil(n_ps)
+        }
+    }
+
+    /// True if any shard holds fewer chunks than it should — i.e. a PS
+    /// was (re)started and its parameter state is gone.  The chief uses
+    /// this to decide between joining warm shards as-is and re-seeding
+    /// them from the last checkpoint.
+    pub fn any_uninitialized(&self) -> Result<bool> {
+        let stats = self.stats()?;
+        Ok(stats
+            .iter()
+            .enumerate()
+            .any(|(i, s)| (s.owned_chunks as usize) < self.expected_owned(i)))
+    }
+
     /// Push initial chunk states (chief only).
     pub fn init(&self, params: &[f32], moments: Option<&(Vec<f32>, Vec<f32>)>, version: u64) -> Result<()> {
         for c in 0..self.n_chunks() {
@@ -88,13 +139,19 @@ impl PsClient {
     /// Pull the full flat parameter vector at `min_version`.  Returns the
     /// (common) version and the assembled vector.
     pub fn pull(&self, min_version: u64) -> Result<(u64, Vec<f32>)> {
+        self.pull_timeout(min_version, PULL_TIMEOUT_MS)
+    }
+
+    /// Like [`PsClient::pull`] with an explicit per-chunk wait budget, so
+    /// callers can slice a barrier wait into interruptible pieces.
+    pub fn pull_timeout(&self, min_version: u64, timeout_ms: u64) -> Result<(u64, Vec<f32>)> {
         let mut flat = vec![0f32; self.n_params];
         let mut version = u64::MAX;
         for c in 0..self.n_chunks() {
             let req = PullRequest {
                 chunk: c as u32,
                 min_version,
-                timeout_ms: PULL_TIMEOUT_MS,
+                timeout_ms,
             };
             let resp = self
                 .owner(c)
@@ -111,17 +168,22 @@ impl PsClient {
 
     /// Push one step's gradient, sliced per chunk.  The request encoding
     /// is built once into a reused buffer per chunk (§Perf L3 pass 2: no
-    /// per-chunk Vec churn on the hot path).
+    /// per-chunk Vec churn on the hot path).  Returns the minimum chunk
+    /// version observed after the push — a value *below* `step` means a
+    /// relaunched PS rolled the parameters back and the worker must
+    /// resync.
     pub fn push(
         &self,
         grads: &[f32],
         step: u64,
+        worker: u32,
         n_workers: u32,
         lr: f32,
         mode: u8,
-    ) -> Result<()> {
+    ) -> Result<u64> {
         let mut chunk = vec![0f32; self.chunk_len];
         let mut buf = crate::net::wire::Writer::with_capacity(self.chunk_len * 4 + 32);
+        let mut version = u64::MAX;
         for c in 0..self.n_chunks() {
             let lo = c * self.chunk_len;
             let hi = ((c + 1) * self.chunk_len).min(self.n_params);
@@ -130,15 +192,20 @@ impl PsClient {
             buf.buf.clear();
             buf.u32(c as u32);
             buf.u64(step);
+            buf.u32(worker);
             buf.f32_slice(&chunk);
             buf.u32(n_workers);
             buf.f32(lr);
             buf.u8(mode);
-            self.owner(c)
+            let resp = self
+                .owner(c)
                 .call(PS_PUSH, &buf.buf)
                 .map_err(|e| anyhow!("push chunk {c}: {e}"))?;
+            if let Ok(v) = u64::from_bytes(&resp) {
+                version = version.min(v);
+            }
         }
-        Ok(())
+        Ok(if version == u64::MAX { step } else { version })
     }
 
     /// Fetch Adam moments for an exact checkpoint (chief only).
@@ -183,34 +250,113 @@ fn clip_grads(grads: &mut [f32], max_norm: f64) {
     }
 }
 
+/// Is a patched spec waiting to be applied?
+fn reconfig_pending(ctx: &WorkerContext) -> bool {
+    ctx.reconfig
+        .as_ref()
+        .map(|c| c.lock().unwrap().is_some())
+        .unwrap_or(false)
+}
+
+/// Drain the pending patched spec, if any.
+fn take_reconfig(ctx: &WorkerContext) -> Option<ClusterSpec> {
+    ctx.reconfig.as_ref().and_then(|c| c.lock().unwrap().take())
+}
+
+/// A PS interaction that may be interrupted by a pending reconfiguration.
+enum PsOutcome<T> {
+    Done(T),
+    /// A patched spec is waiting; abandon the operation and let the step
+    /// loop apply it.
+    Reconfig,
+}
+
+/// Run a PS operation with transient-outage retries: a kill aborts, a
+/// pending reconfiguration interrupts, and transport errors are retried
+/// until `PULL_TIMEOUT_MS` elapses (a replacement PS is usually seconds
+/// away, so dying on the first connection error would turn every PS
+/// relaunch into a worker cascade).
+fn ps_op<T>(
+    ctx: &WorkerContext,
+    step: u64,
+    what: &str,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<PsOutcome<T>> {
+    let deadline = Instant::now() + Duration::from_millis(PULL_TIMEOUT_MS);
+    loop {
+        if ctx.kill.load(Ordering::Relaxed) {
+            bail!("worker:{} killed at step {step}", ctx.index);
+        }
+        if reconfig_pending(ctx) {
+            return Ok(PsOutcome::Reconfig);
+        }
+        match op() {
+            Ok(v) => return Ok(PsOutcome::Done(v)),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("{what} at step {step}"));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Chief-only: bring the parameter servers to a trainable state.  Warm
+/// shards (all expected chunks present) are joined as-is — this is what
+/// lets a *relaunched chief* join survivors without rolling anyone back.
+/// If any shard is fresh (initial launch, or a PS that was surgically
+/// relaunched and lost its in-memory state), every shard is re-seeded
+/// from the latest checkpoint (or from `init_params` when none exists)
+/// and a restore marker is recorded for the incarnation.
+fn chief_init_ps(
+    ctx: &WorkerContext,
+    ps: &PsClient,
+    store: &CheckpointStore,
+    spec_version: u64,
+) -> Result<u64> {
+    if !ps.any_uninitialized()? {
+        tdebug!("worker", "chief joining warm parameter servers (no re-init)");
+        return Ok(0);
+    }
+    let restored = store.latest()?;
+    let (params, moments, start) = match restored {
+        Some(ckpt) => {
+            tinfo!("worker", "chief restoring checkpoint at step {}", ckpt.step);
+            (ckpt.params, ckpt.moments, ckpt.step)
+        }
+        None => {
+            let out = ctx
+                .engine
+                .execute("init_params", vec![Tensor::scalar_u32(ctx.train.seed as u32)])
+                .context("init_params")?;
+            (out[0].as_f32().unwrap().to_vec(), None, 0)
+        }
+    };
+    ps.init(&params, moments.as_ref(), start)?;
+    store.mark_restore(spec_version, start)?;
+    tinfo!(
+        "worker",
+        "chief initialized {} chunks at version {start} (spec v{spec_version})",
+        ps.n_chunks()
+    );
+    Ok(start)
+}
+
 /// Worker task body.  Returns Ok(final_step) or an error (task failure —
 /// the TaskExecutor reports it and the AM's fault-tolerance kicks in).
 pub fn run_worker(ctx: &WorkerContext) -> Result<u64> {
     let meta = ctx.engine.meta().clone();
     let mode = if ctx.train.mode == "async" { MODE_ASYNC } else { MODE_SYNC };
-    let ps = PsClient::connect(&ctx.ps_endpoints, meta.n_params, meta.chunk_len)?;
+    let mut ps = PsClient::connect(&ctx.ps_endpoints, meta.n_params, meta.chunk_len)?;
     let corpus = SyntheticCorpus::new(meta.dims.vocab, ctx.train.seed);
     let store = CheckpointStore::new(&ctx.train.checkpoint_dir);
     let is_chief = ctx.index == 0;
+    let mut spec_version = ctx.spec_version;
 
     // ---- init / restore (chief) ----
     if is_chief {
-        let restored = store.latest()?;
-        let (params, moments, start) = match restored {
-            Some(ckpt) => {
-                tinfo!("worker", "chief restoring checkpoint at step {}", ckpt.step);
-                (ckpt.params, ckpt.moments, ckpt.step)
-            }
-            None => {
-                let out = ctx
-                    .engine
-                    .execute("init_params", vec![Tensor::scalar_u32(ctx.train.seed as u32)])
-                    .context("init_params")?;
-                (out[0].as_f32().unwrap().to_vec(), None, 0)
-            }
-        };
-        ps.init(&params, moments.as_ref(), start)?;
-        tinfo!("worker", "chief initialized {} chunks at version {start}", ps.n_chunks());
+        chief_init_ps(ctx, &ps, &store, spec_version)?;
     }
 
     // ---- resolve starting step (everyone) ----
@@ -225,6 +371,28 @@ pub fn run_worker(ctx: &WorkerContext) -> Result<u64> {
         if ctx.kill.load(Ordering::Relaxed) {
             bail!("worker:{} killed at step {step}", ctx.index);
         }
+        // ---- apply a patched cluster spec (surgical recovery) ----
+        if let Some(spec) = take_reconfig(ctx) {
+            spec_version = spec.version;
+            tinfo!(
+                "worker",
+                "worker:{} applying patched spec v{spec_version} at step {step}",
+                ctx.index
+            );
+            ps = PsClient::connect(spec.endpoints(PS), meta.n_params, meta.chunk_len)?;
+            if is_chief {
+                chief_init_ps(ctx, &ps, &store, spec_version)?;
+            }
+            // Resync off the live parameter version: unchanged when only
+            // workers were replaced, rolled back to the checkpoint when a
+            // PS lost its state.
+            let (v, p) = ps.pull(0)?;
+            tdebug!("worker", "worker:{} resynced to step {v}", ctx.index);
+            step = v;
+            params = p;
+            continue;
+        }
+
         let iter_start = Instant::now();
         let tokens = corpus.batch(ctx.index, step, meta.dims.batch, meta.dims.seq_len);
         let batch = Tensor::i32(&[meta.dims.batch, meta.dims.seq_len + 1], tokens);
@@ -241,11 +409,32 @@ pub fn run_worker(ctx: &WorkerContext) -> Result<u64> {
         }
         let mut grads = out.pop().unwrap().into_f32().ok_or_else(|| anyhow!("bad grads"))?;
         clip_grads(&mut grads, ctx.train.grad_clip);
-        ps.push(&grads, step, ctx.n_workers, ctx.train.lr as f32, mode)?;
 
-        // In sync mode the pull for step+1 doubles as the barrier.
+        // ---- push (transient PS outages retried, reconfig-aware) ----
+        let seen = match ps_op(ctx, step, "push", || {
+            ps.push(&grads, step, ctx.index, ctx.n_workers, ctx.train.lr as f32, mode)
+        })? {
+            PsOutcome::Done(v) => v,
+            PsOutcome::Reconfig => continue, // outer loop applies the new spec
+        };
+        if mode == MODE_SYNC && seen < step {
+            // A relaunched PS rolled the parameters back below our step:
+            // resync instead of dying.
+            let (v, p) = ps.pull(0)?;
+            tdebug!("worker", "worker:{} rolled back {step} -> {v}; resyncing", ctx.index);
+            step = v;
+            params = p;
+            continue;
+        }
+
+        // ---- pull: in sync mode this is the barrier for step+1 ----
+        // Sliced so kills and reconfigurations interrupt it promptly.
         let next = if mode == MODE_SYNC { step + 1 } else { 0 };
-        let (_v, new_params) = ps.pull(next)?;
+        let (_v, new_params) =
+            match ps_op(ctx, step, "barrier pull", || ps.pull_timeout(next, PULL_SLICE_MS))? {
+                PsOutcome::Done(r) => r,
+                PsOutcome::Reconfig => continue,
+            };
         params = new_params;
         step += 1;
 
@@ -305,8 +494,8 @@ pub fn run_worker(ctx: &WorkerContext) -> Result<u64> {
         "worker",
         "worker:{} done: {} steps in {dt:.1}s ({:.1} steps/s)",
         ctx.index,
-        step - start_version,
-        (step - start_version) as f64 / dt.max(1e-9)
+        step.saturating_sub(start_version),
+        step.saturating_sub(start_version) as f64 / dt.max(1e-9)
     );
     Ok(step)
 }

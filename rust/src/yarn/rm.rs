@@ -344,6 +344,12 @@ impl ResourceManager {
         self.inner.lock().unwrap().nodes.len()
     }
 
+    /// The node a live container sits on (chaos targeting: "kill the
+    /// node hosting worker:1's container").
+    pub fn container_node(&self, id: ContainerId) -> Option<NodeId> {
+        self.inner.lock().unwrap().containers.get(&id).map(|c| c.node)
+    }
+
     pub fn alive_node_count(&self) -> usize {
         self.inner.lock().unwrap().nodes.iter().filter(|n| n.is_alive()).count()
     }

@@ -1,7 +1,12 @@
-//! Integration: the paper's fault-tolerance loop (§2.2).  Kill a worker
-//! container (and, separately, a whole node) mid-training; the AM must
-//! tear down the attempt, re-negotiate containers, relaunch, and the
-//! chief must restore from the last checkpoint and finish the job.
+//! Integration: the fault-tolerance loop (§2.2).  Kill a worker
+//! container (and, separately, a whole node) mid-training and watch the
+//! job finish anyway.
+//!
+//! These tests pin `tony.task.max-restarts=0` where they specifically
+//! exercise the paper's *full-restart* escalation path (teardown →
+//! re-negotiate → relaunch → restore-from-checkpoint).  The surgical
+//! per-task recovery path is covered by `tests/am_recovery.rs`, which
+//! runs on the synthetic preset in every build.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -45,11 +50,13 @@ fn train_conf(dir: &std::path::Path, ckpt: &std::path::Path, steps: u64) -> tony
 }
 
 #[test]
-fn worker_kill_recovers_from_checkpoint() {
+fn worker_kill_full_restart_recovers_from_checkpoint() {
     let Some(dir) = tiny_dir() else { return };
     let rm = ResourceManager::start_uniform(4, Resource::new(8192, 8, 0));
     let ckpt = ckpt_dir("task-kill");
-    let conf = train_conf(&dir, &ckpt, 16);
+    let mut conf = train_conf(&dir, &ckpt, 16);
+    // Pin the paper's all-or-nothing policy: every failure escalates.
+    conf.set("tony.task.max-restarts", "0");
 
     let client = TonyClient::new(rm.clone());
     let handle = client.submit(&conf, &dir).unwrap();
@@ -65,7 +72,8 @@ fn worker_kill_recovers_from_checkpoint() {
     assert!(records[0].chief_step_at_injection >= 6);
 
     // The job needed more than one attempt and completed all steps.
-    assert!(handle.am_state.attempt() >= 2, "expected a relaunch");
+    assert!(handle.am_state.attempt() >= 2, "expected a full relaunch");
+    assert_eq!(handle.am_state.recoveries(), 0, "surgical path was disabled");
     let metrics = handle.am_state.chief_metrics().unwrap();
     assert_eq!(metrics.step, 16);
 
@@ -73,6 +81,12 @@ fn worker_kill_recovers_from_checkpoint() {
     // (>= 5), not step 0; verify via checkpoint store contents.
     let store = tony::checkpoint::CheckpointStore::new(&ckpt);
     assert!(store.latest().unwrap().unwrap().step == 16);
+    // The relaunched attempt recorded a restore marker at a step > 0.
+    let markers = store.restore_markers().unwrap();
+    assert!(
+        markers.iter().any(|(_, step)| *step >= 5),
+        "expected a checkpoint restore, got markers {markers:?}"
+    );
     let _ = std::fs::remove_dir_all(&ckpt);
 }
 
@@ -94,8 +108,9 @@ fn node_kill_recovers() {
 
     let client = TonyClient::new(rm.clone());
     let handle = client.submit(&conf, &dir).unwrap();
-    // Find which node hosts worker:0's container once running, then kill
-    // a *task* node (not node 0).
+    // Kill a *task* node (not node 0): with surgical recovery enabled
+    // (the default), only the containers that lived on the dead node are
+    // relaunched on the surviving nodes.
     let chaos = ChaosInjector::start(
         rm.clone(),
         handle.am_state.clone(),
@@ -118,6 +133,7 @@ fn unrecoverable_job_fails_after_max_attempts() {
     let mut conf = train_conf(&dir, &ckpt, 1000);
     conf.set("tony.application.max-attempts", "2");
     conf.set("tony.train.checkpoint-every", "0"); // no checkpoints
+    conf.set("tony.task.max-restarts", "0"); // every failure escalates
 
     let client = TonyClient::new(rm.clone());
     let handle = client.submit(&conf, &dir).unwrap();

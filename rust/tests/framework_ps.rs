@@ -1,6 +1,7 @@
 //! Framework-level integration: the PS/worker protocol in isolation
-//! (no YARN, no AM) — sync barrier semantics, stale-push rejection,
-//! moment fetch for exact checkpoints, async mode, and shutdown.
+//! (no YARN, no AM) — sync barrier semantics (distinct-contributor
+//! counting), stale-push drop-and-report, moment fetch for exact
+//! checkpoints, async mode, and shutdown.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -58,12 +59,17 @@ fn init_pull_push_cycle_sync() {
 
     // Two workers push for step 0; version must advance to 1 exactly once.
     let grads: Vec<f32> = vec![0.01; meta.n_params];
-    client.push(&grads, 0, 2, 1e-3, MODE_SYNC).unwrap();
+    client.push(&grads, 0, 0, 2, 1e-3, MODE_SYNC).unwrap();
     // Barrier: a pull for version 1 should NOT complete yet — verify the
     // version is still 0 via a non-blocking pull(0).
     let (v, _) = client.pull(0).unwrap();
     assert_eq!(v, 0, "one of two pushes must not advance the barrier");
-    client.push(&grads, 0, 2, 1e-3, MODE_SYNC).unwrap();
+    // A *duplicate* push from the same worker must not complete the
+    // barrier either (relaunched-worker idempotence).
+    client.push(&grads, 0, 0, 2, 1e-3, MODE_SYNC).unwrap();
+    let (v, _) = client.pull(0).unwrap();
+    assert_eq!(v, 0, "duplicate contributor must not advance the barrier");
+    client.push(&grads, 0, 1, 2, 1e-3, MODE_SYNC).unwrap();
     let (v, new_params) = client.pull(1).unwrap();
     assert_eq!(v, 1);
     assert_ne!(new_params, params, "adam must have moved the params");
@@ -77,17 +83,29 @@ fn init_pull_push_cycle_sync() {
 }
 
 #[test]
-fn stale_push_rejected() {
+fn stale_push_dropped_and_version_reported() {
     let Some(dir) = tiny_dir() else { return };
     let shard = start_ps(&dir, 1);
     let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
     let endpoints: Vec<_> = shard.ps.iter().map(|p| p.addr()).collect();
     let client = PsClient::connect(&endpoints, meta.n_params, meta.chunk_len).unwrap();
-    client.init(&vec![0.0; meta.n_params], None, 5).unwrap();
-    // Push tagged for an old step (3) while chunks sit at version 5.
-    let err = client.push(&vec![0.1; meta.n_params], 3, 1, 1e-3, MODE_SYNC);
-    assert!(err.is_err(), "stale push must be rejected");
-    assert!(format!("{:#}", err.unwrap_err()).contains("stale"));
+    let params = vec![0.0; meta.n_params];
+    client.init(&params, None, 5).unwrap();
+    // Push tagged for an old step (3) while chunks sit at version 5: the
+    // gradient is dropped (not applied, not an error) and the live
+    // version comes back so the worker can resync — survivors must not
+    // die on straggler pushes during a surgical recovery.
+    let seen = client.push(&vec![0.1; meta.n_params], 3, 0, 1, 1e-3, MODE_SYNC).unwrap();
+    assert_eq!(seen, 5, "live version reported for resync");
+    let (v, got) = client.pull(5).unwrap();
+    assert_eq!(v, 5, "stale push must not advance the version");
+    assert_eq!(got, params, "stale gradient must not be applied");
+    // Same for a push from the *future* (worker ahead of a rolled-back
+    // shard): dropped, live version reported.
+    let seen = client.push(&vec![0.1; meta.n_params], 9, 0, 1, 1e-3, MODE_SYNC).unwrap();
+    assert_eq!(seen, 5);
+    let (v, _) = client.pull(5).unwrap();
+    assert_eq!(v, 5);
     shard.kill.store(true, Ordering::Relaxed);
 }
 
@@ -98,7 +116,7 @@ fn push_before_init_rejected() {
     let meta = tony::runtime::ArtifactMeta::load(&dir).unwrap();
     let endpoints: Vec<_> = shard.ps.iter().map(|p| p.addr()).collect();
     let client = PsClient::connect(&endpoints, meta.n_params, meta.chunk_len).unwrap();
-    assert!(client.push(&vec![0.1; meta.n_params], 0, 1, 1e-3, MODE_SYNC).is_err());
+    assert!(client.push(&vec![0.1; meta.n_params], 0, 0, 1, 1e-3, MODE_SYNC).is_err());
     shard.kill.store(true, Ordering::Relaxed);
 }
 
@@ -112,7 +130,7 @@ fn async_mode_applies_immediately() {
     client.init(&vec![1.0; meta.n_params], None, 0).unwrap();
     for k in 0..3 {
         client
-            .push(&vec![0.05; meta.n_params], k, 99 /* ignored */, 1e-3, MODE_ASYNC)
+            .push(&vec![0.05; meta.n_params], k, 0, 99 /* ignored */, 1e-3, MODE_ASYNC)
             .unwrap();
     }
     let (v, _) = client.pull(3).unwrap();

@@ -116,6 +116,7 @@ fn protocol_messages_round_trip() {
         let push = PushRequest {
             chunk: g.u32(),
             step: g.u64(),
+            worker: g.u32() % 100,
             grads: g.vec_f32(300),
             n_workers: g.u32() % 100,
             lr: g.f32(),

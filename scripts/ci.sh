@@ -11,6 +11,12 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> fault-tolerance example (surgical task + node recovery, sim mode)"
+cargo run --release --example fault_tolerance
+
+echo "==> recovery bench smoke (surgical vs full restart, 4 workers)"
+TONY_BENCH_SMOKE=1 cargo bench --bench bench_recovery
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
