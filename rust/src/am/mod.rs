@@ -252,6 +252,10 @@ fn run_attempt(
     // teardown-everything behaviour.
     let max_task_restarts = job.conf.get_u64("tony.task.max-restarts", 3) as u32;
     let mut surgical_used = 0u32;
+    // Cluster/queue gauge sampling cadence (avoids taking the RM lock
+    // every monitor tick; the registry rate-limits appends as well).
+    let gauge_interval = Duration::from_millis(job.metrics.sample_interval_ms.max(1));
+    let mut last_gauge_sample: Option<Instant> = None;
     // Start of the current negotiation or recovery window (relaunch
     // grants must arrive within `launch_timeout` of this).
     let mut phase_started = Instant::now();
@@ -326,6 +330,18 @@ fn run_attempt(
                         }
                     }
                 }
+            }
+        }
+
+        // ---- sampled cluster/queue gauges (per-queue dominant-share
+        //      utilization, pending asks, per-dimension usage) ----
+        if am.state.metrics_registry().enabled()
+            && last_gauge_sample.map_or(true, |t| t.elapsed() >= gauge_interval)
+        {
+            last_gauge_sample = Some(Instant::now());
+            let registry = am.state.metrics_registry();
+            for q in rm.queue_stats() {
+                registry.observe_queue(&q.name, q.utilization, q.used, q.pending);
             }
         }
 

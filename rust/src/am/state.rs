@@ -12,11 +12,12 @@
 //! that needs the patched spec (Reconfigure).
 
 use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::framework::protocol::{ClusterSpec, TaskMetrics};
 use crate::json::Json;
+use crate::metrics::Registry;
 use crate::net::rpc::RpcHandler;
 use crate::net::wire::Wire;
 use crate::tonyconf::JobSpec;
@@ -106,6 +107,15 @@ pub struct AmState {
     inner: Mutex<Inner>,
     cond: Condvar,
     expected_from: Box<dyn Fn(u32) -> Vec<TaskId> + Send + Sync>,
+    /// The job this AM is running (immutable; read by the portal for
+    /// streaming Dr. Elephant analysis).
+    job: JobSpec,
+    /// Live time-series registry heartbeats fold into (see
+    /// [`crate::metrics`]); read concurrently by the portal/gateway.
+    registry: Arc<Registry>,
+    /// Bound on the accumulated per-task loss history (the heartbeat
+    /// protocol ships deltas; the AM owns the full curve).
+    loss_history_cap: usize,
 }
 
 impl AmState {
@@ -138,7 +148,42 @@ impl AmState {
             }),
             cond: Condvar::new(),
             expected_from,
+            registry: Arc::new(Registry::new(
+                job.metrics.retention_points,
+                job.metrics.sample_interval_ms,
+            )),
+            loss_history_cap: job.metrics.loss_history_cap(),
+            job: job.clone(),
         }
+    }
+
+    /// The live metrics registry (portal `/metrics`, gateway aggregation,
+    /// history persistence).
+    pub fn metrics_registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The job spec this AM runs (streaming Dr. Elephant analysis needs
+    /// the requested resources + checkpoint settings).
+    pub fn job_spec(&self) -> &JobSpec {
+        &self.job
+    }
+
+    /// True when `task` (as `type:index`) is one of the job's tasks.
+    pub fn has_task(&self, task: &str) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.tasks.keys().any(|t| t.to_string() == task)
+    }
+
+    /// Latest metrics snapshot per task, without the loss history (the
+    /// scalar view the `/metrics` gauges and streaming analysis read).
+    pub fn task_metrics(&self) -> Vec<(String, TaskMetrics)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tasks
+            .values()
+            .map(|r| (r.task.to_string(), r.metrics.scalars()))
+            .collect()
     }
 
     pub fn begin_attempt(&self, attempt: u32) {
@@ -521,6 +566,42 @@ impl AmState {
     }
 }
 
+/// Fold one heartbeat's metrics into the record.  Scalars are replaced;
+/// `loss_history` arrives as an *incremental delta* (entries newer than
+/// the last delivered step — see the executor's heartbeat thread) and
+/// is appended, bounded by `cap` (oldest dropped).
+///
+/// When the delta *overlaps* the accumulated curve — its first entry is
+/// at/below the last recorded step — the sender re-trained those steps
+/// (a relaunched task restoring from a checkpoint, or a survivor's sync
+/// rollback) or re-sent after a lost reply.  The recorded entries from
+/// the overlap point on are dropped and the new curve spliced in, which
+/// keeps the fold idempotent under retransmission while never silently
+/// discarding retrained losses.
+fn fold_heartbeat_metrics(current: &mut TaskMetrics, incoming: TaskMetrics, cap: usize) {
+    let mut hist = std::mem::take(&mut current.loss_history);
+    if let Some(&(first, _)) = incoming.loss_history.first() {
+        if hist.last().map_or(false, |&(hs, _)| first <= hs) {
+            hist.retain(|&(s, _)| s < first);
+        }
+    }
+    for &(s, l) in &incoming.loss_history {
+        if hist.last().map_or(true, |&(hs, _)| s > hs) {
+            hist.push((s, l));
+        }
+    }
+    if hist.len() > cap {
+        // Evict a chunk, not one entry per beat: the front-drain shifts
+        // the whole vector, so doing it every heartbeat once the cap is
+        // reached would put an O(cap) memmove on the hot path.  Dropping
+        // a quarter of the cap at a time amortizes it to O(1) per entry.
+        let excess = hist.len() - cap;
+        hist.drain(..excess.max(cap / 4).min(hist.len()));
+    }
+    *current = incoming;
+    current.loss_history = hist;
+}
+
 /// RPC dispatch for the executor-facing AM server.
 pub struct AmRpcHandler {
     state: std::sync::Arc<AmState>,
@@ -582,10 +663,24 @@ impl RpcHandler for AmRpcHandler {
                     .as_ref()
                     .map(|s| s.version == version as u64)
                     .unwrap_or(false);
+                // Scalars captured before the fold consumes the message,
+                // so the registry sample happens *outside* the state lock.
+                let mut observed: Option<(u64, f64, f64, u64, bool)> = None;
                 let cmd = match inner.tasks.get_mut(&task) {
                     Some(rec) if msg.spec_version >= rec.spec_version => {
                         rec.last_heartbeat = Some(Instant::now());
-                        rec.metrics = msg.metrics;
+                        observed = Some((
+                            msg.metrics.step,
+                            msg.metrics.loss as f64,
+                            msg.metrics.step_ms_avg,
+                            msg.metrics.mem_used_mb,
+                            msg.metrics.finished,
+                        ));
+                        fold_heartbeat_metrics(
+                            &mut rec.metrics,
+                            msg.metrics,
+                            self.state.loss_history_cap,
+                        );
                         rec.acked_version = msg.spec_version.min(version);
                         if rec.command != AmCommand::None {
                             rec.command
@@ -601,6 +696,19 @@ impl RpcHandler for AmRpcHandler {
                     // attempt: tell it to die.
                     _ => AmCommand::Abort,
                 };
+                drop(inner);
+                if self.state.registry.enabled() {
+                    if let Some((step, loss, step_ms, mem, force)) = observed {
+                        self.state.registry.observe_task(
+                            &task.to_string(),
+                            step,
+                            loss,
+                            step_ms,
+                            mem,
+                            force,
+                        );
+                    }
+                }
                 Ok(HeartbeatReply { command: cmd, spec_version: version }.to_bytes())
             }
             AM_FINISHED => {
@@ -846,6 +954,107 @@ mod tests {
         let hbw = HeartbeatMsg { task_type: "worker".into(), ..hb };
         let resp = handler.handle(AM_HEARTBEAT, &hbw.to_bytes()).unwrap();
         assert_eq!(HeartbeatReply::from_bytes(&resp).command, AmCommand::None);
+    }
+
+    #[test]
+    fn heartbeat_folds_loss_history_deltas() {
+        let job = job();
+        let state = std::sync::Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+        let hb = |hist: Vec<(u64, f32)>| HeartbeatMsg {
+            task_type: "worker".into(),
+            index: 0,
+            spec_version: 1,
+            metrics: TaskMetrics {
+                step: hist.last().map(|&(s, _)| s).unwrap_or(0),
+                loss_history: hist,
+                ..Default::default()
+            },
+        };
+        handler.handle(AM_HEARTBEAT, &hb(vec![(1, 5.0), (2, 4.0)]).to_bytes()).unwrap();
+        // Next heartbeat carries only the delta; the AM appends it.
+        handler.handle(AM_HEARTBEAT, &hb(vec![(3, 3.0)]).to_bytes()).unwrap();
+        // A re-sent delta (transport retry) must not double-record.
+        handler.handle(AM_HEARTBEAT, &hb(vec![(3, 3.0)]).to_bytes()).unwrap();
+        let m = state.chief_metrics().unwrap();
+        assert_eq!(m.loss_history, vec![(1, 5.0), (2, 4.0), (3, 3.0)]);
+        assert_eq!(m.step, 3, "scalars track the latest heartbeat");
+        // The scalar snapshot carries no history.
+        let tasks = state.task_metrics();
+        let (_, w0) = tasks.iter().find(|(t, _)| t == "worker:0").unwrap();
+        assert!(w0.loss_history.is_empty());
+        assert_eq!(w0.step, 3);
+    }
+
+    #[test]
+    fn recovery_splices_replacement_loss_history() {
+        let job = job();
+        let state = std::sync::Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+        let hb = |version: u32, hist: Vec<(u64, f32)>| HeartbeatMsg {
+            task_type: "worker".into(),
+            index: 0,
+            spec_version: version,
+            metrics: TaskMetrics { loss_history: hist, ..Default::default() },
+        };
+        // The original incarnation trains to step 3 ...
+        handler
+            .handle(AM_HEARTBEAT, &hb(1, vec![(1, 5.0), (2, 4.0), (3, 3.5)]).to_bytes())
+            .unwrap();
+        // ... then dies; the replacement restores from the step-1
+        // checkpoint and retrains steps 2..3.
+        state.begin_recovery(&[TaskId::new("worker", 0)]);
+        // An empty warm-up delta (pre-training heartbeat) is a no-op.
+        handler.handle(AM_HEARTBEAT, &hb(2, vec![]).to_bytes()).unwrap();
+        handler.handle(AM_HEARTBEAT, &hb(2, vec![(2, 4.4)]).to_bytes()).unwrap();
+        handler.handle(AM_HEARTBEAT, &hb(2, vec![(3, 3.9)]).to_bytes()).unwrap();
+        let m = state.chief_metrics().unwrap();
+        // Pre-restore curve kept, dead incarnation's tail replaced by
+        // the replacement's actual losses (not silently dropped).
+        assert_eq!(m.loss_history, vec![(1, 5.0), (2, 4.4), (3, 3.9)]);
+    }
+
+    #[test]
+    fn heartbeats_feed_the_metrics_registry() {
+        let conf = JobConfBuilder::new("reg")
+            .instances("worker", 1)
+            .set("tony.metrics.sample-interval-ms", "1")
+            .set("tony.metrics.retention-points", "8")
+            .build();
+        let job = JobSpec::from_conf(&conf).unwrap();
+        let state = std::sync::Arc::new(AmState::new(&job));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+        for step in 1..=3u64 {
+            let hb = HeartbeatMsg {
+                task_type: "worker".into(),
+                index: 0,
+                spec_version: 1,
+                metrics: TaskMetrics {
+                    step,
+                    loss: 1.0,
+                    finished: step == 3, // final flush forces a sample
+                    ..Default::default()
+                },
+            };
+            handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let pts = state.metrics_registry().task_points("worker:0", "step");
+        assert!(!pts.is_empty(), "heartbeats must land in the registry");
+        assert_eq!(pts.last().unwrap().1, 3.0, "final flush sampled");
+        // Zombie heartbeats never pollute the series.
+        let zombie = HeartbeatMsg {
+            task_type: "worker".into(),
+            index: 0,
+            spec_version: 0,
+            metrics: TaskMetrics { step: 99, ..Default::default() },
+        };
+        handler.handle(AM_HEARTBEAT, &zombie.to_bytes()).unwrap();
+        let pts = state.metrics_registry().task_points("worker:0", "step");
+        assert_eq!(pts.last().unwrap().1, 3.0);
     }
 
     #[test]

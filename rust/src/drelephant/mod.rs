@@ -15,6 +15,7 @@
 //!   roofline estimate (batch too small, sync barrier dominated).
 
 use crate::framework::TaskMetrics;
+use crate::json::Json;
 use crate::runtime::ArtifactMeta;
 use crate::tonyconf::JobSpec;
 
@@ -33,6 +34,25 @@ pub struct Finding {
     pub task: String,
     pub detail: String,
     pub suggestion: String,
+}
+
+impl Finding {
+    /// JSON shape served by the portal's `/findings` and the gateway's
+    /// per-job status for running jobs.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("heuristic", self.heuristic);
+        j.set("severity", format!("{:?}", self.severity));
+        j.set("task", self.task.as_str());
+        j.set("detail", self.detail.as_str());
+        j.set("suggestion", self.suggestion.as_str());
+        j
+    }
+}
+
+/// Render a finding list as a JSON array.
+pub fn findings_json(findings: &[Finding]) -> Json {
+    Json::Arr(findings.iter().map(Finding::to_json).collect())
 }
 
 /// Everything the analyzer consumes about one finished (or running) job.
@@ -60,6 +80,30 @@ impl JobTelemetry {
             flops_per_step: meta.flops_per_step(),
         }
     }
+
+    /// Telemetry from a *running* job's latest heartbeat snapshot — the
+    /// streaming path (no `ArtifactMeta` mid-run, so the utilization
+    /// heuristic is skipped via `flops_per_step = 0`).
+    pub fn from_live(job: &JobSpec, tasks: Vec<(String, TaskMetrics)>) -> Self {
+        JobTelemetry {
+            tasks,
+            requested_mem_mb: job
+                .task_types
+                .iter()
+                .map(|t| (t.name.clone(), t.resource.memory_mb))
+                .collect(),
+            checkpoint_every: job.train.checkpoint_every,
+            flops_per_step: 0.0,
+        }
+    }
+}
+
+/// Run the heuristics *streaming* against a live AM: stragglers and
+/// memory-pressure tasks are flagged from the latest heartbeat snapshot
+/// while the job is still running, instead of only post-hoc (the portal
+/// serves this on `/findings`; the gateway embeds it in job status).
+pub fn analyze_live(state: &crate::am::AmState) -> Vec<Finding> {
+    analyze(&JobTelemetry::from_live(state.job_spec(), state.task_metrics()))
 }
 
 /// Assumed single-node peak for utilization heuristics (CPU testbed).

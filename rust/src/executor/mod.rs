@@ -199,6 +199,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         let task = task.clone();
         let cur_version = cur_version.clone();
         let reconfig = reconfig.clone();
+        let job_metrics = params.job.metrics.clone();
         let hb_every = Duration::from_millis(params.job.heartbeat_ms.max(5));
         // The Reconfigure spec re-fetch runs on this thread, so it must
         // never block long enough for the AM to miss our heartbeats: cap
@@ -214,8 +215,32 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         std::thread::Builder::new()
             .name(format!("hb-{task}"))
             .spawn(move || {
+                // Heartbeats ship *incremental* loss-history deltas: only
+                // the entries newer than the last step successfully
+                // delivered go on the wire, so a beat stays O(1) instead
+                // of re-serializing the whole curve every interval (the
+                // AM re-assembles it; a re-sent delta after an error is
+                // deduplicated there).
+                let mut sent_hist_step: Option<u64> = None;
+                let mut seen_rewound = 0u64;
+                let hist_cap = job_metrics.loss_history_cap();
                 while !done.load(Ordering::Relaxed) {
-                    let m = metrics.lock().unwrap().clone();
+                    let m = {
+                        let cell = metrics.lock().unwrap();
+                        // A sync rollback truncated the local history;
+                        // the delivered watermark is void even if
+                        // retraining already re-reached it.  Resend the
+                        // local curve — capped at what the AM retains
+                        // anyway — and let the AM splice it.
+                        if cell.history_rewound != seen_rewound {
+                            seen_rewound = cell.history_rewound;
+                            let hist = &cell.loss_history;
+                            sent_hist_step =
+                                hist.len().checked_sub(hist_cap + 1).map(|i| hist[i].0);
+                        }
+                        cell.delta_since(sent_hist_step)
+                    };
+                    let newest = m.last_history_step().or(sent_hist_step);
                     match am.call(
                         AM_HEARTBEAT,
                         &HeartbeatMsg {
@@ -226,50 +251,53 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                         }
                         .to_bytes(),
                     ) {
-                        Ok(resp) => match HeartbeatReply::from_bytes(&resp).command {
-                            AmCommand::None => {}
-                            AmCommand::Reconfigure => {
-                                let want = HeartbeatReply::from_bytes(&resp).spec_version;
-                                if want > cur_version.load(Ordering::Relaxed) {
-                                    match am.call(
-                                        AM_GET_SPEC,
-                                        &GetSpecMsg {
-                                            spec_version: want,
-                                            timeout_ms: spec_fetch_ms,
-                                        }
-                                        .to_bytes(),
-                                    ) {
-                                        Ok(bytes) => {
-                                            let text = String::from_utf8_lossy(&bytes);
-                                            match ClusterSpec::from_tf_config(&text) {
-                                                Ok((spec, _, _)) => {
-                                                    let v = spec.version;
-                                                    tinfo!(
-                                                        "executor",
-                                                        "{task} adopting patched spec v{v}"
-                                                    );
-                                                    cur_version
-                                                        .store(v as u32, Ordering::Relaxed);
-                                                    *reconfig.lock().unwrap() = Some(spec);
-                                                }
-                                                Err(e) => tdebug!(
-                                                    "executor",
-                                                    "{task} bad patched spec: {e}; will retry"
-                                                ),
+                        Ok(resp) => {
+                            sent_hist_step = newest;
+                            match HeartbeatReply::from_bytes(&resp).command {
+                                AmCommand::None => {}
+                                AmCommand::Reconfigure => {
+                                    let want = HeartbeatReply::from_bytes(&resp).spec_version;
+                                    if want > cur_version.load(Ordering::Relaxed) {
+                                        match am.call(
+                                            AM_GET_SPEC,
+                                            &GetSpecMsg {
+                                                spec_version: want,
+                                                timeout_ms: spec_fetch_ms,
                                             }
+                                            .to_bytes(),
+                                        ) {
+                                            Ok(bytes) => {
+                                                let text = String::from_utf8_lossy(&bytes);
+                                                match ClusterSpec::from_tf_config(&text) {
+                                                    Ok((spec, _, _)) => {
+                                                        let v = spec.version;
+                                                        tinfo!(
+                                                            "executor",
+                                                            "{task} adopting patched spec v{v}"
+                                                        );
+                                                        cur_version
+                                                            .store(v as u32, Ordering::Relaxed);
+                                                        *reconfig.lock().unwrap() = Some(spec);
+                                                    }
+                                                    Err(e) => tdebug!(
+                                                        "executor",
+                                                        "{task} bad patched spec: {e}; will retry"
+                                                    ),
+                                                }
+                                            }
+                                            Err(e) => tdebug!(
+                                                "executor",
+                                                "{task} spec refetch failed: {e}; will retry"
+                                            ),
                                         }
-                                        Err(e) => tdebug!(
-                                            "executor",
-                                            "{task} spec refetch failed: {e}; will retry"
-                                        ),
                                     }
                                 }
+                                AmCommand::Stop | AmCommand::Abort => {
+                                    tdebug!("executor", "{task} commanded to stop");
+                                    kill.store(true, Ordering::Relaxed);
+                                }
                             }
-                            AmCommand::Stop | AmCommand::Abort => {
-                                tdebug!("executor", "{task} commanded to stop");
-                                kill.store(true, Ordering::Relaxed);
-                            }
-                        },
+                        }
                         Err(e) => {
                             terror!("executor", "{task} lost AM: {e}");
                             kill.store(true, Ordering::Relaxed);
@@ -325,6 +353,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
             metrics: metrics.clone(),
             spec_version: spec.version,
             reconfig: Some(reconfig.clone()),
+            loss_history_cap: params.job.metrics.loss_history_cap(),
         };
         let name = format!("task-worker-{}", task.index);
         let _ = &tf_config; // env formally constructed above

@@ -270,6 +270,51 @@ pub struct TaskMetrics {
     pub updates_applied: u64,
     pub finished: bool,
     pub loss_history: Vec<(u64, f32)>,
+    /// Count of local loss-history truncations (sync rollbacks).  The
+    /// executor's heartbeat thread watches this to know its delivered
+    /// watermark is void and the history must be re-sent for the AM to
+    /// splice — a flag-free check like "last step < watermark" races
+    /// with retraining that re-reaches the watermark between beats.
+    pub history_rewound: u64,
+}
+
+impl TaskMetrics {
+    /// Copy without the loss history — O(1) however long training ran.
+    pub fn scalars(&self) -> TaskMetrics {
+        TaskMetrics {
+            step: self.step,
+            loss: self.loss,
+            eval_loss: self.eval_loss,
+            tokens_done: self.tokens_done,
+            step_ms_avg: self.step_ms_avg,
+            mem_used_mb: self.mem_used_mb,
+            updates_applied: self.updates_applied,
+            finished: self.finished,
+            loss_history: Vec::new(),
+            history_rewound: self.history_rewound,
+        }
+    }
+
+    /// Copy carrying only the loss-history entries with step > `from`:
+    /// the *incremental delta* a heartbeat ships.  The executor tracks
+    /// the newest step it successfully delivered and the AM re-assembles
+    /// the full curve, so the heartbeat hot path stays O(1) in wire size
+    /// instead of re-serializing the whole history every beat.  Assumes
+    /// `loss_history` is step-ordered (tasks append monotonically).
+    pub fn delta_since(&self, from: Option<u64>) -> TaskMetrics {
+        let mut m = self.scalars();
+        let start = match from {
+            None => 0,
+            Some(f) => self.loss_history.partition_point(|&(s, _)| s <= f),
+        };
+        m.loss_history.extend_from_slice(&self.loss_history[start..]);
+        m
+    }
+
+    /// Newest loss-history step, if any.
+    pub fn last_history_step(&self) -> Option<u64> {
+        self.loss_history.last().map(|&(s, _)| s)
+    }
 }
 
 impl Wire for TaskMetrics {
@@ -287,6 +332,7 @@ impl Wire for TaskMetrics {
             w.u64(*s);
             w.f32(*l);
         }
+        w.u64(self.history_rewound);
     }
 
     fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
@@ -300,11 +346,20 @@ impl Wire for TaskMetrics {
             updates_applied: r.u64()?,
             finished: r.bool()?,
             loss_history: Vec::new(),
+            history_rewound: 0,
         };
         let n = r.u32()? as usize;
-        for _ in 0..n.min(1 << 20) {
+        let keep = n.min(1 << 20);
+        for _ in 0..keep {
             m.loss_history.push((r.u64()?, r.f32()?));
         }
+        // Entries past the decode cap must still be consumed, or the
+        // trailing field below would read from the middle of one.
+        for _ in keep..n {
+            let _ = r.u64()?;
+            let _ = r.f32()?;
+        }
+        m.history_rewound = r.u64()?;
         Ok(m)
     }
 }
@@ -392,6 +447,7 @@ mod tests {
             updates_applied: 0,
             finished: true,
             loss_history: vec![(1, 5.5), (50, 3.0), (100, 2.5)],
+            history_rewound: 2,
         };
         assert_eq!(TaskMetrics::from_bytes(&m.to_bytes()).unwrap(), m);
     }

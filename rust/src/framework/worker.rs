@@ -61,6 +61,12 @@ pub struct WorkerContext {
     pub spec_version: u64,
     /// Mid-run spec updates from the executor (None in direct harnesses).
     pub reconfig: Option<ReconfigCell>,
+    /// Bound on the locally kept loss curve (from
+    /// `MetricsSpec::loss_history_cap`); anything longer would be
+    /// discarded at the AM, and an unbounded vector would make rollback
+    /// truncation and heartbeat delta scans O(steps) under the shared
+    /// metrics mutex.
+    pub loss_history_cap: usize,
 }
 
 /// Client view of the sharded parameter store.
@@ -424,6 +430,18 @@ pub fn run_worker(ctx: &WorkerContext) -> Result<u64> {
             tdebug!("worker", "worker:{} rolled back {step} -> {v}; resyncing", ctx.index);
             step = v;
             params = p;
+            // Drop loss-history entries beyond the rollback point so the
+            // recorded curve stays step-sorted (the heartbeat delta
+            // protocol depends on that) and the retrained steps replace
+            // the stale tail instead of colliding with it.  Bumping
+            // `history_rewound` tells the executor's heartbeat thread
+            // its delivered watermark is void (it re-sends; the AM
+            // splices).
+            {
+                let mut m = ctx.metrics.lock().unwrap();
+                m.loss_history.retain(|&(s, _)| s <= v);
+                m.history_rewound += 1;
+            }
             continue;
         }
 
@@ -452,6 +470,14 @@ pub fn run_worker(ctx: &WorkerContext) -> Result<u64> {
             m.mem_used_mb = ((meta.n_params * 8 + meta.tokens_per_step() * 4) >> 20) as u64;
             if step % 5 == 0 || step == target {
                 m.loss_history.push((step, loss));
+                if m.loss_history.len() > ctx.loss_history_cap.max(1) {
+                    // Chunked front-drain, amortized O(1) per entry
+                    // (same scheme as the AM-side fold).
+                    let cap = ctx.loss_history_cap.max(1);
+                    let excess = m.loss_history.len() - cap;
+                    let n = excess.max(cap / 4).min(m.loss_history.len());
+                    m.loss_history.drain(..n);
+                }
             }
         }
 

@@ -3,16 +3,22 @@
 //!
 //! Routes:
 //!
-//! - `POST   /api/v1/jobs`      — submit (`{"user", "priority", "conf": {...}}`)
-//! - `GET    /api/v1/jobs`      — every job + its admission decision
-//! - `GET    /api/v1/jobs/<id>` — one job
-//! - `DELETE /api/v1/jobs/<id>` — kill (queued or running)
-//! - `GET    /api/v1/cluster`   — RM utilization + gateway counters
+//! - `POST   /api/v1/jobs`              — submit (`{"user", "priority", "conf": {...}}`)
+//! - `GET    /api/v1/jobs`              — every job + its admission decision
+//! - `GET    /api/v1/jobs/<id>`         — one job (running jobs include live
+//!   `phase` + streaming Dr. Elephant `findings`)
+//! - `GET    /api/v1/jobs/<id>/metrics` — the job's time series as JSON
+//!   (live registry while running, down-sampled history record after)
+//! - `DELETE /api/v1/jobs/<id>`         — kill (queued or running)
+//! - `GET    /api/v1/cluster`           — RM utilization + gateway counters
+//! - `GET    /metrics`                  — Prometheus text format aggregated
+//!   across every running tenant job (`job`/`id`/`user`/`queue` labels),
+//!   plus per-queue cluster gauges and gateway counters (`docs/METRICS.md`)
 //!
 //! Status codes: 201 accepted, 400 spec problems (invalid / too large /
 //! unknown queue), 429 retryable refusals (quota, backpressure), 404
-//! unknown id.  Every reject body carries `code` (stable, from
-//! [`RejectReason::code`]) and a human `error` string.
+//! unknown route or id — always with a JSON `{"code", "error"}` body.
+//! Reject bodies carry a stable `code` from [`RejectReason::code`].
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -23,7 +29,10 @@ use anyhow::{anyhow, Context, Result};
 
 use super::{Gateway, RejectReason, SubmitOutcome};
 use crate::json::Json;
-use crate::portal::{http_request, http_response, read_http_request};
+use crate::portal::{
+    error_body, http_request, http_response, read_http_request, respond_not_found,
+    PROM_CONTENT_TYPE,
+};
 use crate::util::HostPort;
 use crate::xmlconf::Configuration;
 use crate::{tinfo, twarn};
@@ -101,14 +110,12 @@ fn handle(gw: &Gateway, stream: &mut std::net::TcpStream) {
         Ok(r) => r,
         Err(e) => {
             let msg = e.to_string();
-            let status = if msg.contains("exceeds") {
-                "413 Payload Too Large"
+            let (status, code) = if msg.contains("exceeds") {
+                ("413 Payload Too Large", "payload-too-large")
             } else {
-                "400 Bad Request"
+                ("400 Bad Request", "bad-request")
             };
-            let mut j = Json::obj();
-            j.set("error", msg.as_str());
-            http_response(stream, status, "application/json", &j.render_pretty());
+            http_response(stream, status, "application/json", &error_body(code, &msg));
             return;
         }
     };
@@ -145,10 +152,23 @@ fn handle(gw: &Gateway, stream: &mut std::net::TcpStream) {
         ("GET", "/api/v1/cluster") => {
             http_response(stream, "200 OK", "application/json", &gw.cluster_json().render_pretty());
         }
+        ("GET", "/metrics") => {
+            http_response(stream, "200 OK", PROM_CONTENT_TYPE, &gw.metrics_prometheus());
+        }
+        ("GET", p) if p.starts_with("/api/v1/jobs/") && p.ends_with("/metrics") => {
+            let id = p
+                .strip_prefix("/api/v1/jobs/")
+                .and_then(|rest| rest.strip_suffix("/metrics"))
+                .and_then(|s| s.parse::<u64>().ok());
+            match id.and_then(|id| gw.job_series_json(id)) {
+                Some(j) => http_response(stream, "200 OK", "application/json", &j.render_pretty()),
+                None => respond_not_found(stream, "no such job"),
+            }
+        }
         ("GET", p) if p.starts_with("/api/v1/jobs/") => {
             match job_id_from_path(p, "/api/v1/jobs/").and_then(|id| gw.job_json(id)) {
                 Some(j) => http_response(stream, "200 OK", "application/json", &j.render_pretty()),
-                None => http_response(stream, "404 Not Found", "application/json", "{\"error\": \"no such job\"}"),
+                None => respond_not_found(stream, "no such job"),
             }
         }
         ("DELETE", p) if p.starts_with("/api/v1/jobs/") => {
@@ -163,10 +183,10 @@ fn handle(gw: &Gateway, stream: &mut std::net::TcpStream) {
                     j.set("kill", "requested");
                     http_response(stream, "200 OK", "application/json", &j.render_pretty());
                 }
-                None => http_response(stream, "404 Not Found", "application/json", "{\"error\": \"no such job\"}"),
+                None => respond_not_found(stream, "no such job"),
             }
         }
-        _ => http_response(stream, "404 Not Found", "text/plain", "not found"),
+        _ => respond_not_found(stream, "not found"),
     }
 }
 

@@ -18,12 +18,38 @@
 //!   quotas — every refusal carries a machine-readable reason;
 //! - [`queue`]: bounded priority queue with backpressure and fair FIFO
 //!   within a priority level;
-//! - [`api`]: the HTTP JSON API (`/api/v1/jobs`, `/api/v1/cluster`),
-//!   reusing the portal's hand-rolled HTTP plumbing;
+//! - [`api`]: the HTTP JSON API (`/api/v1/jobs`, `/api/v1/cluster`,
+//!   `/metrics`), reusing the portal's hand-rolled HTTP plumbing;
 //! - this module: the job table, the worker pool that drives each
 //!   accepted job through its full AM lifecycle (with gateway-level
-//!   retry on AM failure), kill propagation, and automatic
-//!   [`HistoryStore`] recording for every job that ran.
+//!   retry on AM failure), kill propagation, automatic [`HistoryStore`]
+//!   recording for every job that ran, and the live-observability
+//!   aggregation: every running job's AM metrics registry is scraped
+//!   through one `GET /metrics` with `job`/`id`/`user`/`queue` labels
+//!   (see `docs/METRICS.md`), and streaming Dr. Elephant findings are
+//!   embedded in per-job status while the job runs.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use std::time::Duration;
+//! use tony::gateway::{Gateway, GatewayApi, GatewayConf, SubmitOutcome};
+//! use tony::tonyconf::JobConfBuilder;
+//! use tony::yarn::{Resource, ResourceManager};
+//!
+//! let rm = ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+//! let gw = Gateway::start(rm, GatewayConf::new("artifacts/tiny")).unwrap();
+//! let api = GatewayApi::start(gw.clone(), 0).unwrap();
+//! let conf = JobConfBuilder::new("demo").instances("worker", 1).build();
+//! match gw.submit_conf("alice", 1, conf) {
+//!     SubmitOutcome::Accepted { id } => {
+//!         println!("watch {}/api/v1/jobs/{id}, scrape {}/metrics", api.url(), api.url());
+//!     }
+//!     SubmitOutcome::Rejected { reason, .. } => eprintln!("rejected: {reason}"),
+//! }
+//! gw.wait_idle(Duration::from_secs(60));
+//! gw.shutdown();
+//! ```
 
 pub mod admission;
 pub mod api;
@@ -145,6 +171,11 @@ struct Job {
     resources: Resource,
     kill_requested: bool,
     conf: Configuration,
+    /// The running job's AM state — the live-observability handle the
+    /// gateway's `/metrics` aggregation and per-job series/findings
+    /// endpoints read.  Set when the worker submits the application,
+    /// cleared when the job terminalizes (history keeps the series).
+    live: Option<Arc<crate::am::AmState>>,
 }
 
 struct GwInner {
@@ -296,6 +327,7 @@ impl Gateway {
             resources: needed,
             kill_requested: false,
             conf,
+            live: None,
         };
         if let Err(e) = self.queue.try_push(priority, id) {
             // Backpressure: record the refusal (id already burned).
@@ -368,6 +400,7 @@ impl Gateway {
                 resources: Resource::ZERO,
                 kill_requested: false,
                 conf: conf.clone(),
+                live: None,
             },
         );
         inner.stats.rejected += 1;
@@ -489,8 +522,105 @@ impl Gateway {
     }
 
     pub fn job_json(&self, id: u64) -> Option<Json> {
-        let inner = self.inner.lock().unwrap();
-        inner.jobs.get(&id).map(Self::job_to_json)
+        // Snapshot under the gateway lock; the live AM state (its own
+        // mutex, hammered by heartbeats) is only touched after release
+        // so one status request cannot stall submits/kills/finalizes.
+        let (mut j, live) = {
+            let inner = self.inner.lock().unwrap();
+            let job = inner.jobs.get(&id)?;
+            (Self::job_to_json(job), job.live.clone())
+        };
+        if let Some(state) = live {
+            j.set("phase", format!("{:?}", state.phase()));
+            // Streaming Dr. Elephant verdicts for the running job —
+            // stragglers are visible in gateway job status mid-run.
+            let findings = crate::drelephant::analyze_live(&state);
+            j.set("findings", crate::drelephant::findings_json(&findings));
+        }
+        Some(j)
+    }
+
+    /// Time series for one job as JSON: the live registry while the job
+    /// runs, the down-sampled history record once it finished.  `None`
+    /// means the job id is unknown.
+    pub fn job_series_json(&self, id: u64) -> Option<Json> {
+        let (live, app_id) = {
+            let inner = self.inner.lock().unwrap();
+            let job = inner.jobs.get(&id)?;
+            (job.live.clone(), job.app_id)
+        };
+        if let Some(state) = live {
+            return Some(state.metrics_registry().series_json());
+        }
+        let record = app_id.and_then(|app| self.history.load(&app.to_string()).ok());
+        Some(match record {
+            Some(rec) => rec.series.clone(),
+            // Never ran (e.g. rejected) or history is gone: empty series
+            // in the same shape live responses use.
+            None => {
+                let mut j = Json::obj();
+                j.set("tasks", Json::obj());
+                j.set("queues", Json::obj());
+                j
+            }
+        })
+    }
+
+    /// The gateway's `GET /metrics` body: every running job's per-task
+    /// gauges (labelled `job`/`id`/`user`/`queue`), the cluster's
+    /// per-queue scheduler gauges, and the gateway's own counters.
+    pub fn metrics_prometheus(&self) -> String {
+        use crate::metrics::PromText;
+        let mut prom = PromText::new();
+        // Snapshot the live set under the lock, render outside it.
+        let live: Vec<(u64, String, String, String, Arc<crate::am::AmState>)> = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .jobs
+                .values()
+                .filter_map(|j| {
+                    j.live
+                        .as_ref()
+                        .map(|s| (j.id, j.name.clone(), j.user.clone(), j.queue.clone(), s.clone()))
+                })
+                .collect()
+        };
+        // Every job's rows are collected first so each metric family is
+        // emitted as one contiguous group across all tenant jobs.
+        let mut rows = Vec::new();
+        for (id, name, user, queue, state) in &live {
+            let id_str = id.to_string();
+            let labels = [
+                ("job", name.as_str()),
+                ("id", id_str.as_str()),
+                ("user", user.as_str()),
+                ("queue", queue.as_str()),
+            ];
+            rows.extend(crate::metrics::task_rows(state.task_metrics(), &labels));
+        }
+        crate::metrics::render_task_metrics(&mut prom, &rows);
+        crate::metrics::render_cluster_metrics(&mut prom, &self.rm);
+        let stats = self.stats();
+        let (pending, running) = self.live_counts();
+        prom.header(
+            "tony_gateway_jobs_total",
+            "counter",
+            "Jobs by admission/terminal outcome since the gateway started.",
+        );
+        for (outcome, n) in [
+            ("accepted", stats.accepted),
+            ("rejected", stats.rejected),
+            ("finished", stats.finished),
+            ("failed", stats.failed),
+            ("killed", stats.killed),
+        ] {
+            prom.sample("tony_gateway_jobs_total", &[("outcome", outcome)], n as f64);
+        }
+        prom.header("tony_gateway_jobs_pending", "gauge", "Jobs waiting in the gateway queue.");
+        prom.sample("tony_gateway_jobs_pending", &[], pending as f64);
+        prom.header("tony_gateway_jobs_running", "gauge", "Jobs currently running an AM.");
+        prom.sample("tony_gateway_jobs_running", &[], running as f64);
+        prom.finish()
     }
 
     fn stats_json(stats: &GatewayStats) -> Json {
@@ -584,6 +714,10 @@ impl Gateway {
                     Some(job) => {
                         job.app_id = Some(handle.app_id);
                         job.attempts = attempt;
+                        // Publish the AM state so `/metrics` and the
+                        // per-job series/findings endpoints see this job
+                        // while it runs.
+                        job.live = Some(handle.am_state.clone());
                         job.kill_requested
                     }
                     None => false,
@@ -663,6 +797,7 @@ impl Gateway {
                 wall_ms,
                 diagnostics: format!("[user {user}] {detail}"),
                 tasks: Vec::new(),
+                series: Json::obj(),
             });
         }
         let mut inner = self.inner.lock().unwrap();
@@ -686,6 +821,10 @@ impl Gateway {
         job.state = state;
         job.detail = detail.to_string();
         job.wall_ms = wall_ms;
+        // Drop the live observability handle; finished jobs stay
+        // inspectable through the down-sampled series in the history
+        // store (see `HistoryStore::record_from`).
+        job.live = None;
         let (user, queue, resources) = (job.user.clone(), job.queue.clone(), job.resources);
         if let Some(n) = inner.user_active.get_mut(&user) {
             *n = n.saturating_sub(1);

@@ -2,7 +2,35 @@
 //! TonY-history-server / Dr. Elephant-ingest role.  Each finished job is
 //! written as one JSON document; the store can list, load, and aggregate
 //! them (e.g. feeding `drelephant::analyze` after the fact), and the CLI
-//! renders them.
+//! renders them.  Since the live-metrics pipeline landed, a record also
+//! carries a down-sampled copy of the job's per-task time series (see
+//! [`crate::metrics`]), so finished jobs stay inspectable through the
+//! gateway's `/api/v1/jobs/{id}/metrics` endpoint.
+//!
+//! # Example
+//!
+//! ```
+//! use tony::history::{HistoryStore, JobRecord};
+//! use tony::json::Json;
+//!
+//! let dir = std::env::temp_dir().join(format!("tony-hist-doc-{}", std::process::id()));
+//! let store = HistoryStore::new(&dir);
+//! store
+//!     .record(&JobRecord {
+//!         app_id: "application_1_0001".into(),
+//!         name: "doc".into(),
+//!         queue: "default".into(),
+//!         succeeded: true,
+//!         attempts: 1,
+//!         wall_ms: 1200,
+//!         diagnostics: String::new(),
+//!         tasks: Vec::new(),
+//!         series: Json::obj(),
+//!     })
+//!     .unwrap();
+//! assert!(store.load("application_1_0001").unwrap().succeeded);
+//! std::fs::remove_dir_all(&dir).unwrap();
+//! ```
 
 use std::path::{Path, PathBuf};
 
@@ -23,6 +51,11 @@ pub struct JobRecord {
     pub diagnostics: String,
     /// (task id, metrics) snapshots at completion.
     pub tasks: Vec<(String, TaskMetrics)>,
+    /// Down-sampled time series captured at completion, in the same
+    /// `{"tasks": {...}, "queues": {...}}` shape the live endpoints
+    /// serve (see [`crate::metrics::Registry::downsampled_json`]).
+    /// Empty object for jobs that never ran or predate the pipeline.
+    pub series: Json,
 }
 
 impl JobRecord {
@@ -50,6 +83,7 @@ impl JobRecord {
         j.set("wall_ms", self.wall_ms);
         j.set("diagnostics", self.diagnostics.as_str());
         j.set("tasks", Json::Arr(tasks));
+        j.set("series", self.series.clone());
         j
     }
 
@@ -81,7 +115,7 @@ impl JobRecord {
                         .and_then(|v| v.as_u64())
                         .unwrap_or(0),
                     finished: t.get("finished").and_then(|v| v.as_bool()).unwrap_or(false),
-                    loss_history: Vec::new(),
+                    ..Default::default()
                 },
             ));
         }
@@ -94,6 +128,8 @@ impl JobRecord {
             wall_ms: j.get("wall_ms").and_then(|v| v.as_u64()).unwrap_or(0),
             diagnostics: s("diagnostics").unwrap_or_default(),
             tasks,
+            // Records written before the metrics pipeline have no series.
+            series: j.get("series").cloned().unwrap_or_else(Json::obj),
         })
     }
 }
@@ -210,6 +246,11 @@ impl HistoryStore {
             wall_ms,
             diagnostics: report.diagnostics.clone(),
             tasks,
+            // Persist the live series, down-sampled to the configured
+            // budget, so the job stays inspectable after completion.
+            series: am_state
+                .metrics_registry()
+                .downsampled_json(am_state.job_spec().metrics.history_points),
         })
     }
 
@@ -295,6 +336,7 @@ mod tests {
                 "worker:0".into(),
                 TaskMetrics { step: 10, loss: 2.0, tokens_done: 2560, ..Default::default() },
             )],
+            series: Json::obj(),
         }
     }
 
@@ -348,6 +390,36 @@ mod tests {
         assert_eq!(rec.app_id, "application_9_0001");
         // And no stray temp files are visible to the store.
         assert_eq!(s.list().unwrap(), vec!["application_9_0001".to_string()]);
+        let _ = std::fs::remove_dir_all(s.dir());
+    }
+
+    #[test]
+    fn series_round_trips_through_the_store() {
+        let s = store("series");
+        // Build a real registry series and persist its down-sampled form.
+        let reg = crate::metrics::Registry::new(32, 1);
+        for i in 0..16u64 {
+            reg.observe_task("worker:0", i, (16 - i) as f64, 8.0, 128, true);
+        }
+        let mut rec = sample("application_5_0001", true);
+        rec.series = reg.downsampled_json(8);
+        s.record(&rec).unwrap();
+        let back = s.load("application_5_0001").unwrap();
+        assert_eq!(back.series, rec.series, "series must survive the JSON round-trip");
+        let loss = back
+            .series
+            .at(&["tasks", "worker:0", "loss"])
+            .and_then(|a| a.as_arr())
+            .expect("loss series present");
+        assert!(loss.len() <= 8, "down-sampled to the budget");
+        let last = loss.last().unwrap().as_arr().unwrap();
+        assert_eq!(last[1].as_f64(), Some(1.0), "newest point kept");
+        // Records without a series block (pre-pipeline) still load.
+        let legacy = rec.to_json();
+        let mut stripped = legacy.as_obj().unwrap().clone();
+        stripped.remove("series");
+        let legacy_rec = JobRecord::from_json(&Json::Obj(stripped)).unwrap();
+        assert_eq!(legacy_rec.series, Json::obj());
         let _ = std::fs::remove_dir_all(s.dir());
     }
 

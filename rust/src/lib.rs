@@ -34,6 +34,7 @@ pub mod executor;
 pub mod framework;
 pub mod history;
 pub mod json;
+pub mod metrics;
 pub mod tonyconf;
 pub mod net;
 pub mod proptest;

@@ -324,7 +324,9 @@ fn main() {
             println!("  GET    {}/api/v1/jobs", api.url());
             println!("  GET    {}/api/v1/jobs/<id>", api.url());
             println!("  DELETE {}/api/v1/jobs/<id>", api.url());
+            println!("  GET    {}/api/v1/jobs/<id>/metrics", api.url());
             println!("  GET    {}/api/v1/cluster", api.url());
+            println!("  GET    {}/metrics  (Prometheus, all running jobs)", api.url());
             println!("submit with: tony submit --gateway {} --conf job.xml", api.addr);
             loop {
                 std::thread::sleep(Duration::from_secs(3600));

@@ -1,0 +1,633 @@
+//! Live observability plane: bounded time-series storage and Prometheus
+//! text-format exposition.
+//!
+//! The paper (§1) names *lack of monitoring* as one of the four core
+//! challenges of orchestrating distributed ML; TonY's production answer
+//! is the Portal + Dr. Elephant.  This module is the storage layer that
+//! makes a job observable *while it runs* instead of only after the
+//! fact:
+//!
+//! - [`Series`] — a bounded ring buffer of `(t_ms, value)` samples;
+//!   memory per task is a hard constant, however long the job runs.
+//! - [`Registry`] — per-task series (step, loss, step_ms_avg,
+//!   mem_used_mb) folded from executor heartbeats on the AM hot path,
+//!   plus sampled per-queue cluster gauges (dominant-share utilization,
+//!   pending asks, per-dimension usage) from the CapacityScheduler.
+//! - [`PromText`] — a tiny Prometheus text-format builder with proper
+//!   label escaping, used by the portal's and gateway's `GET /metrics`.
+//!
+//! Sampling is rate-limited by `tony.metrics.sample-interval-ms` so a
+//! 50 ms heartbeat interval does not write 20 points a second; setting
+//! the interval to 0 disables collection entirely (the hot path then
+//! returns before taking any lock).
+//!
+//! # Example
+//!
+//! ```
+//! use tony::metrics::{PromText, Registry};
+//!
+//! let reg = Registry::new(128, 1);
+//! reg.observe_task("worker:0", 5, 2.25, 12.0, 64, true);
+//! let series = reg.series_json();
+//! assert!(series.at(&["tasks", "worker:0", "loss"]).is_some());
+//!
+//! let mut prom = PromText::new();
+//! prom.header("tony_task_step", "gauge", "Latest training step per task.");
+//! prom.sample("tony_task_step", &[("task", "worker:0")], 5.0);
+//! assert!(prom.finish().contains("tony_task_step{task=\"worker:0\"} 5"));
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::json::Json;
+use crate::yarn::Resource;
+
+/// The per-task metrics folded into time series from heartbeats.
+pub const TASK_SERIES: &[&str] = &["step", "loss", "step_ms_avg", "mem_used_mb"];
+
+/// The per-queue gauges sampled from the scheduler.
+pub const QUEUE_SERIES: &[&str] =
+    &["utilization", "pending_asks", "used_mem_mb", "used_vcores", "used_gpus"];
+
+/// A bounded ring buffer of `(t_ms, value)` samples.  Pushing past the
+/// capacity evicts the oldest point, so a series never outgrows its
+/// configured retention however long the job runs.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    points: VecDeque<(u64, f64)>,
+    cap: usize,
+}
+
+impl Series {
+    pub fn new(cap: usize) -> Series {
+        Series { points: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    pub fn push(&mut self, t_ms: u64, v: f64) {
+        if self.points.len() == self.cap {
+            self.points.pop_front();
+        }
+        self.points.push_back((t_ms, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.points.back().copied()
+    }
+
+    pub fn points(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        self.points.iter().copied()
+    }
+
+    /// At most `n` evenly spaced points, always including the newest one
+    /// — what gets persisted into the history store at job completion.
+    pub fn downsample(&self, n: usize) -> Vec<(u64, f64)> {
+        let len = self.points.len();
+        let n = n.max(1);
+        if len <= n {
+            return self.points.iter().copied().collect();
+        }
+        if n == 1 {
+            return self.last().into_iter().collect();
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            // Spread indices over [0, len-1], anchored at both ends.
+            // With len > n the indices are strictly increasing, so no
+            // dedup is needed (and deduping by timestamp would drop
+            // same-millisecond points, including the forced final one).
+            let idx = i * (len - 1) / (n - 1);
+            out.push(self.points[idx]);
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|(t, v)| Json::Arr(vec![Json::from(*t), Json::from(*v)]))
+                .collect(),
+        )
+    }
+}
+
+#[derive(Debug, Default)]
+struct SeriesSet {
+    last_sample_ms: Option<u64>,
+    series: BTreeMap<&'static str, Series>,
+}
+
+impl SeriesSet {
+    /// Rate limit: true when this set is due for another sample.
+    fn due(&self, now_ms: u64, interval_ms: u64) -> bool {
+        match self.last_sample_ms {
+            None => true,
+            Some(last) => now_ms.saturating_sub(last) >= interval_ms,
+        }
+    }
+
+    fn record(&mut self, now_ms: u64, cap: usize, values: &[(&'static str, f64)]) {
+        self.last_sample_ms = Some(now_ms);
+        for &(name, v) in values {
+            self.series.entry(name).or_insert_with(|| Series::new(cap)).push(now_ms, v);
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for (name, s) in &self.series {
+            j.set(name, s.to_json());
+        }
+        j
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    tasks: BTreeMap<String, SeriesSet>,
+    queues: BTreeMap<String, SeriesSet>,
+}
+
+/// Bounded per-job metrics registry.  One lives inside every
+/// [`crate::am::AmState`]; the AM's heartbeat handler folds task metrics
+/// into it and the AM monitor loop samples cluster gauges.  The portal
+/// and gateway read it concurrently.
+#[derive(Debug)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+    start: Instant,
+    interval_ms: u64,
+    cap: usize,
+}
+
+impl Registry {
+    /// `retention_points` bounds every ring buffer; `sample_interval_ms`
+    /// rate-limits appends (0 disables collection entirely).
+    pub fn new(retention_points: usize, sample_interval_ms: u64) -> Registry {
+        Registry {
+            inner: Mutex::new(Inner::default()),
+            start: Instant::now(),
+            interval_ms: sample_interval_ms,
+            cap: retention_points.max(1),
+        }
+    }
+
+    /// A registry that records nothing (the `sample-interval-ms = 0`
+    /// configuration).
+    pub fn disabled() -> Registry {
+        Registry::new(1, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.interval_ms > 0
+    }
+
+    /// Milliseconds since the registry (i.e. the job) started — the time
+    /// axis of every series.
+    pub fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    /// Fold one task heartbeat into the registry (the AM hot path).
+    /// Rate-limited per task; `force` bypasses the limit so a task's
+    /// final flush always lands (the last point of the series is exact).
+    /// When collection is disabled this returns before taking any lock.
+    pub fn observe_task(
+        &self,
+        task: &str,
+        step: u64,
+        loss: f64,
+        step_ms_avg: f64,
+        mem_used_mb: u64,
+        force: bool,
+    ) {
+        if self.interval_ms == 0 {
+            return;
+        }
+        let now_ms = self.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(set) = inner.tasks.get_mut(task) {
+            if !force && !set.due(now_ms, self.interval_ms) {
+                return;
+            }
+        } else {
+            inner.tasks.insert(task.to_string(), SeriesSet::default());
+        }
+        let cap = self.cap;
+        inner.tasks.get_mut(task).unwrap().record(
+            now_ms,
+            cap,
+            &[
+                ("step", step as f64),
+                ("loss", loss),
+                ("step_ms_avg", step_ms_avg),
+                ("mem_used_mb", mem_used_mb as f64),
+            ],
+        );
+    }
+
+    /// Sample one queue's scheduler gauges (AM monitor loop / gateway).
+    pub fn observe_queue(&self, queue: &str, utilization: f64, used: Resource, pending: usize) {
+        if self.interval_ms == 0 {
+            return;
+        }
+        let now_ms = self.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(set) = inner.queues.get(queue) {
+            if !set.due(now_ms, self.interval_ms) {
+                return;
+            }
+        } else {
+            inner.queues.insert(queue.to_string(), SeriesSet::default());
+        }
+        let cap = self.cap;
+        inner.queues.get_mut(queue).unwrap().record(
+            now_ms,
+            cap,
+            &[
+                ("utilization", utilization),
+                ("pending_asks", pending as f64),
+                ("used_mem_mb", used.memory_mb as f64),
+                ("used_vcores", used.vcores as f64),
+                ("used_gpus", used.gpus as f64),
+            ],
+        );
+    }
+
+    /// Every stored series as JSON:
+    /// `{"tasks": {"worker:0": {"loss": [[t_ms, v], ...], ...}},
+    ///   "queues": {"default": {"utilization": [...], ...}}}`.
+    pub fn series_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut tasks = Json::obj();
+        for (task, set) in &inner.tasks {
+            tasks.set(task, set.to_json());
+        }
+        let mut queues = Json::obj();
+        for (queue, set) in &inner.queues {
+            queues.set(queue, set.to_json());
+        }
+        let mut j = Json::obj();
+        j.set("tasks", tasks);
+        j.set("queues", queues);
+        j
+    }
+
+    /// Down-sampled copy of every stored series, in the exact JSON
+    /// shape of [`Registry::series_json`] (both `tasks` and `queues`
+    /// blocks) — what the history store persists at job completion, so
+    /// consumers see one stable shape before and after a job finishes.
+    pub fn downsampled_json(&self, n: usize) -> Json {
+        fn sets_json(sets: &BTreeMap<String, SeriesSet>, n: usize) -> Json {
+            let mut out = Json::obj();
+            for (name, set) in sets {
+                let mut sj = Json::obj();
+                for (metric, series) in &set.series {
+                    if series.is_empty() {
+                        continue;
+                    }
+                    sj.set(
+                        metric,
+                        Json::Arr(
+                            series
+                                .downsample(n)
+                                .into_iter()
+                                .map(|(t, v)| Json::Arr(vec![Json::from(t), Json::from(v)]))
+                                .collect(),
+                        ),
+                    );
+                }
+                out.set(name, sj);
+            }
+            out
+        }
+        let inner = self.inner.lock().unwrap();
+        let mut j = Json::obj();
+        j.set("tasks", sets_json(&inner.tasks, n));
+        j.set("queues", sets_json(&inner.queues, n));
+        j
+    }
+
+    /// Points currently stored for one `(task, metric)` series (tests).
+    pub fn task_points(&self, task: &str, metric: &str) -> Vec<(u64, f64)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tasks
+            .get(task)
+            .and_then(|set| set.series.get(metric))
+            .map(|s| s.points().collect())
+            .unwrap_or_default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double-quote, and newline must be backslash-escaped.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value: integral values render without a decimal part
+/// (Prometheus accepts both; this keeps the output stable and compact).
+fn format_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Minimal Prometheus text-format (version 0.0.4) builder.
+///
+/// Emit a `# HELP`/`# TYPE` header once per metric family via
+/// [`PromText::header`], then any number of samples via
+/// [`PromText::sample`]; labels are escaped automatically.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    pub fn header(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {}\n", format_value(value)));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Append the per-queue scheduler gauges for `rm` to `prom`.  Samples
+/// are grouped per metric family (HELP/TYPE immediately followed by
+/// every sample of that family), as the Prometheus text format
+/// requires.  Shared by the portal and the gateway so both `/metrics`
+/// endpoints agree on metric names.
+pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceManager) {
+    type QueueGet = fn(&crate::yarn::QueueStat) -> f64;
+    let families: [(&str, &str, QueueGet); 5] = [
+        (
+            "tony_queue_utilization",
+            "Dominant-share utilization of each queue (used / cluster total).",
+            |q| q.utilization,
+        ),
+        (
+            "tony_queue_pending_asks",
+            "Container asks waiting in each queue.",
+            |q| q.pending as f64,
+        ),
+        ("tony_queue_used_mem_mb", "Memory (MB) in use per queue.", |q| {
+            q.used.memory_mb as f64
+        }),
+        ("tony_queue_used_vcores", "Virtual cores in use per queue.", |q| {
+            q.used.vcores as f64
+        }),
+        ("tony_queue_used_gpus", "GPUs in use per queue.", |q| q.used.gpus as f64),
+    ];
+    let stats = rm.queue_stats();
+    for (name, help, get) in families {
+        prom.header(name, "gauge", help);
+        for q in &stats {
+            prom.sample(name, &[("queue", q.name.as_str())], get(q));
+        }
+    }
+    prom.header("tony_cluster_nodes_alive", "gauge", "Nodes currently alive in the cluster.");
+    prom.sample("tony_cluster_nodes_alive", &[], rm.alive_node_count() as f64);
+}
+
+/// Append per-task gauges to `prom`, one metric family at a time (the
+/// Prometheus text format requires all samples of a family in a single
+/// group, so callers pass *every* row — across all jobs on the gateway
+/// — in one call).  Each row is its full label set (e.g. `task`, plus
+/// `job`/`id`/`user`/`queue` on the gateway) and the task's latest
+/// metrics snapshot.
+pub fn render_task_metrics(
+    prom: &mut PromText,
+    rows: &[(Vec<(String, String)>, crate::framework::TaskMetrics)],
+) {
+    type TaskGet = fn(&crate::framework::TaskMetrics) -> f64;
+    let families: [(&str, &str, TaskGet); 5] = [
+        ("tony_task_step", "Latest training step per task.", |m| m.step as f64),
+        ("tony_task_loss", "Latest training loss per task.", |m| m.loss as f64),
+        ("tony_task_step_ms_avg", "Average step latency (ms) per task.", |m| m.step_ms_avg),
+        ("tony_task_mem_used_mb", "Estimated working set (MB) per task.", |m| {
+            m.mem_used_mb as f64
+        }),
+        ("tony_task_updates_applied", "Optimizer updates applied (PS shards).", |m| {
+            m.updates_applied as f64
+        }),
+    ];
+    for (name, help, get) in families {
+        prom.header(name, "gauge", help);
+        for (labels, m) in rows {
+            let refs: Vec<(&str, &str)> =
+                labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            prom.sample(name, &refs, get(m));
+        }
+    }
+}
+
+/// Build the label rows [`render_task_metrics`] consumes from one job's
+/// task snapshot, prefixing each `task` label with `extra` labels.
+pub fn task_rows(
+    tasks: Vec<(String, crate::framework::TaskMetrics)>,
+    extra: &[(&str, &str)],
+) -> Vec<(Vec<(String, String)>, crate::framework::TaskMetrics)> {
+    tasks
+        .into_iter()
+        .map(|(task, m)| {
+            let mut labels: Vec<(String, String)> = extra
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            labels.push(("task".to_string(), task));
+            (labels, m)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_buffer_bounds_and_eviction() {
+        let mut s = Series::new(4);
+        for i in 0..10u64 {
+            s.push(i, i as f64);
+        }
+        assert_eq!(s.len(), 4, "capacity is a hard bound");
+        let pts: Vec<_> = s.points().collect();
+        assert_eq!(pts, vec![(6, 6.0), (7, 7.0), (8, 8.0), (9, 9.0)], "oldest evicted first");
+        assert_eq!(s.last(), Some((9, 9.0)));
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let mut s = Series::new(100);
+        for i in 0..100u64 {
+            s.push(i, i as f64);
+        }
+        let d = s.downsample(5);
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.first(), Some(&(0, 0.0)), "first point kept");
+        assert_eq!(d.last(), Some(&(99, 99.0)), "newest point kept");
+        // Small series pass through untouched.
+        let mut small = Series::new(8);
+        small.push(1, 1.0);
+        assert_eq!(small.downsample(5), vec![(1, 1.0)]);
+    }
+
+    #[test]
+    fn registry_rate_limits_and_forces() {
+        let reg = Registry::new(16, 60_000); // one sample a minute
+        reg.observe_task("worker:0", 1, 3.0, 10.0, 64, false);
+        reg.observe_task("worker:0", 2, 2.5, 10.0, 64, false); // rate-limited away
+        assert_eq!(reg.task_points("worker:0", "step").len(), 1);
+        reg.observe_task("worker:0", 3, 2.0, 10.0, 64, true); // forced final flush
+        let pts = reg.task_points("worker:0", "step");
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].1, 3.0, "forced sample is the newest point");
+    }
+
+    #[test]
+    fn registry_respects_retention_cap() {
+        let reg = Registry::new(3, 1);
+        for i in 0..50u64 {
+            reg.observe_task("w", i, 0.0, 0.0, 0, true);
+        }
+        for metric in TASK_SERIES {
+            assert!(
+                reg.task_points("w", metric).len() <= 3,
+                "{metric} outgrew its retention cap"
+            );
+        }
+        assert_eq!(reg.task_points("w", "step").last().unwrap().1, 49.0);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let reg = Registry::disabled();
+        assert!(!reg.enabled());
+        reg.observe_task("w", 1, 1.0, 1.0, 1, true);
+        reg.observe_queue("default", 0.5, Resource::new(1024, 1, 0), 2);
+        let j = reg.series_json();
+        assert!(j.at(&["tasks", "w"]).is_none());
+        assert!(j.at(&["queues", "default"]).is_none());
+    }
+
+    #[test]
+    fn queue_series_and_json_shape() {
+        let reg = Registry::new(8, 1);
+        reg.observe_queue("ml", 0.25, Resource::new(2048, 4, 1), 3);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        reg.observe_queue("ml", 0.5, Resource::new(4096, 8, 2), 0);
+        let j = reg.series_json();
+        let util = j.at(&["queues", "ml", "utilization"]).and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(util.len(), 2);
+        assert_eq!(util[1].as_arr().unwrap()[1].as_f64(), Some(0.5));
+        let pending = j.at(&["queues", "ml", "pending_asks"]).and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(pending[0].as_arr().unwrap()[1].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn prometheus_escaping_and_rendering() {
+        let mut prom = PromText::new();
+        prom.header("tony_task_loss", "gauge", "help text");
+        prom.sample(
+            "tony_task_loss",
+            &[("task", "weird\"name\\with\nnewline"), ("queue", "ml")],
+            1.5,
+        );
+        prom.sample("tony_task_loss", &[], 3.0);
+        let text = prom.finish();
+        assert!(text.contains("# HELP tony_task_loss help text"));
+        assert!(text.contains("# TYPE tony_task_loss gauge"));
+        assert!(
+            text.contains(r#"tony_task_loss{task="weird\"name\\with\nnewline",queue="ml"} 1.5"#),
+            "{text}"
+        );
+        assert!(text.contains("tony_task_loss 3\n"), "bare sample + integral formatting: {text}");
+    }
+
+    #[test]
+    fn task_families_render_as_contiguous_groups() {
+        // The Prometheus text format requires every sample of a metric
+        // family in one group; with two tasks the old per-task rendering
+        // interleaved families.
+        let mk = |step: u64| crate::framework::TaskMetrics { step, ..Default::default() };
+        let rows = task_rows(
+            vec![("worker:0".to_string(), mk(1)), ("worker:1".to_string(), mk(2))],
+            &[("job", "demo")],
+        );
+        let mut prom = PromText::new();
+        render_task_metrics(&mut prom, &rows);
+        let text = prom.finish();
+        let last_step = text.rfind("tony_task_step{").unwrap();
+        let first_loss = text.find("tony_task_loss{").unwrap();
+        assert!(
+            last_step < first_loss,
+            "tony_task_step samples must form one contiguous group:\n{text}"
+        );
+        assert!(text.contains(
+            "tony_task_step{job=\"demo\",task=\"worker:1\"} 2"
+        ));
+    }
+
+    #[test]
+    fn downsampled_json_export() {
+        let reg = Registry::new(64, 1);
+        for i in 0..20u64 {
+            reg.observe_task("worker:0", i, (20 - i) as f64, 5.0, 32, true);
+        }
+        let j = reg.downsampled_json(4);
+        let loss = j
+            .at(&["tasks", "worker:0", "loss"])
+            .and_then(|a| a.as_arr())
+            .expect("loss series exported");
+        assert!(loss.len() <= 4);
+        let last = loss.last().unwrap().as_arr().unwrap();
+        assert_eq!(last[1].as_f64(), Some(1.0), "newest loss kept");
+        assert!(j.get("queues").is_some(), "same shape as series_json");
+    }
+}

@@ -8,10 +8,36 @@
 //! - `GET /status`      — the AM state snapshot as JSON
 //! - `GET /cluster`     — RM node/queue utilization as JSON
 //! - `GET /losses`      — the chief's loss curve as JSON
+//! - `GET /metrics`     — Prometheus text format: per-task gauges + per-queue
+//!   cluster utilization (see `docs/METRICS.md`)
+//! - `GET /series`      — the job's ring-buffered time series as JSON
+//! - `GET /findings`    — streaming Dr. Elephant verdicts for the *running* job
 //! - `GET /logs/<task>` — captured log lines mentioning the task
 //!
-//! The portal URL is registered as the app's tracking URL, so the client
-//! surfaces it exactly like YARN's proxy would.
+//! Unknown routes (and `/logs/<task>` for a task the job does not have)
+//! return `404` with a JSON error body.  The portal URL is registered as
+//! the app's tracking URL, so the client surfaces it exactly like YARN's
+//! proxy would.
+//!
+//! # Example
+//!
+//! Render the Prometheus exposition without going over HTTP:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tony::am::AmState;
+//! use tony::tonyconf::{JobConfBuilder, JobSpec};
+//! use tony::yarn::{Resource, ResourceManager};
+//!
+//! let conf = JobConfBuilder::new("doc").instances("worker", 1).build();
+//! let spec = JobSpec::from_conf(&conf).unwrap();
+//! let state = Arc::new(AmState::new(&spec));
+//! state.begin_attempt(1);
+//! let rm = ResourceManager::start_uniform(1, Resource::new(1024, 2, 0));
+//! let text = tony::portal::prometheus_text(&state, &rm);
+//! assert!(text.contains("tony_queue_utilization"));
+//! assert!(text.contains("tony_task_step"));
+//! ```
 
 use std::io::{Read, Write};
 use std::net::TcpListener;
@@ -40,6 +66,49 @@ pub fn http_response(stream: &mut std::net::TcpStream, status: &str, ctype: &str
         "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
+}
+
+/// Render the standard JSON error body every portal/gateway handler uses
+/// for error statuses: `{"code": ..., "error": ...}`.
+pub fn error_body(code: &str, message: &str) -> String {
+    let mut j = Json::obj();
+    j.set("code", code);
+    j.set("error", message);
+    j.render_pretty()
+}
+
+/// Respond `404 Not Found` with the standard JSON error body — unknown
+/// routes and unknown resources answer identically everywhere.
+pub fn respond_not_found(stream: &mut std::net::TcpStream, message: &str) {
+    http_response(
+        stream,
+        "404 Not Found",
+        "application/json",
+        &error_body("not-found", message),
+    );
+}
+
+/// Prometheus text format content type (exposition format 0.0.4).
+pub const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// The AM portal's `GET /metrics` body: per-task gauges from the latest
+/// heartbeat snapshot plus per-queue scheduler gauges.
+pub fn prometheus_text(state: &AmState, rm: &ResourceManager) -> String {
+    let mut prom = crate::metrics::PromText::new();
+    let rows = crate::metrics::task_rows(state.task_metrics(), &[]);
+    crate::metrics::render_task_metrics(&mut prom, &rows);
+    crate::metrics::render_cluster_metrics(&mut prom, rm);
+    prom.finish()
+}
+
+/// The portal's `GET /findings` body: the streaming Dr. Elephant
+/// verdicts for the running job, plus the phase they were computed in.
+fn findings_json(state: &AmState) -> Json {
+    let findings = crate::drelephant::analyze_live(state);
+    let mut j = Json::obj();
+    j.set("phase", format!("{:?}", state.phase()));
+    j.set("findings", crate::drelephant::findings_json(&findings));
+    j
 }
 
 /// A parsed incoming HTTP request: method, path, and (for POSTs) the
@@ -247,15 +316,40 @@ impl Portal {
                                 "application/json",
                                 &losses_json(&state).render_pretty(),
                             ),
+                            "/metrics" => http_response(
+                                &mut stream,
+                                "200 OK",
+                                PROM_CONTENT_TYPE,
+                                &prometheus_text(&state, &rm),
+                            ),
+                            "/series" => http_response(
+                                &mut stream,
+                                "200 OK",
+                                "application/json",
+                                &state.metrics_registry().series_json().render_pretty(),
+                            ),
+                            "/findings" => http_response(
+                                &mut stream,
+                                "200 OK",
+                                "application/json",
+                                &findings_json(&state).render_pretty(),
+                            ),
                             p if p.starts_with("/logs/") => {
                                 let task = p.trim_start_matches("/logs/");
+                                if !state.has_task(task) {
+                                    respond_not_found(
+                                        &mut stream,
+                                        &format!("no such task '{task}'"),
+                                    );
+                                    continue;
+                                }
                                 let body = format!(
                                     "logs for {task}: interleaved in the daemon stderr \
                                      (TONY_LOG=debug); per-task capture via logging::capture_start"
                                 );
                                 http_response(&mut stream, "200 OK", "text/plain", &body);
                             }
-                            _ => http_response(&mut stream, "404 Not Found", "text/plain", "not found"),
+                            _ => respond_not_found(&mut stream, "not found"),
                         }
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -361,7 +455,79 @@ mod tests {
         let (code, _) = http_get(&format!("{}/logs/worker:0", portal.url())).unwrap();
         assert_eq!(code, 200);
 
+        let (code, body) = http_get(&format!("{}/metrics", portal.url())).unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("# TYPE tony_task_step gauge"), "{body}");
+        assert!(body.contains("tony_task_step{task=\"worker:0\"}"), "{body}");
+        assert!(body.contains("tony_queue_utilization{queue=\"default\"}"), "{body}");
+
+        let (code, body) = http_get(&format!("{}/series", portal.url())).unwrap();
+        assert_eq!(code, 200);
+        assert!(Json::parse(&body).unwrap().get("tasks").is_some());
+
+        let (code, body) = http_get(&format!("{}/findings", portal.url())).unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        assert!(j.get("findings").and_then(|f| f.as_arr()).is_some());
+
         let (code, _) = http_get(&format!("{}/nope", portal.url())).unwrap();
         assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn unknown_routes_and_tasks_get_json_404s() {
+        let conf = JobConfBuilder::new("p404").instances("worker", 1).build();
+        let spec = JobSpec::from_conf(&conf).unwrap();
+        let state = Arc::new(AmState::new(&spec));
+        state.begin_attempt(1);
+        let rm = ResourceManager::start_uniform(1, Resource::new(1024, 2, 0));
+        let portal = Portal::start(state, rm).unwrap();
+
+        for path in ["/nope", "/api/v1/anything", "/logs/worker:7"] {
+            let (code, body) = http_get(&format!("{}{path}", portal.url())).unwrap();
+            assert_eq!(code, 404, "{path}");
+            let j = Json::parse(&body).unwrap_or_else(|e| panic!("{path}: not JSON ({e}): {body}"));
+            assert_eq!(j.get("code").and_then(|c| c.as_str()), Some("not-found"), "{path}");
+            assert!(j.get("error").is_some(), "{path}");
+        }
+    }
+
+    #[test]
+    fn streaming_straggler_verdict_visible_mid_run() {
+        use crate::am::protocol::{HeartbeatMsg, AM_HEARTBEAT};
+        use crate::am::state::AmRpcHandler;
+        use crate::framework::TaskMetrics;
+        use crate::net::rpc::RpcHandler;
+        use crate::net::wire::Wire;
+
+        let conf = JobConfBuilder::new("strag").instances("worker", 3).build();
+        let spec = JobSpec::from_conf(&conf).unwrap();
+        let state = Arc::new(AmState::new(&spec));
+        state.begin_attempt(1);
+        let handler = AmRpcHandler::new(state.clone());
+        // Two healthy workers and one 4x-slower straggler heartbeat in.
+        for (idx, step_ms) in [(0u32, 10.0f64), (1, 11.0), (2, 44.0)] {
+            let hb = HeartbeatMsg {
+                task_type: "worker".into(),
+                index: idx,
+                spec_version: 1,
+                metrics: TaskMetrics { step: 50, step_ms_avg: step_ms, ..Default::default() },
+            };
+            handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
+        }
+        let rm = ResourceManager::start_uniform(1, Resource::new(1024, 2, 0));
+        let portal = Portal::start(state.clone(), rm).unwrap();
+        // The job is still mid-run (no task exited), yet the portal
+        // already serves the straggler verdict.
+        assert!(state.task_metrics().iter().all(|(_, m)| !m.finished));
+        let (code, body) = http_get(&format!("{}/findings", portal.url())).unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        let findings = j.get("findings").and_then(|f| f.as_arr()).unwrap();
+        let straggler = findings
+            .iter()
+            .find(|f| f.get("heuristic").and_then(|h| h.as_str()) == Some("straggler"))
+            .expect("straggler flagged while running");
+        assert_eq!(straggler.get("task").and_then(|t| t.as_str()), Some("worker:2"));
     }
 }

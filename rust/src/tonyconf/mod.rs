@@ -54,6 +54,8 @@ pub struct JobSpec {
     pub heartbeat_ms: u64,
     pub max_missed_heartbeats: u32,
     pub train: TrainSpec,
+    /// Live-observability knobs (the `tony.metrics.*` keys).
+    pub metrics: MetricsSpec,
     /// The raw configuration (executors receive it verbatim, like the
     /// packaged conf archive in real TonY).
     pub conf: Configuration,
@@ -73,6 +75,36 @@ pub struct TrainSpec {
     /// "sync" (barrier data-parallel) or "async" (hogwild-style).
     pub mode: String,
     pub grad_clip: f64,
+}
+
+/// Settings for the AM's live metrics registry (see [`crate::metrics`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSpec {
+    /// Minimum milliseconds between stored samples per series; 0 turns
+    /// time-series collection off entirely (heartbeats still update the
+    /// latest-value snapshot the portal serves).
+    pub sample_interval_ms: u64,
+    /// Ring-buffer capacity of every stored series.
+    pub retention_points: usize,
+    /// Points per series persisted into the history store at completion.
+    pub history_points: usize,
+}
+
+impl MetricsSpec {
+    pub fn from_conf(conf: &Configuration) -> MetricsSpec {
+        MetricsSpec {
+            sample_interval_ms: conf.get_u64("tony.metrics.sample-interval-ms", 500),
+            retention_points: conf.get_u64("tony.metrics.retention-points", 256) as usize,
+            history_points: conf.get_u64("tony.metrics.history-points", 64) as usize,
+        }
+    }
+
+    /// Bound on the loss-history curve the AM accumulates per task (and
+    /// on what an executor re-sends after a rollback — anything longer
+    /// would be discarded at the AM anyway).
+    pub fn loss_history_cap(&self) -> usize {
+        self.retention_points.max(1024)
+    }
 }
 
 impl JobSpec {
@@ -139,6 +171,7 @@ impl JobSpec {
             heartbeat_ms: conf.get_u64("tony.task.heartbeat-ms", 50),
             max_missed_heartbeats: conf.get_u32("tony.task.max-missed-heartbeats", 20),
             train,
+            metrics: MetricsSpec::from_conf(conf),
             conf: conf.clone(),
         })
     }
@@ -307,6 +340,24 @@ mod tests {
         let total = spec.total_task_resources();
         assert_eq!(total.memory_mb, 4 * 4096 + 2 * 2048);
         assert_eq!(total.gpus, 4);
+    }
+
+    #[test]
+    fn metrics_spec_defaults_and_overrides() {
+        let spec = JobSpec::from_conf(&sample()).unwrap();
+        assert_eq!(spec.metrics.sample_interval_ms, 500);
+        assert_eq!(spec.metrics.retention_points, 256);
+        assert_eq!(spec.metrics.history_points, 64);
+        let c = JobConfBuilder::new("m")
+            .instances(WORKER, 1)
+            .set("tony.metrics.sample-interval-ms", "0")
+            .set("tony.metrics.retention-points", "16")
+            .set("tony.metrics.history-points", "8")
+            .build();
+        let spec = JobSpec::from_conf(&c).unwrap();
+        assert_eq!(spec.metrics.sample_interval_ms, 0, "0 disables collection");
+        assert_eq!(spec.metrics.retention_points, 16);
+        assert_eq!(spec.metrics.history_points, 8);
     }
 
     #[test]

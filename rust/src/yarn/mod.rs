@@ -29,5 +29,5 @@ pub mod scheduler;
 pub use container::{Container, ContainerCtx, ContainerRequest, ContainerStatus, ExitStatus};
 pub use node::{NodeHandle, NodeSpec};
 pub use resources::Resource;
-pub use rm::{AllocateResponse, AppReport, AppState, ResourceManager, SubmissionContext};
+pub use rm::{AllocateResponse, AppReport, AppState, QueueStat, ResourceManager, SubmissionContext};
 pub use scheduler::{CapacityScheduler, QueueConf};

@@ -56,6 +56,18 @@ pub struct AppReport {
     pub tracking_url: Option<String>,
 }
 
+/// Per-queue observability snapshot served by [`ResourceManager::queue_stats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueStat {
+    pub name: String,
+    /// Resources currently granted against this queue.
+    pub used: Resource,
+    /// Container asks still waiting in this queue.
+    pub pending: usize,
+    /// Dominant-share utilization in [0, 1] (used / cluster total).
+    pub utilization: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct SubmissionContext {
     pub name: String,
@@ -376,6 +388,30 @@ impl ResourceManager {
             .map(|n| {
                 let used = inner.scheduler.queue_used(&n).unwrap_or(Resource::ZERO);
                 (n, used)
+            })
+            .collect()
+    }
+
+    /// One observability snapshot per queue: used resources, pending
+    /// asks, and dominant-share utilization against the cluster total.
+    /// Feeds the `/metrics` endpoints and the AM's sampled gauges.
+    pub fn queue_stats(&self) -> Vec<QueueStat> {
+        let inner = self.inner.lock().unwrap();
+        let total = inner.scheduler.cluster_total();
+        let pending: std::collections::BTreeMap<String, usize> =
+            inner.scheduler.pending_per_queue().into_iter().collect();
+        inner
+            .scheduler
+            .queue_names()
+            .into_iter()
+            .map(|name| {
+                let used = inner.scheduler.queue_used(&name).unwrap_or(Resource::ZERO);
+                QueueStat {
+                    utilization: used.dominant_share(&total),
+                    pending: pending.get(&name).copied().unwrap_or(0),
+                    used,
+                    name,
+                }
             })
             .collect()
     }

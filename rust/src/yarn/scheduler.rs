@@ -121,6 +121,15 @@ impl CapacityScheduler {
         self.queues.iter().map(|q| q.pending.len()).sum()
     }
 
+    /// Pending asks per queue (observability: the `/metrics` endpoints
+    /// expose this as `tony_queue_pending_asks`).
+    pub fn pending_per_queue(&self) -> Vec<(String, usize)> {
+        self.queues
+            .iter()
+            .map(|q| (q.conf.name.clone(), q.pending.len()))
+            .collect()
+    }
+
     fn queue_mut(&mut self, name: &str) -> Option<&mut Queue> {
         self.queues.iter_mut().find(|q| q.conf.name == name)
     }

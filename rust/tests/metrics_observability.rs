@@ -1,0 +1,140 @@
+//! End-to-end tests for the live observability plane: the gateway's
+//! aggregated Prometheus scrape across concurrent tenant jobs, the
+//! per-job JSON series endpoint (live and from history after
+//! completion), and the JSON-404 contract across the HTTP surface.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tony::gateway::{Gateway, GatewayApi, GatewayConf, SubmitOutcome};
+use tony::json::Json;
+use tony::portal::{http_get, http_request};
+use tony::tonyconf::JobConfBuilder;
+use tony::xmlconf::Configuration;
+use tony::yarn::{Resource, ResourceManager};
+
+fn gateway(tag: &str, workers: usize) -> Arc<Gateway> {
+    let base = std::env::temp_dir().join(format!(
+        "tony-obs-{tag}-{}-{}",
+        std::process::id(),
+        tony::util::ids::next_seq()
+    ));
+    let mut conf = GatewayConf::new(base.join("artifacts"));
+    conf.history_dir = base.join("history");
+    conf.workers = workers;
+    conf.job_timeout = Duration::from_secs(120);
+    let rm = ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+    Gateway::start(rm, conf).unwrap()
+}
+
+fn long_job(name: &str, steps: u64) -> Configuration {
+    JobConfBuilder::new(name)
+        .instances("worker", 1)
+        .memory("worker", "512m")
+        .instances("ps", 1)
+        .memory("ps", "512m")
+        .set("tony.am.memory", "256m")
+        .set("tony.train.steps", &steps.to_string())
+        // Sample aggressively so even a short run stores a series.
+        .set("tony.metrics.sample-interval-ms", "5")
+        .build()
+}
+
+#[test]
+fn gateway_metrics_aggregate_across_concurrent_jobs() {
+    let gw = gateway("agg", 2);
+    let api = GatewayApi::start(gw.clone(), 0).unwrap();
+    let url = api.url();
+    let SubmitOutcome::Accepted { id: a } = gw.submit_conf("alice", 1, long_job("job-a", 5000))
+    else {
+        panic!("job-a rejected")
+    };
+    let SubmitOutcome::Accepted { id: b } = gw.submit_conf("bob", 1, long_job("job-b", 5000))
+    else {
+        panic!("job-b rejected")
+    };
+
+    // Poll the aggregated scrape until both tenants' tasks appear.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let body = loop {
+        let (code, body) = http_get(&format!("{url}/metrics")).unwrap();
+        assert_eq!(code, 200);
+        if body.contains("user=\"alice\"") && body.contains("user=\"bob\"") {
+            break body;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "both jobs never appeared in /metrics:\n{body}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    // Per-task gauges carry job/id/user/queue labels per tenant job.
+    assert!(
+        body.contains(&format!(
+            "tony_task_step{{job=\"job-a\",id=\"{a}\",user=\"alice\",queue=\"default\",task=\"worker:0\"}}"
+        )),
+        "{body}"
+    );
+    assert!(
+        body.contains(&format!(
+            "tony_task_step{{job=\"job-b\",id=\"{b}\",user=\"bob\",queue=\"default\",task=\"worker:0\"}}"
+        )),
+        "{body}"
+    );
+    // Cluster gauges and gateway counters ride along in the same scrape.
+    assert!(body.contains("tony_queue_utilization{queue=\"default\"}"), "{body}");
+    assert!(body.contains("# TYPE tony_gateway_jobs_total counter"), "{body}");
+    assert!(body.contains("tony_gateway_jobs_total{outcome=\"accepted\"} 2"), "{body}");
+
+    // Live per-job series + phase while the job runs.
+    let (code, jbody) = http_get(&format!("{url}/api/v1/jobs/{a}/metrics")).unwrap();
+    assert_eq!(code, 200);
+    assert!(Json::parse(&jbody).unwrap().get("tasks").is_some(), "{jbody}");
+    let (code, jbody) = http_get(&format!("{url}/api/v1/jobs/{a}")).unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&jbody).unwrap();
+    assert!(j.get("phase").is_some(), "running job exposes live phase: {jbody}");
+
+    // Finished jobs stay inspectable: the series endpoint switches to
+    // the down-sampled history record.
+    gw.kill(a);
+    gw.kill(b);
+    assert!(gw.wait_idle(Duration::from_secs(60)), "killed jobs never settled");
+    let (code, jbody) = http_get(&format!("{url}/api/v1/jobs/{a}/metrics")).unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&jbody).unwrap();
+    assert!(
+        j.at(&["tasks", "worker:0"]).is_some(),
+        "history series served after completion: {jbody}"
+    );
+    gw.shutdown();
+}
+
+#[test]
+fn gateway_unknown_routes_and_ids_return_json_404() {
+    let gw = gateway("404", 1);
+    let api = GatewayApi::start(gw.clone(), 0).unwrap();
+    let url = api.url();
+    for (method, path) in [
+        ("GET", "/nope"),
+        ("GET", "/api/v1/nope"),
+        ("GET", "/api/v1/jobs/999"),
+        ("GET", "/api/v1/jobs/abc"),
+        ("GET", "/api/v1/jobs/999/metrics"),
+        ("GET", "/api/v1/jobs/abc/metrics"),
+        ("DELETE", "/api/v1/jobs/999"),
+        ("POST", "/api/v1/cluster"),
+    ] {
+        let (code, body) = http_request(method, &format!("{url}{path}"), "").unwrap();
+        assert_eq!(code, 404, "{method} {path}: {body}");
+        let j = Json::parse(&body)
+            .unwrap_or_else(|e| panic!("{method} {path}: non-JSON 404 body ({e}): {body}"));
+        assert_eq!(
+            j.get("code").and_then(|c| c.as_str()),
+            Some("not-found"),
+            "{method} {path}: {body}"
+        );
+        assert!(j.get("error").is_some(), "{method} {path}: {body}");
+    }
+    gw.shutdown();
+}

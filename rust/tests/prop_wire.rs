@@ -148,6 +148,7 @@ fn metrics_round_trip_with_history() {
             updates_applied: g.u64(),
             finished: g.bool(),
             loss_history: (0..n).map(|i| (i as u64, g.f32())).collect(),
+            history_rewound: g.u64(),
         };
         let back = TaskMetrics::from_bytes(&m.to_bytes()).map_err(|e| e.to_string())?;
         prop_assert_eq!(back.loss_history.len(), m.loss_history.len());

@@ -11,6 +11,12 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo doc --no-deps (deny warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p tony
+
+echo "==> cargo test --doc (rustdoc examples)"
+cargo test --doc -q -p tony
+
 echo "==> fault-tolerance example (surgical task + node recovery, sim mode)"
 cargo run --release --example fault_tolerance
 
