@@ -1,0 +1,209 @@
+//! L1 (event-driven control plane): reaction latency and idle-CPU cost,
+//! event wakeups vs the legacy poll fallback (`tony.event.poll-mode`).
+//!
+//! Part 1 — reaction latency, direct client, N repetitions per mode:
+//!   - submit → AM phase Running (grant/launch/register/spec rendezvous);
+//!   - kill a worker container → AM requests its replacement
+//!     (`recoveries` bump) — the paper's recover-fast axis.
+//!   Poll mode quantizes both to the 10–20 ms loop intervals; event mode
+//!   reacts at wakeup time.  Measurement spins (yield) for precision so
+//!   the probe itself adds no poll floor.
+//!
+//! Part 2 — idle-CPU proxy at 1/8/32 concurrent gateway jobs: total AM
+//! monitor-loop iterations per job-second.  Event-driven loops iterate
+//! per *event*; poll loops iterate per interval regardless of activity.
+//!
+//! `TONY_BENCH_SMOKE=1` trims repetitions and runs the 1-job level only.
+
+use std::time::{Duration, Instant};
+
+use tony::am::JobPhase;
+use tony::bench::{f1, f2, n, Table};
+use tony::client::{SubmitOpts, TonyClient};
+use tony::gateway::{Gateway, GatewayConf, SubmitOutcome};
+use tony::tonyconf::JobConfBuilder;
+use tony::util::ids::TaskId;
+use tony::xmlconf::Configuration;
+use tony::yarn::{Resource, ResourceManager};
+
+fn job_conf(name: &str, steps: u64, poll_mode: bool) -> Configuration {
+    let mut b = JobConfBuilder::new(name)
+        .instances("worker", 2)
+        .memory("worker", "512m")
+        .instances("ps", 1)
+        .memory("ps", "512m")
+        .set("tony.am.memory", "256m")
+        .set("tony.train.steps", &steps.to_string())
+        .set("tony.train.checkpoint-every", "20");
+    if poll_mode {
+        b = b.set("tony.event.poll-mode", "true");
+    }
+    b.build()
+}
+
+/// Busy-spin (yield) until `pred`, returning elapsed ms — the probe has
+/// microsecond resolution so the measured floor is the system's, not the
+/// harness's.
+fn spin_until(pred: impl Fn() -> bool, timeout: Duration) -> f64 {
+    let t0 = Instant::now();
+    while !pred() {
+        if t0.elapsed() > timeout {
+            panic!("latency probe timed out after {timeout:?}");
+        }
+        std::thread::yield_now();
+    }
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+struct LatencySample {
+    submit_to_running_ms: f64,
+    kill_to_replacement_ms: f64,
+}
+
+fn measure_latency(poll_mode: bool, dir: &std::path::Path, steps: u64) -> LatencySample {
+    let rm = ResourceManager::start_uniform(4, Resource::new(4096, 8, 0));
+    let ckpt = dir.join(format!("ckpt-{}", tony::util::ids::next_seq()));
+    let mut conf = job_conf("lat", steps, poll_mode);
+    conf.set("tony.train.checkpoint-dir", ckpt.to_string_lossy().to_string());
+    let client = TonyClient::new(rm.clone());
+    let t_submit = Instant::now();
+    let handle = client
+        .submit_opts(&conf, &dir.join("artifacts"), SubmitOpts {
+            start_portal: false,
+            tracking_url: None,
+        })
+        .expect("submit");
+    let state = handle.am_state.clone();
+    let submit_to_running_ms = {
+        let s = state.clone();
+        spin_until(move || s.phase() == JobPhase::Running, Duration::from_secs(60));
+        t_submit.elapsed().as_secs_f64() * 1e3
+    };
+
+    // Kill worker:1's container and time until the AM has begun surgical
+    // recovery (replacement requested at a bumped spec version).
+    let victim = state
+        .live_containers_for(&TaskId::new("worker", 1))
+        .expect("worker:1 container");
+    rm.stop_container(victim);
+    let s = state.clone();
+    let kill_to_replacement_ms =
+        spin_until(move || s.recoveries() >= 1, Duration::from_secs(60));
+
+    let report = handle.wait(Duration::from_secs(120)).expect("job finished");
+    assert!(
+        report.state == tony::yarn::AppState::Finished,
+        "latency job must survive the kill: {}",
+        report.diagnostics
+    );
+    LatencySample { submit_to_running_ms, kill_to_replacement_ms }
+}
+
+struct IdleResult {
+    jobs: usize,
+    wall_s: f64,
+    total_iters: u64,
+    iters_per_job_sec: f64,
+}
+
+fn measure_idle(poll_mode: bool, concurrency: usize, steps: u64, dir: &std::path::Path) -> IdleResult {
+    let rm = ResourceManager::start_uniform(16, Resource::new(4096, 16, 0));
+    let mut conf = GatewayConf::new(dir.join("artifacts"));
+    conf.history_dir = dir.join(format!("history-{}-{}", poll_mode, concurrency));
+    conf.workers = concurrency;
+    conf.queue_depth = 256;
+    conf.quotas.max_active_per_user = 10_000;
+    let gw = Gateway::start(rm, conf).expect("gateway");
+    let t0 = Instant::now();
+    let mut ids = Vec::new();
+    for i in 0..concurrency {
+        match gw.submit_conf(&format!("u{i}"), 1, job_conf(&format!("idle{i}"), steps, poll_mode))
+        {
+            SubmitOutcome::Accepted { id } => ids.push(id),
+            SubmitOutcome::Rejected { reason, .. } => panic!("rejected: {reason}"),
+        }
+    }
+    // Sample per-job monitor-loop iteration counters while the jobs run
+    // (the live handles are dropped at terminalization).
+    let mut iters: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    loop {
+        for (id, st) in gw.live_am_states() {
+            iters.insert(id, st.loop_iters());
+        }
+        if gw.wait_idle(Duration::from_millis(25)) {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(300), "idle bench stalled");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    gw.shutdown();
+    let total_iters: u64 = iters.values().sum();
+    IdleResult {
+        jobs: concurrency,
+        wall_s,
+        total_iters,
+        iters_per_job_sec: total_iters as f64 / (concurrency as f64 * wall_s).max(1e-9),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("TONY_BENCH_SMOKE").is_ok();
+    let base = std::env::temp_dir().join(format!("tony-bench-latency-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    tony::runtime::synthetic::ensure_preset(&base.join("artifacts")).expect("artifacts");
+
+    // ---- Part 1: reaction latency ----
+    let reps = if smoke { 1 } else { 5 };
+    let steps = if smoke { 60 } else { 200 };
+    let mut t = Table::new(&[
+        "mode",
+        "reps",
+        "submit->RUNNING p50 ms",
+        "kill->replacement p50 ms",
+    ]);
+    for poll_mode in [false, true] {
+        let mut running = Vec::new();
+        let mut replace = Vec::new();
+        for _ in 0..reps {
+            let s = measure_latency(poll_mode, &base, steps);
+            running.push(s.submit_to_running_ms);
+            replace.push(s.kill_to_replacement_ms);
+        }
+        running.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        replace.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(&[
+            n(if poll_mode { "poll" } else { "event" }),
+            n(reps),
+            f2(running[running.len() / 2]),
+            f2(replace[replace.len() / 2]),
+        ]);
+    }
+    t.print("L1a: control-plane reaction latency (event wakeups vs poll fallback)");
+
+    // ---- Part 2: idle-CPU proxy at 1/8/32 concurrent gateway jobs ----
+    let levels: &[usize] = if smoke { &[1] } else { &[1, 8, 32] };
+    let idle_steps = if smoke { 10 } else { 50 };
+    let mut t = Table::new(&[
+        "mode",
+        "jobs",
+        "wall s",
+        "AM loop iters",
+        "iters/job/s",
+    ]);
+    for &jobs in levels {
+        for poll_mode in [false, true] {
+            let r = measure_idle(poll_mode, jobs, idle_steps, &base);
+            t.row(&[
+                n(if poll_mode { "poll" } else { "event" }),
+                n(r.jobs),
+                f2(r.wall_s),
+                n(r.total_iters),
+                f1(r.iters_per_job_sec),
+            ]);
+        }
+    }
+    t.print("L1b: AM monitor-loop iterations (idle-CPU proxy)");
+
+    let _ = std::fs::remove_dir_all(&base);
+    println!("\nbench_latency done.");
+}

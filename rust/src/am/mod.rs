@@ -30,13 +30,14 @@ pub mod state;
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::executor::{run_task_executor, ExecutorParams};
 use crate::net::rpc::RpcServer;
 use crate::tonyconf::JobSpec;
+use crate::util::event::{tag, TimerWheel};
 use crate::util::ids::{ApplicationId, ContainerId, TaskId};
 use crate::util::HostPort;
 use crate::yarn::{Container, ContainerCtx, ContainerRequest, ExitStatus, ResourceManager};
@@ -87,6 +88,15 @@ pub fn run_application_master(am: AmContext, ctx: &ContainerCtx) -> i32 {
 fn am_body(am: &AmContext, ctx: &ContainerCtx) -> Result<JobResult> {
     let job = &am.job;
     am.rm.register_am(am.app, None).context("registering AM")?;
+
+    // Event wiring: the AM monitor loop blocks on the state's wakeup bus.
+    // Producers: the RM (grants, completed containers, app-state changes,
+    // fallback ticks), the executor-facing RPC handler (registrations,
+    // task exits, spec builds, version acks), and the AM container's own
+    // kill switch.
+    let bus = am.state.events().clone();
+    am.rm.register_am_waker(am.app, &bus);
+    ctx.kill_switch().register(&bus);
 
     // The AM's RPC endpoint that all TaskExecutors talk to.
     let server = RpcServer::serve(Arc::new(state::AmRpcHandler::new(am.state.clone())))
@@ -239,6 +249,8 @@ fn run_attempt(
     let total = job.total_tasks();
     let mut launched = 0u32;
 
+    let clock = am.state.clock().clone();
+    let bus = am.state.events().clone();
     let hb_interval = Duration::from_millis(job.heartbeat_ms.max(5));
     let liveness_budget =
         Duration::from_millis(job.heartbeat_ms.max(5) * job.max_missed_heartbeats as u64);
@@ -254,14 +266,28 @@ fn run_attempt(
     let mut surgical_used = 0u32;
     // Cluster/queue gauge sampling cadence (avoids taking the RM lock
     // every monitor tick; the registry rate-limits appends as well).
-    let gauge_interval = Duration::from_millis(job.metrics.sample_interval_ms.max(1));
-    let mut last_gauge_sample: Option<Instant> = None;
+    let gauge_interval = job.metrics.sample_interval_ms.max(1);
+    let mut last_gauge_sample: Option<u64> = None;
     // Start of the current negotiation or recovery window (relaunch
     // grants must arrive within `launch_timeout` of this).
-    let mut phase_started = Instant::now();
+    let mut phase_started = clock.now_ms();
     let mut recovering = false;
 
+    // The event machinery replacing the old ≤20 ms sleep-poll: every
+    // deadline the loop's checks depend on is armed on the wheel, the
+    // wheel's next deadline (capped by the fallback tick) bounds the bus
+    // wait, and the loop otherwise runs only when an event arrives.
+    // `tony.event.poll-mode` restores interval polling for A/B benches.
+    let fallback_tick_ms = job.conf.get_u64("tony.am.fallback-tick-ms", 500).max(1);
+    let poll_mode = job.conf.get("tony.event.poll-mode").map(|v| v == "true").unwrap_or(false);
+    let wheel = TimerWheel::new(
+        clock.clone(),
+        job.conf.get_u64("tony.event.timer-capacity", 4096) as usize,
+    );
+    let mut armed: Vec<crate::util::event::TimerId> = Vec::new();
+
     loop {
+        am.state.note_loop_iter();
         if ctx.killed() {
             return Ok(AttemptOutcome::AmKilled);
         }
@@ -335,10 +361,11 @@ fn run_attempt(
 
         // ---- sampled cluster/queue gauges (per-queue dominant-share
         //      utilization, pending asks, per-dimension usage) ----
+        let now = clock.now_ms();
         if am.state.metrics_registry().enabled()
-            && last_gauge_sample.map_or(true, |t| t.elapsed() >= gauge_interval)
+            && last_gauge_sample.map_or(true, |t| now.saturating_sub(t) >= gauge_interval)
         {
-            last_gauge_sample = Some(Instant::now());
+            last_gauge_sample = Some(now);
             let registry = am.state.metrics_registry();
             for q in rm.queue_stats() {
                 registry.observe_queue(&q.name, q.utilization, q.used, q.pending);
@@ -391,18 +418,22 @@ fn run_attempt(
             let dead: Vec<TaskId> = failed.keys().cloned().collect();
             recover_tasks(am, &mut router, &dead, surgical_used, max_task_restarts);
             recovering = true;
-            phase_started = Instant::now();
+            phase_started = clock.now_ms();
             continue;
         }
 
         // ---- progress deadlines ----
-        if router.outstanding() > 0 && phase_started.elapsed() > launch_timeout {
+        let now = clock.now_ms();
+        if router.outstanding() > 0
+            && now.saturating_sub(phase_started) > launch_timeout.as_millis() as u64
+        {
             return Ok(AttemptOutcome::TaskFailed(format!(
                 "{} container(s) not granted within {launch_timeout:?} \
                  (cluster too busy or labels unsatisfiable)",
                 router.outstanding()
             )));
         }
+        let recovery_budget_ms = (launch_timeout + registration_timeout).as_millis() as u64;
         if recovering {
             if am.state.recovery_complete() {
                 recovering = false;
@@ -413,7 +444,7 @@ fn run_attempt(
                     am.app,
                     am.state.spec_version()
                 );
-            } else if phase_started.elapsed() > launch_timeout + registration_timeout {
+            } else if now.saturating_sub(phase_started) > recovery_budget_ms {
                 return Ok(AttemptOutcome::TaskFailed(
                     "surgical recovery timed out (survivors never acked the patched spec)"
                         .to_string(),
@@ -421,7 +452,45 @@ fn run_attempt(
             }
         }
 
-        std::thread::sleep(hb_interval.min(Duration::from_millis(20)));
+        if poll_mode {
+            // A/B baseline: the paper-era fixed-interval poll.
+            clock.sleep(hb_interval.min(Duration::from_millis(20)));
+            continue;
+        }
+
+        // ---- block until the next event or the earliest deadline ----
+        // Re-arm the wheel from scratch each pass: the deadline set is
+        // tiny (≤4) and most passes change it (heartbeats refresh
+        // liveness, grants clear the launch window).
+        for id in armed.drain(..) {
+            wheel.cancel(id);
+        }
+        let _ = wheel.poll_tags(); // clear anything that fired mid-pass
+        if let Some(d) = am.state.next_liveness_deadline(liveness_budget, registration_timeout)
+        {
+            armed.extend(wheel.arm_at(d.saturating_add(1), tag::TICK));
+        }
+        if router.outstanding() > 0 {
+            let d = phase_started.saturating_add(launch_timeout.as_millis() as u64 + 1);
+            armed.extend(wheel.arm_at(d, tag::TICK));
+        }
+        if recovering {
+            armed.extend(wheel.arm_at(phase_started.saturating_add(recovery_budget_ms + 1), tag::TICK));
+        }
+        if am.state.metrics_registry().enabled() {
+            let d = last_gauge_sample.unwrap_or(now).saturating_add(gauge_interval);
+            armed.extend(wheel.arm_at(d, tag::TICK));
+        }
+        let now = clock.now_ms();
+        let deadline = wheel
+            .next_deadline()
+            .unwrap_or(u64::MAX)
+            .min(now.saturating_add(fallback_tick_ms));
+        let fired = bus.wait_until(&*clock, deadline);
+        let _ = wheel.poll_tags();
+        if fired != 0 {
+            tdebug!("am", "{} woke on [{}]", am.app, tag::names(fired));
+        }
     }
 }
 
@@ -469,6 +538,7 @@ fn launch_executor(
         preset_dir: am.preset_dir.clone(),
         task: task.clone(),
         spec_version,
+        clock: am.state.clock().clone(),
     };
     am.state.record_launch(task.clone(), container.id);
     // The launch-context env mirrors what real TonY sets before exec-ing
@@ -485,15 +555,18 @@ fn launch_executor(
 }
 
 /// Ask every untracked service task (PS, evaluator) to stop, then give
-/// them a moment to exit cleanly.
+/// them a moment to exit cleanly.  Waits on the AM bus: each service's
+/// final `AM_FINISHED` wakes this immediately (`tag::TASK_EXIT`).
 fn stop_untracked(am: &AmContext, job: &JobSpec) {
     am.state.command_all_untracked(job, AmCommand::Stop);
-    let deadline = Instant::now() + Duration::from_secs(3);
-    while Instant::now() < deadline {
+    let clock = am.state.clock().clone();
+    let bus = am.state.events().clone();
+    let deadline = clock.now_ms().saturating_add(3_000);
+    while clock.now_ms() < deadline {
         if am.state.all_untracked_done(job) {
             return;
         }
-        std::thread::sleep(Duration::from_millis(10));
+        bus.wait_until(&*clock, deadline);
     }
     // Hard-stop stragglers via the NM.
     for cid in am.state.live_containers() {
@@ -511,9 +584,13 @@ fn teardown_attempt(am: &AmContext, attempt: u32) {
         am.rm.stop_container(*cid);
     }
     // Drain completion events so released capacity is visible before we
-    // re-request (avoids double-booking the cluster).
-    let deadline = Instant::now() + Duration::from_secs(10);
-    while Instant::now() < deadline {
+    // re-request (avoids double-booking the cluster).  Each container's
+    // completion callback notifies the AM waker (`tag::COMPLETED`), so
+    // this blocks on the bus instead of re-polling allocate every 10 ms.
+    let clock = am.state.clock().clone();
+    let bus = am.state.events().clone();
+    let deadline = clock.now_ms().saturating_add(10_000);
+    while clock.now_ms() < deadline {
         let resp = match am.rm.allocate(am.app, &[], &[]) {
             Ok(r) => r,
             Err(_) => break,
@@ -524,7 +601,7 @@ fn teardown_attempt(am: &AmContext, attempt: u32) {
         if am.state.live_containers().is_empty() {
             break;
         }
-        std::thread::sleep(Duration::from_millis(10));
+        bus.wait_until(&*clock, deadline);
     }
 }
 

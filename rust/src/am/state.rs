@@ -12,8 +12,9 @@
 //! that needs the patched spec (Reconfigure).
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::framework::protocol::{ClusterSpec, TaskMetrics};
 use crate::json::Json;
@@ -21,6 +22,8 @@ use crate::metrics::Registry;
 use crate::net::rpc::RpcHandler;
 use crate::net::wire::Wire;
 use crate::tonyconf::JobSpec;
+use crate::util::clock::{Clock, SystemClock};
+use crate::util::event::{tag, WakeupBus};
 use crate::util::ids::{ContainerId, TaskId};
 use crate::util::HostPort;
 
@@ -45,7 +48,10 @@ pub struct TaskRecord {
     pub container: Option<ContainerId>,
     pub endpoint: Option<HostPort>,
     pub ui_url: Option<String>,
-    pub last_heartbeat: Option<Instant>,
+    /// Clock time (ms) of the last sign of life: launch, registration,
+    /// or heartbeat.  Clock-based (not `Instant`) so liveness expiry is
+    /// drivable by a manual clock in tests.
+    pub last_heartbeat: Option<u64>,
     pub metrics: TaskMetrics,
     pub exit_code: Option<i64>,
     pub command: AmCommand,
@@ -87,7 +93,7 @@ struct Inner {
     tasks: BTreeMap<TaskId, TaskRecord>,
     expected: Vec<TaskId>,
     spec: Option<ClusterSpec>,
-    started_at: Instant,
+    started_at_ms: u64,
     /// Surgical recoveries performed over the job's lifetime.
     recoveries: u32,
     /// Grants released back to the RM because they matched no task
@@ -105,7 +111,13 @@ pub enum AttemptOutcome {
 
 pub struct AmState {
     inner: Mutex<Inner>,
-    cond: Condvar,
+    /// The AM's wakeup bus.  The monitor loop is its single draining
+    /// consumer; the RM's grant/completion notifications, the RPC
+    /// handler's registration/ack/exit notifications, and the container
+    /// kill switch all land here.  Spec long-polls ride its sequence
+    /// (non-draining).
+    bus: Arc<WakeupBus>,
+    clock: Arc<dyn Clock>,
     expected_from: Box<dyn Fn(u32) -> Vec<TaskId> + Send + Sync>,
     /// The job this AM is running (immutable; read by the portal for
     /// streaming Dr. Elephant analysis).
@@ -116,10 +128,18 @@ pub struct AmState {
     /// Bound on the accumulated per-task loss history (the heartbeat
     /// protocol ships deltas; the AM owns the full curve).
     loss_history_cap: usize,
+    /// Monitor-loop iterations — the idle-CPU proxy `bench_latency`
+    /// reports (event-driven loops should iterate per *event*, not per
+    /// poll interval).
+    loop_iters: AtomicU64,
 }
 
 impl AmState {
     pub fn new(job: &JobSpec) -> AmState {
+        Self::with_clock(job, SystemClock::shared())
+    }
+
+    pub fn with_clock(job: &JobSpec, clock: Arc<dyn Clock>) -> AmState {
         let types: Vec<(String, u32)> = job
             .task_types
             .iter()
@@ -134,6 +154,7 @@ impl AmState {
             }
             out
         });
+        let bus = WakeupBus::for_clock(&clock);
         AmState {
             inner: Mutex::new(Inner {
                 attempt: 0,
@@ -142,11 +163,12 @@ impl AmState {
                 tasks: BTreeMap::new(),
                 expected: Vec::new(),
                 spec: None,
-                started_at: Instant::now(),
+                started_at_ms: clock.now_ms(),
                 recoveries: 0,
                 released_grants: 0,
             }),
-            cond: Condvar::new(),
+            bus,
+            clock,
             expected_from,
             registry: Arc::new(Registry::new(
                 job.metrics.retention_points,
@@ -154,7 +176,27 @@ impl AmState {
             )),
             loss_history_cap: job.metrics.loss_history_cap(),
             job: job.clone(),
+            loop_iters: AtomicU64::new(0),
         }
+    }
+
+    /// The AM's wakeup bus (see the field doc for the producer set).
+    pub fn events(&self) -> &Arc<WakeupBus> {
+        &self.bus
+    }
+
+    /// The clock all AM deadlines run on (shared with the RM).
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// Count one monitor-loop pass (idle-CPU proxy for `bench_latency`).
+    pub fn note_loop_iter(&self) {
+        self.loop_iters.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn loop_iters(&self) -> u64 {
+        self.loop_iters.load(Ordering::Relaxed)
     }
 
     /// The live metrics registry (portal `/metrics`, gateway aggregation,
@@ -199,7 +241,8 @@ impl AmState {
             .iter()
             .map(|t| (t.clone(), TaskRecord::new(t.clone(), version)))
             .collect();
-        self.cond.notify_all();
+        drop(inner);
+        self.bus.notify(tag::STATE);
     }
 
     /// Start a surgical recovery: bump the spec version, reset the dead
@@ -213,6 +256,7 @@ impl AmState {
         inner.phase = JobPhase::Recovering;
         inner.recoveries += 1;
         let version = inner.version;
+        let now = self.clock.now_ms();
         for t in dead {
             if let Some(r) = inner.tasks.get_mut(t) {
                 r.container = None;
@@ -221,19 +265,20 @@ impl AmState {
                 r.metrics.finished = false;
                 // Relaunch grace: the clock restarts so the liveness
                 // checks measure the replacement, not the corpse.
-                r.last_heartbeat = Some(Instant::now());
+                r.last_heartbeat = Some(now);
                 r.generation += 1;
                 r.spec_version = version;
                 r.acked_version = 0;
             }
         }
-        self.cond.notify_all();
+        drop(inner);
+        self.bus.notify(tag::STATE);
         version
     }
 
     pub fn set_phase(&self, phase: JobPhase) {
         self.inner.lock().unwrap().phase = phase;
-        self.cond.notify_all();
+        self.bus.notify(tag::STATE);
     }
 
     pub fn phase(&self) -> JobPhase {
@@ -274,7 +319,7 @@ impl AmState {
             .or_insert_with(|| TaskRecord::new(task, version));
         rec.container = Some(container);
         rec.spec_version = version;
-        rec.last_heartbeat = Some(Instant::now()); // launch counts as life
+        rec.last_heartbeat = Some(self.clock.now_ms()); // launch counts as life
     }
 
     pub fn task_for_container(&self, container: ContainerId) -> Option<TaskId> {
@@ -362,7 +407,10 @@ impl AmState {
         if inner.phase == JobPhase::Negotiating {
             inner.phase = JobPhase::Running;
         }
-        self.cond.notify_all();
+        drop(inner);
+        // Wakes the AM monitor loop AND every executor blocked in a
+        // GET_SPEC long-poll (they ride the bus sequence).
+        self.bus.notify(tag::SPEC);
         true
     }
 
@@ -388,25 +436,36 @@ impl AmState {
     /// Blocking spec fetch used by the RPC handler.  Succeeds once a spec
     /// at `version` *or newer* exists: a survivor asking for the version
     /// its Reconfigure named may race a further recovery, and the newest
-    /// spec is always the right answer.
+    /// spec is always the right answer.  Event-driven: waiters ride the
+    /// bus sequence (woken by `tag::SPEC`) instead of the old 50 ms
+    /// re-check slices, and the deadline is clock-driven so manual-clock
+    /// tests can expire it deterministically.
     fn wait_spec(&self, version: u32, timeout: Duration) -> Option<ClusterSpec> {
-        let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
+        let deadline = self.clock.deadline_after(timeout);
         loop {
-            if let Some(spec) = &inner.spec {
-                if spec.version >= version as u64 {
-                    return Some(spec.clone());
+            let seen = self.bus.seq();
+            {
+                let inner = self.inner.lock().unwrap();
+                if let Some(spec) = &inner.spec {
+                    if spec.version >= version as u64 {
+                        return Some(spec.clone());
+                    }
+                }
+                // The attempt is being torn down or the job ended: this
+                // spec will never be built.  Fail the long-poll now so a
+                // doomed executor unblocks and notices its kill switch
+                // instead of waiting out the timeout.
+                if matches!(
+                    inner.phase,
+                    JobPhase::Restarting | JobPhase::Succeeded | JobPhase::Failed
+                ) {
+                    return None;
                 }
             }
-            let now = Instant::now();
-            if now >= deadline {
+            if self.clock.now_ms() >= deadline {
                 return None;
             }
-            let (g, _) = self
-                .cond
-                .wait_timeout(inner, (deadline - now).min(Duration::from_millis(50)))
-                .unwrap();
-            inner = g;
+            self.bus.wait_seq(&*self.clock, seen, deadline);
         }
     }
 
@@ -460,13 +519,15 @@ impl AmState {
 
     /// A task that *registered* but has stopped heartbeating.
     pub fn stale_task(&self, budget: Duration) -> Option<TaskId> {
+        let now = self.clock.now_ms();
+        let budget = budget.as_millis() as u64;
         let inner = self.inner.lock().unwrap();
         for r in inner.tasks.values() {
             if r.exit_code.is_some() || r.endpoint.is_none() {
                 continue;
             }
             if let Some(last) = r.last_heartbeat {
-                if last.elapsed() > budget {
+                if now.saturating_sub(last) > budget {
                     return Some(r.task.clone());
                 }
             }
@@ -480,18 +541,52 @@ impl AmState {
     /// the AM's launch timeout only covers *granting* containers, and the
     /// heartbeat staleness check only covers *registered* tasks.
     pub fn unregistered_task(&self, budget: Duration) -> Option<TaskId> {
+        let now = self.clock.now_ms();
+        let budget = budget.as_millis() as u64;
         let inner = self.inner.lock().unwrap();
         for r in inner.tasks.values() {
             if r.exit_code.is_some() || r.endpoint.is_some() || r.container.is_none() {
                 continue;
             }
             if let Some(launched) = r.last_heartbeat {
-                if launched.elapsed() > budget {
+                if now.saturating_sub(launched) > budget {
                     return Some(r.task.clone());
                 }
             }
         }
         None
+    }
+
+    /// The earliest clock time (ms) at which a liveness verdict could
+    /// change: the next heartbeat-staleness expiry over registered live
+    /// tasks, or the next registration-deadline expiry over launched,
+    /// still-unregistered tasks.  The monitor loop arms this on its
+    /// timer wheel so it sleeps *exactly* until something can happen,
+    /// instead of re-checking on a poll interval.
+    pub fn next_liveness_deadline(
+        &self,
+        liveness_budget: Duration,
+        registration_budget: Duration,
+    ) -> Option<u64> {
+        let live_ms = liveness_budget.as_millis() as u64;
+        let reg_ms = registration_budget.as_millis() as u64;
+        let inner = self.inner.lock().unwrap();
+        let mut next: Option<u64> = None;
+        for r in inner.tasks.values() {
+            if r.exit_code.is_some() {
+                continue;
+            }
+            let Some(last) = r.last_heartbeat else { continue };
+            let deadline = if r.endpoint.is_some() {
+                last.saturating_add(live_ms)
+            } else if r.container.is_some() {
+                last.saturating_add(reg_ms)
+            } else {
+                continue;
+            };
+            next = Some(next.map_or(deadline, |n: u64| n.min(deadline)));
+        }
+        next
     }
 
     /// First worker's UI URL (the TensorBoard stand-in, §2.2).
@@ -547,7 +642,7 @@ impl AmState {
         j.set("version", inner.version as u64);
         j.set("recoveries", inner.recoveries as u64);
         j.set("released_grants", inner.released_grants);
-        j.set("uptime_ms", inner.started_at.elapsed().as_millis() as u64);
+        j.set("uptime_ms", self.clock.now_ms().saturating_sub(inner.started_at_ms));
         j.set("tasks", Json::Arr(tasks));
         j.set(
             "spec_ready",
@@ -636,10 +731,12 @@ impl RpcHandler for AmRpcHandler {
                 }
                 rec.endpoint = Some(HostPort::new(msg.host.clone(), msg.port));
                 rec.ui_url = msg.ui_url.clone();
-                rec.last_heartbeat = Some(Instant::now());
+                rec.last_heartbeat = Some(self.state.clock.now_ms());
                 rec.acked_version = msg.spec_version;
                 drop(inner);
-                self.state.cond.notify_all();
+                // Registration is an event the monitor loop (spec
+                // assembly, recovery barrier) must see immediately.
+                self.state.bus.notify(tag::REGISTERED);
                 self.state.try_build_spec(msg.spec_version);
                 Ok(Vec::new())
             }
@@ -666,9 +763,15 @@ impl RpcHandler for AmRpcHandler {
                 // Scalars captured before the fold consumes the message,
                 // so the registry sample happens *outside* the state lock.
                 let mut observed: Option<(u64, f64, f64, u64, bool)> = None;
+                // Most heartbeats only refresh liveness and metrics; the
+                // monitor loop is woken only when one carries *news* (a
+                // spec-version ack the recovery barrier waits on), so a
+                // busy job's heartbeat volume never turns back into a
+                // poll-rate monitor loop.
+                let mut acked_news = false;
                 let cmd = match inner.tasks.get_mut(&task) {
                     Some(rec) if msg.spec_version >= rec.spec_version => {
-                        rec.last_heartbeat = Some(Instant::now());
+                        rec.last_heartbeat = Some(self.state.clock.now_ms());
                         observed = Some((
                             msg.metrics.step,
                             msg.metrics.loss as f64,
@@ -681,7 +784,9 @@ impl RpcHandler for AmRpcHandler {
                             msg.metrics,
                             self.state.loss_history_cap,
                         );
-                        rec.acked_version = msg.spec_version.min(version);
+                        let acked = msg.spec_version.min(version);
+                        acked_news = acked != rec.acked_version;
+                        rec.acked_version = acked;
                         if rec.command != AmCommand::None {
                             rec.command
                         } else if msg.spec_version < version && spec_ready {
@@ -697,6 +802,9 @@ impl RpcHandler for AmRpcHandler {
                     _ => AmCommand::Abort,
                 };
                 drop(inner);
+                if acked_news {
+                    self.state.bus.notify(tag::HEARTBEAT);
+                }
                 if self.state.registry.enabled() {
                     if let Some((step, loss, step_ms, mem, force)) = observed {
                         self.state.registry.observe_task(
@@ -715,12 +823,19 @@ impl RpcHandler for AmRpcHandler {
                 let msg = FinishedMsg::from_bytes(payload).map_err(|e| e.to_string())?;
                 let task = TaskId::new(msg.task_type.clone(), msg.index);
                 let mut inner = self.state.inner.lock().unwrap();
+                let mut exited = false;
                 if let Some(rec) = inner.tasks.get_mut(&task) {
                     // Only the current incarnation may report an exit.
                     if msg.spec_version >= rec.spec_version {
                         rec.exit_code = Some(msg.exit_code);
                         rec.metrics.finished = true;
+                        exited = true;
                     }
+                }
+                drop(inner);
+                if exited {
+                    // Success/failure detection is exit-event-driven.
+                    self.state.bus.notify(tag::TASK_EXIT);
                 }
                 Ok(Vec::new())
             }
@@ -734,6 +849,7 @@ impl RpcHandler for AmRpcHandler {
 mod tests {
     use super::*;
     use crate::tonyconf::{JobConfBuilder, JobSpec};
+    use crate::util::ManualClock;
 
     fn job() -> JobSpec {
         let conf = JobConfBuilder::new("t")
@@ -741,6 +857,12 @@ mod tests {
             .instances("ps", 1)
             .build();
         JobSpec::from_conf(&conf).unwrap()
+    }
+
+    /// AmState on a manual clock: the test owns liveness time.
+    fn manual_state(job: &JobSpec) -> (std::sync::Arc<ManualClock>, AmState) {
+        let clock = ManualClock::shared();
+        (clock.clone(), AmState::with_clock(job, clock))
     }
 
     #[test]
@@ -817,17 +939,40 @@ mod tests {
         // The heartbeated task is fresh; others have no heartbeat at all
         // (never launched) and are not stale either.
         assert!(state.stale_task(Duration::from_secs(60)).is_none());
-        std::thread::sleep(Duration::from_millis(30));
+    }
+
+    /// Liveness expiry on a manual clock — no real sleeping: advancing
+    /// virtual time past the budget is what makes the task stale, and
+    /// `next_liveness_deadline` names the exact expiry the monitor loop
+    /// arms on its timer wheel.
+    #[test]
+    fn stale_detection_is_clock_driven() {
+        let job = job();
+        let (clock, state) = manual_state(&job);
+        state.begin_attempt(1);
+        {
+            let mut inner = state.inner.lock().unwrap();
+            let rec = inner.tasks.get_mut(&TaskId::new("worker", 0)).unwrap();
+            rec.endpoint = Some(HostPort::localhost(1234));
+            rec.last_heartbeat = Some(clock.now_ms());
+        }
+        let budget = Duration::from_millis(100);
+        assert!(state.stale_task(budget).is_none());
         assert_eq!(
-            state.stale_task(Duration::from_millis(1)),
-            Some(TaskId::new("worker", 0))
+            state.next_liveness_deadline(budget, Duration::from_millis(500)),
+            Some(100),
+            "wheel deadline = last heartbeat + liveness budget"
         );
+        clock.advance_ms(100);
+        assert!(state.stale_task(budget).is_none(), "exactly at budget is alive");
+        clock.advance_ms(1);
+        assert_eq!(state.stale_task(budget), Some(TaskId::new("worker", 0)));
     }
 
     #[test]
     fn launched_but_unregistered_task_is_flagged() {
         let job = job();
-        let state = AmState::new(&job);
+        let (clock, state) = manual_state(&job);
         state.begin_attempt(1);
         // Nothing launched -> nothing can be flagged, ever.
         assert!(state.unregistered_task(Duration::from_millis(0)).is_none());
@@ -838,9 +983,10 @@ mod tests {
         state.record_launch(TaskId::new("worker", 1), cid);
         // Fresh launch is within its registration grace.
         assert!(state.unregistered_task(Duration::from_secs(60)).is_none());
-        std::thread::sleep(Duration::from_millis(30));
+        clock.advance_ms(30);
         // Past the deadline with no registration -> flagged (this is the
-        // regression for the pre-registration wedge hang).
+        // regression for the pre-registration wedge hang).  Virtual time
+        // alone trips it: zero real sleeping.
         assert_eq!(
             state.unregistered_task(Duration::from_millis(1)),
             Some(TaskId::new("worker", 1))
@@ -1040,7 +1186,8 @@ mod tests {
                 },
             };
             handler.handle(AM_HEARTBEAT, &hb.to_bytes()).unwrap();
-            std::thread::sleep(Duration::from_millis(2));
+            // Real time: the registry's sample rate limit is wall-clock.
+            crate::util::clock::real_sleep(Duration::from_millis(2));
         }
         let pts = state.metrics_registry().task_points("worker:0", "step");
         assert!(!pts.is_empty(), "heartbeats must land in the registry");

@@ -71,7 +71,7 @@ impl ChaosInjector {
                     }
                     let version = am_state.spec_version();
                     if version == last_fired_version || phase != crate::am::JobPhase::Running {
-                        std::thread::sleep(Duration::from_millis(10));
+                        crate::util::clock::real_sleep(Duration::from_millis(10));
                         continue;
                     }
                     let step = am_state.chief_metrics().map(|m| m.step).unwrap_or(0);
@@ -116,7 +116,9 @@ impl ChaosInjector {
                             version_at_injection: version,
                         });
                     }
-                    std::thread::sleep(Duration::from_millis(10));
+                    // Chaos is a test harness watching real training
+                    // progress; its step-watch cadence stays real time.
+                    crate::util::clock::real_sleep(Duration::from_millis(10));
                 }
                 records
             })

@@ -147,7 +147,10 @@ impl TonyClient {
         // packaging the virtualenv/ML program for the cluster (§2.2).
         let staging = self.stage(&spec, conf)?;
 
-        let am_state = Arc::new(AmState::new(&spec));
+        // The AM's state shares the RM's clock so every deadline in the
+        // control plane (liveness, registration, recovery, fallback
+        // ticks) is drivable by one manual clock in tests.
+        let am_state = Arc::new(AmState::with_clock(&spec, self.rm.clock().clone()));
         let rm = self.rm.clone();
         let am_ctx_state = am_state.clone();
         let preset_dir = preset_dir.to_path_buf();

@@ -18,6 +18,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::util::clock::Clock;
+use crate::util::event::{tag, WakeupBus};
+
 use crate::am::protocol::*;
 use crate::framework::protocol::{new_metrics_cell, ClusterSpec, MetricsCell};
 use crate::framework::worker::{new_reconfig_cell, ReconfigCell};
@@ -40,6 +43,9 @@ pub struct ExecutorParams {
     pub preset_dir: PathBuf,
     pub task: TaskId,
     pub spec_version: u32,
+    /// The control-plane clock (inherited from the AM/RM) every executor
+    /// deadline runs on.
+    pub clock: Arc<dyn Clock>,
 }
 
 /// Executor main — the container entrypoint for every task container.
@@ -88,8 +94,11 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     if let Some(wedge) = params.job.conf.get("tony.chaos.wedge-preregister") {
         if wedge == params.task.to_string() {
             twarn!("executor", "{task} wedging pre-registration (chaos knob)");
+            let clock = params.clock.clone();
+            let wedge_bus = WakeupBus::for_clock(&clock);
+            ctx.kill_switch().register(&wedge_bus);
             while !ctx.killed() {
-                std::thread::sleep(Duration::from_millis(10));
+                wedge_bus.wait_until(&*clock, clock.now_ms().saturating_add(60_000));
             }
             return Ok(137);
         }
@@ -101,6 +110,13 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     );
     let kill = Arc::new(AtomicBool::new(false));
     let metrics: MetricsCell = new_metrics_cell();
+    let clock = params.clock.clone();
+    // The executor's monitor loop blocks on this bus: container kills,
+    // local stop/abort decisions from the heartbeat thread, and task
+    // completions all wake it at event time (the old loop re-polled all
+    // three every 2–20 ms).
+    let bus = WakeupBus::for_clock(&clock);
+    ctx.kill_switch().register(&bus);
 
     // ---- start the engine with only the artifacts this task needs ----
     let is_chief = task.job_type == WORKER && task.index == 0;
@@ -128,11 +144,16 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         let eng = engine.handle();
         let k = kill.clone();
         let m = metrics.clone();
+        let exit_bus = bus.clone();
         let handle = std::thread::Builder::new()
             .name(format!("task-ps-{index}"))
-            .spawn(move || ps::ps_main(index, n_ps, eng, k, m, move |p| {
-                let _ = port_tx.send(p);
-            }))
+            .spawn(move || {
+                let code = ps::ps_main(index, n_ps, eng, k, m, move |p| {
+                    let _ = port_tx.send(p);
+                });
+                exit_bus.notify(tag::TASK_EXIT);
+                code
+            })
             .context("spawning ps task")?;
         let p = port_rx
             .recv_timeout(Duration::from_secs(10))
@@ -185,6 +206,11 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     // launch version and advances as patched specs are adopted.
     let cur_version = Arc::new(AtomicU32::new(params.spec_version));
     let reconfig: ReconfigCell = new_reconfig_cell();
+    // Bus the heartbeat thread naps on between beats: a container kill
+    // or executor shutdown wakes it instantly, and a manual clock drives
+    // the beat cadence by advancing time.
+    let hb_bus = WakeupBus::for_clock(&clock);
+    ctx.kill_switch().register(&hb_bus);
     let hb_thread = {
         // Dedicated connection: the main thread's blocking GET_SPEC call
         // holds its connection for up to a second at a time, and heartbeats
@@ -200,7 +226,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         let cur_version = cur_version.clone();
         let reconfig = reconfig.clone();
         let job_metrics = params.job.metrics.clone();
-        let hb_every = Duration::from_millis(params.job.heartbeat_ms.max(5));
+        let hb_every_ms = params.job.heartbeat_ms.max(5);
         // The Reconfigure spec re-fetch runs on this thread, so it must
         // never block long enough for the AM to miss our heartbeats: cap
         // it at a quarter of the liveness budget.  The AM only sends
@@ -212,6 +238,9 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
             * params.job.max_missed_heartbeats as u64
             / 4)
         .clamp(50, 1000);
+        let clock = clock.clone();
+        let hb_bus = hb_bus.clone();
+        let monitor_bus = bus.clone();
         std::thread::Builder::new()
             .name(format!("hb-{task}"))
             .spawn(move || {
@@ -295,27 +324,36 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                                 AmCommand::Stop | AmCommand::Abort => {
                                     tdebug!("executor", "{task} commanded to stop");
                                     kill.store(true, Ordering::Relaxed);
+                                    monitor_bus.notify(tag::KILL);
                                 }
                             }
                         }
                         Err(e) => {
                             terror!("executor", "{task} lost AM: {e}");
                             kill.store(true, Ordering::Relaxed);
+                            monitor_bus.notify(tag::KILL);
                         }
                     }
-                    std::thread::sleep(hb_every);
+                    // Nap until the next beat is due.  Wakes in between
+                    // (kill switch, manual-clock advances, shutdown)
+                    // re-check the deadline, so the cadence holds even
+                    // when the bus is noisy — only `done` cuts it short.
+                    let next_beat = clock.now_ms().saturating_add(hb_every_ms);
+                    while !done.load(Ordering::Relaxed) && clock.now_ms() < next_beat {
+                        hb_bus.wait_until(&*clock, next_beat);
+                    }
                 }
             })
             .context("spawning heartbeat thread")?
     };
 
     // ---- fetch the global cluster spec (blocking with retry) ----
-    let spec_timeout =
-        Duration::from_millis(params.job.conf.get_u64("tony.task.spec-timeout-ms", 120_000));
-    let deadline = std::time::Instant::now() + spec_timeout;
+    let spec_timeout_ms = params.job.conf.get_u64("tony.task.spec-timeout-ms", 120_000);
+    let deadline = clock.now_ms().saturating_add(spec_timeout_ms);
     let spec = loop {
         if ctx.killed() || kill.load(Ordering::Relaxed) {
             hb_done.store(true, Ordering::Relaxed);
+            hb_bus.notify(tag::SHUTDOWN);
             let _ = hb_thread.join();
             let v = cur_version.load(Ordering::Relaxed);
             return finish(&am, params, v, 143, ps_handle, kill.clone(), Some(&metrics));
@@ -333,7 +371,17 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                 cur_version.store(spec.version as u32, Ordering::Relaxed);
                 break spec;
             }
-            Err(_) if std::time::Instant::now() < deadline => continue,
+            Err(_) if clock.now_ms() < deadline => {
+                // Pace the retry: `wait_spec` fails fast once the attempt
+                // is being torn down, so an unthrottled `continue` would
+                // hot-spin RPCs against the AM until our kill switch
+                // flips.  A short bus nap keeps the kill wakeup instant
+                // (tag::KILL lands on `bus`) without re-adding a poll
+                // floor to the happy path, where the server-side wait
+                // already blocks until the spec exists.
+                bus.wait_until(&*clock, clock.now_ms().saturating_add(50));
+                continue;
+            }
             Err(e) => return Err(anyhow!("cluster spec never completed: {e}")),
         }
     };
@@ -357,10 +405,15 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         };
         let name = format!("task-worker-{}", task.index);
         let _ = &tf_config; // env formally constructed above
+        let exit_bus = bus.clone();
         Some(
             std::thread::Builder::new()
                 .name(name)
-                .spawn(move || worker::worker_main(wctx))
+                .spawn(move || {
+                    let code = worker::worker_main(wctx);
+                    exit_bus.notify(tag::TASK_EXIT);
+                    code
+                })
                 .context("spawning worker task")?,
         )
     } else if task.job_type == EVALUATOR {
@@ -369,10 +422,15 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         let k = kill.clone();
         let m = metrics.clone();
         let index = task.index;
+        let exit_bus = bus.clone();
         Some(
             std::thread::Builder::new()
                 .name(format!("task-evaluator-{index}"))
-                .spawn(move || crate::framework::evaluator_main(index, eng, train, k, m))
+                .spawn(move || {
+                    let code = crate::framework::evaluator_main(index, eng, train, k, m);
+                    exit_bus.notify(tag::TASK_EXIT);
+                    code
+                })
                 .context("spawning evaluator task")?,
         )
     } else {
@@ -385,6 +443,13 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     let mut ps_handle = ps_handle;
 
     // ---- monitor loop (heartbeats flow from the hb thread) ----
+    // Event-driven: task exit wrappers, the kill switch, and the hb
+    // thread's stop/abort decisions all notify `bus`; the fallback tick
+    // only bounds how long a (hypothetical) missed event could linger.
+    // `tony.event.poll-mode` restores the old 2–20 ms poll for benches.
+    let fallback_ms = params.job.conf.get_u64("tony.executor.fallback-tick-ms", 250).max(1);
+    let poll_mode =
+        params.job.conf.get("tony.event.poll-mode").map(|v| v == "true").unwrap_or(false);
     let poll_every = Duration::from_millis(params.job.heartbeat_ms.clamp(2, 20));
     let exit_code: i32 = loop {
         // Container kill (AM teardown, node death, preemption).
@@ -401,9 +466,14 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                 break ps_handle.take().unwrap().join().unwrap_or(1);
             }
         }
-        std::thread::sleep(poll_every);
+        if poll_mode {
+            clock.sleep(poll_every);
+        } else {
+            bus.wait_until(&*clock, clock.now_ms().saturating_add(fallback_ms));
+        }
     };
     hb_done.store(true, Ordering::Relaxed);
+    hb_bus.notify(tag::SHUTDOWN);
     let _ = hb_thread.join();
     drop(port_guard);
 
@@ -503,7 +573,7 @@ fn start_task_ui(metrics: MetricsCell, kill: Arc<AtomicBool>) -> Result<String> 
                         );
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(50));
+                        crate::util::clock::real_sleep(Duration::from_millis(50));
                     }
                     Err(_) => break,
                 }

@@ -74,7 +74,8 @@ pub fn evaluator_main(
             }
             _ => {}
         }
-        std::thread::sleep(Duration::from_millis(50));
+        // Checkpoint-watch cadence (simulated child process, real time).
+        crate::util::clock::real_sleep(Duration::from_millis(50));
     }
     tdebug!("evaluator", "evaluator:{index} stopped cleanly");
     0

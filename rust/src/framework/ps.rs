@@ -324,7 +324,8 @@ pub fn ps_main(
     tdebug!("ps", "ps:{index} serving on {}", ps.addr());
     on_port(ps.addr().port);
     while !kill.load(Ordering::Relaxed) {
-        std::thread::sleep(Duration::from_millis(20));
+        // Simulated child-process cadence (metrics refresh), real time.
+        crate::util::clock::real_sleep(Duration::from_millis(20));
         let mut m = metrics.lock().unwrap();
         m.updates_applied = ps.applied_updates();
         m.mem_used_mb = {

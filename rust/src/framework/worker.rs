@@ -302,7 +302,9 @@ fn ps_op<T>(
                 if Instant::now() >= deadline {
                     return Err(e).with_context(|| format!("{what} at step {step}"));
                 }
-                std::thread::sleep(Duration::from_millis(20));
+                // Transport retry backoff (data plane, real time): a
+                // replacement PS is seconds away, re-dial shortly.
+                crate::util::clock::real_sleep(Duration::from_millis(20));
             }
         }
     }

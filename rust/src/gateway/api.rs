@@ -214,7 +214,7 @@ impl GatewayApi {
                             .spawn(move || handle(&g, &mut stream));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(10));
+                        crate::util::clock::real_sleep(Duration::from_millis(10));
                     }
                     Err(e) => {
                         twarn!("gateway", "api accept error: {e}");
@@ -297,7 +297,9 @@ pub fn wait_remote(gateway: &str, id: u64, timeout: Duration) -> Result<(String,
         if std::time::Instant::now() > deadline {
             anyhow::bail!("timed out waiting for job {id} (last state {state})");
         }
-        std::thread::sleep(Duration::from_millis(100));
+        // Remote HTTP polling: the gateway is another process from this
+        // client's point of view, so real-time polling is all there is.
+        crate::util::clock::real_sleep(Duration::from_millis(100));
     }
 }
 

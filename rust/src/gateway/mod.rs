@@ -61,7 +61,6 @@ pub use queue::{PendingQueue, PushError};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -71,6 +70,8 @@ use crate::client::{SubmitOpts, TonyClient};
 use crate::history::{HistoryStore, JobRecord};
 use crate::json::Json;
 use crate::tonyconf::JobSpec;
+use crate::util::clock::Clock;
+use crate::util::event::{tag, WakeupBus};
 use crate::util::ids::ApplicationId;
 use crate::xmlconf::Configuration;
 use crate::yarn::{AppState, Resource, ResourceManager};
@@ -201,9 +202,14 @@ pub struct Gateway {
     queue: PendingQueue,
     history: HistoryStore,
     inner: Mutex<GwInner>,
-    stop: AtomicBool,
     api_url: Mutex<Option<String>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Clock shared with the RM: every gateway deadline runs on it.
+    clock: Arc<dyn Clock>,
+    /// Notified (`tag::STATE`) on every job-state transition;
+    /// `wait_idle` / `wait_for_state` waiters ride its sequence instead
+    /// of polling the job table every 10 ms.
+    events: Arc<WakeupBus>,
 }
 
 impl Gateway {
@@ -213,6 +219,8 @@ impl Gateway {
     pub fn start(rm: Arc<ResourceManager>, conf: GatewayConf) -> Result<Arc<Gateway>> {
         crate::runtime::synthetic::ensure_preset(&conf.artifacts_dir)
             .context("preparing artifacts for the gateway")?;
+        let clock = rm.clock().clone();
+        let events = WakeupBus::for_clock(&clock);
         let gw = Arc::new(Gateway {
             rm,
             admission: AdmissionController::new(conf.quotas.clone()),
@@ -226,9 +234,10 @@ impl Gateway {
                 user_resources: BTreeMap::new(),
                 stats: GatewayStats::default(),
             }),
-            stop: AtomicBool::new(false),
             api_url: Mutex::new(None),
             workers: Mutex::new(Vec::new()),
+            clock,
+            events,
             conf,
         });
         let n = gw.conf.workers.max(1);
@@ -249,6 +258,23 @@ impl Gateway {
 
     pub fn rm(&self) -> &Arc<ResourceManager> {
         &self.rm
+    }
+
+    /// The gateway's job-state event bus (`tag::STATE` per transition).
+    pub fn events(&self) -> &Arc<WakeupBus> {
+        &self.events
+    }
+
+    /// Live AM states of currently running jobs, `(job id, state)` —
+    /// the observability handle `/metrics` aggregation uses, exposed for
+    /// benches/tests that measure monitor-loop behaviour directly.
+    pub fn live_am_states(&self) -> Vec<(u64, Arc<crate::am::AmState>)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .jobs
+            .values()
+            .filter_map(|j| j.live.as_ref().map(|s| (j.id, s.clone())))
+            .collect()
     }
 
     pub fn history(&self) -> &HistoryStore {
@@ -420,7 +446,13 @@ impl Gateway {
             JobState::Pending => {
                 job.kill_requested = true;
                 if self.queue.remove(id) {
+                    let ident = (job.user.clone(), job.name.clone(), job.queue.clone());
                     self.finalize_locked(&mut inner, id, JobState::Killed, "killed while queued", 0);
+                    drop(inner);
+                    // Even a job that never ran leaves a terminal history
+                    // record (regression: these used to vanish from the
+                    // durable record entirely).
+                    self.record_unran(id, ident, 0, 0, "killed while queued");
                     Some(JobState::Killed)
                 } else {
                     // A worker already popped it; the flag is honored there.
@@ -463,30 +495,57 @@ impl Gateway {
     }
 
     /// Wait until every tracked job reached a terminal state.
+    /// Notification-driven: wakes on each job-state transition (including
+    /// those finalized by `shutdown`'s drain), so it returns at event
+    /// time and coexists race-free with a concurrent `shutdown()`.
     pub fn wait_idle(&self, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
+        let deadline = self.clock.deadline_after(timeout);
         loop {
+            // Seq before predicate: a transition landing in between bumps
+            // the sequence and the wait returns immediately.
+            let seen = self.events.seq();
             {
                 let inner = self.inner.lock().unwrap();
                 if inner.jobs.values().all(|j| j.state.is_terminal()) {
                     return true;
                 }
             }
-            if Instant::now() > deadline {
+            if self.clock.now_ms() >= deadline {
                 return false;
             }
-            std::thread::sleep(Duration::from_millis(10));
+            self.events.wait_seq(&*self.clock, seen, deadline);
         }
     }
 
-    /// Stop accepting work, drain the workers, and join them.
+    /// Block until job `id` reaches `want` or any terminal state
+    /// (whichever first), or until `timeout`.  Returns the state
+    /// observed; `None` for an unknown id.  Event-driven like
+    /// [`Gateway::wait_idle`].
+    pub fn wait_for_state(&self, id: u64, want: JobState, timeout: Duration) -> Option<JobState> {
+        let deadline = self.clock.deadline_after(timeout);
+        loop {
+            let seen = self.events.seq();
+            let cur = self.job_state(id)?;
+            if cur == want || cur.is_terminal() || self.clock.now_ms() >= deadline {
+                return Some(cur);
+            }
+            self.events.wait_seq(&*self.clock, seen, deadline);
+        }
+    }
+
+    /// Stop accepting work, drain the workers, and join them.  Closing
+    /// the queue wakes every idle worker immediately (they block in
+    /// `pop_wait`, not on a poll), each drains what was already accepted,
+    /// and every resulting transition notifies `wait_idle` waiters — so
+    /// shutdown racing a pending→running transition neither hangs nor
+    /// loses a job.
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::Relaxed);
         self.queue.close();
         let handles = std::mem::take(&mut *self.workers.lock().unwrap());
         for h in handles {
             let _ = h.join();
         }
+        self.events.notify(tag::SHUTDOWN | tag::STATE);
     }
 
     // ---------------- JSON views (served by api.rs) ----------------
@@ -657,17 +716,11 @@ impl Gateway {
     }
 
     fn worker_loop(&self) {
-        while !self.stop.load(Ordering::Relaxed) {
-            let Some(id) = self.queue.pop_timeout(Duration::from_millis(100)) else {
-                if self.queue.is_empty() && self.stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                continue;
-            };
-            self.run_job(id);
-        }
-        // Drain: finish what was already queued before shutdown.
-        while let Some(id) = self.queue.pop_timeout(Duration::from_millis(1)) {
+        // Blocking pop: an idle worker costs zero CPU (the old loop woke
+        // every 100 ms per worker just to re-check a flag).  `pop_wait`
+        // returns `None` only once the queue is closed AND drained, so
+        // shutdown still finishes everything accepted before the close.
+        while let Some(id) = self.queue.pop_wait() {
             self.run_job(id);
         }
     }
@@ -676,16 +729,22 @@ impl Gateway {
     /// failed applications up to `max_submit_attempts`, and record the
     /// outcome in the history store.
     fn run_job(&self, id: u64) {
-        let conf = {
+        let (conf, ident) = {
             let mut inner = self.inner.lock().unwrap();
             let Some(job) = inner.jobs.get_mut(&id) else { return };
+            let ident = (job.user.clone(), job.name.clone(), job.queue.clone());
             if job.kill_requested {
                 self.finalize_locked(&mut inner, id, JobState::Killed, "killed before start", 0);
+                drop(inner);
+                self.record_unran(id, ident, 0, 0, "killed before start");
                 return;
             }
             job.state = JobState::Running;
-            job.conf.clone()
+            (job.conf.clone(), ident)
         };
+        // Pending -> Running is an event `wait_for_state` watchers (and
+        // the submit->RUNNING latency bench) observe at wakeup time.
+        self.events.notify(tag::STATE);
 
         let t0 = Instant::now();
         let max_attempts = self.conf.max_submit_attempts.max(1);
@@ -780,28 +839,37 @@ impl Gateway {
         if !recorded {
             // The application never produced a report (e.g. submission
             // itself failed) — still leave a trace in the history store.
-            let (user, name, queue) = {
-                let inner = self.inner.lock().unwrap();
-                inner
-                    .jobs
-                    .get(&id)
-                    .map(|j| (j.user.clone(), j.name.clone(), j.queue.clone()))
-                    .unwrap_or_default()
-            };
-            let _ = self.history.record(&JobRecord {
-                app_id: format!("gateway-job-{id:06}"),
-                name,
-                queue,
-                succeeded: false,
-                attempts: attempt,
-                wall_ms,
-                diagnostics: format!("[user {user}] {detail}"),
-                tasks: Vec::new(),
-                series: Json::obj(),
-            });
+            self.record_unran(id, ident, attempt, wall_ms, &detail);
         }
         let mut inner = self.inner.lock().unwrap();
         self.finalize_locked(&mut inner, id, final_state, &detail, wall_ms);
+    }
+
+    /// Durable trace for a job that never produced an application report
+    /// (killed while queued / before start, or submission failure): every
+    /// terminal job leaves a history record, run or not.  The caller
+    /// captures `(user, name, queue)` under the job-table lock *before*
+    /// the job terminalizes — once terminal, a concurrent submit's
+    /// `prune_locked` may evict the entry and the identity would be gone.
+    fn record_unran(
+        &self,
+        id: u64,
+        (user, name, queue): (String, String, String),
+        attempts: u32,
+        wall_ms: u64,
+        detail: &str,
+    ) {
+        let _ = self.history.record(&JobRecord {
+            app_id: format!("gateway-job-{id:06}"),
+            name,
+            queue,
+            succeeded: false,
+            attempts,
+            wall_ms,
+            diagnostics: format!("[user {user}] {detail}"),
+            tasks: Vec::new(),
+            series: Json::obj(),
+        });
     }
 
     /// Terminalize a job and release its quota bookkeeping.  Idempotent:
@@ -841,6 +909,9 @@ impl Gateway {
             _ => inner.stats.failed += 1,
         }
         tinfo!("gateway", "job {id} -> {} ({detail})", state.as_str());
+        // Terminalization wakes wait_idle / wait_for_state / kill
+        // watchers at event time.
+        self.events.notify(tag::STATE);
     }
 }
 
@@ -944,11 +1015,12 @@ mod tests {
         };
         // The queued job dies immediately.
         assert_eq!(gw.kill(queued), Some(JobState::Killed));
-        // Wait for the first to actually start, then kill it.
-        let deadline = Instant::now() + Duration::from_secs(30);
-        while gw.job_state(run) == Some(JobState::Pending) && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(10));
-        }
+        // Wait for the first to actually start (notification-driven),
+        // then kill it.
+        assert_eq!(
+            gw.wait_for_state(run, JobState::Running, Duration::from_secs(30)),
+            Some(JobState::Running)
+        );
         gw.kill(run);
         assert!(gw.wait_idle(Duration::from_secs(60)), "killed job never settled");
         assert_eq!(gw.job_state(run), Some(JobState::Killed));
@@ -956,5 +1028,62 @@ mod tests {
             assert_eq!(free, cap, "capacity leaked after kill");
         }
         gw.shutdown();
+    }
+
+    /// Regression for the shutdown() vs wait_idle() race: a shutdown
+    /// issued while one job is mid-flight and another is still pending
+    /// must (a) not hang either call, (b) terminalize every job, and
+    /// (c) leave a terminal history record even for jobs that never ran
+    /// (killed while queued) — those used to vanish from history.
+    #[test]
+    fn shutdown_during_pending_to_running_keeps_history_and_drains() {
+        let rm = crate::yarn::ResourceManager::start_uniform(2, Resource::new(4096, 8, 0));
+        let mut conf = test_conf("race");
+        conf.workers = 1; // serialize: later jobs stay queued
+        let gw = Gateway::start(rm, conf).unwrap();
+        let SubmitOutcome::Accepted { id: running } =
+            gw.submit_conf("alice", 5, job_xml("busy", 30))
+        else {
+            panic!()
+        };
+        let SubmitOutcome::Accepted { id: queued } = gw.submit_conf("bob", 1, job_xml("q1", 2))
+        else {
+            panic!()
+        };
+        let SubmitOutcome::Accepted { id: doomed } = gw.submit_conf("carol", 1, job_xml("q2", 2))
+        else {
+            panic!()
+        };
+        // Kill one job while it is still queued: terminal immediately AND
+        // it must leave a history record.
+        assert_eq!(gw.kill(doomed), Some(JobState::Killed));
+
+        // Shutdown from another thread while the pending->running
+        // transitions are in flight; wait_idle concurrently from here.
+        let gw2 = gw.clone();
+        let shut = std::thread::spawn(move || gw2.shutdown());
+        assert!(
+            gw.wait_idle(Duration::from_secs(120)),
+            "wait_idle hung across a concurrent shutdown: {:?}",
+            gw.live_counts()
+        );
+        shut.join().unwrap();
+
+        for id in [running, queued, doomed] {
+            let state = gw.job_state(id).unwrap();
+            assert!(state.is_terminal(), "job {id} not terminal: {state:?}");
+        }
+        assert_eq!(gw.job_state(doomed), Some(JobState::Killed));
+        // Every job left a durable record: the two that ran under their
+        // app ids, the killed-while-queued one under its gateway id.
+        let ids = gw.history().list().unwrap();
+        assert_eq!(ids.len(), 3, "history records: {ids:?}");
+        assert!(
+            ids.iter().any(|i| i.starts_with("gateway-job-")),
+            "killed-before-run job missing from history: {ids:?}"
+        );
+        for (_, free, cap) in gw.rm().node_usage() {
+            assert_eq!(free, cap, "capacity leaked");
+        }
     }
 }

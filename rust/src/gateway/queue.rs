@@ -111,6 +111,25 @@ impl PendingQueue {
         }
     }
 
+    /// Pop the highest-priority, oldest job, blocking indefinitely on the
+    /// queue's condvar — zero idle CPU, woken by push or close.  Returns
+    /// `None` only once the queue is closed *and* drained, so a worker
+    /// loop `while let Some(id) = q.pop_wait()` serves until shutdown and
+    /// still finishes everything accepted before the close.
+    pub fn pop_wait(&self) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let head = inner.entries.keys().next().copied();
+            if let Some(key) = head {
+                return inner.entries.remove(&key);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
     /// Remove a specific pending job (kill-before-run).  Returns whether
     /// it was still queued.
     pub fn remove(&self, job: u64) -> bool {
@@ -180,7 +199,7 @@ mod tests {
         let q = Arc::new(PendingQueue::new(4));
         let q2 = q.clone();
         let t = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
-        std::thread::sleep(Duration::from_millis(20));
+        crate::util::clock::real_sleep(Duration::from_millis(20));
         q.close();
         assert_eq!(t.join().unwrap(), None);
         assert_eq!(q.try_push(1, 1), Err(PushError::Closed));
@@ -193,5 +212,18 @@ mod tests {
         q.close();
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(9));
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_push_and_drains_through_close() {
+        let q = Arc::new(PendingQueue::new(4));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || (q2.pop_wait(), q2.pop_wait(), q2.pop_wait()));
+        q.try_push(1, 1).unwrap();
+        q.try_push(1, 2).unwrap();
+        q.close();
+        // The waiter gets both queued jobs, then None once drained+closed.
+        assert_eq!(t.join().unwrap(), (Some(1), Some(2), None));
+        assert_eq!(q.pop_wait(), None, "closed+empty returns immediately");
     }
 }

@@ -329,7 +329,9 @@ fn main() {
             println!("  GET    {}/metrics  (Prometheus, all running jobs)", api.url());
             println!("submit with: tony submit --gateway {} --conf job.xml", api.addr);
             loop {
-                std::thread::sleep(Duration::from_secs(3600));
+                // Serve forever; the daemon is fully event-driven, so the
+                // main thread just parks.
+                std::thread::park();
             }
         }
         "demo" => {

@@ -560,7 +560,7 @@ mod tests {
     fn queue_series_and_json_shape() {
         let reg = Registry::new(8, 1);
         reg.observe_queue("ml", 0.25, Resource::new(2048, 4, 1), 3);
-        std::thread::sleep(std::time::Duration::from_millis(2));
+        crate::util::clock::real_sleep(std::time::Duration::from_millis(2));
         reg.observe_queue("ml", 0.5, Resource::new(4096, 8, 2), 0);
         let j = reg.series_json();
         let util = j.at(&["queues", "ml", "utilization"]).and_then(|a| a.as_arr()).unwrap();

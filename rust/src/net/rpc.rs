@@ -146,7 +146,7 @@ impl RpcServer {
                                 });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
+                            crate::util::clock::real_sleep(Duration::from_millis(2));
                         }
                         Err(_) => break,
                     }
@@ -374,7 +374,7 @@ mod tests {
         let addr = srv.addr();
         srv.shutdown();
         drop(srv);
-        std::thread::sleep(Duration::from_millis(50));
+        crate::util::clock::real_sleep(Duration::from_millis(50));
         // Either connect fails or the first call fails — both acceptable.
         match RpcClient::connect(&addr) {
             Err(_) => {}

@@ -353,7 +353,7 @@ impl Portal {
                         }
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(20));
+                        crate::util::clock::real_sleep(Duration::from_millis(20));
                     }
                     Err(_) => break,
                 }

@@ -1,15 +1,44 @@
 //! Clock abstraction: real time for daemons, manual time for deterministic
 //! scheduler / liveness-expiry unit tests.
+//!
+//! This file is also the **only** place in `rust/src/` allowed to call
+//! `std::thread::sleep` (CI greps for strays): control-plane code blocks
+//! on [`crate::util::event::WakeupBus`] waits bounded by clock deadlines,
+//! and the handful of genuinely real-time paths (non-blocking accept
+//! backoff, simulated child-task cadences, remote HTTP polling) route
+//! through [`real_sleep`] so every such site is explicit and auditable.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use super::event::{tag, WakerSet, WakeupBus};
 
 /// Milliseconds-since-start monotonic clock.
 pub trait Clock: Send + Sync {
     fn now_ms(&self) -> u64;
     /// Sleep (real clocks) or no-op (manual clocks, which tests advance).
     fn sleep(&self, d: Duration);
+    /// Register a wakeup bus with this clock.  Manual clocks notify every
+    /// registered bus (`tag::TICK`) when time advances, so deadline waits
+    /// re-check virtual time immediately; real clocks need no hook.
+    fn register_bus(&self, _bus: &Arc<WakeupBus>) {}
+
+    /// `now_ms() + d`, saturating at both the `u128→u64` narrowing and
+    /// the addition — the one audited home for turning a `Duration`
+    /// timeout into an absolute clock deadline.
+    fn deadline_after(&self, d: Duration) -> u64 {
+        self.now_ms().saturating_add(d.as_millis().min(u64::MAX as u128) as u64)
+    }
+}
+
+/// Real-time sleep for the few paths that are *about* wall time rather
+/// than control-plane events: non-blocking accept-loop backoff, simulated
+/// child-task poll cadences (the stand-ins for real child processes),
+/// remote-HTTP client polling, and timing-sensitive tests.  Lives here so
+/// the CI no-stray-sleep grep has exactly one allowed home.
+pub fn real_sleep(d: Duration) {
+    std::thread::sleep(d);
 }
 
 /// Wall-clock-backed implementation.
@@ -43,14 +72,19 @@ impl Clock for SystemClock {
     }
 }
 
-/// Manually-advanced clock for deterministic tests.
+/// Manually-advanced clock for deterministic tests.  Advancing time
+/// notifies every bus registered via [`Clock::register_bus`], which is
+/// what lets event-driven liveness paths (registration deadlines,
+/// recovery timeouts, fallback ticks) fire under test control with zero
+/// real sleeping.
 pub struct ManualClock {
     now: AtomicU64,
+    wakers: WakerSet,
 }
 
 impl ManualClock {
     pub fn new() -> Self {
-        ManualClock { now: AtomicU64::new(0) }
+        ManualClock { now: AtomicU64::new(0), wakers: WakerSet::new() }
     }
 
     pub fn shared() -> Arc<ManualClock> {
@@ -59,10 +93,12 @@ impl ManualClock {
 
     pub fn advance_ms(&self, ms: u64) {
         self.now.fetch_add(ms, Ordering::SeqCst);
+        self.wakers.notify_all(tag::TICK);
     }
 
     pub fn set_ms(&self, ms: u64) {
         self.now.store(ms, Ordering::SeqCst);
+        self.wakers.notify_all(tag::TICK);
     }
 }
 
@@ -78,6 +114,10 @@ impl Clock for ManualClock {
     }
 
     fn sleep(&self, _d: Duration) {}
+
+    fn register_bus(&self, bus: &Arc<WakeupBus>) {
+        self.wakers.register(bus);
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +141,17 @@ mod tests {
         c.sleep(Duration::from_millis(2));
         let b = c.now_ms();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_advance_notifies_registered_buses() {
+        let clock = ManualClock::shared();
+        let as_dyn: Arc<dyn Clock> = clock.clone();
+        let bus = WakeupBus::for_clock(&as_dyn);
+        clock.advance_ms(10);
+        assert_eq!(bus.take(), tag::TICK, "advance wakes registered buses");
+        // Dropped buses are pruned, not notified.
+        drop(bus);
+        clock.advance_ms(1); // must not panic on the dead weak ref
     }
 }

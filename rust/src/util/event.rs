@@ -1,0 +1,442 @@
+//! The event layer of the control plane: a [`WakeupBus`] (condvar-backed
+//! notifier with typed event tags) and a [`TimerWheel`] driven by the
+//! [`Clock`] trait.
+//!
+//! Together they replace the fixed-interval sleep-poll loops that used to
+//! put a 10–20 ms floor under every control-plane reaction (RM grant →
+//! AM launch, task exit → recovery, job finish → client wakeup): a
+//! producer calls [`WakeupBus::notify`] at the moment something happens,
+//! and the consumer blocked in [`WakeupBus::wait_until`] wakes at event
+//! time.  Deadlines (registration timeouts, liveness budgets, fallback
+//! ticks) are armed on the wheel, whose next deadline bounds the wait.
+//!
+//! Determinism: every bus is registered with its [`Clock`] (see
+//! [`Clock::register_bus`]); a [`crate::util::ManualClock`] notifies its
+//! registered buses whenever a test advances time, so deadline waits
+//! re-check virtual time without any real sleeping.  This is what lets
+//! liveness paths (registration deadline, recovery timeout, gateway
+//! drain) run under a manual clock with zero `thread::sleep`.
+//!
+//! Concurrency contract: [`WakeupBus::wait_until`] *drains* the pending
+//! tag mask and therefore belongs to exactly one consumer thread per bus
+//! (the AM monitor loop, the executor monitor loop, ...).  Any number of
+//! additional threads may use the non-draining [`WakeupBus::wait_seq`],
+//! which only observes the monotonic notification sequence (the RM's
+//! `wait_for_completion` waiters, gateway `wait_idle`, spec long-polls).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::clock::Clock;
+
+/// Typed event tags.  Events coalesce into a bit mask — a thousand
+/// heartbeats between two consumer wakeups cost one set bit, which is
+/// why the bus needs no queue (and no queue cap) to stay O(1) per event.
+pub mod tag {
+    /// A timer fired, the fallback tick elapsed, or a manual clock advanced.
+    pub const TICK: u32 = 1 << 0;
+    /// The RM granted container(s) to the waiter's application.
+    pub const GRANT: u32 = 1 << 1;
+    /// Completed-container statuses are ready to collect.
+    pub const COMPLETED: u32 = 1 << 2;
+    /// A task executor registered its endpoint.
+    pub const REGISTERED: u32 = 1 << 3;
+    /// A heartbeat advanced meaningful state (e.g. a spec-version ack).
+    pub const HEARTBEAT: u32 = 1 << 4;
+    /// A task reported its final exit status.
+    pub const TASK_EXIT: u32 = 1 << 5;
+    /// The cluster spec was (re)built.
+    pub const SPEC: u32 = 1 << 6;
+    /// An application/job changed state.
+    pub const STATE: u32 = 1 << 7;
+    /// A kill switch was flipped.
+    pub const KILL: u32 = 1 << 8;
+    /// The owning daemon is shutting down.
+    pub const SHUTDOWN: u32 = 1 << 9;
+
+    /// Human-readable rendering of a tag mask (diagnostics/log lines).
+    pub fn names(mask: u32) -> String {
+        const ALL: [(u32, &str); 10] = [
+            (TICK, "tick"),
+            (GRANT, "grant"),
+            (COMPLETED, "completed"),
+            (REGISTERED, "registered"),
+            (HEARTBEAT, "heartbeat"),
+            (TASK_EXIT, "task-exit"),
+            (SPEC, "spec"),
+            (STATE, "state"),
+            (KILL, "kill"),
+            (SHUTDOWN, "shutdown"),
+        ];
+        let parts: Vec<&str> =
+            ALL.iter().filter(|(bit, _)| mask & bit != 0).map(|(_, n)| *n).collect();
+        if parts.is_empty() { "none".to_string() } else { parts.join("|") }
+    }
+}
+
+/// Upper bound on one condvar nap.  A safety backstop only: a bus whose
+/// producer forgets a notify (or that was never registered with a manual
+/// clock) degrades to a 1 Hz re-check instead of hanging forever.
+const MAX_NAP: Duration = Duration::from_millis(1000);
+
+struct BusInner {
+    /// Monotonic notification counter ([`WakeupBus::wait_seq`] observes it).
+    seq: u64,
+    /// Coalesced tags not yet drained by the consumer.
+    pending: u32,
+}
+
+/// Condvar-backed wakeup notifier with typed, coalescing event tags.
+pub struct WakeupBus {
+    inner: Mutex<BusInner>,
+    cv: Condvar,
+}
+
+impl Default for WakeupBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WakeupBus {
+    pub fn new() -> WakeupBus {
+        WakeupBus { inner: Mutex::new(BusInner { seq: 0, pending: 0 }), cv: Condvar::new() }
+    }
+
+    /// New bus already registered with `clock` (manual clocks will wake
+    /// it on every time advance).  The normal way to create one.
+    pub fn for_clock(clock: &Arc<dyn Clock>) -> Arc<WakeupBus> {
+        let bus = Arc::new(WakeupBus::new());
+        clock.register_bus(&bus);
+        bus
+    }
+
+    /// Publish events: OR `tags` into the pending mask, bump the
+    /// sequence, and wake every waiter.  O(1); never blocks on consumers.
+    pub fn notify(&self, tags: u32) {
+        debug_assert!(tags != 0, "notify with empty tag mask");
+        let mut g = self.inner.lock().unwrap();
+        g.seq += 1;
+        g.pending |= tags;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Drain pending tags without waiting.
+    pub fn take(&self) -> u32 {
+        std::mem::take(&mut self.inner.lock().unwrap().pending)
+    }
+
+    /// Current notification sequence (pair with [`WakeupBus::wait_seq`]:
+    /// capture the seq *before* checking your predicate, so a notify
+    /// landing between check and wait is never lost).
+    pub fn seq(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Single-consumer wait: block until any tag is pending or
+    /// `clock.now_ms() >= deadline_ms`, then drain and return the pending
+    /// mask (0 = deadline reached with no events).
+    pub fn wait_until(&self, clock: &dyn Clock, deadline_ms: u64) -> u32 {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.pending != 0 {
+                return std::mem::take(&mut g.pending);
+            }
+            let now = clock.now_ms();
+            if now >= deadline_ms {
+                return 0;
+            }
+            let nap = Duration::from_millis(deadline_ms - now).min(MAX_NAP);
+            let (ng, _) = self.cv.wait_timeout(g, nap).unwrap();
+            g = ng;
+        }
+    }
+
+    /// Multi-waiter wait: block until the notification sequence moves
+    /// past `seen` or the deadline passes.  Returns the latest sequence.
+    /// Never touches the pending mask, so any number of predicate loops
+    /// can share a bus with its draining consumer.
+    pub fn wait_seq(&self, clock: &dyn Clock, seen: u64, deadline_ms: u64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.seq != seen {
+                return g.seq;
+            }
+            let now = clock.now_ms();
+            if now >= deadline_ms {
+                return g.seq;
+            }
+            let nap = Duration::from_millis(deadline_ms - now).min(MAX_NAP);
+            let (ng, _) = self.cv.wait_timeout(g, nap).unwrap();
+            g = ng;
+        }
+    }
+}
+
+/// A registry of weakly-held wakeup buses: one producer-side notify
+/// fan-out, shared by every "flip a flag and wake the registered
+/// waiters" site (manual-clock advances, kill switches) so the
+/// retain/upgrade/prune pattern has a single audited home.
+#[derive(Default)]
+pub struct WakerSet {
+    wakers: Mutex<Vec<std::sync::Weak<WakeupBus>>>,
+}
+
+impl WakerSet {
+    pub fn new() -> WakerSet {
+        WakerSet::default()
+    }
+
+    /// Register a bus to be notified on [`WakerSet::notify_all`].
+    pub fn register(&self, bus: &Arc<WakeupBus>) {
+        self.wakers.lock().unwrap().push(Arc::downgrade(bus));
+    }
+
+    /// Notify every registered (and still-alive) bus with `tags`,
+    /// pruning dropped ones.
+    pub fn notify_all(&self, tags: u32) {
+        let mut wakers = self.wakers.lock().unwrap();
+        wakers.retain(|w| match w.upgrade() {
+            Some(bus) => {
+                bus.notify(tags);
+                true
+            }
+            None => false,
+        });
+    }
+}
+
+/// Handle to one armed timer (cancelable until it fires).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TimerId(u64);
+
+/// One fired timer, as reported by [`TimerWheel::poll`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fired {
+    pub id: TimerId,
+    pub deadline_ms: u64,
+    pub tags: u32,
+}
+
+struct WheelInner {
+    /// (deadline, id) → tags; BTreeMap iteration order IS firing order.
+    entries: BTreeMap<(u64, u64), u32>,
+    /// id → deadline, for O(log n) cancellation.
+    by_id: HashMap<u64, u64>,
+    next_id: u64,
+}
+
+/// Deadline collection driven by a [`Clock`]: arm absolute/relative
+/// deadlines, cancel them, ask for the next one (to bound an event
+/// wait), and [`TimerWheel::poll`] everything due.
+///
+/// Capacity-bounded: arming past `capacity` fails (returns `None`) so a
+/// timer leak surfaces as a loud failure instead of unbounded memory —
+/// the `tony.event.timer-capacity` key sizes it.
+pub struct TimerWheel {
+    clock: Arc<dyn Clock>,
+    inner: Mutex<WheelInner>,
+    capacity: usize,
+}
+
+impl TimerWheel {
+    pub fn new(clock: Arc<dyn Clock>, capacity: usize) -> TimerWheel {
+        TimerWheel {
+            clock,
+            inner: Mutex::new(WheelInner {
+                entries: BTreeMap::new(),
+                by_id: HashMap::new(),
+                next_id: 1,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Arm a timer at absolute clock time `deadline_ms` carrying `tags`.
+    /// `None` when the wheel is at capacity.
+    pub fn arm_at(&self, deadline_ms: u64, tags: u32) -> Option<TimerId> {
+        let mut g = self.inner.lock().unwrap();
+        if g.entries.len() >= self.capacity {
+            return None;
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.entries.insert((deadline_ms, id), tags);
+        g.by_id.insert(id, deadline_ms);
+        Some(TimerId(id))
+    }
+
+    /// Arm a timer `delay_ms` from now.
+    pub fn arm(&self, delay_ms: u64, tags: u32) -> Option<TimerId> {
+        self.arm_at(self.clock.now_ms().saturating_add(delay_ms), tags)
+    }
+
+    /// Cancel an armed timer.  False when it already fired or never existed.
+    pub fn cancel(&self, id: TimerId) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.by_id.remove(&id.0) {
+            Some(deadline) => g.entries.remove(&(deadline, id.0)).is_some(),
+            None => false,
+        }
+    }
+
+    /// Earliest armed deadline (bound your event wait with it).
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.inner.lock().unwrap().entries.keys().next().map(|(d, _)| *d)
+    }
+
+    /// Remove and return everything due at `clock.now_ms()`, in deadline
+    /// order (ties fire in arm order).  Same-deadline entries coalesce
+    /// into one poll result.
+    pub fn poll(&self) -> Vec<Fired> {
+        let now = self.clock.now_ms();
+        let mut g = self.inner.lock().unwrap();
+        let mut fired = Vec::new();
+        while let Some((&(deadline, id), &tags)) = g.entries.iter().next() {
+            if deadline > now {
+                break;
+            }
+            g.entries.remove(&(deadline, id));
+            g.by_id.remove(&id);
+            fired.push(Fired { id: TimerId(id), deadline_ms: deadline, tags });
+        }
+        fired
+    }
+
+    /// OR of every due timer's tags (the common "wake hint" form).
+    pub fn poll_tags(&self) -> u32 {
+        self.poll().iter().fold(0, |acc, f| acc | f.tags)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+
+    fn manual() -> (Arc<ManualClock>, Arc<dyn Clock>) {
+        let m = ManualClock::shared();
+        let c: Arc<dyn Clock> = m.clone();
+        (m, c)
+    }
+
+    #[test]
+    fn bus_notify_drains_and_coalesces() {
+        let (_, clock) = manual();
+        let bus = WakeupBus::for_clock(&clock);
+        bus.notify(tag::GRANT);
+        bus.notify(tag::GRANT | tag::TASK_EXIT);
+        // Coalesced into one mask; wait returns instantly, no clock needed.
+        assert_eq!(bus.wait_until(&*clock, 0), tag::GRANT | tag::TASK_EXIT);
+        assert_eq!(bus.take(), 0, "drained");
+        // Deadline already passed and nothing pending -> 0.
+        assert_eq!(bus.wait_until(&*clock, 0), 0);
+    }
+
+    #[test]
+    fn bus_wait_until_honors_manual_deadline_without_sleeping() {
+        let (m, clock) = manual();
+        let bus = WakeupBus::for_clock(&clock);
+        let b = bus.clone();
+        let c = clock.clone();
+        let t = std::thread::spawn(move || b.wait_until(&*c, 500));
+        // Advancing the manual clock wakes the waiter (no tags pending):
+        // it re-checks virtual time and returns 0 on deadline.  The TICK
+        // the clock injects is drained as part of the same wake.
+        m.advance_ms(500);
+        let got = t.join().unwrap();
+        assert!(got == 0 || got == tag::TICK, "deadline return, got {got:#b}");
+        assert_eq!(clock.now_ms(), 500);
+    }
+
+    #[test]
+    fn bus_wait_seq_wakes_on_notify_and_never_drains() {
+        let (_, clock) = manual();
+        let bus = WakeupBus::for_clock(&clock);
+        let seen = bus.seq();
+        let b = bus.clone();
+        let c = clock.clone();
+        let t = std::thread::spawn(move || b.wait_seq(&*c, seen, u64::MAX));
+        bus.notify(tag::STATE);
+        assert_eq!(t.join().unwrap(), seen + 1);
+        // Pending mask untouched by seq waiters: the drainer still sees it.
+        assert_eq!(bus.take(), tag::STATE);
+    }
+
+    #[test]
+    fn wheel_fires_in_deadline_order() {
+        let (m, clock) = manual();
+        let wheel = TimerWheel::new(clock, 16);
+        let a = wheel.arm_at(30, tag::TICK).unwrap();
+        let b = wheel.arm_at(10, tag::STATE).unwrap();
+        let c = wheel.arm_at(20, tag::KILL).unwrap();
+        assert_eq!(wheel.next_deadline(), Some(10));
+        assert!(wheel.poll().is_empty(), "nothing due at t=0");
+        m.advance_ms(25);
+        let fired = wheel.poll();
+        assert_eq!(
+            fired.iter().map(|f| f.id).collect::<Vec<_>>(),
+            vec![b, c],
+            "deadline order, not arm order"
+        );
+        assert_eq!(wheel.next_deadline(), Some(30));
+        m.advance_ms(10);
+        assert_eq!(wheel.poll_tags(), tag::TICK);
+        assert_eq!(wheel.poll(), vec![], "each timer fires exactly once");
+        let _ = a;
+    }
+
+    #[test]
+    fn wheel_cancellation() {
+        let (m, clock) = manual();
+        let wheel = TimerWheel::new(clock, 16);
+        let a = wheel.arm(10, tag::TICK).unwrap();
+        let b = wheel.arm(10, tag::STATE).unwrap();
+        assert!(wheel.cancel(a));
+        assert!(!wheel.cancel(a), "double cancel is a no-op");
+        m.advance_ms(10);
+        let fired = wheel.poll();
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].id, b);
+        assert!(!wheel.cancel(b), "fired timers cannot be canceled");
+    }
+
+    #[test]
+    fn wheel_coalesces_same_deadline_entries_into_one_poll() {
+        let (m, clock) = manual();
+        let wheel = TimerWheel::new(clock, 16);
+        wheel.arm_at(50, tag::TICK).unwrap();
+        wheel.arm_at(50, tag::STATE).unwrap();
+        wheel.arm_at(50, tag::KILL).unwrap();
+        m.advance_ms(50);
+        // One poll returns all three, tags OR-able by the caller.
+        assert_eq!(wheel.poll_tags(), tag::TICK | tag::STATE | tag::KILL);
+        assert!(wheel.is_empty());
+    }
+
+    #[test]
+    fn wheel_capacity_bounds_armed_timers() {
+        let (_, clock) = manual();
+        let wheel = TimerWheel::new(clock, 2);
+        assert!(wheel.arm(1, tag::TICK).is_some());
+        assert!(wheel.arm(2, tag::TICK).is_some());
+        assert!(wheel.arm(3, tag::TICK).is_none(), "cap enforced");
+        assert_eq!(wheel.len(), 2);
+    }
+
+    #[test]
+    fn tag_names_render() {
+        assert_eq!(tag::names(0), "none");
+        assert_eq!(tag::names(tag::GRANT | tag::KILL), "grant|kill");
+    }
+}

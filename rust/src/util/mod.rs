@@ -6,11 +6,13 @@
 
 pub mod bytes;
 pub mod clock;
+pub mod event;
 pub mod hostport;
 pub mod ids;
 pub mod logging;
 pub mod prng;
 
 pub use clock::{Clock, ManualClock, SystemClock};
+pub use event::{tag, TimerWheel, WakeupBus};
 pub use hostport::HostPort;
 pub use prng::SplitMix64;

@@ -10,9 +10,51 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::util::event::{tag, WakerSet, WakeupBus};
 use crate::util::ids::{ApplicationId, ContainerId, NodeId};
 
 use super::resources::Resource;
+
+/// The simulated SIGKILL: a flag the NM flips on `stop_container` / node
+/// death, plus the wakeup hook that makes a kill an *event* rather than
+/// something launched code discovers on its next poll — the container's
+/// monitor loop registers its [`WakeupBus`] here and is woken the moment
+/// the flag flips.
+pub struct KillSwitch {
+    flag: AtomicBool,
+    wakers: WakerSet,
+}
+
+impl Default for KillSwitch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KillSwitch {
+    pub fn new() -> KillSwitch {
+        KillSwitch { flag: AtomicBool::new(false), wakers: WakerSet::new() }
+    }
+
+    pub fn killed(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+
+    /// Flip the switch and wake every registered waiter (`tag::KILL`).
+    pub fn kill(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+        self.wakers.notify_all(tag::KILL);
+    }
+
+    /// Register a bus to be notified when the switch flips.  If it
+    /// already flipped, notify immediately (no lost-kill window).
+    pub fn register(&self, bus: &Arc<WakeupBus>) {
+        self.wakers.register(bus);
+        if self.killed() {
+            bus.notify(tag::KILL);
+        }
+    }
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ContainerRequest {
@@ -82,21 +124,21 @@ pub struct ContainerCtx {
     /// Launch-context environment variables (the AM sets the cluster spec
     /// and task-specific config here — paper §2.2).
     pub env: BTreeMap<String, String>,
-    kill: Arc<AtomicBool>,
+    kill: Arc<KillSwitch>,
 }
 
 impl ContainerCtx {
     pub fn new(container: Container, env: BTreeMap<String, String>) -> ContainerCtx {
-        ContainerCtx { container, env, kill: Arc::new(AtomicBool::new(false)) }
+        ContainerCtx { container, env, kill: Arc::new(KillSwitch::new()) }
     }
 
     /// The kill switch the NM flips on stop_container / node death.
-    pub fn kill_flag(&self) -> Arc<AtomicBool> {
+    pub fn kill_switch(&self) -> Arc<KillSwitch> {
         self.kill.clone()
     }
 
     pub fn killed(&self) -> bool {
-        self.kill.load(Ordering::Relaxed)
+        self.kill.killed()
     }
 
     pub fn env(&self, key: &str) -> Option<&str> {
@@ -134,11 +176,18 @@ mod tests {
     }
 
     #[test]
-    fn ctx_kill_flag() {
+    fn ctx_kill_switch_wakes_registered_buses() {
         let ctx = ContainerCtx::new(cid(), BTreeMap::new());
         assert!(!ctx.killed());
-        ctx.kill_flag().store(true, Ordering::Relaxed);
+        let bus = Arc::new(WakeupBus::new());
+        ctx.kill_switch().register(&bus);
+        ctx.kill_switch().kill();
         assert!(ctx.killed());
+        assert_eq!(bus.take(), tag::KILL, "kill is an event, not a poll");
+        // Registering after the flip still delivers the kill.
+        let late = Arc::new(WakeupBus::new());
+        ctx.kill_switch().register(&late);
+        assert_eq!(late.take(), tag::KILL);
     }
 
     #[test]

@@ -26,8 +26,10 @@ pub mod resources;
 pub mod rm;
 pub mod scheduler;
 
-pub use container::{Container, ContainerCtx, ContainerRequest, ContainerStatus, ExitStatus};
+pub use container::{Container, ContainerCtx, ContainerRequest, ContainerStatus, ExitStatus, KillSwitch};
 pub use node::{NodeHandle, NodeSpec};
 pub use resources::Resource;
-pub use rm::{AllocateResponse, AppReport, AppState, QueueStat, ResourceManager, SubmissionContext};
+pub use rm::{
+    AllocateResponse, AppReport, AppState, QueueStat, ResourceManager, RmConf, SubmissionContext,
+};
 pub use scheduler::{CapacityScheduler, QueueConf};

@@ -40,7 +40,7 @@ impl NodeSpec {
 pub type CompletionFn = Arc<dyn Fn(NodeId, ContainerId, ExitStatus) + Send + Sync>;
 
 struct Running {
-    kill: Arc<AtomicBool>,
+    kill: Arc<super::container::KillSwitch>,
     resource: Resource,
 }
 
@@ -90,7 +90,7 @@ impl NodeHandle {
         if !self.is_alive() {
             bail!("node {} is dead", self.spec.id);
         }
-        let kill = ctx.kill_flag();
+        let kill = ctx.kill_switch();
         {
             let mut running = self.running.lock().unwrap();
             let used = running
@@ -118,7 +118,7 @@ impl NodeHandle {
                     launch(ctx)
                 }))
                 .unwrap_or(137);
-                let was_killed = kill.load(Ordering::Relaxed);
+                let was_killed = kill.killed();
                 let node_dead = !node.is_alive();
                 node.running.lock().unwrap().remove(&cid);
                 let status = if node_dead {
@@ -138,12 +138,15 @@ impl NodeHandle {
 
     /// Ask the container to die (kill flag; container code polls it).
     pub fn stop_container(&self, id: ContainerId) -> bool {
-        let running = self.running.lock().unwrap();
-        if let Some(r) = running.get(&id) {
-            r.kill.store(true, Ordering::Relaxed);
-            true
-        } else {
-            false
+        let switch = self.running.lock().unwrap().get(&id).map(|r| r.kill.clone());
+        match switch {
+            Some(k) => {
+                // Flip (and notify waiters) outside the running-map lock:
+                // a woken monitor loop may call back into this node.
+                k.kill();
+                true
+            }
+            None => false,
         }
     }
 
@@ -151,9 +154,10 @@ impl NodeHandle {
     /// be reported as `NodeLost`.
     pub fn kill_node(&self) {
         self.alive.store(false, Ordering::Relaxed);
-        let running = self.running.lock().unwrap();
-        for r in running.values() {
-            r.kill.store(true, Ordering::Relaxed);
+        let switches: Vec<_> =
+            self.running.lock().unwrap().values().map(|r| r.kill.clone()).collect();
+        for k in switches {
+            k.kill();
         }
     }
 }
@@ -161,6 +165,8 @@ impl NodeHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock::SystemClock;
+    use crate::util::event::WakeupBus;
     use crate::util::ids::ApplicationId;
     use std::collections::BTreeMap;
     use std::sync::mpsc;
@@ -172,6 +178,17 @@ mod tests {
             let _ = tx.send((c, s));
         });
         (Arc::new(NodeHandle::new(NodeSpec::new(0, cap), cb)), rx)
+    }
+
+    /// Event-driven stand-in for "task code that runs until killed":
+    /// blocks on the kill switch instead of sleep-polling it.
+    fn block_until_killed(ctx: &ContainerCtx) {
+        let clock = SystemClock::new();
+        let bus = Arc::new(WakeupBus::new());
+        ctx.kill_switch().register(&bus);
+        while !ctx.killed() {
+            bus.wait_until(&clock, clock.now_ms() + 10_000);
+        }
     }
 
     fn container(seq: u64, r: Resource) -> Container {
@@ -206,18 +223,18 @@ mod tests {
         let (node, rx) = mk(Resource::new(1024, 2, 0));
         let c = container(3, Resource::new(512, 1, 0));
         let ctx = ContainerCtx::new(c.clone(), BTreeMap::new());
+        let (started_tx, started_rx) = mpsc::channel();
         node.start_container(
             c.clone(),
             ctx,
-            Box::new(|ctx| {
-                while !ctx.killed() {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
+            Box::new(move |ctx| {
+                let _ = started_tx.send(());
+                block_until_killed(&ctx);
                 1 // exit code irrelevant once killed
             }),
         )
         .unwrap();
-        std::thread::sleep(Duration::from_millis(20));
+        started_rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert!(node.stop_container(c.id));
         let (_, status) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(status, ExitStatus::Killed);
@@ -228,18 +245,18 @@ mod tests {
         let (node, rx) = mk(Resource::new(1024, 2, 0));
         let c = container(4, Resource::new(512, 1, 0));
         let ctx = ContainerCtx::new(c.clone(), BTreeMap::new());
+        let (started_tx, started_rx) = mpsc::channel();
         node.start_container(
             c,
             ctx,
-            Box::new(|ctx| {
-                while !ctx.killed() {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
+            Box::new(move |ctx| {
+                let _ = started_tx.send(());
+                block_until_killed(&ctx);
                 0
             }),
         )
         .unwrap();
-        std::thread::sleep(Duration::from_millis(20));
+        started_rx.recv_timeout(Duration::from_secs(2)).unwrap();
         node.kill_node();
         let (_, status) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(status, ExitStatus::NodeLost);

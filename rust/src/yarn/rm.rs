@@ -23,6 +23,8 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::util::clock::{Clock, SystemClock};
+use crate::util::event::{tag, WakeupBus};
 use crate::util::ids::{ApplicationId, ContainerId, NodeId};
 use crate::{tdebug, tinfo, twarn};
 
@@ -110,21 +112,74 @@ struct Inner {
     containers: HashMap<ContainerId, LiveContainer>,
     /// AM launchables awaiting their container grant, keyed by ask tag.
     pending_am: HashMap<u64, (ApplicationId, Launchable)>,
+    /// Per-application wakeup buses (registered by each AM): notified on
+    /// grants / completed containers so the AM monitor loop blocks on
+    /// events instead of polling `allocate` on a fixed interval.
+    am_wakers: HashMap<ApplicationId, Arc<WakeupBus>>,
     next_app_seq: u64,
     next_container_seq: u64,
     next_tag: u64,
 }
 
+/// Construction knobs for [`ResourceManager::start_with`].
+pub struct RmConf {
+    /// The clock every RM deadline runs on (manual clocks make liveness
+    /// paths fully test-drivable).
+    pub clock: Arc<dyn Clock>,
+    /// Slow safety tick: the RM re-runs its scheduler and re-notifies AM
+    /// wakers this often even with no events, so a (hypothetical) missed
+    /// notification degrades to one tick of latency instead of a hang.
+    /// `0` disables the tick — scheduling is then purely event-driven,
+    /// which the manual-clock tests use to prove no poll is needed.
+    pub fallback_tick_ms: u64,
+}
+
+impl Default for RmConf {
+    fn default() -> RmConf {
+        RmConf { clock: SystemClock::shared(), fallback_tick_ms: 1_000 }
+    }
+}
+
 /// The simulated cluster: RM + NMs.  Create with [`ResourceManager::start`].
 pub struct ResourceManager {
     pub cluster_ts: u64,
+    clock: Arc<dyn Clock>,
+    /// Notified (`tag::STATE`) on every application state change;
+    /// `wait_for_completion` waiters block on its sequence.
+    events: Arc<WakeupBus>,
+    /// The fallback-tick thread's bus (None when the tick is disabled):
+    /// `Drop` notifies it `tag::SHUTDOWN` so the ticker exits promptly
+    /// with the RM instead of waiting out its final nap.
+    tick_bus: Option<Arc<WakeupBus>>,
     inner: Mutex<Inner>,
+}
+
+impl Drop for ResourceManager {
+    fn drop(&mut self) {
+        if let Some(bus) = &self.tick_bus {
+            bus.notify(tag::SHUTDOWN);
+        }
+    }
 }
 
 impl ResourceManager {
     pub fn start(specs: Vec<NodeSpec>, queues: Vec<QueueConf>) -> Arc<ResourceManager> {
+        Self::start_with(specs, queues, RmConf::default())
+    }
+
+    pub fn start_with(
+        specs: Vec<NodeSpec>,
+        queues: Vec<QueueConf>,
+        conf: RmConf,
+    ) -> Arc<ResourceManager> {
         let cluster_ts = 1_700_000_000 + crate::util::ids::next_seq();
-        Arc::new_cyclic(|weak: &Weak<ResourceManager>| {
+        let events = WakeupBus::for_clock(&conf.clock);
+        let tick_bus = if conf.fallback_tick_ms > 0 {
+            Some(WakeupBus::for_clock(&conf.clock))
+        } else {
+            None
+        };
+        let rm = Arc::new_cyclic(|weak: &Weak<ResourceManager>| {
             let weak = weak.clone();
             let cb: super::node::CompletionFn = Arc::new(move |node, cid, status| {
                 if let Some(rm) = weak.upgrade() {
@@ -141,6 +196,9 @@ impl ResourceManager {
                 .collect();
             ResourceManager {
                 cluster_ts,
+                clock: conf.clock.clone(),
+                events,
+                tick_bus: tick_bus.clone(),
                 inner: Mutex::new(Inner {
                     nodes,
                     node_free,
@@ -148,18 +206,79 @@ impl ResourceManager {
                     apps: HashMap::new(),
                     containers: HashMap::new(),
                     pending_am: HashMap::new(),
+                    am_wakers: HashMap::new(),
                     next_app_seq: 1,
                     next_container_seq: 1,
                     next_tag: 1,
                 }),
             }
-        })
+        });
+        if let Some(bus) = tick_bus {
+            Self::spawn_fallback_tick(&rm, conf.fallback_tick_ms, bus);
+        }
+        rm
     }
 
     /// Convenience: N identical unlabeled nodes, single `default` queue.
     pub fn start_uniform(n_nodes: u32, per_node: Resource) -> Arc<ResourceManager> {
         let specs = (0..n_nodes).map(|i| NodeSpec::new(i, per_node)).collect();
         Self::start(specs, QueueConf::default_only())
+    }
+
+    /// The clock this RM (and everything constructed from it — AMs,
+    /// gateway, executors) runs deadlines on.
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// The app-state event bus (`tag::STATE` on every transition).
+    /// Exposed for watchers that want to block on state changes the way
+    /// [`ResourceManager::wait_for_completion`] does.
+    pub fn events(&self) -> &Arc<WakeupBus> {
+        &self.events
+    }
+
+    /// Register the wakeup bus of the AM serving `app`: the RM notifies
+    /// it on container grants (`tag::GRANT`), completed containers
+    /// (`tag::COMPLETED`), app-state changes (`tag::STATE`), and on
+    /// every fallback tick (`tag::TICK`).
+    pub fn register_am_waker(&self, app: ApplicationId, bus: &Arc<WakeupBus>) {
+        self.inner.lock().unwrap().am_wakers.insert(app, bus.clone());
+    }
+
+    /// The liveness backstop: a detached thread (holding only a `Weak`,
+    /// so it dies with the RM) that periodically re-runs the scheduler
+    /// and re-notifies every AM waker.  Correctness never depends on it;
+    /// it turns a missed event into bounded latency.
+    fn spawn_fallback_tick(rm: &Arc<ResourceManager>, tick_ms: u64, bus: Arc<WakeupBus>) {
+        let weak = Arc::downgrade(rm);
+        let clock = rm.clock.clone();
+        std::thread::Builder::new()
+            .name("rm-tick".into())
+            .spawn(move || loop {
+                // Nap to the tick deadline; intermediate wakes (manual-
+                // clock advances land `tag::TICK` here too) re-check it,
+                // so tick_ms is honored under manual time instead of
+                // firing on every advance.  `Drop` on the RM notifies
+                // SHUTDOWN for a prompt exit.
+                let next = clock.now_ms().saturating_add(tick_ms);
+                loop {
+                    let fired = bus.wait_until(&*clock, next);
+                    if fired & tag::SHUTDOWN != 0 {
+                        return;
+                    }
+                    if clock.now_ms() >= next {
+                        break;
+                    }
+                }
+                let Some(rm) = weak.upgrade() else { return };
+                let mut inner = rm.inner.lock().unwrap();
+                rm.schedule_locked(&mut inner);
+                for waker in inner.am_wakers.values() {
+                    waker.notify(tag::TICK);
+                }
+            })
+            .expect("spawn rm tick thread");
     }
 
     // ---------------- client protocol ----------------
@@ -208,20 +327,26 @@ impl ResourceManager {
         })
     }
 
-    /// Block until the app reaches a terminal state (test/CLI helper).
+    /// Block until the app reaches a terminal state.  Event-driven: the
+    /// waiter sleeps on the RM's state bus and wakes the moment the app
+    /// terminalizes, instead of discovering it on a 10 ms poll.
     pub fn wait_for_completion(&self, id: ApplicationId, timeout: Duration) -> Result<AppReport> {
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = self.clock.deadline_after(timeout);
         loop {
+            // Capture the sequence *before* checking state: a transition
+            // landing between check and wait bumps the sequence and the
+            // wait returns immediately (no lost wakeup).
+            let seen = self.events.seq();
             let report = self
                 .app_report(id)
                 .ok_or_else(|| anyhow!("unknown application {id}"))?;
             if report.state.is_terminal() {
                 return Ok(report);
             }
-            if std::time::Instant::now() > deadline {
+            if self.clock.now_ms() >= deadline {
                 bail!("timeout waiting for {id}; state={:?}", report.state);
             }
-            std::thread::sleep(Duration::from_millis(10));
+            self.events.wait_seq(&*self.clock, seen, deadline);
         }
     }
 
@@ -242,6 +367,8 @@ impl ResourceManager {
             app.tracking_url = tracking_url;
         }
         tdebug!("rm", "AM registered for {id}");
+        drop(inner);
+        self.events.notify(tag::STATE);
         Ok(())
     }
 
@@ -505,6 +632,11 @@ impl ResourceManager {
                 }
             } else if let Some(app) = inner.apps.get_mut(&grant.ask.app) {
                 app.allocated_ready.push(container);
+                // Grant is an event: wake the owning AM's monitor loop so
+                // it collects the container now, not on its next tick.
+                if let Some(waker) = inner.am_wakers.get(&grant.ask.app) {
+                    waker.notify(tag::GRANT);
+                }
             }
         }
     }
@@ -545,6 +677,9 @@ impl ResourceManager {
                 exit: status,
                 diagnostics: format!("container on {node} exited: {status:?}"),
             });
+            if let Some(waker) = inner.am_wakers.get(&app_id) {
+                waker.notify(tag::COMPLETED);
+            }
         }
         // Freed capacity may unblock pending asks.
         self.schedule_locked(&mut inner);
@@ -581,6 +716,12 @@ impl ResourceManager {
                 self.release_container_locked(inner, cid);
             }
         }
+        // Wake completion waiters AND the app's own AM (its next allocate
+        // will error, telling a zombie AM its app was killed under it).
+        if let Some(waker) = inner.am_wakers.remove(&id) {
+            waker.notify(tag::STATE);
+        }
+        self.events.notify(tag::STATE);
     }
 }
 
@@ -637,6 +778,11 @@ mod tests {
                     };
                     let _ = ctx;
                     rm2.register_am(app, Some("http://am".into())).unwrap();
+                    // Event-driven mini-AM: block on the waker between
+                    // allocate calls instead of the old 5 ms retry sleep.
+                    let bus = WakeupBus::for_clock(rm2.clock());
+                    rm2.register_am_waker(app, &bus);
+                    let clock = rm2.clock().clone();
                     let mut got = Vec::new();
                     let asks = vec![ContainerRequest::new(Resource::new(1024, 1, 0), 2)];
                     let mut asked = false;
@@ -655,7 +801,9 @@ mod tests {
                             .iter()
                             .filter(|s| s.exit.is_success())
                             .count();
-                        std::thread::sleep(Duration::from_millis(5));
+                        if completed < 2 {
+                            bus.wait_until(&*clock, clock.now_ms() + 5_000);
+                        }
                     }
                     assert_eq!(got.len(), 2);
                     rm2.finish_application(app, true, "all tasks done");
@@ -707,9 +855,124 @@ mod tests {
                 Box::new(|_| 0),
             )
             .unwrap();
-        std::thread::sleep(Duration::from_millis(50));
+        // Scheduling is synchronous inside submit_application, so the
+        // verdict is already final — no settling sleep needed.
         assert_eq!(rm.app_report(id).unwrap().state, AppState::Submitted);
         rm.kill_application(id);
         assert_eq!(rm.app_report(id).unwrap().state, AppState::Killed);
+    }
+
+    /// Manual clock, fallback tick disabled: a release arriving on the
+    /// allocate path must trigger the blocked app's grant *by itself* —
+    /// proof the scheduler is event-driven, not tick-driven.  Zero real
+    /// sleeping anywhere in this test.
+    #[test]
+    fn release_event_grants_without_fallback_tick() {
+        use crate::util::ManualClock;
+        let clock = ManualClock::shared();
+        let rm = ResourceManager::start_with(
+            vec![NodeSpec::new(0, Resource::new(1024, 2, 0))],
+            QueueConf::default_only(),
+            RmConf { clock: clock.clone(), fallback_tick_ms: 0 },
+        );
+
+        // App A's AM grabs the rest of the node, holds it until told to
+        // release, then finishes.
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let rm2 = rm.clone();
+        let a = rm
+            .submit_application(
+                SubmissionContext {
+                    name: "holder".into(),
+                    queue: "default".into(),
+                    am_resource: Resource::new(512, 1, 0),
+                },
+                Box::new(move |_| {
+                    let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                    rm2.register_am(app, None).unwrap();
+                    // Grants are produced inline by the same allocate call
+                    // that submits the ask — no waiting needed.
+                    let asks = vec![ContainerRequest::new(Resource::new(512, 1, 0), 1)];
+                    let resp = rm2.allocate(app, &asks, &[]).unwrap();
+                    assert_eq!(resp.allocated.len(), 1, "ask event granted inline");
+                    let held = resp.allocated[0].id;
+                    release_rx.recv().unwrap();
+                    // The release event: B's AM container must be granted
+                    // and launched by this very call chain.
+                    rm2.allocate(app, &[], &[held]).unwrap();
+                    rm2.finish_application(app, true, "done");
+                    0
+                }),
+            )
+            .unwrap();
+
+        // App B cannot fit until A releases.
+        let rm3 = rm.clone();
+        let b = rm
+            .submit_application(
+                SubmissionContext {
+                    name: "blocked".into(),
+                    queue: "default".into(),
+                    am_resource: Resource::new(512, 1, 0),
+                },
+                Box::new(move |_| {
+                    let app = ApplicationId { cluster_ts: rm3.cluster_ts, seq: 2 };
+                    rm3.register_am(app, None).unwrap();
+                    rm3.finish_application(app, true, "done");
+                    0
+                }),
+            )
+            .unwrap();
+        assert_eq!(rm.app_report(b).unwrap().state, AppState::Submitted, "B blocked");
+
+        release_tx.send(()).unwrap();
+        // With no fallback tick and a frozen manual clock, only the
+        // release event can unblock B.  wait_for_completion blocks on the
+        // state bus (the manual deadline never elapses on its own), so a
+        // real-time watchdog turns a regression into a failure, not a
+        // hung test.
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let rm4 = rm.clone();
+        std::thread::spawn(move || {
+            let rb = rm4.wait_for_completion(b, Duration::from_secs(600));
+            let ra = rm4.wait_for_completion(a, Duration::from_secs(600));
+            let _ = done_tx.send((ra, rb));
+        });
+        let (ra, rb) = done_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("release event never propagated to a grant");
+        assert_eq!(rb.unwrap().state, AppState::Finished);
+        assert_eq!(ra.unwrap().state, AppState::Finished);
+        assert_eq!(clock.now_ms(), 0, "no virtual time consumed either");
+    }
+
+    /// `wait_for_completion` timeout is clock-driven: advancing a manual
+    /// clock past the deadline fails the wait with zero real sleeping.
+    #[test]
+    fn wait_for_completion_times_out_on_manual_clock() {
+        use crate::util::ManualClock;
+        let clock = ManualClock::shared();
+        let rm = ResourceManager::start_with(
+            vec![NodeSpec::new(0, Resource::new(1024, 1, 0))],
+            QueueConf::default_only(),
+            RmConf { clock: clock.clone(), fallback_tick_ms: 0 },
+        );
+        let id = rm
+            .submit_application(
+                SubmissionContext {
+                    name: "never-fits".into(),
+                    queue: "default".into(),
+                    am_resource: Resource::new(4096, 1, 0),
+                },
+                Box::new(|_| 0),
+            )
+            .unwrap();
+        let rm2 = rm.clone();
+        let waiter =
+            std::thread::spawn(move || rm2.wait_for_completion(id, Duration::from_millis(500)));
+        // The only thing that can end the wait is virtual time passing.
+        clock.advance_ms(501);
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("timeout"), "got: {err:#}");
     }
 }

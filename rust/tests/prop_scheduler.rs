@@ -1,5 +1,5 @@
 //! Property tests: CapacityScheduler invariants under random workloads
-//! (DESIGN.md §7) — the coordinator-correctness core of the repro.
+//! (DESIGN.md §8 testing tiers) — the coordinator-correctness core of the repro.
 
 use std::collections::BTreeMap;
 

@@ -23,6 +23,18 @@ cargo run --release --example fault_tolerance
 echo "==> recovery bench smoke (surgical vs full restart, 4 workers)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_recovery
 
+echo "==> latency bench smoke (event-driven vs poll fallback)"
+TONY_BENCH_SMOKE=1 cargo bench --bench bench_latency
+
+echo "==> no stray std::thread::sleep in rust/src (event-driven control plane)"
+# The only allowed home is util/clock.rs: the SystemClock impl plus the
+# explicit real_sleep() escape hatch for I/O backoff / simulated
+# child-task cadences.  Everything else must block on WakeupBus waits.
+if grep -rn "std::thread::sleep" rust/src --include='*.rs' | grep -v "^rust/src/util/clock.rs"; then
+    echo "ERROR: stray std::thread::sleep outside util/clock.rs (route through Clock::sleep, WakeupBus, or real_sleep)"
+    exit 1
+fi
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
