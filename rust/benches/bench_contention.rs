@@ -1,12 +1,160 @@
 //! C1 (§1 "Resource contention"): ad-hoc unmanaged pool vs TonY/YARN
-//! managed pool under increasing oversubscription.  Job success rate and
-//! makespan; regenerates the EXPERIMENTS.md C1 table.
+//! managed pool under increasing oversubscription, plus the **gang vs
+//! legacy** scheduler contrast: N concurrent jobs that each need a whole
+//! gang of workers on a cluster that fits only a subset at once.
+//!
+//! Legacy per-container mode reproduces the classic partial-allocation
+//! deadlock (every job holds a fraction of its gang and waits forever);
+//! gang mode serializes whole waves and completes them all, so the table
+//! reports completion, deadlock-freedom, and makespan per mode.
+//!
+//! `TONY_BENCH_SMOKE=1` runs the reduced gang-mode table only (CI).
 
 use tony::baseline::{run_adhoc_pool, run_managed_pool, synthetic_jobs, AdhocOutcome, AdhocParams};
 use tony::bench::{f1, n, Table};
-use tony::yarn::Resource;
+use tony::util::ids::ApplicationId;
+use tony::yarn::scheduler::SchedNode;
+use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
+
+const GANG_SIZE: u32 = 4;
+const TASK: Resource = Resource { memory_mb: 2048, vcores: 2, gpus: 0 };
+const JOB_MS: u64 = 10_000;
+
+struct SimJob {
+    app: ApplicationId,
+    granted: Vec<(u32, Resource)>,
+    finish_at: Option<u64>,
+    done: bool,
+}
+
+/// Discrete-event simulation of N contending gang jobs over the
+/// CapacityScheduler (virtual time; no threads): returns
+/// `(completed, deadlocked, makespan_ms, grants)`.
+fn run_contention(n_jobs: u32, gang_mode: bool) -> (u32, bool, u64, usize) {
+    let mut nodes: Vec<SchedNode> =
+        (0..4).map(|i| SchedNode::new(i, None, Resource::new(8192, 8, 0))).collect();
+    let total = nodes.iter().fold(Resource::ZERO, |a, x| a + x.capacity);
+    let mut sched = CapacityScheduler::new(QueueConf::default_only(), total);
+    let mut jobs: Vec<SimJob> = (0..n_jobs)
+        .map(|i| SimJob {
+            app: ApplicationId { cluster_ts: 1, seq: i as u64 + 1 },
+            granted: Vec::new(),
+            finish_at: None,
+            done: false,
+        })
+        .collect();
+
+    // Enqueue the demand.  Legacy mode interleaves per-container asks
+    // (the trickle an AM heartbeat loop produces under contention);
+    // gang mode submits each job's wave as one all-or-nothing gang.
+    let mut tag = 0u64;
+    if gang_mode {
+        for j in &jobs {
+            let intake = sched.add_asks_gang(
+                j.app,
+                "default",
+                &[ContainerRequest::new(TASK, GANG_SIZE)],
+                tag,
+                Some(j.app.seq),
+            );
+            tag = intake.next_tag;
+        }
+    } else {
+        for _ in 0..GANG_SIZE {
+            for j in &jobs {
+                tag = sched.add_asks(j.app, "default", &[ContainerRequest::new(TASK, 1)], tag);
+            }
+        }
+    }
+
+    let mut now = 0u64;
+    let mut grants_total = 0usize;
+    let mut makespan = 0u64;
+    loop {
+        let grants = sched.schedule(&mut nodes);
+        grants_total += grants.len();
+        for g in &grants {
+            let ji = (g.ask.app.seq - 1) as usize;
+            jobs[ji].granted.push((g.node.0, g.ask.resource));
+            if jobs[ji].granted.len() == GANG_SIZE as usize {
+                // Whole gang acquired: the job trains for JOB_MS.
+                jobs[ji].finish_at = Some(now + JOB_MS);
+            }
+        }
+        let next_finish = jobs
+            .iter()
+            .filter(|j| !j.done)
+            .filter_map(|j| j.finish_at)
+            .min();
+        match next_finish {
+            Some(t) => {
+                now = t;
+                makespan = makespan.max(now);
+                for ji in 0..jobs.len() {
+                    if jobs[ji].done || jobs[ji].finish_at != Some(t) {
+                        continue;
+                    }
+                    jobs[ji].done = true;
+                    for (node, r) in std::mem::take(&mut jobs[ji].granted) {
+                        sched.release("default", r);
+                        let ni = nodes.iter().position(|x| x.id.0 == node).unwrap();
+                        nodes[ni].free += r;
+                    }
+                }
+            }
+            None => {
+                // No job will ever finish.  Anything still pending (or
+                // holding a partial gang) is deadlocked — unless the
+                // cluster is simply drained and everyone completed.
+                let all_done = jobs.iter().all(|j| j.done);
+                let deadlocked = !all_done;
+                let completed = jobs.iter().filter(|j| j.done).count() as u32;
+                return (completed, deadlocked, makespan, grants_total);
+            }
+        }
+    }
+}
+
+fn gang_vs_legacy_table(sizes: &[u32]) {
+    let mut table =
+        Table::new(&["jobs", "mode", "completed", "deadlock", "makespan-s", "grants"]);
+    for &n_jobs in sizes {
+        for (mode, gang) in [("gang", true), ("legacy", false)] {
+            let (completed, deadlocked, makespan, grants) = run_contention(n_jobs, gang);
+            table.row(&[
+                n(n_jobs),
+                mode.to_string(),
+                n(completed),
+                (if deadlocked { "YES" } else { "no" }).to_string(),
+                f1(makespan as f64 / 1e3),
+                n(grants),
+            ]);
+        }
+    }
+    table.print(
+        "C1b: gang vs legacy under contention (4 hosts x 8 GiB / 8 cores; \
+         4 x 2 GiB+2c workers per job; 10 s/job)",
+    );
+    println!(
+        "\nexpected shape: gang mode completes every job (makespan grows in waves of 4); \
+         legacy deadlocks once jobs > cluster gangs — each holds a partial gang forever."
+    );
+}
 
 fn main() {
+    let smoke = std::env::var("TONY_BENCH_SMOKE").is_ok();
+    if smoke {
+        gang_vs_legacy_table(&[2, 8]);
+        // CI gate: gang mode must be deadlock-free and complete all jobs.
+        for n_jobs in [2u32, 8] {
+            let (completed, deadlocked, _, _) = run_contention(n_jobs, true);
+            assert!(!deadlocked, "gang mode deadlocked at {n_jobs} jobs");
+            assert_eq!(completed, n_jobs, "gang mode must complete all {n_jobs} jobs");
+        }
+        println!("\nsmoke OK: gang mode deadlock-free at 2/8 jobs");
+        return;
+    }
+
     let hosts = vec![Resource::mem_cores(8192, 8); 4];
     let mut table = Table::new(&[
         "jobs", "demand%", "adhoc-ok%", "oom%", "misconf%", "tony-ok%", "tony-makespan-s",
@@ -42,4 +190,6 @@ fn main() {
     }
     table.print("C1: contention — ad-hoc pool vs TonY (4 hosts x 8 GiB; 2 x 2 GiB tasks/job; 50 seeds)");
     println!("\nexpected shape: TonY holds 100% success with queue-growth makespan; ad-hoc success collapses past 100% demand.");
+
+    gang_vs_legacy_table(&[2, 8, 32]);
 }

@@ -8,18 +8,17 @@ use tony::bench::{bench, f1, n, Table};
 use tony::util::ids::ApplicationId;
 use tony::yarn::scheduler::SchedNode;
 use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
-use tony::util::ids::NodeId;
 
 fn nodes(count: u32) -> Vec<SchedNode> {
     (0..count)
-        .map(|i| SchedNode {
-            id: NodeId(i),
-            label: if i % 4 == 0 { Some("gpu".to_string()) } else { None },
-            free: if i % 4 == 0 {
+        .map(|i| {
+            let label = if i % 4 == 0 { Some("gpu".to_string()) } else { None };
+            let cap = if i % 4 == 0 {
                 Resource::new(16384, 16, 4)
             } else {
                 Resource::new(16384, 16, 0)
-            },
+            };
+            SchedNode::new(i, label, cap)
         })
         .collect()
 }

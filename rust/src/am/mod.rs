@@ -4,16 +4,22 @@
 //! surgical per-task recovery:
 //!
 //! 1. negotiate with the RM for all task containers, with heterogeneous
-//!    requests per task type (GPU workers, CPU-only PS); grants that
-//!    match no pending task are released back to the RM, never leaked;
+//!    requests per task type (GPU workers, CPU-only PS); in gang mode
+//!    (`tony.scheduler.gang-mode`, the default) the initial wave and
+//!    every recovery wave travel in one allocate round each, which the
+//!    RM places **all-or-nothing** — no partial-gang deadlocks under
+//!    contention; grants that match no pending task are released back to
+//!    the RM, never leaked;
 //! 2. launch a TaskExecutor in every granted container;
 //! 3. collect each TaskExecutor's (host, port) registration; when all
 //!    have registered, construct the **global cluster spec** and hand it
 //!    back to every executor;
 //! 4. monitor heartbeats, registration deadlines, and task exit
 //!    statuses;
-//! 5. on a tracked-task failure (or node loss): re-request containers
-//!    *only* for the dead tasks, relaunch them at a bumped spec version,
+//! 5. on a tracked-task failure (node loss, or a `Preempted` exit when
+//!    the RM clawed capacity back for a starved queue): re-request
+//!    containers *only* for the dead tasks, relaunch them at a bumped
+//!    spec version,
 //!    patch the cluster spec in place, and push it to the surviving
 //!    executors over the heartbeat channel (`AmCommand::Reconfigure`) —
 //!    survivors rejoin at the new version without their containers ever
@@ -300,6 +306,20 @@ fn run_attempt(
         }
         let resp = rm.allocate(am.app, &asks, &releases)?;
 
+        // Preemption notices: the RM will kill these containers after
+        // the grace period to restore another queue's guarantee.  The
+        // `Preempted` exits that follow are absorbed below exactly like
+        // node loss — surgical recovery re-requests just those tasks (as
+        // a fresh gang) while survivors keep running.
+        if !resp.preempt_notices.is_empty() {
+            twarn!(
+                "am",
+                "{} preemption notice for {} container(s); replacements follow via recovery",
+                am.app,
+                resp.preempt_notices.len()
+            );
+        }
+
         for container in resp.allocated {
             let Some(task) = router.route(job, &container) else {
                 twarn!(
@@ -334,6 +354,11 @@ fn run_attempt(
 
         // ---- collect this tick's failures ----
         let mut failed: BTreeMap<TaskId, String> = BTreeMap::new();
+        // Tasks lost to capacity preemption this tick: they recover
+        // through the same surgical path but do NOT consume the restart
+        // budget — preemption is RM policy, not a task fault.
+        let mut preempted_tasks: std::collections::BTreeSet<TaskId> =
+            std::collections::BTreeSet::new();
 
         // Container-level failures (incl. node loss).
         for status in resp.completed {
@@ -347,9 +372,15 @@ fn run_attempt(
                         // If the task already reported success via RPC
                         // this is benign teardown noise; otherwise it's a
                         // failure.
+                        if bad == ExitStatus::Preempted {
+                            am.state.note_preempted();
+                        }
                         if record_exit == Some(0) {
                             am.state.forget_container(status.id);
                         } else {
+                            if bad == ExitStatus::Preempted {
+                                preempted_tasks.insert(task.clone());
+                            }
                             failed
                                 .entry(task.clone())
                                 .or_insert_with(|| format!("container for {task} exited: {bad:?}"));
@@ -409,12 +440,20 @@ fn run_attempt(
                 .map(|(_, reason)| reason.clone())
                 .collect::<Vec<_>>()
                 .join("; ");
-            if surgical_used >= max_task_restarts {
-                return Ok(AttemptOutcome::TaskFailed(format!(
-                    "{summary} (surgical restart budget {max_task_restarts} exhausted)"
-                )));
+            // A tick whose failures are all `Preempted` exits is the RM
+            // reclaiming capacity for a starved queue, not the job
+            // misbehaving: recover, but leave the restart budget alone
+            // (otherwise routine preemption would eventually "fail" a
+            // perfectly healthy job).
+            let only_preempted = failed.keys().all(|t| preempted_tasks.contains(t));
+            if !only_preempted {
+                if surgical_used >= max_task_restarts {
+                    return Ok(AttemptOutcome::TaskFailed(format!(
+                        "{summary} (surgical restart budget {max_task_restarts} exhausted)"
+                    )));
+                }
+                surgical_used += 1;
             }
-            surgical_used += 1;
             let dead: Vec<TaskId> = failed.keys().cloned().collect();
             recover_tasks(am, &mut router, &dead, surgical_used, max_task_restarts);
             recovering = true;
@@ -427,11 +466,27 @@ fn run_attempt(
         if router.outstanding() > 0
             && now.saturating_sub(phase_started) > launch_timeout.as_millis() as u64
         {
-            return Ok(AttemptOutcome::TaskFailed(format!(
-                "{} container(s) not granted within {launch_timeout:?} \
-                 (cluster too busy or labels unsatisfiable)",
-                router.outstanding()
-            )));
+            if rm.app_sched_state(am.app) == crate::yarn::AppSchedState::WaitingForGang {
+                // Waiting *whole* behind running waves is gang mode's
+                // healthy serialize-instead-of-deadlock state, not a
+                // stuck negotiation: extend the window instead of
+                // burning an attempt.  A gang that can never place gets
+                // demoted by the scheduler (its singles then time out
+                // here normally), and the gateway's job timeout remains
+                // the overall backstop.
+                tdebug!(
+                    "am",
+                    "{} wave still WAITING_FOR_GANG after {launch_timeout:?}; extending",
+                    am.app
+                );
+                phase_started = now;
+            } else {
+                return Ok(AttemptOutcome::TaskFailed(format!(
+                    "{} container(s) not granted within {launch_timeout:?} \
+                     (cluster too busy or labels unsatisfiable)",
+                    router.outstanding()
+                )));
+            }
         }
         let recovery_budget_ms = (launch_timeout + registration_timeout).as_millis() as u64;
         if recovering {

@@ -99,6 +99,9 @@ struct Inner {
     /// Grants released back to the RM because they matched no task
     /// (unknown priority or surplus) — diagnostic for the leak fix.
     released_grants: u64,
+    /// Containers this job lost to capacity preemption (`Preempted`
+    /// exits absorbed by surgical recovery).
+    preempted: u64,
 }
 
 /// The outcome of one attempt, as decided by the AM monitor loop.
@@ -166,6 +169,7 @@ impl AmState {
                 started_at_ms: clock.now_ms(),
                 recoveries: 0,
                 released_grants: 0,
+                preempted: 0,
             }),
             bus,
             clock,
@@ -308,6 +312,15 @@ impl AmState {
 
     pub fn note_released_grants(&self, n: u64) {
         self.inner.lock().unwrap().released_grants += n;
+    }
+
+    /// Containers lost to capacity preemption over the job's lifetime.
+    pub fn preempted(&self) -> u64 {
+        self.inner.lock().unwrap().preempted
+    }
+
+    pub fn note_preempted(&self) {
+        self.inner.lock().unwrap().preempted += 1;
     }
 
     pub fn record_launch(&self, task: TaskId, container: ContainerId) {
@@ -642,6 +655,7 @@ impl AmState {
         j.set("version", inner.version as u64);
         j.set("recoveries", inner.recoveries as u64);
         j.set("released_grants", inner.released_grants);
+        j.set("preempted", inner.preempted);
         j.set("uptime_ms", self.clock.now_ms().saturating_sub(inner.started_at_ms));
         j.set("tasks", Json::Arr(tasks));
         j.set(

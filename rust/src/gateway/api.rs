@@ -129,22 +129,46 @@ fn handle(gw: &Gateway, stream: &mut std::net::TcpStream) {
                 j.set("code", "bad-request");
                 http_response(stream, "400 Bad Request", "application/json", &j.render_pretty());
             }
-            Ok(body) => match gw.submit_conf(&body.user, body.priority, body.conf) {
-                SubmitOutcome::Accepted { id } => {
-                    let mut j = Json::obj();
-                    j.set("id", id);
-                    j.set("state", "PENDING");
-                    http_response(stream, "201 Created", "application/json", &j.render_pretty());
+            Ok(body) => {
+                let requested_queue = body
+                    .conf
+                    .get("tony.application.queue")
+                    .unwrap_or_else(|| "default".to_string());
+                match gw.submit_conf(&body.user, body.priority, body.conf) {
+                    SubmitOutcome::Accepted { id } => {
+                        let mut j = Json::obj();
+                        j.set("id", id);
+                        j.set("state", "PENDING");
+                        // Surface the admission queue mapping so a job
+                        // landing somewhere other than the queue it named
+                        // is visible in the submit response, not silent.
+                        let queue =
+                            gw.job_queue(id).unwrap_or_else(|| requested_queue.clone());
+                        j.set("queue_remapped", queue != requested_queue);
+                        j.set("requested_queue", requested_queue.as_str());
+                        j.set("queue", queue);
+                        http_response(
+                            stream,
+                            "201 Created",
+                            "application/json",
+                            &j.render_pretty(),
+                        );
+                    }
+                    SubmitOutcome::Rejected { id, reason } => {
+                        let mut j = Json::obj();
+                        j.set("id", id);
+                        j.set("state", "REJECTED");
+                        j.set("error", reason.to_string());
+                        j.set("code", reason.code());
+                        http_response(
+                            stream,
+                            reject_status(&reason),
+                            "application/json",
+                            &j.render_pretty(),
+                        );
+                    }
                 }
-                SubmitOutcome::Rejected { id, reason } => {
-                    let mut j = Json::obj();
-                    j.set("id", id);
-                    j.set("state", "REJECTED");
-                    j.set("error", reason.to_string());
-                    j.set("code", reason.code());
-                    http_response(stream, reject_status(&reason), "application/json", &j.render_pretty());
-                }
-            },
+            }
         },
         ("GET", "/api/v1/jobs") => {
             http_response(stream, "200 OK", "application/json", &gw.jobs_json().render_pretty());
@@ -308,7 +332,7 @@ mod tests {
     use super::*;
     use crate::gateway::GatewayConf;
     use crate::tonyconf::JobConfBuilder;
-    use crate::yarn::{Resource, ResourceManager};
+    use crate::yarn::{NodeSpec, QueueConf, Resource, ResourceManager};
 
     fn gw(tag: &str) -> Arc<Gateway> {
         let base = std::env::temp_dir().join(format!(
@@ -392,6 +416,58 @@ mod tests {
             Some("FINISHED")
         );
 
+        gw.shutdown();
+    }
+
+    /// Regression: a job landing on a different queue than it asked for
+    /// (user→queue mapping, or the scheduler's unknown-queue fallback)
+    /// used to be invisible at submit time.  The submit response now
+    /// names the final queue and flags the remap.
+    #[test]
+    fn submit_response_surfaces_queue_mapping() {
+        let base = std::env::temp_dir().join(format!(
+            "tony-apitest-remap-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        let mut conf = GatewayConf::new(base.join("artifacts"));
+        conf.history_dir = base.join("history");
+        conf.workers = 1;
+        conf.quotas.user_queues.insert("alice".to_string(), "ml".to_string());
+        let rm = ResourceManager::start(
+            vec![
+                NodeSpec::new(0, Resource::new(4096, 8, 0)),
+                NodeSpec::new(1, Resource::new(4096, 8, 0)),
+            ],
+            vec![
+                QueueConf::new("default", 0.5, 1.0),
+                QueueConf::new("ml", 0.5, 1.0),
+            ],
+        );
+        let gw = Gateway::start(rm, conf).unwrap();
+        let api = GatewayApi::start(gw.clone(), 0).unwrap();
+        let hostport = api.addr.to_string();
+
+        // alice's job names no queue -> her mapping moves it to 'ml'.
+        let body = render_submit_body("alice", 1, &job_conf("mapped"));
+        let (status, resp) =
+            http_request("POST", &format!("http://{hostport}/api/v1/jobs"), &body).unwrap();
+        assert_eq!(status, 201, "{resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.at(&["queue"]).and_then(|q| q.as_str()), Some("ml"));
+        assert_eq!(j.at(&["requested_queue"]).and_then(|q| q.as_str()), Some("default"));
+        assert_eq!(j.at(&["queue_remapped"]).and_then(|b| b.as_bool()), Some(true));
+
+        // bob has no mapping: default stays default, no remap flag.
+        let body = render_submit_body("bob", 1, &job_conf("plain"));
+        let (status, resp) =
+            http_request("POST", &format!("http://{hostport}/api/v1/jobs"), &body).unwrap();
+        assert_eq!(status, 201, "{resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.at(&["queue"]).and_then(|q| q.as_str()), Some("default"));
+        assert_eq!(j.at(&["queue_remapped"]).and_then(|b| b.as_bool()), Some(false));
+
+        assert!(gw.wait_idle(Duration::from_secs(120)));
         gw.shutdown();
     }
 }

@@ -476,6 +476,13 @@ impl Gateway {
         self.inner.lock().unwrap().jobs.get(&id).map(|j| j.state)
     }
 
+    /// The scheduler queue the job was admitted to (after user→queue
+    /// mapping) — what the submit response surfaces so a remap is never
+    /// silent.
+    pub fn job_queue(&self, id: u64) -> Option<String> {
+        self.inner.lock().unwrap().jobs.get(&id).map(|j| j.queue.clone())
+    }
+
     pub fn stats(&self) -> GatewayStats {
         self.inner.lock().unwrap().stats
     }
@@ -584,13 +591,19 @@ impl Gateway {
         // Snapshot under the gateway lock; the live AM state (its own
         // mutex, hammered by heartbeats) is only touched after release
         // so one status request cannot stall submits/kills/finalizes.
-        let (mut j, live) = {
+        let (mut j, live, app_id) = {
             let inner = self.inner.lock().unwrap();
             let job = inner.jobs.get(&id)?;
-            (Self::job_to_json(job), job.live.clone())
+            (Self::job_to_json(job), job.live.clone(), job.app_id)
         };
         if let Some(state) = live {
             j.set("phase", format!("{:?}", state.phase()));
+            // Gang-scheduler standing: WAITING_FOR_GANG while the job's
+            // wave can't yet be placed whole, PREEMPTING while the RM is
+            // clawing its containers back for a starved queue.
+            if let Some(app) = app_id {
+                j.set("sched_state", self.rm.app_sched_state(app).as_str());
+            }
             // Streaming Dr. Elephant verdicts for the running job —
             // stragglers are visible in gateway job status mid-run.
             let findings = crate::drelephant::analyze_live(&state);

@@ -10,6 +10,9 @@
 //! tony serve  [--nodes 8] [--port 8080] [--workers 8] [--queue-depth 64]
 //!             [--queues ml:0.6:0.8,etl:0.4:1.0] [--map alice=ml,bob=etl]
 //!             [--max-user-active 8] [--artifacts DIR]
+//!             [--gang-mode true|false] [--preemption true|false]
+//!             [--preemption-grace-ms 2000] [--preemption-max-victims 8]
+//!             [--reservation-limit 2]
 //! tony demo   [--artifacts artifacts/tiny] [--steps 10]
 //! tony history
 //! tony version
@@ -29,7 +32,7 @@ use tony::runtime::ArtifactMeta;
 use tony::tonyconf::{JobConfBuilder, JobSpec};
 use tony::util::bytes::parse_size;
 use tony::xmlconf::Configuration;
-use tony::yarn::{QueueConf, Resource, ResourceManager};
+use tony::yarn::{QueueConf, Resource, ResourceManager, RmConf, SchedulerConf};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
     let mut pos = Vec::new();
@@ -60,7 +63,9 @@ fn usage() -> ! {
          [--priority 1..10] [--no-wait]\n  \
          tony serve [--nodes 8] [--port 8080] [--workers 8] [--queue-depth 64] \
          [--queues name:cap:max,...] [--map user=queue,...] [--max-user-active 8] \
-         [--artifacts DIR]\n  \
+         [--artifacts DIR] [--gang-mode true|false] [--preemption true|false] \
+         [--preemption-grace-ms 2000] [--preemption-max-victims 8] \
+         [--reservation-limit 2]\n  \
          tony demo [--artifacts artifacts/tiny] [--steps 10]\n  tony history\n  tony version"
     );
     std::process::exit(2);
@@ -106,7 +111,22 @@ fn boot_cluster(flags: &BTreeMap<String, String>) -> Arc<ResourceManager> {
     let specs = (0..nodes)
         .map(|i| tony::yarn::NodeSpec::new(i, Resource::new(mem, cores, gpus)))
         .collect();
-    ResourceManager::start(specs, parse_queues(flags))
+    // Scheduler policy flags map onto the `tony.scheduler.*` site keys
+    // (docs/SCHEDULING.md); anything unset keeps the built-in default.
+    let mut site = Configuration::new();
+    for (flag, key) in [
+        ("gang-mode", "tony.scheduler.gang-mode"),
+        ("reservation-limit", "tony.scheduler.reservation-limit"),
+        ("preemption", "tony.scheduler.preemption.enable"),
+        ("preemption-grace-ms", "tony.scheduler.preemption.grace-ms"),
+        ("preemption-max-victims", "tony.scheduler.preemption.max-victims-per-round"),
+    ] {
+        if let Some(v) = flags.get(flag) {
+            site.set(key, v.as_str());
+        }
+    }
+    let conf = RmConf { scheduler: SchedulerConf::from_conf(&site), ..Default::default() };
+    ResourceManager::start_with(specs, parse_queues(flags), conf)
 }
 
 fn run_and_report(

@@ -405,16 +405,31 @@ impl PromText {
 /// endpoints agree on metric names.
 pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceManager) {
     type QueueGet = fn(&crate::yarn::QueueStat) -> f64;
-    let families: [(&str, &str, QueueGet); 5] = [
+    let families: [(&str, &str, QueueGet); 8] = [
         (
             "tony_queue_utilization",
             "Dominant-share utilization of each queue (used / cluster total).",
             |q| q.utilization,
         ),
         (
+            "tony_queue_guaranteed",
+            "Guaranteed (preemption-protected) share of each queue.",
+            |q| q.guaranteed,
+        ),
+        (
             "tony_queue_pending_asks",
             "Container asks waiting in each queue.",
             |q| q.pending as f64,
+        ),
+        (
+            "tony_queue_pending_gangs",
+            "Gangs waiting whole (all-or-nothing) in each queue.",
+            |q| q.pending_gangs as f64,
+        ),
+        (
+            "tony_queue_reservations",
+            "Node reservations held by each queue's blocked gangs.",
+            |q| q.reservations as f64,
         ),
         ("tony_queue_used_mem_mb", "Memory (MB) in use per queue.", |q| {
             q.used.memory_mb as f64
@@ -431,6 +446,40 @@ pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceMan
             prom.sample(name, &[("queue", q.name.as_str())], get(q));
         }
     }
+    prom.header(
+        "tony_queue_preemptions_total",
+        "counter",
+        "Victim containers preempted from each queue since RM start.",
+    );
+    for q in &stats {
+        prom.sample(
+            "tony_queue_preemptions_total",
+            &[("queue", q.name.as_str())],
+            q.preemptions as f64,
+        );
+    }
+    let sched = rm.scheduler_stats();
+    prom.header(
+        "tony_sched_unknown_queue_total",
+        "counter",
+        "Asks/releases that named an unknown queue (asks fall back to the first queue).",
+    );
+    prom.sample(
+        "tony_sched_unknown_queue_total",
+        &[("kind", "ask")],
+        sched.unknown_queue_asks as f64,
+    );
+    prom.sample(
+        "tony_sched_unknown_queue_total",
+        &[("kind", "release")],
+        sched.unknown_queue_releases as f64,
+    );
+    prom.header(
+        "tony_sched_gangs_placed_total",
+        "counter",
+        "Gangs committed atomically since RM start.",
+    );
+    prom.sample("tony_sched_gangs_placed_total", &[], sched.gangs_placed as f64);
     prom.header("tony_cluster_nodes_alive", "gauge", "Nodes currently alive in the cluster.");
     prom.sample("tony_cluster_nodes_alive", &[], rm.alive_node_count() as f64);
 }

@@ -54,10 +54,13 @@ pub mod tag {
     pub const KILL: u32 = 1 << 8;
     /// The owning daemon is shutting down.
     pub const SHUTDOWN: u32 = 1 << 9;
+    /// The RM issued a preemption notice for one of the waiter's
+    /// containers (a `Preempted` exit follows after the grace period).
+    pub const PREEMPT: u32 = 1 << 10;
 
     /// Human-readable rendering of a tag mask (diagnostics/log lines).
     pub fn names(mask: u32) -> String {
-        const ALL: [(u32, &str); 10] = [
+        const ALL: [(u32, &str); 11] = [
             (TICK, "tick"),
             (GRANT, "grant"),
             (COMPLETED, "completed"),
@@ -68,6 +71,7 @@ pub mod tag {
             (STATE, "state"),
             (KILL, "kill"),
             (SHUTDOWN, "shutdown"),
+            (PREEMPT, "preempt"),
         ];
         let parts: Vec<&str> =
             ALL.iter().filter(|(bit, _)| mask & bit != 0).map(|(_, n)| *n).collect();

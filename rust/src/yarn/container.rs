@@ -98,10 +98,14 @@ pub enum ExitStatus {
     Success,
     /// Non-zero exit from the task process.
     Failed(i32),
-    /// Killed by the framework (preemption / AM teardown).
+    /// Killed by the framework (AM teardown, RM kill).
     Killed,
     /// Lost because its node died.
     NodeLost,
+    /// Killed by the RM to restore another queue to its guaranteed
+    /// capacity (gang preemption).  The owning AM treats this like node
+    /// loss: surgical recovery re-requests just the preempted tasks.
+    Preempted,
 }
 
 impl ExitStatus {

@@ -9,7 +9,9 @@
 //! - **CapacityScheduler**: hierarchical queues with capacity /
 //!   max-capacity fractions, FIFO within a queue, node-label partitions
 //!   (e.g. `gpu`, `high-memory`), heterogeneous resource requests
-//!   (memory / vcores / GPUs per ask — §2.2's GPU-workers + CPU-only-PS).
+//!   (memory / vcores / GPUs per ask — §2.2's GPU-workers + CPU-only-PS),
+//!   plus gang (all-or-nothing) placement with reservations and
+//!   cross-queue capacity preemption (`docs/SCHEDULING.md`).
 //! - **NodeManagers (NM)**: per-node capacities, container start/stop,
 //!   liveness, failure injection (a killed node kills its containers and
 //!   the RM reports them lost to the owning AM).
@@ -30,6 +32,10 @@ pub use container::{Container, ContainerCtx, ContainerRequest, ContainerStatus, 
 pub use node::{NodeHandle, NodeSpec};
 pub use resources::Resource;
 pub use rm::{
-    AllocateResponse, AppReport, AppState, QueueStat, ResourceManager, RmConf, SubmissionContext,
+    AllocateResponse, AppReport, AppSchedState, AppState, QueueStat, ResourceManager, RmConf,
+    SubmissionContext,
 };
-pub use scheduler::{CapacityScheduler, QueueConf};
+pub use scheduler::{
+    AskIntake, CapacityScheduler, QueueConf, QueueSnapshot, SchedStats, SchedulerConf,
+    VictimCandidate,
+};

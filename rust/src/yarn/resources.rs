@@ -4,6 +4,25 @@
 //! meaningful: worker containers ask for GPUs, parameter-server containers
 //! don't (paper §2.2), and the scheduler must track both without letting
 //! either dimension oversubscribe.
+//!
+//! The scheduler scalarizes multi-dimensional usage with
+//! [`Resource::dominant_share`] (DRF-style: a queue's share is its most
+//! constrained dimension), which is what queue `capacity` /
+//! `max_capacity` fractions and preemption guarantees are measured
+//! against — see `docs/SCHEDULING.md`.
+//!
+//! # Example
+//!
+//! ```
+//! use tony::yarn::Resource;
+//!
+//! let node = Resource::new(8192, 8, 2);
+//! let ask = Resource::new(2048, 2, 1);
+//! assert!(node.fits(&ask));
+//! // DRF dominant share: GPUs are the scarcest dimension here.
+//! assert_eq!(ask.dominant_share(&node), 0.5);
+//! assert_eq!(node.checked_sub(&ask), Some(Resource::new(6144, 6, 1)));
+//! ```
 
 use std::fmt;
 use std::ops::{Add, AddAssign, Sub, SubAssign};
@@ -27,6 +46,13 @@ impl Resource {
     }
 
     /// True iff every dimension of `other` fits inside `self`.
+    ///
+    /// ```
+    /// use tony::yarn::Resource;
+    /// let node = Resource::new(4096, 4, 0);
+    /// assert!(node.fits(&Resource::new(4096, 4, 0)));
+    /// assert!(!node.fits(&Resource::new(1024, 1, 1)), "every dimension counts");
+    /// ```
     pub fn fits(&self, other: &Resource) -> bool {
         other.memory_mb <= self.memory_mb
             && other.vcores <= self.vcores
@@ -38,7 +64,15 @@ impl Resource {
     }
 
     /// Dominant share of `self` within `total` (DRF-style scalarization;
-    /// used for queue utilization accounting).
+    /// used for queue utilization accounting, the `capacity` /
+    /// `max_capacity` queue fractions, and preemption guarantees).
+    ///
+    /// ```
+    /// use tony::yarn::Resource;
+    /// let total = Resource::new(10000, 10, 2);
+    /// // 10% of memory, 50% of vcores, 50% of gpus -> 0.5 dominates.
+    /// assert_eq!(Resource::new(1000, 5, 1).dominant_share(&total), 0.5);
+    /// ```
     pub fn dominant_share(&self, total: &Resource) -> f64 {
         let mut share: f64 = 0.0;
         if total.memory_mb > 0 {

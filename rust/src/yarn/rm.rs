@@ -31,7 +31,9 @@ use crate::{tdebug, tinfo, twarn};
 use super::container::{Container, ContainerCtx, ContainerRequest, ContainerStatus, ExitStatus, Launchable};
 use super::node::{NodeHandle, NodeSpec};
 use super::resources::Resource;
-use super::scheduler::{CapacityScheduler, QueueConf, SchedNode};
+use super::scheduler::{
+    CapacityScheduler, QueueConf, SchedNode, SchedStats, SchedulerConf, VictimCandidate,
+};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AppState {
@@ -68,6 +70,37 @@ pub struct QueueStat {
     pub pending: usize,
     /// Dominant-share utilization in [0, 1] (used / cluster total).
     pub utilization: f64,
+    /// Guaranteed share of the cluster in [0, 1] (preemption restores a
+    /// starved queue up to this).
+    pub guaranteed: f64,
+    /// Distinct gangs still waiting in this queue.
+    pub pending_gangs: usize,
+    /// Node reservations currently held by this queue's blocked gangs.
+    pub reservations: usize,
+    /// Victim containers preempted *from* this queue since startup.
+    pub preemptions: u64,
+}
+
+/// Where an application stands with the gang scheduler — surfaced by the
+/// gateway as per-job state (`WAITING_FOR_GANG`, `PREEMPTING`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppSchedState {
+    /// No gang waiting, nothing being preempted.
+    Normal,
+    /// The app has a gang pending (possibly holding a reservation).
+    WaitingForGang,
+    /// At least one of the app's containers has a preemption notice.
+    Preempting,
+}
+
+impl AppSchedState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AppSchedState::Normal => "NORMAL",
+            AppSchedState::WaitingForGang => "WAITING_FOR_GANG",
+            AppSchedState::Preempting => "PREEMPTING",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -81,6 +114,10 @@ pub struct SubmissionContext {
 pub struct AllocateResponse {
     pub allocated: Vec<Container>,
     pub completed: Vec<ContainerStatus>,
+    /// Containers of this app under a preemption notice: they will exit
+    /// `Preempted` once the grace period elapses (mirrors YARN's
+    /// preemption message in the allocate response).
+    pub preempt_notices: Vec<ContainerId>,
 }
 
 struct LiveContainer {
@@ -89,7 +126,26 @@ struct LiveContainer {
     app: ApplicationId,
     queue: String,
     started: bool,
+    /// Gang this container was granted as part of (victim selection
+    /// takes whole gangs last).
+    gang: Option<u64>,
+    /// Monotonic grant sequence (victim selection is newest-first).
+    seq: u64,
 }
+
+/// A container the RM decided to preempt: notice issued, kill pending
+/// until the grace deadline.  Once the kill is sent, `deadline_ms` is
+/// re-armed as the zombie give-up deadline.
+struct PreemptState {
+    deadline_ms: u64,
+    kill_sent: bool,
+}
+
+/// How long after its kill a victim may take to actually exit before
+/// the RM abandons the preemption notice.  A wedged container ignoring
+/// the (cooperative) kill must not pin preemption planning — or the
+/// demanding gang's reservation — forever.
+const PREEMPT_ZOMBIE_GIVEUP_MS: u64 = 30_000;
 
 struct App {
     name: String,
@@ -100,6 +156,8 @@ struct App {
     am_container: Option<ContainerId>,
     allocated_ready: Vec<Container>,
     completed_ready: Vec<ContainerStatus>,
+    /// Preemption notices awaiting the app's next allocate call.
+    preempt_ready: Vec<ContainerId>,
 }
 
 struct Inner {
@@ -116,9 +174,14 @@ struct Inner {
     /// grants / completed containers so the AM monitor loop blocks on
     /// events instead of polling `allocate` on a fixed interval.
     am_wakers: HashMap<ApplicationId, Arc<WakeupBus>>,
+    /// Containers under a preemption notice, keyed by the grace deadline
+    /// they will be killed at.
+    preempting: HashMap<ContainerId, PreemptState>,
     next_app_seq: u64,
     next_container_seq: u64,
     next_tag: u64,
+    next_gang: u64,
+    grant_seq: u64,
 }
 
 /// Construction knobs for [`ResourceManager::start_with`].
@@ -132,11 +195,18 @@ pub struct RmConf {
     /// `0` disables the tick — scheduling is then purely event-driven,
     /// which the manual-clock tests use to prove no poll is needed.
     pub fallback_tick_ms: u64,
+    /// Gang/reservation/preemption policy (the `tony.scheduler.*` keys;
+    /// see [`SchedulerConf::from_conf`] and `docs/SCHEDULING.md`).
+    pub scheduler: SchedulerConf,
 }
 
 impl Default for RmConf {
     fn default() -> RmConf {
-        RmConf { clock: SystemClock::shared(), fallback_tick_ms: 1_000 }
+        RmConf {
+            clock: SystemClock::shared(),
+            fallback_tick_ms: 1_000,
+            scheduler: SchedulerConf::default(),
+        }
     }
 }
 
@@ -144,6 +214,11 @@ impl Default for RmConf {
 pub struct ResourceManager {
     pub cluster_ts: u64,
     clock: Arc<dyn Clock>,
+    /// Self-reference for detached helper threads (preemption grace
+    /// waiters) that must not keep the RM alive.
+    self_weak: Weak<ResourceManager>,
+    /// Gang/preemption policy this RM runs with (immutable for its life).
+    sched: SchedulerConf,
     /// Notified (`tag::STATE`) on every application state change;
     /// `wait_for_completion` waiters block on its sequence.
     events: Arc<WakeupBus>,
@@ -180,6 +255,7 @@ impl ResourceManager {
             None
         };
         let rm = Arc::new_cyclic(|weak: &Weak<ResourceManager>| {
+            let self_weak = weak.clone();
             let weak = weak.clone();
             let cb: super::node::CompletionFn = Arc::new(move |node, cid, status| {
                 if let Some(rm) = weak.upgrade() {
@@ -194,22 +270,29 @@ impl ResourceManager {
                 .into_iter()
                 .map(|s| Arc::new(NodeHandle::new(s, cb.clone())))
                 .collect();
+            let mut scheduler = CapacityScheduler::new(queues, total);
+            scheduler.set_reservation_limit(conf.scheduler.reservation_limit);
             ResourceManager {
                 cluster_ts,
                 clock: conf.clock.clone(),
+                self_weak,
+                sched: conf.scheduler.clone(),
                 events,
                 tick_bus: tick_bus.clone(),
                 inner: Mutex::new(Inner {
                     nodes,
                     node_free,
-                    scheduler: CapacityScheduler::new(queues, total),
+                    scheduler,
                     apps: HashMap::new(),
                     containers: HashMap::new(),
                     pending_am: HashMap::new(),
                     am_wakers: HashMap::new(),
+                    preempting: HashMap::new(),
                     next_app_seq: 1,
                     next_container_seq: 1,
                     next_tag: 1,
+                    next_gang: 1,
+                    grant_seq: 1,
                 }),
             }
         });
@@ -304,6 +387,7 @@ impl ResourceManager {
                 am_container: None,
                 allocated_ready: Vec::new(),
                 completed_ready: Vec::new(),
+                preempt_ready: Vec::new(),
             },
         );
         let tag = inner.next_tag;
@@ -397,13 +481,24 @@ impl ResourceManager {
         if !asks.is_empty() {
             let queue = inner.apps[&id].queue.clone();
             let tag = inner.next_tag;
-            inner.next_tag = inner.scheduler.add_asks(id, &queue, asks, tag);
+            // Gang mode: every allocate round's asks form one gang — the
+            // AM's initial wave and each recovery wave are placed
+            // all-or-nothing.  Legacy mode leaves them independent.
+            let gang = if self.sched.gang_mode {
+                let g = inner.next_gang;
+                inner.next_gang += 1;
+                Some(g)
+            } else {
+                None
+            };
+            inner.next_tag = inner.scheduler.add_asks_gang(id, &queue, asks, tag, gang).next_tag;
         }
         self.schedule_locked(&mut inner);
         let app = inner.apps.get_mut(&id).unwrap();
         Ok(AllocateResponse {
             allocated: std::mem::take(&mut app.allocated_ready),
             completed: std::mem::take(&mut app.completed_ready),
+            preempt_notices: std::mem::take(&mut app.preempt_ready),
         })
     }
 
@@ -520,27 +615,51 @@ impl ResourceManager {
     }
 
     /// One observability snapshot per queue: used resources, pending
-    /// asks, and dominant-share utilization against the cluster total.
-    /// Feeds the `/metrics` endpoints and the AM's sampled gauges.
+    /// asks/gangs, reservations, preemptions, and dominant-share
+    /// utilization against the cluster total.  Feeds the `/metrics`
+    /// endpoints and the AM's sampled gauges.
     pub fn queue_stats(&self) -> Vec<QueueStat> {
         let inner = self.inner.lock().unwrap();
         let total = inner.scheduler.cluster_total();
-        let pending: std::collections::BTreeMap<String, usize> =
-            inner.scheduler.pending_per_queue().into_iter().collect();
         inner
             .scheduler
-            .queue_names()
+            .queue_snapshots()
             .into_iter()
-            .map(|name| {
-                let used = inner.scheduler.queue_used(&name).unwrap_or(Resource::ZERO);
-                QueueStat {
-                    utilization: used.dominant_share(&total),
-                    pending: pending.get(&name).copied().unwrap_or(0),
-                    used,
-                    name,
-                }
+            .map(|s| QueueStat {
+                utilization: s.used.dominant_share(&total),
+                pending: s.pending_asks,
+                used: s.used,
+                guaranteed: s.capacity,
+                pending_gangs: s.pending_gangs,
+                reservations: s.reservations,
+                preemptions: s.preemptions,
+                name: s.name,
             })
             .collect()
+    }
+
+    /// The scheduler's monotonic counters (unknown-queue remaps/releases,
+    /// gangs placed, reservations, preemptions) — see
+    /// [`SchedStats`].
+    pub fn scheduler_stats(&self) -> SchedStats {
+        self.inner.lock().unwrap().scheduler.stats()
+    }
+
+    /// Where `id` stands with the gang scheduler (the gateway surfaces
+    /// this as per-job `WAITING_FOR_GANG` / `PREEMPTING` state).
+    pub fn app_sched_state(&self, id: ApplicationId) -> AppSchedState {
+        let inner = self.inner.lock().unwrap();
+        let preempting = inner
+            .preempting
+            .keys()
+            .any(|cid| inner.containers.get(cid).map(|c| c.app == id).unwrap_or(false));
+        if preempting {
+            AppSchedState::Preempting
+        } else if inner.scheduler.has_pending_gang(id) {
+            AppSchedState::WaitingForGang
+        } else {
+            AppSchedState::Normal
+        }
     }
 
     pub fn set_tracking_url(&self, id: ApplicationId, url: String) {
@@ -572,9 +691,9 @@ impl ResourceManager {
         }
     }
 
-    fn schedule_locked(&self, inner: &mut Inner) {
-        // Build the scheduler's node view from alive nodes only.
-        let mut view: Vec<SchedNode> = inner
+    /// The scheduler's view of the alive part of the cluster.
+    fn node_view(inner: &Inner) -> Vec<SchedNode> {
+        inner
             .nodes
             .iter()
             .filter(|n| n.is_alive())
@@ -583,9 +702,14 @@ impl ResourceManager {
                     id: n.spec.id,
                     label: n.spec.label.clone(),
                     free: *free,
+                    capacity: n.spec.capacity,
                 })
             })
-            .collect();
+            .collect()
+    }
+
+    fn schedule_locked(&self, inner: &mut Inner) {
+        let mut view = Self::node_view(inner);
         let grants = inner.scheduler.schedule(&mut view);
         for n in &view {
             inner.node_free.insert(n.id, n.free);
@@ -600,6 +724,8 @@ impl ResourceManager {
                 resource: grant.ask.resource,
                 priority: grant.ask.priority,
             };
+            let seq = inner.grant_seq;
+            inner.grant_seq += 1;
             inner.containers.insert(
                 cid,
                 LiveContainer {
@@ -608,6 +734,8 @@ impl ResourceManager {
                     app: grant.ask.app,
                     queue: grant.ask.queue.clone(),
                     started: false,
+                    gang: grant.ask.gang,
+                    seq,
                 },
             );
             if let Some((app_id, am_code)) = inner.pending_am.remove(&grant.ask.tag) {
@@ -639,11 +767,195 @@ impl ResourceManager {
                 }
             }
         }
+        self.preempt_locked(inner);
+    }
+
+    /// Capacity preemption: enforce expired grace deadlines, then plan at
+    /// most one new round.  Runs after every scheduling pass (allocate,
+    /// release, completion, fallback tick), so under a system clock a
+    /// grace deadline expires within one tick of becoming due.
+    fn preempt_locked(&self, inner: &mut Inner) {
+        if !self.sched.preemption {
+            return;
+        }
+        let now = self.clock.now_ms();
+        // 0. Abandon victims that ignored their kill: their capacity is
+        //    still booked (they ARE still running), so planning simply
+        //    routes around them — but a wedged container must not gate
+        //    all future preemption (step 2's settle guard) forever.  If
+        //    it ever exits after this, it reports as a plain kill.
+        let zombies: Vec<ContainerId> = inner
+            .preempting
+            .iter()
+            .filter(|(_, st)| st.kill_sent && now >= st.deadline_ms)
+            .map(|(cid, _)| *cid)
+            .collect();
+        for cid in zombies {
+            twarn!("rm", "preempted {cid} never exited; abandoning the preemption notice");
+            inner.preempting.remove(&cid);
+        }
+        // 1. Kill victims whose grace elapsed.  The completion callback
+        //    rewrites their exit status to `Preempted`.
+        let due: Vec<ContainerId> = inner
+            .preempting
+            .iter()
+            .filter(|(_, st)| !st.kill_sent && now >= st.deadline_ms)
+            .map(|(cid, _)| *cid)
+            .collect();
+        self.preempt_enforce_now_locked(inner, due);
+        // 2. Plan a new round — but only once the previous round fully
+        //    settled (every victim's completion arrived).  Planning over
+        //    in-flight kills would not see their capacity as free yet and
+        //    would select extra victims for the same shortfall.
+        if !inner.preempting.is_empty() {
+            return;
+        }
+        //    AM containers are never victims (killing the AM kills the
+        //    whole app — far more than one round's worth of capacity).
+        let view = Self::node_view(inner);
+        let am_containers: std::collections::HashSet<ContainerId> =
+            inner.apps.values().filter_map(|a| a.am_container).collect();
+        let candidates: Vec<VictimCandidate> = inner
+            .containers
+            .iter()
+            .filter(|(cid, live)| {
+                live.started
+                    && !inner.preempting.contains_key(*cid)
+                    && !am_containers.contains(*cid)
+            })
+            .map(|(cid, live)| VictimCandidate {
+                container: *cid,
+                app: live.app,
+                queue: live.queue.clone(),
+                node: live.node,
+                resource: live.resource,
+                gang: live.gang,
+                seq: live.seq,
+            })
+            .collect();
+        let victims =
+            inner
+                .scheduler
+                .preemption_plan(&view, &candidates, self.sched.preemption_max_victims);
+        if victims.is_empty() {
+            return;
+        }
+        let deadline = now.saturating_add(self.sched.preemption_grace_ms);
+        for v in &victims {
+            twarn!(
+                "rm",
+                "preempting {} (app {}, queue '{}'); grace {} ms",
+                v.container,
+                v.app,
+                v.queue,
+                self.sched.preemption_grace_ms
+            );
+            inner
+                .preempting
+                .insert(v.container, PreemptState { deadline_ms: deadline, kill_sent: false });
+            if let Some(app) = inner.apps.get_mut(&v.app) {
+                app.preempt_ready.push(v.container);
+            }
+            if let Some(waker) = inner.am_wakers.get(&v.app) {
+                waker.notify(tag::PREEMPT);
+            }
+        }
+        if self.sched.preemption_grace_ms == 0 {
+            // Zero grace: kill in the same pass instead of waiting for
+            // the next scheduling event to notice the expired deadline.
+            self.preempt_enforce_now_locked(inner, victims.iter().map(|v| v.container).collect());
+        } else {
+            // Grace enforcement must not depend on another scheduling
+            // event happening to land after the deadline (with all
+            // fallback ticks disabled, a quiescent cluster would never
+            // kill the victims).
+            self.spawn_preempt_waiter(deadline);
+        }
+    }
+
+    /// Detached one-shot preemption timer: naps to `deadline_ms` on a
+    /// clock-registered bus (manual clocks wake it on advance), then
+    /// re-runs preemption enforcement/planning.  Holds only a `Weak`,
+    /// so it dies with the RM.  Used for both the grace deadline (kill
+    /// the victims) and the zombie give-up deadline (stop letting a
+    /// wedged victim gate future planning).
+    fn spawn_preempt_waiter(&self, deadline_ms: u64) {
+        let weak = self.self_weak.clone();
+        let clock = self.clock.clone();
+        let _ = std::thread::Builder::new().name("rm-preempt-timer".into()).spawn(move || {
+            let bus = WakeupBus::for_clock(&clock);
+            while clock.now_ms() < deadline_ms {
+                if weak.upgrade().is_none() {
+                    return; // RM gone; nothing left to enforce
+                }
+                bus.wait_until(&*clock, deadline_ms);
+            }
+            if let Some(rm) = weak.upgrade() {
+                let mut inner = rm.inner.lock().unwrap();
+                rm.preempt_locked(&mut inner);
+            }
+        });
+    }
+
+    /// Kill (or free) the given preempting containers right now — the
+    /// grace-elapsed path and the zero-grace path share this triage.
+    fn preempt_enforce_now_locked(&self, inner: &mut Inner, cids: Vec<ContainerId>) {
+        let mut zombie_deadline = None;
+        for cid in cids {
+            // Triage under a short borrow of the container table, act
+            // once it ends.
+            let (started, node) = match inner.containers.get(&cid) {
+                Some(live) => (
+                    Some(live.started),
+                    inner.nodes.iter().find(|n| n.spec.id == live.node).cloned(),
+                ),
+                None => (None, None),
+            };
+            match started {
+                Some(true) => {
+                    if let Some(st) = inner.preempting.get_mut(&cid) {
+                        st.kill_sent = true;
+                        // Re-arm as the zombie give-up deadline.
+                        st.deadline_ms =
+                            self.clock.now_ms().saturating_add(PREEMPT_ZOMBIE_GIVEUP_MS);
+                        zombie_deadline = Some(st.deadline_ms);
+                    }
+                    twarn!("rm", "preempting {cid}: grace over, killing");
+                    if let Some(n) = node {
+                        n.stop_container(cid);
+                    }
+                }
+                Some(false) => {
+                    // Granted but never started: free it synchronously
+                    // (no container thread exists to report an exit).
+                    inner.preempting.remove(&cid);
+                    self.release_container_locked(inner, cid);
+                }
+                None => {
+                    inner.preempting.remove(&cid);
+                }
+            }
+        }
+        // The zombie give-up needs its own wakeup for the same reason the
+        // grace deadline does: on a quiescent cluster no scheduling event
+        // may land after it, and a wedged victim would otherwise gate all
+        // future planning forever (step 2's settle guard).
+        if let Some(d) = zombie_deadline {
+            self.spawn_preempt_waiter(d);
+        }
     }
 
     fn on_container_complete(&self, node: NodeId, cid: ContainerId, status: ExitStatus) {
         let mut inner = self.inner.lock().unwrap();
         let Some(live) = inner.containers.remove(&cid) else { return };
+        // A kill that lands while the container is under a preemption
+        // notice is reported as `Preempted`, so the owning AM can treat
+        // it as node-loss-style recovery rather than a task failure.
+        let status = if inner.preempting.remove(&cid).is_some() && status == ExitStatus::Killed {
+            ExitStatus::Preempted
+        } else {
+            status
+        };
         // Return capacity (node may be dead and absent from node_free).
         if let Some(free) = inner.node_free.get_mut(&live.node) {
             *free += live.resource;
@@ -698,8 +1010,20 @@ impl ResourceManager {
         }
         app.state = state;
         app.diagnostics = diagnostics.to_string();
+        app.preempt_ready.clear();
         tinfo!("rm", "{id} -> {state:?} ({diagnostics})");
         inner.scheduler.remove_app(id);
+        // Cancel preemption notices for this app's containers — they are
+        // about to die as plain teardown kills, not preemptions.
+        let doomed: Vec<ContainerId> = inner
+            .preempting
+            .keys()
+            .filter(|cid| inner.containers.get(*cid).map(|c| c.app == id).unwrap_or(false))
+            .copied()
+            .collect();
+        for cid in doomed {
+            inner.preempting.remove(&cid);
+        }
         // Kill every container of this app that is still alive.
         let to_kill: Vec<(ContainerId, NodeId, bool)> = inner
             .containers
@@ -873,7 +1197,7 @@ mod tests {
         let rm = ResourceManager::start_with(
             vec![NodeSpec::new(0, Resource::new(1024, 2, 0))],
             QueueConf::default_only(),
-            RmConf { clock: clock.clone(), fallback_tick_ms: 0 },
+            RmConf { clock: clock.clone(), fallback_tick_ms: 0, ..Default::default() },
         );
 
         // App A's AM grabs the rest of the node, holds it until told to
@@ -955,7 +1279,7 @@ mod tests {
         let rm = ResourceManager::start_with(
             vec![NodeSpec::new(0, Resource::new(1024, 1, 0))],
             QueueConf::default_only(),
-            RmConf { clock: clock.clone(), fallback_tick_ms: 0 },
+            RmConf { clock: clock.clone(), fallback_tick_ms: 0, ..Default::default() },
         );
         let id = rm
             .submit_application(

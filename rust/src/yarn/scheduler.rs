@@ -1,27 +1,81 @@
 //! CapacityScheduler: hierarchical-capacity queue scheduling over
-//! label-partitioned nodes.
+//! label-partitioned nodes, with **gang (all-or-nothing) placement**,
+//! **reservations**, and **cross-queue capacity preemption**.
 //!
 //! Pure logic (no threads, no clock) so it is directly unit- and
-//! property-testable: `schedule()` takes the current node free-list and
-//! returns grants; the RM applies them.  Invariants enforced here and
-//! checked by `rust/tests/prop_scheduler.rs`:
+//! property-testable: [`CapacityScheduler::schedule`] takes the current
+//! node free-list and returns grants; the RM applies them.  Invariants
+//! enforced here and checked by `rust/tests/prop_scheduler.rs`:
 //!
 //! 1. a grant never exceeds the free capacity of its node (no dimension
 //!    oversubscribes),
 //! 2. label partitions are respected (an ask with label L is only placed
 //!    on nodes with label L; unlabeled asks go to unlabeled nodes),
 //! 3. a queue's usage never exceeds `max_capacity` × cluster total
-//!    (dominant-share), and
-//! 4. FIFO order within a queue per priority level.
+//!    (dominant-share),
+//! 4. FIFO order within a queue per priority level, and
+//! 5. a **gang** (asks sharing a gang id) is granted fully or not at all
+//!    — never partially, which is what prevents the classic distributed-
+//!    training deadlock where two jobs each hold half their workers and
+//!    wait forever for the other half (see `docs/SCHEDULING.md`).
+//!
+//! Blocked gangs take **reservations**: up to `reservation_limit` gangs
+//! that are feasible at node *capacity* but not at current *free* claim
+//! the node set a dry-run placement chose; reserved nodes accept no new
+//! placements from anyone else, so the gang accumulates claim on
+//! draining nodes instead of being starved by a stream of small asks.
+//!
+//! **Preemption** ([`CapacityScheduler::preemption_plan`]) restores a
+//! queue to its guaranteed capacity: when an under-guarantee queue has a
+//! placeable-but-blocked gang, victims are selected from queues over
+//! their guarantee — newest grants first, whole gangs last — until a
+//! simulated placement of the gang succeeds.  A round is all-or-nothing
+//! (no victims are proposed unless they actually unblock the gang) and
+//! never drives a victim queue below its own guarantee.
+//!
+//! # Example
+//!
+//! ```
+//! use tony::util::ids::ApplicationId;
+//! use tony::yarn::scheduler::SchedNode;
+//! use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
+//!
+//! let mut nodes = vec![
+//!     SchedNode::new(0, None, Resource::new(2048, 4, 0)),
+//!     SchedNode::new(1, None, Resource::new(2048, 4, 0)),
+//! ];
+//! let mut sched = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 8, 0));
+//! let app = ApplicationId { cluster_ts: 1, seq: 1 };
+//! // A gang of three 1 GiB workers: placed all-or-nothing.
+//! let intake = sched.add_asks_gang(
+//!     app,
+//!     "default",
+//!     &[ContainerRequest::new(Resource::new(1024, 1, 0), 3)],
+//!     0,
+//!     Some(1),
+//! );
+//! assert!(!intake.remapped);
+//! let grants = sched.schedule(&mut nodes);
+//! assert_eq!(grants.len(), 3, "the whole gang fits, so the whole gang lands");
+//! ```
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use crate::util::ids::{ApplicationId, NodeId};
+use crate::util::ids::{ApplicationId, ContainerId, NodeId};
+use crate::xmlconf::Configuration;
+use crate::{tdebug, twarn};
 
 use super::container::ContainerRequest;
 use super::resources::Resource;
 
+/// Float slack for dominant-share comparisons.
+const EPS: f64 = 1e-9;
+
 /// Static queue configuration (fractions of the cluster).
+///
+/// `capacity` is the queue's *guaranteed* share — what preemption will
+/// restore it to when it is starved; `max_capacity` is the hard ceiling
+/// a bursting queue may reach while the cluster has slack.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QueueConf {
     pub name: String,
@@ -42,6 +96,57 @@ impl QueueConf {
     }
 }
 
+/// The `tony.scheduler.*` policy knobs (parsed by
+/// [`SchedulerConf::from_conf`]; every key is documented in
+/// `docs/CONFIGURATION.md` and `docs/SCHEDULING.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConf {
+    /// Group each AM allocate round into a gang placed all-or-nothing.
+    /// `false` restores the legacy per-container trickle for A/B runs.
+    pub gang_mode: bool,
+    /// How many blocked gangs may hold node reservations at once.
+    pub reservation_limit: usize,
+    /// Enable cross-queue capacity preemption.
+    pub preemption: bool,
+    /// Grace period between the preemption notice and the kill.
+    pub preemption_grace_ms: u64,
+    /// Most victim containers one preemption round may claim.
+    pub preemption_max_victims: usize,
+}
+
+impl Default for SchedulerConf {
+    fn default() -> SchedulerConf {
+        SchedulerConf {
+            gang_mode: true,
+            reservation_limit: 2,
+            preemption: false,
+            preemption_grace_ms: 2_000,
+            preemption_max_victims: 8,
+        }
+    }
+}
+
+impl SchedulerConf {
+    /// Read the `tony.scheduler.*` keys from a site configuration,
+    /// falling back to the defaults above for anything unset.
+    pub fn from_conf(conf: &Configuration) -> SchedulerConf {
+        let d = SchedulerConf::default();
+        SchedulerConf {
+            gang_mode: conf.get_bool("tony.scheduler.gang-mode", d.gang_mode),
+            reservation_limit: conf
+                .get_u64("tony.scheduler.reservation-limit", d.reservation_limit as u64)
+                as usize,
+            preemption: conf.get_bool("tony.scheduler.preemption.enable", d.preemption),
+            preemption_grace_ms: conf
+                .get_u64("tony.scheduler.preemption.grace-ms", d.preemption_grace_ms),
+            preemption_max_victims: conf.get_u64(
+                "tony.scheduler.preemption.max-victims-per-round",
+                d.preemption_max_victims as u64,
+            ) as usize,
+        }
+    }
+}
+
 /// One outstanding single-container ask.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Ask {
@@ -52,6 +157,9 @@ pub struct Ask {
     pub priority: u8,
     /// Opaque correlation id chosen by the asker.
     pub tag: u64,
+    /// Gang membership: asks sharing a gang id are placed all-or-nothing
+    /// (`None` = legacy per-container placement).
+    pub gang: Option<u64>,
 }
 
 /// A scheduling decision: place `ask` on `node`.
@@ -66,22 +174,123 @@ pub struct Grant {
 pub struct SchedNode {
     pub id: NodeId,
     pub label: Option<String>,
+    /// Capacity not currently granted to anyone.
     pub free: Resource,
+    /// Total capacity — what reservations measure feasibility against
+    /// (a gang that fits an *empty* node set will fit once it drains).
+    pub capacity: Resource,
+}
+
+impl SchedNode {
+    /// A fully idle node (`free == capacity`).
+    pub fn new(id: u32, label: Option<String>, capacity: Resource) -> SchedNode {
+        SchedNode { id: NodeId(id), label, free: capacity, capacity }
+    }
+}
+
+/// Outcome of [`CapacityScheduler::add_asks_gang`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AskIntake {
+    /// First unused correlation tag (callers thread this forward).
+    pub next_tag: u64,
+    /// The queue actually charged.
+    pub queue: String,
+    /// True when the requested queue was unknown and the asks fell back
+    /// to the first configured queue (also logged + counted in
+    /// [`SchedStats::unknown_queue_asks`]).
+    pub remapped: bool,
+}
+
+/// Monotonic counters kept by the scheduler (observability; see
+/// `docs/METRICS.md`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Asks submitted to an unknown queue and remapped to the first one.
+    pub unknown_queue_asks: u64,
+    /// Releases naming an unknown queue (capacity silently un-tracked).
+    pub unknown_queue_releases: u64,
+    /// Gangs committed atomically.
+    pub gangs_placed: u64,
+    /// Gangs that could never be satisfied atomically (bigger than the
+    /// queue ceiling, or infeasible even on an empty cluster) and were
+    /// demoted to legacy per-container placement instead of hanging.
+    pub gangs_demoted: u64,
+    /// Reservations taken by blocked gangs.
+    pub reservations_made: u64,
+    /// Preemption rounds that produced victims.
+    pub preemption_rounds: u64,
+    /// Victim containers selected across all rounds.
+    pub preemptions: u64,
+}
+
+/// Per-queue observability snapshot (feeds `ResourceManager::queue_stats`
+/// and the `/metrics` endpoints).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueSnapshot {
+    pub name: String,
+    /// Guaranteed share in [0, 1].
+    pub capacity: f64,
+    /// Hard ceiling in [0, 1].
+    pub max_capacity: f64,
+    pub used: Resource,
+    pub pending_asks: usize,
+    /// Distinct gangs still waiting in this queue.
+    pub pending_gangs: usize,
+    /// Reservations currently held by this queue's gangs.
+    pub reservations: usize,
+    /// Victim containers taken *from* this queue since startup.
+    pub preemptions: u64,
+}
+
+/// A running container offered to [`CapacityScheduler::preemption_plan`]
+/// as a potential victim (built by the RM from its live-container table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VictimCandidate {
+    pub container: ContainerId,
+    pub app: ApplicationId,
+    pub queue: String,
+    pub node: NodeId,
+    pub resource: Resource,
+    pub gang: Option<u64>,
+    /// Monotonic grant sequence — higher means more recently granted
+    /// (victims are taken newest-first).
+    pub seq: u64,
 }
 
 #[derive(Debug)]
 struct Queue {
     conf: QueueConf,
     used: Resource,
+    /// Victims preempted from this queue since startup.
+    preemptions: u64,
     /// FIFO of pending asks (stable order; higher priority first is
     /// achieved by scanning priorities descending).
     pending: VecDeque<Ask>,
+}
+
+/// A blocked gang's claim on a set of draining nodes.
+#[derive(Debug, Clone)]
+struct Reservation {
+    gang: u64,
+    queue: usize,
+    nodes: Vec<NodeId>,
+}
+
+/// One schedulable unit: a single ask or a whole gang.
+struct Unit {
+    prio: u8,
+    first: usize,
+    idxs: Vec<usize>,
+    gang: Option<u64>,
 }
 
 #[derive(Debug)]
 pub struct CapacityScheduler {
     queues: Vec<Queue>,
     cluster_total: Resource,
+    reservation_limit: usize,
+    reservations: Vec<Reservation>,
+    stats: SchedStats,
 }
 
 impl CapacityScheduler {
@@ -95,10 +304,24 @@ impl CapacityScheduler {
         CapacityScheduler {
             queues: queues
                 .into_iter()
-                .map(|conf| Queue { conf, used: Resource::ZERO, pending: VecDeque::new() })
+                .map(|conf| Queue {
+                    conf,
+                    used: Resource::ZERO,
+                    preemptions: 0,
+                    pending: VecDeque::new(),
+                })
                 .collect(),
             cluster_total,
+            reservation_limit: SchedulerConf::default().reservation_limit,
+            reservations: Vec::new(),
+            stats: SchedStats::default(),
         }
+    }
+
+    /// Cap on concurrently reserved gangs
+    /// (`tony.scheduler.reservation-limit`).
+    pub fn set_reservation_limit(&mut self, limit: usize) {
+        self.reservation_limit = limit;
     }
 
     pub fn set_cluster_total(&mut self, total: Resource) {
@@ -130,23 +353,87 @@ impl CapacityScheduler {
             .collect()
     }
 
+    /// Monotonic scheduler counters (see [`SchedStats`]).
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    /// Number of reservations currently held.
+    pub fn reservation_count(&self) -> usize {
+        self.reservations.len()
+    }
+
+    /// True when `app` has gang asks still waiting (the gateway surfaces
+    /// this as the job-level `WAITING_FOR_GANG` state).
+    pub fn has_pending_gang(&self, app: ApplicationId) -> bool {
+        self.queues
+            .iter()
+            .any(|q| q.pending.iter().any(|a| a.app == app && a.gang.is_some()))
+    }
+
+    /// One observability snapshot per queue.
+    pub fn queue_snapshots(&self) -> Vec<QueueSnapshot> {
+        self.queues
+            .iter()
+            .enumerate()
+            .map(|(qi, q)| {
+                let gangs: BTreeSet<u64> =
+                    q.pending.iter().filter_map(|a| a.gang).collect();
+                QueueSnapshot {
+                    name: q.conf.name.clone(),
+                    capacity: q.conf.capacity,
+                    max_capacity: q.conf.max_capacity,
+                    used: q.used,
+                    pending_asks: q.pending.len(),
+                    pending_gangs: gangs.len(),
+                    reservations: self.reservations.iter().filter(|r| r.queue == qi).count(),
+                    preemptions: q.preemptions,
+                }
+            })
+            .collect()
+    }
+
     fn queue_mut(&mut self, name: &str) -> Option<&mut Queue> {
         self.queues.iter_mut().find(|q| q.conf.name == name)
     }
 
     /// Enqueue asks from an AM heartbeat (expanding multi-count requests).
-    /// Unknown queues fall back to the first queue.
+    /// Unknown queues fall back to the first queue (logged + counted; see
+    /// [`CapacityScheduler::add_asks_gang`] for the variant that reports
+    /// the remap to the caller).
     pub fn add_asks(
         &mut self,
         app: ApplicationId,
         queue: &str,
         requests: &[ContainerRequest],
-        mut tag_start: u64,
+        tag_start: u64,
     ) -> u64 {
-        let qname = if self.queue_mut(queue).is_some() {
-            queue.to_string()
+        self.add_asks_gang(app, queue, requests, tag_start, None).next_tag
+    }
+
+    /// Enqueue asks, optionally as members of gang `gang` (placed
+    /// all-or-nothing).  An unknown queue falls back to the first
+    /// configured queue; the remap is logged, counted in
+    /// [`SchedStats::unknown_queue_asks`], and reported in the returned
+    /// [`AskIntake`] so callers can surface it instead of hiding it.
+    pub fn add_asks_gang(
+        &mut self,
+        app: ApplicationId,
+        queue: &str,
+        requests: &[ContainerRequest],
+        mut tag_start: u64,
+        gang: Option<u64>,
+    ) -> AskIntake {
+        let (qname, remapped) = if self.queue_mut(queue).is_some() {
+            (queue.to_string(), false)
         } else {
-            self.queues[0].conf.name.clone()
+            let fallback = self.queues[0].conf.name.clone();
+            self.stats.unknown_queue_asks += 1;
+            twarn!(
+                "sched",
+                "{app} asked unknown queue '{queue}'; remapped to '{fallback}'"
+            );
+            (fallback, true)
         };
         let q = self.queue_mut(&qname).unwrap();
         for req in requests {
@@ -158,24 +445,36 @@ impl CapacityScheduler {
                     node_label: req.node_label.clone(),
                     priority: req.priority,
                     tag: tag_start,
+                    gang,
                 });
                 tag_start += 1;
             }
         }
-        tag_start
+        AskIntake { next_tag: tag_start, queue: qname, remapped }
     }
 
-    /// Remove all pending asks of an app (teardown / app finished).
+    /// Remove all pending asks of an app (teardown / app finished), and
+    /// any reservations its gangs held.
     pub fn remove_app(&mut self, app: ApplicationId) {
         for q in &mut self.queues {
             q.pending.retain(|a| a.app != app);
         }
+        self.gc_reservations(None);
     }
 
-    /// Record capacity returned by a released/completed container.
+    /// Record capacity returned by a released/completed container.  An
+    /// unknown queue is logged and counted instead of silently dropping
+    /// the capacity accounting on the floor.
     pub fn release(&mut self, queue: &str, resource: Resource) {
-        if let Some(q) = self.queue_mut(queue) {
-            q.used -= resource;
+        match self.queue_mut(queue) {
+            Some(q) => q.used -= resource,
+            None => {
+                self.stats.unknown_queue_releases += 1;
+                twarn!(
+                    "sched",
+                    "release of {resource} names unknown queue '{queue}'; usage not adjusted"
+                );
+            }
         }
     }
 
@@ -183,14 +482,17 @@ impl CapacityScheduler {
     fn queue_headroom_ok(&self, qi: usize, r: &Resource) -> bool {
         let q = &self.queues[qi];
         let after = q.used + *r;
-        after.dominant_share(&self.cluster_total) <= q.conf.max_capacity + 1e-9
+        after.dominant_share(&self.cluster_total) <= q.conf.max_capacity + EPS
     }
 
-    /// One scheduling pass: match pending asks against free node capacity.
-    /// Queues are visited most-underserved-first (used/capacity ratio);
-    /// within a queue, priorities descend, FIFO within a priority.
+    /// One scheduling pass: match pending units (singles and gangs)
+    /// against free node capacity.  Queues are visited
+    /// most-underserved-first (used/capacity ratio); within a queue,
+    /// priorities descend, FIFO within a priority; a gang commits
+    /// atomically or not at all.
     pub fn schedule(&mut self, nodes: &mut [SchedNode]) -> Vec<Grant> {
         let mut grants = Vec::new();
+        self.gc_reservations(Some(nodes));
         loop {
             // Order queues by relative usage each round so capacity
             // fractions steer who gets the next container.
@@ -207,10 +509,9 @@ impl CapacityScheduler {
             });
             let mut made_progress = false;
             for qi in order {
-                if let Some(grant) = self.try_queue(qi, nodes) {
-                    grants.push(grant);
+                if self.try_queue(qi, nodes, &mut grants) {
                     made_progress = true;
-                    break; // re-evaluate queue order after every grant
+                    break; // re-evaluate queue order after every commit
                 }
             }
             if !made_progress {
@@ -230,51 +531,487 @@ impl CapacityScheduler {
         }
     }
 
-    /// Try to place the first placeable ask of queue `qi` (priority-major,
-    /// FIFO-minor).  Skips asks that cannot currently be placed without
-    /// blocking later placeable ones (avoids convoy starvation on mixed
-    /// GPU/CPU asks, which YARN handles via separate resource-requests).
-    fn try_queue(&mut self, qi: usize, nodes: &mut [SchedNode]) -> Option<Grant> {
+    /// The schedulable units of queue `qi`, priority-major (a gang's
+    /// priority is its highest member's), FIFO-minor.
+    fn units(&self, qi: usize) -> Vec<Unit> {
+        let q = &self.queues[qi];
+        let mut gangs: BTreeMap<u64, Unit> = BTreeMap::new();
+        let mut units = Vec::new();
+        for (i, ask) in q.pending.iter().enumerate() {
+            match ask.gang {
+                Some(g) => {
+                    let u = gangs.entry(g).or_insert(Unit {
+                        prio: ask.priority,
+                        first: i,
+                        idxs: Vec::new(),
+                        gang: Some(g),
+                    });
+                    u.prio = u.prio.max(ask.priority);
+                    u.idxs.push(i);
+                }
+                None => {
+                    units.push(Unit { prio: ask.priority, first: i, idxs: vec![i], gang: None })
+                }
+            }
+        }
+        units.extend(gangs.into_values());
+        units.sort_by(|a, b| b.prio.cmp(&a.prio).then(a.first.cmp(&b.first)));
+        units
+    }
+
+    /// `(resource, label)` of every ask in `unit`, in pending order.
+    fn asks_of(&self, qi: usize, unit: &Unit) -> Vec<(Resource, Option<String>)> {
+        unit.idxs
+            .iter()
+            .map(|&i| {
+                let a = &self.queues[qi].pending[i];
+                (a.resource, a.node_label.clone())
+            })
+            .collect()
+    }
+
+    /// Nodes reserved by gangs *other* than `gang`.
+    fn reserved_by_others(&self, gang: Option<u64>) -> BTreeSet<NodeId> {
+        self.reservations
+            .iter()
+            .filter(|r| Some(r.gang) != gang)
+            .flat_map(|r| r.nodes.iter().copied())
+            .collect()
+    }
+
+    fn drop_reservation(&mut self, gang: u64) {
+        self.reservations.retain(|r| r.gang != gang);
+    }
+
+    /// Drop reservations whose gang no longer has pending asks, or (when
+    /// a node view is given) that reference nodes no longer in the
+    /// cluster — the gang stays pending and may re-reserve on survivors.
+    fn gc_reservations(&mut self, nodes: Option<&[SchedNode]>) {
+        let pending_gangs: BTreeSet<u64> = self
+            .queues
+            .iter()
+            .flat_map(|q| q.pending.iter().filter_map(|a| a.gang))
+            .collect();
+        self.reservations.retain(|r| {
+            pending_gangs.contains(&r.gang)
+                && nodes.map_or(true, |ns| {
+                    r.nodes.iter().all(|id| ns.iter().any(|n| n.id == *id))
+                })
+        });
+    }
+
+    /// Try to commit the first placeable unit of queue `qi`.  A blocked
+    /// gang may take a reservation instead (not counted as progress).
+    /// Skipping unplaceable units keeps later placeable ones flowing
+    /// (convoy avoidance on mixed GPU/CPU asks).
+    fn try_queue(&mut self, qi: usize, nodes: &mut [SchedNode], grants: &mut Vec<Grant>) -> bool {
+        // Allocation-free fast path for the overwhelmingly common shape
+        // (no gangs pending in this queue, no reservations anywhere):
+        // `schedule` restarts this per committed grant, so the unit
+        // machinery's per-call Vec/BTreeMap/label-clone cost would turn
+        // a legacy singles pass O(grants × pending) *allocations* under
+        // the RM lock.
+        if self.reservations.is_empty()
+            && !self.queues[qi].pending.iter().any(|a| a.gang.is_some())
+        {
+            return self.try_queue_singles(qi, nodes, grants);
+        }
+        let units = self.units(qi);
+        for unit in units {
+            let asks = self.asks_of(qi, &unit);
+            let total_ask = asks.iter().fold(Resource::ZERO, |a, (r, _)| a + *r);
+            // A gang that can NEVER be placed atomically — bigger than
+            // its queue's hard ceiling — must not wait forever for a
+            // moment that cannot come: demote it to legacy
+            // per-container placement (it then trickles through the
+            // ceiling the way a plain ask stream would).
+            if unit.gang.is_some()
+                && total_ask.dominant_share(&self.cluster_total)
+                    > self.queues[qi].conf.max_capacity + EPS
+            {
+                self.demote_gang(qi, &unit, "exceeds its queue's max-capacity ceiling");
+                return true; // state changed: rescan with the gang as singles
+            }
+            if !self.queue_headroom_ok(qi, &total_ask) {
+                // Over the ceiling *right now* (but the unit fits under
+                // it on its own).  A blocked *single* is skipped (convoy
+                // avoidance).  A blocked *gang* instead gates the rest
+                // of this queue's units: headroom is queue-local, and if
+                // younger same-queue asks kept re-consuming it as it
+                // drained, a hole the gang's whole size could never open
+                // — the same starvation reservations prevent, but
+                // reserving *nodes* here would freeze free capacity
+                // other queues could use, so the gang claims the queue's
+                // headroom by seniority instead.  Other queues are
+                // unaffected.  If node capacity is gone by the time the
+                // headroom opens, the node-blocked branch below reserves
+                // then.
+                if unit.gang.is_some() {
+                    break;
+                }
+                continue;
+            }
+            let reserved_other = self.reserved_by_others(unit.gang);
+            let allowed: Vec<bool> =
+                nodes.iter().map(|n| !reserved_other.contains(&n.id)).collect();
+            let free: Vec<Resource> = nodes.iter().map(|n| n.free).collect();
+            if let Some(chosen) = place_with(nodes, &free, &allowed, &asks) {
+                // Commit atomically: remove the asks back-to-front so
+                // earlier pending indices stay valid.
+                let mut pairs: Vec<(usize, usize)> =
+                    unit.idxs.iter().copied().zip(chosen).collect();
+                pairs.sort_by(|a, b| b.0.cmp(&a.0));
+                let mut committed = Vec::with_capacity(pairs.len());
+                for (pi, ni) in pairs {
+                    let ask = self.queues[qi].pending.remove(pi).unwrap();
+                    nodes[ni].free -= ask.resource;
+                    self.queues[qi].used += ask.resource;
+                    committed.push(Grant { ask, node: nodes[ni].id });
+                }
+                committed.reverse(); // back to FIFO order
+                grants.extend(committed);
+                if let Some(g) = unit.gang {
+                    self.stats.gangs_placed += 1;
+                    self.drop_reservation(g);
+                }
+                return true;
+            }
+            if unit.gang.is_some() {
+                // Blocked at current free capacity.  If the gang cannot
+                // be placed even on a fully drained cluster (ignoring
+                // reservations — nodes only ever disappear), waiting is
+                // a guaranteed hang: demote to per-container placement.
+                let all = vec![true; nodes.len()];
+                let caps: Vec<Resource> = nodes.iter().map(|n| n.capacity).collect();
+                if place_with(nodes, &caps, &all, &asks).is_none() {
+                    self.demote_gang(qi, &unit, "infeasible even at full cluster capacity");
+                    return true; // state changed: rescan with the gang as singles
+                }
+                self.try_reserve(qi, &unit, nodes);
+            }
+        }
+        false
+    }
+
+    /// The pre-gang scan, kept as the zero-allocation fast path: place
+    /// the highest-priority placeable single (FIFO within a priority),
+    /// skipping asks that cannot currently be placed (convoy avoidance).
+    /// Semantically identical to the unit path for all-single queues.
+    fn try_queue_singles(
+        &mut self,
+        qi: usize,
+        nodes: &mut [SchedNode],
+        grants: &mut Vec<Grant>,
+    ) -> bool {
         let plen = self.queues[qi].pending.len();
         let mut best: Option<(usize, usize)> = None; // (pending idx, node idx)
         let mut best_prio = 0u8;
         for i in 0..plen {
             let ask = &self.queues[qi].pending[i];
-            if let Some(existing) = best {
-                let _ = existing;
-                if ask.priority <= best_prio {
-                    continue;
-                }
+            if best.is_some() && ask.priority <= best_prio {
+                continue;
             }
             if !self.queue_headroom_ok(qi, &ask.resource) {
                 continue;
             }
-            if let Some(ni) = pick_node(nodes, ask) {
+            if let Some(ni) = pick_node_free(nodes, ask) {
                 best_prio = ask.priority;
                 best = Some((i, ni));
             }
         }
-        let (i, ni) = best?;
+        let Some((i, ni)) = best else { return false };
         let ask = self.queues[qi].pending.remove(i).unwrap();
         nodes[ni].free -= ask.resource;
         self.queues[qi].used += ask.resource;
-        Some(Grant { ask, node: nodes[ni].id })
+        grants.push(Grant { ask, node: nodes[ni].id });
+        true
+    }
+
+    /// Strip the gang id off a gang that can never place atomically so
+    /// its asks flow through legacy per-container placement instead of
+    /// hanging forever.
+    fn demote_gang(&mut self, qi: usize, unit: &Unit, why: &str) {
+        let gang = unit.gang.expect("only gangs are demoted");
+        twarn!(
+            "sched",
+            "gang {gang} ({} asks, queue '{}') {why}; demoted to per-container placement",
+            unit.idxs.len(),
+            self.queues[qi].conf.name
+        );
+        for &i in &unit.idxs {
+            self.queues[qi].pending[i].gang = None;
+        }
+        self.drop_reservation(gang);
+        self.stats.gangs_demoted += 1;
+    }
+
+    /// Give a blocked gang a claim on the node set a dry-run placement
+    /// at full capacity chooses, if a reservation slot is available.
+    fn try_reserve(&mut self, qi: usize, unit: &Unit, nodes: &[SchedNode]) {
+        let Some(gang) = unit.gang else { return };
+        if self.reservations.iter().any(|r| r.gang == gang) {
+            return;
+        }
+        if self.reservations.len() >= self.reservation_limit {
+            return;
+        }
+        let reserved_other = self.reserved_by_others(Some(gang));
+        let allowed: Vec<bool> = nodes.iter().map(|n| !reserved_other.contains(&n.id)).collect();
+        let asks = self.asks_of(qi, unit);
+        let caps: Vec<Resource> = nodes.iter().map(|n| n.capacity).collect();
+        if let Some(chosen) = place_with(nodes, &caps, &allowed, &asks) {
+            let set: BTreeSet<NodeId> = chosen.iter().map(|&ni| nodes[ni].id).collect();
+            tdebug!(
+                "sched",
+                "gang {gang} (queue '{}') reserves {} node(s)",
+                self.queues[qi].conf.name,
+                set.len()
+            );
+            self.reservations.push(Reservation {
+                gang,
+                queue: qi,
+                nodes: set.into_iter().collect(),
+            });
+            self.stats.reservations_made += 1;
+        }
+    }
+
+    fn queue_over_guarantee(&self, name: &str) -> bool {
+        self.queues.iter().any(|q| {
+            q.conf.name == name
+                && q.used.dominant_share(&self.cluster_total) > q.conf.capacity + EPS
+        })
+    }
+
+    /// Plan one cross-queue preemption round.
+    ///
+    /// Finds the most-underserved queue that is below its guarantee and
+    /// has a gang that is placeable at capacity but blocked at current
+    /// free, then selects victims from over-guarantee queues —
+    /// non-gang containers before gang members, newest grants first —
+    /// until a simulated placement of the gang succeeds.  Returns the
+    /// victims (empty when nothing qualifies or `max_victims` cannot
+    /// unblock the gang: rounds are all-or-nothing, so containers are
+    /// never killed without actually freeing the gang).  On success the
+    /// demanding gang is force-reserved onto the placement's nodes so
+    /// the freed capacity cannot be stolen before it lands.
+    pub fn preemption_plan(
+        &mut self,
+        nodes: &[SchedNode],
+        candidates: &[VictimCandidate],
+        max_victims: usize,
+    ) -> Vec<VictimCandidate> {
+        if max_victims == 0 || candidates.is_empty() {
+            return Vec::new();
+        }
+        let total = self.cluster_total;
+        let mut order: Vec<usize> = (0..self.queues.len())
+            .filter(|&i| !self.queues[i].pending.is_empty())
+            .filter(|&i| {
+                self.queues[i].used.dominant_share(&total) + EPS < self.queues[i].conf.capacity
+            })
+            .collect();
+        order.sort_by(|&a, &b| {
+            self.relative_usage(a)
+                .partial_cmp(&self.relative_usage(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for qi in order {
+            for unit in self.units(qi) {
+                let Some(gang) = unit.gang else { continue };
+                let asks = self.asks_of(qi, &unit);
+                let total_ask = asks.iter().fold(Resource::ZERO, |a, (r, _)| a + *r);
+                // Preemption only restores a queue *up to* its guarantee;
+                // growth beyond that waits for organic free capacity.
+                if (self.queues[qi].used + total_ask).dominant_share(&total)
+                    > self.queues[qi].conf.capacity + EPS
+                {
+                    continue;
+                }
+                let reserved_other = self.reserved_by_others(Some(gang));
+                let allowed: Vec<bool> =
+                    nodes.iter().map(|n| !reserved_other.contains(&n.id)).collect();
+                let free: Vec<Resource> = nodes.iter().map(|n| n.free).collect();
+                if place_with(nodes, &free, &allowed, &asks).is_some() {
+                    continue; // not blocked — the next schedule pass lands it
+                }
+                let caps: Vec<Resource> = nodes.iter().map(|n| n.capacity).collect();
+                if place_with(nodes, &caps, &allowed, &asks).is_none() {
+                    continue; // not placeable even at capacity
+                }
+                // Victims must sit in a partition the gang can use.
+                let labels: BTreeSet<Option<String>> =
+                    asks.iter().map(|(_, l)| l.clone()).collect();
+                let mut pool: Vec<&VictimCandidate> = candidates
+                    .iter()
+                    .filter(|c| self.queue_over_guarantee(&c.queue))
+                    .filter(|c| {
+                        nodes
+                            .iter()
+                            .find(|n| n.id == c.node)
+                            .map(|n| labels.contains(&n.label))
+                            .unwrap_or(false)
+                    })
+                    .collect();
+                // Whole-gangs-last, newest-first within each class.
+                pool.sort_by(|a, b| {
+                    (a.gang.is_some() as u8)
+                        .cmp(&(b.gang.is_some() as u8))
+                        .then(b.seq.cmp(&a.seq))
+                });
+                let node_idx: BTreeMap<NodeId, usize> =
+                    nodes.iter().enumerate().map(|(i, n)| (n.id, i)).collect();
+                // Free capacity with the given victims' resources returned
+                // (the one simulation every decision below shares).
+                let free_after = |vs: &[VictimCandidate],
+                                  skip: Option<usize>|
+                 -> Vec<Resource> {
+                    let mut f = free.clone();
+                    for (k, v) in vs.iter().enumerate() {
+                        if Some(k) != skip {
+                            f[node_idx[&v.node]] += v.resource;
+                        }
+                    }
+                    f
+                };
+                let mut sim_used: BTreeMap<String, Resource> = BTreeMap::new();
+                let mut victims: Vec<VictimCandidate> = Vec::new();
+                for c in pool {
+                    if victims.len() >= max_victims {
+                        break;
+                    }
+                    let Some(q) = self.queues.iter().find(|q| q.conf.name == c.queue) else {
+                        continue;
+                    };
+                    let cur = sim_used.get(&c.queue).copied().unwrap_or(q.used);
+                    let after = cur - c.resource;
+                    // Never drive a victim queue below its own guarantee.
+                    if after.dominant_share(&total) + EPS < q.conf.capacity {
+                        continue;
+                    }
+                    let Some(&ni) = node_idx.get(&c.node) else { continue };
+                    if !allowed[ni] {
+                        continue; // freeing another gang's reserved node helps no one
+                    }
+                    sim_used.insert(c.queue.clone(), after);
+                    victims.push(c.clone());
+                    if place_with(nodes, &free_after(&victims, None), &allowed, &asks).is_none() {
+                        continue;
+                    }
+                    // The gang fits.  Prune victims whose freed capacity
+                    // the placement does not actually need (the greedy
+                    // walk may have accumulated containers on nodes the
+                    // final placement never touches) — nobody dies for
+                    // zero benefit.
+                    let mut i = 0;
+                    while i < victims.len() {
+                        if place_with(nodes, &free_after(&victims, Some(i)), &allowed, &asks)
+                            .is_some()
+                        {
+                            victims.remove(i);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    let chosen = place_with(nodes, &free_after(&victims, None), &allowed, &asks)
+                        .expect("placement held after pruning");
+                    // Hold the placement for the demanding gang.
+                    let set: BTreeSet<NodeId> = chosen.iter().map(|&ni| nodes[ni].id).collect();
+                    self.drop_reservation(gang);
+                    self.reservations.push(Reservation {
+                        gang,
+                        queue: qi,
+                        nodes: set.into_iter().collect(),
+                    });
+                    self.stats.preemption_rounds += 1;
+                    self.stats.preemptions += victims.len() as u64;
+                    for v in &victims {
+                        if let Some(vq) = self.queue_mut(&v.queue) {
+                            vq.preemptions += 1;
+                        }
+                    }
+                    twarn!(
+                        "sched",
+                        "preempting {} container(s) to unblock gang {gang} in queue '{}'",
+                        victims.len(),
+                        self.queues[qi].conf.name
+                    );
+                    return victims;
+                }
+                // Budget exhausted without unblocking the gang: propose
+                // nothing (all-or-nothing rounds) and try the next unit.
+            }
+        }
+        Vec::new()
     }
 }
 
-/// Best-fit node choice: among nodes matching the label with room, pick
-/// the one whose remaining free dominant-share is smallest after
-/// placement (packs tightly, preserving big slots for big asks).
-fn pick_node(nodes: &[SchedNode], ask: &Ask) -> Option<usize> {
+/// Dry-run placement of `asks` over `free0` (one entry per node in
+/// `nodes`), restricted to `allowed` nodes.  Larger asks are placed
+/// first (fewer fragmentation failures); each ask takes the best-fit
+/// node — matching label, smallest leftover memory.  Returns the chosen
+/// node index per ask (in `asks` order), or `None` when any ask cannot
+/// be placed — the caller must treat that as "place nothing".
+fn place_with(
+    nodes: &[SchedNode],
+    free0: &[Resource],
+    allowed: &[bool],
+    asks: &[(Resource, Option<String>)],
+) -> Option<Vec<usize>> {
+    let mut free = free0.to_vec();
+    let mut order: Vec<usize> = (0..asks.len()).collect();
+    order.sort_by(|&a, &b| {
+        asks[b]
+            .0
+            .memory_mb
+            .cmp(&asks[a].0.memory_mb)
+            .then(asks[b].0.gpus.cmp(&asks[a].0.gpus))
+            .then(asks[b].0.vcores.cmp(&asks[a].0.vcores))
+            .then(a.cmp(&b))
+    });
+    let mut chosen = vec![usize::MAX; asks.len()];
+    for &ai in &order {
+        let (r, label) = &asks[ai];
+        let ni = best_fit(nodes, &free, allowed, r, label)?;
+        free[ni] -= *r;
+        chosen[ai] = ni;
+    }
+    Some(chosen)
+}
+
+/// Best-fit over the live free capacity for a single ask (the
+/// fast-path twin of [`best_fit`]).
+fn pick_node_free(nodes: &[SchedNode], ask: &Ask) -> Option<usize> {
     let mut best: Option<(usize, u64)> = None;
     for (i, n) in nodes.iter().enumerate() {
-        if n.label != ask.node_label {
-            continue;
-        }
-        if !n.free.fits(&ask.resource) {
+        if n.label != ask.node_label || !n.free.fits(&ask.resource) {
             continue;
         }
         let leftover = n.free.memory_mb - ask.resource.memory_mb;
+        match best {
+            Some((_, b)) if leftover >= b => {}
+            _ => best = Some((i, leftover)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Best-fit node choice: among allowed nodes matching the label with
+/// room, pick the one whose remaining free memory is smallest after
+/// placement (packs tightly, preserving big slots for big asks).
+fn best_fit(
+    nodes: &[SchedNode],
+    free: &[Resource],
+    allowed: &[bool],
+    r: &Resource,
+    label: &Option<String>,
+) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for i in 0..nodes.len() {
+        if !allowed[i] || nodes[i].label != *label || !free[i].fits(r) {
+            continue;
+        }
+        let leftover = free[i].memory_mb - r.memory_mb;
         match best {
             Some((_, b)) if leftover >= b => {}
             _ => best = Some((i, leftover)),
@@ -293,8 +1030,8 @@ mod tests {
 
     fn nodes2() -> Vec<SchedNode> {
         vec![
-            SchedNode { id: NodeId(0), label: None, free: Resource::new(8192, 8, 0) },
-            SchedNode { id: NodeId(1), label: Some("gpu".into()), free: Resource::new(8192, 8, 4) },
+            SchedNode::new(0, None, Resource::new(8192, 8, 0)),
+            SchedNode::new(1, Some("gpu".into()), Resource::new(8192, 8, 4)),
         ]
     }
 
@@ -332,6 +1069,7 @@ mod tests {
             id: NodeId(0),
             label: None,
             free: Resource::new(4096, 4, 0),
+            capacity: Resource::new(4096, 4, 0),
         }];
         s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(8192, 1, 0), 1)], 0);
         let grants = s.schedule(&mut nodes);
@@ -347,11 +1085,7 @@ mod tests {
             QueueConf::new("etl", 0.5, 1.0),
         ];
         let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
-        let mut nodes = vec![SchedNode {
-            id: NodeId(0),
-            label: None,
-            free: Resource::new(8192, 8, 0),
-        }];
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(8192, 8, 0))];
         s.add_asks(app(1), "ml", &[ContainerRequest::new(Resource::new(3072, 1, 0), 2)], 0);
         let grants = s.schedule(&mut nodes);
         assert_eq!(grants.len(), 1, "only one 3GiB ask fits under the 50% cap");
@@ -371,11 +1105,7 @@ mod tests {
             QueueConf::new("etl", 0.25, 1.0),
         ];
         let mut s = CapacityScheduler::new(queues, Resource::new(8192, 64, 0));
-        let mut nodes = vec![SchedNode {
-            id: NodeId(0),
-            label: None,
-            free: Resource::new(8192, 64, 0),
-        }];
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(8192, 64, 0))];
         let shape = ContainerRequest::new(Resource::new(1024, 1, 0), 8);
         s.add_asks(app(1), "ml", &[shape.clone()], 0);
         s.add_asks(app(2), "etl", &[shape], 100);
@@ -388,11 +1118,7 @@ mod tests {
     #[test]
     fn priority_order_within_queue() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
-        let mut nodes = vec![SchedNode {
-            id: NodeId(0),
-            label: None,
-            free: Resource::new(1024, 1, 0),
-        }];
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(1024, 1, 0))];
         // Low priority first in FIFO order, then high priority.
         s.add_asks(
             app(1),
@@ -424,12 +1150,380 @@ mod tests {
     fn best_fit_packs_tightly() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(12288, 12, 0));
         let mut nodes = vec![
-            SchedNode { id: NodeId(0), label: None, free: Resource::new(8192, 8, 0) },
-            SchedNode { id: NodeId(1), label: None, free: Resource::new(2048, 2, 0) },
+            SchedNode::new(0, None, Resource::new(8192, 8, 0)),
+            SchedNode::new(1, None, Resource::new(2048, 2, 0)),
         ];
         s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(2048, 1, 0), 1)], 0);
         let grants = s.schedule(&mut nodes);
         // Best fit: lands on the small node, preserving the big slot.
         assert_eq!(grants[0].node, NodeId(1));
+    }
+
+    // ---------------- gang placement ----------------
+
+    #[test]
+    fn gang_is_all_or_nothing() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(2048, 2, 0)),
+            SchedNode::new(1, None, Resource::new(2048, 2, 0)),
+        ];
+        // A 3-container gang on a cluster that only fits 2 right now
+        // (node 1 half-occupied): nothing may be granted.
+        nodes[1].free = Resource::new(1024, 1, 0);
+        let intake = s.add_asks_gang(
+            app(1),
+            "default",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 3)],
+            0,
+            Some(7),
+        );
+        assert_eq!(intake.next_tag, 3);
+        assert!(s.schedule(&mut nodes).is_empty(), "partial gang placement is forbidden");
+        assert_eq!(s.pending_count(), 3);
+        // Capacity drains: the whole gang lands at once.
+        nodes[1].free = Resource::new(2048, 2, 0);
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 3);
+        assert!(grants.iter().all(|g| g.ask.gang == Some(7)));
+        assert_eq!(s.stats().gangs_placed, 1);
+    }
+
+    #[test]
+    fn interleaved_singles_deadlock_where_gangs_do_not() {
+        // The contention pathology gang mode cures: two jobs each need 2
+        // containers on a 2-slot cluster.  With per-container asks
+        // interleaved, each job gets 1 slot and holds it forever (a
+        // distributed-training barrier never forms).  With gangs, job 1
+        // lands whole and job 2 waits whole.
+        let nodes_fn = || {
+            vec![
+                SchedNode::new(0, None, Resource::new(1024, 1, 0)),
+                SchedNode::new(1, None, Resource::new(1024, 1, 0)),
+            ]
+        };
+        let shape = ContainerRequest::new(Resource::new(1024, 1, 0), 1);
+
+        // Legacy: interleaved single asks -> one slot each (deadlock).
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
+        let mut nodes = nodes_fn();
+        s.add_asks(app(1), "default", &[shape.clone()], 0);
+        s.add_asks(app(2), "default", &[shape.clone()], 10);
+        s.add_asks(app(1), "default", &[shape.clone()], 1);
+        s.add_asks(app(2), "default", &[shape.clone()], 11);
+        let grants = s.schedule(&mut nodes);
+        let apps: BTreeSet<u64> = grants.iter().map(|g| g.ask.app.seq).collect();
+        assert_eq!(grants.len(), 2);
+        assert_eq!(apps.len(), 2, "legacy splits the cluster: each app holds half a gang");
+
+        // Gang mode: app 1's gang commits whole; app 2 waits whole.
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
+        let mut nodes = nodes_fn();
+        let shape2 = ContainerRequest::new(Resource::new(1024, 1, 0), 2);
+        s.add_asks_gang(app(1), "default", &[shape2.clone()], 0, Some(1));
+        s.add_asks_gang(app(2), "default", &[shape2], 10, Some(2));
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 2);
+        assert!(grants.iter().all(|g| g.ask.app == app(1)), "first gang placed whole");
+        assert!(s.has_pending_gang(app(2)), "second gang waits whole");
+    }
+
+    #[test]
+    fn blocked_gang_reserves_and_drains() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(1024, 1, 0)),
+            SchedNode::new(1, None, Resource::new(1024, 1, 0)),
+        ];
+        nodes[0].free = Resource::ZERO; // occupied by someone else
+        let gang_shape = ContainerRequest::new(Resource::new(1024, 1, 0), 2);
+        s.add_asks_gang(app(1), "default", &[gang_shape], 0, Some(1));
+        // A stream of small singles that would otherwise starve the gang.
+        s.add_asks(app(2), "default", &[ContainerRequest::new(Resource::new(512, 1, 0), 1)], 10);
+        let grants = s.schedule(&mut nodes);
+        // The gang reserved both nodes, so the small ask gets nothing.
+        assert!(grants.is_empty(), "reserved nodes accept no other placements: {grants:?}");
+        assert_eq!(s.reservation_count(), 1);
+        assert_eq!(s.stats().reservations_made, 1);
+        // The occupied node drains -> the gang lands, reservation clears,
+        // and the small ask flows again.
+        nodes[0].free = Resource::new(1024, 1, 0);
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 2);
+        assert!(grants.iter().all(|g| g.ask.gang == Some(1)));
+        assert_eq!(s.reservation_count(), 0);
+        nodes[0].free += Resource::new(1024, 1, 0); // gang task finished
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 1, "singles flow once the reservation cleared");
+    }
+
+    #[test]
+    fn reservation_limit_is_respected() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
+        s.set_reservation_limit(1);
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(1024, 1, 0)),
+            SchedNode::new(1, None, Resource::new(1024, 1, 0)),
+        ];
+        nodes[0].free = Resource::ZERO;
+        nodes[1].free = Resource::ZERO;
+        let shape = ContainerRequest::new(Resource::new(1024, 1, 0), 2);
+        s.add_asks_gang(app(1), "default", &[shape.clone()], 0, Some(1));
+        s.add_asks_gang(app(2), "default", &[shape], 10, Some(2));
+        assert!(s.schedule(&mut nodes).is_empty());
+        assert_eq!(s.reservation_count(), 1, "only one reservation slot configured");
+    }
+
+    #[test]
+    fn unknown_queue_ask_is_remapped_logged_and_counted() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
+        let intake = s.add_asks_gang(
+            app(1),
+            "no-such-queue",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 1)],
+            0,
+            None,
+        );
+        assert!(intake.remapped);
+        assert_eq!(intake.queue, "default");
+        assert_eq!(s.stats().unknown_queue_asks, 1);
+        // The remapped ask is chargeable and schedulable.
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(4096, 4, 0))];
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].ask.queue, "default");
+    }
+
+    #[test]
+    fn unknown_queue_release_is_counted_not_dropped_silently() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
+        s.release("ghost", Resource::new(1024, 1, 0));
+        s.release("ghost", Resource::new(1024, 1, 0));
+        assert_eq!(s.stats().unknown_queue_releases, 2);
+        assert_eq!(s.queue_used("default"), Some(Resource::ZERO), "known queues untouched");
+    }
+
+    #[test]
+    fn preemption_plan_unblocks_starved_queue_up_to_guarantee() {
+        let queues = vec![
+            QueueConf::new("ml", 0.75, 1.0),
+            QueueConf::new("etl", 0.25, 1.0),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(4096, 4, 0)),
+            SchedNode::new(1, None, Resource::new(4096, 4, 0)),
+        ];
+        // etl bursts to 6 GiB (75% >> its 25% guarantee).
+        s.add_asks_gang(
+            app(2),
+            "etl",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 6)],
+            100,
+            Some(1),
+        );
+        let etl_grants = s.schedule(&mut nodes);
+        assert_eq!(etl_grants.len(), 6);
+        let candidates: Vec<VictimCandidate> = etl_grants
+            .iter()
+            .enumerate()
+            .map(|(i, g)| VictimCandidate {
+                container: ContainerId { app: g.ask.app, seq: i as u64 + 1 },
+                app: g.ask.app,
+                queue: g.ask.queue.clone(),
+                node: g.node,
+                resource: g.ask.resource,
+                gang: g.ask.gang,
+                seq: i as u64 + 1,
+            })
+            .collect();
+        // ml asks a 4 GiB gang: blocked (only 2 GiB free), under its 75%
+        // guarantee, and feasible at capacity -> preemption triggers.
+        s.add_asks_gang(
+            app(1),
+            "ml",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 4)],
+            0,
+            Some(2),
+        );
+        assert!(s.schedule(&mut nodes).is_empty(), "gang blocked before preemption");
+        let victims = s.preemption_plan(&nodes, &candidates, 8);
+        assert!(!victims.is_empty(), "an under-guarantee queue must claw back capacity");
+        // Victims are newest-first and never drive etl below its 25%
+        // guarantee (2 GiB): at most 4 of etl's 6 GiB may be taken.
+        assert!(victims.len() <= 4, "victims: {victims:?}");
+        assert_eq!(victims[0].seq, 6, "newest grant dies first");
+        let freed = victims.iter().fold(Resource::ZERO, |a, v| a + v.resource);
+        let etl_after = s.queue_used("etl").unwrap() - freed;
+        assert!(
+            etl_after.dominant_share(&s.cluster_total()) >= 0.25 - 1e-9,
+            "victim queue dropped below its guarantee"
+        );
+        assert_eq!(s.stats().preemption_rounds, 1);
+        assert_eq!(s.stats().preemptions, victims.len() as u64);
+        // Victims' capacity returns -> the gang lands on the reserved nodes.
+        for v in &victims {
+            s.release(&v.queue, v.resource);
+            let ni = nodes.iter().position(|n| n.id == v.node).unwrap();
+            nodes[ni].free += v.resource;
+        }
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 4, "preemption unblocked the whole gang");
+        assert!(grants.iter().all(|g| g.ask.queue == "ml"));
+    }
+
+    #[test]
+    fn preemption_is_all_or_nothing_per_round() {
+        // max_victims too small to unblock the gang: nobody dies.
+        let queues = vec![
+            QueueConf::new("ml", 0.75, 1.0),
+            QueueConf::new("etl", 0.25, 1.0),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(8192, 8, 0))];
+        s.add_asks_gang(
+            app(2),
+            "etl",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 6)],
+            100,
+            Some(1),
+        );
+        let etl_grants = s.schedule(&mut nodes);
+        let candidates: Vec<VictimCandidate> = etl_grants
+            .iter()
+            .enumerate()
+            .map(|(i, g)| VictimCandidate {
+                container: ContainerId { app: g.ask.app, seq: i as u64 + 1 },
+                app: g.ask.app,
+                queue: g.ask.queue.clone(),
+                node: g.node,
+                resource: g.ask.resource,
+                gang: g.ask.gang,
+                seq: i as u64 + 1,
+            })
+            .collect();
+        s.add_asks_gang(
+            app(1),
+            "ml",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 4)],
+            0,
+            Some(2),
+        );
+        let victims = s.preemption_plan(&nodes, &candidates, 1);
+        assert!(victims.is_empty(), "1 victim cannot unblock a 4-container gang");
+        assert_eq!(s.stats().preemptions, 0);
+    }
+
+    #[test]
+    fn ceiling_blocked_gang_gates_younger_same_queue_singles() {
+        // Regression: with the queue at its ceiling, younger singles of
+        // the same queue used to re-consume every drained byte of
+        // headroom, so a senior gang (which needs the headroom to open
+        // by its whole size at once) starved forever.  The gang now
+        // gates the queue's younger units until its headroom opens.
+        let queues = vec![
+            QueueConf::new("ml", 0.5, 0.5),
+            QueueConf::new("etl", 0.5, 1.0),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(4096, 8, 0));
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(4096, 8, 0))];
+        let slot = ContainerRequest::new(Resource::new(1024, 1, 0), 1);
+        // App A fills ml to its 2 GiB ceiling.
+        s.add_asks(app(1), "ml", &[slot.clone(), slot.clone()], 0);
+        assert_eq!(s.schedule(&mut nodes).len(), 2);
+        // App B's senior gang, then younger singles from A.
+        s.add_asks_gang(
+            app(2),
+            "ml",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 2)],
+            10,
+            Some(1),
+        );
+        s.add_asks(app(1), "ml", &[slot.clone(), slot], 20);
+        // One of A's containers drains: the freed headroom must be held
+        // for the gang, not snapped up by A's younger single.
+        s.release("ml", Resource::new(1024, 1, 0));
+        nodes[0].free += Resource::new(1024, 1, 0);
+        assert!(
+            s.schedule(&mut nodes).is_empty(),
+            "younger single re-consumed the gang's draining headroom"
+        );
+        // Second drain: the gang's whole hole is open — it lands.
+        s.release("ml", Resource::new(1024, 1, 0));
+        nodes[0].free += Resource::new(1024, 1, 0);
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(grants.len(), 2, "{grants:?}");
+        assert!(grants.iter().all(|g| g.ask.gang == Some(1)), "the senior gang wins");
+        assert_eq!(s.pending_count(), 2, "A's younger singles wait for the next drain");
+    }
+
+    #[test]
+    fn oversized_gang_demotes_to_per_container_trickle() {
+        // adhoc's hard ceiling is 30% of 16 GiB (~4.9 GiB); a 12 GiB
+        // gang can never place atomically and must not hang forever —
+        // it degrades to the legacy trickle and flows under the ceiling.
+        let queues = vec![
+            QueueConf::new("prod", 0.75, 1.0),
+            QueueConf::new("adhoc", 0.25, 0.3),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(16384, 32, 0));
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(8192, 16, 0)),
+            SchedNode::new(1, None, Resource::new(8192, 16, 0)),
+        ];
+        s.add_asks_gang(
+            app(1),
+            "adhoc",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 12)],
+            0,
+            Some(1),
+        );
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(s.stats().gangs_demoted, 1);
+        assert_eq!(grants.len(), 4, "trickles up to the 30% ceiling (4 x 1 GiB)");
+        assert!(grants.iter().all(|g| g.ask.gang.is_none()), "demoted asks lose the gang id");
+        assert!(!s.has_pending_gang(app(1)));
+    }
+
+    #[test]
+    fn capacity_infeasible_gang_demotes_instead_of_hanging() {
+        // 3 x 1536 MB can never co-exist on two 2048 MB nodes, even
+        // empty: the gang demotes and two containers flow immediately.
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(2048, 2, 0)),
+            SchedNode::new(1, None, Resource::new(2048, 2, 0)),
+        ];
+        s.add_asks_gang(
+            app(1),
+            "default",
+            &[ContainerRequest::new(Resource::new(1536, 1, 0), 3)],
+            0,
+            Some(1),
+        );
+        let grants = s.schedule(&mut nodes);
+        assert_eq!(s.stats().gangs_demoted, 1);
+        assert_eq!(grants.len(), 2, "one per node flows right away");
+        assert_eq!(s.pending_count(), 1, "the third waits for a release, not forever");
+    }
+
+    #[test]
+    fn queue_snapshots_expose_gang_state() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(2048, 2, 0))];
+        nodes[0].free = Resource::ZERO;
+        s.add_asks_gang(
+            app(1),
+            "default",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 2)],
+            0,
+            Some(1),
+        );
+        assert!(s.schedule(&mut nodes).is_empty());
+        let snap = &s.queue_snapshots()[0];
+        assert_eq!(snap.pending_asks, 2);
+        assert_eq!(snap.pending_gangs, 1);
+        assert_eq!(snap.reservations, 1);
+        assert_eq!(snap.capacity, 1.0);
     }
 }

@@ -54,7 +54,7 @@ fn manual_rm(clock: &Arc<ManualClock>, nodes: u32) -> Arc<ResourceManager> {
         specs,
         QueueConf::default_only(),
         // Fallback tick disabled: nothing may depend on polling.
-        RmConf { clock: clock.clone(), fallback_tick_ms: 0 },
+        RmConf { clock: clock.clone(), fallback_tick_ms: 0, ..Default::default() },
     )
 }
 

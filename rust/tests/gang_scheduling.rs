@@ -1,0 +1,326 @@
+//! RM-level gang scheduling + capacity preemption integration tests
+//! (docs/SCHEDULING.md): all-or-nothing waves under contention, the
+//! preemption lifecycle end to end through real NM container kills, and
+//! the unknown-queue remap regression.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::util::clock::SystemClock;
+use tony::util::event::WakeupBus;
+use tony::util::ids::{ApplicationId, ContainerId};
+use tony::yarn::{
+    AppSchedState, AppState, ContainerCtx, ContainerRequest, NodeSpec, QueueConf, Resource,
+    ResourceManager, RmConf, SchedulerConf, SubmissionContext,
+};
+
+/// Task body that blocks (event-driven) until its container is killed.
+fn run_until_killed(ctx: ContainerCtx) -> i32 {
+    let clock = SystemClock::new();
+    let bus = Arc::new(WakeupBus::new());
+    ctx.kill_switch().register(&bus);
+    while !ctx.killed() {
+        bus.wait_until(&clock, clock.now_ms() + 10_000);
+    }
+    0
+}
+
+fn submission(name: &str, queue: &str, am_mb: u64) -> SubmissionContext {
+    SubmissionContext {
+        name: name.into(),
+        queue: queue.into(),
+        am_resource: Resource::new(am_mb, 1, 0),
+    }
+}
+
+/// Two jobs whose gangs each need most of the cluster: gang mode places
+/// job A's wave whole, holds job B whole (`WAITING_FOR_GANG`, with a
+/// reservation instead of a partial allocation), and lands B's wave the
+/// moment A's containers drain.  This is the deadlock-free schedule the
+/// legacy per-container mode cannot produce — see
+/// `interleaved_singles_deadlock_where_gangs_do_not` in
+/// `yarn::scheduler` and `bench_contention` for the A/B contrast.
+#[test]
+fn contending_gangs_serialize_instead_of_deadlocking() {
+    let rm = ResourceManager::start(
+        vec![
+            NodeSpec::new(0, Resource::new(2048, 4, 0)),
+            NodeSpec::new(1, Resource::new(2048, 4, 0)),
+        ],
+        QueueConf::default_only(),
+    );
+
+    let (holding_tx, holding_rx) = mpsc::channel::<Vec<ContainerId>>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let rm2 = rm.clone();
+    let a = rm
+        .submit_application(
+            submission("gang-a", "default", 256),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                rm2.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm2.clock());
+                rm2.register_am_waker(app, &bus);
+                let clock = rm2.clock().clone();
+                let asks = vec![ContainerRequest::new(Resource::new(1536, 1, 0), 2)];
+                let mut held = Vec::new();
+                let mut asked = false;
+                while held.len() < 2 {
+                    let send: &[ContainerRequest] = if asked { &[] } else { &asks };
+                    let resp = rm2.allocate(app, send, &[]).unwrap();
+                    asked = true;
+                    for c in resp.allocated {
+                        rm2.start_container(&c, BTreeMap::new(), Box::new(run_until_killed))
+                            .unwrap();
+                        held.push(c.id);
+                    }
+                    if held.len() < 2 {
+                        bus.wait_until(&*clock, clock.now_ms() + 5_000);
+                    }
+                }
+                holding_tx.send(held.clone()).unwrap();
+                release_rx.recv().unwrap();
+                let mut done = 0;
+                let mut released = false;
+                while done < 2 {
+                    let rel: &[ContainerId] = if released { &[] } else { &held };
+                    let resp = rm2.allocate(app, &[], rel).unwrap();
+                    released = true;
+                    done += resp.completed.len();
+                    if done < 2 {
+                        bus.wait_until(&*clock, clock.now_ms() + 5_000);
+                    }
+                }
+                rm2.finish_application(app, true, "released the cluster");
+                0
+            }),
+        )
+        .unwrap();
+
+    let held = holding_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("job A never acquired its gang");
+    assert_eq!(held.len(), 2, "A's whole wave placed at once");
+
+    let (asked_tx, asked_rx) = mpsc::channel::<()>();
+    let rm3 = rm.clone();
+    let b = rm
+        .submit_application(
+            submission("gang-b", "default", 256),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm3.cluster_ts, seq: 2 };
+                rm3.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm3.clock());
+                rm3.register_am_waker(app, &bus);
+                let clock = rm3.clock().clone();
+                let asks = vec![ContainerRequest::new(Resource::new(1536, 1, 0), 2)];
+                let resp = rm3.allocate(app, &asks, &[]).unwrap();
+                assert!(
+                    resp.allocated.is_empty(),
+                    "gang must not place partially while A holds the cluster"
+                );
+                asked_tx.send(()).unwrap();
+                let mut done = 0;
+                while done < 2 {
+                    let resp = rm3.allocate(app, &[], &[]).unwrap();
+                    for c in resp.allocated {
+                        rm3.start_container(&c, BTreeMap::new(), Box::new(|_| 0)).unwrap();
+                    }
+                    done += resp.completed.iter().filter(|s| s.exit.is_success()).count();
+                    if done < 2 {
+                        bus.wait_until(&*clock, clock.now_ms() + 5_000);
+                    }
+                }
+                rm3.finish_application(app, true, "gang ran after A drained");
+                0
+            }),
+        )
+        .unwrap();
+
+    asked_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("job B never reached its first allocate");
+    assert_eq!(
+        rm.app_sched_state(b),
+        AppSchedState::WaitingForGang,
+        "B waits whole, holding no partial allocation"
+    );
+
+    release_tx.send(()).unwrap();
+    let ra = rm.wait_for_completion(a, Duration::from_secs(60)).unwrap();
+    let rb = rm.wait_for_completion(b, Duration::from_secs(60)).unwrap();
+    assert_eq!(ra.state, AppState::Finished, "{}", ra.diagnostics);
+    assert_eq!(rb.state, AppState::Finished, "{}", rb.diagnostics);
+    assert_eq!(rm.app_sched_state(b), AppSchedState::Normal);
+    assert!(rm.scheduler_stats().gangs_placed >= 2);
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leaked");
+    }
+}
+
+/// The full preemption lifecycle: a queue bursting past its guarantee is
+/// clawed back — notices through the allocate response, real container
+/// kills reported as `Preempted`, the starved queue's gang landing on
+/// the freed nodes — within one planning round (+ zero grace here).
+#[test]
+fn preemption_restores_starved_queue_to_its_guarantee() {
+    let queues = vec![
+        QueueConf::new("ml", 0.75, 1.0),
+        QueueConf::new("etl", 0.25, 1.0),
+    ];
+    let sched = SchedulerConf {
+        gang_mode: true,
+        reservation_limit: 2,
+        preemption: true,
+        preemption_grace_ms: 0,
+        preemption_max_victims: 8,
+    };
+    let rm = ResourceManager::start_with(
+        vec![
+            NodeSpec::new(0, Resource::new(4096, 8, 0)),
+            NodeSpec::new(1, Resource::new(4096, 8, 0)),
+        ],
+        queues,
+        RmConf { scheduler: sched, ..Default::default() },
+    );
+
+    // etl bursts to ~78% of the cluster (guarantee: 25%).
+    let (holding_tx, holding_rx) = mpsc::channel::<()>();
+    let (preempted_tx, preempted_rx) = mpsc::channel::<u64>();
+    let rm2 = rm.clone();
+    let e = rm
+        .submit_application(
+            submission("etl-burst", "etl", 256),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                rm2.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm2.clock());
+                rm2.register_am_waker(app, &bus);
+                let clock = rm2.clock().clone();
+                let asks = vec![ContainerRequest::new(Resource::new(1024, 1, 0), 6)];
+                let mut launched = 0;
+                let mut asked = false;
+                while launched < 6 {
+                    let send: &[ContainerRequest] = if asked { &[] } else { &asks };
+                    let resp = rm2.allocate(app, send, &[]).unwrap();
+                    asked = true;
+                    for c in resp.allocated {
+                        rm2.start_container(&c, BTreeMap::new(), Box::new(run_until_killed))
+                            .unwrap();
+                        launched += 1;
+                    }
+                    if launched < 6 {
+                        bus.wait_until(&*clock, clock.now_ms() + 5_000);
+                    }
+                }
+                holding_tx.send(()).unwrap();
+                // Serve the allocate protocol until the preemption round
+                // lands fully: notices first, `Preempted` exits after.
+                let mut notices = 0u64;
+                let mut preempted = 0u64;
+                loop {
+                    let resp = rm2.allocate(app, &[], &[]).unwrap();
+                    notices += resp.preempt_notices.len() as u64;
+                    preempted += resp
+                        .completed
+                        .iter()
+                        .filter(|s| s.exit == tony::yarn::ExitStatus::Preempted)
+                        .count() as u64;
+                    if notices > 0 && preempted >= notices {
+                        break;
+                    }
+                    bus.wait_until(&*clock, clock.now_ms() + 5_000);
+                }
+                preempted_tx.send(preempted).unwrap();
+                rm2.finish_application(app, true, "survived preemption");
+                0
+            }),
+        )
+        .unwrap();
+    holding_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("etl job never filled the cluster");
+
+    // ml (starved, well under its 75% guarantee) asks a 3-container gang.
+    let rm3 = rm.clone();
+    let m = rm
+        .submit_application(
+            submission("ml-gang", "ml", 256),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm3.cluster_ts, seq: 2 };
+                rm3.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm3.clock());
+                rm3.register_am_waker(app, &bus);
+                let clock = rm3.clock().clone();
+                let asks = vec![ContainerRequest::new(Resource::new(1024, 1, 0), 3)];
+                let mut asked = false;
+                let mut done = 0;
+                while done < 3 {
+                    let send: &[ContainerRequest] = if asked { &[] } else { &asks };
+                    let resp = rm3.allocate(app, send, &[]).unwrap();
+                    asked = true;
+                    for c in resp.allocated {
+                        rm3.start_container(&c, BTreeMap::new(), Box::new(|_| 0)).unwrap();
+                    }
+                    done += resp.completed.iter().filter(|s| s.exit.is_success()).count();
+                    if done < 3 {
+                        bus.wait_until(&*clock, clock.now_ms() + 5_000);
+                    }
+                }
+                rm3.finish_application(app, true, "gang ran on preempted capacity");
+                0
+            }),
+        )
+        .unwrap();
+
+    let preempted = preempted_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("etl job never observed its preempted exits");
+    assert!(preempted >= 1, "at least one container must have been preempted");
+
+    let rm_report = rm.wait_for_completion(m, Duration::from_secs(60)).unwrap();
+    assert_eq!(rm_report.state, AppState::Finished, "{}", rm_report.diagnostics);
+    let re = rm.wait_for_completion(e, Duration::from_secs(60)).unwrap();
+    assert_eq!(re.state, AppState::Finished, "{}", re.diagnostics);
+
+    let stats = rm.scheduler_stats();
+    assert_eq!(stats.preemption_rounds, 1, "one planning round must suffice");
+    assert_eq!(stats.preemptions, preempted, "RM stats agree with observed exits");
+    let etl = rm
+        .queue_stats()
+        .into_iter()
+        .find(|q| q.name == "etl")
+        .unwrap();
+    assert_eq!(etl.preemptions, preempted, "per-queue victim counter");
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leaked");
+    }
+}
+
+/// Regression: an app submitted to an unknown queue used to be silently
+/// remapped with no trace.  It still runs (on the fallback queue) but
+/// the remap is now counted in scheduler stats.
+#[test]
+fn unknown_queue_submission_runs_on_fallback_and_is_counted() {
+    let rm = ResourceManager::start_uniform(2, Resource::new(2048, 4, 0));
+    let rm2 = rm.clone();
+    let id = rm
+        .submit_application(
+            submission("lost-queue", "no-such-queue", 256),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                rm2.register_am(app, None).unwrap();
+                rm2.finish_application(app, true, "ran despite the bogus queue");
+                0
+            }),
+        )
+        .unwrap();
+    let report = rm.wait_for_completion(id, Duration::from_secs(30)).unwrap();
+    assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);
+    assert!(
+        rm.scheduler_stats().unknown_queue_asks >= 1,
+        "the remap must be counted, not silent"
+    );
+}

@@ -4,22 +4,23 @@
 use std::collections::BTreeMap;
 
 use tony::proptest::{check, Gen};
-use tony::util::ids::{ApplicationId, NodeId};
+use tony::util::ids::{ApplicationId, ContainerId};
 use tony::yarn::scheduler::SchedNode;
-use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
+use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource, VictimCandidate};
 use tony::{prop_assert, prop_assert_eq};
 
 fn gen_nodes(g: &mut Gen) -> Vec<SchedNode> {
     let n = g.range(1, 20) as u32;
     (0..n)
-        .map(|i| SchedNode {
-            id: NodeId(i),
-            label: match g.usize_up_to(3) {
+        .map(|i| {
+            let label = match g.usize_up_to(3) {
                 0 => Some("gpu".to_string()),
                 1 => Some("high-memory".to_string()),
                 _ => None,
-            },
-            free: Resource::new(g.range(1024, 32768), g.range(1, 32) as u32, g.range(0, 4) as u32),
+            };
+            let cap =
+                Resource::new(g.range(1024, 32768), g.range(1, 32) as u32, g.range(0, 4) as u32);
+            SchedNode::new(i, label, cap)
         })
         .collect()
 }
@@ -139,7 +140,7 @@ fn release_enables_pending_work() {
     check("release unblocks", 100, |g| {
         // One node exactly big enough for one container at a time.
         let shape = Resource::new(1024 + g.range(0, 1024), 1, 0);
-        let mut nodes = vec![SchedNode { id: NodeId(0), label: None, free: shape }];
+        let mut nodes = vec![SchedNode::new(0, None, shape)];
         let mut sched = CapacityScheduler::new(QueueConf::default_only(), shape);
         let app = ApplicationId { cluster_ts: 1, seq: 1 };
         let count = g.range(2, 6) as u32;
@@ -155,6 +156,205 @@ fn release_enables_pending_work() {
         }
         prop_assert_eq!(granted, count);
         prop_assert_eq!(sched.pending_count(), 0);
+        Ok(())
+    });
+}
+
+/// Random mix of gangs (one per app) and loose singles.  Returns the
+/// scheduler with everything enqueued plus the size of each gang.
+fn gen_gang_mix(
+    g: &mut Gen,
+    queues: Vec<QueueConf>,
+    total: Resource,
+) -> (CapacityScheduler, BTreeMap<u64, u32>) {
+    let qnames: Vec<String> = queues.iter().map(|q| q.name.clone()).collect();
+    let mut sched = CapacityScheduler::new(queues, total);
+    let n_gangs = g.range(1, 6);
+    let mut sizes = BTreeMap::new();
+    let mut tag = 0;
+    for k in 0..n_gangs {
+        let app = ApplicationId { cluster_ts: 1, seq: k + 1 };
+        let count = g.range(1, 6) as u32;
+        let mut req = ContainerRequest::new(
+            Resource::new(g.range(128, 8192), g.range(1, 8) as u32, g.range(0, 2) as u32),
+            count,
+        )
+        .with_priority(g.range(1, 5) as u8);
+        if g.usize_up_to(4) == 0 {
+            req = req.with_label("gpu");
+        }
+        let q = &qnames[g.usize_up_to(qnames.len() - 1)];
+        tag = sched.add_asks_gang(app, q, &[req], tag, Some(k + 1)).next_tag;
+        sizes.insert(k + 1, count);
+    }
+    // Loose singles riding along.
+    let app = ApplicationId { cluster_ts: 1, seq: 99 };
+    let q = &qnames[g.usize_up_to(qnames.len() - 1)];
+    sched.add_asks(app, q, &gen_asks(g), tag);
+    (sched, sizes)
+}
+
+#[test]
+fn gangs_are_granted_fully_or_not_at_all() {
+    check("gang atomicity", 200, |g| {
+        let mut nodes = gen_nodes(g);
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let (mut sched, sizes) = gen_gang_mix(g, QueueConf::default_only(), total);
+        let grants = sched.schedule(&mut nodes);
+        let mut granted: BTreeMap<u64, u32> = BTreeMap::new();
+        for gr in &grants {
+            if let Some(id) = gr.ask.gang {
+                *granted.entry(id).or_insert(0) += 1;
+            }
+        }
+        for (id, n) in granted {
+            prop_assert!(
+                n == sizes[&id],
+                "gang {id} partially granted: {n}/{} containers",
+                sizes[&id]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn no_oversubscription_under_gang_mixes() {
+    check("gang no-oversubscription", 200, |g| {
+        let mut nodes = gen_nodes(g);
+        let orig: BTreeMap<u32, Resource> = nodes.iter().map(|n| (n.id.0, n.free)).collect();
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let queues = vec![QueueConf::new("a", 0.5, 0.8), QueueConf::new("b", 0.5, 1.0)];
+        let (mut sched, _) = gen_gang_mix(g, queues, total);
+        let grants = sched.schedule(&mut nodes);
+        let mut granted_per_node: BTreeMap<u32, Resource> = BTreeMap::new();
+        for gr in &grants {
+            *granted_per_node.entry(gr.node.0).or_insert(Resource::ZERO) += gr.ask.resource;
+        }
+        for n in &nodes {
+            let used = granted_per_node.get(&n.id.0).copied().unwrap_or(Resource::ZERO);
+            let orig_free = orig[&n.id.0];
+            prop_assert_eq!(n.free + used, orig_free);
+            prop_assert!(
+                orig_free.fits(&used),
+                "node {} oversubscribed: {used} > {orig_free}",
+                n.id.0
+            );
+        }
+        // Queue ceilings hold too.
+        for q in sched.queue_snapshots() {
+            prop_assert!(
+                q.used.dominant_share(&total) <= q.max_capacity + 1e-6,
+                "queue {} burst past its ceiling",
+                q.name
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn preemption_never_drives_a_queue_below_its_guarantee() {
+    check("preemption guarantee floor", 150, |g| {
+        let cap_a = 0.2 + g.f64() * 0.6;
+        let queues = vec![
+            QueueConf::new("a", cap_a, 1.0),
+            QueueConf::new("b", 1.0 - cap_a, 1.0),
+        ];
+        let mut nodes = gen_nodes(g);
+        let total = nodes.iter().fold(Resource::ZERO, |a, n| a + n.free);
+        let mut sched = CapacityScheduler::new(queues, total);
+        // Queue b grabs as much as it can (possibly over its guarantee).
+        let app_b = ApplicationId { cluster_ts: 1, seq: 2 };
+        sched.add_asks(app_b, "b", &gen_asks(g), 0);
+        let b_grants = sched.schedule(&mut nodes);
+        let candidates: Vec<VictimCandidate> = b_grants
+            .iter()
+            .enumerate()
+            .map(|(i, gr)| VictimCandidate {
+                container: ContainerId { app: gr.ask.app, seq: i as u64 + 1 },
+                app: gr.ask.app,
+                queue: gr.ask.queue.clone(),
+                node: gr.node,
+                resource: gr.ask.resource,
+                gang: gr.ask.gang,
+                seq: i as u64 + 1,
+            })
+            .collect();
+        // Queue a (starved) asks a random gang.
+        let app_a = ApplicationId { cluster_ts: 1, seq: 1 };
+        let req = ContainerRequest::new(
+            Resource::new(g.range(128, 4096), g.range(1, 4) as u32, 0),
+            g.range(1, 5) as u32,
+        );
+        sched.add_asks_gang(app_a, "a", &[req], 1000, Some(1));
+        let used_b_before = sched.queue_used("b").unwrap();
+        let victims = sched.preemption_plan(&nodes, &candidates, g.range(1, 8) as usize);
+        let freed = victims.iter().fold(Resource::ZERO, |a, v| a + v.resource);
+        let after = used_b_before - freed;
+        if !victims.is_empty() {
+            prop_assert!(
+                after.dominant_share(&total) >= (1.0 - cap_a) - 1e-6,
+                "queue b driven below its guarantee: {after} of {total}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reservations_eventually_drain() {
+    check("reservation drain", 100, |g| {
+        // One node fully occupied by out-of-band work the scheduler does
+        // not charge to any queue (so the blocked gang is *node*-blocked,
+        // not ceiling-blocked — ceiling-blocked gangs wait unreserved).
+        // As occupants finish, the reservation must convert into a full
+        // gang grant despite a stream of poacher singles — no livelock.
+        let slot = Resource::new(1024, 1, 0);
+        let n_slots = g.range(2, 6) as u32;
+        let cap = Resource::new(1024 * n_slots as u64, n_slots, 0);
+        let mut nodes = vec![SchedNode::new(0, None, cap)];
+        nodes[0].free = Resource::ZERO;
+        let mut sched = CapacityScheduler::new(QueueConf::default_only(), cap);
+        let gang_app = ApplicationId { cluster_ts: 1, seq: 1 };
+        sched.add_asks_gang(
+            gang_app,
+            "default",
+            &[ContainerRequest::new(slot, n_slots)],
+            100,
+            Some(1),
+        );
+        prop_assert!(sched.schedule(&mut nodes).is_empty());
+        prop_assert_eq!(sched.reservation_count(), 1);
+        // Occupants finish one per round; more singles keep arriving but
+        // must not steal the reserved node.
+        let mut gang_granted = false;
+        let mut extra_tag = 1000;
+        for round in 0..(n_slots + 2) {
+            nodes[0].free += slot;
+            extra_tag = sched.add_asks(
+                ApplicationId { cluster_ts: 1, seq: 50 },
+                "default",
+                &[ContainerRequest::new(slot, 1)],
+                extra_tag,
+            );
+            let grants = sched.schedule(&mut nodes);
+            if grants.iter().any(|gr| gr.ask.gang == Some(1)) {
+                let whole = grants.iter().filter(|gr| gr.ask.gang == Some(1)).count();
+                prop_assert!(
+                    whole == n_slots as usize,
+                    "gang granted but not whole in round {round}: {whole}/{n_slots}"
+                );
+                gang_granted = true;
+                break;
+            }
+            // Until the gang lands, nobody may poach the reserved node.
+            prop_assert!(
+                grants.is_empty(),
+                "single ask poached a reserved node in round {round}: {grants:?}"
+            );
+        }
+        prop_assert!(gang_granted, "reservation never drained into a grant (livelock)");
         Ok(())
     });
 }

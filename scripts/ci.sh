@@ -26,6 +26,25 @@ TONY_BENCH_SMOKE=1 cargo bench --bench bench_recovery
 echo "==> latency bench smoke (event-driven vs poll fallback)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_latency
 
+echo "==> contention bench smoke (gang mode deadlock-freedom at 2/8 jobs)"
+TONY_BENCH_SMOKE=1 cargo bench --bench bench_contention
+
+echo "==> every tony.scheduler.* key referenced in code is documented"
+missing=0
+for key in $(grep -rhoE '"tony\.scheduler\.[a-z0-9.-]+"' rust/src | tr -d '"' | sort -u); do
+    if ! grep -q "$key" docs/CONFIGURATION.md; then
+        echo "ERROR: $key is used in rust/src but missing from docs/CONFIGURATION.md"
+        missing=1
+    fi
+    if ! grep -q "$key" docs/SCHEDULING.md; then
+        echo "ERROR: $key is used in rust/src but missing from docs/SCHEDULING.md"
+        missing=1
+    fi
+done
+if [ "$missing" -ne 0 ]; then
+    exit 1
+fi
+
 echo "==> no stray std::thread::sleep in rust/src (event-driven control plane)"
 # The only allowed home is util/clock.rs: the SystemClock impl plus the
 # explicit real_sleep() escape hatch for I/O backoff / simulated
