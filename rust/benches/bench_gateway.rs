@@ -8,8 +8,11 @@
 //! 2×level jobs (min 8), wait for all to reach a terminal state, then
 //! verify the invariants the gateway exists to provide: admission
 //! decisions visible via `GET /api/v1/jobs`, every job FINISHED, every
-//! finished job recorded in the HistoryStore, and all RM capacity
-//! returned.
+//! finished job recorded in the HistoryStore (and serving a per-stage
+//! trace from it), and all RM capacity returned.  A second table breaks
+//! the end-to-end number down by lifecycle stage
+//! (queued/scheduling/launching/…), averaged across the level's jobs —
+//! so a throughput regression names the stage that slowed down.
 
 use std::time::{Duration, Instant};
 
@@ -34,6 +37,7 @@ fn job_conf(name: &str, steps: u64) -> Configuration {
 }
 
 struct LevelResult {
+    concurrency: usize,
     jobs: usize,
     submit_per_sec: f64,
     e2e_ms: f64,
@@ -41,6 +45,10 @@ struct LevelResult {
     peak_running: usize,
     finished: usize,
     in_history: usize,
+    /// Jobs whose completed trace replayed from the history store.
+    traced: usize,
+    /// Summed per-stage wall-clock millis across all traced jobs.
+    stage_ms: std::collections::BTreeMap<String, u64>,
 }
 
 fn run_level(concurrency: usize) -> LevelResult {
@@ -104,10 +112,25 @@ fn run_level(concurrency: usize) -> LevelResult {
     for (_, free, cap) in gw.rm().node_usage() {
         assert_eq!(free, cap, "capacity leaked at concurrency {concurrency}");
     }
+
+    // Per-stage breakdown: completed jobs serve their trace from the
+    // history store, so this also exercises the replay path at scale.
+    let mut stage_ms: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
+    let mut traced = 0usize;
+    for id in &ids {
+        let Some(t) = gw.job_trace_json(*id) else { continue };
+        if let Some(stages) = t.at(&["critical_path", "stages"]).and_then(|s| s.as_obj()) {
+            traced += 1;
+            for (stage, ms) in stages {
+                *stage_ms.entry(stage.clone()).or_insert(0) += ms.as_u64().unwrap_or(0);
+            }
+        }
+    }
     gw.shutdown();
     let _ = std::fs::remove_dir_all(&base);
 
     LevelResult {
+        concurrency,
         jobs,
         submit_per_sec: jobs as f64 / submit_s.max(1e-9),
         e2e_ms: e2e_s * 1e3,
@@ -115,6 +138,8 @@ fn run_level(concurrency: usize) -> LevelResult {
         peak_running,
         finished,
         in_history,
+        traced,
+        stage_ms,
     }
 }
 
@@ -129,6 +154,7 @@ fn main() {
         "finished",
         "in-history",
     ]);
+    let mut results = Vec::new();
     for concurrency in [1usize, 8, 32] {
         let r = run_level(concurrency);
         assert_eq!(r.finished, r.jobs, "all jobs must finish at concurrency {concurrency}");
@@ -138,6 +164,11 @@ fn main() {
              ({} < {} at concurrency {concurrency})",
             r.in_history,
             r.jobs
+        );
+        assert_eq!(
+            r.traced, r.jobs,
+            "every finished job must serve a per-stage trace from history \
+             at concurrency {concurrency}"
         );
         table.row(&[
             n(concurrency),
@@ -149,8 +180,21 @@ fn main() {
             n(r.finished),
             n(r.in_history),
         ]);
+        results.push(r);
     }
     table.print("G1: gateway multi-tenant throughput (accepted submissions + end-to-end jobs)");
+
+    let mut stages = Table::new(&["concurrency", "stage", "avg ms/job"]);
+    for r in &results {
+        for (stage, total) in &r.stage_ms {
+            stages.row(&[
+                n(r.concurrency),
+                n(stage),
+                f1(*total as f64 / r.traced.max(1) as f64),
+            ]);
+        }
+    }
+    stages.print("G2: per-stage lifecycle breakdown (from replayed job traces)");
     println!(
         "\n(64 jobs at concurrency 32 ran on one shared 16-node simulated cluster; \
          quotas disabled so the table isolates orchestration throughput.)"

@@ -13,6 +13,12 @@
 //! monitor-loop iterations per job-second.  Event-driven loops iterate
 //! per *event*; poll loops iterate per interval regardless of activity.
 //!
+//! Part 3 — tracing overhead: submit → Running with the lifecycle span
+//! store on (default) vs `tony.trace.enable=false`, plus the per-stage
+//! wall-clock breakdown the traced run recorded.  Under
+//! `TONY_BENCH_SMOKE=1` the overhead is asserted below ~5% (with a small
+//! absolute floor so a fast machine's noise doesn't fail the gate).
+//!
 //! `TONY_BENCH_SMOKE=1` trims repetitions and runs the 1-job level only.
 
 use std::time::{Duration, Instant};
@@ -71,6 +77,7 @@ fn measure_latency(poll_mode: bool, dir: &std::path::Path, steps: u64) -> Latenc
         .submit_opts(&conf, &dir.join("artifacts"), SubmitOpts {
             start_portal: false,
             tracking_url: None,
+            trace: None,
         })
         .expect("submit");
     let state = handle.am_state.clone();
@@ -97,6 +104,39 @@ fn measure_latency(poll_mode: bool, dir: &std::path::Path, steps: u64) -> Latenc
         report.diagnostics
     );
     LatencySample { submit_to_running_ms, kill_to_replacement_ms }
+}
+
+/// Submit → Running via the direct client with tracing on or off.
+/// Returns the latency and the per-stage wall-clock totals from the
+/// job's span store (empty when tracing is off — the disabled store
+/// swallows writes without taking its lock).
+fn measure_traced(
+    trace_on: bool,
+    dir: &std::path::Path,
+    steps: u64,
+) -> (f64, Vec<(tony::trace::Stage, u64)>) {
+    let rm = ResourceManager::start_uniform(4, Resource::new(4096, 8, 0));
+    let ckpt = dir.join(format!("ckpt-{}", tony::util::ids::next_seq()));
+    let mut conf = job_conf("traced", steps, false);
+    conf.set("tony.train.checkpoint-dir", ckpt.to_string_lossy().to_string());
+    if !trace_on {
+        conf.set("tony.trace.enable", "false");
+    }
+    let client = TonyClient::new(rm);
+    let t0 = Instant::now();
+    let handle = client
+        .submit_opts(&conf, &dir.join("artifacts"), SubmitOpts {
+            start_portal: false,
+            tracking_url: None,
+            trace: None,
+        })
+        .expect("submit");
+    let state = handle.am_state.clone();
+    spin_until(move || state.phase() == JobPhase::Running, Duration::from_secs(60));
+    let submit_to_running_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let report = handle.wait(Duration::from_secs(120)).expect("job finished");
+    assert!(report.state == tony::yarn::AppState::Finished, "{}", report.diagnostics);
+    (submit_to_running_ms, handle.trace.stage_millis())
 }
 
 struct IdleResult {
@@ -203,6 +243,50 @@ fn main() {
         }
     }
     t.print("L1b: AM monitor-loop iterations (idle-CPU proxy)");
+
+    // ---- Part 3: tracing overhead + per-stage breakdown ----
+    let reps = if smoke { 3 } else { 5 };
+    let trace_steps = if smoke { 30 } else { 100 };
+    let mut on = Vec::new();
+    let mut off = Vec::new();
+    let mut last_stages = Vec::new();
+    for _ in 0..reps {
+        let (ms, stages) = measure_traced(true, &base, trace_steps);
+        on.push(ms);
+        last_stages = stages;
+        let (ms, stages) = measure_traced(false, &base, trace_steps);
+        assert!(stages.is_empty(), "disabled span store must record nothing");
+        off.push(ms);
+    }
+    on.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    off.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let on_p50 = on[on.len() / 2];
+    let off_p50 = off[off.len() / 2];
+    let overhead_pct = (on_p50 - off_p50) / off_p50.max(1e-9) * 100.0;
+    let mut t = Table::new(&["tracing", "reps", "submit->RUNNING p50 ms", "overhead %"]);
+    t.row(&[n("off"), n(reps), f2(off_p50), n("-")]);
+    t.row(&[n("on"), n(reps), f2(on_p50), f2(overhead_pct)]);
+    t.print("L1c: lifecycle span-store overhead on the submit->RUNNING path");
+
+    let mut t = Table::new(&["stage", "wall ms"]);
+    for (stage, ms) in &last_stages {
+        t.row(&[n(stage.as_str()), n(*ms)]);
+    }
+    t.print("L1d: per-stage breakdown of the last traced run");
+
+    if smoke {
+        // Compare best-of runs: minima are far less noisy than p50 at
+        // smoke rep counts.  Floor the budget so sub-10ms baselines
+        // don't turn scheduler jitter into failures.
+        let budget = (off[0] * 0.05).max(5.0);
+        assert!(
+            on[0] - off[0] <= budget,
+            "tracing overhead too high: on={:.2}ms off={:.2}ms budget={:.2}ms",
+            on[0],
+            off[0],
+            budget
+        );
+    }
 
     let _ = std::fs::remove_dir_all(&base);
     println!("\nbench_latency done.");

@@ -73,7 +73,7 @@ pub struct AmContext {
 /// Run the ApplicationMaster to completion.  Returns the container exit
 /// code (0 = job succeeded within the attempt budget).
 pub fn run_application_master(am: AmContext, ctx: &ContainerCtx) -> i32 {
-    match am_body(&am, ctx) {
+    let code = match am_body(&am, ctx) {
         Ok(result) => {
             am.rm
                 .finish_application(am.app, result.succeeded, &result.diagnostics);
@@ -88,7 +88,13 @@ pub fn run_application_master(am: AmContext, ctx: &ContainerCtx) -> i32 {
             am.rm.finish_application(am.app, false, &format!("AM error: {e:#}"));
             1
         }
+    };
+    // Close every stage still open so the trace's wall-clock accounting
+    // ends with the job (the gateway's finalize is a no-op after this).
+    if let Some(t) = am.state.trace() {
+        t.end_all();
     }
+    code
 }
 
 fn am_body(am: &AmContext, ctx: &ContainerCtx) -> Result<JobResult> {
@@ -594,6 +600,7 @@ fn launch_executor(
         task: task.clone(),
         spec_version,
         clock: am.state.clock().clone(),
+        app: am.app,
     };
     am.state.record_launch(task.clone(), container.id);
     // The launch-context env mirrors what real TonY sets before exec-ing

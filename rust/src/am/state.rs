@@ -22,6 +22,7 @@ use crate::metrics::Registry;
 use crate::net::rpc::RpcHandler;
 use crate::net::wire::Wire;
 use crate::tonyconf::JobSpec;
+use crate::trace::{SpanStore, Stage};
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::event::{tag, WakeupBus};
 use crate::util::ids::{ContainerId, TaskId};
@@ -102,6 +103,9 @@ struct Inner {
     /// Containers this job lost to capacity preemption (`Preempted`
     /// exits absorbed by surgical recovery).
     preempted: u64,
+    /// Cluster-spec fetches served at the current version; when every
+    /// expected task has fetched, the spec-sync stage is over.
+    spec_fetches: usize,
 }
 
 /// The outcome of one attempt, as decided by the AM monitor loop.
@@ -135,6 +139,10 @@ pub struct AmState {
     /// reports (event-driven loops should iterate per *event*, not per
     /// poll interval).
     loop_iters: AtomicU64,
+    /// The job's lifecycle span store, installed once at submit.  Stage
+    /// transitions (scheduling → launching → registering → spec-sync →
+    /// running) are recorded where the state machine itself moves.
+    trace: std::sync::OnceLock<Arc<SpanStore>>,
 }
 
 impl AmState {
@@ -170,6 +178,7 @@ impl AmState {
                 recoveries: 0,
                 released_grants: 0,
                 preempted: 0,
+                spec_fetches: 0,
             }),
             bus,
             clock,
@@ -181,7 +190,20 @@ impl AmState {
             loss_history_cap: job.metrics.loss_history_cap(),
             job: job.clone(),
             loop_iters: AtomicU64::new(0),
+            trace: std::sync::OnceLock::new(),
         }
+    }
+
+    /// Install the job's lifecycle span store (done once, at submit,
+    /// before the AM launchable is released).
+    pub fn set_trace(&self, store: &Arc<SpanStore>) {
+        let _ = self.trace.set(store.clone());
+    }
+
+    /// The job's span store, when one was installed (portal/gateway
+    /// exposition and the stage hooks below).
+    pub fn trace(&self) -> Option<&Arc<SpanStore>> {
+        self.trace.get()
     }
 
     /// The AM's wakeup bus (see the field doc for the producer set).
@@ -238,6 +260,7 @@ impl AmState {
         inner.version += 1;
         inner.phase = JobPhase::Negotiating;
         inner.spec = None;
+        inner.spec_fetches = 0;
         inner.expected = (self.expected_from)(attempt);
         let version = inner.version;
         inner.tasks = inner
@@ -246,6 +269,15 @@ impl AmState {
             .map(|t| (t.clone(), TaskRecord::new(t.clone(), version)))
             .collect();
         drop(inner);
+        if let Some(t) = self.trace() {
+            t.set_attempt(attempt);
+            // A restart closes the previous attempt's open stages; the
+            // first attempt ends the gateway's queued stage (no-ops when
+            // those stages are not open).
+            t.end_stage(Stage::Queued);
+            t.end_stage(Stage::Running);
+            t.start_stage(Stage::Scheduling);
+        }
         self.bus.notify(tag::STATE);
     }
 
@@ -257,6 +289,7 @@ impl AmState {
         let mut inner = self.inner.lock().unwrap();
         inner.version += 1;
         inner.spec = None;
+        inner.spec_fetches = 0;
         inner.phase = JobPhase::Recovering;
         inner.recoveries += 1;
         let version = inner.version;
@@ -276,6 +309,16 @@ impl AmState {
             }
         }
         drop(inner);
+        if let Some(t) = self.trace() {
+            let dead_list =
+                dead.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
+            t.event(
+                Stage::Running,
+                "recovery",
+                t.stage_span(Stage::Running),
+                &[("dead", dead_list), ("version", version.to_string())],
+            );
+        }
         self.bus.notify(tag::STATE);
         version
     }
@@ -329,10 +372,31 @@ impl AmState {
         let rec = inner
             .tasks
             .entry(task.clone())
-            .or_insert_with(|| TaskRecord::new(task, version));
+            .or_insert_with(|| TaskRecord::new(task.clone(), version));
         rec.container = Some(container);
         rec.spec_version = version;
         rec.last_heartbeat = Some(self.clock.now_ms()); // launch counts as life
+        let all_launched = !inner.expected.is_empty()
+            && inner.expected.iter().all(|t| {
+                inner.tasks.get(t).map(|r| r.container.is_some()).unwrap_or(false)
+            });
+        drop(inner);
+        if let Some(t) = self.trace() {
+            // First launch flips scheduling → launching (the relaunches
+            // of a surgical recovery find scheduling closed — no-op).
+            t.end_stage(Stage::Scheduling);
+            let parent = t.start_stage(Stage::Launching);
+            t.event(
+                Stage::Launching,
+                &format!("launch {task}"),
+                Some(parent).filter(|id| *id != 0),
+                &[("container", container.to_string())],
+            );
+            if all_launched {
+                t.end_stage(Stage::Launching);
+                t.start_stage(Stage::Registering);
+            }
+        }
     }
 
     pub fn task_for_container(&self, container: ContainerId) -> Option<TaskId> {
@@ -421,6 +485,12 @@ impl AmState {
             inner.phase = JobPhase::Running;
         }
         drop(inner);
+        if let Some(t) = self.trace() {
+            // Every expected endpoint is in: registration is over and the
+            // executors now sync the spec (GET_SPEC long-polls drain).
+            t.end_stage(Stage::Registering);
+            t.start_stage(Stage::SpecSync);
+        }
         // Wakes the AM monitor loop AND every executor blocked in a
         // GET_SPEC long-poll (they ride the bus sequence).
         self.bus.notify(tag::SPEC);
@@ -760,7 +830,22 @@ impl RpcHandler for AmRpcHandler {
                     .state
                     .wait_spec(msg.spec_version, Duration::from_millis(msg.timeout_ms))
                 {
-                    Some(spec) => Ok(spec.to_tf_config("", 0).into_bytes()),
+                    Some(spec) => {
+                        let mut inner = self.state.inner.lock().unwrap();
+                        inner.spec_fetches += 1;
+                        let all_fetched = !inner.expected.is_empty()
+                            && inner.spec_fetches >= inner.expected.len();
+                        drop(inner);
+                        if all_fetched {
+                            if let Some(t) = self.state.trace() {
+                                // Every executor holds the spec: training
+                                // proper starts now.
+                                t.end_stage(Stage::SpecSync);
+                                t.start_stage(Stage::Running);
+                            }
+                        }
+                        Ok(spec.to_tf_config("", 0).into_bytes())
+                    }
                     None => Err("spec not ready".to_string()),
                 }
             }
@@ -848,6 +933,14 @@ impl RpcHandler for AmRpcHandler {
                 }
                 drop(inner);
                 if exited {
+                    if let Some(t) = self.state.trace() {
+                        t.event(
+                            Stage::Running,
+                            &format!("exit {task}"),
+                            t.stage_span(Stage::Running),
+                            &[("code", msg.exit_code.to_string())],
+                        );
+                    }
                     // Success/failure detection is exit-event-driven.
                     self.state.bus.notify(tag::TASK_EXIT);
                 }

@@ -17,6 +17,7 @@ use crate::am::{run_application_master, AmContext, AmState};
 use crate::portal::Portal;
 use crate::tinfo;
 use crate::tonyconf::JobSpec;
+use crate::trace::SpanStore;
 use crate::util::ids::ApplicationId;
 use crate::xmlconf::Configuration;
 use crate::yarn::{AppReport, AppState, ResourceManager, SubmissionContext};
@@ -28,11 +29,16 @@ pub struct SubmitOpts {
     /// Tracking URL to register with the RM when no portal is started
     /// (the gateway points this at its own `/api/v1/jobs/<id>` route).
     pub tracking_url: Option<String>,
+    /// Span store minted by the caller before submission (the gateway
+    /// opens the `queued` stage at enqueue time, long before the client
+    /// runs).  When absent, the client mints one from the job's
+    /// `tony.trace.*` keys at submit.
+    pub trace: Option<Arc<SpanStore>>,
 }
 
 impl Default for SubmitOpts {
     fn default() -> SubmitOpts {
-        SubmitOpts { start_portal: true, tracking_url: None }
+        SubmitOpts { start_portal: true, tracking_url: None, trace: None }
     }
 }
 
@@ -44,6 +50,9 @@ pub struct JobHandle {
     pub staging_dir: Option<PathBuf>,
     /// The job's monitoring portal (its URL is the RM tracking URL).
     pub portal: Option<Portal>,
+    /// The job's lifecycle span store (disabled stores swallow writes,
+    /// so this is always present).
+    pub trace: Arc<SpanStore>,
 }
 
 impl JobHandle {
@@ -119,6 +128,7 @@ impl TonyClient {
         preset_dir: &std::path::Path,
         opts: SubmitOpts,
     ) -> Result<JobHandle> {
+        let mut opts = opts;
         let spec = Arc::new(JobSpec::from_conf(conf).context("invalid job configuration")?);
 
         // Fail fast if the job can never fit (the resource-contention
@@ -177,6 +187,14 @@ impl TonyClient {
             run_application_master(am, &cctx)
         });
         let app_id = rm.submit_application(submission, am_code)?;
+        // Trace threading happens before the AM is released (it blocks on
+        // the app-id cell), so the AM never races an unset trace slot.
+        let trace = opts
+            .trace
+            .take()
+            .unwrap_or_else(|| SpanStore::new(&spec.trace, rm.clock().clone(), app_id.seq));
+        am_state.set_trace(&trace);
+        rm.register_trace(app_id, &trace);
         let _ = app_id_cell.set(app_id);
         // Central monitoring portal (paper challenge #3); its URL becomes
         // the application's tracking URL, like YARN's proxy link.
@@ -198,7 +216,7 @@ impl TonyClient {
             None
         };
         tinfo!("client", "submitted {} ('{}'), staged at {}", app_id, spec.name, staging.display());
-        Ok(JobHandle { app_id, rm, am_state, staging_dir: Some(staging), portal })
+        Ok(JobHandle { app_id, rm, am_state, staging_dir: Some(staging), portal, trace })
     }
 
     /// Submit from a tony.xml file on disk.

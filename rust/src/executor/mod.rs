@@ -29,7 +29,7 @@ use crate::net::rpc::RpcClient;
 use crate::net::wire::Wire;
 use crate::runtime::Engine;
 use crate::tonyconf::{JobSpec, EVALUATOR, PS, WORKER};
-use crate::util::ids::TaskId;
+use crate::util::ids::{ApplicationId, TaskId};
 use crate::util::HostPort;
 use crate::yarn::ContainerCtx;
 use crate::{tdebug, terror, tinfo, twarn};
@@ -46,6 +46,10 @@ pub struct ExecutorParams {
     /// The control-plane clock (inherited from the AM/RM) every executor
     /// deadline runs on.
     pub clock: Arc<dyn Clock>,
+    /// The owning application — every executor log line carries it, so
+    /// `grep <app-id>` reconstructs one job's full story across
+    /// gateway/RM/AM/executor components.
+    pub app: ApplicationId,
 }
 
 /// Executor main — the container entrypoint for every task container.
@@ -54,7 +58,7 @@ pub fn run_task_executor(ctx: ContainerCtx, params: ExecutorParams) -> i32 {
     match executor_body(&ctx, &params) {
         Ok(code) => code,
         Err(e) => {
-            terror!("executor", "{} executor error: {e:#}", params.task);
+            terror!("executor", "{} {} executor error: {e:#}", params.app, params.task);
             // Best-effort final status so the AM learns quickly.
             if let Ok(am) = RpcClient::connect(&params.am_addr) {
                 let _ = am.call(
@@ -75,6 +79,7 @@ pub fn run_task_executor(ctx: ContainerCtx, params: ExecutorParams) -> i32 {
 
 fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     let task = &params.task;
+    let app = params.app;
     // The env set by the AM is the source of truth (paper: executors are
     // configured through the launch context).
     let env_type = ctx.env("TASK_TYPE").unwrap_or(&task.job_type);
@@ -93,7 +98,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     // catch this; without it the attempt hangs forever.
     if let Some(wedge) = params.job.conf.get("tony.chaos.wedge-preregister") {
         if wedge == params.task.to_string() {
-            twarn!("executor", "{task} wedging pre-registration (chaos knob)");
+            twarn!("executor", "{app} {task} wedging pre-registration (chaos knob)");
             let clock = params.clock.clone();
             let wedge_bus = WakeupBus::for_clock(&clock);
             ctx.kill_switch().register(&wedge_bus);
@@ -131,7 +136,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     };
     let engine = Engine::start(&params.preset_dir, Some(&artifacts))
         .with_context(|| format!("starting PJRT engine for {task}"))?;
-    tdebug!("executor", "{task} engine ready ({} artifacts)", artifacts.len());
+    tdebug!("executor", "{app} {task} engine ready ({} artifacts)", artifacts.len());
 
     // ---- allocate the task port ----
     // PS: the shard's RPC server binds it for real.  Workers: reserve a
@@ -170,7 +175,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         match start_task_ui(metrics.clone(), kill.clone()) {
             Ok(url) => Some(url),
             Err(e) => {
-                tdebug!("executor", "{task} UI failed to start: {e}");
+                tdebug!("executor", "{app} {task} UI failed to start: {e}");
                 None
             }
         }
@@ -192,7 +197,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         .to_bytes(),
     )
     .map_err(|e| anyhow!("registering {task}: {e}"))?;
-    tdebug!("executor", "{task} registered port {port}");
+    tdebug!("executor", "{app} {task} registered port {port}");
 
     // ---- heartbeat thread (covers spec-wait AND task runtime) ----
     // The AM's liveness check starts at registration, so heartbeats must
@@ -223,6 +228,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
         let metrics = metrics.clone();
         let done = hb_done.clone();
         let task = task.clone();
+        let app = app;
         let cur_version = cur_version.clone();
         let reconfig = reconfig.clone();
         let job_metrics = params.job.metrics.clone();
@@ -302,7 +308,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                                                         let v = spec.version;
                                                         tinfo!(
                                                             "executor",
-                                                            "{task} adopting patched spec v{v}"
+                                                            "{app} {task} adopting patched spec v{v}"
                                                         );
                                                         cur_version
                                                             .store(v as u32, Ordering::Relaxed);
@@ -310,26 +316,26 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                                                     }
                                                     Err(e) => tdebug!(
                                                         "executor",
-                                                        "{task} bad patched spec: {e}; will retry"
+                                                        "{app} {task} bad patched spec: {e}; will retry"
                                                     ),
                                                 }
                                             }
                                             Err(e) => tdebug!(
                                                 "executor",
-                                                "{task} spec refetch failed: {e}; will retry"
+                                                "{app} {task} spec refetch failed: {e}; will retry"
                                             ),
                                         }
                                     }
                                 }
                                 AmCommand::Stop | AmCommand::Abort => {
-                                    tdebug!("executor", "{task} commanded to stop");
+                                    tdebug!("executor", "{app} {task} commanded to stop");
                                     kill.store(true, Ordering::Relaxed);
                                     monitor_bus.notify(tag::KILL);
                                 }
                             }
                         }
                         Err(e) => {
-                            terror!("executor", "{task} lost AM: {e}");
+                            terror!("executor", "{app} {task} lost AM: {e}");
                             kill.store(true, Ordering::Relaxed);
                             monitor_bus.notify(tag::KILL);
                         }
@@ -387,7 +393,7 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
     };
     // Materialize the spec into the task environment, as real TonY does.
     let tf_config = spec.to_tf_config(&task.job_type, task.index);
-    tdebug!("executor", "{task} got spec v{} ({} tasks)", spec.version, spec.n_tasks());
+    tdebug!("executor", "{app} {task} got spec v{} ({} tasks)", spec.version, spec.n_tasks());
 
     // ---- spawn the ML task ----
     let task_thread: Option<std::thread::JoinHandle<i32>> = if task.job_type == WORKER {
@@ -525,7 +531,7 @@ fn finish(
         }
         .to_bytes(),
     );
-    tinfo!("executor", "{} finished with code {code}", params.task);
+    tinfo!("executor", "{} {} finished with code {code}", params.app, params.task);
     Ok(code)
 }
 

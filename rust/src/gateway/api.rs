@@ -9,6 +9,9 @@
 //!   `phase` + streaming Dr. Elephant `findings`)
 //! - `GET    /api/v1/jobs/<id>/metrics` — the job's time series as JSON
 //!   (live registry while running, down-sampled history record after)
+//! - `GET    /api/v1/jobs/<id>/trace`   — the job's lifecycle span tree +
+//!   critical-path analysis (live span store while running, exported
+//!   record from history after; see `docs/TRACING.md`)
 //! - `DELETE /api/v1/jobs/<id>`         — kill (queued or running)
 //! - `GET    /api/v1/cluster`           — RM utilization + gateway counters
 //! - `GET    /metrics`                  — Prometheus text format aggregated
@@ -189,6 +192,16 @@ fn handle(gw: &Gateway, stream: &mut std::net::TcpStream) {
                 None => respond_not_found(stream, "no such job"),
             }
         }
+        ("GET", p) if p.starts_with("/api/v1/jobs/") && p.ends_with("/trace") => {
+            let id = p
+                .strip_prefix("/api/v1/jobs/")
+                .and_then(|rest| rest.strip_suffix("/trace"))
+                .and_then(|s| s.parse::<u64>().ok());
+            match id.and_then(|id| gw.job_trace_json(id)) {
+                Some(j) => http_response(stream, "200 OK", "application/json", &j.render_pretty()),
+                None => respond_not_found(stream, "no such job"),
+            }
+        }
         ("GET", p) if p.starts_with("/api/v1/jobs/") => {
             match job_id_from_path(p, "/api/v1/jobs/").and_then(|id| gw.job_json(id)) {
                 Some(j) => http_response(stream, "200 OK", "application/json", &j.render_pretty()),
@@ -304,6 +317,17 @@ pub fn job_remote(gateway: &str, id: u64) -> Result<Json> {
     Json::parse(&resp).map_err(|e| anyhow!("bad gateway response: {e}"))
 }
 
+/// Fetch one job's lifecycle trace (span tree + critical path) from a
+/// remote gateway — what `tony trace <job-id>` renders.
+pub fn trace_remote(gateway: &str, id: u64) -> Result<Json> {
+    let (status, resp) =
+        http_request("GET", &format!("http://{gateway}/api/v1/jobs/{id}/trace"), "")?;
+    if status != 200 {
+        anyhow::bail!("gateway returned HTTP {status} for job {id}'s trace");
+    }
+    Json::parse(&resp).map_err(|e| anyhow!("bad gateway response: {e}"))
+}
+
 /// Poll a remote gateway until the job reaches a terminal state.
 pub fn wait_remote(gateway: &str, id: u64, timeout: Duration) -> Result<(String, Json)> {
     let deadline = std::time::Instant::now() + timeout;
@@ -415,6 +439,61 @@ mod tests {
             Json::parse(&body).unwrap().get("state").and_then(|s| s.as_str()),
             Some("FINISHED")
         );
+
+        gw.shutdown();
+    }
+
+    /// Contract for `GET /api/v1/jobs/<id>/trace`: unknown ids get the
+    /// standard JSON 404, jobs with tracing disabled get the empty
+    /// `{"enabled": false, "spans": []}` shape, and a completed job's
+    /// span tree replays from its history record (the live store is
+    /// dropped at terminalization).
+    #[test]
+    fn trace_endpoint_contract() {
+        let gw = gw("trace");
+        let api = GatewayApi::start(gw.clone(), 0).unwrap();
+        let hostport = api.addr.to_string();
+
+        // Unknown job id → JSON 404 with the stable code.
+        let (status, body) =
+            http_request("GET", &format!("http://{hostport}/api/v1/jobs/999/trace"), "").unwrap();
+        assert_eq!(status, 404);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("code").and_then(|c| c.as_str()), Some("not-found"));
+        assert!(j.get("error").is_some());
+
+        // One job with tracing off, one with the default (on + export).
+        let mut off = job_conf("untraced");
+        off.set("tony.trace.enable", "false");
+        let (id_off, _) = submit_remote(&hostport, "alice", 1, &off).unwrap();
+        let (id_on, _) = submit_remote(&hostport, "bob", 1, &job_conf("traced")).unwrap();
+        wait_remote(&hostport, id_off, Duration::from_secs(120)).unwrap();
+        wait_remote(&hostport, id_on, Duration::from_secs(120)).unwrap();
+
+        let off_trace = trace_remote(&hostport, id_off).unwrap();
+        assert_eq!(off_trace.get("enabled").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(
+            off_trace.get("spans").and_then(|s| s.as_arr()).map(|a| a.len()),
+            Some(0),
+            "disabled jobs must serve the empty shape: {}",
+            off_trace.render_pretty()
+        );
+
+        // Post-completion replay: the live handle is gone, so this span
+        // tree came back out of the history record.
+        let on_trace = trace_remote(&hostport, id_on).unwrap();
+        assert_eq!(
+            on_trace.get("enabled").and_then(|b| b.as_bool()),
+            Some(true),
+            "{}",
+            on_trace.render_pretty()
+        );
+        assert!(!on_trace.get("spans").and_then(|s| s.as_arr()).unwrap().is_empty());
+        let dominant = on_trace.at(&["critical_path", "dominant_stage"]).and_then(|d| d.as_str());
+        assert!(dominant.is_some(), "critical path must name a stage: {}", on_trace.render_pretty());
+        // `tony trace <job-id>` renders this same document.
+        let text = crate::trace::render_ascii(&on_trace);
+        assert!(text.contains("critical path"), "{text}");
 
         gw.shutdown();
     }

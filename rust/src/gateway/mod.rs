@@ -69,7 +69,9 @@ use anyhow::{Context, Result};
 use crate::client::{SubmitOpts, TonyClient};
 use crate::history::{HistoryStore, JobRecord};
 use crate::json::Json;
+use crate::metrics::Histogram;
 use crate::tonyconf::JobSpec;
+use crate::trace::{SpanStore, Stage};
 use crate::util::clock::Clock;
 use crate::util::event::{tag, WakeupBus};
 use crate::util::ids::ApplicationId;
@@ -177,6 +179,11 @@ struct Job {
     /// endpoints read.  Set when the worker submits the application,
     /// cleared when the job terminalizes (history keeps the series).
     live: Option<Arc<crate::am::AmState>>,
+    /// Lifecycle span store, minted at admission so the `queued` stage
+    /// covers the whole pending-queue wait.  Serves `/trace` while the
+    /// job is in the table; cleared at terminalization (history keeps
+    /// the exported span tree, mirroring `live`/`series`).
+    trace: Option<Arc<SpanStore>>,
 }
 
 struct GwInner {
@@ -202,6 +209,11 @@ pub struct Gateway {
     queue: PendingQueue,
     history: HistoryStore,
     inner: Mutex<GwInner>,
+    /// Stage-latency histograms (`tony_stage_seconds`), fed from each
+    /// traced job's critical-path breakdown at terminalization and
+    /// rendered on `GET /metrics`.  Own lock, taken strictly after (or
+    /// without) the job-table lock.
+    stage_hist: Mutex<BTreeMap<&'static str, Histogram>>,
     api_url: Mutex<Option<String>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Clock shared with the RM: every gateway deadline runs on it.
@@ -234,6 +246,7 @@ impl Gateway {
                 user_resources: BTreeMap::new(),
                 stats: GatewayStats::default(),
             }),
+            stage_hist: Mutex::new(BTreeMap::new()),
             api_url: Mutex::new(None),
             workers: Mutex::new(Vec::new()),
             clock,
@@ -339,6 +352,12 @@ impl Gateway {
             ));
             conf.set("tony.train.checkpoint-dir", ckpt.to_string_lossy().to_string());
         }
+        // Mint the lifecycle trace at admission: the `queued` stage opens
+        // here, so the span tree covers the pending-queue wait the AM
+        // never sees.  A disabled store (tony.trace.enable=false) swallows
+        // every call without taking a lock.
+        let trace = SpanStore::new(&spec.trace, self.clock.clone(), id);
+        trace.start_stage(Stage::Queued);
         let job = Job {
             id,
             user: user.to_string(),
@@ -354,10 +373,16 @@ impl Gateway {
             kill_requested: false,
             conf,
             live: None,
+            trace: Some(trace),
         };
         if let Err(e) = self.queue.try_push(priority, id) {
             // Backpressure: record the refusal (id already burned).
             let mut j = job;
+            // The job never entered the queue; close the just-opened
+            // `queued` stage so the refusal's trace isn't left dangling.
+            if let Some(t) = &j.trace {
+                t.end_all();
+            }
             j.state = JobState::Rejected;
             j.detail = RejectReason::Backpressure(e.to_string()).to_string();
             inner.jobs.insert(id, j);
@@ -427,6 +452,7 @@ impl Gateway {
                 kill_requested: false,
                 conf: conf.clone(),
                 live: None,
+                trace: None,
             },
         );
         inner.stats.rejected += 1;
@@ -638,6 +664,49 @@ impl Gateway {
         })
     }
 
+    /// The job's lifecycle trace as JSON: the live span store while the
+    /// job is in the table, the exported span tree from its history
+    /// record once evicted or terminal.  `None` means the job id is
+    /// unknown.  Jobs that never traced (disabled, never ran, or records
+    /// predating the tracing plane) get the same `{"enabled": false,
+    /// "spans": []}` shape a disabled live store serves.
+    pub fn job_trace_json(&self, id: u64) -> Option<Json> {
+        let (trace, app_id) = {
+            let inner = self.inner.lock().unwrap();
+            let job = inner.jobs.get(&id)?;
+            (job.trace.clone(), job.app_id)
+        };
+        if let Some(t) = trace {
+            return Some(t.trace_json());
+        }
+        let record = app_id.and_then(|app| self.history.load(&app.to_string()).ok());
+        Some(match record {
+            Some(rec) if rec.trace.get("spans").is_some() => rec.trace.clone(),
+            _ => {
+                let mut j = Json::obj();
+                j.set("enabled", false);
+                j.set("spans", Json::Arr(Vec::new()));
+                j
+            }
+        })
+    }
+
+    /// Fold one finished job's per-stage wall-clock into the gateway's
+    /// `tony_stage_seconds` histograms.  Disabled stores report no
+    /// stages, so untraced jobs never touch the histogram lock.
+    fn observe_stages(&self, trace: &SpanStore) {
+        let stages = trace.stage_millis();
+        if stages.is_empty() {
+            return;
+        }
+        let mut hist = self.stage_hist.lock().unwrap();
+        for (stage, ms) in stages {
+            hist.entry(stage.as_str())
+                .or_insert_with(Histogram::stage_seconds)
+                .observe(ms as f64 / 1000.0);
+        }
+    }
+
     /// The gateway's `GET /metrics` body: every running job's per-task
     /// gauges (labelled `job`/`id`/`user`/`queue`), the cluster's
     /// per-queue scheduler gauges, and the gateway's own counters.
@@ -672,6 +741,10 @@ impl Gateway {
         }
         crate::metrics::render_task_metrics(&mut prom, &rows);
         crate::metrics::render_cluster_metrics(&mut prom, &self.rm);
+        {
+            let hist = self.stage_hist.lock().unwrap();
+            crate::metrics::render_stage_histograms(&mut prom, &hist);
+        }
         let stats = self.stats();
         let (pending, running) = self.live_counts();
         prom.header(
@@ -742,7 +815,7 @@ impl Gateway {
     /// failed applications up to `max_submit_attempts`, and record the
     /// outcome in the history store.
     fn run_job(&self, id: u64) {
-        let (conf, ident) = {
+        let (conf, ident, trace) = {
             let mut inner = self.inner.lock().unwrap();
             let Some(job) = inner.jobs.get_mut(&id) else { return };
             let ident = (job.user.clone(), job.name.clone(), job.queue.clone());
@@ -753,7 +826,7 @@ impl Gateway {
                 return;
             }
             job.state = JobState::Running;
-            (job.conf.clone(), ident)
+            (job.conf.clone(), ident, job.trace.clone())
         };
         // Pending -> Running is an event `wait_for_state` watchers (and
         // the submit->RUNNING latency bench) observe at wakeup time.
@@ -772,6 +845,9 @@ impl Gateway {
             let opts = SubmitOpts {
                 start_portal: false,
                 tracking_url: self.api_url().map(|u| format!("{u}/api/v1/jobs/{id}")),
+                // Same store across gateway retries: attempt boundaries
+                // show up as repeated scheduling/launching stage spans.
+                trace: trace.clone(),
             };
             let handle = match client.submit_opts(&conf, &self.conf.artifacts_dir, opts) {
                 Ok(h) => h,
@@ -882,6 +958,7 @@ impl Gateway {
             diagnostics: format!("[user {user}] {detail}"),
             tasks: Vec::new(),
             series: Json::obj(),
+            trace: Json::obj(),
         });
     }
 
@@ -906,6 +983,15 @@ impl Gateway {
         // inspectable through the down-sampled series in the history
         // store (see `HistoryStore::record_from`).
         job.live = None;
+        // Close any span still open (a no-op when the AM already ran its
+        // own end_all), fold the stage breakdown into the gateway-wide
+        // latency histograms, and drop the live trace handle — the
+        // exported span tree lives on in the history record, like the
+        // series.
+        if let Some(trace) = job.trace.take() {
+            trace.end_all();
+            self.observe_stages(&trace);
+        }
         let (user, queue, resources) = (job.user.clone(), job.queue.clone(), job.resources);
         if let Some(n) = inner.user_active.get_mut(&user) {
             *n = n.saturating_sub(1);
@@ -1040,6 +1126,90 @@ mod tests {
         for (_, free, cap) in gw.rm().node_usage() {
             assert_eq!(free, cap, "capacity leaked after kill");
         }
+        gw.shutdown();
+    }
+
+    /// Tentpole acceptance: while a gang-mode job is held behind a full
+    /// node, its live `/trace` view names the blocking scheduler verdict
+    /// and attributes the wait to the scheduling stage; after completion
+    /// the span tree replays from history and the stage histograms land
+    /// on the gateway scrape.
+    #[test]
+    fn live_trace_names_blocking_gang_decision() {
+        let rm = crate::yarn::ResourceManager::start_uniform(1, Resource::new(2048, 8, 0));
+        let gw = Gateway::start(rm, test_conf("gangtrace")).unwrap();
+
+        // Job A (AM 256 + worker 512 + ps 512 = 1280 MB) fills most of
+        // the single node and runs long enough to observe B waiting.
+        let SubmitOutcome::Accepted { id: hog } = gw.submit_conf("alice", 5, job_xml("hog", 5000))
+        else {
+            panic!()
+        };
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let free = gw.rm().node_usage()[0].1.memory_mb;
+            if free <= 768 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "job A never placed (free {free} MB)");
+            crate::util::clock::real_sleep(Duration::from_millis(20));
+        }
+
+        // B's AM (256 MB) fits in the leftover, but its worker+ps gang
+        // (1024 MB) cannot be placed whole until A exits.
+        let SubmitOutcome::Accepted { id: blocked } =
+            gw.submit_conf("bob", 1, job_xml("blocked", 2))
+        else {
+            panic!()
+        };
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let trace = loop {
+            let t = gw.job_trace_json(blocked).unwrap();
+            let waiting = t
+                .get("spans")
+                .and_then(|s| s.as_arr())
+                .map(|spans| {
+                    spans.iter().any(|s| {
+                        s.get("name").and_then(|n| n.as_str()) == Some("sched.decision")
+                            && s.at(&["attrs", "reason"])
+                                .and_then(|r| r.as_str())
+                                .map(|r| r.starts_with("WAITING"))
+                                .unwrap_or(false)
+                    })
+                })
+                .unwrap_or(false);
+            let dominant =
+                t.at(&["critical_path", "dominant_stage"]).and_then(|d| d.as_str());
+            if waiting && dominant == Some("scheduling") {
+                break t;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "no blocking decision surfaced: {}",
+                t.render_pretty()
+            );
+            crate::util::clock::real_sleep(Duration::from_millis(20));
+        };
+        let blocking = trace
+            .at(&["critical_path", "blocking_decision"])
+            .and_then(|b| b.as_str())
+            .expect("blocking decision rendered")
+            .to_string();
+        assert!(blocking.contains("waited"), "got: {blocking}");
+
+        // Free the node: A dies, B's gang places, everything settles.
+        gw.kill(hog);
+        assert!(gw.wait_idle(Duration::from_secs(120)), "jobs never settled");
+        assert_eq!(gw.job_state(blocked), Some(JobState::Finished));
+
+        // The finished job replays from its history record...
+        let replay = gw.job_trace_json(blocked).unwrap();
+        assert_eq!(replay.get("enabled").and_then(|b| b.as_bool()), Some(true));
+        assert!(!replay.get("spans").and_then(|s| s.as_arr()).unwrap().is_empty());
+        // ...and the stage histograms made it onto the scrape.
+        let prom = gw.metrics_prometheus();
+        assert!(prom.contains("tony_stage_seconds_bucket"), "{prom}");
+        assert!(prom.contains("stage=\"running\""), "{prom}");
         gw.shutdown();
     }
 

@@ -26,6 +26,7 @@
 //!         diagnostics: String::new(),
 //!         tasks: Vec::new(),
 //!         series: Json::obj(),
+//!         trace: Json::obj(),
 //!     })
 //!     .unwrap();
 //! assert!(store.load("application_1_0001").unwrap().succeeded);
@@ -56,6 +57,12 @@ pub struct JobRecord {
     /// serve (see [`crate::metrics::Registry::downsampled_json`]).
     /// Empty object for jobs that never ran or predate the pipeline.
     pub series: Json,
+    /// The job's lifecycle trace (span tree + critical path) captured at
+    /// completion, in the shape `SpanStore::trace_json` serves live (see
+    /// [`crate::trace`]).  Empty object when tracing was off, export was
+    /// disabled (`tony.trace.export=false`), or the record predates the
+    /// tracing plane.
+    pub trace: Json,
 }
 
 impl JobRecord {
@@ -84,6 +91,7 @@ impl JobRecord {
         j.set("diagnostics", self.diagnostics.as_str());
         j.set("tasks", Json::Arr(tasks));
         j.set("series", self.series.clone());
+        j.set("trace", self.trace.clone());
         j
     }
 
@@ -128,8 +136,10 @@ impl JobRecord {
             wall_ms: j.get("wall_ms").and_then(|v| v.as_u64()).unwrap_or(0),
             diagnostics: s("diagnostics").unwrap_or_default(),
             tasks,
-            // Records written before the metrics pipeline have no series.
+            // Records written before the metrics pipeline have no series,
+            // and ones before the tracing plane have no trace.
             series: j.get("series").cloned().unwrap_or_else(Json::obj),
+            trace: j.get("trace").cloned().unwrap_or_else(Json::obj),
         })
     }
 }
@@ -251,6 +261,13 @@ impl HistoryStore {
             series: am_state
                 .metrics_registry()
                 .downsampled_json(am_state.job_spec().metrics.history_points),
+            // Persist the span tree only when the job opted in
+            // (`tony.trace.export`); the empty object keeps old readers
+            // working and marks "no trace" for the /trace endpoint.
+            trace: match am_state.trace() {
+                Some(t) if t.export() => t.trace_json(),
+                _ => Json::obj(),
+            },
         })
     }
 
@@ -337,6 +354,7 @@ mod tests {
                 TaskMetrics { step: 10, loss: 2.0, tokens_done: 2560, ..Default::default() },
             )],
             series: Json::obj(),
+            trace: Json::obj(),
         }
     }
 

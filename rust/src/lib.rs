@@ -36,6 +36,7 @@ pub mod history;
 pub mod json;
 pub mod metrics;
 pub mod tonyconf;
+pub mod trace;
 pub mod net;
 pub mod proptest;
 pub mod runtime;

@@ -14,6 +14,7 @@
 //!             [--preemption-grace-ms 2000] [--preemption-max-victims 8]
 //!             [--reservation-limit 2]
 //! tony demo   [--artifacts artifacts/tiny] [--steps 10]
+//! tony trace  <job-id> --gateway 127.0.0.1:8080   (or <app-id> from local history)
 //! tony history
 //! tony version
 //! ```
@@ -66,7 +67,9 @@ fn usage() -> ! {
          [--artifacts DIR] [--gang-mode true|false] [--preemption true|false] \
          [--preemption-grace-ms 2000] [--preemption-max-victims 8] \
          [--reservation-limit 2]\n  \
-         tony demo [--artifacts artifacts/tiny] [--steps 10]\n  tony history\n  tony version"
+         tony demo [--artifacts artifacts/tiny] [--steps 10]\n  \
+         tony trace <job-id> --gateway <host:port>  (or <app-id> from local history)\n  \
+         tony history\n  tony version"
     );
     std::process::exit(2);
 }
@@ -198,7 +201,7 @@ fn main() {
     tony::util::logging::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
-    let (_pos, flags) = parse_flags(&args[1..]);
+    let (pos, flags) = parse_flags(&args[1..]);
 
     let code = match cmd.as_str() {
         "history" => {
@@ -228,6 +231,50 @@ fn main() {
                 }
             }
             0
+        }
+        "trace" => {
+            // ASCII timeline of one job's lifecycle trace: per-stage
+            // spans, scheduler verdicts, and the critical-path verdict
+            // (docs/TRACING.md).  Live or finished jobs via a gateway;
+            // finished jobs locally from the history store.
+            let Some(id_arg) = pos.first() else { usage() };
+            if let Some(gateway) = flags.get("gateway") {
+                match id_arg.parse::<u64>() {
+                    Err(_) => {
+                        eprintln!("gateway job ids are numeric (got '{id_arg}')");
+                        2
+                    }
+                    Ok(id) => match gwapi::trace_remote(gateway, id) {
+                        Ok(j) => {
+                            print!("{}", tony::trace::render_ascii(&j));
+                            0
+                        }
+                        Err(e) => {
+                            eprintln!("trace fetch failed: {e:#}");
+                            1
+                        }
+                    },
+                }
+            } else {
+                let store = tony::history::HistoryStore::default_location();
+                match store.load(id_arg) {
+                    Ok(rec) if rec.trace.get("spans").is_some() => {
+                        print!("{}", tony::trace::render_ascii(&rec.trace));
+                        0
+                    }
+                    Ok(_) => {
+                        eprintln!(
+                            "'{id_arg}' has no recorded trace (tracing disabled or \
+                             tony.trace.export=false)"
+                        );
+                        1
+                    }
+                    Err(e) => {
+                        eprintln!("no history record for '{id_arg}': {e:#}");
+                        1
+                    }
+                }
+            }
         }
         "version" => {
             println!("tony 0.1.0 (OpML'19 reproduction; rust+jax+pallas, AOT via XLA/PJRT)");
@@ -345,6 +392,7 @@ fn main() {
             println!("  GET    {}/api/v1/jobs/<id>", api.url());
             println!("  DELETE {}/api/v1/jobs/<id>", api.url());
             println!("  GET    {}/api/v1/jobs/<id>/metrics", api.url());
+            println!("  GET    {}/api/v1/jobs/<id>/trace", api.url());
             println!("  GET    {}/api/v1/cluster", api.url());
             println!("  GET    {}/metrics  (Prometheus, all running jobs)", api.url());
             println!("submit with: tony submit --gateway {} --conf job.xml", api.addr);

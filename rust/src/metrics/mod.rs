@@ -331,6 +331,74 @@ impl Registry {
 }
 
 // ---------------------------------------------------------------------
+// Histograms
+// ---------------------------------------------------------------------
+
+/// Explicit bucket bounds (seconds) for the `tony_stage_seconds` stage-
+/// latency families: sub-10 ms launches up through multi-minute queue
+/// waits.  `+Inf` is implicit.
+pub const STAGE_SECONDS_BUCKETS: &[f64] =
+    &[0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0, 300.0];
+
+/// A fixed-bucket histogram in the Prometheus style: cumulative
+/// `le`-bucket counts, a running sum, and a total count.  Buckets are
+/// upper-inclusive (`v <= bound`), matching Prometheus semantics.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// Non-cumulative per-bucket counts; the last slot is the overflow
+    /// (`+Inf`) bucket.  Rendering accumulates them.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// `bounds` must be sorted ascending (asserted in debug builds).
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bucket bounds must ascend");
+        Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    /// The standard stage-latency histogram (seconds).
+    pub fn stage_seconds() -> Histogram {
+        Histogram::new(STAGE_SECONDS_BUCKETS)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative `(upper_bound, count)` pairs, ending with the `+Inf`
+    /// bucket (whose count equals the total).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            let bound = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((bound, acc));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
 // Prometheus text exposition
 // ---------------------------------------------------------------------
 
@@ -393,8 +461,39 @@ impl PromText {
         self.out.push_str(&format!(" {}\n", format_value(value)));
     }
 
+    /// Emit one histogram's samples: the cumulative `_bucket` series
+    /// (ending in `le="+Inf"`), `_sum`, and `_count`.  Callers emit the
+    /// family header once (`kind = "histogram"`) before the first call.
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        for (bound, count) in h.cumulative() {
+            let le = if bound.is_infinite() { "+Inf".to_string() } else { format_value(bound) };
+            let mut l: Vec<(&str, &str)> = labels.to_vec();
+            l.push(("le", le.as_str()));
+            self.sample(&format!("{name}_bucket"), &l, count as f64);
+        }
+        self.sample(&format!("{name}_sum"), labels, h.sum());
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
     pub fn finish(self) -> String {
         self.out
+    }
+}
+
+/// Render the `tony_stage_seconds` histogram family from per-stage
+/// histograms — shared by the gateway's and the portal's `/metrics` so
+/// both agree on names, buckets, and label scheme.
+pub fn render_stage_histograms(
+    prom: &mut PromText,
+    stages: &BTreeMap<&'static str, Histogram>,
+) {
+    prom.header(
+        "tony_stage_seconds",
+        "histogram",
+        "Job lifecycle stage latency (queued/scheduling/launching/registering/spec-sync/running).",
+    );
+    for (stage, h) in stages {
+        prom.histogram("tony_stage_seconds", &[("stage", stage)], h);
     }
 }
 
@@ -661,6 +760,52 @@ mod tests {
         assert!(text.contains(
             "tony_task_step{job=\"demo\",task=\"worker:1\"} 2"
         ));
+    }
+
+    #[test]
+    fn histogram_buckets_are_upper_inclusive_and_cumulative() {
+        let mut h = Histogram::new(&[0.1, 1.0, 10.0]);
+        h.observe(0.1); // exactly on a bound lands in that bucket (le)
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(100.0); // overflow -> +Inf only
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), 4, "three bounds plus +Inf");
+        assert_eq!(cum[0], (0.1, 2), "0.05 and the boundary 0.1");
+        assert_eq!(cum[1], (1.0, 3));
+        assert_eq!(cum[2], (10.0, 3));
+        assert!(cum[3].0.is_infinite());
+        assert_eq!(cum[3].1, 4, "+Inf bucket counts everything");
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 100.65).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_prometheus_rendering() {
+        let mut h = Histogram::new(&[0.5, 5.0]);
+        h.observe(0.2);
+        h.observe(7.0);
+        let mut prom = PromText::new();
+        prom.header("tony_stage_seconds", "histogram", "stage latency");
+        prom.histogram("tony_stage_seconds", &[("stage", "queued")], &h);
+        let text = prom.finish();
+        assert!(text.contains("# TYPE tony_stage_seconds histogram"), "{text}");
+        assert!(text.contains("tony_stage_seconds_bucket{stage=\"queued\",le=\"0.5\"} 1"), "{text}");
+        assert!(text.contains("tony_stage_seconds_bucket{stage=\"queued\",le=\"5\"} 1"), "{text}");
+        assert!(
+            text.contains("tony_stage_seconds_bucket{stage=\"queued\",le=\"+Inf\"} 2"),
+            "le=+Inf closes the family: {text}"
+        );
+        assert!(text.contains("tony_stage_seconds_sum{stage=\"queued\"} 7.2"), "{text}");
+        assert!(text.contains("tony_stage_seconds_count{stage=\"queued\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn stage_seconds_buckets_ascend() {
+        assert!(STAGE_SECONDS_BUCKETS.windows(2).all(|w| w[0] < w[1]));
+        let mut h = Histogram::stage_seconds();
+        h.observe(0.3);
+        assert_eq!(h.count(), 1);
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! - `GET /status`      — the AM state snapshot as JSON
 //! - `GET /cluster`     — RM node/queue utilization as JSON
 //! - `GET /losses`      — the chief's loss curve as JSON
-//! - `GET /metrics`     — Prometheus text format: per-task gauges + per-queue
-//!   cluster utilization (see `docs/METRICS.md`)
+//! - `GET /metrics`     — Prometheus text format: per-task gauges, per-queue
+//!   cluster utilization, and the job's `tony_stage_seconds` stage-latency
+//!   histogram when tracing is on (see `docs/METRICS.md`)
 //! - `GET /series`      — the job's ring-buffered time series as JSON
 //! - `GET /findings`    — streaming Dr. Elephant verdicts for the *running* job
 //! - `GET /logs/<task>` — captured log lines mentioning the task
@@ -92,12 +93,26 @@ pub fn respond_not_found(stream: &mut std::net::TcpStream, message: &str) {
 pub const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
 
 /// The AM portal's `GET /metrics` body: per-task gauges from the latest
-/// heartbeat snapshot plus per-queue scheduler gauges.
+/// heartbeat snapshot, per-queue scheduler gauges, and — when the job is
+/// traced — the `tony_stage_seconds` histogram over the job's own stage
+/// breakdown so far (open stages count up to now).
 pub fn prometheus_text(state: &AmState, rm: &ResourceManager) -> String {
     let mut prom = crate::metrics::PromText::new();
     let rows = crate::metrics::task_rows(state.task_metrics(), &[]);
     crate::metrics::render_task_metrics(&mut prom, &rows);
     crate::metrics::render_cluster_metrics(&mut prom, rm);
+    if let Some(trace) = state.trace() {
+        let mut stages = std::collections::BTreeMap::new();
+        for (stage, ms) in trace.stage_millis() {
+            stages
+                .entry(stage.as_str())
+                .or_insert_with(crate::metrics::Histogram::stage_seconds)
+                .observe(ms as f64 / 1000.0);
+        }
+        if !stages.is_empty() {
+            crate::metrics::render_stage_histograms(&mut prom, &stages);
+        }
+    }
     prom.finish()
 }
 
@@ -472,6 +487,33 @@ mod tests {
 
         let (code, _) = http_get(&format!("{}/nope", portal.url())).unwrap();
         assert_eq!(code, 404);
+    }
+
+    /// The per-job portal scrape carries the job's own stage-latency
+    /// histogram once a trace is attached — and no `tony_stage_seconds`
+    /// family at all for untraced jobs.
+    #[test]
+    fn portal_metrics_include_stage_histogram_when_traced() {
+        let conf = JobConfBuilder::new("traced").instances("worker", 1).build();
+        let spec = JobSpec::from_conf(&conf).unwrap();
+        let state = Arc::new(AmState::new(&spec));
+        let store = crate::trace::SpanStore::new(
+            &crate::trace::TraceConf::default(),
+            crate::util::clock::SystemClock::shared(),
+            7,
+        );
+        state.set_trace(&store);
+        state.begin_attempt(1); // the trace hook opens the scheduling stage
+        let rm = ResourceManager::start_uniform(1, Resource::new(1024, 2, 0));
+        let text = prometheus_text(&state, &rm);
+        assert!(text.contains("# TYPE tony_stage_seconds histogram"), "{text}");
+        assert!(text.contains("tony_stage_seconds_bucket{stage=\"scheduling\""), "{text}");
+        assert!(text.contains("tony_stage_seconds_count{stage=\"scheduling\"} 1"), "{text}");
+
+        let bare = Arc::new(AmState::new(&spec));
+        bare.begin_attempt(1);
+        let text = prometheus_text(&bare, &rm);
+        assert!(!text.contains("tony_stage_seconds"), "{text}");
     }
 
     #[test]

@@ -56,6 +56,8 @@ pub struct JobSpec {
     pub train: TrainSpec,
     /// Live-observability knobs (the `tony.metrics.*` keys).
     pub metrics: MetricsSpec,
+    /// Causal-tracing knobs (the `tony.trace.*` keys; see `docs/TRACING.md`).
+    pub trace: crate::trace::TraceConf,
     /// The raw configuration (executors receive it verbatim, like the
     /// packaged conf archive in real TonY).
     pub conf: Configuration,
@@ -172,6 +174,7 @@ impl JobSpec {
             max_missed_heartbeats: conf.get_u32("tony.task.max-missed-heartbeats", 20),
             train,
             metrics: MetricsSpec::from_conf(conf),
+            trace: crate::trace::TraceConf::from_conf(conf),
             conf: conf.clone(),
         })
     }
@@ -358,6 +361,24 @@ mod tests {
         assert_eq!(spec.metrics.sample_interval_ms, 0, "0 disables collection");
         assert_eq!(spec.metrics.retention_points, 16);
         assert_eq!(spec.metrics.history_points, 8);
+    }
+
+    #[test]
+    fn trace_spec_defaults_and_overrides() {
+        let spec = JobSpec::from_conf(&sample()).unwrap();
+        assert!(spec.trace.enable, "tracing on by default");
+        assert_eq!(spec.trace.max_spans_per_job, 256);
+        assert!(spec.trace.export);
+        let c = JobConfBuilder::new("t")
+            .instances(WORKER, 1)
+            .set("tony.trace.enable", "false")
+            .set("tony.trace.max-spans-per-job", "32")
+            .set("tony.trace.export", "false")
+            .build();
+        let spec = JobSpec::from_conf(&c).unwrap();
+        assert!(!spec.trace.enable);
+        assert_eq!(spec.trace.max_spans_per_job, 32);
+        assert!(!spec.trace.export);
     }
 
     #[test]

@@ -1,0 +1,888 @@
+//! Causal job-lifecycle tracing: spans across gateway → RM → AM → executor.
+//!
+//! The metrics plane (PR 3) answers *what is the value now*; the scheduler
+//! states (PR 5) answer *where does the job stand*.  This module answers
+//! *why*: which stage — queue wait, gang placement, container launch,
+//! executor registration, spec distribution, running — consumed a job's
+//! time, and which scheduler decision blocked it.
+//!
+//! Design mirrors the metrics plane deliberately:
+//!
+//! * One bounded [`SpanStore`] per job (ring-buffer discipline from
+//!   `metrics::Series`: at capacity the oldest span is evicted).
+//! * The off switch leaves the hot path lock-free: every public method
+//!   checks a plain `enabled` bool *before* touching the store's mutex,
+//!   exactly like `Registry::observe_task`'s `interval_ms == 0` early
+//!   return.
+//! * Keys: `tony.trace.enable`, `tony.trace.max-spans-per-job`,
+//!   `tony.trace.export` (see `docs/TRACING.md` / `docs/CONFIGURATION.md`).
+//!
+//! On top of the raw spans sits the **critical-path analyzer**
+//! ([`SpanStore::trace_json`]): it folds the span tree into a per-stage
+//! latency breakdown, names the dominant stage, and surfaces the scheduler
+//! decision that blocked the job the longest (e.g. "gang 7 waited 12.4 s
+//! for queue 'prod' headroom; 2 preemption rounds").
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::json::Json;
+use crate::util::clock::{Clock, SystemClock};
+use crate::xmlconf::Configuration;
+
+/// The `tony.trace.*` configuration surface.
+#[derive(Debug, Clone)]
+pub struct TraceConf {
+    /// `tony.trace.enable` — master switch (default true).  When false the
+    /// job gets a disabled store: every span call is a branch on a plain
+    /// bool, no lock is ever taken.
+    pub enable: bool,
+    /// `tony.trace.max-spans-per-job` — ring capacity (default 256).  At
+    /// capacity the oldest span is evicted, `metrics::Series` style.
+    pub max_spans_per_job: usize,
+    /// `tony.trace.export` — when false the trace is collected (CLI and
+    /// API can read it) but not persisted into the job's history record.
+    pub export: bool,
+}
+
+impl Default for TraceConf {
+    fn default() -> TraceConf {
+        TraceConf { enable: true, max_spans_per_job: 256, export: true }
+    }
+}
+
+impl TraceConf {
+    pub fn from_conf(conf: &Configuration) -> TraceConf {
+        let d = TraceConf::default();
+        TraceConf {
+            enable: conf.get_bool("tony.trace.enable", d.enable),
+            max_spans_per_job: conf
+                .get_u64("tony.trace.max-spans-per-job", d.max_spans_per_job as u64)
+                .max(8) as usize,
+            export: conf.get_bool("tony.trace.export", d.export),
+        }
+    }
+}
+
+/// The six lifecycle stages the critical-path analyzer attributes time to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Gateway accept → a submit worker picks the job up.
+    Queued,
+    /// Asks submitted → every task container granted (gang placement,
+    /// reservations, and preemption rounds all land here).
+    Scheduling,
+    /// First grant → every executor launched in its container.
+    Launching,
+    /// Executors launched → every task registered back with the AM.
+    Registering,
+    /// Cluster spec built → every task fetched it (TF_CONFIG distribution).
+    SpecSync,
+    /// Spec distributed → the attempt ends.
+    Running,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::Queued,
+        Stage::Scheduling,
+        Stage::Launching,
+        Stage::Registering,
+        Stage::SpecSync,
+        Stage::Running,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Queued => "queued",
+            Stage::Scheduling => "scheduling",
+            Stage::Launching => "launching",
+            Stage::Registering => "registering",
+            Stage::SpecSync => "spec-sync",
+            Stage::Running => "running",
+        }
+    }
+}
+
+/// A lightweight causal reference: trace id (job + attempt) plus the span
+/// it points at.  Minted by [`SpanStore::context`]; carried in log lines so
+/// `grep <job-id>` correlates logs with the span tree.
+#[derive(Debug, Clone)]
+pub struct TraceContext {
+    pub trace_id: String,
+    pub span: u64,
+    pub parent: Option<u64>,
+}
+
+/// One recorded interval (or instantaneous event when `end_ms == start_ms`
+/// at creation).  `end_ms == None` means the span is still open.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: u64,
+    pub parent: Option<u64>,
+    pub name: String,
+    pub stage: Stage,
+    pub start_ms: u64,
+    pub end_ms: Option<u64>,
+    pub attrs: Vec<(String, String)>,
+}
+
+impl Span {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id);
+        match self.parent {
+            Some(p) => j.set("parent", p),
+            None => j.set("parent", Json::Null),
+        };
+        j.set("name", self.name.as_str());
+        j.set("stage", self.stage.as_str());
+        j.set("start_ms", self.start_ms);
+        match self.end_ms {
+            Some(e) => j.set("end_ms", e),
+            None => j.set("end_ms", Json::Null),
+        };
+        let mut attrs = Json::obj();
+        for (k, v) in &self.attrs {
+            attrs.set(k.as_str(), v.as_str());
+        }
+        j.set("attrs", attrs);
+        j
+    }
+}
+
+struct StoreInner {
+    spans: VecDeque<Span>,
+    next_span: u64,
+    attempt: u32,
+    /// One stage span may be open per stage at a time (re-opening after a
+    /// close starts a fresh span; the analyzer sums all of them).
+    open_stages: BTreeMap<Stage, u64>,
+    /// The currently open scheduler-decision span, with the (reason,
+    /// detail) it was opened for — repeats of the same verdict accrue
+    /// duration on it instead of spamming new spans.
+    open_decision: Option<(u64, String, String)>,
+}
+
+impl StoreInner {
+    fn push(&mut self, cap: usize, span: Span) {
+        if self.spans.len() == cap {
+            if let Some(old) = self.spans.pop_front() {
+                // An evicted span must not leave dangling open-state.
+                self.open_stages.retain(|_, id| *id != old.id);
+                if matches!(&self.open_decision, Some((id, _, _)) if *id == old.id) {
+                    self.open_decision = None;
+                }
+            }
+        }
+        self.spans.push_back(span);
+    }
+
+    fn close(&mut self, id: u64, now: u64) {
+        if let Some(s) = self.spans.iter_mut().find(|s| s.id == id) {
+            if s.end_ms.is_none() {
+                s.end_ms = Some(now.max(s.start_ms));
+            }
+        }
+    }
+
+    fn annotate(&mut self, id: u64, key: &str, value: String) {
+        if let Some(s) = self.spans.iter_mut().find(|s| s.id == id) {
+            if let Some(a) = s.attrs.iter_mut().find(|(k, _)| k == key) {
+                a.1 = value;
+            } else {
+                s.attrs.push((key.to_string(), value));
+            }
+        }
+    }
+}
+
+/// The per-job span ring.  Cheap to share (`Arc`), safe to hammer from the
+/// gateway, RM, AM, and executor threads; a disabled store never locks.
+pub struct SpanStore {
+    enabled: bool,
+    export: bool,
+    job_id: u64,
+    cap: usize,
+    clock: Arc<dyn Clock>,
+    inner: Mutex<StoreInner>,
+}
+
+impl SpanStore {
+    pub fn new(conf: &TraceConf, clock: Arc<dyn Clock>, job_id: u64) -> Arc<SpanStore> {
+        Arc::new(SpanStore {
+            enabled: conf.enable,
+            export: conf.export,
+            job_id,
+            cap: conf.max_spans_per_job,
+            clock,
+            inner: Mutex::new(StoreInner {
+                spans: VecDeque::new(),
+                next_span: 1,
+                attempt: 0,
+                open_stages: BTreeMap::new(),
+                open_decision: None,
+            }),
+        })
+    }
+
+    /// A store that records nothing and never takes its lock.
+    pub fn disabled() -> Arc<SpanStore> {
+        SpanStore::new(
+            &TraceConf { enable: false, ..TraceConf::default() },
+            SystemClock::shared(),
+            0,
+        )
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Whether this trace should be persisted into the job's history
+    /// record (`tony.trace.export`).
+    pub fn export(&self) -> bool {
+        self.enabled && self.export
+    }
+
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    pub fn set_attempt(&self, attempt: u32) {
+        if !self.enabled {
+            return;
+        }
+        self.inner.lock().unwrap().attempt = attempt;
+    }
+
+    /// Mint a causal reference for log correlation.
+    pub fn context(&self, span: u64, parent: Option<u64>) -> TraceContext {
+        let attempt = if self.enabled { self.inner.lock().unwrap().attempt } else { 0 };
+        TraceContext { trace_id: format!("job-{}.{attempt}", self.job_id), span, parent }
+    }
+
+    /// Open a span.  Returns its id, or 0 when tracing is disabled.
+    pub fn start(&self, stage: Stage, name: &str, parent: Option<u64>) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_span;
+        inner.next_span += 1;
+        let span = Span {
+            id,
+            parent,
+            name: name.to_string(),
+            stage,
+            start_ms: now,
+            end_ms: None,
+            attrs: Vec::new(),
+        };
+        inner.push(self.cap, span);
+        id
+    }
+
+    /// Close a span (no-op for unknown / already-closed / evicted ids).
+    pub fn end(&self, id: u64) {
+        if !self.enabled || id == 0 {
+            return;
+        }
+        let now = self.clock.now_ms();
+        self.inner.lock().unwrap().close(id, now);
+    }
+
+    /// Record an instantaneous event span.
+    pub fn event(&self, stage: Stage, name: &str, parent: Option<u64>, attrs: &[(&str, String)]) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_span;
+        inner.next_span += 1;
+        let span = Span {
+            id,
+            parent,
+            name: name.to_string(),
+            stage,
+            start_ms: now,
+            end_ms: Some(now),
+            attrs: attrs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        };
+        inner.push(self.cap, span);
+    }
+
+    /// Attach (or overwrite) an attribute on an existing span.
+    pub fn annotate(&self, id: u64, key: &str, value: String) {
+        if !self.enabled || id == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().annotate(id, key, value);
+    }
+
+    /// Open the canonical span for `stage` (the one the critical-path
+    /// analyzer attributes stage time to).  No-op if one is already open —
+    /// callers on racy paths (AM loop vs RPC handlers) can all call this.
+    pub fn start_stage(&self, stage: Stage) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(id) = inner.open_stages.get(&stage) {
+            return *id;
+        }
+        let id = inner.next_span;
+        inner.next_span += 1;
+        let span = Span {
+            id,
+            parent: None,
+            name: stage.as_str().to_string(),
+            stage,
+            start_ms: now,
+            end_ms: None,
+            attrs: Vec::new(),
+        };
+        inner.push(self.cap, span);
+        inner.open_stages.insert(stage, id);
+        id
+    }
+
+    /// Close the open canonical span for `stage`, if any.
+    pub fn end_stage(&self, stage: Stage) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(id) = inner.open_stages.remove(&stage) {
+            inner.close(id, now);
+        }
+    }
+
+    /// The open canonical span id for `stage` (parent for sub-spans).
+    pub fn stage_span(&self, stage: Stage) -> Option<u64> {
+        if !self.enabled {
+            return None;
+        }
+        self.inner.lock().unwrap().open_stages.get(&stage).copied()
+    }
+
+    /// Close every open span — the job terminalized; nothing may stay
+    /// open in the exported shape.
+    pub fn end_all(&self) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        inner.open_stages.clear();
+        inner.open_decision = None;
+        for s in inner.spans.iter_mut() {
+            if s.end_ms.is_none() {
+                s.end_ms = Some(now.max(s.start_ms));
+            }
+        }
+    }
+
+    /// Record a scheduler verdict for this app.  Repeats of the *same*
+    /// blocking verdict accrue duration on one open span (that is what
+    /// turns "the scheduler said WAITING_HEADROOM 400 times" into "gang 7
+    /// waited 12.4 s for queue 'prod' headroom"); a different verdict
+    /// closes the old span and opens a new one.  `PLACED_ALL` closes the
+    /// open decision; `PREEMPTION_PLANNED` counts a round on it.
+    pub fn scheduler_decision(&self, gang: Option<u64>, reason: &str, detail: &str) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let parent = inner.open_stages.get(&Stage::Scheduling).copied();
+        match reason {
+            "PLACED_ALL" => {
+                if let Some((id, _, _)) = inner.open_decision.take() {
+                    inner.annotate(id, "resolution", "placed".to_string());
+                    inner.close(id, now);
+                }
+                let id = inner.next_span;
+                inner.next_span += 1;
+                let mut attrs = vec![("reason".to_string(), reason.to_string())];
+                if let Some(g) = gang {
+                    attrs.push(("gang".to_string(), g.to_string()));
+                }
+                if !detail.is_empty() {
+                    attrs.push(("detail".to_string(), detail.to_string()));
+                }
+                let span = Span {
+                    id,
+                    parent,
+                    name: "sched.placed".to_string(),
+                    stage: Stage::Scheduling,
+                    start_ms: now,
+                    end_ms: Some(now),
+                    attrs,
+                };
+                inner.push(self.cap, span);
+            }
+            "PREEMPTION_PLANNED" => {
+                if let Some((id, _, _)) = inner.open_decision.clone() {
+                    let rounds = inner
+                        .spans
+                        .iter()
+                        .find(|s| s.id == id)
+                        .and_then(|s| s.attrs.iter().find(|(k, _)| k == "preempt_rounds"))
+                        .and_then(|(_, v)| v.parse::<u64>().ok())
+                        .unwrap_or(0);
+                    inner.annotate(id, "preempt_rounds", (rounds + 1).to_string());
+                    inner.annotate(id, "preempt_detail", detail.to_string());
+                } else {
+                    let id = inner.next_span;
+                    inner.next_span += 1;
+                    let mut attrs = vec![
+                        ("reason".to_string(), reason.to_string()),
+                        ("detail".to_string(), detail.to_string()),
+                    ];
+                    if let Some(g) = gang {
+                        attrs.push(("gang".to_string(), g.to_string()));
+                    }
+                    let span = Span {
+                        id,
+                        parent,
+                        name: "sched.preemption".to_string(),
+                        stage: Stage::Scheduling,
+                        start_ms: now,
+                        end_ms: Some(now),
+                        attrs,
+                    };
+                    inner.push(self.cap, span);
+                }
+            }
+            "RESERVED" => {
+                // A reservation refines the open WAITING_FREE verdict rather
+                // than replacing it — annotating keeps one span accruing the
+                // whole wait instead of churning WAITING_FREE / RESERVED pairs.
+                if let Some((id, _, _)) = inner.open_decision.clone() {
+                    inner.annotate(id, "reserved", detail.to_string());
+                } else {
+                    let id = inner.next_span;
+                    inner.next_span += 1;
+                    let mut attrs = vec![
+                        ("reason".to_string(), reason.to_string()),
+                        ("detail".to_string(), detail.to_string()),
+                    ];
+                    if let Some(g) = gang {
+                        attrs.push(("gang".to_string(), g.to_string()));
+                    }
+                    let span = Span {
+                        id,
+                        parent,
+                        name: "sched.reserved".to_string(),
+                        stage: Stage::Scheduling,
+                        start_ms: now,
+                        end_ms: Some(now),
+                        attrs,
+                    };
+                    inner.push(self.cap, span);
+                }
+            }
+            _ => {
+                if matches!(&inner.open_decision, Some((_, r, d)) if r == reason && d == detail) {
+                    return; // same verdict: the open span keeps accruing
+                }
+                if let Some((id, _, _)) = inner.open_decision.take() {
+                    inner.close(id, now);
+                }
+                let id = inner.next_span;
+                inner.next_span += 1;
+                let mut attrs = vec![
+                    ("reason".to_string(), reason.to_string()),
+                    ("detail".to_string(), detail.to_string()),
+                ];
+                if let Some(g) = gang {
+                    attrs.push(("gang".to_string(), g.to_string()));
+                }
+                let span = Span {
+                    id,
+                    parent,
+                    name: "sched.decision".to_string(),
+                    stage: Stage::Scheduling,
+                    start_ms: now,
+                    end_ms: None,
+                    attrs,
+                };
+                inner.push(self.cap, span);
+                inner.open_decision = Some((id, reason.to_string(), detail.to_string()));
+            }
+        }
+    }
+
+    /// Per-stage milliseconds as of now (open stage spans count up to the
+    /// current clock).  Programmatic form of the critical-path breakdown —
+    /// the benches build their attribution tables from this.
+    pub fn stage_millis(&self) -> Vec<(Stage, u64)> {
+        if !self.enabled {
+            return Vec::new();
+        }
+        let now = self.clock.now_ms();
+        let inner = self.inner.lock().unwrap();
+        let mut totals: BTreeMap<Stage, u64> = BTreeMap::new();
+        for s in &inner.spans {
+            if s.name != s.stage.as_str() {
+                continue; // only canonical stage spans carry stage time
+            }
+            let end = s.end_ms.unwrap_or(now).max(s.start_ms);
+            *totals.entry(s.stage).or_insert(0) += end - s.start_ms;
+        }
+        Stage::ALL
+            .iter()
+            .filter_map(|st| totals.get(st).map(|ms| (*st, *ms)))
+            .collect()
+    }
+
+    /// The full exported shape: trace header, span list, critical path.
+    /// This is what `GET /api/v1/jobs/{id}/trace` serves live and what
+    /// `JobRecord.trace` persists at completion.
+    pub fn trace_json(&self) -> Json {
+        let mut j = Json::obj();
+        if !self.enabled {
+            j.set("enabled", false);
+            j.set("spans", Json::Arr(Vec::new()));
+            return j;
+        }
+        let now = self.clock.now_ms();
+        let inner = self.inner.lock().unwrap();
+        let mut header = Json::obj();
+        header.set("job", self.job_id);
+        header.set("attempt", inner.attempt as u64);
+        header.set("trace_id", format!("job-{}.{}", self.job_id, inner.attempt));
+        j.set("enabled", true);
+        j.set("trace", header);
+        j.set(
+            "spans",
+            Json::Arr(inner.spans.iter().map(|s| s.to_json()).collect()),
+        );
+        j.set("critical_path", critical_path(inner.spans.iter(), now));
+        j
+    }
+}
+
+/// Fold spans into the critical-path JSON: per-stage millis, the dominant
+/// stage, and the longest-lived blocking scheduler decision rendered as a
+/// sentence.
+fn critical_path<'a>(spans: impl Iterator<Item = &'a Span>, now: u64) -> Json {
+    let mut totals: BTreeMap<Stage, u64> = BTreeMap::new();
+    let mut blocking: Option<(u64, String)> = None; // (duration, text)
+    let mut preempt_note = String::new();
+    for s in spans {
+        let end = s.end_ms.unwrap_or(now).max(s.start_ms);
+        let dur = end - s.start_ms;
+        if s.name == s.stage.as_str() {
+            *totals.entry(s.stage).or_insert(0) += dur;
+        }
+        if s.name == "sched.decision" {
+            let attr = |k: &str| {
+                s.attrs
+                    .iter()
+                    .find(|(key, _)| key == k)
+                    .map(|(_, v)| v.as_str())
+                    .unwrap_or("")
+            };
+            let gang = attr("gang");
+            let gang_txt =
+                if gang.is_empty() { "the job".to_string() } else { format!("gang {gang}") };
+            let reason = attr("reason");
+            let detail = attr("detail");
+            let secs = dur as f64 / 1000.0;
+            let mut text = if reason.starts_with("WAITING") {
+                format!("{gang_txt} waited {secs:.1} s {detail}")
+            } else {
+                format!("{gang_txt} {detail}")
+            };
+            let rounds = attr("preempt_rounds");
+            if !rounds.is_empty() {
+                let plural = if rounds == "1" { "round" } else { "rounds" };
+                text.push_str(&format!("; {rounds} preemption {plural}"));
+            }
+            if blocking.as_ref().map(|(d, _)| dur >= *d).unwrap_or(true) {
+                blocking = Some((dur, text));
+            }
+        }
+        if s.name == "sched.preemption" {
+            let detail = s
+                .attrs
+                .iter()
+                .find(|(k, _)| k == "detail")
+                .map(|(_, v)| v.clone())
+                .unwrap_or_default();
+            preempt_note = detail;
+        }
+    }
+    let mut stages = Json::obj();
+    for (st, ms) in &totals {
+        stages.set(st.as_str(), *ms);
+    }
+    let dominant = totals
+        .iter()
+        .max_by_key(|(_, ms)| **ms)
+        .map(|(st, _)| st.as_str().to_string());
+    let mut j = Json::obj();
+    j.set("stages", stages);
+    match dominant {
+        Some(d) => j.set("dominant_stage", d),
+        None => j.set("dominant_stage", Json::Null),
+    };
+    match blocking {
+        Some((_, text)) => j.set("blocking_decision", text),
+        None => {
+            if preempt_note.is_empty() {
+                j.set("blocking_decision", Json::Null)
+            } else {
+                j.set("blocking_decision", preempt_note)
+            }
+        }
+    };
+    j
+}
+
+/// Render a trace JSON (the `/trace` endpoint shape) as an ASCII timeline
+/// for `tony trace <job-id>`.
+pub fn render_ascii(trace: &Json) -> String {
+    let mut out = String::new();
+    if trace.at(&["enabled"]).and_then(|j| j.as_bool()) == Some(false) {
+        out.push_str("tracing is disabled for this job (tony.trace.enable=false)\n");
+        return out;
+    }
+    let job = trace.at(&["trace", "job"]).and_then(|j| j.as_u64()).unwrap_or(0);
+    let attempt = trace.at(&["trace", "attempt"]).and_then(|j| j.as_u64()).unwrap_or(0);
+    out.push_str(&format!("trace job-{job}.{attempt}\n"));
+    let empty: Vec<Json> = Vec::new();
+    let spans = trace
+        .at(&["spans"])
+        .and_then(|j| j.as_arr().cloned())
+        .unwrap_or(empty);
+    // Time origin and scale across all spans.
+    let mut t0 = u64::MAX;
+    let mut t1 = 0u64;
+    for s in &spans {
+        let start = s.at(&["start_ms"]).and_then(|j| j.as_u64()).unwrap_or(0);
+        let end = s.at(&["end_ms"]).and_then(|j| j.as_u64()).unwrap_or(start);
+        t0 = t0.min(start);
+        t1 = t1.max(end.max(start));
+    }
+    if t0 == u64::MAX {
+        out.push_str("  (no spans recorded)\n");
+        return out;
+    }
+    let total = (t1 - t0).max(1);
+    const WIDTH: usize = 40;
+    for s in &spans {
+        let name = s.at(&["name"]).and_then(|j| j.as_str()).unwrap_or("?");
+        let stage = s.at(&["stage"]).and_then(|j| j.as_str()).unwrap_or("?");
+        let start = s.at(&["start_ms"]).and_then(|j| j.as_u64()).unwrap_or(0);
+        let end = s.at(&["end_ms"]).and_then(|j| j.as_u64()).unwrap_or(start).max(start);
+        let off = ((start - t0) as usize * WIDTH) / total as usize;
+        let mut len = ((end - start) as usize * WIDTH) / total as usize;
+        if len == 0 {
+            len = 1;
+        }
+        let off = off.min(WIDTH - 1);
+        let len = len.min(WIDTH - off);
+        let bar: String = " ".repeat(off) + &"#".repeat(len) + &" ".repeat(WIDTH - off - len);
+        let is_stage = name == stage;
+        let label = if is_stage { name.to_string() } else { format!("  {name}") };
+        let reason = s
+            .at(&["attrs", "reason"])
+            .and_then(|j| j.as_str())
+            .map(|r| format!("  [{r}]"))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "  {label:<22} |{bar}| {:>8} ms{reason}\n",
+            end - start
+        ));
+    }
+    let cp = trace.at(&["critical_path"]);
+    if let Some(cp) = cp {
+        if let Some(dom) = cp.at(&["dominant_stage"]).and_then(|j| j.as_str()) {
+            let ms = cp.at(&["stages", dom]).and_then(|j| j.as_u64()).unwrap_or(0);
+            out.push_str(&format!("critical path: {dom} ({ms} ms)"));
+            if let Some(b) = cp.at(&["blocking_decision"]).and_then(|j| j.as_str()) {
+                out.push_str(&format!(" — {b}"));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ManualClock;
+
+    fn manual_store(cap: usize) -> (Arc<SpanStore>, Arc<ManualClock>) {
+        let clock = ManualClock::shared();
+        let conf = TraceConf { enable: true, max_spans_per_job: cap, export: true };
+        let generic: Arc<dyn Clock> = clock.clone();
+        (SpanStore::new(&conf, generic, 7), clock)
+    }
+
+    #[test]
+    fn disabled_store_records_nothing_and_returns_zero_ids() {
+        let store = SpanStore::disabled();
+        assert!(!store.enabled());
+        assert_eq!(store.start(Stage::Queued, "queued", None), 0);
+        assert_eq!(store.start_stage(Stage::Scheduling), 0);
+        store.end(0);
+        store.end_stage(Stage::Scheduling);
+        store.scheduler_decision(Some(1), "WAITING_HEADROOM", "for queue 'x' headroom");
+        let j = store.trace_json();
+        assert_eq!(j.at(&["enabled"]).and_then(|v| v.as_bool()), Some(false));
+        assert!(j.at(&["spans"]).and_then(|v| v.as_arr()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn ring_evicts_oldest_span_at_capacity() {
+        let (store, clock) = manual_store(8);
+        for i in 0..12 {
+            clock.advance_ms(1);
+            store.event(Stage::Running, &format!("ev{i}"), None, &[]);
+        }
+        let j = store.trace_json();
+        let spans = j.at(&["spans"]).and_then(|v| v.as_arr()).unwrap().clone();
+        assert_eq!(spans.len(), 8, "capacity bound holds");
+        let first = spans[0].at(&["name"]).and_then(|v| v.as_str()).unwrap().to_string();
+        assert_eq!(first, "ev4", "oldest evicted first");
+    }
+
+    #[test]
+    fn eviction_clears_dangling_open_state() {
+        let (store, clock) = manual_store(8);
+        let qid = store.start_stage(Stage::Queued);
+        assert_eq!(store.stage_span(Stage::Queued), Some(qid));
+        for i in 0..8 {
+            clock.advance_ms(1);
+            store.event(Stage::Running, &format!("ev{i}"), None, &[]);
+        }
+        // The queued stage span was evicted; its open handle must be gone.
+        assert_eq!(store.stage_span(Stage::Queued), None);
+        store.end_stage(Stage::Queued); // must not panic or corrupt
+    }
+
+    #[test]
+    fn stage_spans_accrue_time_and_close() {
+        let (store, clock) = manual_store(64);
+        store.start_stage(Stage::Queued);
+        clock.advance_ms(120);
+        store.end_stage(Stage::Queued);
+        store.start_stage(Stage::Scheduling);
+        clock.advance_ms(400);
+        // Open span counts up to "now".
+        let ms: BTreeMap<Stage, u64> = store.stage_millis().into_iter().collect();
+        assert_eq!(ms.get(&Stage::Queued), Some(&120));
+        assert_eq!(ms.get(&Stage::Scheduling), Some(&400));
+        // start_stage is idempotent while open.
+        let a = store.start_stage(Stage::Scheduling);
+        let b = store.start_stage(Stage::Scheduling);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn same_decision_accrues_different_decision_rotates() {
+        let (store, clock) = manual_store(64);
+        store.start_stage(Stage::Scheduling);
+        store.scheduler_decision(Some(7), "WAITING_HEADROOM", "for queue 'prod' headroom");
+        for _ in 0..50 {
+            clock.advance_ms(100);
+            store.scheduler_decision(Some(7), "WAITING_HEADROOM", "for queue 'prod' headroom");
+        }
+        clock.advance_ms(7_400);
+        store.scheduler_decision(Some(7), "PREEMPTION_PLANNED", "2 victims");
+        store.scheduler_decision(Some(7), "PREEMPTION_PLANNED", "1 victim");
+        let j = store.trace_json();
+        let spans = j.at(&["spans"]).and_then(|v| v.as_arr()).unwrap();
+        let decisions: Vec<&Json> = spans
+            .iter()
+            .filter(|s| s.at(&["name"]).and_then(|v| v.as_str()) == Some("sched.decision"))
+            .collect();
+        assert_eq!(decisions.len(), 1, "repeat verdicts dedupe into one span");
+        let blocking = j
+            .at(&["critical_path", "blocking_decision"])
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+        assert!(
+            blocking.contains("gang 7 waited 12.4 s for queue 'prod' headroom"),
+            "got: {blocking}"
+        );
+        assert!(blocking.contains("2 preemption rounds"), "got: {blocking}");
+        // Placement closes the decision.
+        store.scheduler_decision(Some(7), "PLACED_ALL", "");
+        let j = store.trace_json();
+        let spans = j.at(&["spans"]).and_then(|v| v.as_arr()).unwrap();
+        assert!(spans
+            .iter()
+            .any(|s| s.at(&["name"]).and_then(|v| v.as_str()) == Some("sched.placed")));
+        let open_decisions = spans.iter().any(|s| {
+            s.at(&["name"]).and_then(|v| v.as_str()) == Some("sched.decision")
+                && s.at(&["end_ms"]).map(|v| matches!(v, Json::Null)).unwrap_or(false)
+        });
+        assert!(!open_decisions, "PLACED_ALL closes the open decision span");
+    }
+
+    #[test]
+    fn critical_path_names_dominant_stage() {
+        let (store, clock) = manual_store(64);
+        store.start_stage(Stage::Queued);
+        clock.advance_ms(10);
+        store.end_stage(Stage::Queued);
+        store.start_stage(Stage::Scheduling);
+        clock.advance_ms(900);
+        store.end_stage(Stage::Scheduling);
+        store.start_stage(Stage::Running);
+        clock.advance_ms(200);
+        store.end_all();
+        let j = store.trace_json();
+        assert_eq!(
+            j.at(&["critical_path", "dominant_stage"]).and_then(|v| v.as_str()),
+            Some("scheduling")
+        );
+        assert_eq!(
+            j.at(&["critical_path", "stages", "scheduling"]).and_then(|v| v.as_u64()),
+            Some(900)
+        );
+    }
+
+    #[test]
+    fn end_all_closes_everything() {
+        let (store, clock) = manual_store(64);
+        store.start_stage(Stage::Queued);
+        store.scheduler_decision(None, "WAITING_FREE", "for reserved nodes to drain");
+        clock.advance_ms(50);
+        store.end_all();
+        let j = store.trace_json();
+        for s in j.at(&["spans"]).and_then(|v| v.as_arr()).unwrap() {
+            assert!(
+                !matches!(s.at(&["end_ms"]), Some(Json::Null)),
+                "open span survived end_all: {}",
+                s.render()
+            );
+        }
+    }
+
+    #[test]
+    fn ascii_render_mentions_stages_and_critical_path() {
+        let (store, clock) = manual_store(64);
+        store.start_stage(Stage::Queued);
+        clock.advance_ms(100);
+        store.end_stage(Stage::Queued);
+        store.start_stage(Stage::Running);
+        clock.advance_ms(300);
+        store.end_all();
+        let text = render_ascii(&store.trace_json());
+        assert!(text.contains("queued"), "{text}");
+        assert!(text.contains("critical path: running"), "{text}");
+    }
+}

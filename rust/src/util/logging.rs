@@ -8,8 +8,10 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::time::Instant;
+
+use super::clock::Clock;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -47,9 +49,40 @@ static MIN_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static START: OnceLock<Instant> = OnceLock::new();
 /// Optional capture sink used by tests to assert on log output.
 static CAPTURE: OnceLock<Mutex<Option<Vec<String>>>> = OnceLock::new();
+/// The clock timestamps are read from once one is registered (see
+/// [`set_clock`]).  Held weakly: the process-global logger must never
+/// keep a test's clock alive past its scenario.
+static CLOCK: OnceLock<Mutex<Weak<dyn Clock>>> = OnceLock::new();
+
+/// Retention cap for the capture sink: a long-running capture (or a test
+/// that forgets `capture_take`) keeps the newest lines instead of
+/// growing without bound.
+const CAPTURE_CAP: usize = 4096;
 
 fn start() -> Instant {
     *START.get_or_init(Instant::now)
+}
+
+/// Route log timestamps through `clock` — registerable like a
+/// [`crate::util::event::WakeupBus`] on a clock.  The RM registers its
+/// control-plane clock at startup, so a `ManualClock` scenario logs
+/// *virtual* time instead of silently reverting to the real `Instant`
+/// the process started at.  When the registered clock is dropped the
+/// logger falls back to the `Instant` baseline.
+pub fn set_clock(clock: &Arc<dyn Clock>) {
+    let m = CLOCK.get_or_init(|| {
+        let none: Weak<dyn Clock> = Weak::<super::clock::SystemClock>::new();
+        Mutex::new(none)
+    });
+    *m.lock().unwrap() = Arc::downgrade(clock);
+}
+
+fn now_secs() -> f64 {
+    CLOCK
+        .get()
+        .and_then(|m| m.lock().unwrap().upgrade())
+        .map(|c| c.now_ms() as f64 / 1000.0)
+        .unwrap_or_else(|| start().elapsed().as_secs_f64())
 }
 
 /// Initialize from `TONY_LOG` (trace|debug|info|warn|error); idempotent.
@@ -96,16 +129,12 @@ pub fn log(l: Level, component: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
     }
-    let elapsed = start().elapsed();
-    let line = format!(
-        "[{:>9.3}s {:5} {}] {}",
-        elapsed.as_secs_f64(),
-        l.as_str(),
-        component,
-        msg
-    );
+    let line = format!("[{:>9.3}s {:5} {}] {}", now_secs(), l.as_str(), component, msg);
     if let Some(m) = CAPTURE.get() {
         if let Some(buf) = m.lock().unwrap().as_mut() {
+            if buf.len() >= CAPTURE_CAP {
+                buf.remove(0);
+            }
             buf.push(line.clone());
         }
     }
@@ -144,6 +173,10 @@ macro_rules! tdebug {
 mod tests {
     use super::*;
 
+    /// The capture sink and clock registration are process-global, so
+    /// the tests that poke them must not interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
     #[test]
     fn level_parse_and_order() {
         assert_eq!(Level::parse("info"), Some(Level::Info));
@@ -154,6 +187,7 @@ mod tests {
 
     #[test]
     fn capture_records_lines() {
+        let _g = TEST_LOCK.lock().unwrap();
         let old = level();
         set_level(Level::Info);
         capture_start();
@@ -161,5 +195,58 @@ mod tests {
         let lines = capture_take();
         set_level(old);
         assert!(lines.iter().any(|l| l.contains("hello 42")), "{lines:?}");
+    }
+
+    #[test]
+    fn capture_is_bounded() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let old = level();
+        set_level(Level::Info);
+        capture_start();
+        for i in 0..CAPTURE_CAP + 10 {
+            crate::tinfo!("bound-test", "line {}", i);
+        }
+        let lines = capture_take();
+        set_level(old);
+        assert_eq!(lines.len(), CAPTURE_CAP);
+        let newest = format!("line {}", CAPTURE_CAP + 9);
+        assert!(lines.iter().any(|l| l.ends_with(&newest)), "newest line missing");
+        assert!(
+            !lines.iter().any(|l| l.contains("bound-test") && l.ends_with("line 0")),
+            "oldest line should have been evicted"
+        );
+    }
+
+    #[test]
+    fn timestamps_follow_a_registered_manual_clock() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let old = level();
+        set_level(Level::Info);
+        let manual = crate::util::clock::ManualClock::shared();
+        manual.set_ms(12_345);
+        let clock: Arc<dyn Clock> = manual.clone();
+        // Tests in other modules may start an RM concurrently, which
+        // re-registers its own clock; retry so the registration and the
+        // log line land without an overwrite in between.
+        let mut seen = false;
+        for _ in 0..16 {
+            set_clock(&clock);
+            capture_start();
+            crate::tinfo!("clock-test", "tick");
+            let lines = capture_take();
+            if lines
+                .iter()
+                .any(|l| l.contains("clock-test") && l.contains("12.345s"))
+            {
+                seen = true;
+                break;
+            }
+        }
+        // Release the manual clock: once the strong refs drop, the weak
+        // registration dies and the logger reverts to the Instant base.
+        drop(clock);
+        drop(manual);
+        set_level(old);
+        assert!(seen, "no captured line carried the manual-clock timestamp");
     }
 }

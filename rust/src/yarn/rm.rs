@@ -23,6 +23,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::trace::SpanStore;
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::event::{tag, WakeupBus};
 use crate::util::ids::{ApplicationId, ContainerId, NodeId};
@@ -174,6 +175,10 @@ struct Inner {
     /// grants / completed containers so the AM monitor loop blocks on
     /// events instead of polling `allocate` on a fixed interval.
     am_wakers: HashMap<ApplicationId, Arc<WakeupBus>>,
+    /// Per-application span stores (registered at submit): every
+    /// scheduler verdict touching the app is routed here as an audit
+    /// span, which is what makes `WAITING_FOR_GANG` explainable.
+    traces: HashMap<ApplicationId, Arc<SpanStore>>,
     /// Containers under a preemption notice, keyed by the grace deadline
     /// they will be killed at.
     preempting: HashMap<ContainerId, PreemptState>,
@@ -247,6 +252,10 @@ impl ResourceManager {
         queues: Vec<QueueConf>,
         conf: RmConf,
     ) -> Arc<ResourceManager> {
+        // Log timestamps follow the control plane's clock (the logger
+        // holds only a weak ref, so a test's ManualClock is not kept
+        // alive past its scenario).
+        crate::util::logging::set_clock(&conf.clock);
         let cluster_ts = 1_700_000_000 + crate::util::ids::next_seq();
         let events = WakeupBus::for_clock(&conf.clock);
         let tick_bus = if conf.fallback_tick_ms > 0 {
@@ -287,6 +296,7 @@ impl ResourceManager {
                     containers: HashMap::new(),
                     pending_am: HashMap::new(),
                     am_wakers: HashMap::new(),
+                    traces: HashMap::new(),
                     preempting: HashMap::new(),
                     next_app_seq: 1,
                     next_container_seq: 1,
@@ -327,6 +337,15 @@ impl ResourceManager {
     /// every fallback tick (`tag::TICK`).
     pub fn register_am_waker(&self, app: ApplicationId, bus: &Arc<WakeupBus>) {
         self.inner.lock().unwrap().am_wakers.insert(app, bus.clone());
+    }
+
+    /// Register the span store tracing `app`'s lifecycle: from now until
+    /// teardown, every scheduler verdict about the app (gang waiting /
+    /// reserved / demoted / placed / preemption round) lands in it as an
+    /// audit span.  Disabled stores swallow the calls, so callers can
+    /// register unconditionally.
+    pub fn register_trace(&self, app: ApplicationId, store: &Arc<SpanStore>) {
+        self.inner.lock().unwrap().traces.insert(app, store.clone());
     }
 
     /// The liveness backstop: a detached thread (holding only a `Weak`,
@@ -768,6 +787,19 @@ impl ResourceManager {
             }
         }
         self.preempt_locked(inner);
+        self.drain_decisions_locked(inner);
+    }
+
+    /// Route the verdicts the scheduler audited during this pass into the
+    /// owning apps' span stores.  Runs after every scheduling pass so the
+    /// audit buffer never accumulates across passes, traced or not.
+    fn drain_decisions_locked(&self, inner: &mut Inner) {
+        let decisions = inner.scheduler.take_decisions();
+        for d in decisions {
+            if let Some(store) = inner.traces.get(&d.app) {
+                store.scheduler_decision(d.gang, d.reason.as_str(), &d.detail);
+            }
+        }
     }
 
     /// Capacity preemption: enforce expired grace deadlines, then plan at
@@ -791,7 +823,15 @@ impl ResourceManager {
             .map(|(cid, _)| *cid)
             .collect();
         for cid in zombies {
-            twarn!("rm", "preempted {cid} never exited; abandoning the preemption notice");
+            let owner = inner
+                .containers
+                .get(&cid)
+                .map(|c| c.app.to_string())
+                .unwrap_or_else(|| "<gone>".to_string());
+            twarn!(
+                "rm",
+                "preempted {cid} (app {owner}) never exited; abandoning the preemption notice"
+            );
             inner.preempting.remove(&cid);
         }
         // 1. Kill victims whose grace elapsed.  The completion callback
@@ -893,6 +933,7 @@ impl ResourceManager {
             if let Some(rm) = weak.upgrade() {
                 let mut inner = rm.inner.lock().unwrap();
                 rm.preempt_locked(&mut inner);
+                rm.drain_decisions_locked(&mut inner);
             }
         });
     }
@@ -904,12 +945,13 @@ impl ResourceManager {
         for cid in cids {
             // Triage under a short borrow of the container table, act
             // once it ends.
-            let (started, node) = match inner.containers.get(&cid) {
+            let (started, node, owner) = match inner.containers.get(&cid) {
                 Some(live) => (
                     Some(live.started),
                     inner.nodes.iter().find(|n| n.spec.id == live.node).cloned(),
+                    Some(live.app),
                 ),
-                None => (None, None),
+                None => (None, None, None),
             };
             match started {
                 Some(true) => {
@@ -920,7 +962,8 @@ impl ResourceManager {
                             self.clock.now_ms().saturating_add(PREEMPT_ZOMBIE_GIVEUP_MS);
                         zombie_deadline = Some(st.deadline_ms);
                     }
-                    twarn!("rm", "preempting {cid}: grace over, killing");
+                    let owner = owner.expect("started container has an owner");
+                    twarn!("rm", "preempting {cid} (app {owner}): grace over, killing");
                     if let Some(n) = node {
                         n.stop_container(cid);
                     }
@@ -1040,6 +1083,10 @@ impl ResourceManager {
                 self.release_container_locked(inner, cid);
             }
         }
+        // Terminal verdicts accumulated this pass still belong in the
+        // trace; drop the registration after one final drain.
+        self.drain_decisions_locked(inner);
+        inner.traces.remove(&id);
         // Wake completion waiters AND the app's own AM (its next allocate
         // will error, telling a zombie AM its app was killed under it).
         if let Some(waker) = inner.am_wakers.remove(&id) {

@@ -242,6 +242,54 @@ pub struct QueueSnapshot {
     pub preemptions: u64,
 }
 
+/// Why the scheduler reached a verdict on a gang (decision audit trail —
+/// drained by the RM via [`CapacityScheduler::take_decisions`] and routed
+/// into the owning job's trace as `sched.decision` spans, which is what
+/// makes `WAITING_FOR_GANG` explainable; see `docs/TRACING.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionReason {
+    /// The whole gang committed atomically this pass.
+    PlacedAll,
+    /// Blocked on its queue's max-capacity ceiling (headroom must drain).
+    WaitingHeadroom,
+    /// Feasible at node capacity but blocked at current free capacity.
+    WaitingFree,
+    /// A blocked gang claimed a reservation on its dry-run node set.
+    Reserved,
+    /// Demoted to per-container placement (can never place atomically).
+    Demoted,
+    /// A preemption round selected victims to unblock this gang.
+    PreemptionPlanned,
+}
+
+impl DecisionReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DecisionReason::PlacedAll => "PLACED_ALL",
+            DecisionReason::WaitingHeadroom => "WAITING_HEADROOM",
+            DecisionReason::WaitingFree => "WAITING_FREE",
+            DecisionReason::Reserved => "RESERVED",
+            DecisionReason::Demoted => "DEMOTED",
+            DecisionReason::PreemptionPlanned => "PREEMPTION_PLANNED",
+        }
+    }
+}
+
+/// One audited scheduler verdict.  The scheduler is pure (no clock), so
+/// decisions carry no timestamp — the RM stamps them with its clock when
+/// it drains them into the per-job trace stores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedDecision {
+    pub app: ApplicationId,
+    pub gang: Option<u64>,
+    pub queue: String,
+    pub reason: DecisionReason,
+    /// Human-readable cause, phrased to complete "gang N waited X s ..."
+    /// (e.g. "for queue 'prod' headroom").  Kept stable across passes so
+    /// repeat verdicts dedupe into one accruing span.
+    pub detail: String,
+}
+
 /// A running container offered to [`CapacityScheduler::preemption_plan`]
 /// as a potential victim (built by the RM from its live-container table).
 #[derive(Debug, Clone, PartialEq)]
@@ -291,6 +339,10 @@ pub struct CapacityScheduler {
     reservation_limit: usize,
     reservations: Vec<Reservation>,
     stats: SchedStats,
+    /// Gang verdicts audited since the last [`CapacityScheduler::take_decisions`]
+    /// drain (the RM drains after every scheduling pass, so this never
+    /// outgrows one pass's worth of verdicts).
+    decisions: Vec<SchedDecision>,
 }
 
 impl CapacityScheduler {
@@ -315,6 +367,7 @@ impl CapacityScheduler {
             reservation_limit: SchedulerConf::default().reservation_limit,
             reservations: Vec::new(),
             stats: SchedStats::default(),
+            decisions: Vec::new(),
         }
     }
 
@@ -361,6 +414,30 @@ impl CapacityScheduler {
     /// Number of reservations currently held.
     pub fn reservation_count(&self) -> usize {
         self.reservations.len()
+    }
+
+    /// Drain the gang verdicts audited since the last drain.  The RM
+    /// calls this after every scheduling pass and routes each decision
+    /// into the owning job's trace store.
+    pub fn take_decisions(&mut self) -> Vec<SchedDecision> {
+        std::mem::take(&mut self.decisions)
+    }
+
+    fn audit(
+        &mut self,
+        app: ApplicationId,
+        gang: Option<u64>,
+        qi: usize,
+        reason: DecisionReason,
+        detail: String,
+    ) {
+        self.decisions.push(SchedDecision {
+            app,
+            gang,
+            queue: self.queues[qi].conf.name.clone(),
+            reason,
+            detail,
+        });
     }
 
     /// True when `app` has gang asks still waiting (the gateway surfaces
@@ -619,6 +696,7 @@ impl CapacityScheduler {
         let units = self.units(qi);
         for unit in units {
             let asks = self.asks_of(qi, &unit);
+            let unit_app = self.queues[qi].pending[unit.first].app;
             let total_ask = asks.iter().fold(Resource::ZERO, |a, (r, _)| a + *r);
             // A gang that can NEVER be placed atomically — bigger than
             // its queue's hard ceiling — must not wait forever for a
@@ -647,6 +725,16 @@ impl CapacityScheduler {
                 // headroom opens, the node-blocked branch below reserves
                 // then.
                 if unit.gang.is_some() {
+                    self.audit(
+                        unit_app,
+                        unit.gang,
+                        qi,
+                        DecisionReason::WaitingHeadroom,
+                        format!(
+                            "for queue '{}' headroom (gang needs {} MB)",
+                            self.queues[qi].conf.name, total_ask.memory_mb
+                        ),
+                    );
                     break;
                 }
                 continue;
@@ -673,6 +761,13 @@ impl CapacityScheduler {
                 if let Some(g) = unit.gang {
                     self.stats.gangs_placed += 1;
                     self.drop_reservation(g);
+                    self.audit(
+                        unit_app,
+                        Some(g),
+                        qi,
+                        DecisionReason::PlacedAll,
+                        format!("placed {} container(s) atomically", unit.idxs.len()),
+                    );
                 }
                 return true;
             }
@@ -687,7 +782,28 @@ impl CapacityScheduler {
                     self.demote_gang(qi, &unit, "infeasible even at full cluster capacity");
                     return true; // state changed: rescan with the gang as singles
                 }
-                self.try_reserve(qi, &unit, nodes);
+                self.audit(
+                    unit_app,
+                    unit.gang,
+                    qi,
+                    DecisionReason::WaitingFree,
+                    "for free node capacity to drain".to_string(),
+                );
+                if self.try_reserve(qi, &unit, nodes) {
+                    let n = self
+                        .reservations
+                        .iter()
+                        .find(|r| Some(r.gang) == unit.gang)
+                        .map(|r| r.nodes.len())
+                        .unwrap_or(0);
+                    self.audit(
+                        unit_app,
+                        unit.gang,
+                        qi,
+                        DecisionReason::Reserved,
+                        format!("reserved {n} node(s) from a full-capacity dry run"),
+                    );
+                }
             }
         }
         false
@@ -732,6 +848,7 @@ impl CapacityScheduler {
     /// hanging forever.
     fn demote_gang(&mut self, qi: usize, unit: &Unit, why: &str) {
         let gang = unit.gang.expect("only gangs are demoted");
+        let app = self.queues[qi].pending[unit.first].app;
         twarn!(
             "sched",
             "gang {gang} ({} asks, queue '{}') {why}; demoted to per-container placement",
@@ -743,17 +860,25 @@ impl CapacityScheduler {
         }
         self.drop_reservation(gang);
         self.stats.gangs_demoted += 1;
+        self.audit(
+            app,
+            Some(gang),
+            qi,
+            DecisionReason::Demoted,
+            format!("demoted to per-container placement: {why}"),
+        );
     }
 
     /// Give a blocked gang a claim on the node set a dry-run placement
     /// at full capacity chooses, if a reservation slot is available.
-    fn try_reserve(&mut self, qi: usize, unit: &Unit, nodes: &[SchedNode]) {
-        let Some(gang) = unit.gang else { return };
+    /// Returns true when a new reservation was taken.
+    fn try_reserve(&mut self, qi: usize, unit: &Unit, nodes: &[SchedNode]) -> bool {
+        let Some(gang) = unit.gang else { return false };
         if self.reservations.iter().any(|r| r.gang == gang) {
-            return;
+            return false;
         }
         if self.reservations.len() >= self.reservation_limit {
-            return;
+            return false;
         }
         let reserved_other = self.reserved_by_others(Some(gang));
         let allowed: Vec<bool> = nodes.iter().map(|n| !reserved_other.contains(&n.id)).collect();
@@ -773,7 +898,9 @@ impl CapacityScheduler {
                 nodes: set.into_iter().collect(),
             });
             self.stats.reservations_made += 1;
+            return true;
         }
+        false
     }
 
     fn queue_over_guarantee(&self, name: &str) -> bool {
@@ -819,6 +946,7 @@ impl CapacityScheduler {
         for qi in order {
             for unit in self.units(qi) {
                 let Some(gang) = unit.gang else { continue };
+                let unit_app = self.queues[qi].pending[unit.first].app;
                 let asks = self.asks_of(qi, &unit);
                 let total_ask = asks.iter().fold(Resource::ZERO, |a, (r, _)| a + *r);
                 // Preemption only restores a queue *up to* its guarantee;
@@ -925,6 +1053,13 @@ impl CapacityScheduler {
                     });
                     self.stats.preemption_rounds += 1;
                     self.stats.preemptions += victims.len() as u64;
+                    self.audit(
+                        unit_app,
+                        Some(gang),
+                        qi,
+                        DecisionReason::PreemptionPlanned,
+                        format!("{} victim(s) selected to open the gang's hole", victims.len()),
+                    );
                     for v in &victims {
                         if let Some(vq) = self.queue_mut(&v.queue) {
                             vq.preemptions += 1;
@@ -1505,6 +1640,85 @@ mod tests {
         assert_eq!(s.stats().gangs_demoted, 1);
         assert_eq!(grants.len(), 2, "one per node flows right away");
         assert_eq!(s.pending_count(), 1, "the third waits for a release, not forever");
+    }
+
+    #[test]
+    fn decisions_are_audited_and_drained() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(1024, 1, 0)),
+            SchedNode::new(1, None, Resource::new(1024, 1, 0)),
+        ];
+        nodes[0].free = Resource::ZERO;
+        s.add_asks_gang(
+            app(1),
+            "default",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 2)],
+            0,
+            Some(1),
+        );
+        assert!(s.schedule(&mut nodes).is_empty());
+        let d = s.take_decisions();
+        assert!(
+            d.iter().any(|x| x.reason == DecisionReason::WaitingFree
+                && x.gang == Some(1)
+                && x.app == app(1)),
+            "{d:?}"
+        );
+        assert!(d.iter().any(|x| x.reason == DecisionReason::Reserved), "{d:?}");
+        assert!(s.take_decisions().is_empty(), "take_decisions drains");
+        nodes[0].free = Resource::new(1024, 1, 0);
+        assert_eq!(s.schedule(&mut nodes).len(), 2);
+        let d = s.take_decisions();
+        assert!(d.iter().any(|x| x.reason == DecisionReason::PlacedAll), "{d:?}");
+    }
+
+    #[test]
+    fn headroom_and_demotion_verdicts_are_audited() {
+        // Headroom-blocked gang (fits under the ceiling alone, but the
+        // queue is full right now).
+        let queues = vec![QueueConf::new("ml", 0.5, 0.5), QueueConf::new("etl", 0.5, 1.0)];
+        let mut s = CapacityScheduler::new(queues, Resource::new(4096, 8, 0));
+        let mut nodes = vec![SchedNode::new(0, None, Resource::new(4096, 8, 0))];
+        let slot = ContainerRequest::new(Resource::new(1024, 1, 0), 1);
+        s.add_asks(app(1), "ml", &[slot.clone(), slot], 0);
+        assert_eq!(s.schedule(&mut nodes).len(), 2);
+        s.add_asks_gang(
+            app(2),
+            "ml",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 2)],
+            10,
+            Some(1),
+        );
+        s.take_decisions();
+        assert!(s.schedule(&mut nodes).is_empty());
+        let d = s.take_decisions();
+        let wh = d
+            .iter()
+            .find(|x| x.reason == DecisionReason::WaitingHeadroom)
+            .expect("headroom verdict audited");
+        assert_eq!(wh.queue, "ml");
+        assert!(wh.detail.contains("for queue 'ml' headroom"), "{}", wh.detail);
+        // Infeasible gang demotes with an audited reason.
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
+        let mut nodes = vec![
+            SchedNode::new(0, None, Resource::new(2048, 2, 0)),
+            SchedNode::new(1, None, Resource::new(2048, 2, 0)),
+        ];
+        s.add_asks_gang(
+            app(1),
+            "default",
+            &[ContainerRequest::new(Resource::new(1536, 1, 0), 3)],
+            0,
+            Some(1),
+        );
+        s.schedule(&mut nodes);
+        let d = s.take_decisions();
+        let dem = d
+            .iter()
+            .find(|x| x.reason == DecisionReason::Demoted)
+            .expect("demotion audited");
+        assert!(dem.detail.contains("infeasible"), "{}", dem.detail);
     }
 
     #[test]

@@ -145,7 +145,7 @@ fn registration_deadline_fires_under_manual_clock() {
             .submit_opts(
                 &conf,
                 &base.join("artifacts"),
-                tony::client::SubmitOpts { start_portal: false, tracking_url: None },
+                tony::client::SubmitOpts { start_portal: false, tracking_url: None, trace: None },
             )
             .unwrap();
 

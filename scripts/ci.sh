@@ -23,7 +23,7 @@ cargo run --release --example fault_tolerance
 echo "==> recovery bench smoke (surgical vs full restart, 4 workers)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_recovery
 
-echo "==> latency bench smoke (event-driven vs poll fallback)"
+echo "==> latency bench smoke (event-driven vs poll fallback + trace overhead <5%)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_latency
 
 echo "==> contention bench smoke (gang mode deadlock-freedom at 2/8 jobs)"
@@ -38,6 +38,22 @@ for key in $(grep -rhoE '"tony\.scheduler\.[a-z0-9.-]+"' rust/src | tr -d '"' | 
     fi
     if ! grep -q "$key" docs/SCHEDULING.md; then
         echo "ERROR: $key is used in rust/src but missing from docs/SCHEDULING.md"
+        missing=1
+    fi
+done
+if [ "$missing" -ne 0 ]; then
+    exit 1
+fi
+
+echo "==> every tony.trace.* key referenced in code is documented"
+missing=0
+for key in $(grep -rhoE '"tony\.trace\.[a-z0-9.-]+"' rust/src | tr -d '"' | sort -u); do
+    if ! grep -q "$key" docs/CONFIGURATION.md; then
+        echo "ERROR: $key is used in rust/src but missing from docs/CONFIGURATION.md"
+        missing=1
+    fi
+    if ! grep -q "$key" docs/TRACING.md; then
+        echo "ERROR: $key is used in rust/src but missing from docs/TRACING.md"
         missing=1
     fi
 done
