@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
             if phase == "Succeeded" || phase == "Failed" {
                 break;
             }
-            std::thread::sleep(Duration::from_millis(100));
+            tony::util::clock::real_sleep(Duration::from_millis(100));
         }
     });
 

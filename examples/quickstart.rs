@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     // the URL flows chief executor -> AM -> client.
     let deadline = std::time::Instant::now() + Duration::from_secs(120);
     while handle.ui_url().is_none() && std::time::Instant::now() < deadline {
-        std::thread::sleep(Duration::from_millis(50));
+        tony::util::clock::real_sleep(Duration::from_millis(50));
     }
     if let Some(ui) = handle.ui_url() {
         if let Ok((code, body)) = http_get(&ui) {

@@ -60,7 +60,7 @@ fn run_case(ckpt_every: u64, artifacts: &std::path::Path) -> (f64, u64, bool) {
         if Instant::now() > t_end {
             break;
         }
-        std::thread::sleep(Duration::from_millis(2));
+        tony::util::clock::real_sleep(Duration::from_millis(2));
     }
     let report = handle.wait(Duration::from_secs(60)).unwrap();
     let _ = chaos.join();

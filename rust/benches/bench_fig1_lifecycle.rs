@@ -65,7 +65,7 @@ fn main() {
             if el > 240_000.0 {
                 break;
             }
-            std::thread::sleep(Duration::from_millis(2));
+            tony::util::clock::real_sleep(Duration::from_millis(2));
         }
         let trained_ms = t0.elapsed().as_secs_f64() * 1e3;
         let report = handle.wait(Duration::from_secs(60)).unwrap();

@@ -88,11 +88,11 @@ fn run_config(executors: u32, pipeline: bool, window: Duration) -> (f64, f64) {
         }));
     }
     // Measure a window after a brief warmup.
-    std::thread::sleep(Duration::from_millis(300));
+    tony::util::clock::real_sleep(Duration::from_millis(300));
     count.store(0, Ordering::Relaxed);
     lat_ns.store(0, Ordering::Relaxed);
     let t0 = Instant::now();
-    std::thread::sleep(window);
+    tony::util::clock::real_sleep(window);
     let calls = count.load(Ordering::Relaxed);
     let total_lat = lat_ns.load(Ordering::Relaxed);
     let dt = t0.elapsed().as_secs_f64();

@@ -67,7 +67,7 @@ fn run_case(workers: u32, surgical: bool, dir: &std::path::Path) -> Outcome {
         {
             break;
         }
-        std::thread::sleep(Duration::from_millis(2));
+        tony::util::clock::real_sleep(Duration::from_millis(2));
     }
     let pre = handle.am_state.container_map();
 
@@ -121,7 +121,7 @@ fn run_case(workers: u32, surgical: bool, dir: &std::path::Path) -> Outcome {
             JobPhase::Succeeded | JobPhase::Failed => break,
             _ => {}
         }
-        std::thread::sleep(Duration::from_millis(1));
+        tony::util::clock::real_sleep(Duration::from_millis(1));
     }
     let report = handle.wait(Duration::from_secs(60)).unwrap();
     let records = chaos.join();

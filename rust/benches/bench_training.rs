@@ -114,7 +114,7 @@ fn run_stack(
         if Instant::now() > deadline {
             break;
         }
-        std::thread::sleep(Duration::from_millis(2));
+        tony::util::clock::real_sleep(Duration::from_millis(2));
     }
     let report = handle.wait(Duration::from_secs(60)).unwrap();
     assert_eq!(report.state, AppState::Finished, "{}", report.diagnostics);

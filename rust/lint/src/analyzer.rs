@@ -1,0 +1,642 @@
+//! The analyzer: drives both walker passes over every file, then runs the
+//! lock-graph, blocking-under-lock, and config/metric registry passes.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+use crate::body::BodyWalker;
+use crate::index::{
+    is_conf_accessor, is_direct_blocking, key_matches, metric_family, rule_severity, Finding,
+    Index, LockSite,
+};
+use crate::lexer::{tokenize, Allows, Tok};
+use crate::manifest::LockEnt;
+use crate::walker::IndexWalker;
+
+pub struct Analyzer {
+    pub manifest_locks: Vec<LockEnt>,
+    pub rank: HashMap<String, usize>,
+    pub docs_dir: String,
+    pub index: Index,
+    pub lock_sites: Vec<LockSite>,
+    /// (file, line, key, enclosing call, in_test)
+    pub config_uses: Vec<(String, u32, String, String, bool)>,
+    /// (file, line, family, in_test)
+    pub metric_uses: Vec<(String, u32, String, bool)>,
+    pub findings: Vec<Finding>,
+    pub allows: HashMap<String, Allows>,
+}
+
+impl Analyzer {
+    pub fn new(manifest_locks: Vec<LockEnt>, rank_order: Vec<String>, docs_dir: &str) -> Analyzer {
+        let mut rank = HashMap::new();
+        for (i, name) in rank_order.into_iter().enumerate() {
+            rank.insert(name, i);
+        }
+        Analyzer {
+            manifest_locks,
+            rank,
+            docs_dir: docs_dir.to_string(),
+            index: Index::default(),
+            lock_sites: Vec::new(),
+            config_uses: Vec::new(),
+            metric_uses: Vec::new(),
+            findings: Vec::new(),
+            allows: HashMap::new(),
+        }
+    }
+
+    /// An allow on the finding's own line or the line above suppresses it.
+    pub fn allowed(&self, file: &str, line: u32, rule: &str) -> bool {
+        if let Some(per) = self.allows.get(file) {
+            for ln in [line, line.saturating_sub(1)] {
+                if let Some(entries) = per.get(&ln) {
+                    for (r, _) in entries {
+                        if r == rule {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    pub fn add_finding(&mut self, file: &str, line: u32, rule: &str, msg: &str) {
+        if self.allowed(file, line, rule) {
+            return;
+        }
+        self.findings.push(Finding {
+            file: file.to_string(),
+            line,
+            rule: rule.to_string(),
+            msg: msg.to_string(),
+        });
+    }
+
+    pub fn run(&mut self, files: &[String]) {
+        let mut tokens: HashMap<String, Vec<Tok>> = HashMap::new();
+        for f in files {
+            let src = std::fs::read_to_string(f).unwrap_or_default();
+            let (toks, allows) = tokenize(&src);
+            tokens.insert(f.clone(), toks);
+            self.allows.insert(f.clone(), allows);
+        }
+        // Allow hygiene: every escape must name a real rule and a reason.
+        for f in files {
+            let mut lines: Vec<u32> = self.allows.get(f).map(|a| a.keys().cloned().collect()).unwrap_or_default();
+            lines.sort();
+            for ln in lines {
+                let entries = self.allows.get(f).and_then(|a| a.get(&ln)).cloned().unwrap_or_default();
+                for (rule, has_reason) in entries {
+                    if rule_severity(&rule).is_none() {
+                        self.add_finding(
+                            f,
+                            ln,
+                            "allow-unknown-rule",
+                            &format!("lint:allow names unknown rule `{}`", rule),
+                        );
+                    } else if !has_reason {
+                        self.add_finding(
+                            f,
+                            ln,
+                            "allow-without-reason",
+                            &format!("lint:allow({}) must carry a non-empty reason = \"...\"", rule),
+                        );
+                    }
+                }
+            }
+        }
+        for f in files {
+            let toks = tokens.get(f).cloned().unwrap_or_default();
+            IndexWalker::new(self, f, &toks, is_test_path(f)).walk();
+        }
+        for f in files {
+            let toks = tokens.get(f).cloned().unwrap_or_default();
+            BodyWalker::new(self, f, &toks, is_test_path(f)).walk();
+        }
+        self.graph_pass();
+        self.blocking_pass();
+        self.registry_pass();
+        self.findings.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule, &a.msg).cmp(&(&b.file, b.line, &b.rule, &b.msg))
+        });
+    }
+
+    /// Transitive may-acquire set per function (fixpoint over call edges).
+    fn mayacq(&self) -> HashMap<String, HashSet<String>> {
+        let mut acq: HashMap<String, HashSet<String>> = HashMap::new();
+        for (k, f) in &self.index.fns {
+            let mut set = HashSet::new();
+            for (l, _) in &f.locks {
+                set.insert(l.clone());
+            }
+            acq.insert(k.clone(), set);
+        }
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for (k, f) in &self.index.fns {
+                for (_bare, keys, _held, _line) in &f.calls {
+                    for ck in keys {
+                        let extra: Vec<String> = match acq.get(ck) {
+                            Some(cs) => {
+                                let own = acq.get(k).cloned().unwrap_or_default();
+                                cs.iter().filter(|l| !own.contains(*l)).cloned().collect()
+                            }
+                            None => Vec::new(),
+                        };
+                        if !extra.is_empty() {
+                            acq.entry(k.clone()).or_default().extend(extra);
+                            changed = true;
+                        }
+                    }
+                }
+            }
+        }
+        acq
+    }
+
+    /// Lock pass: unclassified sites, the acquired-while-held edge set,
+    /// reentrancy, canonical-order violations, and cycle detection.
+    fn graph_pass(&mut self) {
+        let acq = self.mayacq();
+        let mut edge_seen: HashSet<(String, String)> = HashSet::new();
+        let mut edges: Vec<((String, String), (String, u32, Option<String>))> = Vec::new();
+        let mut pend: Vec<(String, u32, String)> = Vec::new();
+        for s in &self.lock_sites {
+            if !s.classified {
+                let tried = s
+                    .cands
+                    .iter()
+                    .map(|c| format!("`{}`", c))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                pend.push((
+                    s.file.clone(),
+                    s.line,
+                    format!(
+                        "lock site is not classified in lock-order.toml (candidate \
+                         patterns: {}); add a [[lock]] entry (or a lint:allow \
+                         with reason)",
+                        tried
+                    ),
+                ));
+            }
+            for h in &s.held {
+                let key = (h.clone(), s.lock_id.clone());
+                if edge_seen.insert(key.clone()) {
+                    edges.push((key, (s.file.clone(), s.line, None)));
+                }
+            }
+        }
+        for (_k, f) in &self.index.fns {
+            for (bare, keys, held, line) in &f.calls {
+                if held.is_empty() {
+                    continue;
+                }
+                let mut targets: BTreeSet<String> = BTreeSet::new();
+                for ck in keys {
+                    if let Some(a) = acq.get(ck) {
+                        targets.extend(a.iter().cloned());
+                    }
+                }
+                for t in &targets {
+                    for h in held {
+                        let key = (h.clone(), t.clone());
+                        if edge_seen.insert(key.clone()) {
+                            edges.push((key, (f.file.clone(), *line, Some(bare.clone()))));
+                        }
+                    }
+                }
+            }
+        }
+        for (file, line, msg) in pend {
+            self.add_finding(&file, line, "lock-unclassified", &msg);
+        }
+        edges.sort_by(|x, y| {
+            (&x.1 .0, x.1 .1, &x.0).cmp(&(&y.1 .0, y.1 .1, &y.0))
+        });
+        let mut adj: HashMap<String, Vec<(String, String, u32, Option<String>)>> = HashMap::new();
+        for ((a, b), (file, line, via)) in &edges {
+            if a == b {
+                let viatxt = match via {
+                    Some(v) => format!(" (via call to `{}`)", v),
+                    None => String::new(),
+                };
+                if !self.allowed(file, *line, "lock-reentrant") {
+                    self.add_finding(
+                        file,
+                        *line,
+                        "lock-reentrant",
+                        &format!(
+                            "lock `{}` may be re-acquired while already held{} — \
+                             std::sync::Mutex self-deadlocks",
+                            a, viatxt
+                        ),
+                    );
+                }
+                continue;
+            }
+            if !self.allowed(file, *line, "lock-order") {
+                if let (Some(ra), Some(rb)) = (self.rank.get(a), self.rank.get(b)) {
+                    if ra > rb {
+                        let viatxt = match via {
+                            Some(v) => format!(" via call to `{}`", v),
+                            None => String::new(),
+                        };
+                        self.add_finding(
+                            file,
+                            *line,
+                            "lock-order",
+                            &format!(
+                                "lock `{}` acquired{} while holding `{}`, but the canonical \
+                                 order in lock-order.toml puts `{}` before `{}`",
+                                b, viatxt, a, b, a
+                            ),
+                        );
+                    }
+                }
+            }
+            if !self.allowed(file, *line, "lock-cycle") {
+                adj.entry(a.clone())
+                    .or_default()
+                    .push((b.clone(), file.clone(), *line, via.clone()));
+            }
+        }
+        let mut color: HashMap<String, u8> = HashMap::new();
+        let mut stack: Vec<(String, String, String, u32, Option<String>)> = Vec::new();
+        let mut roots: Vec<String> = adj.keys().cloned().collect();
+        roots.sort();
+        for u in roots {
+            if color.get(&u).copied().unwrap_or(0) == 0 {
+                self.cycle_dfs(&u, &adj, &mut color, &mut stack);
+            }
+        }
+    }
+
+    fn cycle_dfs(
+        &mut self,
+        u: &str,
+        adj: &HashMap<String, Vec<(String, String, u32, Option<String>)>>,
+        color: &mut HashMap<String, u8>,
+        stack: &mut Vec<(String, String, String, u32, Option<String>)>,
+    ) {
+        color.insert(u.to_string(), 1);
+        for (v, file, line, via) in adj.get(u).cloned().unwrap_or_default() {
+            let c = color.get(&v).copied().unwrap_or(0);
+            if c == 0 {
+                stack.push((u.to_string(), v.clone(), file, line, via));
+                self.cycle_dfs(&v, adj, color, stack);
+                stack.pop();
+            } else if c == 1 {
+                // Back edge: reconstruct the cycle from the DFS stack.
+                let mut cyc: Vec<(String, String, String, u32, Option<String>)> =
+                    vec![(u.to_string(), v.clone(), file, line, via)];
+                for (a2, b2, f2, l2, v2) in stack.iter().rev() {
+                    cyc.push((a2.clone(), b2.clone(), f2.clone(), *l2, v2.clone()));
+                    if *a2 == v {
+                        break;
+                    }
+                }
+                cyc.reverse();
+                let mut path = cyc.iter().map(|e| e.0.clone()).collect::<Vec<_>>().join(" -> ");
+                path.push_str(&format!(" -> {}", cyc[cyc.len() - 1].1));
+                let sites = cyc
+                    .iter()
+                    .map(|(_, _, f2, l2, _)| format!("{}:{}", f2, l2))
+                    .collect::<Vec<_>>()
+                    .join("; ");
+                let (file0, line0) = (cyc[0].2.clone(), cyc[0].3);
+                self.add_finding(
+                    &file0,
+                    line0,
+                    "lock-cycle",
+                    &format!("lock-order cycle: {} (edge sites: {})", path, sites),
+                );
+            }
+        }
+        color.insert(u.to_string(), 2);
+    }
+
+    /// Which functions may block, with a witness call chain to the
+    /// primitive (fixpoint over call edges).
+    fn mayblock(&self) -> HashMap<String, (String, Vec<String>)> {
+        let mut blk: HashMap<String, (String, Vec<String>)> = HashMap::new();
+        for (k, f) in &self.index.fns {
+            if let Some((prim, _)) = f.blocks.first() {
+                blk.insert(k.clone(), (prim.clone(), Vec::new()));
+            }
+        }
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for (k, f) in &self.index.fns {
+                if blk.contains_key(k) {
+                    continue;
+                }
+                for (bare, keys, _held, _line) in &f.calls {
+                    if is_direct_blocking(bare) {
+                        continue;
+                    }
+                    let mut hit: Option<String> = None;
+                    for ck in keys {
+                        if blk.contains_key(ck) {
+                            hit = Some(ck.clone());
+                            break;
+                        }
+                    }
+                    if let Some(h) = hit {
+                        let (prim, chain) = blk.get(&h).cloned().unwrap();
+                        let mut new_chain = vec![bare.clone()];
+                        new_chain.extend(chain);
+                        blk.insert(k.clone(), (prim, new_chain));
+                        changed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        blk
+    }
+
+    fn blocking_pass(&mut self) {
+        let blk = self.mayblock();
+        let mut pend: Vec<(String, u32, String)> = Vec::new();
+        for (_k, f) in &self.index.fns {
+            for (bare, keys, held, line) in &f.calls {
+                if held.is_empty() {
+                    continue;
+                }
+                let mut uniq: BTreeSet<String> = BTreeSet::new();
+                uniq.extend(held.iter().cloned());
+                let locks = uniq.into_iter().collect::<Vec<_>>().join(", ");
+                if is_direct_blocking(bare) {
+                    pend.push((
+                        f.file.clone(),
+                        *line,
+                        format!("blocking call `{}` while holding lock(s) {}", bare, locks),
+                    ));
+                    continue;
+                }
+                let mut hit: Option<String> = None;
+                for ck in keys {
+                    if blk.contains_key(ck) {
+                        hit = Some(ck.clone());
+                        break;
+                    }
+                }
+                if let Some(h) = hit {
+                    let (prim, chain) = blk.get(&h).cloned().unwrap();
+                    let mut via: Vec<String> = vec![bare.clone()];
+                    via.extend(chain);
+                    via.push(prim);
+                    pend.push((
+                        f.file.clone(),
+                        *line,
+                        format!(
+                            "call to `{}` may block ({}) while holding lock(s) {}",
+                            bare,
+                            via.join(" -> "),
+                            locks
+                        ),
+                    ));
+                }
+            }
+        }
+        for (file, line, msg) in pend {
+            self.add_finding(&file, line, "blocking-under-lock", &msg);
+        }
+    }
+
+    /// Config-key and metric registry: every production `tony.*` literal
+    /// must be documented and read through the configuration layer; every
+    /// `tony_*` family must be in docs/METRICS.md; doc drift (documented
+    /// but never used) is flagged in the reverse direction too.
+    fn registry_pass(&mut self) {
+        let conf_doc = self.read_doc("CONFIGURATION.md");
+        let metrics_doc = self.read_doc("METRICS.md");
+        let feature_docs: &[(&str, &str)] =
+            &[("tony.scheduler.", "SCHEDULING.md"), ("tony.trace.", "TRACING.md")];
+        let mut feature_cache: HashMap<String, Option<String>> = HashMap::new();
+        for (_, doc) in feature_docs {
+            let body = self.read_doc(doc);
+            feature_cache.insert(doc.to_string(), body);
+        }
+        let mut used_keys: HashSet<String> = HashSet::new();
+        let uses = self.config_uses.clone();
+        for (file, line, key, encl, in_test) in &uses {
+            used_keys.insert(key.clone());
+            if *in_test {
+                continue;
+            }
+            if let Some(doc) = &conf_doc {
+                if !doc.contains(key.as_str()) {
+                    self.add_finding(
+                        file,
+                        *line,
+                        "config-undocumented",
+                        &format!("config key `{}` is not documented in docs/CONFIGURATION.md", key),
+                    );
+                }
+            }
+            for (prefix, doc_name) in feature_docs {
+                if key.starts_with(*prefix) {
+                    if let Some(Some(body)) = feature_cache.get(*doc_name) {
+                        if !body.contains(key.as_str()) {
+                            self.add_finding(
+                                file,
+                                *line,
+                                "config-undocumented",
+                                &format!("config key `{}` is not documented in docs/{}", key, doc_name),
+                            );
+                        }
+                    }
+                }
+            }
+            if !is_conf_accessor(encl) {
+                let where_txt = if encl.is_empty() {
+                    "no accessor call".to_string()
+                } else {
+                    format!("`{}(..)`", encl)
+                };
+                self.add_finding(
+                    file,
+                    *line,
+                    "config-outside-conf",
+                    &format!(
+                        "config key `{}` used outside a tonyconf accessor ({}); \
+                         read it through Configuration::get*/set",
+                        key, where_txt
+                    ),
+                );
+            }
+        }
+        let mut used_families: HashSet<String> = HashSet::new();
+        for (_, _, fam, _) in &self.metric_uses {
+            used_families.insert(fam.clone());
+        }
+        let muses = self.metric_uses.clone();
+        for (file, line, fam, in_test) in &muses {
+            if *in_test {
+                continue;
+            }
+            if let Some(doc) = &metrics_doc {
+                if !doc.contains(fam.as_str()) {
+                    self.add_finding(
+                        file,
+                        *line,
+                        "metric-undocumented",
+                        &format!("metric family `{}` is not documented in docs/METRICS.md", fam),
+                    );
+                }
+            }
+        }
+        if let Some(doc) = &conf_doc {
+            let doc_path = format!("{}/CONFIGURATION.md", self.docs_dir);
+            for (ln_no, key) in doc_table_keys(doc) {
+                if !used_keys.contains(&key) {
+                    self.add_finding(
+                        &doc_path,
+                        ln_no,
+                        "config-stale-doc",
+                        &format!("documented config key `{}` is never read by the code", key),
+                    );
+                }
+            }
+        }
+        if let Some(doc) = &metrics_doc {
+            let doc_path = format!("{}/METRICS.md", self.docs_dir);
+            for (ln_no, fam) in doc_metric_families(doc) {
+                if !used_families.contains(&fam) {
+                    self.add_finding(
+                        &doc_path,
+                        ln_no,
+                        "metric-stale-doc",
+                        &format!("documented metric family `{}` is never emitted by the code", fam),
+                    );
+                }
+            }
+        }
+    }
+
+    fn read_doc(&self, name: &str) -> Option<String> {
+        std::fs::read_to_string(format!("{}/{}", self.docs_dir, name)).ok()
+    }
+}
+
+/// Files under a `tests/` or `benches/` directory are test code: lock and
+/// blocking analyses skip them (they exercise, not implement, the control
+/// plane), though the thread-sleep ban still applies.
+/// Paths under `tests/` or `benches/` get the relaxed test-code scope
+/// (lock and blocking passes skip them).  A `fixtures/` segment opts back
+/// in: the lint's own fixture corpus lives at `rust/lint/tests/fixtures/`
+/// and must be analyzed as production code for the seeded violations to
+/// fire.
+pub fn is_test_path(f: &str) -> bool {
+    let norm = f.replace('\\', "/");
+    if norm.split('/').any(|p| p == "fixtures") {
+        return false;
+    }
+    norm.split('/').any(|p| p == "tests" || p == "benches")
+}
+
+/// First backticked token of each markdown table row, when it is a key.
+pub fn doc_table_keys(doc: &str) -> Vec<(u32, String)> {
+    let mut out = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    for (i, line) in doc.split('\n').enumerate() {
+        let t = line.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let rest: &str = t[1..].trim_start();
+        if !rest.starts_with('`') {
+            continue;
+        }
+        let inner = &rest[1..];
+        let end = match inner.find('`') {
+            Some(e) => e,
+            None => continue,
+        };
+        let key = &inner[..end];
+        if key_matches(key) && !seen.contains(key) {
+            seen.insert(key.to_string());
+            out.push((i as u32 + 1, key.to_string()));
+        }
+    }
+    out
+}
+
+/// Every `tony_*` token mentioned anywhere in the doc, collapsed to
+/// families, first-mention line.
+pub fn doc_metric_families(doc: &str) -> Vec<(u32, String)> {
+    let mut out = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    for (i, line) in doc.split('\n').enumerate() {
+        let cs: Vec<char> = line.chars().collect();
+        let mut k = 0usize;
+        while k < cs.len() {
+            if cs[k] == 't' && matches_at(&cs, k, "tony_") {
+                let mut e = k + "tony_".len();
+                while e < cs.len()
+                    && (cs[e].is_ascii_lowercase() || cs[e].is_ascii_digit() || cs[e] == '_')
+                {
+                    e += 1;
+                }
+                if e > k + "tony_".len() {
+                    let tok: String = cs[k..e].iter().collect();
+                    let fam = metric_family(&tok);
+                    if !seen.contains(&fam) {
+                        seen.insert(fam.clone());
+                        out.push((i as u32 + 1, fam));
+                    }
+                    k = e;
+                    continue;
+                }
+            }
+            k += 1;
+        }
+    }
+    out
+}
+
+fn matches_at(cs: &[char], k: usize, pat: &str) -> bool {
+    let pc: Vec<char> = pat.chars().collect();
+    k + pc.len() <= cs.len() && cs[k..k + pc.len()] == pc[..]
+}
+
+/// Expand paths to a sorted, deduped list of `.rs` files.
+pub fn collect_files(paths: &[String]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for p in paths {
+        let is_file = std::fs::metadata(p).map(|m| m.is_file()).unwrap_or(false);
+        if is_file {
+            out.push(p.clone());
+        } else {
+            walk_dir(p, &mut out);
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+fn walk_dir(dir: &str, out: &mut Vec<String>) {
+    let rd = match std::fs::read_dir(dir) {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    for ent in rd.flatten() {
+        let name = ent.file_name().to_string_lossy().to_string();
+        let path = format!("{}/{}", dir, name);
+        let ft = match ent.file_type() {
+            Ok(t) => t,
+            Err(_) => continue,
+        };
+        if ft.is_dir() {
+            walk_dir(&path, out);
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+}

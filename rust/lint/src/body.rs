@@ -1,0 +1,766 @@
+//! Pass 2: walk function bodies with the global index available.
+//! Tracks guard live ranges, types local bindings, classifies lock sites
+//! against the manifest, records the typed call graph, and collects
+//! config-key / metric-literal uses.
+
+use crate::analyzer::Analyzer;
+use crate::index::{
+    collect_type_idents, is_direct_blocking, is_keyword, key_matches, metric_family,
+    metric_matches, normalize_key, FnRec, LockSite, Pair,
+};
+use crate::lexer::{Kind, Tok};
+use crate::walker::{impl_header_position, is_i, is_kind, is_p, parse_fn_sig, parse_impl, Guard, Scope};
+
+pub struct BodyWalker<'a> {
+    pub az: &'a mut Analyzer,
+    pub file: String,
+    pub toks: &'a [Tok],
+    scopes: Vec<Scope>,
+    pending_impl: Option<String>,
+    pending_fn: Option<(String, u32, Vec<(String, Vec<String>)>)>,
+    pending_cfg_test: bool,
+    pending_let: Option<String>,
+    stmt_start: bool,
+    paren_names: Vec<Option<String>>,
+    spawn_paren_depth: Option<usize>,
+}
+
+impl<'a> BodyWalker<'a> {
+    pub fn new(az: &'a mut Analyzer, file: &str, toks: &'a [Tok], dir_test: bool) -> BodyWalker<'a> {
+        BodyWalker {
+            az,
+            file: file.to_string(),
+            toks,
+            scopes: vec![Scope::new(String::new(), None, dir_test, false)],
+            pending_impl: None,
+            pending_fn: None,
+            pending_cfg_test: false,
+            pending_let: None,
+            stmt_start: true,
+            paren_names: Vec::new(),
+            spawn_paren_depth: None,
+        }
+    }
+
+    fn cur(&self) -> &Scope {
+        self.scopes.last().unwrap()
+    }
+
+    fn cur_mut(&mut self) -> &mut Scope {
+        self.scopes.last_mut().unwrap()
+    }
+
+    fn in_test(&self) -> bool {
+        self.cur().is_test
+    }
+
+    // ---- typing --------------------------------------------------------
+
+    /// Declared type-ident list of a binding: scope env, then file statics.
+    fn lookup_binding(&self, name: &str) -> Option<Vec<String>> {
+        for sc in self.scopes.iter().rev() {
+            if let Some(tyl) = sc.env.get(name) {
+                return Some(tyl.clone());
+            }
+        }
+        self.az.index.statics.get(&(self.file.clone(), name.to_string())).cloned()
+    }
+
+    /// Declared type-ident list of a full `a.b.c` chain.  `clone()` and
+    /// `upgrade()` segments are type-transparent; other calls end typing.
+    fn chain_tylist(&self, chain: &[String]) -> Option<Vec<String>> {
+        if chain.is_empty() {
+            return None;
+        }
+        let mut tylist: Option<Vec<String>> = if chain[0] == "self" {
+            let it = self.cur().impl_type.clone();
+            if it.is_empty() {
+                None
+            } else {
+                Some(vec![it])
+            }
+        } else {
+            self.lookup_binding(&chain[0])
+        };
+        for seg in &chain[1..] {
+            let cur = tylist?;
+            if seg == "clone()" || seg == "upgrade()" {
+                tylist = Some(cur);
+                continue;
+            }
+            if seg.ends_with("()") {
+                return None;
+            }
+            let ty = self.az.index.core_type(&cur, 0)?;
+            tylist = self.az.index.field_type(&ty, seg);
+        }
+        tylist
+    }
+
+    fn resolve_chain_type(&self, chain: &[String]) -> Option<String> {
+        let tylist = self.chain_tylist(chain)?;
+        self.az.index.core_type(&tylist, 0)
+    }
+
+    /// For `a.b.c`: (core type of `a.b`, "c").  Single segment: (None, seg).
+    fn chain_owner_and_field(&self, chain: &[String]) -> (Option<String>, Option<String>) {
+        if chain.len() < 2 {
+            return (None, chain.first().cloned());
+        }
+        let owner = self.resolve_chain_type(&chain[..chain.len() - 1]);
+        (owner, chain.last().cloned())
+    }
+
+    fn mutex_inner_of_chain(&self, chain: &[String]) -> Option<String> {
+        let tylist = self.chain_tylist(chain)?;
+        self.az.index.mutex_inner(&tylist, 0)
+    }
+
+    // ---- guard / fn helpers ---------------------------------------------
+
+    /// Lock names currently held on this thread (spawn barriers cut off
+    /// the parent's guards), outermost first.
+    fn held(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for sc in self.scopes.iter().rev() {
+            for g in &sc.guards {
+                out.push(g.lock_id.clone());
+            }
+            if sc.barrier {
+                break;
+            }
+        }
+        out.reverse();
+        out
+    }
+
+    fn fn_key_if_indexed(&self) -> Option<String> {
+        let key = self.cur().fn_key.clone()?;
+        if self.az.index.fns.contains_key(&key) {
+            Some(key)
+        } else {
+            None
+        }
+    }
+
+    // ---- main loop -------------------------------------------------------
+
+    pub fn walk(&mut self) {
+        let n = self.toks.len();
+        let mut i = 0usize;
+        while i < n {
+            let kind = self.toks[i].kind;
+            let line = self.toks[i].line;
+            if kind == Kind::Punct {
+                let text = self.toks[i].text.clone();
+                i = self.punct(i, &text, line);
+                continue;
+            }
+            if kind == Kind::Str {
+                let text = self.toks[i].text.clone();
+                self.string_lit(&text, line);
+                i += 1;
+                continue;
+            }
+            if kind != Kind::Ident {
+                i += 1;
+                self.stmt_start = false;
+                continue;
+            }
+            let text = self.toks[i].text.clone();
+            if self.stmt_start {
+                self.cur_mut().stmt_kind = if matches!(text.as_str(), "if" | "while" | "for" | "match") {
+                    Some(text.clone())
+                } else {
+                    None
+                };
+                self.stmt_start = false;
+            }
+            if text == "impl" && impl_header_position(self.toks, i) {
+                let (ty, _tr) = parse_impl(self.toks, i);
+                self.pending_impl = Some(ty);
+                i += 1;
+                continue;
+            }
+            if text == "fn" {
+                if let Some(sig) = parse_fn_sig(self.toks, i) {
+                    self.pending_fn = Some(sig);
+                }
+                i += 2;
+                continue;
+            }
+            if text == "let" {
+                self.handle_let(i);
+                i += 1;
+                continue;
+            }
+            if text == "lock" && self.is_lock_call(i) {
+                i = self.lock_site(i, line);
+                continue;
+            }
+            if text == "drop" && is_p(self.toks, i + 1, "(") {
+                self.handle_drop(i);
+                i += 1;
+                continue;
+            }
+            if i + 1 < n
+                && self.toks[i + 1].kind == Kind::Punct
+                && (self.toks[i + 1].text == "(" || self.toks[i + 1].text == "!")
+            {
+                i = self.call_site(i, &text, line);
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    // ---- let inference ---------------------------------------------------
+
+    fn handle_let(&mut self, i: usize) {
+        let toks = self.toks;
+        let n = toks.len();
+        let mut j = i + 1;
+        if is_i(toks, j, "mut") {
+            j += 1;
+        }
+        if j >= n || toks[j].kind != Kind::Ident {
+            self.pending_let = None;
+            return;
+        }
+        // Optional Some(x) / Ok(x) pattern (if-let / while-let / let-else).
+        let mut wrapped = false;
+        if (toks[j].text == "Some" || toks[j].text == "Ok")
+            && j + 3 < n
+            && is_p(toks, j + 1, "(")
+            && toks[j + 2].kind == Kind::Ident
+            && is_p(toks, j + 3, ")")
+        {
+            wrapped = true;
+            j += 2;
+            if is_i(toks, j, "mut") && is_kind(toks, j + 1, Kind::Ident) {
+                j += 1;
+            }
+        }
+        let name = toks[j].text.clone();
+        j += 1;
+        if wrapped {
+            j += 1; // past `)`
+        }
+        let mut ann: Option<Vec<String>> = None;
+        if !wrapped && is_p(toks, j, ":") {
+            // Explicit annotation: tokens up to `=` or `;` at depth 0.
+            let mut depth = 0i32;
+            let mut tybuf: Vec<Pair> = Vec::new();
+            j += 1;
+            while j < n {
+                let t = &toks[j];
+                if t.kind == Kind::Punct && matches!(t.text.as_str(), "<" | "(" | "[") {
+                    depth += 1;
+                } else if t.kind == Kind::Punct && matches!(t.text.as_str(), ">" | ")" | "]") {
+                    depth -= 1;
+                } else if t.kind == Kind::Punct && (t.text == "=" || t.text == ";") && depth <= 0 {
+                    break;
+                }
+                tybuf.push((t.kind, t.text.clone()));
+                j += 1;
+            }
+            ann = Some(collect_type_idents(&tybuf));
+        }
+        if !is_p(toks, j, "=") {
+            self.pending_let = None;
+            return;
+        }
+        self.pending_let = if wrapped { None } else { Some(name.clone()) };
+        if let Some(a) = ann {
+            if !a.is_empty() {
+                self.cur_mut().env.insert(name, a);
+                return;
+            }
+        }
+        // Infer simple chains: ident(.field|.clone()|.upgrade())* ending at
+        // `;` (plain let), `{` (if/while-let) or `else` (let-else), and
+        // `Type::new(..)` / `Type::default(..)` constructors.
+        j += 1;
+        let mut chain: Vec<String> = Vec::new();
+        let mut k = j;
+        let mut ok = true;
+        while k < n {
+            let t = &toks[k];
+            if t.kind == Kind::Ident {
+                if is_p(toks, k + 1, "(") {
+                    if (t.text == "clone" || t.text == "upgrade") && is_p(toks, k + 2, ")") {
+                        chain.push(format!("{}()", t.text));
+                        k += 3;
+                    } else {
+                        ok = false;
+                        break;
+                    }
+                } else {
+                    chain.push(t.text.clone());
+                    k += 1;
+                }
+                if is_p(toks, k, ".") {
+                    k += 1;
+                    continue;
+                }
+                break;
+            } else if t.kind == Kind::Punct && t.text == "&" {
+                k += 1;
+                continue;
+            } else {
+                ok = false;
+                break;
+            }
+        }
+        let ender = ok
+            && !chain.is_empty()
+            && k < n
+            && (is_p(toks, k, ";") || (wrapped && (is_p(toks, k, "{") || is_i(toks, k, "else"))));
+        if ender {
+            if let Some(tylist) = self.chain_tylist(&chain) {
+                if !tylist.is_empty() {
+                    self.cur_mut().env.insert(name, tylist);
+                }
+            }
+            return;
+        }
+        if j + 3 < n
+            && toks[j].kind == Kind::Ident
+            && self.az.index.tree_types.contains(&toks[j].text)
+            && is_p(toks, j + 1, ":")
+            && is_p(toks, j + 2, ":")
+            && toks[j + 3].kind == Kind::Ident
+            && (toks[j + 3].text == "new" || toks[j + 3].text == "default")
+        {
+            let ty = toks[j].text.clone();
+            self.cur_mut().env.insert(name, vec![ty]);
+        }
+    }
+
+    // ---- lock sites --------------------------------------------------------
+
+    fn is_lock_call(&self, i: usize) -> bool {
+        i >= 1
+            && i + 2 < self.toks.len()
+            && is_p(self.toks, i - 1, ".")
+            && is_p(self.toks, i + 1, "(")
+            && is_p(self.toks, i + 2, ")")
+    }
+
+    /// Backwards receiver chain of a `.name` at `i`: `a.b.c()` segments.
+    fn receiver(&self, i: usize) -> Option<Vec<String>> {
+        let toks = self.toks;
+        let mut j: isize = i as isize - 2;
+        let mut parts: Vec<String> = Vec::new();
+        while j >= 0 {
+            let ju = j as usize;
+            if toks[ju].kind == Kind::Punct && toks[ju].text == ")" && ju >= 1 && is_p(toks, ju - 1, "(") {
+                if ju >= 2 && toks[ju - 2].kind == Kind::Ident {
+                    parts.push(format!("{}()", toks[ju - 2].text));
+                    j -= 3;
+                } else {
+                    return None;
+                }
+            } else if toks[ju].kind == Kind::Ident {
+                parts.push(toks[ju].text.clone());
+                j -= 1;
+            } else {
+                break;
+            }
+            if j >= 0 && is_p(toks, j as usize, ".") {
+                j -= 1;
+                continue;
+            }
+            break;
+        }
+        if parts.is_empty() {
+            return None;
+        }
+        parts.reverse();
+        Some(parts)
+    }
+
+    /// Classify a lock receiver chain against the manifest.  Candidate
+    /// precedence: `Owner.field` (typed owner), `type:Inner` (declared
+    /// Mutex payload), `path-suffix:receiver`, bare receiver text.
+    /// -> (lock name, classified, mutex inner type, candidates tried).
+    fn classify(&self, chain: &[String]) -> (String, bool, Option<String>, Vec<String>) {
+        let norm: &[String] = if !chain.is_empty() && chain[0] == "self" && chain.len() > 1 {
+            &chain[1..]
+        } else {
+            chain
+        };
+        let norm_txt = norm.join(".");
+        let mut cands: Vec<String> = Vec::new();
+        let (owner, field) = self.chain_owner_and_field(chain);
+        if let (Some(o), Some(f)) = (&owner, &field) {
+            cands.push(format!("{}.{}", o, f));
+        }
+        let inner = self.mutex_inner_of_chain(chain);
+        if let Some(inn) = &inner {
+            cands.push(format!("type:{}", inn));
+        }
+        let mut all_cands = cands.clone();
+        all_cands.push(format!("<file-suffix>:{}", norm_txt));
+        all_cands.push(norm_txt.clone());
+        for want in &cands {
+            for ent in &self.az.manifest_locks {
+                if ent.matches.iter().any(|m| m == want) {
+                    return (ent.name.clone(), true, inner, all_cands);
+                }
+            }
+        }
+        for ent in &self.az.manifest_locks {
+            for pat in &ent.matches {
+                let k = match pat.rfind(':') {
+                    Some(k) => k,
+                    None => continue,
+                };
+                if k == 0 || pat.starts_with("type:") {
+                    continue;
+                }
+                let (path, r) = (&pat[..k], &pat[k + 1..]);
+                if r == norm_txt && self.file.ends_with(path) {
+                    return (ent.name.clone(), true, inner, all_cands);
+                }
+            }
+        }
+        for ent in &self.az.manifest_locks {
+            if ent.matches.iter().any(|m| *m == norm_txt) {
+                return (ent.name.clone(), true, inner, all_cands);
+            }
+        }
+        let impl_ty = if self.cur().impl_type.is_empty() {
+            "?".to_string()
+        } else {
+            self.cur().impl_type.clone()
+        };
+        let anon = format!("{}:{}:{}", self.file, impl_ty, norm_txt);
+        (anon, false, inner, all_cands)
+    }
+
+    fn lock_site(&mut self, i: usize, line: u32) -> usize {
+        let toks = self.toks;
+        let n = toks.len();
+        // Skip trailing `.unwrap()` / `.expect(..)` to find the statement end.
+        let mut j = i + 3;
+        while j + 1 < n
+            && is_p(toks, j, ".")
+            && toks[j + 1].kind == Kind::Ident
+            && (toks[j + 1].text == "unwrap" || toks[j + 1].text == "expect")
+        {
+            let mut k = j + 2;
+            if is_p(toks, k, "(") {
+                let mut depth = 1i32;
+                k += 1;
+                while k < n && depth > 0 {
+                    if is_p(toks, k, "(") {
+                        depth += 1;
+                    } else if is_p(toks, k, ")") {
+                        depth -= 1;
+                    }
+                    k += 1;
+                }
+                j = k;
+            } else {
+                break;
+            }
+        }
+        let ends_stmt = is_p(toks, j, ";");
+        if self.in_test() {
+            return i + 1;
+        }
+        let chain = self.receiver(i).unwrap_or_else(|| vec!["?".to_string()]);
+        let (lock_id, classified, inner, cands) = self.classify(&chain);
+        let held = self.held();
+        let fn_key = self.cur().fn_key.clone();
+        self.az.lock_sites.push(LockSite {
+            file: self.file.clone(),
+            line,
+            lock_id: lock_id.clone(),
+            classified,
+            held,
+            fn_key: fn_key.clone(),
+            cands,
+        });
+        if let Some(fk) = &fn_key {
+            if let Some(rec) = self.az.index.fns.get_mut(fk) {
+                rec.locks.push((lock_id.clone(), line));
+            }
+        }
+        let bound = ends_stmt && self.pending_let.is_some();
+        let binding = if bound { self.pending_let.clone() } else { None };
+        self.cur_mut().guards.push(Guard { binding: binding.clone(), lock_id, temp: !bound });
+        if bound {
+            if let (Some(b), Some(inn)) = (binding, inner) {
+                self.cur_mut().env.insert(b, vec![inn]);
+            }
+        }
+        i + 1
+    }
+
+    fn handle_drop(&mut self, i: usize) {
+        let toks = self.toks;
+        if is_kind(toks, i + 2, Kind::Ident) && is_p(toks, i + 3, ")") {
+            let name = toks[i + 2].text.clone();
+            for sc in self.scopes.iter_mut().rev() {
+                for k in (0..sc.guards.len()).rev() {
+                    if sc.guards[k].binding.as_deref() == Some(name.as_str()) {
+                        sc.guards.remove(k);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- call sites ---------------------------------------------------------
+
+    fn call_site(&mut self, i: usize, name: &str, line: u32) -> usize {
+        let toks = self.toks;
+        let is_macro = is_p(toks, i + 1, "!");
+        // Leading `a::b::` path of the call, if any.
+        let mut path: Vec<String> = Vec::new();
+        let mut j: isize = i as isize - 1;
+        while j >= 1 && is_p(toks, j as usize, ":") && is_p(toks, (j - 1) as usize, ":") {
+            if j >= 2 && toks[(j - 2) as usize].kind == Kind::Ident {
+                path.push(toks[(j - 2) as usize].text.clone());
+                j -= 3;
+            } else {
+                break;
+            }
+        }
+        path.reverse();
+        if !is_macro && name == "sleep" && path.last().map(|p| p == "thread").unwrap_or(false) {
+            self.az.add_finding(
+                &self.file,
+                line,
+                "thread-sleep",
+                "std::thread::sleep is banned: route through Clock::sleep, a \
+                 WakeupBus wait, or util::clock::real_sleep",
+            );
+        }
+        if is_macro || self.in_test() {
+            return i + 1;
+        }
+        let fk = match self.fn_key_if_indexed() {
+            Some(k) => k,
+            None => return i + 1,
+        };
+        if is_keyword(name) || matches!(name, "lock" | "unwrap" | "expect" | "drop") {
+            return i + 1;
+        }
+        if name == "join" && !is_p(toks, i + 2, ")") {
+            return i + 1; // join with args is iterator/string join, not thread join
+        }
+        // Resolve the callee through the type layer: method receivers must
+        // type to a tree type (or a trait with recorded impls); path calls
+        // resolve when the path head is a tree type; bare calls resolve
+        // among tree free functions.  Untyped receivers get NO edges.
+        let mut keys: Vec<String> = Vec::new();
+        let is_method = i >= 1 && is_p(toks, i - 1, ".");
+        if is_method {
+            let ty = self.receiver(i).and_then(|chain| self.resolve_chain_type(&chain));
+            if let Some(ty) = ty {
+                keys = self
+                    .az
+                    .index
+                    .by_type
+                    .get(&(ty.clone(), name.to_string()))
+                    .cloned()
+                    .unwrap_or_default();
+                if keys.is_empty() {
+                    if let Some(impls) = self.az.index.traits.get(&ty) {
+                        for impl_ty in impls.clone() {
+                            if let Some(ks) = self.az.index.by_type.get(&(impl_ty, name.to_string())) {
+                                keys.extend(ks.iter().cloned());
+                            }
+                        }
+                    }
+                }
+            }
+        } else if let Some(last) = path.last().cloned() {
+            if self.az.index.tree_types.contains(&last) {
+                keys = self
+                    .az
+                    .index
+                    .by_type
+                    .get(&(last.clone(), name.to_string()))
+                    .cloned()
+                    .unwrap_or_default();
+                if keys.is_empty() {
+                    if let Some(impls) = self.az.index.traits.get(&last) {
+                        for impl_ty in impls.clone() {
+                            if let Some(ks) = self.az.index.by_type.get(&(impl_ty, name.to_string())) {
+                                keys.extend(ks.iter().cloned());
+                            }
+                        }
+                    }
+                }
+            } else if last != "thread" {
+                keys = self.az.index.free.get(name).cloned().unwrap_or_default();
+            }
+        } else {
+            keys = self.az.index.free.get(name).cloned().unwrap_or_default();
+        }
+        let held = self.held();
+        if let Some(rec) = self.az.index.fns.get_mut(&fk) {
+            rec.calls.push((name.to_string(), keys, held, line));
+            if is_direct_blocking(name) {
+                rec.blocks.push((name.to_string(), line));
+            }
+        }
+        i + 1
+    }
+
+    // ---- literals ------------------------------------------------------------
+
+    fn string_lit(&mut self, text: &str, line: u32) {
+        let norm = normalize_key(text);
+        if key_matches(&norm) {
+            let mut encl = String::new();
+            for nm in self.paren_names.iter().rev() {
+                if let Some(nm) = nm {
+                    encl = nm.clone();
+                    break;
+                }
+            }
+            let in_test = self.in_test();
+            self.az.config_uses.push((self.file.clone(), line, norm, encl, in_test));
+        }
+        if metric_matches(text) {
+            let in_test = self.in_test();
+            self.az.metric_uses.push((self.file.clone(), line, metric_family(text), in_test));
+        }
+    }
+
+    // ---- punctuation / scope transitions ---------------------------------------
+
+    fn punct(&mut self, i: usize, text: &str, line: u32) -> usize {
+        let toks = self.toks;
+        if text == "#" {
+            if is_p(toks, i + 1, "[")
+                && is_i(toks, i + 2, "cfg")
+                && is_p(toks, i + 3, "(")
+                && is_i(toks, i + 4, "test")
+                && is_p(toks, i + 5, ")")
+            {
+                self.pending_cfg_test = true;
+            }
+            return i + 1;
+        }
+        if text == "(" || text == "[" {
+            let mut nm: Option<String> = None;
+            if text == "(" && i >= 1 {
+                if toks[i - 1].kind == Kind::Ident {
+                    nm = Some(toks[i - 1].text.clone());
+                } else if is_p(toks, i - 1, "!") && i >= 2 && toks[i - 2].kind == Kind::Ident {
+                    nm = Some(toks[i - 2].text.clone());
+                }
+            }
+            let is_spawn = nm.as_deref() == Some("spawn");
+            self.paren_names.push(nm);
+            self.cur_mut().paren += 1;
+            if is_spawn && self.spawn_paren_depth.is_none() && !self.in_test() {
+                self.spawn_paren_depth = Some(self.paren_names.len());
+            }
+            return i + 1;
+        }
+        if text == ")" || text == "]" {
+            if !self.paren_names.is_empty() {
+                if self.spawn_paren_depth == Some(self.paren_names.len()) {
+                    self.spawn_paren_depth = None;
+                }
+                self.paren_names.pop();
+            }
+            let sc = self.cur_mut();
+            sc.paren = sc.paren.saturating_sub(1);
+            return i + 1;
+        }
+        if text == ";" {
+            if self.cur().paren == 0 {
+                let sc = self.cur_mut();
+                sc.guards.retain(|g| !g.temp);
+                sc.stmt_kind = None;
+                self.pending_let = None;
+                self.stmt_start = true;
+            }
+            return i + 1;
+        }
+        if text == "{" {
+            let parent_fn_key = self.cur().fn_key.clone();
+            let mut impl_type = self.cur().impl_type.clone();
+            let mut fn_key = parent_fn_key.clone();
+            let mut is_test = self.cur().is_test;
+            let stmt_kind = self.cur().stmt_kind.clone();
+            let mut barrier = false;
+            if self.pending_cfg_test {
+                is_test = true;
+                self.pending_cfg_test = false;
+            }
+            if let Some(ty) = self.pending_impl.take() {
+                impl_type = ty;
+            }
+            if let Some((bare, fl, _params)) = self.pending_fn.take() {
+                fn_key = Some(format!("{}:{}:{}", self.file, fl, bare));
+            } else if self.spawn_paren_depth.is_some() && fn_key.is_some() {
+                // A closure inside spawn(..): a new thread's body.  It gets
+                // a synthetic fn record so its lock/call edges are tracked,
+                // and a barrier so the parent's guards don't leak in.
+                barrier = true;
+                let key = format!("{}::spawn@{}", fn_key.clone().unwrap(), line);
+                if !self.az.index.fns.contains_key(&key) && !is_test {
+                    self.az.index.fns.insert(
+                        key.clone(),
+                        FnRec::new(key.clone(), String::new(), impl_type.clone(), self.file.clone(), line, is_test),
+                    );
+                }
+                fn_key = Some(key);
+                self.spawn_paren_depth = None;
+            }
+            let mut sc = Scope::new(impl_type, fn_key.clone(), is_test, barrier);
+            if fn_key != parent_fn_key && !barrier {
+                if let Some(fk) = &fn_key {
+                    if let Some(rec) = self.az.index.fns.get(fk) {
+                        for (pn, tyl) in &rec.params {
+                            if !tyl.is_empty() {
+                                sc.env.insert(pn.clone(), tyl.clone());
+                            }
+                        }
+                    }
+                }
+            }
+            if stmt_kind.as_deref() == Some("match") {
+                // Match scrutinee temporaries live for the whole match.
+                let parent = self.cur_mut();
+                let mut kept: Vec<Guard> = Vec::new();
+                let mut temps: Vec<Guard> = Vec::new();
+                for g in parent.guards.drain(..) {
+                    if g.temp {
+                        temps.push(g);
+                    } else {
+                        kept.push(g);
+                    }
+                }
+                parent.guards = kept;
+                sc.guards.extend(temps);
+            } else if matches!(stmt_kind.as_deref(), Some("if") | Some("while") | Some("for")) {
+                // Condition temporaries die at the block open.
+                self.cur_mut().guards.retain(|g| !g.temp);
+            }
+            self.cur_mut().stmt_kind = None;
+            self.scopes.push(sc);
+            self.pending_let = None;
+            self.stmt_start = true;
+            return i + 1;
+        }
+        if text == "}" {
+            if self.scopes.len() > 1 {
+                self.scopes.pop();
+            }
+            self.stmt_start = true;
+            return i + 1;
+        }
+        i + 1
+    }
+}

@@ -1,0 +1,314 @@
+//! Shared data model: rule table, the global symbol index built by
+//! pass 1, and the finding / lock-site records the passes emit.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::lexer::Kind;
+
+/// (rule, severity).  Severity is `error` or `warning`; `--deny warnings`
+/// promotes warnings to exit-code failures.
+pub const RULES: &[(&str, &str)] = &[
+    ("lock-cycle", "error"),
+    ("lock-reentrant", "error"),
+    ("lock-order", "error"),
+    ("lock-unclassified", "warning"),
+    ("blocking-under-lock", "warning"),
+    ("thread-sleep", "error"),
+    ("config-undocumented", "warning"),
+    ("config-outside-conf", "warning"),
+    ("config-stale-doc", "warning"),
+    ("metric-undocumented", "warning"),
+    ("metric-stale-doc", "warning"),
+    ("allow-without-reason", "error"),
+    ("allow-unknown-rule", "error"),
+];
+
+pub fn rule_severity(rule: &str) -> Option<&'static str> {
+    for (r, s) in RULES {
+        if *r == rule {
+            return Some(s);
+        }
+    }
+    None
+}
+
+/// Method / function names that block the calling thread directly.
+pub const DIRECT_BLOCKING: &[&str] = &[
+    "real_sleep", "sleep", "wait", "wait_timeout", "wait_while", "park",
+    "park_timeout", "recv", "recv_timeout", "recv_deadline", "join",
+    "connect", "accept", "read_to_end", "read_to_string", "read_exact",
+    "write_all", "sync_all", "sync_data", "wait_until", "wait_seq",
+    "pop_wait",
+];
+
+pub fn is_direct_blocking(name: &str) -> bool {
+    DIRECT_BLOCKING.contains(&name)
+}
+
+/// Idents that look like calls lexically but are control flow / patterns.
+pub const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "move",
+    "ref", "else", "box", "async", "await", "dyn", "let", "fn", "impl",
+    "pub", "use", "mod", "where", "unsafe", "Some", "None", "Ok", "Err",
+];
+
+pub fn is_keyword(name: &str) -> bool {
+    KEYWORDS.contains(&name)
+}
+
+/// Enclosing call names under which a `"tony.*"` literal counts as read
+/// through the configuration layer (`format` covers key construction).
+pub const CONF_ACCESSORS: &[&str] = &[
+    "set", "get", "get_raw", "get_or", "get_u64", "get_u32", "get_f64",
+    "get_bool", "get_size", "with_prefix", "format",
+];
+
+pub fn is_conf_accessor(name: &str) -> bool {
+    CONF_ACCESSORS.contains(&name)
+}
+
+/// Transparent wrappers skipped when resolving a type-ident chain to a
+/// core (possibly tree-defined) type.
+pub const WRAPPERS: &[&str] = &[
+    "Arc", "Rc", "Box", "Weak", "Mutex", "RwLock", "Option", "RefCell",
+    "dyn", "mut", "r#dyn",
+];
+
+pub fn is_wrapper(name: &str) -> bool {
+    WRAPPERS.contains(&name)
+}
+
+/// (kind, text) pair — a token stripped of its line, used for type buffers.
+pub type Pair = (Kind, String);
+
+/// Idents from a type-token buffer, skipping `path::` prefix segments so
+/// `std::sync::Arc<AmState>` yields `[Arc, AmState]`, not `[std, sync, ..]`.
+pub fn collect_type_idents(pairs: &[Pair]) -> Vec<String> {
+    let mut out = Vec::new();
+    for t in 0..pairs.len() {
+        if pairs[t].0 != Kind::Ident {
+            continue;
+        }
+        if t + 2 < pairs.len()
+            && pairs[t + 1].0 == Kind::Punct
+            && pairs[t + 1].1 == ":"
+            && pairs[t + 2].0 == Kind::Punct
+            && pairs[t + 2].1 == ":"
+        {
+            continue;
+        }
+        out.push(pairs[t].1.clone());
+    }
+    out
+}
+
+/// Parameter: (name, declared type-ident list).
+pub type Param = (String, Vec<String>);
+
+/// One function (or spawn-closure pseudo-function) in the tree.
+pub struct FnRec {
+    pub key: String,
+    pub bare: String,
+    pub impl_type: String,
+    pub file: String,
+    pub line: u32,
+    pub is_test: bool,
+    pub params: Vec<Param>,
+    /// (lock name, line) for every lock site in the body.
+    pub locks: Vec<(String, u32)>,
+    /// (bare callee, resolved fn keys, locks held at the call, line).
+    pub calls: Vec<(String, Vec<String>, Vec<String>, u32)>,
+    /// (blocking primitive, line) for direct blocking calls in the body.
+    pub blocks: Vec<(String, u32)>,
+}
+
+impl FnRec {
+    pub fn new(key: String, bare: String, impl_type: String, file: String, line: u32, is_test: bool) -> FnRec {
+        FnRec {
+            key,
+            bare,
+            impl_type,
+            file,
+            line,
+            is_test,
+            params: Vec::new(),
+            locks: Vec::new(),
+            calls: Vec::new(),
+            blocks: Vec::new(),
+        }
+    }
+}
+
+/// Global symbol index built by pass 1 and consulted (and extended with
+/// spawn pseudo-fns) by pass 2.
+#[derive(Default)]
+pub struct Index {
+    /// struct name -> field name -> declared type-ident list.
+    pub structs: HashMap<String, HashMap<String, Vec<String>>>,
+    /// type alias -> aliased type-ident list.
+    pub aliases: HashMap<String, Vec<String>>,
+    /// trait name -> impl'ing type names (for trait-typed receivers).
+    pub traits: HashMap<String, Vec<String>>,
+    /// fn key (`file:line:bare`) -> record.  BTreeMap: the fixpoint and
+    /// reporting passes iterate in deterministic key order.
+    pub fns: BTreeMap<String, FnRec>,
+    /// (impl type, bare name) -> fn keys.
+    pub by_type: HashMap<(String, String), Vec<String>>,
+    /// bare name -> fn keys for free functions.
+    pub free: HashMap<String, Vec<String>>,
+    /// (file, static/const name) -> declared type-ident list.
+    pub statics: HashMap<(String, String), Vec<String>>,
+    /// Every type defined (struct) or impl'd in the linted tree.
+    pub tree_types: HashSet<String>,
+}
+
+impl Index {
+    pub fn add_fn(&mut self, rec: FnRec) {
+        if !rec.impl_type.is_empty() {
+            self.by_type
+                .entry((rec.impl_type.clone(), rec.bare.clone()))
+                .or_default()
+                .push(rec.key.clone());
+        } else {
+            self.free.entry(rec.bare.clone()).or_default().push(rec.key.clone());
+        }
+        self.fns.insert(rec.key.clone(), rec);
+    }
+
+    /// First non-wrapper ident, with aliases expanded (depth-capped).
+    pub fn core_type(&self, tylist: &[String], depth: u32) -> Option<String> {
+        if depth > 4 {
+            return None;
+        }
+        for t in tylist {
+            if is_wrapper(t) {
+                continue;
+            }
+            if let Some(al) = self.aliases.get(t) {
+                let al = al.clone();
+                return self.core_type(&al, depth + 1);
+            }
+            return Some(t.clone());
+        }
+        None
+    }
+
+    /// Core type guarded by the first `Mutex`/`RwLock` in the list, if any.
+    pub fn mutex_inner(&self, tylist: &[String], depth: u32) -> Option<String> {
+        if depth > 4 {
+            return None;
+        }
+        let mut exp: Vec<String> = Vec::new();
+        for t in tylist {
+            if depth < 4 {
+                if let Some(al) = self.aliases.get(t) {
+                    exp.extend(al.iter().cloned());
+                    continue;
+                }
+            }
+            exp.push(t.clone());
+        }
+        for k in 0..exp.len() {
+            if exp[k] == "Mutex" || exp[k] == "RwLock" {
+                return self.core_type(&exp[k + 1..], depth + 1);
+            }
+        }
+        None
+    }
+
+    pub fn field_type(&self, ty: &str, field: &str) -> Option<Vec<String>> {
+        self.structs.get(ty)?.get(field).cloned()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn severity(&self) -> &'static str {
+        rule_severity(&self.rule).unwrap_or("error")
+    }
+
+    pub fn render(&self) -> String {
+        format!("{}:{} · {} · {} · {}", self.file, self.line, self.rule, self.severity(), self.msg)
+    }
+}
+
+/// One `.lock()` call site, after classification against the manifest.
+pub struct LockSite {
+    pub file: String,
+    pub line: u32,
+    pub lock_id: String,
+    pub classified: bool,
+    pub held: Vec<String>,
+    pub fn_key: Option<String>,
+    pub cands: Vec<String>,
+}
+
+/// `tony.*` key must match `tony` + dot-separated `[a-z0-9-]+` / `<ty>`
+/// segments, at least one.
+pub fn key_matches(s: &str) -> bool {
+    let parts: Vec<&str> = s.split('.').collect();
+    if parts.len() < 2 || parts[0] != "tony" {
+        return false;
+    }
+    for p in &parts[1..] {
+        if *p == "<ty>" {
+            continue;
+        }
+        if p.is_empty() || !p.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-') {
+            return false;
+        }
+    }
+    true
+}
+
+/// Replace `{...}` format holes with `<ty>` so format!-built keys
+/// normalize to one registry entry (`tony.{ty}.instances` and
+/// `format!("tony.{}.instances", ty)` both become `tony.<ty>.instances`).
+pub fn normalize_key(s: &str) -> String {
+    let cs: Vec<char> = s.chars().collect();
+    let mut out = String::new();
+    let mut i = 0usize;
+    while i < cs.len() {
+        if cs[i] == '{' {
+            let mut j = i + 1;
+            while j < cs.len() && cs[j] != '}' {
+                j += 1;
+            }
+            if j < cs.len() {
+                out.push_str("<ty>");
+                i = j + 1;
+                continue;
+            }
+        }
+        out.push(cs[i]);
+        i += 1;
+    }
+    out
+}
+
+/// `tony_*` metric literal check (full-string match).
+pub fn metric_matches(s: &str) -> bool {
+    if !s.starts_with("tony_") || s.len() <= "tony_".len() {
+        return false;
+    }
+    s["tony_".len()..]
+        .chars()
+        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Histogram series collapse to their family name.
+pub fn metric_family(name: &str) -> String {
+    for suf in ["_bucket", "_sum", "_count"] {
+        if let Some(fam) = name.strip_suffix(suf) {
+            return fam.to_string();
+        }
+    }
+    name.to_string()
+}

@@ -1,0 +1,339 @@
+//! Hand-rolled Rust lexer: just enough structure for the lint passes.
+//!
+//! Produces idents, string literals (value only, escapes left raw),
+//! numbers, lifetimes, and single-char puncts.  Comments are consumed
+//! here, and `// lint:allow(rule, reason = "...")` escapes are parsed
+//! out of line comments as a side channel keyed by line number.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Str,
+    Num,
+    Punct,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// line -> [(rule, has_reason)] for every `lint:allow` clause on it.
+pub type Allows = HashMap<u32, Vec<(String, bool)>>;
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+pub fn tokenize(src: &str) -> (Vec<Tok>, Allows) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut allows: Allows = HashMap::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            let comment: String = s[i..j].iter().collect();
+            parse_allow(&comment, line, &mut allows);
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if j + 1 < n && s[j] == '/' && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if j + 1 < n && s[j] == '*' && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        if (c == 'r' || c == 'b') && maybe_raw_string(&s, i) {
+            let (ni, nl) = scan_raw_string(&s, i, line, &mut toks);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        if c == 'b' && i + 1 < n && s[i + 1] == '"' {
+            let (ni, nl) = scan_string(&s, i + 1, line, &mut toks);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        if c == 'b' && i + 1 < n && s[i + 1] == '\'' {
+            let (ni, nl) = scan_char(&s, i + 1, line);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        if c == '"' {
+            let (ni, nl) = scan_string(&s, i, line, &mut toks);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                let (ni, nl) = scan_char(&s, i, line);
+                i = ni;
+                line = nl;
+                continue;
+            }
+            if i + 2 < n && s[i + 2] == '\'' && s[i + 1] != '\'' {
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_ident_char(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Lifetime, text: s[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_char(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: s[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_char(s[j]) {
+                j += 1;
+            }
+            if j < n && s[j] == '.' && j + 1 < n && s[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_char(s[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Num, text: s[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, allows)
+}
+
+fn maybe_raw_string(s: &[char], i: usize) -> bool {
+    let n = s.len();
+    let mut j = i;
+    if s[j] == 'b' {
+        j += 1;
+    }
+    if j >= n || s[j] != 'r' {
+        return false;
+    }
+    j += 1;
+    while j < n && s[j] == '#' {
+        j += 1;
+    }
+    j < n && s[j] == '"'
+}
+
+fn scan_raw_string(s: &[char], i: usize, mut line: u32, toks: &mut Vec<Tok>) -> (usize, u32) {
+    let n = s.len();
+    let start_line = line;
+    let mut j = i;
+    if s[j] == 'b' {
+        j += 1;
+    }
+    j += 1; // past `r`
+    let mut hashes = 0usize;
+    while j < n && s[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // past opening `"`
+    let val_start = j;
+    while j < n {
+        if s[j] == '\n' {
+            line += 1;
+            j += 1;
+        } else if s[j] == '"' && j + hashes < n && s[j + 1..j + 1 + hashes].iter().all(|&h| h == '#') {
+            toks.push(Tok { kind: Kind::Str, text: s[val_start..j].iter().collect(), line: start_line });
+            return (j + 1 + hashes, line);
+        } else {
+            j += 1;
+        }
+    }
+    (j, line)
+}
+
+fn scan_string(s: &[char], i: usize, mut line: u32, toks: &mut Vec<Tok>) -> (usize, u32) {
+    let n = s.len();
+    let start_line = line;
+    let mut j = i + 1;
+    let val_start = j;
+    while j < n {
+        if s[j] == '\\' {
+            j += 2;
+        } else if s[j] == '\n' {
+            line += 1;
+            j += 1;
+        } else if s[j] == '"' {
+            toks.push(Tok { kind: Kind::Str, text: s[val_start..j].iter().collect(), line: start_line });
+            return (j + 1, line);
+        } else {
+            j += 1;
+        }
+    }
+    (j, line)
+}
+
+fn scan_char(s: &[char], i: usize, line: u32) -> (usize, u32) {
+    let n = s.len();
+    let mut j = i + 1;
+    if j < n && s[j] == '\\' {
+        j += 2;
+        while j < n && s[j] != '\'' {
+            j += 1;
+        }
+        return (j + 1, line);
+    }
+    (j + 2, line)
+}
+
+const ALLOW_MARK: &str = "lint:allow(";
+
+/// Parse every `lint:allow(rule[, reason = "..."])` clause in a line
+/// comment.  A comment that carries the marker but no well-formed clause
+/// records a bare empty rule, which the analyzer reports as
+/// `allow-unknown-rule` — malformed escapes must not silently suppress.
+fn parse_allow(comment: &str, line: u32, allows: &mut Allows) {
+    if !comment.contains(ALLOW_MARK) {
+        return;
+    }
+    let cs: Vec<char> = comment.chars().collect();
+    let mark: Vec<char> = ALLOW_MARK.chars().collect();
+    let mut matched = false;
+    let mut pos = 0usize;
+    while let Some(start) = find_sub(&cs, &mark, pos) {
+        match parse_allow_clause(&cs, start + mark.len()) {
+            Some((rule, has_reason, end)) => {
+                matched = true;
+                allows.entry(line).or_default().push((rule, has_reason));
+                pos = end;
+            }
+            None => {
+                pos = start + 1;
+            }
+        }
+    }
+    if !matched {
+        allows.entry(line).or_default().push((String::new(), false));
+    }
+}
+
+fn find_sub(hay: &[char], needle: &[char], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    let mut i = from;
+    while i + needle.len() <= hay.len() {
+        if &hay[i..i + needle.len()] == needle {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn skip_ws(cs: &[char], mut k: usize) -> usize {
+    while k < cs.len() && cs[k].is_whitespace() {
+        k += 1;
+    }
+    k
+}
+
+fn is_rule_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+/// At the char just past `lint:allow(`.  Returns (rule, has_reason, end).
+fn parse_allow_clause(cs: &[char], k0: usize) -> Option<(String, bool, usize)> {
+    let n = cs.len();
+    let mut k = skip_ws(cs, k0);
+    let rule_start = k;
+    while k < n && is_rule_char(cs[k]) {
+        k += 1;
+    }
+    if k == rule_start {
+        return None;
+    }
+    let rule: String = cs[rule_start..k].iter().collect();
+    k = skip_ws(cs, k);
+    if k < n && cs[k] == ')' {
+        return Some((rule, false, k + 1));
+    }
+    if k >= n || cs[k] != ',' {
+        return None;
+    }
+    k = skip_ws(cs, k + 1);
+    let word: Vec<char> = "reason".chars().collect();
+    if k + word.len() > n || cs[k..k + word.len()] != word[..] {
+        return None;
+    }
+    k = skip_ws(cs, k + word.len());
+    if k >= n || cs[k] != '=' {
+        return None;
+    }
+    k = skip_ws(cs, k + 1);
+    if k >= n || cs[k] != '"' {
+        return None;
+    }
+    k += 1;
+    let reason_start = k;
+    while k < n && cs[k] != '"' {
+        k += 1;
+    }
+    if k >= n {
+        return None;
+    }
+    let reason: String = cs[reason_start..k].iter().collect();
+    k = skip_ws(cs, k + 1);
+    if k >= n || cs[k] != ')' {
+        return None;
+    }
+    Some((rule, !reason.trim().is_empty(), k + 1))
+}

@@ -1,0 +1,123 @@
+//! tony-lint: a control-plane static analyzer for the TonY tree.
+//!
+//! Four passes over a hand-rolled token scan (no syntax-tree dependency —
+//! the workspace builds offline):
+//!
+//! 1. **Lock order** — tracks guard live ranges, classifies every lock
+//!    site against `rust/lint/lock-order.toml`, builds the
+//!    acquired-while-held graph (including through the typed call graph),
+//!    and fails on reentrancy, cycles, or canonical-order violations.
+//! 2. **Blocking under lock** — flags sleeps, condvar/channel waits,
+//!    thread joins, TCP I/O and fsync while a guard is live, with witness
+//!    call chains for indirect blocking.
+//! 3. **Config registry** — every production `tony.*` literal must be
+//!    documented in docs/CONFIGURATION.md (and its feature doc) and read
+//!    through a tonyconf accessor; documented-but-unused keys are drift.
+//! 4. **Metric/sleep hygiene** — `tony_*` families must appear in
+//!    docs/METRICS.md; `std::thread::sleep` is banned everywhere.
+//!
+//! Deliberate violations carry `// lint:allow(rule, reason = "...")` on
+//! the offending line or the line above; a missing or empty reason is
+//! itself an error.  See docs/LINTS.md.
+
+pub mod analyzer;
+pub mod body;
+pub mod index;
+pub mod lexer;
+pub mod manifest;
+pub mod walker;
+
+use index::Finding;
+
+pub struct LintOutcome {
+    pub findings: Vec<Finding>,
+    pub errors: usize,
+    pub warnings: usize,
+    /// (rule, count), sorted by rule name.
+    pub counts: Vec<(String, usize)>,
+}
+
+impl LintOutcome {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn failed(&self, deny_warnings: bool) -> bool {
+        self.errors > 0 || (deny_warnings && self.warnings > 0)
+    }
+}
+
+/// Run the analyzer over `paths` (files or directories of `.rs` files).
+pub fn run(manifest_path: &str, docs_dir: &str, paths: &[String]) -> LintOutcome {
+    let (locks, rank) = if std::path::Path::new(manifest_path).exists() {
+        manifest::parse_manifest(manifest_path)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut az = analyzer::Analyzer::new(locks, rank, docs_dir);
+    let files = analyzer::collect_files(paths);
+    az.run(&files);
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    let mut counts: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    for f in &az.findings {
+        *counts.entry(f.rule.clone()).or_insert(0) += 1;
+        if f.severity() == "error" {
+            errors += 1;
+        } else {
+            warnings += 1;
+        }
+    }
+    LintOutcome {
+        findings: az.findings,
+        errors,
+        warnings,
+        counts: counts.into_iter().collect(),
+    }
+}
+
+/// CLI entry shared by the `tony-lint` binary and the `tony lint`
+/// subcommand.  Args: `[--deny warnings] [--manifest PATH] [--docs DIR]
+/// paths...`.  Returns the process exit code.
+pub fn cli_main(args: &[String]) -> i32 {
+    let mut deny = false;
+    let mut manifest = "rust/lint/lock-order.toml".to_string();
+    let mut docs = "docs".to_string();
+    let mut paths: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--deny" && i + 1 < args.len() && args[i + 1] == "warnings" {
+            deny = true;
+            i += 2;
+        } else if a == "--manifest" && i + 1 < args.len() {
+            manifest = args[i + 1].clone();
+            i += 2;
+        } else if a == "--docs" && i + 1 < args.len() {
+            docs = args[i + 1].clone();
+            i += 2;
+        } else {
+            paths.push(a.clone());
+            i += 1;
+        }
+    }
+    if paths.is_empty() {
+        // Default sweep, relative to the repo root.
+        for p in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+            paths.push(p.to_string());
+        }
+    }
+    let out = run(&manifest, &docs, &paths);
+    for f in &out.findings {
+        println!("{}", f.render());
+    }
+    println!("-- {} error(s), {} warning(s)", out.errors, out.warnings);
+    for (rule, n) in &out.counts {
+        println!("   {}: {}", rule, n);
+    }
+    if out.failed(deny) {
+        1
+    } else {
+        0
+    }
+}

@@ -1,0 +1,7 @@
+//! `cargo run -p tony-lint -- [--deny warnings] [--manifest PATH]
+//! [--docs DIR] paths...`
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(tony_lint::cli_main(&args));
+}

@@ -1,0 +1,124 @@
+//! Minimal TOML reader for `lock-order.toml`: `[[lock]]` tables with
+//! `name` / `match` keys and an `[order]` table with a `rank` array.
+//! No general TOML — just what the manifest needs, dependency-free.
+
+use std::fs;
+
+#[derive(Clone, Debug)]
+pub struct LockEnt {
+    pub name: String,
+    pub matches: Vec<String>,
+}
+
+pub fn parse_manifest(path: &str) -> (Vec<LockEnt>, Vec<String>) {
+    let mut locks: Vec<LockEnt> = Vec::new();
+    let mut rank: Vec<String> = Vec::new();
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return (locks, rank),
+    };
+    let mut section = "";
+    let mut pending_key: Option<String> = None;
+    let mut pending_items: Vec<String> = Vec::new();
+    for raw in text.split('\n') {
+        let stripped = strip_toml_comment(raw);
+        let ln = stripped.trim();
+        if ln.is_empty() {
+            continue;
+        }
+        if let Some(key) = pending_key.clone() {
+            pending_items.extend(toml_str_items(ln));
+            if ln.ends_with(']') {
+                finish_toml_array(&mut locks, &mut rank, section, &key, &pending_items);
+                pending_key = None;
+                pending_items = Vec::new();
+            }
+            continue;
+        }
+        if ln == "[[lock]]" {
+            locks.push(LockEnt { name: String::new(), matches: Vec::new() });
+            section = "lock";
+            continue;
+        }
+        if ln == "[order]" {
+            section = "order";
+            continue;
+        }
+        let eq = match ln.find('=') {
+            Some(e) => e,
+            None => continue,
+        };
+        let key = ln[..eq].trim().to_string();
+        let val = ln[eq + 1..].trim();
+        if val.starts_with('[') {
+            let items = toml_str_items(&val[1..]);
+            if val.ends_with(']') {
+                finish_toml_array(&mut locks, &mut rank, section, &key, &items);
+            } else {
+                pending_key = Some(key);
+                pending_items = items;
+            }
+        } else if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+            if section == "lock" && key == "name" {
+                if let Some(cur) = locks.last_mut() {
+                    cur.name = val[1..val.len() - 1].to_string();
+                }
+            }
+        }
+    }
+    (locks, rank)
+}
+
+fn strip_toml_comment(line: &str) -> String {
+    let mut out = String::new();
+    let mut in_str = false;
+    for ch in line.chars() {
+        if ch == '"' {
+            in_str = !in_str;
+        }
+        if ch == '#' && !in_str {
+            break;
+        }
+        out.push(ch);
+    }
+    out
+}
+
+/// Every `"..."` substring on the line, in order.
+fn toml_str_items(s: &str) -> Vec<String> {
+    let cs: Vec<char> = s.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < cs.len() {
+        if cs[i] == '"' {
+            let mut j = i + 1;
+            while j < cs.len() && cs[j] != '"' {
+                j += 1;
+            }
+            if j < cs.len() {
+                out.push(cs[i + 1..j].iter().collect());
+                i = j + 1;
+                continue;
+            }
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+fn finish_toml_array(
+    locks: &mut Vec<LockEnt>,
+    rank: &mut Vec<String>,
+    section: &str,
+    key: &str,
+    items: &[String],
+) {
+    if section == "lock" && key == "match" {
+        if let Some(cur) = locks.last_mut() {
+            cur.matches.extend(items.iter().cloned());
+        }
+    } else if section == "order" && key == "rank" {
+        rank.extend(items.iter().cloned());
+    }
+}

@@ -1,0 +1,472 @@
+//! Shared scope machinery plus pass 1 (`IndexWalker`), which builds the
+//! global symbol index: struct fields, type aliases, trait impls, statics,
+//! and a registry of every non-test function.
+
+use std::collections::HashMap;
+
+use crate::analyzer::Analyzer;
+use crate::index::{collect_type_idents, FnRec, Pair, Param};
+use crate::lexer::{Kind, Tok};
+
+pub fn is_kind(toks: &[Tok], i: usize, k: Kind) -> bool {
+    i < toks.len() && toks[i].kind == k
+}
+
+pub fn is_p(toks: &[Tok], i: usize, s: &str) -> bool {
+    i < toks.len() && toks[i].kind == Kind::Punct && toks[i].text == s
+}
+
+pub fn is_i(toks: &[Tok], i: usize, s: &str) -> bool {
+    i < toks.len() && toks[i].kind == Kind::Ident && toks[i].text == s
+}
+
+/// A live lock guard: named (`let g = m.lock()`) or a temporary.
+pub struct Guard {
+    pub binding: Option<String>,
+    pub lock_id: String,
+    pub temp: bool,
+}
+
+/// One brace scope: impl/fn attribution, guard set, and the local type
+/// environment (binding -> declared type-ident list).
+pub struct Scope {
+    pub impl_type: String,
+    pub fn_key: Option<String>,
+    pub is_test: bool,
+    /// Spawn-closure boundary: guards outside it belong to another thread.
+    pub barrier: bool,
+    pub guards: Vec<Guard>,
+    pub env: HashMap<String, Vec<String>>,
+    pub paren: u32,
+    pub stmt_kind: Option<String>,
+}
+
+impl Scope {
+    pub fn new(impl_type: String, fn_key: Option<String>, is_test: bool, barrier: bool) -> Scope {
+        Scope {
+            impl_type,
+            fn_key,
+            is_test,
+            barrier,
+            guards: Vec::new(),
+            env: HashMap::new(),
+            paren: 0,
+            stmt_kind: None,
+        }
+    }
+}
+
+/// `impl` only opens a header when the previous token could end an item.
+pub fn impl_header_position(toks: &[Tok], i: usize) -> bool {
+    if i == 0 {
+        return true;
+    }
+    let t = &toks[i - 1];
+    match t.kind {
+        Kind::Punct => matches!(t.text.as_str(), ";" | "{" | "}" | "]"),
+        Kind::Ident => matches!(t.text.as_str(), "pub" | "unsafe" | "default"),
+        _ => false,
+    }
+}
+
+pub fn item_position(toks: &[Tok], i: usize) -> bool {
+    if i == 0 {
+        return true;
+    }
+    let t = &toks[i - 1];
+    match t.kind {
+        Kind::Punct => matches!(t.text.as_str(), ";" | "{" | "}" | "]"),
+        Kind::Ident => t.text == "pub",
+        _ => false,
+    }
+}
+
+/// At an `impl` token: -> (self type name, trait name if `impl T for U`).
+pub fn parse_impl(toks: &[Tok], i: usize) -> (String, Option<String>) {
+    let n = toks.len();
+    let mut j = i + 1;
+    let mut depth = 0i32;
+    let mut last_ident: Option<String> = None;
+    let mut before_for: Option<String> = None;
+    let mut seen_for = false;
+    while j < n {
+        let t = &toks[j];
+        if t.kind == Kind::Punct && t.text == "<" {
+            depth += 1;
+        } else if t.kind == Kind::Punct && t.text == ">" {
+            depth = (depth - 1).max(0);
+        } else if t.kind == Kind::Punct && t.text == "{" && depth == 0 {
+            break;
+        } else if t.kind == Kind::Ident && depth == 0 {
+            if t.text == "for" {
+                seen_for = true;
+                before_for = last_ident.take();
+            } else if t.text == "where" {
+                break;
+            } else {
+                last_ident = Some(t.text.clone());
+            }
+        }
+        j += 1;
+    }
+    if seen_for {
+        return (last_ident.unwrap_or_default(), before_for);
+    }
+    (last_ident.unwrap_or_default(), None)
+}
+
+/// At a `fn` token: -> (bare name, line, params), or None when the next
+/// token is not the function name.
+pub fn parse_fn_sig(toks: &[Tok], i: usize) -> Option<(String, u32, Vec<Param>)> {
+    let n = toks.len();
+    if i + 1 >= n || toks[i + 1].kind != Kind::Ident {
+        return None;
+    }
+    let bare = toks[i + 1].text.clone();
+    let line = toks[i + 1].line;
+    let mut j = i + 2;
+    let mut depth = 0i32;
+    while j < n {
+        let t = &toks[j];
+        if t.kind == Kind::Punct && t.text == "<" {
+            depth += 1;
+        } else if t.kind == Kind::Punct && t.text == ">" {
+            depth = (depth - 1).max(0);
+        } else if t.kind == Kind::Punct && t.text == "(" && depth == 0 {
+            break;
+        } else if t.kind == Kind::Punct && (t.text == ";" || t.text == "{") {
+            return Some((bare, line, Vec::new()));
+        }
+        j += 1;
+    }
+    if j >= n {
+        return Some((bare, line, Vec::new()));
+    }
+    let (params, _end) = parse_params(toks, j);
+    Some((bare, line, params))
+}
+
+/// At the `(` of a param list: parse `[mut] name: Type` params.
+pub fn parse_params(toks: &[Tok], mut j: usize) -> (Vec<Param>, usize) {
+    let n = toks.len();
+    let mut depth = 1i32;
+    j += 1;
+    let mut segs: Vec<Vec<Pair>> = Vec::new();
+    let mut seg: Vec<Pair> = Vec::new();
+    while j < n && depth > 0 {
+        let t = &toks[j];
+        if t.kind == Kind::Punct && (t.text == "(" || t.text == "[" || t.text == "<") {
+            depth += 1;
+            seg.push((t.kind, t.text.clone()));
+        } else if t.kind == Kind::Punct && (t.text == ")" || t.text == "]" || t.text == ">") {
+            depth -= 1;
+            if depth == 0 {
+                if !seg.is_empty() {
+                    segs.push(seg);
+                    seg = Vec::new();
+                }
+                break;
+            }
+            seg.push((t.kind, t.text.clone()));
+        } else if t.kind == Kind::Punct && t.text == "," && depth == 1 {
+            segs.push(seg);
+            seg = Vec::new();
+        } else {
+            seg.push((t.kind, t.text.clone()));
+        }
+        j += 1;
+    }
+    let mut out: Vec<Param> = Vec::new();
+    for seg in &segs {
+        let mut k = 0usize;
+        if k < seg.len() && seg[k].0 == Kind::Ident && seg[k].1 == "mut" {
+            k += 1;
+        }
+        if k + 1 < seg.len()
+            && seg[k].0 == Kind::Ident
+            && seg[k + 1].0 == Kind::Punct
+            && seg[k + 1].1 == ":"
+        {
+            out.push((seg[k].1.clone(), collect_type_idents(&seg[k + 2..])));
+        }
+    }
+    (out, j + 1)
+}
+
+/// Pass 1: populate the symbol index.
+pub struct IndexWalker<'a> {
+    pub az: &'a mut Analyzer,
+    pub file: String,
+    pub toks: &'a [Tok],
+    pub scopes: Vec<Scope>,
+    pub pending_impl: Option<String>,
+    pub pending_fn: Option<(String, u32, Vec<Param>)>,
+    pub pending_cfg_test: bool,
+}
+
+impl<'a> IndexWalker<'a> {
+    pub fn new(az: &'a mut Analyzer, file: &str, toks: &'a [Tok], dir_test: bool) -> IndexWalker<'a> {
+        IndexWalker {
+            az,
+            file: file.to_string(),
+            toks,
+            scopes: vec![Scope::new(String::new(), None, dir_test, false)],
+            pending_impl: None,
+            pending_fn: None,
+            pending_cfg_test: false,
+        }
+    }
+
+    fn cur(&self) -> &Scope {
+        self.scopes.last().unwrap()
+    }
+
+    fn cur_mut(&mut self) -> &mut Scope {
+        self.scopes.last_mut().unwrap()
+    }
+
+    pub fn walk(&mut self) {
+        let n = self.toks.len();
+        let mut i = 0usize;
+        while i < n {
+            let kind = self.toks[i].kind;
+            if kind == Kind::Punct {
+                let text = self.toks[i].text.clone();
+                i = self.punct(i, &text);
+                continue;
+            }
+            if kind != Kind::Ident {
+                i += 1;
+                continue;
+            }
+            let text = self.toks[i].text.clone();
+            if text == "impl" && impl_header_position(self.toks, i) {
+                let (ty, trait_name) = parse_impl(self.toks, i);
+                self.pending_impl = Some(ty.clone());
+                if !ty.is_empty() {
+                    self.az.index.tree_types.insert(ty.clone());
+                }
+                if let Some(tr) = trait_name {
+                    self.az.index.traits.entry(tr).or_default().push(ty);
+                }
+                i += 1;
+                continue;
+            }
+            if text == "struct" && is_kind(self.toks, i + 1, Kind::Ident) {
+                i = self.parse_struct(i);
+                continue;
+            }
+            if text == "type" && item_position(self.toks, i) {
+                i = self.parse_alias(i);
+                continue;
+            }
+            if text == "static" || text == "const" {
+                i = self.parse_static(i);
+                continue;
+            }
+            if text == "fn" {
+                if let Some(sig) = parse_fn_sig(self.toks, i) {
+                    self.pending_fn = Some(sig);
+                }
+                i += 2;
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    fn parse_struct(&mut self, i: usize) -> usize {
+        let toks = self.toks;
+        let n = toks.len();
+        let name = toks[i + 1].text.clone();
+        self.az.index.tree_types.insert(name.clone());
+        let mut j = i + 2;
+        let mut depth = 0i32;
+        while j < n {
+            let t = &toks[j];
+            if t.kind == Kind::Punct && t.text == "<" {
+                depth += 1;
+            } else if t.kind == Kind::Punct && t.text == ">" {
+                depth = (depth - 1).max(0);
+            } else if t.kind == Kind::Punct && depth == 0 && (t.text == ";" || t.text == "(") {
+                return j; // tuple / unit struct: no named fields
+            } else if t.kind == Kind::Punct && depth == 0 && t.text == "{" {
+                break;
+            }
+            j += 1;
+        }
+        if j >= n {
+            return j;
+        }
+        // Named fields at brace depth 1: `name: Type,` entries.
+        let mut fields: HashMap<String, Vec<String>> = HashMap::new();
+        j += 1;
+        let mut depth = 1i32;
+        let mut field_name: Option<String> = None;
+        let mut tybuf: Vec<Pair> = Vec::new();
+        // 0 = expecting field name, 1 = expecting `:`, 2 = in type tokens.
+        let mut expecting = 0u8;
+        while j < n && depth > 0 {
+            let t = &toks[j];
+            if t.kind == Kind::Punct && matches!(t.text.as_str(), "{" | "(" | "[" | "<") {
+                depth += 1;
+                if expecting == 2 {
+                    tybuf.push((t.kind, t.text.clone()));
+                }
+                j += 1;
+                continue;
+            }
+            if t.kind == Kind::Punct && matches!(t.text.as_str(), "}" | ")" | "]" | ">") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+                if expecting == 2 {
+                    tybuf.push((t.kind, t.text.clone()));
+                }
+                j += 1;
+                continue;
+            }
+            if depth == 1 {
+                if t.kind == Kind::Punct && t.text == ":" && expecting == 1 {
+                    expecting = 2;
+                } else if t.kind == Kind::Punct && t.text == "," {
+                    if let Some(fname) = field_name.take() {
+                        if !tybuf.is_empty() {
+                            fields.insert(fname, collect_type_idents(&tybuf));
+                        }
+                    }
+                    tybuf = Vec::new();
+                    expecting = 0;
+                } else if expecting == 2 {
+                    tybuf.push((t.kind, t.text.clone()));
+                } else if t.kind == Kind::Ident && expecting == 0 && t.text != "pub" {
+                    field_name = Some(t.text.clone());
+                    expecting = 1;
+                }
+            } else if expecting == 2 {
+                tybuf.push((t.kind, t.text.clone()));
+            }
+            j += 1;
+        }
+        if let Some(fname) = field_name {
+            if !tybuf.is_empty() {
+                fields.insert(fname, collect_type_idents(&tybuf));
+            }
+        }
+        self.az.index.structs.insert(name, fields);
+        j
+    }
+
+    fn parse_alias(&mut self, i: usize) -> usize {
+        let toks = self.toks;
+        let n = toks.len();
+        if i + 1 >= n || toks[i + 1].kind != Kind::Ident {
+            return i + 1;
+        }
+        let name = toks[i + 1].text.clone();
+        let mut j = i + 2;
+        let mut tybuf: Vec<Pair> = Vec::new();
+        let mut seen_eq = false;
+        while j < n {
+            let t = &toks[j];
+            if t.kind == Kind::Punct && t.text == ";" {
+                break;
+            }
+            if seen_eq {
+                tybuf.push((t.kind, t.text.clone()));
+            }
+            if t.kind == Kind::Punct && t.text == "=" {
+                seen_eq = true;
+            }
+            j += 1;
+        }
+        if !tybuf.is_empty() {
+            self.az.index.aliases.insert(name, collect_type_idents(&tybuf));
+        }
+        j
+    }
+
+    fn parse_static(&mut self, i: usize) -> usize {
+        let toks = self.toks;
+        let n = toks.len();
+        if i + 2 >= n || toks[i + 1].kind != Kind::Ident || !is_p(toks, i + 2, ":") {
+            return i + 1;
+        }
+        let name = toks[i + 1].text.clone();
+        let mut j = i + 3;
+        let mut tybuf: Vec<Pair> = Vec::new();
+        while j < n {
+            let t = &toks[j];
+            if t.kind == Kind::Punct && (t.text == "=" || t.text == ";") {
+                break;
+            }
+            tybuf.push((t.kind, t.text.clone()));
+            j += 1;
+        }
+        if !tybuf.is_empty() {
+            self.az.index.statics.insert((self.file.clone(), name), collect_type_idents(&tybuf));
+        }
+        j
+    }
+
+    fn punct(&mut self, i: usize, text: &str) -> usize {
+        let toks = self.toks;
+        if text == "#" {
+            if is_p(toks, i + 1, "[")
+                && is_i(toks, i + 2, "cfg")
+                && is_p(toks, i + 3, "(")
+                && is_i(toks, i + 4, "test")
+                && is_p(toks, i + 5, ")")
+            {
+                self.pending_cfg_test = true;
+            }
+            return i + 1;
+        }
+        if text == ";" {
+            if self.cur().paren == 0 {
+                self.pending_fn = None; // trait method without a body
+            }
+            return i + 1;
+        }
+        if text == "(" || text == "[" {
+            self.cur_mut().paren += 1;
+            return i + 1;
+        }
+        if text == ")" || text == "]" {
+            let sc = self.cur_mut();
+            sc.paren = sc.paren.saturating_sub(1);
+            return i + 1;
+        }
+        if text == "{" {
+            let mut impl_type = self.cur().impl_type.clone();
+            let mut fn_key = self.cur().fn_key.clone();
+            let mut is_test = self.cur().is_test;
+            if self.pending_cfg_test {
+                is_test = true;
+                self.pending_cfg_test = false;
+            }
+            if let Some(ty) = self.pending_impl.take() {
+                impl_type = ty;
+            }
+            if let Some((bare, fl, params)) = self.pending_fn.take() {
+                let key = format!("{}:{}:{}", self.file, fl, bare);
+                fn_key = Some(key.clone());
+                if !is_test {
+                    let mut rec = FnRec::new(key, bare, impl_type.clone(), self.file.clone(), fl, is_test);
+                    rec.params = params;
+                    self.az.index.add_fn(rec);
+                }
+            }
+            self.scopes.push(Scope::new(impl_type, fn_key, is_test, false));
+            return i + 1;
+        }
+        if text == "}" {
+            if self.scopes.len() > 1 {
+                self.scopes.pop();
+            }
+            return i + 1;
+        }
+        i + 1
+    }
+}

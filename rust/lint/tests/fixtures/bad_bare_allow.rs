@@ -1,0 +1,13 @@
+//! Fixture: a `lint:allow` with no reason -> `allow-without-reason`
+//! (an error: waivers must say why), plus an allow naming a rule the
+//! analyzer does not know -> `allow-unknown-rule`.
+
+pub fn nap() {
+    // lint:allow(thread-sleep)
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}
+
+pub fn nap_again() {
+    // lint:allow(no-such-rule, reason = "fixture: the rule name is misspelled")
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}

@@ -1,0 +1,16 @@
+//! Fixture: TCP connect while a mutex guard is live ->
+//! `blocking-under-lock`.  Never compiled; analyzer input only.
+
+use std::sync::Mutex;
+
+pub struct Queue {
+    items: Mutex<Vec<u64>>,
+}
+
+impl Queue {
+    pub fn drain_slowly(&self) {
+        let q = self.items.lock().unwrap();
+        let _probe = std::net::TcpStream::connect("127.0.0.1:9000");
+        drop(q);
+    }
+}

@@ -1,0 +1,24 @@
+//! Fixture: two locks acquired in both orders -> `lock-cycle` (and a
+//! `lock-order` rank violation on the back edge).  Never compiled; this
+//! file is input data for the analyzer tests.
+
+use std::sync::Mutex;
+
+pub struct State {
+    alpha: Mutex<u64>,
+    beta: Mutex<u64>,
+}
+
+impl State {
+    pub fn forward(&self) -> u64 {
+        let a = self.alpha.lock().unwrap();
+        let b = self.beta.lock().unwrap();
+        *a + *b
+    }
+
+    pub fn backward(&self) -> u64 {
+        let b = self.beta.lock().unwrap();
+        let a = self.alpha.lock().unwrap();
+        *b - *a
+    }
+}

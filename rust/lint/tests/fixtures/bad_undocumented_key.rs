@@ -1,0 +1,11 @@
+//! Fixture: a `tony.*` config literal that is absent from the fixture
+//! docs table -> `config-undocumented`.  A second read bypasses the
+//! tonyconf accessors -> `config-outside-conf`.
+
+pub fn read_timeout(conf: &Configuration) -> u64 {
+    conf.get_u64("tony.fixture.bogus-timeout-ms", 30_000)
+}
+
+pub fn read_raw(env: &Env) -> Option<String> {
+    env.lookup("tony.fixture.documented-key")
+}

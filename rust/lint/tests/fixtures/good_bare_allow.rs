@@ -1,0 +1,8 @@
+//! Fixture: the annotated-good twin of bad_bare_allow.rs — the waiver
+//! names a real rule and carries a non-empty reason, so the sleep on
+//! the next line is suppressed and the allow itself is hygienic.
+
+pub fn nap_with_cause() {
+    // lint:allow(thread-sleep, reason = "fixture: demonstrates the documented escape hatch")
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}

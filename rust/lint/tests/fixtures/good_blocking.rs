@@ -1,0 +1,27 @@
+//! Fixture: the annotated-good twin of bad_blocking.rs.  One variant
+//! releases the guard before the blocking call; the other keeps the
+//! violation but documents it with a reasoned `lint:allow`, which is
+//! the sanctioned escape hatch.
+
+use std::sync::Mutex;
+
+pub struct Queue {
+    items: Mutex<Vec<u64>>,
+}
+
+impl Queue {
+    pub fn drain_politely(&self) {
+        let q = self.items.lock().unwrap();
+        let target = q.len();
+        drop(q);
+        let _probe = std::net::TcpStream::connect("127.0.0.1:9000");
+        let _ = target;
+    }
+
+    pub fn drain_with_waiver(&self) {
+        let q = self.items.lock().unwrap();
+        // lint:allow(blocking-under-lock, reason = "fixture: demonstrates a reasoned waiver; the probe is bounded")
+        let _probe = std::net::TcpStream::connect("127.0.0.1:9000");
+        drop(q);
+    }
+}

@@ -1,0 +1,24 @@
+//! Fixture: the annotated-good twin of bad_lock_cycle.rs — both paths
+//! take `alpha` before `beta`, matching the manifest rank, so the
+//! acquired-while-held graph is acyclic and ordered.
+
+use std::sync::Mutex;
+
+pub struct State {
+    alpha: Mutex<u64>,
+    beta: Mutex<u64>,
+}
+
+impl State {
+    pub fn forward(&self) -> u64 {
+        let a = self.alpha.lock().unwrap();
+        let b = self.beta.lock().unwrap();
+        *a + *b
+    }
+
+    pub fn also_forward(&self) -> u64 {
+        let a = self.alpha.lock().unwrap();
+        let b = self.beta.lock().unwrap();
+        *a - *b
+    }
+}

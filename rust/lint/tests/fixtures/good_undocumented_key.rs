@@ -1,0 +1,7 @@
+//! Fixture: the annotated-good twin of bad_undocumented_key.rs — the
+//! key is listed in fixtures/docs/CONFIGURATION.md and is read through
+//! a tonyconf accessor.
+
+pub fn read_timeout(conf: &Configuration) -> u64 {
+    conf.get_u64("tony.fixture.documented-key", 30_000)
+}

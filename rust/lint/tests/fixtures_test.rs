@@ -1,0 +1,125 @@
+//! Fixture-corpus tests: each seeded violation under `tests/fixtures/`
+//! must fire its rule, and the annotated-good twins must lint clean.
+//!
+//! Cargo runs integration tests with the package root (`rust/lint`) as
+//! the working directory, so all paths here are relative to it.
+
+const MANIFEST: &str = "tests/fixtures/lock-order.toml";
+const DOCS: &str = "tests/fixtures/docs";
+
+fn lint(files: &[&str]) -> tony_lint::LintOutcome {
+    let paths: Vec<String> = files
+        .iter()
+        .map(|f| format!("tests/fixtures/{}", f))
+        .collect();
+    tony_lint::run(MANIFEST, DOCS, &paths)
+}
+
+fn rules(out: &tony_lint::LintOutcome) -> Vec<String> {
+    out.findings.iter().map(|f| f.rule.clone()).collect()
+}
+
+#[test]
+fn bad_lock_cycle_fires() {
+    let out = lint(&["bad_lock_cycle.rs"]);
+    let rs = rules(&out);
+    assert!(
+        rs.iter().any(|r| r == "lock-cycle"),
+        "expected lock-cycle, got: {:?}",
+        rs
+    );
+    assert!(
+        rs.iter().any(|r| r == "lock-order"),
+        "the alpha-after-beta edge must also violate the manifest rank, got: {:?}",
+        rs
+    );
+    assert!(out.errors > 0, "lock-cycle is an error");
+}
+
+#[test]
+fn bad_blocking_fires() {
+    let out = lint(&["bad_blocking.rs"]);
+    let blocking: Vec<&tony_lint::index::Finding> = out
+        .findings
+        .iter()
+        .filter(|f| f.rule == "blocking-under-lock")
+        .collect();
+    assert!(
+        !blocking.is_empty(),
+        "expected blocking-under-lock, got: {:?}",
+        rules(&out)
+    );
+    // The message names both the blocking call and the held lock.
+    assert!(blocking[0].msg.contains("connect"), "msg: {}", blocking[0].msg);
+    assert!(
+        blocking[0].msg.contains("queue-items"),
+        "held lock must be attributed by manifest name, msg: {}",
+        blocking[0].msg
+    );
+}
+
+#[test]
+fn bad_undocumented_key_fires() {
+    let out = lint(&["bad_undocumented_key.rs"]);
+    let rs = rules(&out);
+    assert!(
+        rs.iter().any(|r| r == "config-undocumented"),
+        "expected config-undocumented, got: {:?}",
+        rs
+    );
+    assert!(
+        rs.iter().any(|r| r == "config-outside-conf"),
+        "the env.lookup() read must flag config-outside-conf, got: {:?}",
+        rs
+    );
+}
+
+#[test]
+fn bad_bare_allow_fires() {
+    let out = lint(&["bad_bare_allow.rs"]);
+    let rs = rules(&out);
+    assert!(
+        rs.iter().any(|r| r == "allow-without-reason"),
+        "expected allow-without-reason, got: {:?}",
+        rs
+    );
+    assert!(
+        rs.iter().any(|r| r == "allow-unknown-rule"),
+        "expected allow-unknown-rule for the misspelled rule, got: {:?}",
+        rs
+    );
+    assert!(out.errors >= 2, "allow hygiene violations are errors");
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    // Linted together so the documented fixture key is also *used*,
+    // keeping config-stale-doc quiet — mirroring how the real tree is
+    // linted as one sweep.
+    let out = lint(&[
+        "good_lock_cycle.rs",
+        "good_blocking.rs",
+        "good_undocumented_key.rs",
+        "good_bare_allow.rs",
+    ]);
+    assert!(
+        out.clean(),
+        "good fixtures must lint clean, got: {:?}",
+        out.findings.iter().map(|f| f.render()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn exit_code_contract() {
+    // The bad corpus fails under --deny warnings; the good corpus passes.
+    let bad = lint(&["bad_lock_cycle.rs"]);
+    assert!(bad.failed(true));
+    assert!(bad.failed(false), "errors fail even without --deny");
+    let good = lint(&[
+        "good_lock_cycle.rs",
+        "good_blocking.rs",
+        "good_undocumented_key.rs",
+        "good_bare_allow.rs",
+    ]);
+    assert!(!good.failed(true));
+}

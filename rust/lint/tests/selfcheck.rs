@@ -1,0 +1,29 @@
+//! Self-check: the real TonY tree must lint clean with the real lock
+//! manifest and the real docs registry.  This is the same sweep
+//! scripts/ci.sh runs (`cargo run -p tony-lint -- --deny warnings ...`),
+//! expressed as a test so `cargo test` alone catches drift.
+//!
+//! Cargo runs integration tests with `rust/lint` as the working
+//! directory; the tree paths below are relative to it.  The `tests/` and
+//! `benches/` trees get the relaxed test-code scope (no lock/blocking
+//! analysis), but allow hygiene and the sleep ban still apply there.
+
+#[test]
+fn real_tree_lints_clean() {
+    let paths: Vec<String> = ["../src", "../benches", "../tests", "../../examples"]
+        .iter()
+        .map(|p| p.to_string())
+        .collect();
+    let out = tony_lint::run("lock-order.toml", "../../docs", &paths);
+    assert!(
+        out.clean(),
+        "the tree must carry zero findings; found {} error(s), {} warning(s):\n{}",
+        out.errors,
+        out.warnings,
+        out.findings
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -162,6 +162,7 @@ impl CheckpointStore {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating {}", self.dir.display()))?;
         let final_path = self.path_for(ckpt.step);
+        // lint:allow(config-undocumented, reason = "atomic-write temp suffix, not a config key") lint:allow(config-outside-conf, reason = "ditto")
         let tmp = final_path.with_extension("tony.tmp");
         std::fs::write(&tmp, ckpt.encode())?;
         std::fs::rename(&tmp, &final_path)?;

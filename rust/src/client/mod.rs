@@ -234,6 +234,7 @@ impl TonyClient {
             .staging_root
             .join(format!("{}-{}", spec.name, crate::util::ids::next_seq()));
         std::fs::create_dir_all(&dir)?;
+        // lint:allow(config-outside-conf, reason = "tony.xml is the staged conf FILE name (paper idiom), not a config key")
         std::fs::write(dir.join("tony.xml"), conf.to_xml())?;
         std::fs::write(
             dir.join("MANIFEST"),

@@ -166,11 +166,9 @@ impl RpcHandler for PsHandler {
                             req.chunk, req.min_version
                         ));
                     }
-                    let (guard, _) = self
-                        .shard
-                        .cond
-                        .wait_timeout(chunks, (deadline - now).min(Duration::from_millis(100)))
-                        .unwrap();
+                    let nap = (deadline - now).min(Duration::from_millis(100));
+                    // lint:allow(blocking-under-lock, reason = "Condvar::wait_timeout atomically releases the chunk guard while parked")
+                    let (guard, _) = self.shard.cond.wait_timeout(chunks, nap).unwrap();
                     chunks = guard;
                 }
             }
@@ -187,6 +185,7 @@ impl RpcHandler for PsHandler {
                     .get_mut(&req.chunk)
                     .ok_or_else(|| format!("chunk {} not initialized", req.chunk))?;
                 if req.mode == MODE_ASYNC {
+                    // lint:allow(blocking-under-lock, reason = "Adam kernel runs with the chunk's params moved out; readers must not observe the emptied chunk")
                     self.apply_update(state, &req.grads, 1.0, req.lr)?;
                     let version = state.version;
                     self.shard.cond.notify_all();
@@ -225,6 +224,7 @@ impl RpcHandler for PsHandler {
                     if ready {
                         let (_, acc, who) = state.pending.take().unwrap();
                         let scale = 1.0 / who.len() as f32;
+                        // lint:allow(blocking-under-lock, reason = "Adam kernel runs with the chunk's params moved out; readers must not observe the emptied chunk")
                         self.apply_update(state, &acc, scale, req.lr)?;
                         self.shard.cond.notify_all();
                     }

@@ -260,13 +260,13 @@ fn clip_grads(grads: &mut [f32], max_norm: f64) {
 fn reconfig_pending(ctx: &WorkerContext) -> bool {
     ctx.reconfig
         .as_ref()
-        .map(|c| c.lock().unwrap().is_some())
+        .map(|cell| cell.lock().unwrap().is_some())
         .unwrap_or(false)
 }
 
 /// Drain the pending patched spec, if any.
 fn take_reconfig(ctx: &WorkerContext) -> Option<ClusterSpec> {
-    ctx.reconfig.as_ref().and_then(|c| c.lock().unwrap().take())
+    ctx.reconfig.as_ref().and_then(|cell| cell.lock().unwrap().take())
 }
 
 /// A PS interaction that may be interrupted by a pending reconfiguration.

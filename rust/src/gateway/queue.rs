@@ -106,6 +106,7 @@ impl PendingQueue {
             if now >= deadline {
                 return None;
             }
+            // lint:allow(blocking-under-lock, reason = "Condvar::wait_timeout atomically releases the queue guard while parked")
             let (guard, _res) = self.cv.wait_timeout(inner, deadline - now).unwrap();
             inner = guard;
         }
@@ -126,6 +127,7 @@ impl PendingQueue {
             if inner.closed {
                 return None;
             }
+            // lint:allow(blocking-under-lock, reason = "Condvar::wait atomically releases the queue guard while parked")
             inner = self.cv.wait(inner).unwrap();
         }
     }

@@ -15,6 +15,7 @@
 //!             [--reservation-limit 2]
 //! tony demo   [--artifacts artifacts/tiny] [--steps 10]
 //! tony trace  <job-id> --gateway 127.0.0.1:8080   (or <app-id> from local history)
+//! tony lint   [paths...] [--deny warnings]        (control-plane static analysis)
 //! tony history
 //! tony version
 //! ```
@@ -69,6 +70,8 @@ fn usage() -> ! {
          [--reservation-limit 2]\n  \
          tony demo [--artifacts artifacts/tiny] [--steps 10]\n  \
          tony trace <job-id> --gateway <host:port>  (or <app-id> from local history)\n  \
+         tony lint [paths...] [--deny warnings] [--manifest rust/lint/lock-order.toml] \
+         [--docs docs]\n  \
          tony history\n  tony version"
     );
     std::process::exit(2);
@@ -118,11 +121,11 @@ fn boot_cluster(flags: &BTreeMap<String, String>) -> Arc<ResourceManager> {
     // (docs/SCHEDULING.md); anything unset keeps the built-in default.
     let mut site = Configuration::new();
     for (flag, key) in [
-        ("gang-mode", "tony.scheduler.gang-mode"),
-        ("reservation-limit", "tony.scheduler.reservation-limit"),
-        ("preemption", "tony.scheduler.preemption.enable"),
-        ("preemption-grace-ms", "tony.scheduler.preemption.grace-ms"),
-        ("preemption-max-victims", "tony.scheduler.preemption.max-victims-per-round"),
+        ("gang-mode", "tony.scheduler.gang-mode"), // lint:allow(config-outside-conf, reason = "flag table; every key is fed to site.set below")
+        ("reservation-limit", "tony.scheduler.reservation-limit"), // lint:allow(config-outside-conf, reason = "flag table; every key is fed to site.set below")
+        ("preemption", "tony.scheduler.preemption.enable"), // lint:allow(config-outside-conf, reason = "flag table; every key is fed to site.set below")
+        ("preemption-grace-ms", "tony.scheduler.preemption.grace-ms"), // lint:allow(config-outside-conf, reason = "flag table; every key is fed to site.set below")
+        ("preemption-max-victims", "tony.scheduler.preemption.max-victims-per-round"), // lint:allow(config-outside-conf, reason = "flag table; every key is fed to site.set below")
     ] {
         if let Some(v) = flags.get(flag) {
             site.set(key, v.as_str());
@@ -279,6 +282,31 @@ fn main() {
         "version" => {
             println!("tony 0.1.0 (OpML'19 reproduction; rust+jax+pallas, AOT via XLA/PJRT)");
             0
+        }
+        "lint" => {
+            // Control-plane static analysis (docs/LINTS.md): lock order,
+            // blocking-under-lock, config/metric drift, sleep hygiene.
+            let mut largs: Vec<String> = Vec::new();
+            if flags.get("deny").map(String::as_str) == Some("warnings") {
+                largs.push("--deny".to_string());
+                largs.push("warnings".to_string());
+            }
+            if let Some(m) = flags.get("manifest") {
+                largs.push("--manifest".to_string());
+                largs.push(m.clone());
+            }
+            if let Some(d) = flags.get("docs") {
+                largs.push("--docs".to_string());
+                largs.push(d.clone());
+            }
+            if pos.is_empty() {
+                for p in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+                    largs.push(p.to_string());
+                }
+            } else {
+                largs.extend(pos.iter().cloned());
+            }
+            tony_lint::cli_main(&largs)
         }
         "submit" => {
             let Some(conf_path) = flags.get("conf") else { usage() };

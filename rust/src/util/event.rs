@@ -153,6 +153,7 @@ impl WakeupBus {
                 return 0;
             }
             let nap = Duration::from_millis(deadline_ms - now).min(MAX_NAP);
+            // lint:allow(blocking-under-lock, reason = "Condvar::wait_timeout atomically releases the bus guard while parked")
             let (ng, _) = self.cv.wait_timeout(g, nap).unwrap();
             g = ng;
         }
@@ -173,6 +174,7 @@ impl WakeupBus {
                 return g.seq;
             }
             let nap = Duration::from_millis(deadline_ms - now).min(MAX_NAP);
+            // lint:allow(blocking-under-lock, reason = "Condvar::wait_timeout atomically releases the bus guard while parked")
             let (ng, _) = self.cv.wait_timeout(g, nap).unwrap();
             g = ng;
         }

@@ -70,17 +70,17 @@ fn start() -> Instant {
 /// the process started at.  When the registered clock is dropped the
 /// logger falls back to the `Instant` baseline.
 pub fn set_clock(clock: &Arc<dyn Clock>) {
-    let m = CLOCK.get_or_init(|| {
+    let ck = CLOCK.get_or_init(|| {
         let none: Weak<dyn Clock> = Weak::<super::clock::SystemClock>::new();
         Mutex::new(none)
     });
-    *m.lock().unwrap() = Arc::downgrade(clock);
+    *ck.lock().unwrap() = Arc::downgrade(clock);
 }
 
 fn now_secs() -> f64 {
     CLOCK
         .get()
-        .and_then(|m| m.lock().unwrap().upgrade())
+        .and_then(|ck| ck.lock().unwrap().upgrade())
         .map(|c| c.now_ms() as f64 / 1000.0)
         .unwrap_or_else(|| start().elapsed().as_secs_f64())
 }
@@ -115,14 +115,14 @@ pub fn enabled(l: Level) -> bool {
 
 /// Begin capturing log lines (in addition to stderr). Tests only.
 pub fn capture_start() {
-    let m = CAPTURE.get_or_init(|| Mutex::new(None));
-    *m.lock().unwrap() = Some(Vec::new());
+    let cap = CAPTURE.get_or_init(|| Mutex::new(None));
+    *cap.lock().unwrap() = Some(Vec::new());
 }
 
 /// Stop capturing and return the captured lines.
 pub fn capture_take() -> Vec<String> {
-    let m = CAPTURE.get_or_init(|| Mutex::new(None));
-    m.lock().unwrap().take().unwrap_or_default()
+    let cap = CAPTURE.get_or_init(|| Mutex::new(None));
+    cap.lock().unwrap().take().unwrap_or_default()
 }
 
 pub fn log(l: Level, component: &str, msg: std::fmt::Arguments<'_>) {
@@ -130,8 +130,8 @@ pub fn log(l: Level, component: &str, msg: std::fmt::Arguments<'_>) {
         return;
     }
     let line = format!("[{:>9.3}s {:5} {}] {}", now_secs(), l.as_str(), component, msg);
-    if let Some(m) = CAPTURE.get() {
-        if let Some(buf) = m.lock().unwrap().as_mut() {
+    if let Some(cap) = CAPTURE.get() {
+        if let Some(buf) = cap.lock().unwrap().as_mut() {
             if buf.len() >= CAPTURE_CAP {
                 buf.remove(0);
             }

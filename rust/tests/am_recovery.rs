@@ -41,7 +41,7 @@ fn wait_until(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
         if f() {
             return true;
         }
-        std::thread::sleep(Duration::from_millis(5));
+        tony::util::clock::real_sleep(Duration::from_millis(5));
     }
     false
 }
@@ -306,7 +306,7 @@ fn released_unstarted_grant_returns_node_capacity() {
                 // Park: the test drives the AM protocol from outside.
                 let _ = started_tx.send(());
                 while !cctx.killed() {
-                    std::thread::sleep(Duration::from_millis(5));
+                    tony::util::clock::real_sleep(Duration::from_millis(5));
                 }
                 0
             }),
@@ -326,7 +326,7 @@ fn released_unstarted_grant_returns_node_capacity() {
         let resp = rm.allocate(id, if asked { &[] } else { &asks }, &[]).unwrap();
         asked = true;
         grant = resp.allocated.into_iter().next();
-        std::thread::sleep(Duration::from_millis(5));
+        tony::util::clock::real_sleep(Duration::from_millis(5));
     }
     let grant = grant.expect("grant arrived");
 

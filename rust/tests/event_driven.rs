@@ -31,7 +31,7 @@ fn spawn_clock_driver(clock: Arc<ManualClock>, done: Arc<AtomicBool>) -> std::th
     std::thread::spawn(move || {
         while !done.load(Ordering::Relaxed) {
             clock.advance_ms(5);
-            std::thread::sleep(Duration::from_micros(500));
+            tony::util::clock::real_sleep(Duration::from_micros(500));
         }
     })
 }

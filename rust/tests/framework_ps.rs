@@ -160,7 +160,7 @@ fn pull_timeout_and_shutdown_wakeups() {
         let req = PullRequest { chunk: 0, min_version: 0, timeout_ms: 30_000 };
         cli2.call(PS_PULL, &req.to_bytes())
     });
-    std::thread::sleep(std::time::Duration::from_millis(50));
+    tony::util::clock::real_sleep(std::time::Duration::from_millis(50));
     shard.ps[0].shutdown();
     let out = waiter.join().unwrap();
     assert!(out.is_err(), "shutdown must fail parked pulls");

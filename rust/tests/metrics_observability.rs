@@ -66,7 +66,7 @@ fn gateway_metrics_aggregate_across_concurrent_jobs() {
             Instant::now() < deadline,
             "both jobs never appeared in /metrics:\n{body}"
         );
-        std::thread::sleep(Duration::from_millis(50));
+        tony::util::clock::real_sleep(Duration::from_millis(50));
     };
     // Per-task gauges carry job/id/user/queue labels per tenant job.
     assert!(

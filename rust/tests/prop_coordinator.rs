@@ -185,7 +185,7 @@ fn rm_conserves_capacity_across_random_app_mixes() {
                     prop_assert!(free == cap, "node {id} leaked: {free} != {cap}");
                 }
             }
-            std::thread::sleep(Duration::from_millis(10));
+            tony::util::clock::real_sleep(Duration::from_millis(10));
         }
         Ok(())
     });

@@ -101,7 +101,7 @@ fn gateway_quota_terminal_and_capacity_invariants() {
                 );
             }
             if g.chance(0.3) {
-                std::thread::sleep(Duration::from_millis(g.range(0, 30)));
+                tony::util::clock::real_sleep(Duration::from_millis(g.range(0, 30)));
             }
         }
 
@@ -109,7 +109,7 @@ fn gateway_quota_terminal_and_capacity_invariants() {
         let mut killed: HashSet<u64> = HashSet::new();
         for id in &accepted {
             if g.chance(0.25) {
-                std::thread::sleep(Duration::from_millis(g.range(0, 50)));
+                tony::util::clock::real_sleep(Duration::from_millis(g.range(0, 50)));
                 if gw.kill(*id).is_some() {
                     killed.insert(*id);
                 }

@@ -41,7 +41,7 @@ fn simple_am(
                             if ctx.killed() {
                                 return 1;
                             }
-                            std::thread::sleep(Duration::from_millis(2));
+                            tony::util::clock::real_sleep(Duration::from_millis(2));
                         }
                         0
                     }),
@@ -49,7 +49,7 @@ fn simple_am(
                 .unwrap();
             }
             done += resp.completed.iter().filter(|s| s.exit.is_success()).count() as u32;
-            std::thread::sleep(Duration::from_millis(5));
+            tony::util::clock::real_sleep(Duration::from_millis(5));
         }
         rm.finish_application(app, true, "done");
         0
@@ -110,7 +110,7 @@ fn queue_isolation_under_pressure() {
             greedy,
         )
         .unwrap();
-    std::thread::sleep(Duration::from_millis(30));
+    tony::util::clock::real_sleep(Duration::from_millis(30));
     let prod = simple_am(rm.clone(), 2, 8, Resource::new(1024, 1, 0), 80);
     let prod_id = rm
         .submit_application(
@@ -138,7 +138,7 @@ fn queue_isolation_under_pressure() {
             prod_done = true;
             break;
         }
-        std::thread::sleep(Duration::from_millis(10));
+        tony::util::clock::real_sleep(Duration::from_millis(10));
     }
     assert!(prod_done, "prod app starved by greedy adhoc app");
     assert_eq!(rm.app_report(prod_id).unwrap().state, AppState::Finished);
@@ -161,7 +161,7 @@ fn client_kill_releases_everything() {
         )
         .unwrap();
     // Let it get some containers running.
-    std::thread::sleep(Duration::from_millis(200));
+    tony::util::clock::real_sleep(Duration::from_millis(200));
     rm.kill_application(id);
     assert_eq!(rm.app_report(id).unwrap().state, AppState::Killed);
     // All containers die and capacity returns.
@@ -172,6 +172,6 @@ fn client_kill_releases_everything() {
             break;
         }
         assert!(std::time::Instant::now() < deadline, "capacity not returned after kill");
-        std::thread::sleep(Duration::from_millis(20));
+        tony::util::clock::real_sleep(Duration::from_millis(20));
     }
 }
