@@ -13,11 +13,20 @@
 //! the end-to-end number down by lifecycle stage
 //! (queued/scheduling/launching/…), averaged across the level's jobs —
 //! so a throughput regression names the stage that slowed down.
+//!
+//! A third table (G3) isolates the **WAL cost on the submit path**:
+//! per-submission latency with the WAL off, on with fsync (group
+//! commit), and on without fsync — the no-fsync row is the pure
+//! staging overhead the <10% p50 budget applies to; the fsync row is
+//! dominated by the disk sync itself.  See docs/DURABILITY.md.
+//!
+//! `TONY_BENCH_SMOKE=1` shrinks the levels and submission counts so CI
+//! can run the bench as a regression gate.
 
 use std::time::{Duration, Instant};
 
 use tony::bench::{f1, f2, n, Table};
-use tony::gateway::{api, Gateway, GatewayConf, JobState};
+use tony::gateway::{api, Gateway, GatewayConf, JobState, SubmitOutcome};
 use tony::json::Json;
 use tony::portal::http_request;
 use tony::tonyconf::JobConfBuilder;
@@ -143,7 +152,74 @@ fn run_level(concurrency: usize) -> LevelResult {
     }
 }
 
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Per-submission latency through `submit_conf` (admission + table
+/// insert + WAL append when enabled).  One worker, a deep queue, and
+/// kill-from-queue afterwards keep job *execution* out of the number.
+/// `fsync: None` = WAL off; `Some(true/false)` = WAL on with/without
+/// fsync-before-ack.
+fn run_wal_mode(mode: &str, fsync: Option<bool>, submissions: usize) -> (f64, f64) {
+    let base =
+        std::env::temp_dir().join(format!("tony-bench-gwwal-{}-{mode}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let rm = ResourceManager::start_uniform(4, Resource::new(16384, 64, 0));
+    let mut conf = GatewayConf::new(base.join("artifacts"));
+    conf.history_dir = base.join("history");
+    conf.workers = 1;
+    conf.queue_depth = submissions + 8;
+    conf.quotas.max_active_per_user = 1_000_000;
+    if let Some(fsync) = fsync {
+        let mut site = Configuration::new();
+        site.set("tony.wal.enable", "true");
+        site.set("tony.wal.dir", base.join("wal").to_string_lossy().into_owned());
+        // Count-triggered snapshots off so the rows measure append cost
+        // alone, not an occasional compaction.
+        site.set("tony.wal.snapshot-every", "0");
+        site.set("tony.wal.fsync", if fsync { "true" } else { "false" });
+        conf.apply_site_conf(&site);
+    }
+    let gw = Gateway::start(rm, conf).expect("gateway start");
+
+    let mut lat_us = Vec::with_capacity(submissions);
+    let mut ids = Vec::with_capacity(submissions);
+    for i in 0..submissions {
+        let job = job_conf(&format!("w{i}"), 1);
+        let t = Instant::now();
+        match gw.submit_conf("bench", 1, job) {
+            SubmitOutcome::Accepted { id } => {
+                lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                ids.push(id);
+            }
+            other => panic!("submission {i} rejected in {mode} mode: {other:?}"),
+        }
+    }
+    // Tear down without executing the backlog.
+    for id in &ids {
+        let _ = gw.kill(*id);
+    }
+    assert!(
+        gw.wait_idle(Duration::from_secs(120)),
+        "wal bench gateway never drained ({mode})"
+    );
+    for (_, free, cap) in gw.rm().node_usage() {
+        assert_eq!(free, cap, "capacity leaked in wal bench ({mode})");
+    }
+    gw.shutdown();
+    let _ = std::fs::remove_dir_all(&base);
+
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (percentile(&lat_us, 0.50), percentile(&lat_us, 0.90))
+}
+
 fn main() {
+    let smoke = std::env::var("TONY_BENCH_SMOKE").is_ok();
     let mut table = Table::new(&[
         "concurrency",
         "jobs",
@@ -155,7 +231,8 @@ fn main() {
         "in-history",
     ]);
     let mut results = Vec::new();
-    for concurrency in [1usize, 8, 32] {
+    let levels: &[usize] = if smoke { &[1, 4] } else { &[1, 8, 32] };
+    for &concurrency in levels {
         let r = run_level(concurrency);
         assert_eq!(r.finished, r.jobs, "all jobs must finish at concurrency {concurrency}");
         assert!(
@@ -195,8 +272,39 @@ fn main() {
         }
     }
     stages.print("G2: per-stage lifecycle breakdown (from replayed job traces)");
+    if !smoke {
+        println!(
+            "\n(64 jobs at concurrency 32 ran on one shared 16-node simulated cluster; \
+             quotas disabled so the table isolates orchestration throughput.)"
+        );
+    }
+
+    // G3: submit-path cost of the durability WAL (docs/DURABILITY.md).
+    let wal_subs = if smoke { 24 } else { 192 };
+    let (off50, off90) = run_wal_mode("off", None, wal_subs);
+    let (stage50, stage90) = run_wal_mode("on-nofsync", Some(false), wal_subs);
+    let (sync50, sync90) = run_wal_mode("on-fsync", Some(true), wal_subs);
+    let overhead = |p50: f64| (p50 / off50.max(1e-9) - 1.0) * 100.0;
+    let mut wal_table = Table::new(&["wal", "submissions", "p50-us", "p90-us", "p50 vs off"]);
+    wal_table.row(&[n("off"), n(wal_subs), f1(off50), f1(off90), n("—")]);
+    wal_table.row(&[
+        n("on (no fsync)"),
+        n(wal_subs),
+        f1(stage50),
+        f1(stage90),
+        format!("{:+.1}%", overhead(stage50)),
+    ]);
+    wal_table.row(&[
+        n("on (fsync)"),
+        n(wal_subs),
+        f1(sync50),
+        f1(sync90),
+        format!("{:+.1}%", overhead(sync50)),
+    ]);
+    wal_table.print("G3: WAL overhead on the submit path (per-submission latency)");
     println!(
-        "\n(64 jobs at concurrency 32 ran on one shared 16-node simulated cluster; \
-         quotas disabled so the table isolates orchestration throughput.)"
+        "\n(budget: no-fsync staging overhead within +10% of the WAL-off p50; \
+         the fsync row pays the disk sync group commit amortizes across \
+         concurrent submitters — see docs/DURABILITY.md)"
     );
 }

@@ -15,6 +15,78 @@ use crate::util::SplitMix64;
 use crate::yarn::ResourceManager;
 use crate::{tinfo, twarn};
 
+/// Marker carried by every panic raised from an injected crash point so
+/// test harnesses (and panic hooks) can tell a simulated process death
+/// from a real bug.
+pub const CRASH_PANIC: &str = "tony-chaos-crash";
+
+/// Named control-plane crash sites (`tony.chaos.crash-point=<site>`).
+///
+/// Unlike [`Fault`], which kills *containers* of a running job, a crash
+/// site kills the **gateway process itself** — deterministically, at a
+/// named instant in the WAL append or snapshot path — so the crash
+/// recovery suite (`rust/tests/crash_recovery.rs`) can assert the
+/// durability invariant at every window: acked submissions survive,
+/// unacked ones are absent or re-admitted exactly once, never
+/// duplicated.  See docs/DURABILITY.md for what each site leaves on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashSite {
+    /// Die in the WAL append after staging a torn half-frame: the record
+    /// was never durable and must vanish on replay.
+    WalBeforeFsync,
+    /// Die after the frame is durable but before the submitter is acked:
+    /// the record survives; recovery re-admits it exactly once.
+    WalAfterFsync,
+    /// Die with the new snapshot fully written + fsynced under its temp
+    /// name but never renamed into place.
+    BeforeRename,
+    /// Die with only half the snapshot document written.
+    MidSnapshot,
+    /// Die after the admission record is durable but before the job is
+    /// queued or the caller acked.
+    PostAdmitPreAck,
+}
+
+impl CrashSite {
+    /// Every site, for exhaustive test matrices.
+    pub const ALL: [CrashSite; 5] = [
+        CrashSite::WalBeforeFsync,
+        CrashSite::WalAfterFsync,
+        CrashSite::BeforeRename,
+        CrashSite::MidSnapshot,
+        CrashSite::PostAdmitPreAck,
+    ];
+
+    /// Parse the `tony.chaos.crash-point` value; unknown names are `None`
+    /// (the caller warns — chaos keys must never fail a real boot).
+    pub fn parse(s: &str) -> Option<CrashSite> {
+        match s.trim() {
+            "wal-before-fsync" => Some(CrashSite::WalBeforeFsync),
+            "wal-after-fsync" => Some(CrashSite::WalAfterFsync),
+            "before-rename" => Some(CrashSite::BeforeRename),
+            "mid-snapshot" => Some(CrashSite::MidSnapshot),
+            "post-admit-pre-ack" => Some(CrashSite::PostAdmitPreAck),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CrashSite::WalBeforeFsync => "wal-before-fsync",
+            CrashSite::WalAfterFsync => "wal-after-fsync",
+            CrashSite::BeforeRename => "before-rename",
+            CrashSite::MidSnapshot => "mid-snapshot",
+            CrashSite::PostAdmitPreAck => "post-admit-pre-ack",
+        }
+    }
+}
+
+impl std::fmt::Display for CrashSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// One planned failure.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Fault {
@@ -155,6 +227,14 @@ pub fn random_schedule(seed: u64, n_workers: u32, n_faults: usize, max_step: u64
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn crash_site_names_round_trip() {
+        for site in CrashSite::ALL {
+            assert_eq!(CrashSite::parse(site.as_str()), Some(site));
+        }
+        assert_eq!(CrashSite::parse("no-such-site"), None);
+    }
 
     #[test]
     fn random_schedule_is_deterministic_and_bounded() {

@@ -54,18 +54,24 @@
 pub mod admission;
 pub mod api;
 pub mod queue;
+pub mod recovery;
+pub mod wal;
 
 pub use admission::{AdmissionController, AdmissionView, QuotaConf, RejectReason};
 pub use api::GatewayApi;
 pub use queue::{PendingQueue, PushError};
+pub use recovery::{replay_dir, RecoveredJob, RecoveredState, Replay};
+pub use wal::{Wal, WalConf, WalRecord};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::chaos::CrashSite;
 use crate::client::{SubmitOpts, TonyClient};
 use crate::history::{HistoryStore, JobRecord};
 use crate::json::Json;
@@ -132,6 +138,14 @@ pub struct GatewayConf {
     /// an unbounded table would let reject spam grow memory without
     /// limit).  Live jobs are never evicted.
     pub max_retained_jobs: usize,
+    /// Control-plane write-ahead log (off by default); when enabled,
+    /// every admission is durable before it is acked and
+    /// [`Gateway::recover`] can rebuild the job table after a crash.
+    pub wal: WalConf,
+    /// Deterministic crash injection (`tony.chaos.crash-point`): panic
+    /// the gateway at a named durability site.  Test-only; `None` in any
+    /// real deployment.
+    pub crash_point: Option<CrashSite>,
 }
 
 impl GatewayConf {
@@ -145,7 +159,23 @@ impl GatewayConf {
             history_dir: std::env::temp_dir().join("tony-history"),
             job_timeout: Duration::from_secs(600),
             max_retained_jobs: 10_000,
+            wal: WalConf::disabled(),
+            crash_point: None,
         }
+    }
+
+    /// Fold the site-level durability/chaos keys (`tony.wal.*`,
+    /// `tony.chaos.crash-point`) from a site configuration into this
+    /// conf — the path `tony serve` and the crash tests use.
+    pub fn apply_site_conf(&mut self, site: &Configuration) {
+        self.wal = WalConf::from_conf(site);
+        self.crash_point = site.get("tony.chaos.crash-point").and_then(|s| {
+            let parsed = CrashSite::parse(&s);
+            if parsed.is_none() {
+                twarn!("gateway", "ignoring unknown tony.chaos.crash-point '{s}'");
+            }
+            parsed
+        });
     }
 }
 
@@ -222,6 +252,13 @@ pub struct Gateway {
     /// `wait_idle` / `wait_for_state` waiters ride its sequence instead
     /// of polling the job table every 10 ms.
     events: Arc<WakeupBus>,
+    /// Control-plane WAL; `None` when `tony.wal.enable` is off.
+    wal: Option<Arc<Wal>>,
+    /// Flipped by [`Gateway::simulate_crash`] (and by injected crash
+    /// points): the process is "dead" — leftover threads must neither
+    /// write WAL bytes nor mutate the job table, so a recovered gateway
+    /// sharing the RM observes exactly what a real crash leaves behind.
+    halted: Arc<AtomicBool>,
 }
 
 impl Gateway {
@@ -229,15 +266,40 @@ impl Gateway {
     /// worker pool.  Callers must invoke [`Gateway::shutdown`] when done
     /// (the worker threads hold `Arc<Gateway>` references).
     pub fn start(rm: Arc<ResourceManager>, conf: GatewayConf) -> Result<Arc<Gateway>> {
+        Self::boot(rm, conf, None)
+    }
+
+    /// Shared construction path for [`Gateway::start`] and
+    /// [`Gateway::recover`].  With a replay, the recovered table is
+    /// installed and a fresh snapshot is published (rotating past any
+    /// torn log tail) *before* workers run or re-admissions are queued.
+    /// Without one, an enabled WAL still snapshots at boot *if* the
+    /// directory holds state from a previous incarnation, so stale
+    /// records can never bleed into this incarnation's log; a pristine
+    /// directory has nothing to rotate past and skips the write.
+    fn boot(
+        rm: Arc<ResourceManager>,
+        conf: GatewayConf,
+        recovered: Option<recovery::Replay>,
+    ) -> Result<Arc<Gateway>> {
         crate::runtime::synthetic::ensure_preset(&conf.artifacts_dir)
             .context("preparing artifacts for the gateway")?;
         let clock = rm.clock().clone();
         let events = WakeupBus::for_clock(&clock);
+        let halted = Arc::new(AtomicBool::new(false));
+        let wal = match conf.wal.enable {
+            true => Some(Wal::open(conf.wal.clone(), halted.clone(), conf.crash_point)?),
+            false => None,
+        };
+        let history = HistoryStore::new(&conf.history_dir);
+        // A crash between a record's create and rename leaves a temp
+        // orphan behind; sweep ones old enough to be certainly dead.
+        history.sweep_orphans(Duration::from_secs(3600));
         let gw = Arc::new(Gateway {
             rm,
             admission: AdmissionController::new(conf.quotas.clone()),
             queue: PendingQueue::new(conf.queue_depth),
-            history: HistoryStore::new(&conf.history_dir),
+            history,
             inner: Mutex::new(GwInner {
                 jobs: BTreeMap::new(),
                 next_id: 1,
@@ -252,7 +314,15 @@ impl Gateway {
             clock,
             events,
             conf,
+            wal,
+            halted,
         });
+        let plan = recovered.as_ref().map(|rep| gw.restore(rep));
+        if let Some(w) = &gw.wal {
+            if plan.is_some() || w.had_existing_state() {
+                gw.write_snapshot();
+            }
+        }
         let n = gw.conf.workers.max(1);
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {
@@ -264,9 +334,53 @@ impl Gateway {
                     .context("spawning gateway worker")?,
             );
         }
-        *gw.workers.lock().unwrap() = handles;
-        tinfo!("gateway", "gateway up: {} workers, queue depth {}", n, gw.conf.queue_depth);
+        gw.workers.lock().unwrap().extend(handles);
+        if let Some(plan) = plan {
+            gw.apply_restore_plan(plan);
+        }
+        tinfo!(
+            "gateway",
+            "gateway up: {} workers, queue depth {}, wal {}",
+            n,
+            gw.conf.queue_depth,
+            if gw.wal.is_some() { "on" } else { "off" }
+        );
         Ok(gw)
+    }
+
+    /// Whether [`Gateway::simulate_crash`] (or an injected crash point)
+    /// has "killed" this gateway.
+    pub fn is_halted(&self) -> bool {
+        self.halted.load(Ordering::SeqCst)
+    }
+
+    /// Kill this gateway the way a crash would: no further WAL bytes, no
+    /// further job-table transitions, workers released.  Unlike
+    /// [`Gateway::shutdown`] nothing is flushed or drained — whatever the
+    /// WAL already made durable is all a subsequent [`Gateway::recover`]
+    /// gets, which is exactly what the crash tests need from a
+    /// same-process "kill -9".
+    pub fn simulate_crash(&self) {
+        self.halted.store(true, Ordering::SeqCst);
+        if let Some(w) = &self.wal {
+            w.mark_crashed();
+        }
+        self.queue.close();
+        self.events.notify(tag::SHUTDOWN | tag::STATE);
+    }
+
+    /// Panic mid-operation when this gateway was armed with `site` —
+    /// the gateway-level injection point (`post-admit-pre-ack`); the
+    /// WAL-level sites live in `wal.rs`.
+    fn chaos_crash_if(&self, site: CrashSite) {
+        if self.conf.crash_point == Some(site) {
+            self.halted.store(true, Ordering::SeqCst);
+            if let Some(w) = &self.wal {
+                w.mark_crashed();
+            }
+            self.queue.close();
+            panic!("{}: {}", crate::chaos::CRASH_PANIC, site.as_str());
+        }
     }
 
     pub fn rm(&self) -> &Arc<ResourceManager> {
@@ -375,23 +489,19 @@ impl Gateway {
             live: None,
             trace: Some(trace),
         };
-        if let Err(e) = self.queue.try_push(priority, id) {
-            // Backpressure: record the refusal (id already burned).
-            let mut j = job;
-            // The job never entered the queue; close the just-opened
-            // `queued` stage so the refusal's trace isn't left dangling.
-            if let Some(t) = &j.trace {
-                t.end_all();
-            }
-            j.state = JobState::Rejected;
-            j.detail = RejectReason::Backpressure(e.to_string()).to_string();
-            inner.jobs.insert(id, j);
-            inner.stats.rejected += 1;
-            return SubmitOutcome::Rejected {
-                id,
-                reason: RejectReason::Backpressure(e.to_string()),
-            };
-        }
+        // Durable-before-acked: the admission record must hit the WAL
+        // before the job is visible to a worker OR acked to the caller,
+        // so the id is minted and the table/quota entry installed here,
+        // but the queue push waits until after the append.  Capture the
+        // record while the job is still ours to read.
+        let wal_admit = self.wal.as_ref().map(|_| WalRecord::Admitted {
+            id,
+            user: user.to_string(),
+            name: spec.name.clone(),
+            queue: queue.clone(),
+            priority,
+            conf_xml: job.conf.to_xml(),
+        });
         *inner.user_active.entry(user.to_string()).or_insert(0) += 1;
         *inner.queue_active.entry(queue.clone()).or_insert(0) += 1;
         let held = inner.user_resources.entry(user.to_string()).or_insert(Resource::ZERO);
@@ -399,8 +509,130 @@ impl Gateway {
         inner.jobs.insert(id, job);
         inner.stats.accepted += 1;
         self.prune_locked(&mut inner);
+        drop(inner);
+        if let Some(rec) = wal_admit {
+            if let Err(e) = self.wal.as_ref().expect("wal record implies wal").append(&rec) {
+                // A control plane that cannot persist admissions must not
+                // accept work: fail closed, retryably.
+                let reason =
+                    RejectReason::Backpressure(format!("control-plane WAL unavailable: {e:#}"));
+                self.undo_admit(id, &reason);
+                return SubmitOutcome::Rejected { id, reason };
+            }
+            if self.wal.as_ref().expect("wal record implies wal").snapshot_due() {
+                self.write_snapshot();
+            }
+        }
+        self.chaos_crash_if(CrashSite::PostAdmitPreAck);
+        if let Err(e) = self.queue.try_push(priority, id) {
+            // Backpressure: the admission record is already durable, so a
+            // matching terminal record keeps the log's story straight.
+            let reason = RejectReason::Backpressure(e.to_string());
+            self.undo_admit(id, &reason);
+            self.wal_append(&WalRecord::Terminal {
+                id,
+                state: JobState::Rejected.as_str().to_string(),
+                detail: reason.to_string(),
+                wall_ms: 0,
+            });
+            return SubmitOutcome::Rejected { id, reason };
+        }
         tinfo!("gateway", "job {id} accepted for '{user}' on queue '{queue}' (prio {priority})");
         SubmitOutcome::Accepted { id }
+    }
+
+    /// Roll back an admission whose ack could not complete (WAL append or
+    /// queue push failed): the job flips to Rejected and every counter
+    /// the accept bumped is released.  Deliberately not `finalize_locked`
+    /// — this is an un-accept (`rejected += 1`), not a failed run.
+    fn undo_admit(&self, id: u64, reason: &RejectReason) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(job) = inner.jobs.get_mut(&id) else { return };
+        job.state = JobState::Rejected;
+        job.detail = reason.to_string();
+        if let Some(t) = job.trace.take() {
+            t.end_all();
+        }
+        let (user, queue, resources) = (job.user.clone(), job.queue.clone(), job.resources);
+        if let Some(n) = inner.user_active.get_mut(&user) {
+            *n = n.saturating_sub(1);
+        }
+        if let Some(n) = inner.queue_active.get_mut(&queue) {
+            *n = n.saturating_sub(1);
+        }
+        if let Some(held) = inner.user_resources.get_mut(&user) {
+            *held = held.checked_sub(&resources).unwrap_or(Resource::ZERO);
+        }
+        inner.stats.accepted = inner.stats.accepted.saturating_sub(1);
+        inner.stats.rejected += 1;
+        tinfo!("gateway", "job {id} un-admitted: {reason}");
+        self.events.notify(tag::STATE);
+    }
+
+    /// Best-effort WAL append for post-admission lifecycle records
+    /// (start/kill/terminal).  Unlike the admission append this never
+    /// fails the operation: the transition already happened against the
+    /// RM, and losing a lifecycle record only costs recovery precision
+    /// (a re-attach or duplicate-finalize check), never an acked job.
+    fn wal_append(&self, rec: &WalRecord) {
+        let Some(w) = &self.wal else { return };
+        if self.is_halted() {
+            return;
+        }
+        if let Err(e) = w.append(rec) {
+            twarn!("gateway", "wal append failed for job {}: {e:#}", rec.job_id());
+        } else if w.snapshot_due() {
+            self.write_snapshot();
+        }
+    }
+
+    /// Build + publish a WAL snapshot of the current control-plane state
+    /// (no-op without a WAL).  Public so operators/tests can force
+    /// compaction at a known point instead of waiting for the
+    /// record-count trigger.
+    pub fn force_snapshot(&self) {
+        self.write_snapshot();
+    }
+
+    fn write_snapshot(&self) {
+        let Some(w) = &self.wal else { return };
+        if let Err(e) = w.install_snapshot(|| self.snapshot_content()) {
+            twarn!("gateway", "wal snapshot failed: {e:#}");
+        }
+    }
+
+    /// Snapshot document: the non-terminal job table (via the same
+    /// [`RecoveredState`] shape replay produces) plus the RM's
+    /// queue/gang/reservation summary for operator forensics.
+    fn snapshot_content(&self) -> Json {
+        let mut state = recovery::RecoveredState::new();
+        {
+            let inner = self.inner.lock().unwrap();
+            state.next_id = inner.next_id;
+            for job in inner.jobs.values() {
+                if job.state.is_terminal() {
+                    continue;
+                }
+                state.jobs.insert(
+                    job.id,
+                    recovery::RecoveredJob {
+                        id: job.id,
+                        user: job.user.clone(),
+                        name: job.name.clone(),
+                        queue: job.queue.clone(),
+                        priority: job.priority,
+                        running: job.state == JobState::Running,
+                        app_id: job.app_id.map(|a| a.to_string()),
+                        attempts: job.attempts,
+                        kill_requested: job.kill_requested,
+                        conf_xml: job.conf.to_xml(),
+                    },
+                );
+            }
+        }
+        let mut j = state.to_snapshot_json();
+        j.set("sched", self.rm.sched_state_json());
+        j
     }
 
     /// Evict the oldest terminal entries once the table outgrows the
@@ -473,8 +705,12 @@ impl Gateway {
                 job.kill_requested = true;
                 if self.queue.remove(id) {
                     let ident = (job.user.clone(), job.name.clone(), job.queue.clone());
-                    self.finalize_locked(&mut inner, id, JobState::Killed, "killed while queued", 0);
+                    let did =
+                        self.finalize_locked(&mut inner, id, JobState::Killed, "killed while queued", 0);
                     drop(inner);
+                    if did {
+                        self.wal_terminal(id, JobState::Killed, "killed while queued", 0);
+                    }
                     // Even a job that never ran leaves a terminal history
                     // record (regression: these used to vanish from the
                     // durable record entirely).
@@ -489,6 +725,10 @@ impl Gateway {
                 job.kill_requested = true;
                 let app = job.app_id;
                 drop(inner);
+                // Durable intent: if we crash between here and the RM
+                // kill taking effect, recovery honors the kill instead of
+                // resurrecting the job.
+                self.wal_append(&WalRecord::KillRequested { id });
                 if let Some(app) = app {
                     self.rm.kill_application(app);
                 }
@@ -578,6 +818,11 @@ impl Gateway {
         for h in handles {
             let _ = h.join();
         }
+        // Workers are quiet: flush + stop the WAL so the log on disk is
+        // complete and replayable (no open-but-unsynced tail).
+        if let Some(w) = &self.wal {
+            w.close();
+        }
         self.events.notify(tag::SHUTDOWN | tag::STATE);
     }
 
@@ -622,14 +867,19 @@ impl Gateway {
             let job = inner.jobs.get(&id)?;
             (Self::job_to_json(job), job.live.clone(), job.app_id)
         };
-        if let Some(state) = live {
-            j.set("phase", format!("{:?}", state.phase()));
-            // Gang-scheduler standing: WAITING_FOR_GANG while the job's
-            // wave can't yet be placed whole, PREEMPTING while the RM is
-            // clawing its containers back for a starved queue.
-            if let Some(app) = app_id {
+        // Gang-scheduler standing: WAITING_FOR_GANG while the job's
+        // wave can't yet be placed whole, PREEMPTING while the RM is
+        // clawing its containers back for a starved queue.  Keyed on the
+        // application, not the live handle: a job re-attached after
+        // gateway recovery has no AmState but its gang standing is still
+        // real (and asserted by the crash tests).
+        if let Some(app) = app_id {
+            if self.job_state(id).map(|s| !s.is_terminal()).unwrap_or(false) {
                 j.set("sched_state", self.rm.app_sched_state(app).as_str());
             }
+        }
+        if let Some(state) = live {
+            j.set("phase", format!("{:?}", state.phase()));
             // Streaming Dr. Elephant verdicts for the running job —
             // stragglers are visible in gateway job status mid-run.
             let findings = crate::drelephant::analyze_live(&state);
@@ -788,6 +1038,13 @@ impl Gateway {
         gw.set("pending", pending as u64);
         gw.set("running", running as u64);
         gw.set("stats", Self::stats_json(&self.stats()));
+        let mut wal = Json::obj();
+        wal.set("enabled", self.wal.is_some());
+        if let Some(w) = &self.wal {
+            wal.set("epoch", w.epoch());
+            wal.set("records_since_snapshot", w.records_since_snapshot());
+        }
+        gw.set("wal", wal);
         j.set("gateway", gw);
         j
     }
@@ -807,6 +1064,11 @@ impl Gateway {
         // returns `None` only once the queue is closed AND drained, so
         // shutdown still finishes everything accepted before the close.
         while let Some(id) = self.queue.pop_wait() {
+            if self.is_halted() {
+                // Simulated-dead gateway: drain without running so the
+                // worker exits promptly once the queue closes.
+                continue;
+            }
             self.run_job(id);
         }
     }
@@ -820,8 +1082,12 @@ impl Gateway {
             let Some(job) = inner.jobs.get_mut(&id) else { return };
             let ident = (job.user.clone(), job.name.clone(), job.queue.clone());
             if job.kill_requested {
-                self.finalize_locked(&mut inner, id, JobState::Killed, "killed before start", 0);
+                let did =
+                    self.finalize_locked(&mut inner, id, JobState::Killed, "killed before start", 0);
                 drop(inner);
+                if did {
+                    self.wal_terminal(id, JobState::Killed, "killed before start", 0);
+                }
                 self.record_unran(id, ident, 0, 0, "killed before start");
                 return;
             }
@@ -874,6 +1140,14 @@ impl Gateway {
             if kill_raced {
                 handle.kill();
             }
+            // The attempt is real from the RM's point of view the moment
+            // submit returned: record it so recovery can re-attach to
+            // this exact application instead of launching a duplicate.
+            self.wal_append(&WalRecord::Started {
+                id,
+                app_id: handle.app_id.to_string(),
+                attempt,
+            });
             let wall = || t0.elapsed().as_millis() as u64;
             let report = match handle.wait(self.conf.job_timeout) {
                 Ok(r) => r,
@@ -924,14 +1198,18 @@ impl Gateway {
             }
         }
 
+        if self.is_halted() {
+            // Crash simulation fired while this job ran: the recovered
+            // gateway owns its terminalization (via re-attach) now.
+            return;
+        }
         let wall_ms = t0.elapsed().as_millis() as u64;
         if !recorded {
             // The application never produced a report (e.g. submission
             // itself failed) — still leave a trace in the history store.
             self.record_unran(id, ident, attempt, wall_ms, &detail);
         }
-        let mut inner = self.inner.lock().unwrap();
-        self.finalize_locked(&mut inner, id, final_state, &detail, wall_ms);
+        self.finalize(id, final_state, &detail, wall_ms);
     }
 
     /// Durable trace for a job that never produced an application report
@@ -962,8 +1240,36 @@ impl Gateway {
         });
     }
 
+    /// [`Gateway::finalize_locked`] plus the WAL terminal record: the
+    /// lock-free entry point for every post-boot terminalization.
+    fn finalize(&self, id: u64, state: JobState, detail: &str, wall_ms: u64) {
+        if self.is_halted() {
+            // A "dead" gateway's leftover threads must not mutate state a
+            // recovered incarnation now owns.
+            return;
+        }
+        let did = {
+            let mut inner = self.inner.lock().unwrap();
+            self.finalize_locked(&mut inner, id, state, detail, wall_ms)
+        };
+        if did {
+            self.wal_terminal(id, state, detail, wall_ms);
+        }
+    }
+
+    fn wal_terminal(&self, id: u64, state: JobState, detail: &str, wall_ms: u64) {
+        self.wal_append(&WalRecord::Terminal {
+            id,
+            state: state.as_str().to_string(),
+            detail: detail.to_string(),
+            wall_ms,
+        });
+    }
+
     /// Terminalize a job and release its quota bookkeeping.  Idempotent:
     /// only the Pending/Running → terminal edge mutates counters.
+    /// Returns whether this call performed the transition (the caller
+    /// owes the WAL a terminal record exactly when it did).
     fn finalize_locked(
         &self,
         inner: &mut GwInner,
@@ -971,10 +1277,10 @@ impl Gateway {
         state: JobState,
         detail: &str,
         wall_ms: u64,
-    ) {
-        let Some(job) = inner.jobs.get_mut(&id) else { return };
+    ) -> bool {
+        let Some(job) = inner.jobs.get_mut(&id) else { return false };
         if job.state.is_terminal() {
-            return;
+            return false;
         }
         job.state = state;
         job.detail = detail.to_string();
@@ -1011,6 +1317,7 @@ impl Gateway {
         // Terminalization wakes wait_idle / wait_for_state / kill
         // watchers at event time.
         self.events.notify(tag::STATE);
+        true
     }
 }
 

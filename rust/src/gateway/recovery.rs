@@ -1,0 +1,626 @@
+//! Crash recovery: rebuild the gateway control plane from its WAL
+//! directory (snapshot + log-chain replay) — `docs/DURABILITY.md`.
+//!
+//! The replay state machine ([`RecoveredState`]) is deliberately pure
+//! (records in, job table out, no I/O beyond [`replay_dir`]) so the
+//! property tests in `rust/tests/prop_wal.rs` can drive it directly and
+//! check the compaction invariant: *snapshot + tail replay ≡ full-log
+//! replay* on arbitrary record sequences.
+//!
+//! [`Gateway::recover`] then maps the replayed table back onto a live
+//! gateway: pending jobs are re-queued in their original priority order,
+//! jobs that were RUNNING are re-attached to their application if the RM
+//! still knows it (same `ApplicationId`, so no duplicate containers), or
+//! relaunched with a fresh restart budget if the RM restarted too, and
+//! jobs that terminalized while the gateway was down are finalized from
+//! the RM's report.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::history::JobRecord;
+use crate::json::Json;
+use crate::tonyconf::JobSpec;
+use crate::util::ids::ApplicationId;
+use crate::xmlconf::Configuration;
+use crate::yarn::{AppState, Resource, ResourceManager};
+use crate::{tinfo, twarn};
+
+use super::wal::{self, WalRecord};
+use super::{Gateway, GatewayConf, Job, JobState};
+
+/// One non-terminal job as reconstructed from the log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveredJob {
+    pub id: u64,
+    pub user: String,
+    pub name: String,
+    pub queue: String,
+    pub priority: u8,
+    /// A `Started` record was seen (the job had an application).
+    pub running: bool,
+    pub app_id: Option<String>,
+    pub attempts: u32,
+    pub kill_requested: bool,
+    /// Full job configuration, replayed verbatim into the new table.
+    pub conf_xml: String,
+}
+
+/// The replay state machine: fold [`WalRecord`]s (oldest first) into the
+/// table a restarted gateway boots from.
+///
+/// Per-record application is **idempotent** — re-applying a record whose
+/// effect is already present leaves the state unchanged — because the
+/// snapshot epoch rotation intentionally lets a snapshot and the
+/// retiring log's tail overlap (see `wal.rs`).  Records for ids the
+/// state has never admitted are ignored (`Started`/`KillRequested`) or
+/// folded as tombstones (`Terminal`): the submit path acks `Admitted`
+/// before a job can produce any other record, so per job the log is
+/// always admission-first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveredState {
+    /// Non-terminal jobs by id.
+    pub jobs: BTreeMap<u64, RecoveredJob>,
+    /// Terminal tombstones seen during this replay (id → final state).
+    /// Transient: snapshots do not persist them — a terminal job needs no
+    /// recovery, and id reuse is prevented by `next_id` alone.
+    pub completed: BTreeMap<u64, String>,
+    /// Strictly above every id ever admitted (acked ids are never reused
+    /// across restarts — duplicate-detection in the crash tests relies
+    /// on this).
+    pub next_id: u64,
+}
+
+impl RecoveredState {
+    pub fn new() -> RecoveredState {
+        RecoveredState { jobs: BTreeMap::new(), completed: BTreeMap::new(), next_id: 1 }
+    }
+
+    /// Fold one record into the table.
+    pub fn apply(&mut self, rec: &WalRecord) {
+        match rec {
+            WalRecord::Admitted { id, user, name, queue, priority, conf_xml } => {
+                self.next_id = self.next_id.max(id + 1);
+                if self.completed.contains_key(id) {
+                    return;
+                }
+                self.jobs.insert(
+                    *id,
+                    RecoveredJob {
+                        id: *id,
+                        user: user.clone(),
+                        name: name.clone(),
+                        queue: queue.clone(),
+                        priority: *priority,
+                        running: false,
+                        app_id: None,
+                        attempts: 0,
+                        kill_requested: false,
+                        conf_xml: conf_xml.clone(),
+                    },
+                );
+            }
+            WalRecord::Started { id, app_id, attempt } => {
+                if let Some(j) = self.jobs.get_mut(id) {
+                    j.running = true;
+                    j.app_id = Some(app_id.clone());
+                    j.attempts = j.attempts.max(*attempt);
+                }
+            }
+            WalRecord::KillRequested { id } => {
+                if let Some(j) = self.jobs.get_mut(id) {
+                    j.kill_requested = true;
+                }
+            }
+            WalRecord::Terminal { id, state, .. } => {
+                self.next_id = self.next_id.max(id + 1);
+                self.jobs.remove(id);
+                self.completed.insert(*id, state.clone());
+            }
+        }
+    }
+
+    /// Serialize for the snapshot file (`wal_epoch` and the scheduler
+    /// summary are attached by the writer).
+    pub fn to_snapshot_json(&self) -> Json {
+        let mut jobs = Vec::new();
+        for j in self.jobs.values() {
+            let mut o = Json::obj();
+            o.set("id", j.id);
+            o.set("user", j.user.as_str());
+            o.set("name", j.name.as_str());
+            o.set("queue", j.queue.as_str());
+            o.set("priority", j.priority as u64);
+            o.set("running", j.running);
+            match &j.app_id {
+                Some(a) => o.set("app_id", a.as_str()),
+                None => o.set("app_id", Json::Null),
+            };
+            o.set("attempts", j.attempts as u64);
+            o.set("kill_requested", j.kill_requested);
+            o.set("conf_xml", j.conf_xml.as_str());
+            jobs.push(o);
+        }
+        let mut s = Json::obj();
+        s.set("version", 1u64);
+        s.set("next_id", self.next_id);
+        s.set("jobs", Json::Arr(jobs));
+        s
+    }
+
+    pub fn from_snapshot_json(j: &Json) -> Result<RecoveredState> {
+        let mut st = RecoveredState::new();
+        st.next_id = j.get("next_id").and_then(|v| v.as_u64()).unwrap_or(1);
+        for item in j.get("jobs").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let id = item
+                .get("id")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("snapshot job missing 'id'"))?;
+            let s = |k: &str| item.get(k).and_then(|v| v.as_str()).map(str::to_string);
+            st.jobs.insert(
+                id,
+                RecoveredJob {
+                    id,
+                    user: s("user").unwrap_or_default(),
+                    name: s("name").unwrap_or_default(),
+                    queue: s("queue").unwrap_or_default(),
+                    priority: item.get("priority").and_then(|v| v.as_u64()).unwrap_or(1) as u8,
+                    running: item.get("running").and_then(|v| v.as_bool()).unwrap_or(false),
+                    app_id: s("app_id"),
+                    attempts: item.get("attempts").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                    kill_requested: item
+                        .get("kill_requested")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                    conf_xml: s("conf_xml")
+                        .ok_or_else(|| anyhow!("snapshot job {id} missing 'conf_xml'"))?,
+                },
+            );
+        }
+        Ok(st)
+    }
+}
+
+/// Everything [`replay_dir`] learned from one WAL directory.
+#[derive(Debug, Clone)]
+pub struct Replay {
+    pub state: RecoveredState,
+    /// Epoch the replay started from (the snapshot's, or 0).
+    pub base_epoch: u64,
+    pub had_snapshot: bool,
+    /// Log records applied across the whole chain.
+    pub log_records: usize,
+    /// False when a torn/corrupt tail was dropped (records past it were
+    /// staged but never durable — by the ack invariant, never acked).
+    pub clean_tail: bool,
+}
+
+/// Replay one WAL directory: published snapshot (if any), then the log
+/// chain `wal-<E>.log`, `wal-<E+1>.log`, … — a crash between the epoch
+/// bump and the snapshot rename leaves records split across two epochs,
+/// which the chain covers.  The chain stops at the first torn tail: any
+/// later epoch's records were staged strictly after the torn ones and
+/// must not leapfrog them.
+pub fn replay_dir(dir: &Path) -> Result<Replay> {
+    let snap_path = dir.join("snapshot.json");
+    let (mut state, base_epoch, had_snapshot) = match std::fs::read_to_string(&snap_path) {
+        Ok(text) => {
+            let j = Json::parse(&text)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", snap_path.display()))?;
+            let epoch = j.get("wal_epoch").and_then(|v| v.as_u64()).unwrap_or(0);
+            let state = RecoveredState::from_snapshot_json(&j)
+                .with_context(|| format!("loading {}", snap_path.display()))?;
+            (state, epoch, true)
+        }
+        Err(_) => (RecoveredState::new(), 0, false),
+    };
+    let mut clean_tail = true;
+    let mut log_records = 0usize;
+    let mut epoch = base_epoch;
+    loop {
+        let bytes = match std::fs::read(wal::log_path(dir, epoch)) {
+            Ok(b) => b,
+            Err(_) => break,
+        };
+        let (recs, clean) = wal::decode_stream(&bytes);
+        for r in &recs {
+            state.apply(r);
+        }
+        log_records += recs.len();
+        if !clean {
+            clean_tail = false;
+            break;
+        }
+        epoch += 1;
+    }
+    Ok(Replay { state, base_epoch, had_snapshot, log_records, clean_tail })
+}
+
+/// What `restore` decided to do with each replayed job; executed by
+/// `apply_restore_plan` once the recovery snapshot is durable.
+pub(super) struct RestorePlan {
+    /// `(priority, id)` — re-queued in original priority order.
+    readmit: Vec<(u8, u64)>,
+    /// Jobs re-attached to a still-live application: a monitor thread
+    /// per job waits for completion exactly like a worker would.
+    reattach: Vec<(u64, ApplicationId, bool)>,
+    /// Jobs that terminalized (or became unrunnable) while we were down.
+    finish: Vec<FinishPlan>,
+}
+
+struct FinishPlan {
+    id: u64,
+    state: JobState,
+    detail: String,
+    ident: (String, String, String),
+    /// RM-reported app id when the job actually ran (history record key);
+    /// `None` for jobs that never produced a report.
+    app_id: Option<String>,
+    attempts: u32,
+}
+
+impl Gateway {
+    /// Rebuild a gateway from its WAL directory: replay snapshot + log
+    /// chain, then boot with the replayed table.  Pending jobs re-enter
+    /// the queue in original priority order; RUNNING jobs re-attach to
+    /// their application when the RM still reports it (same
+    /// `ApplicationId` — no duplicate containers) and are otherwise
+    /// relaunched with a fresh restart budget.  The first act of the
+    /// recovered gateway is publishing a fresh snapshot, so a torn log
+    /// tail from the crash is rotated away before any new append.
+    ///
+    /// Gateway stats (accepted/finished/…) restart from zero: they are
+    /// process-lifetime counters, not durable state.  Relaunching is
+    /// at-least-once execution — a job whose application died with the
+    /// process runs again from its last checkpoint.
+    pub fn recover(rm: Arc<ResourceManager>, conf: GatewayConf) -> Result<Arc<Gateway>> {
+        ensure!(conf.wal.enable, "Gateway::recover requires the WAL (tony.wal.enable=true)");
+        let replay = replay_dir(&conf.wal.dir)
+            .with_context(|| format!("replaying WAL dir {}", conf.wal.dir.display()))?;
+        tinfo!(
+            "gateway",
+            "recovering from {}: {} live job(s), {} tombstone(s), {} log record(s), snapshot={}, clean_tail={}",
+            conf.wal.dir.display(),
+            replay.state.jobs.len(),
+            replay.state.completed.len(),
+            replay.log_records,
+            replay.had_snapshot,
+            replay.clean_tail
+        );
+        Self::boot(rm, conf, Some(replay))
+    }
+
+    /// Map the replayed table into the live job table (single lock pass)
+    /// and decide each job's disposition.  No WAL writes happen here —
+    /// the caller publishes the recovery snapshot first, then executes
+    /// the returned plan.
+    pub(super) fn restore(&self, rep: &Replay) -> RestorePlan {
+        let mut plan =
+            RestorePlan { readmit: Vec::new(), reattach: Vec::new(), finish: Vec::new() };
+        // Pre-lock pass: parse confs and query the RM per job.
+        let mut inserts: Vec<(Job, Option<Disposition>)> = Vec::new();
+        enum Disposition {
+            Readmit,
+            Reattach(ApplicationId, bool),
+            Finish(JobState, String, Option<String>),
+        }
+        for rec in rep.state.jobs.values() {
+            let ident = (rec.user.clone(), rec.name.clone(), rec.queue.clone());
+            let (conf, needed) = match Configuration::from_xml_str(&rec.conf_xml)
+                .and_then(|c| JobSpec::from_conf(&c).map(|s| (c, s)))
+            {
+                Ok((c, spec)) => (c, spec.total_task_resources() + spec.am_resource),
+                Err(e) => {
+                    twarn!("gateway", "recovered job {} has unusable conf: {e:#}", rec.id);
+                    plan.finish.push(FinishPlan {
+                        id: rec.id,
+                        state: JobState::Failed,
+                        detail: format!("recovery: unusable job conf: {e:#}"),
+                        ident,
+                        app_id: None,
+                        attempts: rec.attempts,
+                    });
+                    continue;
+                }
+            };
+            let mut job = Job {
+                id: rec.id,
+                user: rec.user.clone(),
+                name: rec.name.clone(),
+                queue: rec.queue.clone(),
+                priority: rec.priority,
+                state: JobState::Pending,
+                detail: String::new(),
+                app_id: None,
+                attempts: rec.attempts,
+                wall_ms: 0,
+                resources: needed,
+                kill_requested: rec.kill_requested,
+                conf,
+                // Observability handles are process-local and do not
+                // survive the restart: a re-attached job serves history
+                // series/trace once it completes, like any finished job.
+                live: None,
+                trace: None,
+            };
+            let app = rec.app_id.as_deref().and_then(ApplicationId::parse);
+            let disposition = if !rec.running {
+                if rec.kill_requested {
+                    Disposition::Finish(
+                        JobState::Killed,
+                        "killed while queued (recovered)".to_string(),
+                        None,
+                    )
+                } else {
+                    job.detail = "recovered: re-admitted".to_string();
+                    Disposition::Readmit
+                }
+            } else {
+                match app.and_then(|a| self.rm.app_report(a).map(|r| (a, r))) {
+                    Some((a, report)) if !report.state.is_terminal() => {
+                        job.state = JobState::Running;
+                        job.app_id = Some(a);
+                        job.detail = format!("recovered: re-attached to {a}");
+                        Disposition::Reattach(a, rec.kill_requested)
+                    }
+                    Some((a, report)) => {
+                        // Terminalized while we were down: fold the RM's
+                        // verdict in (insert as Running so finalize runs
+                        // the normal quota/stats release).
+                        job.state = JobState::Running;
+                        job.app_id = Some(a);
+                        let state = match report.state {
+                            AppState::Finished => JobState::Finished,
+                            AppState::Killed => JobState::Killed,
+                            _ => JobState::Failed,
+                        };
+                        Disposition::Finish(state, report.diagnostics, Some(a.to_string()))
+                    }
+                    None => {
+                        if rec.kill_requested {
+                            Disposition::Finish(
+                                JobState::Killed,
+                                "kill honored across restart".to_string(),
+                                None,
+                            )
+                        } else {
+                            // The RM restarted too (or the app predates
+                            // it): relaunch through the normal worker
+                            // path with a fresh restart budget.
+                            job.app_id = None;
+                            job.detail = "recovered: relaunching (application lost)".to_string();
+                            Disposition::Readmit
+                        }
+                    }
+                }
+            };
+            inserts.push((job, Some(disposition)));
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.next_id = inner.next_id.max(rep.state.next_id);
+            for (job, disposition) in inserts {
+                let (id, prio) = (job.id, job.priority);
+                *inner.user_active.entry(job.user.clone()).or_insert(0) += 1;
+                *inner.queue_active.entry(job.queue.clone()).or_insert(0) += 1;
+                let held =
+                    inner.user_resources.entry(job.user.clone()).or_insert(Resource::ZERO);
+                *held += job.resources;
+                inner.jobs.insert(id, job);
+                match disposition {
+                    Some(Disposition::Readmit) => plan.readmit.push((prio, id)),
+                    Some(Disposition::Reattach(a, kill)) => plan.reattach.push((id, a, kill)),
+                    Some(Disposition::Finish(state, detail, app_id)) => {
+                        let j = &inner.jobs[&id];
+                        plan.finish.push(FinishPlan {
+                            id,
+                            state,
+                            detail,
+                            ident: (j.user.clone(), j.name.clone(), j.queue.clone()),
+                            app_id,
+                            attempts: j.attempts,
+                        });
+                    }
+                    None => {}
+                }
+            }
+        }
+        // Original admission order within a priority class: job ids are
+        // monotonic, so (priority desc, id asc) is the original order.
+        plan.readmit.sort_by_key(|&(prio, id)| (std::cmp::Reverse(prio), id));
+        plan
+    }
+
+    /// Execute the restore plan (after the recovery snapshot is durable):
+    /// finalize dead jobs, start re-attach monitors, re-queue the rest.
+    pub(super) fn apply_restore_plan(self: &Arc<Gateway>, plan: RestorePlan) {
+        for f in plan.finish {
+            match &f.app_id {
+                Some(app) => {
+                    let _ = self.history.record(&JobRecord {
+                        app_id: app.clone(),
+                        name: f.ident.1.clone(),
+                        queue: f.ident.2.clone(),
+                        succeeded: f.state == JobState::Finished,
+                        attempts: f.attempts,
+                        wall_ms: 0,
+                        diagnostics: format!("[user {}] {}", f.ident.0, f.detail),
+                        tasks: Vec::new(),
+                        series: Json::obj(),
+                        trace: Json::obj(),
+                    });
+                }
+                None => self.record_unran(f.id, f.ident.clone(), f.attempts, 0, &f.detail),
+            }
+            self.finalize(f.id, f.state, &f.detail, 0);
+        }
+        let mut monitors = Vec::new();
+        for (id, app, kill) in plan.reattach {
+            tinfo!("gateway", "job {id} re-attached to {app}");
+            let g = self.clone();
+            match std::thread::Builder::new()
+                .name(format!("gw-reattach-{id}"))
+                .spawn(move || g.reattach_loop(id, app))
+            {
+                Ok(h) => monitors.push(h),
+                Err(e) => {
+                    twarn!("gateway", "cannot spawn re-attach monitor for job {id}: {e}");
+                    self.finalize(id, JobState::Failed, "recovery: monitor spawn failed", 0);
+                    continue;
+                }
+            }
+            if kill {
+                // The user killed it before the crash; honor that now.
+                self.rm.kill_application(app);
+            }
+        }
+        if !monitors.is_empty() {
+            self.workers.lock().unwrap().extend(monitors);
+        }
+        for (prio, id) in plan.readmit {
+            if let Err(e) = self.queue.try_push(prio, id) {
+                twarn!("gateway", "re-admission of job {id} failed: {e}");
+                self.finalize(id, JobState::Failed, &format!("recovery re-admission failed: {e}"), 0);
+            }
+        }
+    }
+
+    /// Monitor one re-attached application to completion — the recovery
+    /// analogue of the tail of `run_job` (no retry loop: the restart
+    /// budget belongs to freshly launched attempts).
+    fn reattach_loop(self: Arc<Gateway>, id: u64, app: ApplicationId) {
+        let (state, detail) = match self.rm.wait_for_completion(app, self.conf.job_timeout) {
+            Ok(report) => {
+                let state = match report.state {
+                    AppState::Finished => JobState::Finished,
+                    AppState::Killed => JobState::Killed,
+                    _ => JobState::Failed,
+                };
+                (state, report.diagnostics)
+            }
+            Err(e) => {
+                if self.halted.load(Ordering::SeqCst) {
+                    return;
+                }
+                self.rm.kill_application(app);
+                (JobState::Failed, format!("timed out after re-attach: {e:#}"))
+            }
+        };
+        if self.halted.load(Ordering::SeqCst) {
+            return;
+        }
+        let ident = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .jobs
+                .get(&id)
+                .map(|j| (j.user.clone(), j.name.clone(), j.queue.clone(), j.attempts))
+        };
+        if let Some((user, name, queue, attempts)) = ident {
+            let _ = self.history.record(&JobRecord {
+                app_id: app.to_string(),
+                name,
+                queue,
+                succeeded: state == JobState::Finished,
+                attempts,
+                wall_ms: 0,
+                diagnostics: format!("[user {user}] {detail}"),
+                tasks: Vec::new(),
+                series: Json::obj(),
+                trace: Json::obj(),
+            });
+        }
+        self.finalize(id, state, &detail, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admitted(id: u64, prio: u8) -> WalRecord {
+        WalRecord::Admitted {
+            id,
+            user: "u".into(),
+            name: format!("j{id}"),
+            queue: "default".into(),
+            priority: prio,
+            conf_xml: "<configuration></configuration>".into(),
+        }
+    }
+
+    #[test]
+    fn replay_folds_lifecycle_records() {
+        let mut st = RecoveredState::new();
+        st.apply(&admitted(1, 3));
+        st.apply(&admitted(2, 1));
+        st.apply(&WalRecord::Started { id: 1, app_id: "application_9_0001".into(), attempt: 1 });
+        st.apply(&WalRecord::Terminal {
+            id: 2,
+            state: "FINISHED".into(),
+            detail: String::new(),
+            wall_ms: 4,
+        });
+        assert_eq!(st.next_id, 3);
+        assert_eq!(st.jobs.len(), 1);
+        let j = &st.jobs[&1];
+        assert!(j.running);
+        assert_eq!(j.app_id.as_deref(), Some("application_9_0001"));
+        assert_eq!(st.completed.get(&2).map(String::as_str), Some("FINISHED"));
+        // Idempotent reapplication (snapshot/tail overlap).
+        let before = st.clone();
+        st.apply(&admitted(1, 3));
+        st.apply(&WalRecord::Started { id: 1, app_id: "application_9_0001".into(), attempt: 1 });
+        assert_eq!(st, before);
+    }
+
+    #[test]
+    fn records_for_unknown_ids_are_tolerated() {
+        let mut st = RecoveredState::new();
+        st.apply(&WalRecord::Started { id: 9, app_id: "application_1_0001".into(), attempt: 1 });
+        st.apply(&WalRecord::KillRequested { id: 9 });
+        assert!(st.jobs.is_empty());
+        // A terminal tombstone suppresses a (stale) re-admission replay.
+        st.apply(&WalRecord::Terminal {
+            id: 4,
+            state: "KILLED".into(),
+            detail: String::new(),
+            wall_ms: 0,
+        });
+        st.apply(&admitted(4, 1));
+        assert!(st.jobs.is_empty());
+        assert_eq!(st.next_id, 10);
+    }
+
+    #[test]
+    fn snapshot_json_round_trip() {
+        let mut st = RecoveredState::new();
+        st.apply(&admitted(1, 3));
+        st.apply(&WalRecord::Started { id: 1, app_id: "application_7_0002".into(), attempt: 2 });
+        st.apply(&WalRecord::KillRequested { id: 1 });
+        st.apply(&admitted(5, 1));
+        let back = RecoveredState::from_snapshot_json(&st.to_snapshot_json()).unwrap();
+        assert_eq!(back.jobs, st.jobs);
+        assert_eq!(back.next_id, st.next_id);
+    }
+
+    #[test]
+    fn replay_dir_without_snapshot_or_logs_is_empty() {
+        let dir = std::env::temp_dir().join(format!(
+            "tony-recovery-empty-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rep = replay_dir(&dir).unwrap();
+        assert!(rep.state.jobs.is_empty());
+        assert!(!rep.had_snapshot);
+        assert!(rep.clean_tail);
+        assert_eq!(rep.state.next_id, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

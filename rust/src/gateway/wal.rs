@@ -1,0 +1,812 @@
+//! Control-plane write-ahead log: the durability layer under the
+//! gateway's job table (`docs/DURABILITY.md`).
+//!
+//! Every state transition that must survive a gateway crash — admission,
+//! job start, kill requests, terminal outcomes — is appended here as a
+//! length-prefixed, checksummed record *before* the transition is acked
+//! to the caller.  A periodic snapshot (built from the live job table)
+//! compacts the log: the snapshot is published with the same
+//! fsync + atomic-rename discipline [`crate::history::HistoryStore`]
+//! uses for job records, and each snapshot starts a new log *epoch*
+//! (`wal-<N>.log`) so replay is always "one snapshot + its log tail".
+//!
+//! Layout of one record frame:
+//!
+//! ```text
+//!   [u32 LE payload length][u64 LE FNV-1a of payload][payload JSON]
+//! ```
+//!
+//! Replay ([`super::recovery`]) stops cleanly at the first frame whose
+//! length or checksum does not verify — a torn tail (crash mid-write)
+//! loses only records that were never acked, never earlier ones.
+//!
+//! Writer architecture (group commit): appenders stage encoded frames
+//! into an in-memory buffer and wait on a condvar until the dedicated
+//! flusher thread — the only thread that touches the file — has written
+//! and fsynced past their record.  Concurrent submitters therefore share
+//! one fsync per wave instead of paying one each, and no file I/O ever
+//! happens under a lock.
+//!
+//! Deterministic crash-point injection (`tony.chaos.crash-point`, see
+//! [`crate::chaos::CrashSite`]) panics the process at named sites in
+//! this file's append/snapshot paths; `rust/tests/crash_recovery.rs`
+//! drives every site and asserts the ack invariant.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::chaos::{CrashSite, CRASH_PANIC};
+use crate::json::Json;
+use crate::xmlconf::Configuration;
+use crate::{tinfo, twarn};
+
+/// First bytes of every log file; a file without it is treated as torn.
+pub const MAGIC: &[u8; 8] = b"TONYWAL1";
+
+/// WAL configuration (`tony.wal.*`, see docs/CONFIGURATION.md).
+#[derive(Debug, Clone)]
+pub struct WalConf {
+    /// Master switch; off by default (benches compare both sides).
+    pub enable: bool,
+    /// Directory owned by exactly one gateway: snapshot + epoch logs.
+    pub dir: PathBuf,
+    /// Records appended since the last snapshot before a new snapshot
+    /// compacts the log (0 disables count-triggered snapshots).
+    pub snapshot_every: u64,
+    /// When true (default), an append is acked only after fsync; when
+    /// false, after staging (crash may lose the unsynced tail).
+    pub fsync: bool,
+}
+
+impl WalConf {
+    pub fn disabled() -> WalConf {
+        WalConf {
+            enable: false,
+            dir: std::env::temp_dir().join("tony-wal"),
+            snapshot_every: 256,
+            fsync: true,
+        }
+    }
+
+    /// Read the `tony.wal.*` keys from a site configuration.
+    pub fn from_conf(conf: &Configuration) -> WalConf {
+        let mut w = WalConf::disabled();
+        w.enable = conf.get_bool("tony.wal.enable", w.enable);
+        if let Some(dir) = conf.get("tony.wal.dir") {
+            w.dir = PathBuf::from(dir);
+        }
+        w.snapshot_every = conf.get_u64("tony.wal.snapshot-every", w.snapshot_every);
+        w.fsync = conf.get_bool("tony.wal.fsync", w.fsync);
+        w
+    }
+}
+
+impl Default for WalConf {
+    fn default() -> WalConf {
+        WalConf::disabled()
+    }
+}
+
+/// One durable control-plane state transition.  Per job, records are
+/// appended in lifecycle order (`Admitted` is acked before the job can
+/// produce any other record), so replay never sees a job's later records
+/// before its admission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// The job passed admission; written (and synced) before the submit
+    /// call returns — the ack point of the durability invariant.
+    Admitted {
+        id: u64,
+        user: String,
+        name: String,
+        queue: String,
+        priority: u8,
+        /// Full job configuration (`Configuration::to_xml`) so recovery
+        /// can re-admit or relaunch without any other source of truth.
+        conf_xml: String,
+    },
+    /// A worker submitted the application to the RM.
+    Started { id: u64, app_id: String, attempt: u32 },
+    /// A kill was accepted for a running job (recovery must not
+    /// resurrect a job the user already killed).
+    KillRequested { id: u64 },
+    /// The job reached a terminal state; replay drops it from the table.
+    Terminal { id: u64, state: String, detail: String, wall_ms: u64 },
+}
+
+impl WalRecord {
+    pub fn job_id(&self) -> u64 {
+        match self {
+            WalRecord::Admitted { id, .. }
+            | WalRecord::Started { id, .. }
+            | WalRecord::KillRequested { id }
+            | WalRecord::Terminal { id, .. } => *id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            WalRecord::Admitted { id, user, name, queue, priority, conf_xml } => {
+                j.set("type", "admitted");
+                j.set("id", *id);
+                j.set("user", user.as_str());
+                j.set("name", name.as_str());
+                j.set("queue", queue.as_str());
+                j.set("priority", *priority as u64);
+                j.set("conf_xml", conf_xml.as_str());
+            }
+            WalRecord::Started { id, app_id, attempt } => {
+                j.set("type", "started");
+                j.set("id", *id);
+                j.set("app_id", app_id.as_str());
+                j.set("attempt", *attempt as u64);
+            }
+            WalRecord::KillRequested { id } => {
+                j.set("type", "kill-requested");
+                j.set("id", *id);
+            }
+            WalRecord::Terminal { id, state, detail, wall_ms } => {
+                j.set("type", "terminal");
+                j.set("id", *id);
+                j.set("state", state.as_str());
+                j.set("detail", detail.as_str());
+                j.set("wall_ms", *wall_ms);
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<WalRecord> {
+        let ty = j
+            .get("type")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("wal record missing 'type'"))?;
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("wal record missing 'id'"))?;
+        let s = |k: &str| j.get(k).and_then(|v| v.as_str()).map(str::to_string);
+        Ok(match ty {
+            "admitted" => WalRecord::Admitted {
+                id,
+                user: s("user").ok_or_else(|| anyhow!("admitted record missing 'user'"))?,
+                name: s("name").unwrap_or_default(),
+                queue: s("queue").unwrap_or_default(),
+                priority: j.get("priority").and_then(|v| v.as_u64()).unwrap_or(1) as u8,
+                conf_xml: s("conf_xml")
+                    .ok_or_else(|| anyhow!("admitted record missing 'conf_xml'"))?,
+            },
+            "started" => WalRecord::Started {
+                id,
+                app_id: s("app_id").unwrap_or_default(),
+                attempt: j.get("attempt").and_then(|v| v.as_u64()).unwrap_or(1) as u32,
+            },
+            "kill-requested" => WalRecord::KillRequested { id },
+            "terminal" => WalRecord::Terminal {
+                id,
+                state: s("state").unwrap_or_else(|| "FAILED".to_string()),
+                detail: s("detail").unwrap_or_default(),
+                wall_ms: j.get("wall_ms").and_then(|v| v.as_u64()).unwrap_or(0),
+            },
+            other => return Err(anyhow!("unknown wal record type '{other}'")),
+        })
+    }
+
+    /// One on-disk frame: length + checksum + JSON payload.
+    pub fn encode(&self) -> Vec<u8> {
+        frame(self.to_json().render().as_bytes())
+    }
+}
+
+/// 64-bit FNV-1a — hand-rolled because the offline build has no checksum
+/// crate; collision resistance is irrelevant here (we detect *torn*
+/// writes, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Frame one payload: `[u32 len][u64 fnv1a][payload]`.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode every intact record from one log file's bytes, stopping cleanly
+/// at the first frame that fails the length, checksum, or parse check.
+/// Returns `(records, clean)`: `clean == false` means a torn/corrupt tail
+/// was dropped.  Never panics on arbitrary input — the property tests
+/// (`rust/tests/prop_wal.rs`) fuzz this directly.
+pub fn decode_stream(bytes: &[u8]) -> (Vec<WalRecord>, bool) {
+    let mut recs = Vec::new();
+    if bytes.is_empty() {
+        // A log created but never written past creation (or not yet
+        // magic-stamped) holds no records and nothing was lost.
+        return (recs, true);
+    }
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        return (recs, false);
+    }
+    let mut i = MAGIC.len();
+    let mut clean = true;
+    while i < bytes.len() {
+        if i + 12 > bytes.len() {
+            clean = false;
+            break;
+        }
+        let len = u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]) as usize;
+        let mut sum = [0u8; 8];
+        sum.copy_from_slice(&bytes[i + 4..i + 12]);
+        let sum = u64::from_le_bytes(sum);
+        let start = i + 12;
+        let end = match start.checked_add(len) {
+            Some(e) if e <= bytes.len() => e,
+            _ => {
+                clean = false;
+                break;
+            }
+        };
+        let payload = &bytes[start..end];
+        if fnv1a64(payload) != sum {
+            clean = false;
+            break;
+        }
+        let rec = std::str::from_utf8(payload)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+            .and_then(|j| WalRecord::from_json(&j).ok());
+        match rec {
+            Some(r) => recs.push(r),
+            None => {
+                clean = false;
+                break;
+            }
+        }
+        i = end;
+    }
+    (recs, clean)
+}
+
+/// Path of the log file for one epoch.
+pub fn log_path(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(format!("wal-{epoch}.log"))
+}
+
+fn parse_log_epoch(name: &str) -> Option<u64> {
+    name.strip_prefix("wal-")?.strip_suffix(".log")?.parse().ok()
+}
+
+/// Remove crash-orphaned temp files.  Unlike the history store's
+/// age-gated sweep (its directory is shared by concurrent writers), the
+/// WAL directory is owned by exactly one gateway, so any temp file found
+/// at open is by definition an orphan.
+fn sweep_tmp(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut removed = 0;
+    for ent in entries.flatten() {
+        let name = ent.file_name().to_string_lossy().into_owned();
+        if name.starts_with('.') && name.ends_with(".tmp") && std::fs::remove_file(ent.path()).is_ok()
+        {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Retire every log epoch below `keep_from` (their records are covered by
+/// the published snapshot).
+fn sweep_old_logs(dir: &Path, keep_from: u64) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for ent in entries.flatten() {
+        let name = ent.file_name().to_string_lossy().into_owned();
+        if let Some(epoch) = parse_log_epoch(&name) {
+            if epoch < keep_from {
+                let _ = std::fs::remove_file(ent.path());
+            }
+        }
+    }
+}
+
+/// Highest epoch with a log file on disk, if any.
+fn max_log_epoch(dir: &Path) -> Option<u64> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    entries
+        .flatten()
+        .filter_map(|e| parse_log_epoch(&e.file_name().to_string_lossy()))
+        .max()
+}
+
+struct WalState {
+    /// Encoded frames staged but not yet handed to the flusher.
+    buf: Vec<u8>,
+    /// Sequence of the last staged record.
+    staged: u64,
+    /// Sequence the flusher has durably written through.
+    synced: u64,
+    since_snapshot: u64,
+    epoch: u64,
+    snapshotting: bool,
+    /// The writer is permanently down (flush error or simulated crash);
+    /// appenders fail fast instead of waiting forever.
+    crashed: bool,
+    closed: bool,
+}
+
+/// The gateway's write-ahead log writer.  See the module docs for the
+/// record framing, epoch lifecycle, and group-commit design.
+pub struct Wal {
+    dir: PathBuf,
+    conf: WalConf,
+    /// Whether `open` found a snapshot or any log on disk.  A boot over
+    /// pre-existing state writes a clean-slate snapshot to rotate past
+    /// whatever tail the previous incarnation left; a boot over an empty
+    /// directory skips it (there is nothing to rotate past).
+    existing: bool,
+    state: Mutex<WalState>,
+    cv: Condvar,
+    flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Shared with the owning gateway: once flipped (simulated crash),
+    /// nothing may be written — a dead process writes no bytes.
+    halted: Arc<AtomicBool>,
+    crash_point: Option<CrashSite>,
+}
+
+impl Wal {
+    /// Open (or create) the WAL directory and start the flusher thread.
+    /// Sweeps temp-file orphans unconditionally and retires log epochs
+    /// already covered by the published snapshot.  Appends resume on the
+    /// highest epoch present so a pre-existing tail is never overwritten;
+    /// the gateway writes a fresh snapshot at boot, which rotates past
+    /// any torn tail before the first new append.
+    pub fn open(
+        conf: WalConf,
+        halted: Arc<AtomicBool>,
+        crash_point: Option<CrashSite>,
+    ) -> Result<Arc<Wal>> {
+        std::fs::create_dir_all(&conf.dir)
+            .with_context(|| format!("creating wal dir {}", conf.dir.display()))?;
+        let removed = sweep_tmp(&conf.dir);
+        if removed > 0 {
+            tinfo!("wal", "swept {removed} orphaned temp file(s) from {}", conf.dir.display());
+        }
+        let snap_text = std::fs::read_to_string(conf.dir.join("snapshot.json")).ok();
+        let snap_epoch = snap_text
+            .as_deref()
+            .and_then(|text| Json::parse(text).ok())
+            .and_then(|j| j.get("wal_epoch").and_then(|v| v.as_u64()))
+            .unwrap_or(0);
+        sweep_old_logs(&conf.dir, snap_epoch);
+        let max_log = max_log_epoch(&conf.dir);
+        let existing = snap_text.is_some() || max_log.is_some();
+        let epoch = max_log.unwrap_or(0).max(snap_epoch);
+        let dir = conf.dir.clone();
+        let wal = Arc::new(Wal {
+            dir,
+            conf,
+            existing,
+            state: Mutex::new(WalState {
+                buf: Vec::new(),
+                staged: 0,
+                synced: 0,
+                since_snapshot: 0,
+                epoch,
+                snapshotting: false,
+                crashed: false,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            flusher: Mutex::new(None),
+            halted,
+            crash_point,
+        });
+        let w = wal.clone();
+        let handle = std::thread::Builder::new()
+            .name("gw-wal".into())
+            .spawn(move || w.flusher_loop())
+            .context("spawning wal flusher")?;
+        *wal.flusher.lock().unwrap() = Some(handle);
+        Ok(wal)
+    }
+
+    /// Poison-tolerant lock: injected crash points panic on purpose (with
+    /// no WAL lock held), but a defensive writer beats a poisoned-lock
+    /// cascade in every other unexpected-panic case.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, WalState> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.lock_state().epoch
+    }
+
+    /// Whether `open` found a snapshot or log files from a previous
+    /// incarnation in the directory.
+    pub fn had_existing_state(&self) -> bool {
+        self.existing
+    }
+
+    pub fn records_since_snapshot(&self) -> u64 {
+        self.lock_state().since_snapshot
+    }
+
+    /// Whether enough records accumulated for a count-triggered snapshot.
+    pub fn snapshot_due(&self) -> bool {
+        let st = self.lock_state();
+        !st.snapshotting && self.conf.snapshot_every > 0 && st.since_snapshot >= self.conf.snapshot_every
+    }
+
+    /// Append one record.  With `fsync` on, returns only once the record
+    /// is durably on disk (group commit: concurrent appenders share the
+    /// flusher's fsync).  Errors when the writer is down — the caller
+    /// must then fail the transition instead of acking it.
+    pub fn append(&self, rec: &WalRecord) -> Result<()> {
+        if self.halted.load(Ordering::SeqCst) {
+            return Err(anyhow!("wal halted (simulated dead process)"));
+        }
+        let bytes = rec.encode();
+        if let Some(site @ (CrashSite::WalBeforeFsync | CrashSite::WalAfterFsync)) =
+            self.crash_point
+        {
+            self.crash_append(&bytes, site);
+        }
+        let mut st = self.lock_state();
+        if st.crashed || st.closed {
+            return Err(anyhow!("wal writer is down"));
+        }
+        st.buf.extend_from_slice(&bytes);
+        st.staged += 1;
+        st.since_snapshot += 1;
+        let mine = st.staged;
+        self.cv.notify_all();
+        if self.conf.fsync {
+            while st.synced < mine {
+                if st.crashed {
+                    return Err(anyhow!("wal writer died before the record was durable"));
+                }
+                // lint:allow(blocking-under-lock, reason = "Condvar::wait atomically releases the WAL staging guard while parked (group-commit durability ack)")
+                st = self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        }
+        Ok(())
+    }
+
+    /// Publish a snapshot built by `build` and start a new log epoch.
+    /// The epoch is bumped *before* the content is captured, so every
+    /// record flushed to the retiring log has its effect inside the
+    /// snapshot, and every record staged afterwards lands in the new
+    /// log (replay is idempotent per record, so overlap is harmless).
+    /// Returns Ok(()) without writing when a snapshot is already in
+    /// flight or the writer is down.
+    pub fn install_snapshot<F: FnOnce() -> Json>(&self, build: F) -> Result<()> {
+        if self.halted.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let new_epoch = {
+            let mut st = self.lock_state();
+            if st.crashed || st.closed || st.snapshotting {
+                return Ok(());
+            }
+            st.snapshotting = true;
+            st.epoch += 1;
+            st.since_snapshot = 0;
+            st.epoch
+        };
+        let res = self.write_snapshot_file(new_epoch, build());
+        self.lock_state().snapshotting = false;
+        res
+    }
+
+    fn write_snapshot_file(&self, new_epoch: u64, mut content: Json) -> Result<()> {
+        content.set("wal_epoch", new_epoch);
+        let bytes = content.render_pretty().into_bytes();
+        let tmp = self.dir.join(format!(
+            ".snapshot.{}-{}.tmp",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        let path = self.dir.join("snapshot.json");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            if self.crash_point == Some(CrashSite::MidSnapshot) {
+                // Crash with only half the document written: recovery must
+                // ignore the torn temp file and replay from the previous
+                // snapshot (or from scratch) plus the full log chain.
+                let _ = f.write_all(&bytes[..bytes.len() / 2]);
+                let _ = f.sync_all();
+                drop(f);
+                self.crash(CrashSite::MidSnapshot);
+            }
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        if self.crash_point == Some(CrashSite::BeforeRename) {
+            // The full document is durable under the temp name but never
+            // published: recovery must behave exactly like mid-snapshot.
+            self.crash(CrashSite::BeforeRename);
+        }
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("publishing {}", path.display()));
+        }
+        sweep_old_logs(&self.dir, new_epoch);
+        tinfo!("wal", "snapshot published (epoch {new_epoch})");
+        Ok(())
+    }
+
+    /// Flush whatever is staged and stop the flusher (graceful shutdown).
+    /// After close, the log on disk is complete and replayable.
+    pub fn close(&self) {
+        {
+            let mut st = self.lock_state();
+            st.closed = true;
+        }
+        self.cv.notify_all();
+        let handle = self.flusher.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Mark the writer permanently down (simulated crash): wakes every
+    /// waiting appender with an error and stops the flusher before it
+    /// writes another byte.
+    pub(crate) fn mark_crashed(&self) {
+        {
+            let mut st = self.lock_state();
+            st.crashed = true;
+        }
+        self.cv.notify_all();
+    }
+
+    fn open_log(&self, epoch: u64) -> std::io::Result<std::fs::File> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(log_path(&self.dir, epoch))?;
+        if f.metadata()?.len() == 0 {
+            f.write_all(MAGIC)?;
+            f.sync_all()?;
+        }
+        Ok(f)
+    }
+
+    /// The only thread that touches the log file: drains the staging
+    /// buffer, writes + fsyncs outside any lock, then publishes the new
+    /// durable sequence.  Reopens the file when a snapshot rotated the
+    /// epoch (chunks are epoch-stamped at drain time, and epochs only
+    /// grow, so file assignment preserves record order).
+    fn flusher_loop(&self) {
+        let mut open: Option<(u64, std::fs::File)> = None;
+        loop {
+            let (chunk, target, epoch) = {
+                let mut st = self.lock_state();
+                loop {
+                    if st.crashed {
+                        return;
+                    }
+                    if !st.buf.is_empty() {
+                        break;
+                    }
+                    if st.closed {
+                        return;
+                    }
+                    // lint:allow(blocking-under-lock, reason = "Condvar::wait atomically releases the WAL staging guard while parked")
+                    st = self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+                (std::mem::take(&mut st.buf), st.staged, st.epoch)
+            };
+            if self.halted.load(Ordering::SeqCst) {
+                return;
+            }
+            if open.as_ref().map(|(e, _)| *e) != Some(epoch) {
+                match self.open_log(epoch) {
+                    Ok(f) => open = Some((epoch, f)),
+                    Err(e) => {
+                        twarn!("wal", "cannot open log epoch {epoch}: {e}");
+                        self.mark_crashed();
+                        return;
+                    }
+                }
+            }
+            let (_, file) = open.as_mut().expect("log just opened");
+            let res = {
+                use std::io::Write;
+                file.write_all(&chunk)
+                    .and_then(|()| if self.conf.fsync { file.sync_data() } else { Ok(()) })
+            };
+            match res {
+                Ok(()) => {
+                    let mut st = self.lock_state();
+                    st.synced = st.synced.max(target);
+                }
+                Err(e) => {
+                    twarn!("wal", "append flush failed: {e}");
+                    self.mark_crashed();
+                    return;
+                }
+            }
+            self.cv.notify_all();
+        }
+    }
+
+    /// Injected crash in the append path.  Bypasses the flusher (which is
+    /// marked dead first) and writes directly so the on-disk outcome is
+    /// deterministic: `wal-before-fsync` persists a torn half-frame (what
+    /// a crash between write and fsync can leave behind);
+    /// `wal-after-fsync` persists the full frame durably — the crash
+    /// lands after the fsync but before the submitter is acked.
+    fn crash_append(&self, frame_bytes: &[u8], site: CrashSite) -> ! {
+        let epoch = {
+            let mut st = self.lock_state();
+            st.crashed = true;
+            st.epoch
+        };
+        self.cv.notify_all();
+        if let Ok(mut f) = self.open_log(epoch) {
+            use std::io::Write;
+            let cut = match site {
+                CrashSite::WalBeforeFsync => frame_bytes.len() / 2,
+                _ => frame_bytes.len(),
+            };
+            let _ = f.write_all(&frame_bytes[..cut]);
+            let _ = f.sync_all();
+        }
+        self.halted.store(true, Ordering::SeqCst);
+        panic!("{}: {}", CRASH_PANIC, site.as_str());
+    }
+
+    /// Injected crash in the snapshot path (no direct file work beyond
+    /// what the caller already did).  All locks are released before the
+    /// panic so the abandoned gateway's mutexes stay clean.
+    fn crash(&self, site: CrashSite) -> ! {
+        self.mark_crashed();
+        self.halted.store(true, Ordering::SeqCst);
+        panic!("{}: {}", CRASH_PANIC, site.as_str());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tony-waltest-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::ids::next_seq()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn admitted(id: u64) -> WalRecord {
+        WalRecord::Admitted {
+            id,
+            user: "alice".into(),
+            name: format!("job{id}"),
+            queue: "default".into(),
+            priority: 3,
+            conf_xml: "<configuration></configuration>".into(),
+        }
+    }
+
+    #[test]
+    fn record_json_round_trip() {
+        let recs = [
+            admitted(7),
+            WalRecord::Started { id: 7, app_id: "application_1_0001".into(), attempt: 2 },
+            WalRecord::KillRequested { id: 7 },
+            WalRecord::Terminal {
+                id: 7,
+                state: "FINISHED".into(),
+                detail: "ok".into(),
+                wall_ms: 1234,
+            },
+        ];
+        for r in &recs {
+            let back = WalRecord::from_json(&r.to_json()).unwrap();
+            assert_eq!(&back, r);
+            assert_eq!(back.job_id(), 7);
+        }
+    }
+
+    #[test]
+    fn append_fsync_then_decode() {
+        let d = dir("append");
+        let mut conf = WalConf::disabled();
+        conf.enable = true;
+        conf.dir = d.clone();
+        let halted = Arc::new(AtomicBool::new(false));
+        let wal = Wal::open(conf, halted, None).unwrap();
+        wal.append(&admitted(1)).unwrap();
+        wal.append(&WalRecord::Terminal {
+            id: 1,
+            state: "FINISHED".into(),
+            detail: String::new(),
+            wall_ms: 5,
+        })
+        .unwrap();
+        wal.close();
+        let bytes = std::fs::read(log_path(&d, 0)).unwrap();
+        let (recs, clean) = decode_stream(&bytes);
+        assert!(clean);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0], admitted(1));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_cleanly() {
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&admitted(1).encode());
+        let full = admitted(2).encode();
+        bytes.extend_from_slice(&full[..full.len() / 2]);
+        let (recs, clean) = decode_stream(&bytes);
+        assert!(!clean);
+        assert_eq!(recs, vec![admitted(1)]);
+        // Corrupt checksum: same clean stop.
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&admitted(1).encode());
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        let (recs, clean) = decode_stream(&bytes);
+        assert!(!clean);
+        assert!(recs.is_empty());
+    }
+
+    #[test]
+    fn snapshot_rotates_epoch_and_retires_old_log() {
+        let d = dir("rotate");
+        let mut conf = WalConf::disabled();
+        conf.enable = true;
+        conf.dir = d.clone();
+        let halted = Arc::new(AtomicBool::new(false));
+        let wal = Wal::open(conf, halted, None).unwrap();
+        wal.append(&admitted(1)).unwrap();
+        wal.install_snapshot(|| {
+            let mut j = Json::obj();
+            j.set("next_id", 2u64);
+            j.set("jobs", Json::Arr(Vec::new()));
+            j
+        })
+        .unwrap();
+        assert_eq!(wal.epoch(), 1);
+        assert!(!log_path(&d, 0).exists(), "retired log must be deleted");
+        wal.append(&admitted(2)).unwrap();
+        wal.close();
+        let (recs, clean) = decode_stream(&std::fs::read(log_path(&d, 1)).unwrap());
+        assert!(clean);
+        assert_eq!(recs, vec![admitted(2)], "post-snapshot appends land in the new epoch");
+        let snap = Json::parse(&std::fs::read_to_string(d.join("snapshot.json")).unwrap()).unwrap();
+        assert_eq!(snap.get("wal_epoch").and_then(|v| v.as_u64()), Some(1));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn open_sweeps_orphaned_tmp_files() {
+        let d = dir("sweep");
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join(".snapshot.1-1.tmp"), b"torn").unwrap();
+        let mut conf = WalConf::disabled();
+        conf.enable = true;
+        conf.dir = d.clone();
+        let wal = Wal::open(conf, Arc::new(AtomicBool::new(false)), None).unwrap();
+        assert!(!d.join(".snapshot.1-1.tmp").exists(), "orphan must be swept at open");
+        wal.close();
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

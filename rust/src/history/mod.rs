@@ -201,23 +201,36 @@ impl HistoryStore {
     /// writer's in-flight temp file is never yanked out from under its
     /// rename.
     fn sweep_stale_tmp(&self) {
-        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        self.sweep_orphans(std::time::Duration::from_secs(3600));
+    }
+
+    /// Remove temp files abandoned by crashed writers (a crash between
+    /// create and rename leaks the `.{app}.{pid}-{seq}.tmp` file forever
+    /// otherwise) once they are at least `min_age` old.  Called with an
+    /// hour's grace on every `record` and at gateway boot; tests pass
+    /// `Duration::ZERO` to sweep unconditionally.  Returns how many
+    /// orphans were removed.
+    pub fn sweep_orphans(&self, min_age: std::time::Duration) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return 0 };
+        let mut removed = 0;
         for ent in entries.flatten() {
             let name = ent.file_name().to_string_lossy().into_owned();
             if !(name.starts_with('.') && name.ends_with(".tmp")) {
                 continue;
             }
-            let stale = ent
-                .metadata()
-                .and_then(|m| m.modified())
-                .ok()
-                .and_then(|t| t.elapsed().ok())
-                .map(|age| age.as_secs() > 3600)
-                .unwrap_or(false);
-            if stale {
-                let _ = std::fs::remove_file(ent.path());
+            let stale = min_age.is_zero()
+                || ent
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.elapsed().ok())
+                    .map(|age| age >= min_age)
+                    .unwrap_or(false);
+            if stale && std::fs::remove_file(ent.path()).is_ok() {
+                removed += 1;
             }
         }
+        removed
     }
 
     /// Capture a record from a live job handle + RM report.
@@ -356,6 +369,27 @@ mod tests {
             series: Json::obj(),
             trace: Json::obj(),
         }
+    }
+
+    #[test]
+    fn sweep_orphans_removes_stale_tmp_only() {
+        let s = store("orphans");
+        s.record(&sample("application_1_0001", true)).unwrap();
+        // A fake orphan: what a writer crashing between create and
+        // rename leaves behind.
+        let orphan = s.dir().join(".application_1_0002.12345-1.tmp");
+        std::fs::write(&orphan, b"torn half-record").unwrap();
+        // Freshly written — the hour-graced sweep must leave it alone
+        // (a live writer could still own it).
+        assert_eq!(s.sweep_orphans(std::time::Duration::from_secs(3600)), 0);
+        assert!(orphan.exists());
+        // The unconditional sweep (boot-time semantics in tests) removes
+        // exactly the orphan; the real record is untouched.
+        assert_eq!(s.sweep_orphans(std::time::Duration::ZERO), 1);
+        assert!(!orphan.exists());
+        assert_eq!(s.list().unwrap().len(), 1);
+        assert!(s.load("application_1_0001").is_ok());
+        let _ = std::fs::remove_dir_all(s.dir());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! tony submit --gateway 127.0.0.1:8080 --conf job.xml [--user alice]
 //!             [--priority 3] [--no-wait]
 //! tony serve  [--nodes 8] [--port 8080] [--workers 8] [--queue-depth 64]
+//!             [--wal-dir DIR] [--wal-snapshot-every 256] [--wal-fsync true|false]
+//!             [--recover]  (replay the WAL dir and resume the job table)
 //!             [--queues ml:0.6:0.8,etl:0.4:1.0] [--map alice=ml,bob=etl]
 //!             [--max-user-active 8] [--artifacts DIR]
 //!             [--gang-mode true|false] [--preemption true|false]
@@ -67,7 +69,8 @@ fn usage() -> ! {
          [--queues name:cap:max,...] [--map user=queue,...] [--max-user-active 8] \
          [--artifacts DIR] [--gang-mode true|false] [--preemption true|false] \
          [--preemption-grace-ms 2000] [--preemption-max-victims 8] \
-         [--reservation-limit 2]\n  \
+         [--reservation-limit 2] [--wal-dir DIR] [--wal-snapshot-every 256] \
+         [--wal-fsync true|false] [--recover]\n  \
          tony demo [--artifacts artifacts/tiny] [--steps 10]\n  \
          tony trace <job-id> --gateway <host:port>  (or <app-id> from local history)\n  \
          tony lint [paths...] [--deny warnings] [--manifest rust/lint/lock-order.toml] \
@@ -399,8 +402,28 @@ fn main() {
                     }
                 }
             }
+            // Durability flags ride through the site-conf path so the
+            // same keys work from XML and from the command line.
+            let mut site = Configuration::new();
+            if let Some(dir) = flags.get("wal-dir") {
+                site.set("tony.wal.enable", "true");
+                site.set("tony.wal.dir", dir.as_str());
+            }
+            if let Some(n) = flags.get("wal-snapshot-every") {
+                site.set("tony.wal.snapshot-every", n.as_str());
+            }
+            if let Some(b) = flags.get("wal-fsync") {
+                site.set("tony.wal.fsync", b.as_str());
+            }
+            gconf.apply_site_conf(&site);
+            let recover = flags.get("recover").map(|s| s == "true").unwrap_or(false);
+            if recover && !gconf.wal.enable {
+                eprintln!("--recover requires --wal-dir (nothing to replay without a WAL)");
+                std::process::exit(2);
+            }
             let port: u16 = flags.get("port").and_then(|s| s.parse().ok()).unwrap_or(8080);
-            let gw = match Gateway::start(rm, gconf) {
+            let boot = if recover { Gateway::recover(rm, gconf) } else { Gateway::start(rm, gconf) };
+            let gw = match boot {
                 Ok(g) => g,
                 Err(e) => {
                     eprintln!("gateway failed to start: {e:#}");

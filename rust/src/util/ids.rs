@@ -18,6 +18,18 @@ pub struct ApplicationId {
     pub seq: u64,
 }
 
+impl ApplicationId {
+    /// Parse the `application_<clusterTs>_<seq>` rendering (inverse of
+    /// `Display`; zero-padding on the sequence is accepted but not
+    /// required).  Used by gateway crash recovery, which persists app
+    /// ids as strings in its WAL.
+    pub fn parse(s: &str) -> Option<ApplicationId> {
+        let rest = s.strip_prefix("application_")?;
+        let (ts, seq) = rest.split_once('_')?;
+        Some(ApplicationId { cluster_ts: ts.parse().ok()?, seq: seq.parse().ok()? })
+    }
+}
+
 impl fmt::Display for ApplicationId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "application_{}_{:04}", self.cluster_ts, self.seq)
@@ -84,6 +96,19 @@ mod tests {
         let c = ContainerId { app, seq: 3 };
         assert_eq!(c.to_string(), "container_1700000000_0012_000003");
         assert_eq!(NodeId(5).to_string(), "node005");
+    }
+
+    #[test]
+    fn application_id_parse_round_trip() {
+        let app = ApplicationId { cluster_ts: 1700000000, seq: 12 };
+        assert_eq!(ApplicationId::parse(&app.to_string()), Some(app));
+        assert_eq!(
+            ApplicationId::parse("application_5_7"),
+            Some(ApplicationId { cluster_ts: 5, seq: 7 })
+        );
+        assert_eq!(ApplicationId::parse("container_1_0001_000001"), None);
+        assert_eq!(ApplicationId::parse("application_x_1"), None);
+        assert_eq!(ApplicationId::parse("application_1"), None);
     }
 
     #[test]

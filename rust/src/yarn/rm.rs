@@ -23,6 +23,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::json::Json;
 use crate::trace::SpanStore;
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::event::{tag, WakeupBus};
@@ -662,6 +663,42 @@ impl ResourceManager {
     /// [`SchedStats`].
     pub fn scheduler_stats(&self) -> SchedStats {
         self.inner.lock().unwrap().scheduler.stats()
+    }
+
+    /// The scheduler's queue/gang/reservation standing as JSON — what
+    /// the gateway embeds in its WAL snapshots (operator forensics: a
+    /// crash dump of *why* jobs were waiting rides along with the job
+    /// table) and what `docs/DURABILITY.md` documents as the `sched`
+    /// snapshot section.
+    pub fn sched_state_json(&self) -> Json {
+        let mut queues = Vec::new();
+        for q in self.queue_stats() {
+            let mut o = Json::obj();
+            o.set("name", q.name.as_str());
+            o.set("used_mem_mb", q.used.memory_mb);
+            o.set("used_vcores", q.used.vcores as u64);
+            o.set("used_gpus", q.used.gpus as u64);
+            o.set("pending", q.pending as u64);
+            o.set("pending_gangs", q.pending_gangs as u64);
+            o.set("reservations", q.reservations as u64);
+            o.set("preemptions", q.preemptions);
+            o.set("utilization", q.utilization);
+            o.set("guaranteed", q.guaranteed);
+            queues.push(o);
+        }
+        let stats = self.scheduler_stats();
+        let mut s = Json::obj();
+        s.set("gangs_placed", stats.gangs_placed);
+        s.set("gangs_demoted", stats.gangs_demoted);
+        s.set("reservations_made", stats.reservations_made);
+        s.set("preemption_rounds", stats.preemption_rounds);
+        s.set("preemptions", stats.preemptions);
+        s.set("unknown_queue_asks", stats.unknown_queue_asks);
+        s.set("unknown_queue_releases", stats.unknown_queue_releases);
+        let mut j = Json::obj();
+        j.set("queues", Json::Arr(queues));
+        j.set("stats", s);
+        j
     }
 
     /// Where `id` stands with the gang scheduler (the gateway surfaces

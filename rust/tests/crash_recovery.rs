@@ -1,0 +1,515 @@
+//! Deterministic crash-point recovery suite: kill the gateway at every
+//! named site in the WAL append/snapshot path (`tony.chaos.crash-point`,
+//! see [`tony::chaos::CrashSite`]) under a manual clock, restart it with
+//! [`Gateway::recover`], and assert the durability invariant:
+//!
+//! > every **acked** submission survives; every **unacked** submission is
+//! > either absent or re-admitted — never duplicated.
+//!
+//! The chaos panics are in-process stand-ins for `kill -9`: the armed
+//! operation dies mid-flight (caught with `catch_unwind`), the halted
+//! gateway writes no further bytes, and recovery sees exactly the disk
+//! state a real crash at that instant would leave.  docs/DURABILITY.md
+//! catalogs what each site persists.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tony::chaos::{CrashSite, CRASH_PANIC};
+use tony::gateway::{replay_dir, Gateway, GatewayConf, JobState, SubmitOutcome};
+use tony::tonyconf::JobConfBuilder;
+use tony::util::ids::ApplicationId;
+use tony::util::ManualClock;
+use tony::xmlconf::Configuration;
+use tony::yarn::{NodeSpec, QueueConf, Resource, ResourceManager, RmConf};
+
+/// Suppress the backtrace spew from *expected* injected-crash panics
+/// (identified by [`CRASH_PANIC`] in the message); real panics still
+/// report through the previous hook.
+fn silence_chaos_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains(CRASH_PANIC) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Drive virtual time forward until `done` flips (same pacing as the
+/// event-driven suite: +5 ms virtual every ~0.5 ms real).
+fn spawn_clock_driver(
+    clock: Arc<ManualClock>,
+    done: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while !done.load(Ordering::Relaxed) {
+            clock.advance_ms(5);
+            tony::util::clock::real_sleep(Duration::from_micros(500));
+        }
+    })
+}
+
+/// Run `f` with the clock driver running, then stop the driver.
+fn drive_while<T>(clock: &Arc<ManualClock>, f: impl FnOnce() -> T) -> T {
+    let done = Arc::new(AtomicBool::new(false));
+    let driver = spawn_clock_driver(clock.clone(), done.clone());
+    let out = f();
+    done.store(true, Ordering::Relaxed);
+    driver.join().unwrap();
+    out
+}
+
+/// Real-time watchdog: a stalled recovery path fails within `secs`
+/// instead of hanging the suite.
+fn with_watchdog<T: Send + 'static>(secs: u64, body: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(body());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("crash-recovery path stalled (watchdog)")
+}
+
+fn manual_rm_sized(clock: &Arc<ManualClock>, nodes: u32, each: Resource) -> Arc<ResourceManager> {
+    let specs = (0..nodes).map(|i| NodeSpec::new(i, each)).collect();
+    ResourceManager::start_with(
+        specs,
+        QueueConf::default_only(),
+        RmConf { clock: clock.clone(), fallback_tick_ms: 0, ..Default::default() },
+    )
+}
+
+fn manual_rm(clock: &Arc<ManualClock>, nodes: u32) -> Arc<ResourceManager> {
+    manual_rm_sized(clock, nodes, Resource::new(4096, 8, 0))
+}
+
+fn temp_base(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "tony-crashtest-{tag}-{}-{}",
+        std::process::id(),
+        tony::util::ids::next_seq()
+    ))
+}
+
+fn wal_dir(base: &std::path::Path) -> std::path::PathBuf {
+    base.join("wal")
+}
+
+/// Gateway conf with the WAL on (fsync'd) — routed through
+/// [`GatewayConf::apply_site_conf`] exactly like `tony serve` does —
+/// optionally armed with a crash point.
+fn gw_conf(base: &std::path::Path, crash: Option<CrashSite>, snapshot_every: u64) -> GatewayConf {
+    let mut conf = GatewayConf::new(base.join("artifacts"));
+    conf.history_dir = base.join("history");
+    conf.workers = 2;
+    conf.job_timeout = Duration::from_secs(600); // virtual ms
+    let mut site = Configuration::new();
+    site.set("tony.wal.enable", "true");
+    site.set("tony.wal.dir", wal_dir(base).to_string_lossy().into_owned());
+    site.set("tony.wal.snapshot-every", snapshot_every.to_string());
+    site.set("tony.wal.fsync", "true");
+    if let Some(c) = crash {
+        site.set("tony.chaos.crash-point", c.as_str());
+    }
+    conf.apply_site_conf(&site);
+    conf
+}
+
+fn job_xml(name: &str, steps: u64) -> Configuration {
+    JobConfBuilder::new(name)
+        .instances("worker", 1)
+        .memory("worker", "512m")
+        .instances("ps", 1)
+        .memory("ps", "512m")
+        .set("tony.am.memory", "256m")
+        .set("tony.train.steps", &steps.to_string())
+        .set("tony.train.checkpoint-every", "0")
+        .set("tony.task.max-missed-heartbeats", "2000")
+        .build()
+}
+
+fn assert_capacity_restored(rm: &ResourceManager) {
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leaked");
+    }
+}
+
+/// `wal-before-fsync`: the process dies having written only half the
+/// admission frame.  The submitter was never acked, so the job must be
+/// absent after recovery — and the torn tail must not poison new work.
+#[test]
+fn wal_before_fsync_crash_drops_only_the_unacked_submission() {
+    silence_chaos_panics();
+    with_watchdog(120, || {
+        let clock = ManualClock::shared();
+        let rm = manual_rm(&clock, 2);
+        let base = temp_base("before-fsync");
+        let gw =
+            Gateway::start(rm, gw_conf(&base, Some(CrashSite::WalBeforeFsync), 256)).unwrap();
+        let g = gw.clone();
+        let crashed = catch_unwind(AssertUnwindSafe(move || {
+            g.submit_conf("alice", 1, job_xml("doomed", 2))
+        }));
+        assert!(crashed.is_err(), "armed submit must die at the crash point");
+        assert!(gw.is_halted(), "the crash point must halt the gateway");
+        gw.simulate_crash(); // release the dead incarnation's workers
+
+        // On disk: a half-written frame.  Replay drops it cleanly.
+        let rep = replay_dir(&wal_dir(&base)).unwrap();
+        assert!(!rep.clean_tail, "the half-written frame must read as torn");
+        assert!(rep.state.jobs.is_empty(), "unacked submission must not survive");
+
+        // Restart against a fresh RM (full process restart).
+        let rm2 = manual_rm(&clock, 2);
+        let gw2 = Gateway::recover(rm2, gw_conf(&base, None, 256)).unwrap();
+        assert_eq!(gw2.live_counts(), (0, 0), "nothing to recover");
+        // Recovery's boot snapshot rotated past the torn epoch-0 log.
+        assert!(
+            !wal_dir(&base).join("wal-0.log").exists(),
+            "torn log must be retired by the recovery snapshot"
+        );
+        let SubmitOutcome::Accepted { id } = gw2.submit_conf("alice", 1, job_xml("fresh", 2))
+        else {
+            panic!("fresh submit rejected after recovery")
+        };
+        drive_while(&clock, || {
+            assert!(gw2.wait_idle(Duration::from_secs(3000)), "gateway never drained");
+        });
+        assert_eq!(gw2.job_state(id), Some(JobState::Finished));
+        assert_capacity_restored(gw2.rm());
+        gw2.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+    });
+}
+
+/// Shared script for the two "record durable, submitter never acked"
+/// sites: recovery must re-admit the job exactly once, it must finish,
+/// and its id must never be reused.
+fn durable_unacked_case(site: CrashSite, tag: &str) {
+    silence_chaos_panics();
+    with_watchdog(120, || {
+        let clock = ManualClock::shared();
+        let rm = manual_rm(&clock, 2);
+        let base = temp_base(tag);
+        let gw = Gateway::start(rm, gw_conf(&base, Some(site), 256)).unwrap();
+        let g = gw.clone();
+        let crashed = catch_unwind(AssertUnwindSafe(move || {
+            g.submit_conf("alice", 1, job_xml("limbo", 2))
+        }));
+        assert!(crashed.is_err(), "armed submit must die at {site}");
+        gw.simulate_crash();
+
+        // The admission frame is whole and durable even though the
+        // submitter never got its ack.
+        let rep = replay_dir(&wal_dir(&base)).unwrap();
+        assert!(rep.clean_tail, "a fully-synced frame must read clean");
+        assert_eq!(rep.state.jobs.len(), 1, "durable admission must replay");
+        let limbo = *rep.state.jobs.keys().next().unwrap();
+
+        let rm2 = manual_rm(&clock, 2);
+        let gw2 = Gateway::recover(rm2, gw_conf(&base, None, 256)).unwrap();
+        let (pending, running) = gw2.live_counts();
+        assert_eq!(pending + running, 1, "re-admitted exactly once");
+        drive_while(&clock, || {
+            assert!(gw2.wait_idle(Duration::from_secs(3000)), "gateway never drained");
+        });
+        assert_eq!(gw2.job_state(limbo), Some(JobState::Finished), "re-admitted job must run");
+        let dups = gw2
+            .jobs_json()
+            .get("jobs")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .filter(|j| j.get("name").and_then(|n| n.as_str()) == Some("limbo"))
+            .count();
+        assert_eq!(dups, 1, "never duplicated");
+
+        // Acked ids are never reused across restarts.
+        let SubmitOutcome::Accepted { id: fresh } = gw2.submit_conf("bob", 1, job_xml("fresh", 2))
+        else {
+            panic!("fresh submit rejected after recovery")
+        };
+        assert!(fresh > limbo, "acked ids must never be reused (fresh {fresh} vs {limbo})");
+        drive_while(&clock, || {
+            assert!(gw2.wait_idle(Duration::from_secs(3000)), "gateway never drained");
+        });
+        assert_eq!(gw2.job_state(fresh), Some(JobState::Finished));
+        assert_capacity_restored(gw2.rm());
+        gw2.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+    });
+}
+
+#[test]
+fn wal_after_fsync_crash_readmits_the_durable_submission_once() {
+    durable_unacked_case(CrashSite::WalAfterFsync, "after-fsync");
+}
+
+#[test]
+fn post_admit_pre_ack_crash_readmits_the_durable_submission_once() {
+    durable_unacked_case(CrashSite::PostAdmitPreAck, "post-admit");
+}
+
+/// Shared script for the two snapshot-path sites: two acked jobs are in
+/// flight, the gateway dies inside snapshot compaction, and recovery on
+/// the *same* cluster must preserve both (re-attaching to still-live
+/// applications rather than launching duplicates).
+fn snapshot_crash_case(site: CrashSite, tag: &str) {
+    silence_chaos_panics();
+    with_watchdog(180, || {
+        let clock = ManualClock::shared();
+        let rm = manual_rm(&clock, 2);
+        let base = temp_base(tag);
+        // Huge snapshot-every: the explicit force below is the only
+        // snapshot attempt, so the armed site fires deterministically.
+        let gw = Gateway::start(rm.clone(), gw_conf(&base, Some(site), 1_000_000)).unwrap();
+        drive_while(&clock, || {
+            let SubmitOutcome::Accepted { id: a } =
+                gw.submit_conf("alice", 2, job_xml("acked-a", 40))
+            else {
+                panic!("submit a rejected")
+            };
+            let SubmitOutcome::Accepted { id: b } = gw.submit_conf("bob", 1, job_xml("acked-b", 40))
+            else {
+                panic!("submit b rejected")
+            };
+            // Wait until each job's fate is WAL-visible beyond admission
+            // (Started or Terminal durable) so the crash window is
+            // deterministic: no application can be mid-launch with its
+            // `Started` record still in flight.
+            let deadline = Instant::now() + Duration::from_secs(60);
+            loop {
+                let rep = replay_dir(&wal_dir(&base)).unwrap();
+                let settled = [a, b].iter().all(|id| {
+                    rep.state.jobs.get(id).map(|j| j.running).unwrap_or(false)
+                        || rep.state.completed.contains_key(id)
+                });
+                if settled {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "jobs never started: {:?}", rep.state);
+                tony::util::clock::real_sleep(Duration::from_millis(10));
+            }
+
+            let crashed = catch_unwind(AssertUnwindSafe(|| gw.force_snapshot()));
+            assert!(crashed.is_err(), "armed snapshot must die at {site}");
+            gw.simulate_crash();
+
+            // No snapshot was published; both acked jobs replay from the
+            // log chain alone, and the crash debris is a lone temp file.
+            assert!(!wal_dir(&base).join("snapshot.json").exists(), "rename must not happen");
+            let rep = replay_dir(&wal_dir(&base)).unwrap();
+            assert!(!rep.had_snapshot);
+            assert!(rep.clean_tail, "the append path was not involved in this crash");
+            for id in [a, b] {
+                assert!(
+                    rep.state.jobs.contains_key(&id) || rep.state.completed.contains_key(&id),
+                    "acked submission {id} must survive: {:?}",
+                    rep.state
+                );
+            }
+
+            // Recover on the SAME cluster: live applications re-attach.
+            let gw2 = Gateway::recover(rm.clone(), gw_conf(&base, None, 256)).unwrap();
+            assert!(
+                wal_dir(&base).join("snapshot.json").exists(),
+                "recovery's first act is a fresh snapshot"
+            );
+            let leftovers: Vec<String> = std::fs::read_dir(wal_dir(&base))
+                .unwrap()
+                .flatten()
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.ends_with(".tmp"))
+                .collect();
+            assert!(leftovers.is_empty(), "orphaned temp files must be swept: {leftovers:?}");
+
+            assert!(gw2.wait_idle(Duration::from_secs(3000)), "recovered gateway never drained");
+            for id in [a, b] {
+                match gw2.job_state(id) {
+                    Some(state) => assert_eq!(state, JobState::Finished, "job {id}"),
+                    // Terminalized before the crash: replay tombstones it
+                    // instead of resurrecting it.
+                    None => assert_eq!(
+                        rep.state.completed.get(&id).map(String::as_str),
+                        Some("FINISHED"),
+                        "job {id} neither recovered nor tombstoned"
+                    ),
+                }
+            }
+            // Exactly one history record per application, however each
+            // job's completion was observed (old worker or re-attach
+            // monitor — both key the same application id).
+            assert_eq!(gw2.history().list().unwrap().len(), 2);
+
+            let SubmitOutcome::Accepted { id: fresh } =
+                gw2.submit_conf("carol", 1, job_xml("fresh", 2))
+            else {
+                panic!("fresh submit rejected after recovery")
+            };
+            assert!(fresh > a.max(b), "acked ids must never be reused");
+            assert!(gw2.wait_idle(Duration::from_secs(3000)), "gateway never drained");
+            assert_eq!(gw2.job_state(fresh), Some(JobState::Finished));
+            assert_capacity_restored(gw2.rm());
+            gw2.shutdown();
+        });
+        let _ = std::fs::remove_dir_all(&base);
+    });
+}
+
+#[test]
+fn mid_snapshot_crash_preserves_every_acked_job() {
+    snapshot_crash_case(CrashSite::MidSnapshot, "mid-snapshot");
+}
+
+#[test]
+fn before_rename_crash_preserves_every_acked_job() {
+    snapshot_crash_case(CrashSite::BeforeRename, "before-rename");
+}
+
+/// Kill-and-restart mid-allocate-wave: the gateway dies while a job's
+/// gang is WAITING_FOR_GANG at the scheduler.  Recovery must re-attach
+/// to the *same* application (no duplicate containers), surface the gang
+/// standing through the new gateway, and let the job run to completion
+/// once capacity frees up.
+#[test]
+fn crash_mid_allocate_wave_reattaches_the_waiting_gang() {
+    silence_chaos_panics();
+    with_watchdog(180, || {
+        let clock = ManualClock::shared();
+        // One small node: the hog (AM 256 + worker 512 + ps 512) leaves
+        // 768 MB — enough for the blocked job's AM but not its gang.
+        let rm = manual_rm_sized(&clock, 1, Resource::new(2048, 8, 0));
+        let base = temp_base("midwave");
+        let gw = Gateway::start(rm.clone(), gw_conf(&base, None, 256)).unwrap();
+        drive_while(&clock, || {
+            let SubmitOutcome::Accepted { id: hog } =
+                gw.submit_conf("alice", 5, job_xml("hog", 50_000))
+            else {
+                panic!("hog rejected")
+            };
+            let deadline = Instant::now() + Duration::from_secs(60);
+            loop {
+                let free = rm.node_usage()[0].1.memory_mb;
+                if free <= 768 {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "hog never placed (free {free} MB)");
+                tony::util::clock::real_sleep(Duration::from_millis(20));
+            }
+
+            let SubmitOutcome::Accepted { id: blocked } =
+                gw.submit_conf("bob", 1, job_xml("blocked", 2))
+            else {
+                panic!("blocked job rejected")
+            };
+            let deadline = Instant::now() + Duration::from_secs(60);
+            let app_b = loop {
+                let waiting = gw.job_json(blocked).and_then(|j| {
+                    (j.get("sched_state").and_then(|s| s.as_str()) == Some("WAITING_FOR_GANG"))
+                        .then(|| j.get("app_id").and_then(|a| a.as_str()).map(str::to_string))
+                        .flatten()
+                });
+                if let Some(app) = waiting {
+                    break ApplicationId::parse(&app).expect("app id parses");
+                }
+                assert!(Instant::now() < deadline, "blocked job never reached WAITING_FOR_GANG");
+                tony::util::clock::real_sleep(Duration::from_millis(20));
+            };
+
+            // The job table learns the app id a moment before the
+            // `Started` record is durable; wait for the WAL to catch up
+            // so recovery is guaranteed to re-attach rather than racing
+            // into a relaunch of a still-live application.
+            let deadline = Instant::now() + Duration::from_secs(60);
+            loop {
+                let rep = replay_dir(&wal_dir(&base)).unwrap();
+                if [hog, blocked]
+                    .iter()
+                    .all(|id| rep.state.jobs.get(id).map(|j| j.running).unwrap_or(false))
+                {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "Started records never durable");
+                tony::util::clock::real_sleep(Duration::from_millis(10));
+            }
+
+            // kill -9 mid-wave, then restart on the same cluster.
+            gw.simulate_crash();
+            let gw2 = Gateway::recover(rm.clone(), gw_conf(&base, None, 256)).unwrap();
+
+            let j = gw2.job_json(blocked).expect("blocked job recovered");
+            assert_eq!(j.get("state").and_then(|s| s.as_str()), Some("RUNNING"));
+            assert_eq!(
+                j.get("app_id").and_then(|a| a.as_str()),
+                Some(app_b.to_string().as_str()),
+                "must re-attach to the same application, not launch a duplicate"
+            );
+            assert_eq!(
+                j.get("sched_state").and_then(|s| s.as_str()),
+                Some("WAITING_FOR_GANG"),
+                "gang standing must survive the restart: {}",
+                j.render_pretty()
+            );
+            assert!(
+                j.get("detail").and_then(|d| d.as_str()).unwrap_or("").contains("re-attached"),
+                "detail must say re-attached: {}",
+                j.render_pretty()
+            );
+            let njobs = gw2.jobs_json().get("jobs").and_then(|v| v.as_arr()).unwrap().len();
+            assert_eq!(njobs, 2, "exactly the two recovered jobs, no duplicates");
+
+            // Free the node through the NEW gateway: the hog dies, the
+            // blocked gang places, everything settles.
+            let _ = gw2.kill(hog);
+            assert!(gw2.wait_idle(Duration::from_secs(3000)), "recovered gateway never drained");
+            assert_eq!(gw2.job_state(blocked), Some(JobState::Finished));
+            assert_eq!(gw2.job_state(hog), Some(JobState::Killed));
+            assert_capacity_restored(&rm);
+            gw2.shutdown();
+        });
+        let _ = std::fs::remove_dir_all(&base);
+    });
+}
+
+/// `tony.wal.*` and `tony.chaos.crash-point` route through
+/// [`GatewayConf::apply_site_conf`] (the same path `tony serve` uses).
+#[test]
+fn site_conf_routes_wal_and_chaos_keys() {
+    let mut site = Configuration::new();
+    site.set("tony.wal.enable", "true");
+    site.set("tony.wal.dir", "/tmp/tony-wal-conf-test");
+    site.set("tony.wal.snapshot-every", "17");
+    site.set("tony.wal.fsync", "false");
+    site.set("tony.chaos.crash-point", "mid-snapshot");
+    let mut conf = GatewayConf::new(std::env::temp_dir().join("tony-crashconf-artifacts"));
+    conf.apply_site_conf(&site);
+    assert!(conf.wal.enable);
+    assert_eq!(conf.wal.dir, std::path::PathBuf::from("/tmp/tony-wal-conf-test"));
+    assert_eq!(conf.wal.snapshot_every, 17);
+    assert!(!conf.wal.fsync);
+    assert_eq!(conf.crash_point, Some(CrashSite::MidSnapshot));
+    for site in CrashSite::ALL {
+        assert_eq!(CrashSite::parse(site.as_str()), Some(site), "{site} must round-trip");
+    }
+
+    // Unknown crash-point values are tolerated (warn, stay unarmed) —
+    // chaos keys must never fail a real boot.
+    let mut site = Configuration::new();
+    site.set("tony.chaos.crash-point", "not-a-site");
+    let mut conf = GatewayConf::new(std::env::temp_dir().join("tony-crashconf-artifacts"));
+    conf.apply_site_conf(&site);
+    assert_eq!(conf.crash_point, None);
+    assert!(!conf.wal.enable, "wal keys absent leave the wal off");
+}

@@ -168,6 +168,99 @@ fn registration_deadline_fires_under_manual_clock() {
     );
 }
 
+/// Graceful shutdown racing live WAL appends: `shutdown()` drains the
+/// accepted jobs (whose Started/Terminal records are being appended as
+/// it runs), flushes + closes the WAL, and leaves a *clean* replayable
+/// log — proven by replaying the directory and immediately recovering
+/// into a working gateway.
+#[test]
+fn shutdown_during_wal_append_leaves_replayable_log() {
+    with_watchdog(120, || {
+        let clock = ManualClock::shared();
+        let rm = manual_rm(&clock, 2);
+        let base = temp_base("walshutdown");
+        let mut conf = GatewayConf::new(base.join("artifacts"));
+        conf.history_dir = base.join("history");
+        conf.workers = 2;
+        conf.job_timeout = Duration::from_secs(600); // virtual ms
+        let mut site = Configuration::new();
+        site.set("tony.wal.enable", "true");
+        site.set("tony.wal.dir", base.join("wal").to_string_lossy().into_owned());
+        conf.apply_site_conf(&site);
+        let gw = Gateway::start(rm, conf.clone()).unwrap();
+
+        let ids: Vec<u64> = (0..3)
+            .map(|i| {
+                let job = JobConfBuilder::new(&format!("drain-{i}"))
+                    .instances("worker", 1)
+                    .memory("worker", "512m")
+                    .instances("ps", 1)
+                    .memory("ps", "512m")
+                    .set("tony.am.memory", "256m")
+                    .set("tony.train.steps", "2")
+                    .set("tony.train.checkpoint-every", "0")
+                    .set("tony.task.max-missed-heartbeats", "2000")
+                    .build();
+                match gw.submit_conf("alice", 1, job) {
+                    SubmitOutcome::Accepted { id } => id,
+                    other => panic!("submit {i} rejected: {other:?}"),
+                }
+            })
+            .collect();
+
+        // Shut down while the jobs run: workers drain what was accepted
+        // (appending Started/Terminal records as they go), then the WAL
+        // is flushed and closed.
+        let done = Arc::new(AtomicBool::new(false));
+        let driver = spawn_clock_driver(clock.clone(), done.clone());
+        gw.shutdown();
+        done.store(true, Ordering::Relaxed);
+        driver.join().unwrap();
+
+        // The log on disk is complete: clean tail, every acked job's
+        // terminal outcome durable.
+        let rep = tony::gateway::replay_dir(&base.join("wal")).unwrap();
+        assert!(rep.clean_tail, "graceful shutdown must not leave a torn tail");
+        for id in &ids {
+            assert_eq!(
+                rep.state.completed.get(id).map(String::as_str),
+                Some("FINISHED"),
+                "job {id} must have a durable terminal record: {:?}",
+                rep.state
+            );
+        }
+        assert!(rep.state.jobs.is_empty(), "nothing left live: {:?}", rep.state.jobs);
+
+        // Immediate recovery on the shut-down directory: nothing to
+        // restore, ids are not reused, fresh work runs.
+        let rm2 = manual_rm(&clock, 2);
+        let gw2 = Gateway::recover(rm2, conf).unwrap();
+        assert_eq!(gw2.live_counts(), (0, 0));
+        let job = JobConfBuilder::new("post-restart")
+            .instances("worker", 1)
+            .memory("worker", "512m")
+            .instances("ps", 1)
+            .memory("ps", "512m")
+            .set("tony.am.memory", "256m")
+            .set("tony.train.steps", "2")
+            .set("tony.train.checkpoint-every", "0")
+            .set("tony.task.max-missed-heartbeats", "2000")
+            .build();
+        let SubmitOutcome::Accepted { id: fresh } = gw2.submit_conf("bob", 1, job) else {
+            panic!("fresh submit rejected after restart")
+        };
+        assert!(fresh > *ids.iter().max().unwrap(), "ids must not be reused across restarts");
+        let done = Arc::new(AtomicBool::new(false));
+        let driver = spawn_clock_driver(clock.clone(), done.clone());
+        assert!(gw2.wait_idle(Duration::from_secs(3000)), "recovered gateway never drained");
+        done.store(true, Ordering::Relaxed);
+        driver.join().unwrap();
+        assert_eq!(gw2.job_state(fresh), Some(JobState::Finished));
+        gw2.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+    });
+}
+
 /// With a frozen manual clock (no driver at all), jobs that terminalize
 /// without running — rejects and kills-from-queue — still drain
 /// `wait_idle` purely by notification, and the killed job leaves a

@@ -29,6 +29,15 @@ TONY_BENCH_SMOKE=1 cargo bench --bench bench_latency
 echo "==> contention bench smoke (gang mode deadlock-freedom at 2/8 jobs)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_contention
 
+echo "==> crash-recovery suite (WAL crash points + mid-allocate-wave restart)"
+# `cargo test -q` above already ran these; run them by name too so a
+# durability regression is named in CI output, not buried in the batch.
+cargo test -q --test crash_recovery
+cargo test -q --test prop_wal
+
+echo "==> gateway bench smoke (multi-tenant throughput + WAL submit-path overhead)"
+TONY_BENCH_SMOKE=1 cargo bench --bench bench_gateway
+
 echo "==> tony-lint (lock order, blocking-under-lock, config/metric drift, sleep ban)"
 # Replaces the old grep gates (tony.scheduler.*/tony.trace.* doc sweeps,
 # std::thread::sleep ban) with the real analyzer: docs/LINTS.md.  Prints
