@@ -11,8 +11,9 @@
 //! `TONY_BENCH_SMOKE=1` runs the reduced gang-mode table only (CI).
 
 use tony::baseline::{run_adhoc_pool, run_managed_pool, synthetic_jobs, AdhocOutcome, AdhocParams};
-use tony::bench::{f1, n, Table};
-use tony::util::ids::ApplicationId;
+use tony::bench::cluster::{run, ClusterSpec, Scenario};
+use tony::bench::{f1, f2, n, Table};
+use tony::util::ids::{ApplicationId, NodeId};
 use tony::yarn::scheduler::SchedNode;
 use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
 
@@ -31,10 +32,11 @@ struct SimJob {
 /// CapacityScheduler (virtual time; no threads): returns
 /// `(completed, deadlocked, makespan_ms, grants)`.
 fn run_contention(n_jobs: u32, gang_mode: bool) -> (u32, bool, u64, usize) {
-    let mut nodes: Vec<SchedNode> =
+    let nodes: Vec<SchedNode> =
         (0..4).map(|i| SchedNode::new(i, None, Resource::new(8192, 8, 0))).collect();
     let total = nodes.iter().fold(Resource::ZERO, |a, x| a + x.capacity);
     let mut sched = CapacityScheduler::new(QueueConf::default_only(), total);
+    sched.set_nodes(nodes);
     let mut jobs: Vec<SimJob> = (0..n_jobs)
         .map(|i| SimJob {
             app: ApplicationId { cluster_ts: 1, seq: i as u64 + 1 },
@@ -71,7 +73,7 @@ fn run_contention(n_jobs: u32, gang_mode: bool) -> (u32, bool, u64, usize) {
     let mut grants_total = 0usize;
     let mut makespan = 0u64;
     loop {
-        let grants = sched.schedule(&mut nodes);
+        let grants = sched.schedule();
         grants_total += grants.len();
         for g in &grants {
             let ji = (g.ask.app.seq - 1) as usize;
@@ -96,9 +98,7 @@ fn run_contention(n_jobs: u32, gang_mode: bool) -> (u32, bool, u64, usize) {
                     }
                     jobs[ji].done = true;
                     for (node, r) in std::mem::take(&mut jobs[ji].granted) {
-                        sched.release("default", r);
-                        let ni = nodes.iter().position(|x| x.id.0 == node).unwrap();
-                        nodes[ni].free += r;
+                        sched.release_container("default", NodeId(node), r);
                     }
                 }
             }
@@ -192,4 +192,26 @@ fn main() {
     println!("\nexpected shape: TonY holds 100% success with queue-growth makespan; ad-hoc success collapses past 100% demand.");
 
     gang_vs_legacy_table(&[2, 8, 32]);
+    large_gang_contention();
+}
+
+/// C1c: many contending gangs at generator scale — 2k nodes / 200
+/// queues / 800 gang jobs through the discrete-event runner, the
+/// contention profile (most rounds re-test blocked gangs) rather than
+/// the throughput profile C5 measures.
+fn large_gang_contention() {
+    let mut table =
+        Table::new(&["scenario", "rounds", "grants", "median-ms", "p99-ms"]);
+    let sc = Scenario::generate(ClusterSpec::smoke());
+    let mut sched = sc.build_scheduler(false);
+    let report = run(&sc, &mut sched);
+    sched.verify_invariants();
+    table.row(&[
+        format!("{}n/{}q/{}j", sc.spec.nodes, sc.spec.queues, sc.spec.jobs),
+        n(report.rounds),
+        n(report.grants),
+        f2(report.pass.median_ms()),
+        f2(report.pass.p99_ms()),
+    ]);
+    table.print("C1c: gang contention at generator scale (indexed path)");
 }

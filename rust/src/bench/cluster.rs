@@ -1,0 +1,334 @@
+//! Discrete-event cluster + workload generator for the scheduler benches.
+//!
+//! `bench_scheduler` and `bench_contention` need realistic 10k-node /
+//! 5k-job / 1k-queue scenarios to exercise the placement indexes at the
+//! operating point the survey papers describe, and they need them
+//! *deterministically* so indexed-vs-linear comparisons and CI smoke
+//! bounds are reproducible.  Everything here is SplitMix64-seeded: the
+//! same `ClusterSpec` always yields the same node mix, queue tree, job
+//! arrivals, and release schedule.
+//!
+//! The runner is a discrete-event loop over "allocate rounds": each
+//! round injects the jobs arriving at that tick as gangs, times one
+//! `CapacityScheduler::schedule()` pass (setup and release bookkeeping
+//! stay outside the measured window), then releases every container
+//! whose job finished this tick through
+//! `CapacityScheduler::release_container` — the same grant/release
+//! index lifecycle the RM drives in production.
+
+use std::time::{Duration, Instant};
+
+use crate::util::ids::ApplicationId;
+use crate::util::SplitMix64;
+use crate::yarn::scheduler::{CapacityScheduler, QueueConf, SchedNode};
+use crate::yarn::{ContainerRequest, Resource};
+
+use super::{stats_from, Stats};
+
+/// Shape of a generated scenario.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: u32,
+    pub queues: usize,
+    pub jobs: usize,
+    /// Arrival rounds: jobs arrive uniformly over `[0, rounds)` and the
+    /// loop keeps running until every container has been released.
+    pub rounds: u64,
+    /// Fraction of nodes carrying the `gpu` label (and of jobs asking
+    /// for it).
+    pub gpu_fraction: f64,
+    pub seed: u64,
+}
+
+impl ClusterSpec {
+    /// The ISSUE 9 operating point: 10k nodes, 1k queues, 5k gang jobs.
+    pub fn large() -> ClusterSpec {
+        ClusterSpec { nodes: 10_000, queues: 1_000, jobs: 5_000, rounds: 200, gpu_fraction: 0.1, seed: 0x70_6e_79 }
+    }
+
+    /// A proportionally shrunk scenario for `TONY_BENCH_SMOKE=1` runs.
+    pub fn smoke() -> ClusterSpec {
+        ClusterSpec { nodes: 2_000, queues: 200, jobs: 800, rounds: 60, gpu_fraction: 0.1, seed: 0x70_6e_79 }
+    }
+}
+
+/// One generated gang job.
+#[derive(Debug, Clone)]
+pub struct GenJob {
+    pub app: ApplicationId,
+    pub queue: usize,
+    pub arrival_round: u64,
+    /// Rounds between a container's grant and its release.
+    pub duration_rounds: u64,
+    pub asks: Vec<ContainerRequest>,
+}
+
+/// A fully generated scenario: nodes, queue tree, and job arrivals
+/// sorted by round.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub spec: ClusterSpec,
+    pub queues: Vec<QueueConf>,
+    pub nodes: Vec<SchedNode>,
+    pub jobs: Vec<GenJob>,
+    pub total: Resource,
+}
+
+impl Scenario {
+    pub fn generate(spec: ClusterSpec) -> Scenario {
+        let mut rng = SplitMix64::new(spec.seed);
+
+        // Queue tree: guarantees sum to ~1.0 (equal split), bursty
+        // ceilings so small queues can borrow — which is what makes the
+        // most-underserved-first ordering and headroom checks do real
+        // work at 1k queues.
+        let cap = 1.0 / spec.queues as f64;
+        let queues: Vec<QueueConf> = (0..spec.queues)
+            .map(|i| QueueConf::new(&format!("q{i}"), cap, (cap * 8.0).min(1.0)))
+            .collect();
+
+        // Node mix: a few memory size classes, a `gpu`-labeled partition.
+        let mut nodes = Vec::with_capacity(spec.nodes as usize);
+        let mut total = Resource::ZERO;
+        let gpu_nodes = (spec.nodes as f64 * spec.gpu_fraction) as u32;
+        for i in 0..spec.nodes {
+            let mem = *rng.choose(&[32_768u64, 65_536, 131_072]);
+            let cores = (mem / 4096) as u32;
+            let (label, gpus) =
+                if i < gpu_nodes { (Some("gpu".to_string()), 8) } else { (None, 0) };
+            let cap = Resource::new(mem, cores, gpus);
+            total += cap;
+            nodes.push(SchedNode::new(i, label, cap));
+        }
+
+        // Jobs: mostly small gangs (the TonY profile: a PS/worker wave
+        // per allocate round), a tail of wide ones, ~gpu_fraction of
+        // them GPU jobs pinned to the labeled partition.
+        let mut jobs = Vec::with_capacity(spec.jobs);
+        for seq in 0..spec.jobs {
+            let tasks = match rng.next_below(10) {
+                0..=5 => rng.range_u64(1, 4),
+                6..=8 => rng.range_u64(4, 16),
+                _ => rng.range_u64(16, 64),
+            } as u32;
+            let gpu_job = rng.chance(spec.gpu_fraction);
+            let task = if gpu_job {
+                Resource::new(rng.range_u64(1, 8) * 1024, rng.range_u64(1, 4) as u32, 1)
+            } else {
+                Resource::new(rng.range_u64(1, 16) * 1024, rng.range_u64(1, 8) as u32, 0)
+            };
+            let mut ask = ContainerRequest::new(task, tasks);
+            if gpu_job {
+                ask = ask.with_label("gpu");
+            }
+            jobs.push(GenJob {
+                app: ApplicationId { cluster_ts: 1, seq: seq as u64 + 1 },
+                queue: rng.next_below(spec.queues as u64) as usize,
+                arrival_round: rng.next_below(spec.rounds),
+                duration_rounds: rng.range_u64(2, 30),
+                asks: vec![ask],
+            });
+        }
+        jobs.sort_by_key(|j| j.arrival_round);
+
+        Scenario { spec, queues, nodes, jobs, total }
+    }
+
+    /// A fresh scheduler loaded with this scenario's queues and nodes.
+    /// `linear_reference` selects the retained linear scan instead of
+    /// the indexes (for baseline and equivalence runs).
+    pub fn build_scheduler(&self, linear_reference: bool) -> CapacityScheduler {
+        let mut sched = CapacityScheduler::new(self.queues.clone(), self.total);
+        sched.set_linear_reference(linear_reference);
+        sched.set_nodes(self.nodes.clone());
+        sched
+    }
+}
+
+/// Outcome of one discrete-event run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Per-`schedule()`-pass latency distribution.
+    pub pass: Stats,
+    pub rounds: u64,
+    pub grants: usize,
+    /// Order-sensitive digest of every `(tag, node)` placement — two
+    /// runs placed identically iff their digests match, which is how
+    /// the benches assert indexed ≡ linear without keeping 100k grants.
+    pub placement_digest: u64,
+}
+
+/// Drive `sched` through the scenario: inject arrivals, time each
+/// `schedule()` pass, release finished containers on their due round.
+/// Runs past `spec.rounds` until the cluster fully drains.
+pub fn run(scenario: &Scenario, sched: &mut CapacityScheduler) -> RunReport {
+    let mut samples: Vec<f64> = Vec::with_capacity(scenario.spec.rounds as usize * 2);
+    let mut grants_total = 0usize;
+    let mut digest = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+    fn fnv(v: u64, d: &mut u64) {
+        *d ^= v;
+        *d = d.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    // Containers in flight, keyed by the round they release at.
+    // (queue index, node, resource) is all release_container needs.
+    let mut in_flight: std::collections::BTreeMap<u64, Vec<(usize, crate::util::ids::NodeId, Resource)>> =
+        std::collections::BTreeMap::new();
+    let mut next_job = 0usize;
+    let mut next_tag = 1u64;
+    let mut next_gang = 1u64;
+    let qnames: Vec<String> = scenario.queues.iter().map(|q| q.name.clone()).collect();
+
+    let mut round = 0u64;
+    loop {
+        // 1. Arrivals for this round become gangs.
+        while next_job < scenario.jobs.len()
+            && scenario.jobs[next_job].arrival_round <= round
+        {
+            let job = &scenario.jobs[next_job];
+            let intake = sched.add_asks_gang(
+                job.app,
+                &qnames[job.queue],
+                &job.asks,
+                next_tag,
+                Some(next_gang),
+            );
+            next_tag = intake.next_tag;
+            next_gang += 1;
+            next_job += 1;
+        }
+
+        // 2. One timed allocate round — the only thing in the window.
+        let t = Instant::now();
+        let grants = sched.schedule();
+        samples.push(t.elapsed().as_nanos() as f64);
+
+        // 3. Bookkeeping: digest + release schedule (untimed).
+        for g in &grants {
+            fnv(g.ask.tag, &mut digest);
+            fnv(g.node.0 as u64, &mut digest);
+            let job = &scenario.jobs[(g.ask.app.seq - 1) as usize];
+            in_flight
+                .entry(round + job.duration_rounds)
+                .or_default()
+                .push((job.queue, g.node, g.ask.resource));
+        }
+        grants_total += grants.len();
+
+        // 4. Releases due this round go back through the index.
+        if let Some(due) = in_flight.remove(&round) {
+            for (qi, node, r) in due {
+                sched.release_container(&qnames[qi], node, r);
+            }
+        }
+
+        round += 1;
+        let drained =
+            next_job >= scenario.jobs.len() && in_flight.is_empty() && sched.pending_count() == 0;
+        // Past the arrival horizon a stuck scenario (asks that can never
+        // place) must still terminate: give it one horizon of grace.
+        if drained || round > scenario.spec.rounds * 4 + 200 {
+            break;
+        }
+    }
+
+    RunReport { pass: stats_from(samples), rounds: round, grants: grants_total, placement_digest: digest }
+}
+
+/// Run the scenario end-to-end with a wall-clock budget: returns early
+/// (with fewer rounds measured) once `budget` elapses.  Used for the
+/// linear baseline at 10k nodes, where a full drain would take minutes.
+pub fn run_budgeted(
+    scenario: &Scenario,
+    sched: &mut CapacityScheduler,
+    budget: Duration,
+) -> RunReport {
+    let start = Instant::now();
+    let mut samples: Vec<f64> = Vec::new();
+    let mut grants_total = 0usize;
+    let mut in_flight: std::collections::BTreeMap<u64, Vec<(usize, crate::util::ids::NodeId, Resource)>> =
+        std::collections::BTreeMap::new();
+    let mut next_job = 0usize;
+    let mut next_tag = 1u64;
+    let mut next_gang = 1u64;
+    let qnames: Vec<String> = scenario.queues.iter().map(|q| q.name.clone()).collect();
+    let mut round = 0u64;
+    loop {
+        while next_job < scenario.jobs.len()
+            && scenario.jobs[next_job].arrival_round <= round
+        {
+            let job = &scenario.jobs[next_job];
+            let intake = sched.add_asks_gang(
+                job.app,
+                &qnames[job.queue],
+                &job.asks,
+                next_tag,
+                Some(next_gang),
+            );
+            next_tag = intake.next_tag;
+            next_gang += 1;
+            next_job += 1;
+        }
+        let t = Instant::now();
+        let grants = sched.schedule();
+        samples.push(t.elapsed().as_nanos() as f64);
+        for g in &grants {
+            let job = &scenario.jobs[(g.ask.app.seq - 1) as usize];
+            in_flight
+                .entry(round + job.duration_rounds)
+                .or_default()
+                .push((job.queue, g.node, g.ask.resource));
+        }
+        grants_total += grants.len();
+        if let Some(due) = in_flight.remove(&round) {
+            for (qi, node, r) in due {
+                sched.release_container(&qnames[qi], node, r);
+            }
+        }
+        round += 1;
+        let drained =
+            next_job >= scenario.jobs.len() && in_flight.is_empty() && sched.pending_count() == 0;
+        if drained || start.elapsed() > budget || round > scenario.spec.rounds * 4 + 200 {
+            break;
+        }
+    }
+    RunReport { pass: stats_from(samples), rounds: round, grants: grants_total, placement_digest: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = ClusterSpec { nodes: 50, queues: 5, jobs: 20, rounds: 10, gpu_fraction: 0.2, seed: 42 };
+        let a = Scenario::generate(spec.clone());
+        let b = Scenario::generate(spec);
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.queues, b.queues);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.app, y.app);
+            assert_eq!(x.queue, y.queue);
+            assert_eq!(x.arrival_round, y.arrival_round);
+            assert_eq!(x.asks, y.asks);
+        }
+    }
+
+    #[test]
+    fn small_run_drains_and_matches_linear() {
+        let spec = ClusterSpec { nodes: 60, queues: 6, jobs: 40, rounds: 20, gpu_fraction: 0.2, seed: 7 };
+        let sc = Scenario::generate(spec);
+        let mut indexed = sc.build_scheduler(false);
+        let mut linear = sc.build_scheduler(true);
+        let ri = run(&sc, &mut indexed);
+        let rl = run(&sc, &mut linear);
+        assert!(ri.grants > 0, "scenario produced no grants");
+        assert_eq!(ri.grants, rl.grants, "indexed and linear grant counts diverge");
+        assert_eq!(
+            ri.placement_digest, rl.placement_digest,
+            "indexed and linear placements diverge"
+        );
+        indexed.verify_invariants();
+    }
+}

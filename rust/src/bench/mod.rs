@@ -7,12 +7,15 @@
 
 use std::time::{Duration, Instant};
 
+pub mod cluster;
+
 #[derive(Debug, Clone)]
 pub struct Stats {
     pub iters: usize,
     pub mean_ns: f64,
     pub median_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
     pub min_ns: f64,
 }
 
@@ -23,6 +26,10 @@ impl Stats {
 
     pub fn median_ms(&self) -> f64 {
         self.median_ns / 1e6
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.p99_ns / 1e6
     }
 
     pub fn per_sec(&self) -> f64 {
@@ -49,6 +56,33 @@ pub fn bench<F: FnMut()>(warmup: usize, max_iters: usize, budget: Duration, mut 
     stats_from(samples)
 }
 
+/// Like [`bench`], but `f` reports the duration to record itself.  This
+/// is what lets a bench keep expensive per-iteration setup (rebuilding a
+/// scheduler, regenerating asks) *outside* the measured window: do the
+/// setup untimed inside `f`, wrap only the interesting call in an
+/// `Instant`, and return that elapsed slice.  The iteration budget still
+/// counts wall-clock (setup included) so runaway setup can't hang the
+/// bench.
+pub fn bench_sampled<F: FnMut() -> Duration>(
+    warmup: usize,
+    max_iters: usize,
+    budget: Duration,
+    mut f: F,
+) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(max_iters.min(4096));
+    let start = Instant::now();
+    for _ in 0..max_iters {
+        samples.push(f().as_nanos() as f64);
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    stats_from(samples)
+}
+
 /// Build stats from raw per-iteration samples (ns).
 pub fn stats_from(mut samples: Vec<f64>) -> Stats {
     assert!(!samples.is_empty());
@@ -60,6 +94,7 @@ pub fn stats_from(mut samples: Vec<f64>) -> Stats {
         mean_ns: mean,
         median_ns: samples[n / 2],
         p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        p99_ns: samples[(n as f64 * 0.99) as usize % n.max(1)],
         min_ns: samples[0],
     }
 }

@@ -542,7 +542,7 @@ pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceMan
     for (name, help, get) in families {
         prom.header(name, "gauge", help);
         for q in &stats {
-            prom.sample(name, &[("queue", q.name.as_str())], get(q));
+            prom.sample(name, &[("queue", &*q.name)], get(q));
         }
     }
     prom.header(
@@ -553,7 +553,7 @@ pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceMan
     for q in &stats {
         prom.sample(
             "tony_queue_preemptions_total",
-            &[("queue", q.name.as_str())],
+            &[("queue", &*q.name)],
             q.preemptions as f64,
         );
     }

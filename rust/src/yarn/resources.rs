@@ -37,10 +37,12 @@ pub struct Resource {
 impl Resource {
     pub const ZERO: Resource = Resource { memory_mb: 0, vcores: 0, gpus: 0 };
 
+    #[inline]
     pub fn new(memory_mb: u64, vcores: u32, gpus: u32) -> Resource {
         Resource { memory_mb, vcores, gpus }
     }
 
+    #[inline]
     pub fn mem_cores(memory_mb: u64, vcores: u32) -> Resource {
         Resource { memory_mb, vcores, gpus: 0 }
     }
@@ -53,12 +55,14 @@ impl Resource {
     /// assert!(node.fits(&Resource::new(4096, 4, 0)));
     /// assert!(!node.fits(&Resource::new(1024, 1, 1)), "every dimension counts");
     /// ```
+    #[inline]
     pub fn fits(&self, other: &Resource) -> bool {
         other.memory_mb <= self.memory_mb
             && other.vcores <= self.vcores
             && other.gpus <= self.gpus
     }
 
+    #[inline]
     pub fn is_zero(&self) -> bool {
         *self == Resource::ZERO
     }
@@ -73,6 +77,7 @@ impl Resource {
     /// // 10% of memory, 50% of vcores, 50% of gpus -> 0.5 dominates.
     /// assert_eq!(Resource::new(1000, 5, 1).dominant_share(&total), 0.5);
     /// ```
+    #[inline]
     pub fn dominant_share(&self, total: &Resource) -> f64 {
         let mut share: f64 = 0.0;
         if total.memory_mb > 0 {
@@ -87,6 +92,7 @@ impl Resource {
         share
     }
 
+    #[inline]
     pub fn checked_sub(&self, other: &Resource) -> Option<Resource> {
         if !self.fits(other) {
             return None;
@@ -102,6 +108,7 @@ impl Resource {
 impl Add for Resource {
     type Output = Resource;
 
+    #[inline]
     fn add(self, o: Resource) -> Resource {
         Resource {
             memory_mb: self.memory_mb + o.memory_mb,
@@ -112,6 +119,7 @@ impl Add for Resource {
 }
 
 impl AddAssign for Resource {
+    #[inline]
     fn add_assign(&mut self, o: Resource) {
         *self = *self + o;
     }
@@ -120,6 +128,7 @@ impl AddAssign for Resource {
 impl Sub for Resource {
     type Output = Resource;
 
+    #[inline]
     fn sub(self, o: Resource) -> Resource {
         Resource {
             memory_mb: self.memory_mb.saturating_sub(o.memory_mb),
@@ -130,6 +139,7 @@ impl Sub for Resource {
 }
 
 impl SubAssign for Resource {
+    #[inline]
     fn sub_assign(&mut self, o: Resource) {
         *self = *self - o;
     }

@@ -65,7 +65,7 @@ pub struct AppReport {
 /// Per-queue observability snapshot served by [`ResourceManager::queue_stats`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct QueueStat {
-    pub name: String,
+    pub name: Arc<str>,
     /// Resources currently granted against this queue.
     pub used: Resource,
     /// Container asks still waiting in this queue.
@@ -126,7 +126,7 @@ struct LiveContainer {
     node: NodeId,
     resource: Resource,
     app: ApplicationId,
-    queue: String,
+    queue: Arc<str>,
     started: bool,
     /// Gang this container was granted as part of (victim selection
     /// takes whole gangs last).
@@ -164,9 +164,10 @@ struct App {
 
 struct Inner {
     nodes: Vec<Arc<NodeHandle>>,
-    /// Scheduler's free view (capacity minus granted, including grants the
-    /// AM hasn't started yet — reservations are held from grant time).
-    node_free: HashMap<NodeId, Resource>,
+    /// The scheduler owns the free/capacity view of every node (capacity
+    /// minus granted, including grants the AM hasn't started yet —
+    /// reservations are held from grant time) behind its per-label
+    /// indexes; the RM mutates it only through the scheduler's node API.
     scheduler: CapacityScheduler,
     apps: HashMap<ApplicationId, App>,
     containers: HashMap<ContainerId, LiveContainer>,
@@ -275,13 +276,23 @@ impl ResourceManager {
             let total = specs
                 .iter()
                 .fold(Resource::ZERO, |acc, s| acc + s.capacity);
-            let node_free = specs.iter().map(|s| (s.id, s.capacity)).collect();
+            let sched_nodes: Vec<SchedNode> = specs
+                .iter()
+                .map(|s| SchedNode {
+                    id: s.id,
+                    label: s.label.clone(),
+                    free: s.capacity,
+                    capacity: s.capacity,
+                })
+                .collect();
             let nodes = specs
                 .into_iter()
                 .map(|s| Arc::new(NodeHandle::new(s, cb.clone())))
                 .collect();
             let mut scheduler = CapacityScheduler::new(queues, total);
             scheduler.set_reservation_limit(conf.scheduler.reservation_limit);
+            scheduler.set_linear_reference(!conf.scheduler.placement_index);
+            scheduler.set_nodes(sched_nodes);
             ResourceManager {
                 cluster_ts,
                 clock: conf.clock.clone(),
@@ -291,7 +302,6 @@ impl ResourceManager {
                 tick_bus: tick_bus.clone(),
                 inner: Mutex::new(Inner {
                     nodes,
-                    node_free,
                     scheduler,
                     apps: HashMap::new(),
                     containers: HashMap::new(),
@@ -579,13 +589,9 @@ impl ResourceManager {
     pub fn kill_node(&self, node: NodeId) {
         let handle = {
             let mut inner = self.inner.lock().unwrap();
-            inner.node_free.remove(&node);
-            let total = inner
-                .nodes
-                .iter()
-                .filter(|n| n.spec.id != node && n.is_alive())
-                .fold(Resource::ZERO, |acc, n| acc + n.spec.capacity);
-            inner.scheduler.set_cluster_total(total);
+            // Drops the node from the placement indexes and shrinks the
+            // cluster total by its capacity in one step.
+            inner.scheduler.remove_node(node);
             inner.nodes.iter().find(|n| n.spec.id == node).cloned()
         };
         if let Some(h) = handle {
@@ -615,7 +621,8 @@ impl ResourceManager {
             .nodes
             .iter()
             .map(|n| {
-                let free = inner.node_free.get(&n.spec.id).copied().unwrap_or(Resource::ZERO);
+                // Dead nodes have left the scheduler's index; report zero.
+                let free = inner.scheduler.node_free(n.spec.id).unwrap_or(Resource::ZERO);
                 (n.spec.id, free, n.spec.capacity)
             })
             .collect()
@@ -625,12 +632,9 @@ impl ResourceManager {
         let inner = self.inner.lock().unwrap();
         inner
             .scheduler
-            .queue_names()
+            .queue_usage()
             .into_iter()
-            .map(|n| {
-                let used = inner.scheduler.queue_used(&n).unwrap_or(Resource::ZERO);
-                (n, used)
-            })
+            .map(|(n, used)| (n.to_string(), used))
             .collect()
     }
 
@@ -674,7 +678,7 @@ impl ResourceManager {
         let mut queues = Vec::new();
         for q in self.queue_stats() {
             let mut o = Json::obj();
-            o.set("name", q.name.as_str());
+            o.set("name", &*q.name);
             o.set("used_mem_mb", q.used.memory_mb);
             o.set("used_vcores", q.used.vcores as u64);
             o.set("used_gpus", q.used.gpus as u64);
@@ -739,37 +743,15 @@ impl ResourceManager {
             } else {
                 // Granted but never started: free immediately.
                 let live = inner.containers.remove(&cid).unwrap();
-                if let Some(free) = inner.node_free.get_mut(&live.node) {
-                    *free += live.resource;
-                }
-                inner.scheduler.release(&live.queue, live.resource);
+                inner.scheduler.release_container(&live.queue, live.node, live.resource);
             }
         }
     }
 
-    /// The scheduler's view of the alive part of the cluster.
-    fn node_view(inner: &Inner) -> Vec<SchedNode> {
-        inner
-            .nodes
-            .iter()
-            .filter(|n| n.is_alive())
-            .filter_map(|n| {
-                inner.node_free.get(&n.spec.id).map(|free| SchedNode {
-                    id: n.spec.id,
-                    label: n.spec.label.clone(),
-                    free: *free,
-                    capacity: n.spec.capacity,
-                })
-            })
-            .collect()
-    }
-
     fn schedule_locked(&self, inner: &mut Inner) {
-        let mut view = Self::node_view(inner);
-        let grants = inner.scheduler.schedule(&mut view);
-        for n in &view {
-            inner.node_free.insert(n.id, n.free);
-        }
+        // The scheduler owns the node table and its free-capacity indexes;
+        // no per-pass view materialization or write-back.
+        let grants = inner.scheduler.schedule();
         for grant in grants {
             let cid = ContainerId { app: grant.ask.app, seq: inner.next_container_seq };
             inner.next_container_seq += 1;
@@ -889,7 +871,6 @@ impl ResourceManager {
         }
         //    AM containers are never victims (killing the AM kills the
         //    whole app — far more than one round's worth of capacity).
-        let view = Self::node_view(inner);
         let am_containers: std::collections::HashSet<ContainerId> =
             inner.apps.values().filter_map(|a| a.am_container).collect();
         let candidates: Vec<VictimCandidate> = inner
@@ -911,9 +892,7 @@ impl ResourceManager {
             })
             .collect();
         let victims =
-            inner
-                .scheduler
-                .preemption_plan(&view, &candidates, self.sched.preemption_max_victims);
+            inner.scheduler.preemption_plan(&candidates, self.sched.preemption_max_victims);
         if victims.is_empty() {
             return;
         }
@@ -1036,11 +1015,9 @@ impl ResourceManager {
         } else {
             status
         };
-        // Return capacity (node may be dead and absent from node_free).
-        if let Some(free) = inner.node_free.get_mut(&live.node) {
-            *free += live.resource;
-        }
-        inner.scheduler.release(&live.queue, live.resource);
+        // Return capacity (a dead node has left the index; the queue is
+        // still credited, the node-side add is a no-op).
+        inner.scheduler.release_container(&live.queue, live.node, live.resource);
         let app_id = live.app;
         let is_am = inner
             .apps

@@ -3,9 +3,11 @@
 //! **reservations**, and **cross-queue capacity preemption**.
 //!
 //! Pure logic (no threads, no clock) so it is directly unit- and
-//! property-testable: [`CapacityScheduler::schedule`] takes the current
-//! node free-list and returns grants; the RM applies them.  Invariants
-//! enforced here and checked by `rust/tests/prop_scheduler.rs`:
+//! property-testable: the scheduler owns the node table
+//! ([`CapacityScheduler::set_nodes`] and friends) and
+//! [`CapacityScheduler::schedule`] returns grants; the RM applies them.
+//! Invariants enforced here and checked by
+//! `rust/tests/prop_scheduler.rs`:
 //!
 //! 1. a grant never exceeds the free capacity of its node (no dimension
 //!    oversubscribes),
@@ -18,6 +20,38 @@
 //!    — never partially, which is what prevents the classic distributed-
 //!    training deadlock where two jobs each hold half their workers and
 //!    wait forever for the other half (see `docs/SCHEDULING.md`).
+//!
+//! # Placement complexity
+//!
+//! The hot path is indexed so a 10k-node cluster does not pay a linear
+//! node scan per candidate (see `docs/SCHEDULING.md` § placement
+//! complexity):
+//!
+//! * **Per-label free-capacity skylines** — for every node label the
+//!   scheduler keeps a `BTreeSet<(free_memory_mb, node_index)>` (and a
+//!   twin over `capacity` for reservation dry-runs).  Best-fit is the
+//!   first fitting entry of `range((ask_mem, 0)..)` — O(log n) to seek,
+//!   and the ascending scan stops at the first node whose free vector
+//!   fits, which *is* the minimal `(leftover, index)` choice the linear
+//!   reference makes.  The index is maintained incrementally by
+//!   [`CapacityScheduler::set_free`] on every grant, release, and
+//!   preemption free.
+//! * **Incremental dominant-share accounting** — each queue caches its
+//!   `dominant_share` and relative usage, refreshed only when `used`
+//!   or the cluster total changes, so headroom/ceiling/preemption
+//!   checks stop recomputing shares per pass.
+//! * **Cached gang/reservation counters** — `Queue::gang_asks` (gang id
+//!   → pending ask count) and `Queue::reserved` replace the
+//!   `pending.iter().any(..)` / `reservations.iter().filter(..)` scans
+//!   that gate the singles fast path and feed queue snapshots.
+//! * Dry-runs ([`CapacityScheduler::place_asks`]) never touch the live
+//!   index: tentative placements go to a small per-gang **overlay** that
+//!   shadows the indexed values, so a failed gang placement costs no
+//!   index churn.
+//!
+//! `tony.scheduler.placement-index=false` flips every candidate search
+//! back to the retained linear reference scan (same semantics, O(n));
+//! the property suite asserts indexed ≡ linear on randomized sequences.
 //!
 //! Blocked gangs take **reservations**: up to `reservation_limit` gangs
 //! that are feasible at node *capacity* but not at current *free* claim
@@ -40,11 +74,11 @@
 //! use tony::yarn::scheduler::SchedNode;
 //! use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
 //!
-//! let mut nodes = vec![
+//! let mut sched = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 8, 0));
+//! sched.set_nodes(vec![
 //!     SchedNode::new(0, None, Resource::new(2048, 4, 0)),
 //!     SchedNode::new(1, None, Resource::new(2048, 4, 0)),
-//! ];
-//! let mut sched = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 8, 0));
+//! ]);
 //! let app = ApplicationId { cluster_ts: 1, seq: 1 };
 //! // A gang of three 1 GiB workers: placed all-or-nothing.
 //! let intake = sched.add_asks_gang(
@@ -55,11 +89,13 @@
 //!     Some(1),
 //! );
 //! assert!(!intake.remapped);
-//! let grants = sched.schedule(&mut nodes);
+//! let grants = sched.schedule();
 //! assert_eq!(grants.len(), 3, "the whole gang fits, so the whole gang lands");
 //! ```
 
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::util::ids::{ApplicationId, ContainerId, NodeId};
 use crate::xmlconf::Configuration;
@@ -112,6 +148,9 @@ pub struct SchedulerConf {
     pub preemption_grace_ms: u64,
     /// Most victim containers one preemption round may claim.
     pub preemption_max_victims: usize,
+    /// Use the per-label free-capacity indexes for candidate selection
+    /// (`false` = retained linear reference scan, same semantics).
+    pub placement_index: bool,
 }
 
 impl Default for SchedulerConf {
@@ -122,6 +161,7 @@ impl Default for SchedulerConf {
             preemption: false,
             preemption_grace_ms: 2_000,
             preemption_max_victims: 8,
+            placement_index: true,
         }
     }
 }
@@ -143,6 +183,7 @@ impl SchedulerConf {
                 "tony.scheduler.preemption.max-victims-per-round",
                 d.preemption_max_victims as u64,
             ) as usize,
+            placement_index: conf.get_bool("tony.scheduler.placement-index", d.placement_index),
         }
     }
 }
@@ -151,7 +192,7 @@ impl SchedulerConf {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Ask {
     pub app: ApplicationId,
-    pub queue: String,
+    pub queue: Arc<str>,
     pub resource: Resource,
     pub node_label: Option<String>,
     pub priority: u8,
@@ -194,7 +235,7 @@ pub struct AskIntake {
     /// First unused correlation tag (callers thread this forward).
     pub next_tag: u64,
     /// The queue actually charged.
-    pub queue: String,
+    pub queue: Arc<str>,
     /// True when the requested queue was unknown and the asks fell back
     /// to the first configured queue (also logged + counted in
     /// [`SchedStats::unknown_queue_asks`]).
@@ -227,7 +268,7 @@ pub struct SchedStats {
 /// and the `/metrics` endpoints).
 #[derive(Debug, Clone, PartialEq)]
 pub struct QueueSnapshot {
-    pub name: String,
+    pub name: Arc<str>,
     /// Guaranteed share in [0, 1].
     pub capacity: f64,
     /// Hard ceiling in [0, 1].
@@ -282,7 +323,7 @@ impl DecisionReason {
 pub struct SchedDecision {
     pub app: ApplicationId,
     pub gang: Option<u64>,
-    pub queue: String,
+    pub queue: Arc<str>,
     pub reason: DecisionReason,
     /// Human-readable cause, phrased to complete "gang N waited X s ..."
     /// (e.g. "for queue 'prod' headroom").  Kept stable across passes so
@@ -296,7 +337,7 @@ pub struct SchedDecision {
 pub struct VictimCandidate {
     pub container: ContainerId,
     pub app: ApplicationId,
-    pub queue: String,
+    pub queue: Arc<str>,
     pub node: NodeId,
     pub resource: Resource,
     pub gang: Option<u64>,
@@ -308,12 +349,27 @@ pub struct VictimCandidate {
 #[derive(Debug)]
 struct Queue {
     conf: QueueConf,
+    /// Shared, allocation-free handle on the queue name (every `Ask`,
+    /// snapshot, and stats row clones this `Arc`, not the `String`).
+    name: Arc<str>,
     used: Resource,
+    /// Cached `used.dominant_share(cluster_total)` — refreshed on every
+    /// charge/uncharge/total change, byte-identical to a recompute.
+    dom_share: f64,
+    /// Cached `dom_share / capacity` (∞ for zero-capacity queues) — the
+    /// most-underserved-first scheduling key.
+    rel_usage: f64,
     /// Victims preempted from this queue since startup.
     preemptions: u64,
     /// FIFO of pending asks (stable order; higher priority first is
     /// achieved by scanning priorities descending).
     pending: VecDeque<Ask>,
+    /// gang id → number of its asks still pending in this queue
+    /// (`len()` = distinct pending gangs; emptiness gates the singles
+    /// fast path without scanning `pending`).
+    gang_asks: BTreeMap<u64, u32>,
+    /// Reservations currently held by this queue's gangs.
+    reserved: u32,
 }
 
 /// A blocked gang's claim on a set of draining nodes.
@@ -332,9 +388,26 @@ struct Unit {
     gang: Option<u64>,
 }
 
+/// Which capacity vector a dry-run placement draws from.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PlaceBase {
+    /// Current free capacity (real placements).
+    Free,
+    /// Total capacity (reservation/demotion feasibility).
+    Capacity,
+}
+
+fn refresh_share(q: &mut Queue, total: &Resource) {
+    q.dom_share = q.used.dominant_share(total);
+    q.rel_usage =
+        if q.conf.capacity <= 0.0 { f64::INFINITY } else { q.dom_share / q.conf.capacity };
+}
+
 #[derive(Debug)]
 pub struct CapacityScheduler {
     queues: Vec<Queue>,
+    /// Queue name → index (Arc<str> keys borrow as &str for lookups).
+    qname_ix: HashMap<Arc<str>, usize>,
     cluster_total: Resource,
     reservation_limit: usize,
     reservations: Vec<Reservation>,
@@ -343,6 +416,24 @@ pub struct CapacityScheduler {
     /// drain (the RM drains after every scheduling pass, so this never
     /// outgrows one pass's worth of verdicts).
     decisions: Vec<SchedDecision>,
+    /// app → number of its gang asks still pending anywhere (O(1)
+    /// `has_pending_gang`).
+    app_gangs: HashMap<ApplicationId, u32>,
+    /// `true` = bypass the indexes and scan nodes linearly (the
+    /// reference implementation the property suite compares against;
+    /// `tony.scheduler.placement-index=false`).
+    linear_reference: bool,
+    // ---- node table + placement indexes ----
+    nodes: Vec<SchedNode>,
+    node_ix: HashMap<NodeId, usize>,
+    /// Interned node labels; `node_label[i]` indexes into this.
+    labels: Vec<Option<String>>,
+    label_ids: HashMap<Option<String>, u32>,
+    node_label: Vec<u32>,
+    /// Per-label skyline over free memory: `(free.memory_mb, node idx)`.
+    free_by_label: Vec<BTreeSet<(u64, usize)>>,
+    /// Per-label skyline over total memory: `(capacity.memory_mb, node idx)`.
+    cap_by_label: Vec<BTreeSet<(u64, usize)>>,
 }
 
 impl CapacityScheduler {
@@ -353,21 +444,45 @@ impl CapacityScheduler {
             (sum - 1.0).abs() < 1e-6,
             "queue capacities must sum to 1.0, got {sum}"
         );
-        CapacityScheduler {
-            queues: queues
-                .into_iter()
-                .map(|conf| Queue {
+        let mut qname_ix = HashMap::with_capacity(queues.len());
+        let queues: Vec<Queue> = queues
+            .into_iter()
+            .enumerate()
+            .map(|(qi, conf)| {
+                let name: Arc<str> = Arc::from(conf.name.as_str());
+                qname_ix.insert(name.clone(), qi);
+                let mut q = Queue {
                     conf,
+                    name,
                     used: Resource::ZERO,
+                    dom_share: 0.0,
+                    rel_usage: 0.0,
                     preemptions: 0,
                     pending: VecDeque::new(),
-                })
-                .collect(),
+                    gang_asks: BTreeMap::new(),
+                    reserved: 0,
+                };
+                refresh_share(&mut q, &cluster_total);
+                q
+            })
+            .collect();
+        CapacityScheduler {
+            queues,
+            qname_ix,
             cluster_total,
             reservation_limit: SchedulerConf::default().reservation_limit,
             reservations: Vec::new(),
             stats: SchedStats::default(),
             decisions: Vec::new(),
+            app_gangs: HashMap::new(),
+            linear_reference: false,
+            nodes: Vec::new(),
+            node_ix: HashMap::new(),
+            labels: Vec::new(),
+            label_ids: HashMap::new(),
+            node_label: Vec::new(),
+            free_by_label: Vec::new(),
+            cap_by_label: Vec::new(),
         }
     }
 
@@ -377,20 +492,183 @@ impl CapacityScheduler {
         self.reservation_limit = limit;
     }
 
+    /// Disable the placement indexes and use the retained linear
+    /// reference scan (`tony.scheduler.placement-index=false`).  The
+    /// indexes are still maintained — only candidate *selection* changes
+    /// — so invariants hold in both modes and the property suite can
+    /// flip this per run.
+    pub fn set_linear_reference(&mut self, linear: bool) {
+        self.linear_reference = linear;
+    }
+
     pub fn set_cluster_total(&mut self, total: Resource) {
         self.cluster_total = total;
+        self.refresh_all_shares();
     }
 
     pub fn cluster_total(&self) -> Resource {
         self.cluster_total
     }
 
-    pub fn queue_names(&self) -> Vec<String> {
-        self.queues.iter().map(|q| q.conf.name.clone()).collect()
+    fn refresh_all_shares(&mut self) {
+        let total = self.cluster_total;
+        for q in &mut self.queues {
+            refresh_share(q, &total);
+        }
+    }
+
+    // ---- node table lifecycle ------------------------------------------
+
+    /// Replace the node table (startup / tests).  Does **not** touch the
+    /// configured cluster total: callers that size queues against a
+    /// nominal total may register fewer/smaller nodes.
+    pub fn set_nodes(&mut self, nodes: Vec<SchedNode>) {
+        self.nodes = nodes;
+        self.node_ix.clear();
+        self.labels.clear();
+        self.label_ids.clear();
+        self.node_label.clear();
+        self.free_by_label.clear();
+        self.cap_by_label.clear();
+        for i in 0..self.nodes.len() {
+            self.index_node(i);
+        }
+    }
+
+    /// Register a node joining the cluster; grows the cluster total by
+    /// its capacity and refreshes every queue's cached share.
+    pub fn add_node(&mut self, node: SchedNode) {
+        assert!(
+            !self.node_ix.contains_key(&node.id),
+            "duplicate node {:?}",
+            node.id
+        );
+        self.cluster_total = self.cluster_total + node.capacity;
+        self.nodes.push(node);
+        self.index_node(self.nodes.len() - 1);
+        self.refresh_all_shares();
+    }
+
+    /// Remove a node (lost/killed); shrinks the cluster total by its
+    /// capacity.  Returns false when the node is unknown (already
+    /// removed) — nothing changes.
+    pub fn remove_node(&mut self, id: NodeId) -> bool {
+        let Some(&ni) = self.node_ix.get(&id) else { return false };
+        let cap = self.nodes[ni].capacity;
+        let last = self.nodes.len() - 1;
+        let lid = self.node_label[ni] as usize;
+        self.free_by_label[lid].remove(&(self.nodes[ni].free.memory_mb, ni));
+        self.cap_by_label[lid].remove(&(self.nodes[ni].capacity.memory_mb, ni));
+        self.node_ix.remove(&id);
+        if ni != last {
+            // swap_remove moves the last node into slot ni: re-key its
+            // index entries from `last` to `ni`.
+            let llid = self.node_label[last] as usize;
+            self.free_by_label[llid].remove(&(self.nodes[last].free.memory_mb, last));
+            self.cap_by_label[llid].remove(&(self.nodes[last].capacity.memory_mb, last));
+            self.nodes.swap_remove(ni);
+            self.node_label[ni] = self.node_label[last];
+            self.node_label.pop();
+            self.free_by_label[llid].insert((self.nodes[ni].free.memory_mb, ni));
+            self.cap_by_label[llid].insert((self.nodes[ni].capacity.memory_mb, ni));
+            self.node_ix.insert(self.nodes[ni].id, ni);
+        } else {
+            self.nodes.pop();
+            self.node_label.pop();
+        }
+        self.cluster_total = self.cluster_total - cap;
+        self.refresh_all_shares();
+        true
+    }
+
+    fn label_id(&mut self, label: &Option<String>) -> u32 {
+        if let Some(&id) = self.label_ids.get(label) {
+            return id;
+        }
+        let id = self.labels.len() as u32;
+        self.labels.push(label.clone());
+        self.label_ids.insert(label.clone(), id);
+        self.free_by_label.push(BTreeSet::new());
+        self.cap_by_label.push(BTreeSet::new());
+        id
+    }
+
+    fn index_node(&mut self, ni: usize) {
+        let label = self.nodes[ni].label.clone();
+        let lid = self.label_id(&label);
+        debug_assert_eq!(self.node_label.len(), ni);
+        self.node_label.push(lid);
+        self.free_by_label[lid as usize].insert((self.nodes[ni].free.memory_mb, ni));
+        self.cap_by_label[lid as usize].insert((self.nodes[ni].capacity.memory_mb, ni));
+        let prev = self.node_ix.insert(self.nodes[ni].id, ni);
+        assert!(prev.is_none(), "duplicate node {:?}", self.nodes[ni].id);
+    }
+
+    /// The one write path for node free capacity: keeps the per-label
+    /// skyline exactly in sync with `nodes[ni].free`.
+    fn set_free(&mut self, ni: usize, new_free: Resource) {
+        let lid = self.node_label[ni] as usize;
+        let old_mem = self.nodes[ni].free.memory_mb;
+        if old_mem != new_free.memory_mb {
+            let set = &mut self.free_by_label[lid];
+            set.remove(&(old_mem, ni));
+            set.insert((new_free.memory_mb, ni));
+        }
+        self.nodes[ni].free = new_free;
+    }
+
+    /// The scheduler's node table (read-only view).
+    pub fn nodes(&self) -> &[SchedNode] {
+        &self.nodes
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Free capacity of one node (None when the node is unknown).
+    pub fn node_free(&self, id: NodeId) -> Option<Resource> {
+        self.node_ix.get(&id).map(|&i| self.nodes[i].free)
+    }
+
+    /// Overwrite a node's free capacity (tests / external simulations).
+    /// Panics on an unknown node — a silent no-op here would desync the
+    /// caller's model from the index.
+    pub fn set_node_free(&mut self, id: NodeId, free: Resource) {
+        let ni = *self.node_ix.get(&id).expect("set_node_free: unknown node");
+        self.set_free(ni, free);
+    }
+
+    /// Return capacity to a node (container completed/released).  An
+    /// unknown node is ignored: its capacity left the cluster when the
+    /// node did, so there is nothing to credit.
+    pub fn add_node_free(&mut self, id: NodeId, r: Resource) {
+        if let Some(&ni) = self.node_ix.get(&id) {
+            let f = self.nodes[ni].free + r;
+            self.set_free(ni, f);
+        }
+    }
+
+    /// A released/completed container hands back both its queue charge
+    /// and its node capacity in one call (the RM's release path).
+    pub fn release_container(&mut self, queue: &str, node: NodeId, r: Resource) {
+        self.release(queue, r);
+        self.add_node_free(node, r);
+    }
+
+    // ---- queue accessors -----------------------------------------------
+
+    pub fn queue_names(&self) -> Vec<Arc<str>> {
+        self.queues.iter().map(|q| q.name.clone()).collect()
     }
 
     pub fn queue_used(&self, name: &str) -> Option<Resource> {
-        self.queues.iter().find(|q| q.conf.name == name).map(|q| q.used)
+        self.qname_ix.get(name).map(|&qi| self.queues[qi].used)
+    }
+
+    /// `(name, used)` per queue in one pass (the RM's `queue_usage`).
+    pub fn queue_usage(&self) -> Vec<(Arc<str>, Resource)> {
+        self.queues.iter().map(|q| (q.name.clone(), q.used)).collect()
     }
 
     pub fn pending_count(&self) -> usize {
@@ -398,12 +676,10 @@ impl CapacityScheduler {
     }
 
     /// Pending asks per queue (observability: the `/metrics` endpoints
-    /// expose this as `tony_queue_pending_asks`).
-    pub fn pending_per_queue(&self) -> Vec<(String, usize)> {
-        self.queues
-            .iter()
-            .map(|q| (q.conf.name.clone(), q.pending.len()))
-            .collect()
+    /// expose this as `tony_queue_pending_asks`).  `Arc<str>` names keep
+    /// the per-tick sampler allocation-free.
+    pub fn pending_per_queue(&self) -> Vec<(Arc<str>, usize)> {
+        self.queues.iter().map(|q| (q.name.clone(), q.pending.len())).collect()
     }
 
     /// Monotonic scheduler counters (see [`SchedStats`]).
@@ -434,44 +710,42 @@ impl CapacityScheduler {
         self.decisions.push(SchedDecision {
             app,
             gang,
-            queue: self.queues[qi].conf.name.clone(),
+            queue: self.queues[qi].name.clone(),
             reason,
             detail,
         });
     }
 
     /// True when `app` has gang asks still waiting (the gateway surfaces
-    /// this as the job-level `WAITING_FOR_GANG` state).
+    /// this as the job-level `WAITING_FOR_GANG` state).  O(1) via the
+    /// per-app gang-ask counter.
     pub fn has_pending_gang(&self, app: ApplicationId) -> bool {
-        self.queues
-            .iter()
-            .any(|q| q.pending.iter().any(|a| a.app == app && a.gang.is_some()))
+        self.app_gangs.contains_key(&app)
     }
 
-    /// One observability snapshot per queue.
+    /// One observability snapshot per queue — served entirely from the
+    /// per-queue counters (no reservation-list or pending scans).
     pub fn queue_snapshots(&self) -> Vec<QueueSnapshot> {
         self.queues
             .iter()
-            .enumerate()
-            .map(|(qi, q)| {
-                let gangs: BTreeSet<u64> =
-                    q.pending.iter().filter_map(|a| a.gang).collect();
-                QueueSnapshot {
-                    name: q.conf.name.clone(),
-                    capacity: q.conf.capacity,
-                    max_capacity: q.conf.max_capacity,
-                    used: q.used,
-                    pending_asks: q.pending.len(),
-                    pending_gangs: gangs.len(),
-                    reservations: self.reservations.iter().filter(|r| r.queue == qi).count(),
-                    preemptions: q.preemptions,
-                }
+            .map(|q| QueueSnapshot {
+                name: q.name.clone(),
+                capacity: q.conf.capacity,
+                max_capacity: q.conf.max_capacity,
+                used: q.used,
+                pending_asks: q.pending.len(),
+                pending_gangs: q.gang_asks.len(),
+                reservations: q.reserved as usize,
+                preemptions: q.preemptions,
             })
             .collect()
     }
 
-    fn queue_mut(&mut self, name: &str) -> Option<&mut Queue> {
-        self.queues.iter_mut().find(|q| q.conf.name == name)
+    fn charge(&mut self, qi: usize, r: Resource) {
+        let total = self.cluster_total;
+        let q = &mut self.queues[qi];
+        q.used += r;
+        refresh_share(q, &total);
     }
 
     /// Enqueue asks from an AM heartbeat (expanding multi-count requests).
@@ -501,21 +775,22 @@ impl CapacityScheduler {
         mut tag_start: u64,
         gang: Option<u64>,
     ) -> AskIntake {
-        let (qname, remapped) = if self.queue_mut(queue).is_some() {
-            (queue.to_string(), false)
-        } else {
-            let fallback = self.queues[0].conf.name.clone();
-            self.stats.unknown_queue_asks += 1;
-            twarn!(
-                "sched",
-                "{app} asked unknown queue '{queue}'; remapped to '{fallback}'"
-            );
-            (fallback, true)
+        let (qi, remapped) = match self.qname_ix.get(queue) {
+            Some(&qi) => (qi, false),
+            None => {
+                self.stats.unknown_queue_asks += 1;
+                twarn!(
+                    "sched",
+                    "{app} asked unknown queue '{queue}'; remapped to '{}'",
+                    self.queues[0].name
+                );
+                (0, true)
+            }
         };
-        let q = self.queue_mut(&qname).unwrap();
+        let qname = self.queues[qi].name.clone();
         for req in requests {
             for _ in 0..req.count {
-                q.pending.push_back(Ask {
+                self.queues[qi].pending.push_back(Ask {
                     app,
                     queue: qname.clone(),
                     resource: req.resource,
@@ -524,27 +799,73 @@ impl CapacityScheduler {
                     tag: tag_start,
                     gang,
                 });
+                if let Some(g) = gang {
+                    *self.queues[qi].gang_asks.entry(g).or_insert(0) += 1;
+                    *self.app_gangs.entry(app).or_insert(0) += 1;
+                }
                 tag_start += 1;
             }
         }
         AskIntake { next_tag: tag_start, queue: qname, remapped }
     }
 
+    /// Bookkeeping for one gang ask leaving `pending` (granted, demoted,
+    /// or removed with its app).
+    fn note_gang_ask_removed(&mut self, qi: usize, gang: u64, app: ApplicationId) {
+        if let Some(n) = self.queues[qi].gang_asks.get_mut(&gang) {
+            *n -= 1;
+            if *n == 0 {
+                self.queues[qi].gang_asks.remove(&gang);
+            }
+        }
+        if let Some(n) = self.app_gangs.get_mut(&app) {
+            *n -= 1;
+            if *n == 0 {
+                self.app_gangs.remove(&app);
+            }
+        }
+    }
+
+    /// Remove one pending ask, maintaining the gang counters.
+    fn take_ask(&mut self, qi: usize, pi: usize) -> Ask {
+        let ask = self.queues[qi].pending.remove(pi).expect("pending index in range");
+        if let Some(g) = ask.gang {
+            self.note_gang_ask_removed(qi, g, ask.app);
+        }
+        ask
+    }
+
     /// Remove all pending asks of an app (teardown / app finished), and
     /// any reservations its gangs held.
     pub fn remove_app(&mut self, app: ApplicationId) {
-        for q in &mut self.queues {
-            q.pending.retain(|a| a.app != app);
+        for qi in 0..self.queues.len() {
+            let pending = std::mem::take(&mut self.queues[qi].pending);
+            let mut kept = VecDeque::with_capacity(pending.len());
+            for a in pending {
+                if a.app == app {
+                    if let Some(g) = a.gang {
+                        self.note_gang_ask_removed(qi, g, a.app);
+                    }
+                } else {
+                    kept.push_back(a);
+                }
+            }
+            self.queues[qi].pending = kept;
         }
-        self.gc_reservations(None);
+        self.gc_reservations();
     }
 
     /// Record capacity returned by a released/completed container.  An
     /// unknown queue is logged and counted instead of silently dropping
     /// the capacity accounting on the floor.
     pub fn release(&mut self, queue: &str, resource: Resource) {
-        match self.queue_mut(queue) {
-            Some(q) => q.used -= resource,
+        match self.qname_ix.get(queue) {
+            Some(&qi) => {
+                let total = self.cluster_total;
+                let q = &mut self.queues[qi];
+                q.used -= resource;
+                refresh_share(q, &total);
+            }
             None => {
                 self.stats.unknown_queue_releases += 1;
                 twarn!(
@@ -556,6 +877,8 @@ impl CapacityScheduler {
     }
 
     /// Would granting `r` keep queue under its max-capacity ceiling?
+    /// (Not servable from the cached share: the dominant dimension of
+    /// `used + r` need not be the dominant dimension of `used`.)
     fn queue_headroom_ok(&self, qi: usize, r: &Resource) -> bool {
         let q = &self.queues[qi];
         let after = q.used + *r;
@@ -567,45 +890,34 @@ impl CapacityScheduler {
     /// most-underserved-first (used/capacity ratio); within a queue,
     /// priorities descend, FIFO within a priority; a gang commits
     /// atomically or not at all.
-    pub fn schedule(&mut self, nodes: &mut [SchedNode]) -> Vec<Grant> {
+    ///
+    /// Queue selection is a min-heap on the cached relative-usage key
+    /// (`f64::to_bits` is order-preserving for the non-negative shares
+    /// we store, ties broken by queue index exactly like the old stable
+    /// sort).  Only the committed queue's key changes per commit, so
+    /// queues that failed this round park and re-arm on progress instead
+    /// of being re-sorted every round.
+    pub fn schedule(&mut self) -> Vec<Grant> {
         let mut grants = Vec::new();
-        self.gc_reservations(Some(nodes));
-        loop {
-            // Order queues by relative usage each round so capacity
-            // fractions steer who gets the next container.
-            let mut order: Vec<usize> = (0..self.queues.len())
-                .filter(|&i| !self.queues[i].pending.is_empty())
-                .collect();
-            if order.is_empty() {
-                break;
-            }
-            order.sort_by(|&a, &b| {
-                let ra = self.relative_usage(a);
-                let rb = self.relative_usage(b);
-                ra.partial_cmp(&rb).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            let mut made_progress = false;
-            for qi in order {
-                if self.try_queue(qi, nodes, &mut grants) {
-                    made_progress = true;
-                    break; // re-evaluate queue order after every commit
+        self.gc_reservations();
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..self.queues.len())
+            .filter(|&i| !self.queues[i].pending.is_empty())
+            .map(|i| Reverse((self.queues[i].rel_usage.to_bits(), i)))
+            .collect();
+        let mut parked: Vec<usize> = Vec::new();
+        while let Some(Reverse((_, qi))) = heap.pop() {
+            if self.try_queue(qi, &mut grants) {
+                if !self.queues[qi].pending.is_empty() {
+                    heap.push(Reverse((self.queues[qi].rel_usage.to_bits(), qi)));
                 }
-            }
-            if !made_progress {
-                break;
+                for p in parked.drain(..) {
+                    heap.push(Reverse((self.queues[p].rel_usage.to_bits(), p)));
+                }
+            } else {
+                parked.push(qi);
             }
         }
         grants
-    }
-
-    fn relative_usage(&self, qi: usize) -> f64 {
-        let q = &self.queues[qi];
-        let share = q.used.dominant_share(&self.cluster_total);
-        if q.conf.capacity <= 0.0 {
-            f64::INFINITY
-        } else {
-            share / q.conf.capacity
-        }
     }
 
     /// The schedulable units of queue `qi`, priority-major (a gang's
@@ -656,24 +968,36 @@ impl CapacityScheduler {
             .collect()
     }
 
-    fn drop_reservation(&mut self, gang: u64) {
-        self.reservations.retain(|r| r.gang != gang);
+    fn push_reservation(&mut self, gang: u64, qi: usize, nodes: Vec<NodeId>) {
+        self.queues[qi].reserved += 1;
+        self.reservations.push(Reservation { gang, queue: qi, nodes });
     }
 
-    /// Drop reservations whose gang no longer has pending asks, or (when
-    /// a node view is given) that reference nodes no longer in the
-    /// cluster — the gang stays pending and may re-reserve on survivors.
-    fn gc_reservations(&mut self, nodes: Option<&[SchedNode]>) {
-        let pending_gangs: BTreeSet<u64> = self
-            .queues
-            .iter()
-            .flat_map(|q| q.pending.iter().filter_map(|a| a.gang))
-            .collect();
+    fn drop_reservation(&mut self, gang: u64) {
+        let queues = &mut self.queues;
         self.reservations.retain(|r| {
-            pending_gangs.contains(&r.gang)
-                && nodes.map_or(true, |ns| {
-                    r.nodes.iter().all(|id| ns.iter().any(|n| n.id == *id))
-                })
+            if r.gang == gang {
+                queues[r.queue].reserved -= 1;
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Drop reservations whose gang no longer has pending asks, or that
+    /// reference nodes no longer in the cluster — the gang stays pending
+    /// and may re-reserve on survivors.
+    fn gc_reservations(&mut self) {
+        let queues = &mut self.queues;
+        let node_ix = &self.node_ix;
+        self.reservations.retain(|r| {
+            let keep = queues[r.queue].gang_asks.contains_key(&r.gang)
+                && r.nodes.iter().all(|id| node_ix.contains_key(id));
+            if !keep {
+                queues[r.queue].reserved -= 1;
+            }
+            keep
         });
     }
 
@@ -681,17 +1005,13 @@ impl CapacityScheduler {
     /// gang may take a reservation instead (not counted as progress).
     /// Skipping unplaceable units keeps later placeable ones flowing
     /// (convoy avoidance on mixed GPU/CPU asks).
-    fn try_queue(&mut self, qi: usize, nodes: &mut [SchedNode], grants: &mut Vec<Grant>) -> bool {
+    fn try_queue(&mut self, qi: usize, grants: &mut Vec<Grant>) -> bool {
         // Allocation-free fast path for the overwhelmingly common shape
         // (no gangs pending in this queue, no reservations anywhere):
-        // `schedule` restarts this per committed grant, so the unit
-        // machinery's per-call Vec/BTreeMap/label-clone cost would turn
-        // a legacy singles pass O(grants × pending) *allocations* under
-        // the RM lock.
-        if self.reservations.is_empty()
-            && !self.queues[qi].pending.iter().any(|a| a.gang.is_some())
-        {
-            return self.try_queue_singles(qi, nodes, grants);
+        // both gates are O(1) counter reads, so a pure-singles pass
+        // never builds the unit machinery's Vec/BTreeMap per call.
+        if self.reservations.is_empty() && self.queues[qi].gang_asks.is_empty() {
+            return self.try_queue_singles(qi, grants);
         }
         let units = self.units(qi);
         for unit in units {
@@ -732,18 +1052,15 @@ impl CapacityScheduler {
                         DecisionReason::WaitingHeadroom,
                         format!(
                             "for queue '{}' headroom (gang needs {} MB)",
-                            self.queues[qi].conf.name, total_ask.memory_mb
+                            self.queues[qi].name, total_ask.memory_mb
                         ),
                     );
                     break;
                 }
                 continue;
             }
-            let reserved_other = self.reserved_by_others(unit.gang);
-            let allowed: Vec<bool> =
-                nodes.iter().map(|n| !reserved_other.contains(&n.id)).collect();
-            let free: Vec<Resource> = nodes.iter().map(|n| n.free).collect();
-            if let Some(chosen) = place_with(nodes, &free, &allowed, &asks) {
+            let blocked = self.reserved_by_others(unit.gang);
+            if let Some(chosen) = self.place_asks(PlaceBase::Free, &blocked, &asks) {
                 // Commit atomically: remove the asks back-to-front so
                 // earlier pending indices stay valid.
                 let mut pairs: Vec<(usize, usize)> =
@@ -751,10 +1068,11 @@ impl CapacityScheduler {
                 pairs.sort_by(|a, b| b.0.cmp(&a.0));
                 let mut committed = Vec::with_capacity(pairs.len());
                 for (pi, ni) in pairs {
-                    let ask = self.queues[qi].pending.remove(pi).unwrap();
-                    nodes[ni].free -= ask.resource;
-                    self.queues[qi].used += ask.resource;
-                    committed.push(Grant { ask, node: nodes[ni].id });
+                    let ask = self.take_ask(qi, pi);
+                    let new_free = self.nodes[ni].free - ask.resource;
+                    self.set_free(ni, new_free);
+                    self.charge(qi, ask.resource);
+                    committed.push(Grant { ask, node: self.nodes[ni].id });
                 }
                 committed.reverse(); // back to FIFO order
                 grants.extend(committed);
@@ -776,9 +1094,8 @@ impl CapacityScheduler {
                 // be placed even on a fully drained cluster (ignoring
                 // reservations — nodes only ever disappear), waiting is
                 // a guaranteed hang: demote to per-container placement.
-                let all = vec![true; nodes.len()];
-                let caps: Vec<Resource> = nodes.iter().map(|n| n.capacity).collect();
-                if place_with(nodes, &caps, &all, &asks).is_none() {
+                let none = BTreeSet::new();
+                if self.place_asks(PlaceBase::Capacity, &none, &asks).is_none() {
                     self.demote_gang(qi, &unit, "infeasible even at full cluster capacity");
                     return true; // state changed: rescan with the gang as singles
                 }
@@ -789,7 +1106,7 @@ impl CapacityScheduler {
                     DecisionReason::WaitingFree,
                     "for free node capacity to drain".to_string(),
                 );
-                if self.try_reserve(qi, &unit, nodes) {
+                if self.try_reserve(qi, &unit) {
                     let n = self
                         .reservations
                         .iter()
@@ -813,12 +1130,7 @@ impl CapacityScheduler {
     /// the highest-priority placeable single (FIFO within a priority),
     /// skipping asks that cannot currently be placed (convoy avoidance).
     /// Semantically identical to the unit path for all-single queues.
-    fn try_queue_singles(
-        &mut self,
-        qi: usize,
-        nodes: &mut [SchedNode],
-        grants: &mut Vec<Grant>,
-    ) -> bool {
+    fn try_queue_singles(&mut self, qi: usize, grants: &mut Vec<Grant>) -> bool {
         let plen = self.queues[qi].pending.len();
         let mut best: Option<(usize, usize)> = None; // (pending idx, node idx)
         let mut best_prio = 0u8;
@@ -830,17 +1142,170 @@ impl CapacityScheduler {
             if !self.queue_headroom_ok(qi, &ask.resource) {
                 continue;
             }
-            if let Some(ni) = pick_node_free(nodes, ask) {
-                best_prio = ask.priority;
+            let prio = ask.priority;
+            if let Some(ni) = self.pick_single(&ask.resource, &ask.node_label) {
+                best_prio = prio;
                 best = Some((i, ni));
             }
         }
         let Some((i, ni)) = best else { return false };
-        let ask = self.queues[qi].pending.remove(i).unwrap();
-        nodes[ni].free -= ask.resource;
-        self.queues[qi].used += ask.resource;
-        grants.push(Grant { ask, node: nodes[ni].id });
+        let ask = self.take_ask(qi, i);
+        let new_free = self.nodes[ni].free - ask.resource;
+        self.set_free(ni, new_free);
+        self.charge(qi, ask.resource);
+        grants.push(Grant { ask, node: self.nodes[ni].id });
         true
+    }
+
+    /// Best-fit node for a single unreserved ask (fast path; no overlay,
+    /// no blocked set).  Indexed: first fitting entry of the label's
+    /// free skyline at or above the ask's memory.  Linear reference:
+    /// minimal `(free_mem, index)` scan — identical choice.
+    fn pick_single(&self, r: &Resource, label: &Option<String>) -> Option<usize> {
+        if self.linear_reference {
+            let mut best: Option<(u64, usize)> = None;
+            for (ni, n) in self.nodes.iter().enumerate() {
+                if n.label != *label || !n.free.fits(r) {
+                    continue;
+                }
+                let key = (n.free.memory_mb, ni);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+            best.map(|(_, ni)| ni)
+        } else {
+            let &lid = self.label_ids.get(label)?;
+            self.free_by_label[lid as usize]
+                .range((r.memory_mb, 0usize)..)
+                .find(|&&(_, ni)| self.nodes[ni].free.fits(r))
+                .map(|&(_, ni)| ni)
+        }
+    }
+
+    /// Dry-run placement of `asks` against `base` capacity, excluding
+    /// `blocked` nodes.  Larger asks are placed first (fewer
+    /// fragmentation failures); each ask takes the best-fit node —
+    /// matching label, smallest leftover memory, lowest index on ties.
+    /// Returns the chosen node index per ask (in `asks` order), or
+    /// `None` when any ask cannot be placed — the caller must treat
+    /// that as "place nothing".
+    ///
+    /// Never mutates the live index: tentative placements accumulate in
+    /// a small overlay of `(node idx, remaining)` shadowing the indexed
+    /// values.
+    fn place_asks(
+        &self,
+        base: PlaceBase,
+        blocked: &BTreeSet<NodeId>,
+        asks: &[(Resource, Option<String>)],
+    ) -> Option<Vec<usize>> {
+        let mut order: Vec<usize> = (0..asks.len()).collect();
+        order.sort_by(|&a, &b| {
+            asks[b]
+                .0
+                .memory_mb
+                .cmp(&asks[a].0.memory_mb)
+                .then(asks[b].0.gpus.cmp(&asks[a].0.gpus))
+                .then(asks[b].0.vcores.cmp(&asks[a].0.vcores))
+                .then(a.cmp(&b))
+        });
+        let mut overlay: Vec<(usize, Resource)> = Vec::with_capacity(asks.len());
+        let mut chosen = vec![usize::MAX; asks.len()];
+        for &ai in &order {
+            let (r, label) = &asks[ai];
+            let ni = self.find_best(base, &overlay, blocked, r, label)?;
+            let pos = match overlay.iter().position(|&(i, _)| i == ni) {
+                Some(p) => p,
+                None => {
+                    overlay.push((ni, self.base_free(base, ni)));
+                    overlay.len() - 1
+                }
+            };
+            overlay[pos].1 -= *r;
+            chosen[ai] = ni;
+        }
+        Some(chosen)
+    }
+
+    fn base_free(&self, base: PlaceBase, ni: usize) -> Resource {
+        match base {
+            PlaceBase::Free => self.nodes[ni].free,
+            PlaceBase::Capacity => self.nodes[ni].capacity,
+        }
+    }
+
+    /// Best-fit candidate for one ask of a dry run: the minimum
+    /// `(remaining memory, node index)` over overlay-touched nodes plus
+    /// untouched nodes (indexed skyline seek or linear reference scan).
+    fn find_best(
+        &self,
+        base: PlaceBase,
+        overlay: &[(usize, Resource)],
+        blocked: &BTreeSet<NodeId>,
+        r: &Resource,
+        label: &Option<String>,
+    ) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for &(ni, rem) in overlay {
+            if self.nodes[ni].label != *label
+                || blocked.contains(&self.nodes[ni].id)
+                || !rem.fits(r)
+            {
+                continue;
+            }
+            let key = (rem.memory_mb, ni);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+        if self.linear_reference {
+            for ni in 0..self.nodes.len() {
+                if overlay.iter().any(|&(i, _)| i == ni) {
+                    continue;
+                }
+                let n = &self.nodes[ni];
+                if n.label != *label || blocked.contains(&n.id) {
+                    continue;
+                }
+                let bf = self.base_free(base, ni);
+                if !bf.fits(r) {
+                    continue;
+                }
+                let key = (bf.memory_mb, ni);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+        } else if let Some(&lid) = self.label_ids.get(label) {
+            let set = match base {
+                PlaceBase::Free => &self.free_by_label[lid as usize],
+                PlaceBase::Capacity => &self.cap_by_label[lid as usize],
+            };
+            // Ascending (mem, idx) scan: the first entry that clears the
+            // overlay/blocked/fits filters is the minimal key among
+            // untouched nodes, so one hit ends the scan; the running
+            // overlay best prunes it earlier still.
+            for &(mem, ni) in set.range((r.memory_mb, 0usize)..) {
+                if let Some(b) = best {
+                    if (mem, ni) >= b {
+                        break;
+                    }
+                }
+                if overlay.iter().any(|&(i, _)| i == ni) {
+                    continue;
+                }
+                if blocked.contains(&self.nodes[ni].id) {
+                    continue;
+                }
+                if !self.base_free(base, ni).fits(r) {
+                    continue;
+                }
+                best = Some((mem, ni));
+                break;
+            }
+        }
+        best.map(|(_, ni)| ni)
     }
 
     /// Strip the gang id off a gang that can never place atomically so
@@ -853,10 +1318,14 @@ impl CapacityScheduler {
             "sched",
             "gang {gang} ({} asks, queue '{}') {why}; demoted to per-container placement",
             unit.idxs.len(),
-            self.queues[qi].conf.name
+            self.queues[qi].name
         );
         for &i in &unit.idxs {
-            self.queues[qi].pending[i].gang = None;
+            let (g, a) = {
+                let ask = &mut self.queues[qi].pending[i];
+                (ask.gang.take().expect("gang member has a gang id"), ask.app)
+            };
+            self.note_gang_ask_removed(qi, g, a);
         }
         self.drop_reservation(gang);
         self.stats.gangs_demoted += 1;
@@ -872,7 +1341,7 @@ impl CapacityScheduler {
     /// Give a blocked gang a claim on the node set a dry-run placement
     /// at full capacity chooses, if a reservation slot is available.
     /// Returns true when a new reservation was taken.
-    fn try_reserve(&mut self, qi: usize, unit: &Unit, nodes: &[SchedNode]) -> bool {
+    fn try_reserve(&mut self, qi: usize, unit: &Unit) -> bool {
         let Some(gang) = unit.gang else { return false };
         if self.reservations.iter().any(|r| r.gang == gang) {
             return false;
@@ -880,33 +1349,28 @@ impl CapacityScheduler {
         if self.reservations.len() >= self.reservation_limit {
             return false;
         }
-        let reserved_other = self.reserved_by_others(Some(gang));
-        let allowed: Vec<bool> = nodes.iter().map(|n| !reserved_other.contains(&n.id)).collect();
+        let blocked = self.reserved_by_others(Some(gang));
         let asks = self.asks_of(qi, unit);
-        let caps: Vec<Resource> = nodes.iter().map(|n| n.capacity).collect();
-        if let Some(chosen) = place_with(nodes, &caps, &allowed, &asks) {
-            let set: BTreeSet<NodeId> = chosen.iter().map(|&ni| nodes[ni].id).collect();
+        if let Some(chosen) = self.place_asks(PlaceBase::Capacity, &blocked, &asks) {
+            let set: BTreeSet<NodeId> = chosen.iter().map(|&ni| self.nodes[ni].id).collect();
             tdebug!(
                 "sched",
                 "gang {gang} (queue '{}') reserves {} node(s)",
-                self.queues[qi].conf.name,
+                self.queues[qi].name,
                 set.len()
             );
-            self.reservations.push(Reservation {
-                gang,
-                queue: qi,
-                nodes: set.into_iter().collect(),
-            });
+            self.push_reservation(gang, qi, set.into_iter().collect());
             self.stats.reservations_made += 1;
             return true;
         }
         false
     }
 
+    /// O(1): cached dominant share vs. guaranteed capacity.
     fn queue_over_guarantee(&self, name: &str) -> bool {
-        self.queues.iter().any(|q| {
-            q.conf.name == name
-                && q.used.dominant_share(&self.cluster_total) > q.conf.capacity + EPS
+        self.qname_ix.get(name).map_or(false, |&qi| {
+            let q = &self.queues[qi];
+            q.dom_share > q.conf.capacity + EPS
         })
     }
 
@@ -922,9 +1386,13 @@ impl CapacityScheduler {
     /// never killed without actually freeing the gang).  On success the
     /// demanding gang is force-reserved onto the placement's nodes so
     /// the freed capacity cannot be stolen before it lands.
+    ///
+    /// The blocked/feasible gates run on the indexes; the victim walk
+    /// itself simulates over a free-capacity snapshot with the retained
+    /// linear placement (`place_with`) — it is the rare path, and its
+    /// what-if frees must not touch the live skyline.
     pub fn preemption_plan(
         &mut self,
-        nodes: &[SchedNode],
         candidates: &[VictimCandidate],
         max_victims: usize,
     ) -> Vec<VictimCandidate> {
@@ -934,15 +1402,9 @@ impl CapacityScheduler {
         let total = self.cluster_total;
         let mut order: Vec<usize> = (0..self.queues.len())
             .filter(|&i| !self.queues[i].pending.is_empty())
-            .filter(|&i| {
-                self.queues[i].used.dominant_share(&total) + EPS < self.queues[i].conf.capacity
-            })
+            .filter(|&i| self.queues[i].dom_share + EPS < self.queues[i].conf.capacity)
             .collect();
-        order.sort_by(|&a, &b| {
-            self.relative_usage(a)
-                .partial_cmp(&self.relative_usage(b))
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        order.sort_by(|&a, &b| self.queues[a].rel_usage.total_cmp(&self.queues[b].rel_usage));
         for qi in order {
             for unit in self.units(qi) {
                 let Some(gang) = unit.gang else { continue };
@@ -956,17 +1418,20 @@ impl CapacityScheduler {
                 {
                     continue;
                 }
-                let reserved_other = self.reserved_by_others(Some(gang));
-                let allowed: Vec<bool> =
-                    nodes.iter().map(|n| !reserved_other.contains(&n.id)).collect();
-                let free: Vec<Resource> = nodes.iter().map(|n| n.free).collect();
-                if place_with(nodes, &free, &allowed, &asks).is_some() {
+                let blocked = self.reserved_by_others(Some(gang));
+                if self.place_asks(PlaceBase::Free, &blocked, &asks).is_some() {
                     continue; // not blocked — the next schedule pass lands it
                 }
-                let caps: Vec<Resource> = nodes.iter().map(|n| n.capacity).collect();
-                if place_with(nodes, &caps, &allowed, &asks).is_none() {
+                if self.place_asks(PlaceBase::Capacity, &blocked, &asks).is_none() {
                     continue; // not placeable even at capacity
                 }
+                // From here the unit is the rare preempt-worthy case:
+                // snapshot free capacity once and simulate linearly.
+                let free: Vec<Resource> = self.nodes.iter().map(|n| n.free).collect();
+                let allowed: Vec<bool> =
+                    self.nodes.iter().map(|n| !blocked.contains(&n.id)).collect();
+                let node_idx: HashMap<NodeId, usize> =
+                    self.nodes.iter().enumerate().map(|(i, n)| (n.id, i)).collect();
                 // Victims must sit in a partition the gang can use.
                 let labels: BTreeSet<Option<String>> =
                     asks.iter().map(|(_, l)| l.clone()).collect();
@@ -974,10 +1439,9 @@ impl CapacityScheduler {
                     .iter()
                     .filter(|c| self.queue_over_guarantee(&c.queue))
                     .filter(|c| {
-                        nodes
-                            .iter()
-                            .find(|n| n.id == c.node)
-                            .map(|n| labels.contains(&n.label))
+                        node_idx
+                            .get(&c.node)
+                            .map(|&ni| labels.contains(&self.nodes[ni].label))
                             .unwrap_or(false)
                     })
                     .collect();
@@ -987,13 +1451,9 @@ impl CapacityScheduler {
                         .cmp(&(b.gang.is_some() as u8))
                         .then(b.seq.cmp(&a.seq))
                 });
-                let node_idx: BTreeMap<NodeId, usize> =
-                    nodes.iter().enumerate().map(|(i, n)| (n.id, i)).collect();
                 // Free capacity with the given victims' resources returned
                 // (the one simulation every decision below shares).
-                let free_after = |vs: &[VictimCandidate],
-                                  skip: Option<usize>|
-                 -> Vec<Resource> {
+                let free_after = |vs: &[VictimCandidate], skip: Option<usize>| -> Vec<Resource> {
                     let mut f = free.clone();
                     for (k, v) in vs.iter().enumerate() {
                         if Some(k) != skip {
@@ -1002,19 +1462,20 @@ impl CapacityScheduler {
                     }
                     f
                 };
-                let mut sim_used: BTreeMap<String, Resource> = BTreeMap::new();
+                let mut sim_used: BTreeMap<Arc<str>, Resource> = BTreeMap::new();
                 let mut victims: Vec<VictimCandidate> = Vec::new();
                 for c in pool {
                     if victims.len() >= max_victims {
                         break;
                     }
-                    let Some(q) = self.queues.iter().find(|q| q.conf.name == c.queue) else {
+                    let Some(&vqi) = self.qname_ix.get(&*c.queue) else {
                         continue;
                     };
-                    let cur = sim_used.get(&c.queue).copied().unwrap_or(q.used);
+                    let cur =
+                        sim_used.get(&c.queue).copied().unwrap_or(self.queues[vqi].used);
                     let after = cur - c.resource;
                     // Never drive a victim queue below its own guarantee.
-                    if after.dominant_share(&total) + EPS < q.conf.capacity {
+                    if after.dominant_share(&total) + EPS < self.queues[vqi].conf.capacity {
                         continue;
                     }
                     let Some(&ni) = node_idx.get(&c.node) else { continue };
@@ -1023,7 +1484,9 @@ impl CapacityScheduler {
                     }
                     sim_used.insert(c.queue.clone(), after);
                     victims.push(c.clone());
-                    if place_with(nodes, &free_after(&victims, None), &allowed, &asks).is_none() {
+                    if place_with(&self.nodes, &free_after(&victims, None), &allowed, &asks)
+                        .is_none()
+                    {
                         continue;
                     }
                     // The gang fits.  Prune victims whose freed capacity
@@ -1033,24 +1496,27 @@ impl CapacityScheduler {
                     // zero benefit.
                     let mut i = 0;
                     while i < victims.len() {
-                        if place_with(nodes, &free_after(&victims, Some(i)), &allowed, &asks)
-                            .is_some()
+                        if place_with(
+                            &self.nodes,
+                            &free_after(&victims, Some(i)),
+                            &allowed,
+                            &asks,
+                        )
+                        .is_some()
                         {
                             victims.remove(i);
                         } else {
                             i += 1;
                         }
                     }
-                    let chosen = place_with(nodes, &free_after(&victims, None), &allowed, &asks)
-                        .expect("placement held after pruning");
+                    let chosen =
+                        place_with(&self.nodes, &free_after(&victims, None), &allowed, &asks)
+                            .expect("placement held after pruning");
                     // Hold the placement for the demanding gang.
-                    let set: BTreeSet<NodeId> = chosen.iter().map(|&ni| nodes[ni].id).collect();
+                    let set: BTreeSet<NodeId> =
+                        chosen.iter().map(|&ni| self.nodes[ni].id).collect();
                     self.drop_reservation(gang);
-                    self.reservations.push(Reservation {
-                        gang,
-                        queue: qi,
-                        nodes: set.into_iter().collect(),
-                    });
+                    self.push_reservation(gang, qi, set.into_iter().collect());
                     self.stats.preemption_rounds += 1;
                     self.stats.preemptions += victims.len() as u64;
                     self.audit(
@@ -1061,15 +1527,15 @@ impl CapacityScheduler {
                         format!("{} victim(s) selected to open the gang's hole", victims.len()),
                     );
                     for v in &victims {
-                        if let Some(vq) = self.queue_mut(&v.queue) {
-                            vq.preemptions += 1;
+                        if let Some(&vqi) = self.qname_ix.get(&*v.queue) {
+                            self.queues[vqi].preemptions += 1;
                         }
                     }
                     twarn!(
                         "sched",
                         "preempting {} container(s) to unblock gang {gang} in queue '{}'",
                         victims.len(),
-                        self.queues[qi].conf.name
+                        self.queues[qi].name
                     );
                     return victims;
                 }
@@ -1079,14 +1545,86 @@ impl CapacityScheduler {
         }
         Vec::new()
     }
+
+    /// Check every index/cache against a from-scratch recompute.  Test
+    /// hook (the property suite calls this after every mutation); panics
+    /// on the first inconsistency.  Cached shares must be *bit-identical*
+    /// to a recompute — they are refreshed by recomputing from `used`,
+    /// never by incremental float arithmetic.
+    #[doc(hidden)]
+    pub fn verify_invariants(&self) {
+        // Node table ↔ id map ↔ label table.
+        assert_eq!(self.node_ix.len(), self.nodes.len(), "node_ix size");
+        assert_eq!(self.node_label.len(), self.nodes.len(), "node_label size");
+        assert_eq!(self.labels.len(), self.label_ids.len(), "label intern size");
+        assert_eq!(self.labels.len(), self.free_by_label.len(), "free skyline count");
+        assert_eq!(self.labels.len(), self.cap_by_label.len(), "cap skyline count");
+        for (lid, label) in self.labels.iter().enumerate() {
+            assert_eq!(
+                self.label_ids.get(label).copied(),
+                Some(lid as u32),
+                "label intern round-trip"
+            );
+        }
+        let mut free_entries = 0usize;
+        let mut cap_entries = 0usize;
+        for s in &self.free_by_label {
+            free_entries += s.len();
+        }
+        for s in &self.cap_by_label {
+            cap_entries += s.len();
+        }
+        assert_eq!(free_entries, self.nodes.len(), "stale/missing free skyline entries");
+        assert_eq!(cap_entries, self.nodes.len(), "stale/missing cap skyline entries");
+        for (i, n) in self.nodes.iter().enumerate() {
+            assert_eq!(self.node_ix.get(&n.id).copied(), Some(i), "node_ix[{:?}]", n.id);
+            let lid = self.node_label[i] as usize;
+            assert_eq!(self.labels[lid], n.label, "node_label[{i}]");
+            assert!(
+                self.free_by_label[lid].contains(&(n.free.memory_mb, i)),
+                "free skyline misses node {i}"
+            );
+            assert!(
+                self.cap_by_label[lid].contains(&(n.capacity.memory_mb, i)),
+                "cap skyline misses node {i}"
+            );
+        }
+        // Queue caches.
+        let mut app_gangs: HashMap<ApplicationId, u32> = HashMap::new();
+        for (qi, q) in self.queues.iter().enumerate() {
+            assert_eq!(
+                self.qname_ix.get(&*q.name).copied(),
+                Some(qi),
+                "qname_ix['{}']",
+                q.name
+            );
+            let share = q.used.dominant_share(&self.cluster_total);
+            assert_eq!(q.dom_share, share, "queue '{}' cached dominant share", q.name);
+            let rel = if q.conf.capacity <= 0.0 { f64::INFINITY } else { share / q.conf.capacity };
+            assert_eq!(q.rel_usage, rel, "queue '{}' cached relative usage", q.name);
+            let mut gang_asks: BTreeMap<u64, u32> = BTreeMap::new();
+            for a in &q.pending {
+                if let Some(g) = a.gang {
+                    *gang_asks.entry(g).or_insert(0) += 1;
+                    *app_gangs.entry(a.app).or_insert(0) += 1;
+                }
+            }
+            assert_eq!(q.gang_asks, gang_asks, "queue '{}' gang-ask counters", q.name);
+            let reserved = self.reservations.iter().filter(|r| r.queue == qi).count();
+            assert_eq!(q.reserved as usize, reserved, "queue '{}' reservation counter", q.name);
+        }
+        assert_eq!(self.app_gangs, app_gangs, "per-app gang-ask counters");
+    }
 }
 
 /// Dry-run placement of `asks` over `free0` (one entry per node in
-/// `nodes`), restricted to `allowed` nodes.  Larger asks are placed
-/// first (fewer fragmentation failures); each ask takes the best-fit
-/// node — matching label, smallest leftover memory.  Returns the chosen
-/// node index per ask (in `asks` order), or `None` when any ask cannot
-/// be placed — the caller must treat that as "place nothing".
+/// `nodes`), restricted to `allowed` nodes — the retained linear
+/// reference used by the preemption victim walk (and equivalent to
+/// [`CapacityScheduler::place_asks`], which the property suite checks).
+/// Larger asks are placed first (fewer fragmentation failures); each
+/// ask takes the best-fit node — matching label, smallest leftover
+/// memory.  Returns the chosen node index per ask (in `asks` order), or
+/// `None` when any ask cannot be placed.
 fn place_with(
     nodes: &[SchedNode],
     free0: &[Resource],
@@ -1112,23 +1650,6 @@ fn place_with(
         chosen[ai] = ni;
     }
     Some(chosen)
-}
-
-/// Best-fit over the live free capacity for a single ask (the
-/// fast-path twin of [`best_fit`]).
-fn pick_node_free(nodes: &[SchedNode], ask: &Ask) -> Option<usize> {
-    let mut best: Option<(usize, u64)> = None;
-    for (i, n) in nodes.iter().enumerate() {
-        if n.label != ask.node_label || !n.free.fits(&ask.resource) {
-            continue;
-        }
-        let leftover = n.free.memory_mb - ask.resource.memory_mb;
-        match best {
-            Some((_, b)) if leftover >= b => {}
-            _ => best = Some((i, leftover)),
-        }
-    }
-    best.map(|(i, _)| i)
 }
 
 /// Best-fit node choice: among allowed nodes matching the label with
@@ -1173,7 +1694,7 @@ mod tests {
     #[test]
     fn grants_respect_capacity_and_labels() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(16384, 16, 4));
-        let mut nodes = nodes2();
+        s.set_nodes(nodes2());
         s.add_asks(
             app(1),
             "default",
@@ -1183,7 +1704,7 @@ mod tests {
             ],
             0,
         );
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(grants.len(), 4);
         for g in &grants {
             if g.ask.node_label.as_deref() == Some("gpu") {
@@ -1193,21 +1714,22 @@ mod tests {
             }
         }
         // No oversubscription.
-        assert!(nodes[0].free.memory_mb <= 8192);
-        assert_eq!(nodes[1].free.gpus, 2);
+        assert!(s.node_free(NodeId(0)).unwrap().memory_mb <= 8192);
+        assert_eq!(s.node_free(NodeId(1)).unwrap().gpus, 2);
+        s.verify_invariants();
     }
 
     #[test]
     fn unsatisfiable_asks_stay_pending() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(8192, 8, 0));
-        let mut nodes = vec![SchedNode {
+        s.set_nodes(vec![SchedNode {
             id: NodeId(0),
             label: None,
             free: Resource::new(4096, 4, 0),
             capacity: Resource::new(4096, 4, 0),
-        }];
+        }]);
         s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(8192, 1, 0), 1)], 0);
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert!(grants.is_empty());
         assert_eq!(s.pending_count(), 1);
     }
@@ -1220,15 +1742,15 @@ mod tests {
             QueueConf::new("etl", 0.5, 1.0),
         ];
         let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(8192, 8, 0))];
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(8192, 8, 0))]);
         s.add_asks(app(1), "ml", &[ContainerRequest::new(Resource::new(3072, 1, 0), 2)], 0);
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(grants.len(), 1, "only one 3GiB ask fits under the 50% cap");
         assert_eq!(s.pending_count(), 1);
         // After release, the pending ask can go.
-        s.release("ml", Resource::new(3072, 1, 0));
-        nodes[0].free += Resource::new(3072, 1, 0);
-        assert_eq!(s.schedule(&mut nodes).len(), 1);
+        s.release_container("ml", NodeId(0), Resource::new(3072, 1, 0));
+        assert_eq!(s.schedule().len(), 1);
+        s.verify_invariants();
     }
 
     #[test]
@@ -1240,20 +1762,20 @@ mod tests {
             QueueConf::new("etl", 0.25, 1.0),
         ];
         let mut s = CapacityScheduler::new(queues, Resource::new(8192, 64, 0));
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(8192, 64, 0))];
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(8192, 64, 0))]);
         let shape = ContainerRequest::new(Resource::new(1024, 1, 0), 8);
         s.add_asks(app(1), "ml", &[shape.clone()], 0);
         s.add_asks(app(2), "etl", &[shape], 100);
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(grants.len(), 8, "cluster fits exactly 8 containers");
-        let ml = grants.iter().filter(|g| g.ask.queue == "ml").count();
+        let ml = grants.iter().filter(|g| &*g.ask.queue == "ml").count();
         assert_eq!(ml, 6, "75% queue gets 6 of 8");
     }
 
     #[test]
     fn priority_order_within_queue() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(1024, 1, 0))];
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(1024, 1, 0))]);
         // Low priority first in FIFO order, then high priority.
         s.add_asks(
             app(1),
@@ -1267,7 +1789,7 @@ mod tests {
             &[ContainerRequest::new(Resource::new(1024, 1, 0), 1).with_priority(5)],
             10,
         );
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(grants.len(), 1);
         assert_eq!(grants[0].ask.priority, 5, "high priority wins the single slot");
     }
@@ -1279,17 +1801,18 @@ mod tests {
         s.add_asks(app(2), "default", &[ContainerRequest::new(Resource::new(1024, 1, 0), 2)], 50);
         s.remove_app(app(1));
         assert_eq!(s.pending_count(), 2);
+        s.verify_invariants();
     }
 
     #[test]
     fn best_fit_packs_tightly() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(12288, 12, 0));
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(8192, 8, 0)),
             SchedNode::new(1, None, Resource::new(2048, 2, 0)),
-        ];
+        ]);
         s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(2048, 1, 0), 1)], 0);
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         // Best fit: lands on the small node, preserving the big slot.
         assert_eq!(grants[0].node, NodeId(1));
     }
@@ -1299,13 +1822,13 @@ mod tests {
     #[test]
     fn gang_is_all_or_nothing() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(2048, 2, 0)),
             SchedNode::new(1, None, Resource::new(2048, 2, 0)),
-        ];
+        ]);
         // A 3-container gang on a cluster that only fits 2 right now
         // (node 1 half-occupied): nothing may be granted.
-        nodes[1].free = Resource::new(1024, 1, 0);
+        s.set_node_free(NodeId(1), Resource::new(1024, 1, 0));
         let intake = s.add_asks_gang(
             app(1),
             "default",
@@ -1314,14 +1837,15 @@ mod tests {
             Some(7),
         );
         assert_eq!(intake.next_tag, 3);
-        assert!(s.schedule(&mut nodes).is_empty(), "partial gang placement is forbidden");
+        assert!(s.schedule().is_empty(), "partial gang placement is forbidden");
         assert_eq!(s.pending_count(), 3);
         // Capacity drains: the whole gang lands at once.
-        nodes[1].free = Resource::new(2048, 2, 0);
-        let grants = s.schedule(&mut nodes);
+        s.set_node_free(NodeId(1), Resource::new(2048, 2, 0));
+        let grants = s.schedule();
         assert_eq!(grants.len(), 3);
         assert!(grants.iter().all(|g| g.ask.gang == Some(7)));
         assert_eq!(s.stats().gangs_placed, 1);
+        s.verify_invariants();
     }
 
     #[test]
@@ -1341,71 +1865,74 @@ mod tests {
 
         // Legacy: interleaved single asks -> one slot each (deadlock).
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
-        let mut nodes = nodes_fn();
+        s.set_nodes(nodes_fn());
         s.add_asks(app(1), "default", &[shape.clone()], 0);
         s.add_asks(app(2), "default", &[shape.clone()], 10);
         s.add_asks(app(1), "default", &[shape.clone()], 1);
         s.add_asks(app(2), "default", &[shape.clone()], 11);
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         let apps: BTreeSet<u64> = grants.iter().map(|g| g.ask.app.seq).collect();
         assert_eq!(grants.len(), 2);
         assert_eq!(apps.len(), 2, "legacy splits the cluster: each app holds half a gang");
 
         // Gang mode: app 1's gang commits whole; app 2 waits whole.
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
-        let mut nodes = nodes_fn();
+        s.set_nodes(nodes_fn());
         let shape2 = ContainerRequest::new(Resource::new(1024, 1, 0), 2);
         s.add_asks_gang(app(1), "default", &[shape2.clone()], 0, Some(1));
         s.add_asks_gang(app(2), "default", &[shape2], 10, Some(2));
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(grants.len(), 2);
         assert!(grants.iter().all(|g| g.ask.app == app(1)), "first gang placed whole");
         assert!(s.has_pending_gang(app(2)), "second gang waits whole");
+        assert!(!s.has_pending_gang(app(1)), "placed gang no longer pending");
     }
 
     #[test]
     fn blocked_gang_reserves_and_drains() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(1024, 1, 0)),
             SchedNode::new(1, None, Resource::new(1024, 1, 0)),
-        ];
-        nodes[0].free = Resource::ZERO; // occupied by someone else
+        ]);
+        s.set_node_free(NodeId(0), Resource::ZERO); // occupied by someone else
         let gang_shape = ContainerRequest::new(Resource::new(1024, 1, 0), 2);
         s.add_asks_gang(app(1), "default", &[gang_shape], 0, Some(1));
         // A stream of small singles that would otherwise starve the gang.
         s.add_asks(app(2), "default", &[ContainerRequest::new(Resource::new(512, 1, 0), 1)], 10);
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         // The gang reserved both nodes, so the small ask gets nothing.
         assert!(grants.is_empty(), "reserved nodes accept no other placements: {grants:?}");
         assert_eq!(s.reservation_count(), 1);
         assert_eq!(s.stats().reservations_made, 1);
+        s.verify_invariants();
         // The occupied node drains -> the gang lands, reservation clears,
         // and the small ask flows again.
-        nodes[0].free = Resource::new(1024, 1, 0);
-        let grants = s.schedule(&mut nodes);
+        s.set_node_free(NodeId(0), Resource::new(1024, 1, 0));
+        let grants = s.schedule();
         assert_eq!(grants.len(), 2);
         assert!(grants.iter().all(|g| g.ask.gang == Some(1)));
         assert_eq!(s.reservation_count(), 0);
-        nodes[0].free += Resource::new(1024, 1, 0); // gang task finished
-        let grants = s.schedule(&mut nodes);
+        s.add_node_free(NodeId(0), Resource::new(1024, 1, 0)); // gang task finished
+        let grants = s.schedule();
         assert_eq!(grants.len(), 1, "singles flow once the reservation cleared");
+        s.verify_invariants();
     }
 
     #[test]
     fn reservation_limit_is_respected() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
         s.set_reservation_limit(1);
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(1024, 1, 0)),
             SchedNode::new(1, None, Resource::new(1024, 1, 0)),
-        ];
-        nodes[0].free = Resource::ZERO;
-        nodes[1].free = Resource::ZERO;
+        ]);
+        s.set_node_free(NodeId(0), Resource::ZERO);
+        s.set_node_free(NodeId(1), Resource::ZERO);
         let shape = ContainerRequest::new(Resource::new(1024, 1, 0), 2);
         s.add_asks_gang(app(1), "default", &[shape.clone()], 0, Some(1));
         s.add_asks_gang(app(2), "default", &[shape], 10, Some(2));
-        assert!(s.schedule(&mut nodes).is_empty());
+        assert!(s.schedule().is_empty());
         assert_eq!(s.reservation_count(), 1, "only one reservation slot configured");
     }
 
@@ -1420,13 +1947,13 @@ mod tests {
             None,
         );
         assert!(intake.remapped);
-        assert_eq!(intake.queue, "default");
+        assert_eq!(&*intake.queue, "default");
         assert_eq!(s.stats().unknown_queue_asks, 1);
         // The remapped ask is chargeable and schedulable.
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(4096, 4, 0))];
-        let grants = s.schedule(&mut nodes);
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(4096, 4, 0))]);
+        let grants = s.schedule();
         assert_eq!(grants.len(), 1);
-        assert_eq!(grants[0].ask.queue, "default");
+        assert_eq!(&*grants[0].ask.queue, "default");
     }
 
     #[test]
@@ -1438,28 +1965,8 @@ mod tests {
         assert_eq!(s.queue_used("default"), Some(Resource::ZERO), "known queues untouched");
     }
 
-    #[test]
-    fn preemption_plan_unblocks_starved_queue_up_to_guarantee() {
-        let queues = vec![
-            QueueConf::new("ml", 0.75, 1.0),
-            QueueConf::new("etl", 0.25, 1.0),
-        ];
-        let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
-        let mut nodes = vec![
-            SchedNode::new(0, None, Resource::new(4096, 4, 0)),
-            SchedNode::new(1, None, Resource::new(4096, 4, 0)),
-        ];
-        // etl bursts to 6 GiB (75% >> its 25% guarantee).
-        s.add_asks_gang(
-            app(2),
-            "etl",
-            &[ContainerRequest::new(Resource::new(1024, 1, 0), 6)],
-            100,
-            Some(1),
-        );
-        let etl_grants = s.schedule(&mut nodes);
-        assert_eq!(etl_grants.len(), 6);
-        let candidates: Vec<VictimCandidate> = etl_grants
+    fn victims_of(grants: &[Grant]) -> Vec<VictimCandidate> {
+        grants
             .iter()
             .enumerate()
             .map(|(i, g)| VictimCandidate {
@@ -1471,7 +1978,31 @@ mod tests {
                 gang: g.ask.gang,
                 seq: i as u64 + 1,
             })
-            .collect();
+            .collect()
+    }
+
+    #[test]
+    fn preemption_plan_unblocks_starved_queue_up_to_guarantee() {
+        let queues = vec![
+            QueueConf::new("ml", 0.75, 1.0),
+            QueueConf::new("etl", 0.25, 1.0),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
+        s.set_nodes(vec![
+            SchedNode::new(0, None, Resource::new(4096, 4, 0)),
+            SchedNode::new(1, None, Resource::new(4096, 4, 0)),
+        ]);
+        // etl bursts to 6 GiB (75% >> its 25% guarantee).
+        s.add_asks_gang(
+            app(2),
+            "etl",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 6)],
+            100,
+            Some(1),
+        );
+        let etl_grants = s.schedule();
+        assert_eq!(etl_grants.len(), 6);
+        let candidates = victims_of(&etl_grants);
         // ml asks a 4 GiB gang: blocked (only 2 GiB free), under its 75%
         // guarantee, and feasible at capacity -> preemption triggers.
         s.add_asks_gang(
@@ -1481,8 +2012,8 @@ mod tests {
             0,
             Some(2),
         );
-        assert!(s.schedule(&mut nodes).is_empty(), "gang blocked before preemption");
-        let victims = s.preemption_plan(&nodes, &candidates, 8);
+        assert!(s.schedule().is_empty(), "gang blocked before preemption");
+        let victims = s.preemption_plan(&candidates, 8);
         assert!(!victims.is_empty(), "an under-guarantee queue must claw back capacity");
         // Victims are newest-first and never drive etl below its 25%
         // guarantee (2 GiB): at most 4 of etl's 6 GiB may be taken.
@@ -1496,15 +2027,15 @@ mod tests {
         );
         assert_eq!(s.stats().preemption_rounds, 1);
         assert_eq!(s.stats().preemptions, victims.len() as u64);
+        s.verify_invariants();
         // Victims' capacity returns -> the gang lands on the reserved nodes.
         for v in &victims {
-            s.release(&v.queue, v.resource);
-            let ni = nodes.iter().position(|n| n.id == v.node).unwrap();
-            nodes[ni].free += v.resource;
+            s.release_container(&v.queue, v.node, v.resource);
         }
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(grants.len(), 4, "preemption unblocked the whole gang");
-        assert!(grants.iter().all(|g| g.ask.queue == "ml"));
+        assert!(grants.iter().all(|g| &*g.ask.queue == "ml"));
+        s.verify_invariants();
     }
 
     #[test]
@@ -1515,7 +2046,7 @@ mod tests {
             QueueConf::new("etl", 0.25, 1.0),
         ];
         let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(8192, 8, 0))];
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(8192, 8, 0))]);
         s.add_asks_gang(
             app(2),
             "etl",
@@ -1523,20 +2054,8 @@ mod tests {
             100,
             Some(1),
         );
-        let etl_grants = s.schedule(&mut nodes);
-        let candidates: Vec<VictimCandidate> = etl_grants
-            .iter()
-            .enumerate()
-            .map(|(i, g)| VictimCandidate {
-                container: ContainerId { app: g.ask.app, seq: i as u64 + 1 },
-                app: g.ask.app,
-                queue: g.ask.queue.clone(),
-                node: g.node,
-                resource: g.ask.resource,
-                gang: g.ask.gang,
-                seq: i as u64 + 1,
-            })
-            .collect();
+        let etl_grants = s.schedule();
+        let candidates = victims_of(&etl_grants);
         s.add_asks_gang(
             app(1),
             "ml",
@@ -1544,7 +2063,7 @@ mod tests {
             0,
             Some(2),
         );
-        let victims = s.preemption_plan(&nodes, &candidates, 1);
+        let victims = s.preemption_plan(&candidates, 1);
         assert!(victims.is_empty(), "1 victim cannot unblock a 4-container gang");
         assert_eq!(s.stats().preemptions, 0);
     }
@@ -1561,11 +2080,11 @@ mod tests {
             QueueConf::new("etl", 0.5, 1.0),
         ];
         let mut s = CapacityScheduler::new(queues, Resource::new(4096, 8, 0));
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(4096, 8, 0))];
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(4096, 8, 0))]);
         let slot = ContainerRequest::new(Resource::new(1024, 1, 0), 1);
         // App A fills ml to its 2 GiB ceiling.
         s.add_asks(app(1), "ml", &[slot.clone(), slot.clone()], 0);
-        assert_eq!(s.schedule(&mut nodes).len(), 2);
+        assert_eq!(s.schedule().len(), 2);
         // App B's senior gang, then younger singles from A.
         s.add_asks_gang(
             app(2),
@@ -1577,16 +2096,14 @@ mod tests {
         s.add_asks(app(1), "ml", &[slot.clone(), slot], 20);
         // One of A's containers drains: the freed headroom must be held
         // for the gang, not snapped up by A's younger single.
-        s.release("ml", Resource::new(1024, 1, 0));
-        nodes[0].free += Resource::new(1024, 1, 0);
+        s.release_container("ml", NodeId(0), Resource::new(1024, 1, 0));
         assert!(
-            s.schedule(&mut nodes).is_empty(),
+            s.schedule().is_empty(),
             "younger single re-consumed the gang's draining headroom"
         );
         // Second drain: the gang's whole hole is open — it lands.
-        s.release("ml", Resource::new(1024, 1, 0));
-        nodes[0].free += Resource::new(1024, 1, 0);
-        let grants = s.schedule(&mut nodes);
+        s.release_container("ml", NodeId(0), Resource::new(1024, 1, 0));
+        let grants = s.schedule();
         assert_eq!(grants.len(), 2, "{grants:?}");
         assert!(grants.iter().all(|g| g.ask.gang == Some(1)), "the senior gang wins");
         assert_eq!(s.pending_count(), 2, "A's younger singles wait for the next drain");
@@ -1602,10 +2119,10 @@ mod tests {
             QueueConf::new("adhoc", 0.25, 0.3),
         ];
         let mut s = CapacityScheduler::new(queues, Resource::new(16384, 32, 0));
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(8192, 16, 0)),
             SchedNode::new(1, None, Resource::new(8192, 16, 0)),
-        ];
+        ]);
         s.add_asks_gang(
             app(1),
             "adhoc",
@@ -1613,11 +2130,12 @@ mod tests {
             0,
             Some(1),
         );
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(s.stats().gangs_demoted, 1);
         assert_eq!(grants.len(), 4, "trickles up to the 30% ceiling (4 x 1 GiB)");
         assert!(grants.iter().all(|g| g.ask.gang.is_none()), "demoted asks lose the gang id");
         assert!(!s.has_pending_gang(app(1)));
+        s.verify_invariants();
     }
 
     #[test]
@@ -1625,10 +2143,10 @@ mod tests {
         // 3 x 1536 MB can never co-exist on two 2048 MB nodes, even
         // empty: the gang demotes and two containers flow immediately.
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(2048, 2, 0)),
             SchedNode::new(1, None, Resource::new(2048, 2, 0)),
-        ];
+        ]);
         s.add_asks_gang(
             app(1),
             "default",
@@ -1636,20 +2154,21 @@ mod tests {
             0,
             Some(1),
         );
-        let grants = s.schedule(&mut nodes);
+        let grants = s.schedule();
         assert_eq!(s.stats().gangs_demoted, 1);
         assert_eq!(grants.len(), 2, "one per node flows right away");
         assert_eq!(s.pending_count(), 1, "the third waits for a release, not forever");
+        s.verify_invariants();
     }
 
     #[test]
     fn decisions_are_audited_and_drained() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(1024, 1, 0)),
             SchedNode::new(1, None, Resource::new(1024, 1, 0)),
-        ];
-        nodes[0].free = Resource::ZERO;
+        ]);
+        s.set_node_free(NodeId(0), Resource::ZERO);
         s.add_asks_gang(
             app(1),
             "default",
@@ -1657,7 +2176,7 @@ mod tests {
             0,
             Some(1),
         );
-        assert!(s.schedule(&mut nodes).is_empty());
+        assert!(s.schedule().is_empty());
         let d = s.take_decisions();
         assert!(
             d.iter().any(|x| x.reason == DecisionReason::WaitingFree
@@ -1667,8 +2186,8 @@ mod tests {
         );
         assert!(d.iter().any(|x| x.reason == DecisionReason::Reserved), "{d:?}");
         assert!(s.take_decisions().is_empty(), "take_decisions drains");
-        nodes[0].free = Resource::new(1024, 1, 0);
-        assert_eq!(s.schedule(&mut nodes).len(), 2);
+        s.set_node_free(NodeId(0), Resource::new(1024, 1, 0));
+        assert_eq!(s.schedule().len(), 2);
         let d = s.take_decisions();
         assert!(d.iter().any(|x| x.reason == DecisionReason::PlacedAll), "{d:?}");
     }
@@ -1679,10 +2198,10 @@ mod tests {
         // queue is full right now).
         let queues = vec![QueueConf::new("ml", 0.5, 0.5), QueueConf::new("etl", 0.5, 1.0)];
         let mut s = CapacityScheduler::new(queues, Resource::new(4096, 8, 0));
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(4096, 8, 0))];
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(4096, 8, 0))]);
         let slot = ContainerRequest::new(Resource::new(1024, 1, 0), 1);
         s.add_asks(app(1), "ml", &[slot.clone(), slot], 0);
-        assert_eq!(s.schedule(&mut nodes).len(), 2);
+        assert_eq!(s.schedule().len(), 2);
         s.add_asks_gang(
             app(2),
             "ml",
@@ -1691,20 +2210,20 @@ mod tests {
             Some(1),
         );
         s.take_decisions();
-        assert!(s.schedule(&mut nodes).is_empty());
+        assert!(s.schedule().is_empty());
         let d = s.take_decisions();
         let wh = d
             .iter()
             .find(|x| x.reason == DecisionReason::WaitingHeadroom)
             .expect("headroom verdict audited");
-        assert_eq!(wh.queue, "ml");
+        assert_eq!(&*wh.queue, "ml");
         assert!(wh.detail.contains("for queue 'ml' headroom"), "{}", wh.detail);
         // Infeasible gang demotes with an audited reason.
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(4096, 4, 0));
-        let mut nodes = vec![
+        s.set_nodes(vec![
             SchedNode::new(0, None, Resource::new(2048, 2, 0)),
             SchedNode::new(1, None, Resource::new(2048, 2, 0)),
-        ];
+        ]);
         s.add_asks_gang(
             app(1),
             "default",
@@ -1712,7 +2231,7 @@ mod tests {
             0,
             Some(1),
         );
-        s.schedule(&mut nodes);
+        s.schedule();
         let d = s.take_decisions();
         let dem = d
             .iter()
@@ -1724,8 +2243,8 @@ mod tests {
     #[test]
     fn queue_snapshots_expose_gang_state() {
         let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(2048, 2, 0));
-        let mut nodes = vec![SchedNode::new(0, None, Resource::new(2048, 2, 0))];
-        nodes[0].free = Resource::ZERO;
+        s.set_nodes(vec![SchedNode::new(0, None, Resource::new(2048, 2, 0))]);
+        s.set_node_free(NodeId(0), Resource::ZERO);
         s.add_asks_gang(
             app(1),
             "default",
@@ -1733,11 +2252,153 @@ mod tests {
             0,
             Some(1),
         );
-        assert!(s.schedule(&mut nodes).is_empty());
+        assert!(s.schedule().is_empty());
         let snap = &s.queue_snapshots()[0];
         assert_eq!(snap.pending_asks, 2);
         assert_eq!(snap.pending_gangs, 1);
         assert_eq!(snap.reservations, 1);
         assert_eq!(snap.capacity, 1.0);
     }
+
+    // ---------------- index + counter consistency ----------------
+
+    #[test]
+    fn snapshots_from_counters_agree_with_ground_truth_mid_preemption() {
+        // Regression for the reservation-list walk the counters replace:
+        // capture snapshots at the most entangled moment — a preemption
+        // round just force-reserved nodes for a blocked gang while the
+        // victim queue still holds its capacity — and check them against
+        // a recount of the raw state.
+        let queues = vec![
+            QueueConf::new("ml", 0.75, 1.0),
+            QueueConf::new("etl", 0.25, 1.0),
+        ];
+        let mut s = CapacityScheduler::new(queues, Resource::new(8192, 8, 0));
+        s.set_nodes(vec![
+            SchedNode::new(0, None, Resource::new(4096, 4, 0)),
+            SchedNode::new(1, None, Resource::new(4096, 4, 0)),
+        ]);
+        s.add_asks_gang(
+            app(2),
+            "etl",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 6)],
+            100,
+            Some(1),
+        );
+        let etl_grants = s.schedule();
+        let candidates = victims_of(&etl_grants);
+        s.add_asks_gang(
+            app(1),
+            "ml",
+            &[ContainerRequest::new(Resource::new(1024, 1, 0), 4)],
+            0,
+            Some(2),
+        );
+        assert!(s.schedule().is_empty());
+        let victims = s.preemption_plan(&candidates, 8);
+        assert!(!victims.is_empty());
+        // Mid-preemption: victims selected, capacity not yet returned,
+        // the ml gang force-reserved.  Counters must match ground truth.
+        let snaps = s.queue_snapshots();
+        let ml = snaps.iter().find(|q| &*q.name == "ml").unwrap();
+        let etl = snaps.iter().find(|q| &*q.name == "etl").unwrap();
+        assert_eq!(ml.pending_asks, 4);
+        assert_eq!(ml.pending_gangs, 1, "the blocked gang is still pending");
+        assert_eq!(ml.reservations, 1, "the force-reservation is counted");
+        assert_eq!(etl.reservations, 0);
+        assert_eq!(etl.pending_gangs, 0);
+        assert_eq!(etl.preemptions, victims.len() as u64);
+        assert_eq!(
+            snaps.iter().map(|q| q.reservations).sum::<usize>(),
+            s.reservation_count(),
+            "per-queue reservation counters sum to the reservation list"
+        );
+        s.verify_invariants();
+    }
+
+    #[test]
+    fn node_remove_keeps_index_consistent() {
+        let mut s = CapacityScheduler::new(QueueConf::default_only(), Resource::new(8192, 8, 4));
+        s.set_nodes(vec![
+            SchedNode::new(0, None, Resource::new(2048, 2, 0)),
+            SchedNode::new(1, Some("gpu".into()), Resource::new(2048, 2, 4)),
+            SchedNode::new(2, None, Resource::new(2048, 2, 0)),
+            SchedNode::new(3, None, Resource::new(2048, 2, 0)),
+        ]);
+        s.add_asks(app(1), "default", &[ContainerRequest::new(Resource::new(1024, 1, 0), 3)], 0);
+        assert_eq!(s.schedule().len(), 3);
+        s.verify_invariants();
+        // Remove a middle node: swap_remove moves the last node into its
+        // slot; every index entry must follow.
+        let total_before = s.cluster_total();
+        assert!(s.remove_node(NodeId(2)));
+        assert!(!s.remove_node(NodeId(2)), "second removal is a no-op");
+        s.verify_invariants();
+        assert_eq!(s.node_count(), 3);
+        assert_eq!(s.node_free(NodeId(2)), None);
+        assert_eq!(
+            s.cluster_total().memory_mb,
+            total_before.memory_mb - 2048,
+            "cluster total shrinks by the removed capacity"
+        );
+        // Scheduling still works against the compacted table.
+        s.add_asks(app(2), "default", &[ContainerRequest::new(Resource::new(1024, 1, 0), 2)], 10);
+        let grants = s.schedule();
+        assert!(!grants.is_empty());
+        assert!(grants.iter().all(|g| g.node != NodeId(2)));
+        s.verify_invariants();
+    }
+
+    #[test]
+    fn indexed_matches_linear_reference() {
+        // The same ask/release script must produce bit-identical grants
+        // with the skyline index and with the linear reference scan.
+        let run = |linear: bool| -> Vec<(u64, u32)> {
+            let queues = vec![
+                QueueConf::new("ml", 0.6, 1.0),
+                QueueConf::new("etl", 0.4, 0.7),
+            ];
+            let mut s = CapacityScheduler::new(queues, Resource::new(24576, 24, 4));
+            s.set_linear_reference(linear);
+            s.set_nodes(vec![
+                SchedNode::new(0, None, Resource::new(8192, 8, 0)),
+                SchedNode::new(1, Some("gpu".into()), Resource::new(8192, 8, 4)),
+                SchedNode::new(2, None, Resource::new(4096, 4, 0)),
+                SchedNode::new(3, None, Resource::new(4096, 4, 0)),
+            ]);
+            let mut out = Vec::new();
+            s.add_asks(app(1), "ml", &[ContainerRequest::new(Resource::new(1024, 1, 0), 4)], 0);
+            s.add_asks_gang(
+                app(2),
+                "etl",
+                &[ContainerRequest::new(Resource::new(2048, 2, 0), 3)],
+                100,
+                Some(1),
+            );
+            s.add_asks(
+                app(3),
+                "ml",
+                &[ContainerRequest::new(Resource::new(2048, 2, 1), 2).with_label("gpu")],
+                200,
+            );
+            for g in s.schedule() {
+                out.push((g.ask.tag, g.node.0));
+            }
+            s.release_container("ml", NodeId(0), Resource::new(1024, 1, 0));
+            s.add_asks_gang(
+                app(4),
+                "ml",
+                &[ContainerRequest::new(Resource::new(3072, 2, 0), 2)],
+                300,
+                Some(2),
+            );
+            for g in s.schedule() {
+                out.push((g.ask.tag, g.node.0));
+            }
+            s.verify_invariants();
+            out
+        };
+        assert_eq!(run(false), run(true), "indexed and linear placements diverge");
+    }
 }
+

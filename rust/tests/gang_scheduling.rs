@@ -291,7 +291,7 @@ fn preemption_restores_starved_queue_to_its_guarantee() {
     let etl = rm
         .queue_stats()
         .into_iter()
-        .find(|q| q.name == "etl")
+        .find(|q| &*q.name == "etl")
         .unwrap();
     assert_eq!(etl.preemptions, preempted, "per-queue victim counter");
     for (_, free, cap) in rm.node_usage() {

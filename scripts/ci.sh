@@ -29,6 +29,12 @@ TONY_BENCH_SMOKE=1 cargo bench --bench bench_latency
 echo "==> contention bench smoke (gang mode deadlock-freedom at 2/8 jobs)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_contention
 
+echo "==> scheduler bench smoke (10k-node scenario: p99 allocate bound + indexed >= 10x linear)"
+# The smoke mode asserts both gates internally: indexed p99 allocate
+# round under TONY_SCHED_P99_MS (default 100 ms) and the indexed path
+# >= 10x the measured linear baseline per grant.
+TONY_BENCH_SMOKE=1 cargo bench --bench bench_scheduler
+
 echo "==> crash-recovery suite (WAL crash points + mid-allocate-wave restart)"
 # `cargo test -q` above already ran these; run them by name too so a
 # durability regression is named in CI output, not buried in the batch.
