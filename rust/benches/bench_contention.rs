@@ -13,13 +13,17 @@
 use tony::baseline::{run_adhoc_pool, run_managed_pool, synthetic_jobs, AdhocOutcome, AdhocParams};
 use tony::bench::cluster::{run, ClusterSpec, Scenario};
 use tony::bench::{f1, f2, n, Table};
-use tony::util::ids::{ApplicationId, NodeId};
+use tony::util::ids::{ApplicationId, ContainerId, NodeId};
 use tony::yarn::scheduler::SchedNode;
-use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource};
+use tony::yarn::{CapacityScheduler, ContainerRequest, QueueConf, Resource, VictimCandidate};
 
 const GANG_SIZE: u32 = 4;
 const TASK: Resource = Resource { memory_mb: 2048, vcores: 2, gpus: 0 };
 const JOB_MS: u64 = 10_000;
+/// Elastic batch jobs may balloon to this many workers on idle capacity.
+const ELASTIC_MAX: u32 = 12;
+const ARRIVAL_MS: u64 = 2_000;
+const TICK_MS: u64 = 250;
 
 struct SimJob {
     app: ApplicationId,
@@ -115,6 +119,203 @@ fn run_contention(n_jobs: u32, gang_mode: bool) -> (u32, bool, u64, usize) {
     }
 }
 
+struct ElasticJob {
+    app: ApplicationId,
+    queue: &'static str,
+    elastic: bool,
+    submitted_at: u64,
+    started_at: Option<u64>,
+    finished_at: Option<u64>,
+    /// `(node, shape, grant seq)` — grant order, so the tail is newest.
+    held: Vec<(NodeId, Resource, u64)>,
+    work_ms: u64,
+}
+
+/// Discrete-event simulation of staggered gang arrivals on two queues
+/// (`prod` rigid / `batch` elastic, 50/50 guarantees): elastic batch
+/// jobs grow into idle capacity via `elastic_grow_plan` and hand the
+/// extra workers back through `elastic_shrink_plan` when a blocked gang
+/// needs them — the RM's shrink-before-preempt pass, minus the threads.
+/// Each job needs `GANG_SIZE * JOB_MS` worker-ms of compute, so growing
+/// finishes it sooner; rigid-only mode runs the identical arrival
+/// sequence with elasticity off.  Returns
+/// `(goodput [avg busy workers], makespan_ms, avg_wait_ms, grows, released)`.
+fn run_elastic_contention(n_jobs: u32, elasticity: bool) -> (f64, u64, f64, u64, u64) {
+    let nodes: Vec<SchedNode> =
+        (0..4).map(|i| SchedNode::new(i, None, Resource::new(8192, 8, 0))).collect();
+    let total = nodes.iter().fold(Resource::ZERO, |a, x| a + x.capacity);
+    let queues = vec![QueueConf::new("prod", 0.5, 1.0), QueueConf::new("batch", 0.5, 1.0)];
+    let mut sched = CapacityScheduler::new(queues, total);
+    sched.set_nodes(nodes);
+    let mut jobs: Vec<ElasticJob> = (0..n_jobs)
+        .map(|i| ElasticJob {
+            app: ApplicationId { cluster_ts: 2, seq: i as u64 + 1 },
+            queue: if i % 2 == 1 { "batch" } else { "prod" },
+            elastic: elasticity && i % 2 == 1,
+            submitted_at: i as u64 * ARRIVAL_MS,
+            started_at: None,
+            finished_at: None,
+            held: Vec::new(),
+            work_ms: 0,
+        })
+        .collect();
+    const WORK: u64 = GANG_SIZE as u64 * JOB_MS;
+    let (mut tag, mut cseq, mut grows, mut released) = (0u64, 1u64, 0u64, 0u64);
+    let mut now = 0u64;
+    let mut next_arrival = 0usize;
+    loop {
+        while next_arrival < jobs.len() && jobs[next_arrival].submitted_at <= now {
+            let j = &jobs[next_arrival];
+            tag = sched
+                .add_asks_gang(
+                    j.app,
+                    j.queue,
+                    &[ContainerRequest::new(TASK, GANG_SIZE)],
+                    tag,
+                    Some(j.app.seq),
+                )
+                .next_tag;
+            next_arrival += 1;
+        }
+        // Cooperative shrink first (before scheduling), so a blocked
+        // gang lands in the same tick its hole is opened — the ordering
+        // the RM's elasticity pass uses.
+        if elasticity {
+            let candidates: Vec<VictimCandidate> = jobs
+                .iter()
+                .filter(|j| j.elastic && j.started_at.is_some() && j.finished_at.is_none())
+                .flat_map(|j| {
+                    j.held.iter().map(move |(node, r, seq)| VictimCandidate {
+                        container: ContainerId { app: j.app, seq: *seq },
+                        app: j.app,
+                        queue: std::sync::Arc::from(j.queue),
+                        node: *node,
+                        resource: *r,
+                        gang: None,
+                        seq: *seq,
+                    })
+                })
+                .collect();
+            for (app, target) in
+                sched.elastic_shrink_plan(&candidates, GANG_SIZE as usize, GANG_SIZE)
+            {
+                let ji = (app.seq - 1) as usize;
+                let q = jobs[ji].queue;
+                while jobs[ji].held.len() as u32 > target {
+                    let (node, r, _) = jobs[ji].held.pop().expect("target below held count");
+                    sched.release_container(q, node, r);
+                    released += 1;
+                }
+                sched.set_elastic_current(app, target);
+            }
+        }
+        for gr in sched.schedule() {
+            let ji = (gr.ask.app.seq - 1) as usize;
+            jobs[ji].held.push((gr.node, gr.ask.resource, cseq));
+            cseq += 1;
+            if jobs[ji].started_at.is_none() && jobs[ji].held.len() >= GANG_SIZE as usize {
+                jobs[ji].started_at = Some(now);
+                if jobs[ji].elastic {
+                    sched.register_elastic(
+                        jobs[ji].app,
+                        "batch",
+                        TASK,
+                        None,
+                        GANG_SIZE,
+                        ELASTIC_MAX,
+                        GANG_SIZE,
+                    );
+                }
+            }
+        }
+        // Grow one job per tick into genuinely idle capacity.
+        if elasticity {
+            for j in &jobs {
+                if j.elastic && j.started_at.is_some() && j.finished_at.is_none() {
+                    sched.set_elastic_current(j.app, j.held.len() as u32);
+                }
+            }
+            if let Some((app, target)) = sched.elastic_grow_plan(GANG_SIZE, &|_| true) {
+                let ji = (app.seq - 1) as usize;
+                let delta = target.saturating_sub(jobs[ji].held.len() as u32);
+                if delta > 0 {
+                    tag = sched.add_asks(app, "batch", &[ContainerRequest::new(TASK, delta)], tag);
+                    grows += delta as u64;
+                    for gr in sched.schedule() {
+                        let gi = (gr.ask.app.seq - 1) as usize;
+                        jobs[gi].held.push((gr.node, gr.ask.resource, cseq));
+                        cseq += 1;
+                    }
+                    sched.set_elastic_current(app, jobs[ji].held.len() as u32);
+                }
+            }
+        }
+        now += TICK_MS;
+        let mut all_done = true;
+        for j in jobs.iter_mut() {
+            if j.finished_at.is_some() {
+                continue;
+            }
+            if j.started_at.is_some() {
+                j.work_ms += j.held.len() as u64 * TICK_MS;
+                if j.work_ms >= WORK {
+                    j.finished_at = Some(now);
+                    for (node, r, _) in std::mem::take(&mut j.held) {
+                        sched.release_container(j.queue, node, r);
+                    }
+                    if j.elastic {
+                        sched.deregister_elastic(j.app);
+                    }
+                    continue;
+                }
+            }
+            all_done = false;
+        }
+        if all_done || now > n_jobs as u64 * (ARRIVAL_MS + JOB_MS) * 4 {
+            break;
+        }
+    }
+    sched.verify_invariants();
+    let makespan = jobs.iter().filter_map(|j| j.finished_at).max().unwrap_or(now).max(1);
+    let done_work: u64 = jobs.iter().map(|j| j.work_ms.min(WORK)).sum();
+    let waits: Vec<u64> = jobs
+        .iter()
+        .filter_map(|j| j.started_at.map(|s| s - j.submitted_at))
+        .collect();
+    let avg_wait =
+        if waits.is_empty() { 0.0 } else { waits.iter().sum::<u64>() as f64 / waits.len() as f64 };
+    (done_work as f64 / makespan as f64, makespan, avg_wait, grows, released)
+}
+
+fn elastic_vs_rigid_table(sizes: &[u32]) {
+    let mut table = Table::new(&[
+        "jobs", "mode", "goodput-w", "makespan-s", "avg-wait-s", "grows", "released",
+    ]);
+    for &nj in sizes {
+        for (mode, e) in [("elastic", true), ("rigid", false)] {
+            let (goodput, makespan, wait, grows, released) = run_elastic_contention(nj, e);
+            table.row(&[
+                n(nj),
+                mode.to_string(),
+                f2(goodput),
+                f1(makespan as f64 / 1e3),
+                f1(wait / 1e3),
+                n(grows),
+                n(released),
+            ]);
+        }
+    }
+    table.print(
+        "C-elastic: mixed elastic/rigid gangs vs rigid-only (4 hosts x 8 GiB / 8 cores; \
+         4 x 2 GiB+2c per gang, batch jobs stretch to 12 workers; arrivals 2 s apart)",
+    );
+    println!(
+        "\nexpected shape: elastic batch jobs soak idle capacity and finish early, then \
+         hand workers back when a rigid gang blocks — goodput (avg busy workers) never \
+         drops below the rigid-only baseline and makespan shortens."
+    );
+}
+
 fn gang_vs_legacy_table(sizes: &[u32]) {
     let mut table =
         Table::new(&["jobs", "mode", "completed", "deadlock", "makespan-s", "grants"]);
@@ -151,7 +352,24 @@ fn main() {
             assert!(!deadlocked, "gang mode deadlocked at {n_jobs} jobs");
             assert_eq!(completed, n_jobs, "gang mode must complete all {n_jobs} jobs");
         }
-        println!("\nsmoke OK: gang mode deadlock-free at 2/8 jobs");
+        elastic_vs_rigid_table(&[2, 8]);
+        // CI gate: elasticity must never cost goodput against the
+        // identical rigid-only arrival sequence, and must actually grow.
+        for n_jobs in [2u32, 8] {
+            let (elastic_goodput, ..) = run_elastic_contention(n_jobs, true);
+            let (rigid_goodput, ..) = run_elastic_contention(n_jobs, false);
+            assert!(
+                elastic_goodput + 1e-9 >= rigid_goodput,
+                "elastic goodput {elastic_goodput:.3} fell below rigid-only \
+                 {rigid_goodput:.3} at {n_jobs} jobs"
+            );
+        }
+        let (_, _, _, grows, _) = run_elastic_contention(2, true);
+        assert!(grows >= GANG_SIZE as u64, "elastic mode never grew into idle capacity");
+        println!(
+            "\nsmoke OK: gang mode deadlock-free at 2/8 jobs; \
+             elastic goodput >= rigid-only at 2/8 jobs"
+        );
         return;
     }
 
@@ -192,6 +410,7 @@ fn main() {
     println!("\nexpected shape: TonY holds 100% success with queue-growth makespan; ad-hoc success collapses past 100% demand.");
 
     gang_vs_legacy_table(&[2, 8, 32]);
+    elastic_vs_rigid_table(&[8, 32]);
     large_gang_contention();
 }
 

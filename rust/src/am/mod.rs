@@ -121,6 +121,26 @@ fn am_body(am: &AmContext, ctx: &ContainerCtx) -> Result<JobResult> {
     while attempts_used < job.max_attempts {
         attempts_used += 1;
         am.state.begin_attempt(attempts_used);
+        // Elastic jobs (re-)advertise their resize bounds each attempt:
+        // a teardown relaunches the original worker count, so the
+        // scheduler's acknowledged `current` must reset with it (this
+        // also clears any resize left in flight by the dead attempt).
+        // Rigid jobs (min == max) never register, so the elasticity
+        // pass cannot touch them.
+        if job.is_elastic() {
+            if let Some(w) = job.task_type(crate::tonyconf::WORKER) {
+                am.rm
+                    .register_elastic(
+                        am.app,
+                        w.resource.clone(),
+                        w.node_label.clone(),
+                        job.workers_min,
+                        job.workers_max,
+                        w.instances,
+                    )
+                    .context("registering elastic bounds")?;
+            }
+        }
         tinfo!("am", "{} attempt {attempts_used}/{}", am.app, job.max_attempts);
         match run_attempt(am, ctx, &am_addr, attempts_used) {
             Ok(AttemptOutcome::Succeeded) => {
@@ -284,6 +304,15 @@ fn run_attempt(
     // grants must arrive within `launch_timeout` of this).
     let mut phase_started = clock.now_ms();
     let mut recovering = false;
+    // Elastic resize command awaiting a quiet point.  Captured from the
+    // allocate response but acted on only when no recovery is in flight,
+    // no failures were collected this tick, and no grants are
+    // outstanding — a resize wave must never interleave with surgical
+    // recovery, and a stale router entry could otherwise resurrect a
+    // removed task's record via `record_launch`.  While deferred, the
+    // RM's in-flight entry stays alive, keeping further elasticity (and
+    // preemption, for shrinks) stood down.
+    let mut pending_resize: Option<u32> = None;
 
     // The event machinery replacing the old ≤20 ms sleep-poll: every
     // deadline the loop's checks depend on is armed on the wheel, the
@@ -324,6 +353,14 @@ fn run_attempt(
                 am.app,
                 resp.preempt_notices.len()
             );
+        }
+
+        // Elastic resize command: the RM wants this job to converge to
+        // `target` workers.  At most one is in flight per job, so a new
+        // command simply supersedes an unapplied one.
+        if let Some(target) = resp.resize_target {
+            tinfo!("am", "{} resize command: converge to {target} worker(s)", am.app);
+            pending_resize = Some(target);
         }
 
         for container in resp.allocated {
@@ -372,6 +409,14 @@ fn run_attempt(
                 let record_exit = am.state.task_exit(&task);
                 match status.exit {
                     ExitStatus::Success => {
+                        am.state.forget_container(status.id);
+                    }
+                    ExitStatus::Released => {
+                        // Elastic shrink hand-back.  Normally the AM has
+                        // already removed the task's record (so
+                        // `task_for_container` misses and we never get
+                        // here); defensively absorb it with no failure
+                        // entry either way — a release is never a fault.
                         am.state.forget_container(status.id);
                     }
                     bad => {
@@ -437,6 +482,62 @@ fn run_attempt(
                     "{task} launched but never registered within {registration_timeout:?}"
                 )
             });
+        }
+
+        // ---- elastic resize wave (docs/SCHEDULING.md "Elasticity") ----
+        // Both directions reuse the surgical-recovery machinery: bump
+        // the spec version, rebuild the cluster spec, let survivors
+        // resync via `Reconfigure`, and acknowledge completion to the
+        // RM through `note_resized` once the wave settles.
+        if pending_resize.is_some()
+            && !recovering
+            && failed.is_empty()
+            && router.outstanding() == 0
+        {
+            let target = pending_resize.take().expect("checked is_some");
+            let cur = am.state.expected_workers();
+            if target > cur {
+                let new_tasks: Vec<TaskId> = (cur..target)
+                    .map(|i| TaskId::new(crate::tonyconf::WORKER, i))
+                    .collect();
+                let version = am.state.begin_grow(&new_tasks);
+                for t in &new_tasks {
+                    router.enqueue(t);
+                }
+                tinfo!(
+                    "am",
+                    "{} elastic grow {cur} -> {target} worker(s) at spec v{version}",
+                    am.app
+                );
+                recovering = true;
+                phase_started = clock.now_ms();
+                // The delta-gang asks only travel on the next allocate
+                // call at the top of the loop.
+                continue;
+            } else if target < cur {
+                let (version, removed) = am.state.begin_shrink(cur - target);
+                let cids: Vec<ContainerId> =
+                    removed.iter().filter_map(|(_, c)| *c).collect();
+                let names: Vec<String> =
+                    removed.iter().map(|(t, _)| t.to_string()).collect();
+                // The RM marks these before killing so their exits come
+                // back `Released`, not `Killed` — never a task fault.
+                rm.release_workers(am.app, &cids);
+                am.state.try_build_spec(version);
+                tinfo!(
+                    "am",
+                    "{} elastic shrink {cur} -> {target}: releasing [{}] at spec v{version}",
+                    am.app,
+                    names.join(", ")
+                );
+                recovering = true;
+                phase_started = clock.now_ms();
+                continue;
+            } else {
+                // Already at target (e.g. the command raced an attempt
+                // restart back to the original count): just acknowledge.
+                rm.note_resized(am.app, cur);
+            }
         }
 
         // ---- surgical recovery (or escalation) ----
@@ -505,6 +606,14 @@ fn run_attempt(
                     am.app,
                     am.state.spec_version()
                 );
+                // Report the (possibly unchanged) worker count so the RM
+                // clears its in-flight resize entry, stamps the grow
+                // cooldown, and re-runs the scheduler.  Skipped while a
+                // resize is still deferred locally — the wave it starts
+                // will acknowledge with the final count instead.
+                if job.is_elastic() && pending_resize.is_none() {
+                    rm.note_resized(am.app, am.state.expected_workers());
+                }
             } else if now.saturating_sub(phase_started) > recovery_budget_ms {
                 return Ok(AttemptOutcome::TaskFailed(
                     "surgical recovery timed out (survivors never acked the patched spec)"
@@ -537,6 +646,14 @@ fn run_attempt(
         }
         if recovering {
             armed.extend(wheel.arm_at(phase_started.saturating_add(recovery_budget_ms + 1), tag::TICK));
+        }
+        if pending_resize.is_some() {
+            // A deferred resize must get another pass shortly after the
+            // blocking condition clears; don't rely on the fallback tick.
+            armed.extend(wheel.arm_at(
+                now.saturating_add((hb_interval.as_millis() as u64).max(1)),
+                tag::TICK,
+            ));
         }
         if am.state.metrics_registry().enabled() {
             let d = last_gauge_sample.unwrap_or(now).saturating_add(gauge_interval);

@@ -106,6 +106,10 @@ struct Inner {
     /// Cluster-spec fetches served at the current version; when every
     /// expected task has fetched, the spec-sync stage is over.
     spec_fetches: usize,
+    /// Elastic grow waves performed over the job's lifetime.
+    grows: u32,
+    /// Elastic shrink waves performed over the job's lifetime.
+    shrinks: u32,
 }
 
 /// The outcome of one attempt, as decided by the AM monitor loop.
@@ -179,6 +183,8 @@ impl AmState {
                 released_grants: 0,
                 preempted: 0,
                 spec_fetches: 0,
+                grows: 0,
+                shrinks: 0,
             }),
             bus,
             clock,
@@ -321,6 +327,116 @@ impl AmState {
         }
         self.bus.notify(tag::STATE);
         version
+    }
+
+    /// Current worker count: how many `worker` tasks the job expects.
+    pub fn expected_workers(&self) -> u32 {
+        let inner = self.inner.lock().unwrap();
+        inner.expected.iter().filter(|t| t.job_type == crate::tonyconf::WORKER).count() as u32
+    }
+
+    /// Start an elastic *grow* wave: splice `new_tasks` into the
+    /// expected set with fresh records at a bumped spec version.  This
+    /// reuses the surgical-recovery machinery end to end — the spec is
+    /// invalidated, the phase moves to `Recovering`, and the wave is
+    /// over when the recruits register and every survivor acks the new
+    /// version (`recovery_complete`).  Returns the version the recruits
+    /// must launch at.
+    pub fn begin_grow(&self, new_tasks: &[TaskId]) -> u32 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.version += 1;
+        inner.spec = None;
+        inner.spec_fetches = 0;
+        inner.phase = JobPhase::Recovering;
+        inner.grows += 1;
+        let version = inner.version;
+        let now = self.clock.now_ms();
+        for t in new_tasks {
+            inner.expected.push(t.clone());
+            let mut rec = TaskRecord::new(t.clone(), version);
+            // Launch grace starts now, same as a recovery relaunch.
+            rec.last_heartbeat = Some(now);
+            inner.tasks.insert(t.clone(), rec);
+        }
+        drop(inner);
+        if let Some(t) = self.trace() {
+            let list =
+                new_tasks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
+            t.event(
+                Stage::Running,
+                "resize",
+                t.stage_span(Stage::Running),
+                &[
+                    ("mode", "grow".to_string()),
+                    ("new", list),
+                    ("version", version.to_string()),
+                ],
+            );
+        }
+        self.bus.notify(tag::STATE);
+        version
+    }
+
+    /// Start an elastic *shrink* wave: remove the `n` highest-index
+    /// workers from the expected set and the registry (never `worker:0`,
+    /// the chief), bump the spec version, and invalidate the spec.
+    /// Returns the new version plus the removed `(task, container)`
+    /// pairs so the AM can hand the containers back to the RM as
+    /// cooperative releases (`ExitStatus::Released` — no restart-budget
+    /// burn).  With the records gone, the removed tasks' completions are
+    /// ignored, their zombie heartbeats get `Abort`, and survivors
+    /// resync via `Reconfigure` once the contracted spec rebuilds.
+    pub fn begin_shrink(&self, n: u32) -> (u32, Vec<(TaskId, Option<ContainerId>)>) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut workers: Vec<TaskId> = inner
+            .expected
+            .iter()
+            .filter(|t| t.job_type == crate::tonyconf::WORKER)
+            .cloned()
+            .collect();
+        workers.sort_by_key(|t| t.index);
+        // Defensive floor: keep at least one worker no matter what the
+        // caller asked for (workers_min >= 1 enforces this upstream).
+        let n = (n as usize).min(workers.len().saturating_sub(1));
+        let doomed: Vec<TaskId> = workers.split_off(workers.len() - n);
+        inner.version += 1;
+        inner.spec = None;
+        inner.spec_fetches = 0;
+        inner.phase = JobPhase::Recovering;
+        inner.shrinks += 1;
+        let version = inner.version;
+        let mut removed = Vec::with_capacity(doomed.len());
+        for t in &doomed {
+            inner.expected.retain(|e| e != t);
+            let container = inner.tasks.remove(t).and_then(|r| r.container);
+            removed.push((t.clone(), container));
+        }
+        drop(inner);
+        if let Some(t) = self.trace() {
+            let list = doomed.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
+            t.event(
+                Stage::Running,
+                "resize",
+                t.stage_span(Stage::Running),
+                &[
+                    ("mode", "shrink".to_string()),
+                    ("released", list),
+                    ("version", version.to_string()),
+                ],
+            );
+        }
+        self.bus.notify(tag::STATE);
+        (version, removed)
+    }
+
+    /// Elastic grow waves performed so far (job lifetime).
+    pub fn grows(&self) -> u32 {
+        self.inner.lock().unwrap().grows
+    }
+
+    /// Elastic shrink waves performed so far (job lifetime).
+    pub fn shrinks(&self) -> u32 {
+        self.inner.lock().unwrap().shrinks
     }
 
     pub fn set_phase(&self, phase: JobPhase) {
@@ -726,6 +842,16 @@ impl AmState {
         j.set("recoveries", inner.recoveries as u64);
         j.set("released_grants", inner.released_grants);
         j.set("preempted", inner.preempted);
+        j.set("grows", inner.grows as u64);
+        j.set("shrinks", inner.shrinks as u64);
+        j.set(
+            "workers",
+            inner
+                .expected
+                .iter()
+                .filter(|t| t.job_type == crate::tonyconf::WORKER)
+                .count() as u64,
+        );
         j.set("uptime_ms", self.clock.now_ms().saturating_sub(inner.started_at_ms));
         j.set("tasks", Json::Arr(tasks));
         j.set(

@@ -312,7 +312,24 @@ fn executor_body(ctx: &ContainerCtx, params: &ExecutorParams) -> Result<i32> {
                                                         );
                                                         cur_version
                                                             .store(v as u32, Ordering::Relaxed);
+                                                        let shrunk = spec
+                                                            .endpoints(&task.job_type)
+                                                            .len()
+                                                            <= task.index as usize;
                                                         *reconfig.lock().unwrap() = Some(spec);
+                                                        if shrunk {
+                                                            // An elastic shrink removed this
+                                                            // task from the spec.  The RM's
+                                                            // `Released` kill is normally
+                                                            // already in flight; stop cleanly
+                                                            // even if that message raced us.
+                                                            tinfo!(
+                                                                "executor",
+                                                                "{app} {task} not in spec v{v}; stopping"
+                                                            );
+                                                            kill.store(true, Ordering::Relaxed);
+                                                            monitor_bus.notify(tag::KILL);
+                                                        }
                                                     }
                                                     Err(e) => tdebug!(
                                                         "executor",

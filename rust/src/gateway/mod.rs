@@ -846,6 +846,11 @@ impl Gateway {
         j.set("mem_mb", job.resources.memory_mb);
         j.set("vcores", job.resources.vcores as u64);
         j.set("gpus", job.resources.gpus as u64);
+        // Elastic bounds (docs/SCHEDULING.md "Elasticity"); min == max
+        // for rigid jobs.  The live worker count rides in job_json.
+        let instances = job.conf.get_u32("tony.worker.instances", 0);
+        j.set("workers_min", job.conf.get_u32("tony.task.workers.min", instances) as u64);
+        j.set("workers_max", job.conf.get_u32("tony.task.workers.max", instances) as u64);
         j
     }
 
@@ -880,6 +885,9 @@ impl Gateway {
         }
         if let Some(state) = live {
             j.set("phase", format!("{:?}", state.phase()));
+            // The worker count the AM currently converges on — moves
+            // between workers_min and workers_max as resize waves land.
+            j.set("workers_current", state.expected_workers() as u64);
             // Streaming Dr. Elephant verdicts for the running job —
             // stragglers are visible in gateway job status mid-run.
             let findings = crate::drelephant::analyze_live(&state);

@@ -504,7 +504,7 @@ pub fn render_stage_histograms(
 /// endpoints agree on metric names.
 pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceManager) {
     type QueueGet = fn(&crate::yarn::QueueStat) -> f64;
-    let families: [(&str, &str, QueueGet); 8] = [
+    let families: [(&str, &str, QueueGet); 10] = [
         (
             "tony_queue_utilization",
             "Dominant-share utilization of each queue (used / cluster total).",
@@ -537,6 +537,16 @@ pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceMan
             q.used.vcores as f64
         }),
         ("tony_queue_used_gpus", "GPUs in use per queue.", |q| q.used.gpus as f64),
+        (
+            "tony_queue_elastic_jobs",
+            "Jobs registered as elastic (resizable worker set) per queue.",
+            |q| q.elastic_jobs as f64,
+        ),
+        (
+            "tony_queue_elastic_workers",
+            "Acknowledged worker count across each queue's elastic jobs.",
+            |q| q.elastic_workers as f64,
+        ),
     ];
     let stats = rm.queue_stats();
     for (name, help, get) in families {
@@ -555,6 +565,30 @@ pub fn render_cluster_metrics(prom: &mut PromText, rm: &crate::yarn::ResourceMan
             "tony_queue_preemptions_total",
             &[("queue", &*q.name)],
             q.preemptions as f64,
+        );
+    }
+    prom.header(
+        "tony_queue_elastic_grows_total",
+        "counter",
+        "Workers granted to elastic jobs by grow commands, per queue.",
+    );
+    for q in &stats {
+        prom.sample(
+            "tony_queue_elastic_grows_total",
+            &[("queue", &*q.name)],
+            q.elastic_grows as f64,
+        );
+    }
+    prom.header(
+        "tony_queue_elastic_shrinks_total",
+        "counter",
+        "Workers cooperatively released by elastic shrink commands, per queue.",
+    );
+    for q in &stats {
+        prom.sample(
+            "tony_queue_elastic_shrinks_total",
+            &[("queue", &*q.name)],
+            q.elastic_shrinks as f64,
         );
     }
     let sched = rm.scheduler_stats();

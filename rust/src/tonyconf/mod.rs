@@ -49,6 +49,12 @@ pub struct JobSpec {
     pub queue: String,
     pub am_resource: Resource,
     pub task_types: Vec<TaskTypeSpec>,
+    /// Elastic worker-count bounds (`tony.task.workers.{min,max}`).
+    /// Both default to the configured worker instance count, which keeps
+    /// the job rigid; `min < max` lets the RM grow/shrink the worker set
+    /// mid-run (docs/SCHEDULING.md "Elasticity").
+    pub workers_min: u32,
+    pub workers_max: u32,
     /// Whole-job restart budget on task failure (paper §2.2 relaunch).
     pub max_attempts: u32,
     pub heartbeat_ms: u64,
@@ -164,11 +170,29 @@ impl JobSpec {
         if train.mode != "sync" && train.mode != "async" {
             bail!("tony.train.mode must be 'sync' or 'async', got '{}'", train.mode);
         }
+        let instances = task_types
+            .iter()
+            .find(|t| t.name == WORKER)
+            .map(|t| t.instances)
+            .unwrap_or(0);
+        let workers_min = conf.get_u32("tony.task.workers.min", instances);
+        let workers_max = conf.get_u32("tony.task.workers.max", instances);
+        if workers_min < 1 {
+            bail!("tony.task.workers.min must be >= 1, got {workers_min}");
+        }
+        if workers_min > instances || instances > workers_max {
+            bail!(
+                "worker instances ({instances}) must sit inside \
+                 tony.task.workers.[min={workers_min}, max={workers_max}]"
+            );
+        }
         Ok(JobSpec {
             name,
             queue,
             am_resource,
             task_types,
+            workers_min,
+            workers_max,
             max_attempts: conf.get_u32("tony.application.max-attempts", 3),
             heartbeat_ms: conf.get_u64("tony.task.heartbeat-ms", 50),
             max_missed_heartbeats: conf.get_u32("tony.task.max-missed-heartbeats", 20),
@@ -193,6 +217,11 @@ impl JobSpec {
 
     pub fn n_workers(&self) -> u32 {
         self.task_type(WORKER).map(|t| t.instances).unwrap_or(0)
+    }
+
+    /// True when the worker set may be resized mid-run (min < max).
+    pub fn is_elastic(&self) -> bool {
+        self.workers_min < self.workers_max
     }
 
     pub fn n_ps(&self) -> u32 {
@@ -248,6 +277,13 @@ impl JobConfBuilder {
 
     pub fn node_label(mut self, ty: &str, label: &str) -> Self {
         self.conf.set(&format!("tony.{ty}.node-label"), label);
+        self
+    }
+
+    /// Declare the elastic worker-count bounds (`tony.task.workers.*`).
+    pub fn elastic_workers(mut self, min: u32, max: u32) -> Self {
+        self.conf.set("tony.task.workers.min", min.to_string());
+        self.conf.set("tony.task.workers.max", max.to_string());
         self
     }
 
@@ -379,6 +415,42 @@ mod tests {
         assert!(!spec.trace.enable);
         assert_eq!(spec.trace.max_spans_per_job, 32);
         assert!(!spec.trace.export);
+    }
+
+    #[test]
+    fn elastic_bounds_default_rigid() {
+        let spec = JobSpec::from_conf(&sample()).unwrap();
+        assert_eq!(spec.workers_min, 4);
+        assert_eq!(spec.workers_max, 4);
+        assert!(!spec.is_elastic(), "min == max keeps the job rigid");
+    }
+
+    #[test]
+    fn elastic_bounds_parse_and_validate() {
+        let c = JobConfBuilder::new("e")
+            .instances(WORKER, 2)
+            .elastic_workers(1, 6)
+            .build();
+        let spec = JobSpec::from_conf(&c).unwrap();
+        assert_eq!((spec.workers_min, spec.workers_max), (1, 6));
+        assert!(spec.is_elastic());
+
+        // min must be >= 1 and instances must sit inside [min, max].
+        let zero_min = JobConfBuilder::new("e")
+            .instances(WORKER, 2)
+            .elastic_workers(0, 4)
+            .build();
+        assert!(JobSpec::from_conf(&zero_min).is_err());
+        let outside = JobConfBuilder::new("e")
+            .instances(WORKER, 8)
+            .elastic_workers(1, 4)
+            .build();
+        assert!(JobSpec::from_conf(&outside).is_err());
+        let inverted = JobConfBuilder::new("e")
+            .instances(WORKER, 2)
+            .elastic_workers(3, 2)
+            .build();
+        assert!(JobSpec::from_conf(&inverted).is_err());
     }
 
     #[test]

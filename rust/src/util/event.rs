@@ -57,10 +57,13 @@ pub mod tag {
     /// The RM issued a preemption notice for one of the waiter's
     /// containers (a `Preempted` exit follows after the grace period).
     pub const PREEMPT: u32 = 1 << 10;
+    /// The RM queued an elastic resize target for the waiter's
+    /// application (delivered on its next allocate round).
+    pub const RESIZE: u32 = 1 << 11;
 
     /// Human-readable rendering of a tag mask (diagnostics/log lines).
     pub fn names(mask: u32) -> String {
-        const ALL: [(u32, &str); 11] = [
+        const ALL: [(u32, &str); 12] = [
             (TICK, "tick"),
             (GRANT, "grant"),
             (COMPLETED, "completed"),
@@ -72,6 +75,7 @@ pub mod tag {
             (KILL, "kill"),
             (SHUTDOWN, "shutdown"),
             (PREEMPT, "preempt"),
+            (RESIZE, "resize"),
         ];
         let parts: Vec<&str> =
             ALL.iter().filter(|(bit, _)| mask & bit != 0).map(|(_, n)| *n).collect();

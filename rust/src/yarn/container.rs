@@ -106,6 +106,11 @@ pub enum ExitStatus {
     /// capacity (gang preemption).  The owning AM treats this like node
     /// loss: surgical recovery re-requests just the preempted tasks.
     Preempted,
+    /// Cooperatively handed back by its AM during an elastic shrink wave
+    /// (docs/SCHEDULING.md "Elasticity").  Never a task fault: the AM
+    /// already removed the task from its expected set, so the exit burns
+    /// no restart budget and survivors just resync via Reconfigure.
+    Released,
 }
 
 impl ExitStatus {

@@ -36,6 +36,6 @@ pub use rm::{
     SubmissionContext,
 };
 pub use scheduler::{
-    AskIntake, CapacityScheduler, QueueConf, QueueSnapshot, SchedStats, SchedulerConf,
-    VictimCandidate,
+    AskIntake, CapacityScheduler, ElasticProfile, QueueConf, QueueSnapshot, SchedStats,
+    SchedulerConf, VictimCandidate,
 };

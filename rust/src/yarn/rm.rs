@@ -17,7 +17,7 @@
 //! fails, the TonY AM will automatically tear down the remaining tasks,
 //! request new task containers ... and relaunch the tasks").
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
 
@@ -81,6 +81,14 @@ pub struct QueueStat {
     pub reservations: usize,
     /// Victim containers preempted *from* this queue since startup.
     pub preemptions: u64,
+    /// Elastic jobs currently registered in this queue.
+    pub elastic_jobs: usize,
+    /// Sum of those jobs' acknowledged worker counts.
+    pub elastic_workers: u64,
+    /// Workers granted to this queue's elastic jobs by grow commands.
+    pub elastic_grows: u64,
+    /// Workers cooperatively released from this queue by shrink waves.
+    pub elastic_shrinks: u64,
 }
 
 /// Where an application stands with the gang scheduler — surfaced by the
@@ -120,6 +128,11 @@ pub struct AllocateResponse {
     /// `Preempted` once the grace period elapses (mirrors YARN's
     /// preemption message in the allocate response).
     pub preempt_notices: Vec<ContainerId>,
+    /// Elastic resize command: the worker count this app should converge
+    /// to (the AM answers with a grow delta wave or a cooperative
+    /// release of its highest-index workers; see docs/SCHEDULING.md
+    /// "Elasticity").  At most one resize per app is in flight at a time.
+    pub resize_target: Option<u32>,
 }
 
 struct LiveContainer {
@@ -160,6 +173,8 @@ struct App {
     completed_ready: Vec<ContainerStatus>,
     /// Preemption notices awaiting the app's next allocate call.
     preempt_ready: Vec<ContainerId>,
+    /// Resize target awaiting the app's next allocate call.
+    resize_ready: Option<u32>,
 }
 
 struct Inner {
@@ -184,6 +199,18 @@ struct Inner {
     /// Containers under a preemption notice, keyed by the grace deadline
     /// they will be killed at.
     preempting: HashMap<ContainerId, PreemptState>,
+    /// Containers an AM is cooperatively handing back mid-shrink: their
+    /// NM `Killed` exits are rewritten to `Released` (mirroring the
+    /// `preempting` -> `Preempted` rewrite) so they never read as faults.
+    released: HashSet<ContainerId>,
+    /// Resize commands in flight, app -> target worker count.  Cleared by
+    /// [`ResourceManager::note_resized`] when the AM's wave completes;
+    /// while non-empty the elasticity pass stands down, and while a
+    /// *shrink* is in flight preemption planning stands down too (the
+    /// freed capacity is already on its way).
+    resizing: HashMap<ApplicationId, u32>,
+    /// Per-app quiet-period end (clock ms): no new grow before this.
+    elastic_cooldown_until: HashMap<ApplicationId, u64>,
     next_app_seq: u64,
     next_container_seq: u64,
     next_tag: u64,
@@ -309,6 +336,9 @@ impl ResourceManager {
                     am_wakers: HashMap::new(),
                     traces: HashMap::new(),
                     preempting: HashMap::new(),
+                    released: HashSet::new(),
+                    resizing: HashMap::new(),
+                    elastic_cooldown_until: HashMap::new(),
                     next_app_seq: 1,
                     next_container_seq: 1,
                     next_tag: 1,
@@ -418,6 +448,7 @@ impl ResourceManager {
                 allocated_ready: Vec::new(),
                 completed_ready: Vec::new(),
                 preempt_ready: Vec::new(),
+                resize_ready: None,
             },
         );
         let tag = inner.next_tag;
@@ -529,7 +560,174 @@ impl ResourceManager {
             allocated: std::mem::take(&mut app.allocated_ready),
             completed: std::mem::take(&mut app.completed_ready),
             preempt_notices: std::mem::take(&mut app.preempt_ready),
+            resize_target: app.resize_ready.take(),
         })
+    }
+
+    // ---------------- elasticity ----------------
+
+    /// Register `id` as elastic: its worker count may move within
+    /// `[min, max]` under the elasticity pass (the AM calls this right
+    /// after `register_am`; see docs/SCHEDULING.md "Elasticity").
+    /// Re-registration after an AM attempt restart resets any stale
+    /// in-flight resize left by the previous attempt.
+    pub fn register_elastic(
+        &self,
+        id: ApplicationId,
+        resource: Resource,
+        node_label: Option<String>,
+        min: u32,
+        max: u32,
+        current: u32,
+    ) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let queue = match inner.apps.get(&id) {
+            Some(app) => app.queue.clone(),
+            None => bail!("unknown app {id}"),
+        };
+        inner.resizing.remove(&id);
+        inner.elastic_cooldown_until.remove(&id);
+        if let Some(app) = inner.apps.get_mut(&id) {
+            app.resize_ready = None;
+        }
+        inner
+            .scheduler
+            .register_elastic(id, &queue, resource, node_label, min, max, current);
+        tinfo!("rm", "{id} registered elastic: workers in [{min}, {max}], current {current}");
+        Ok(())
+    }
+
+    /// The AM's resize wave completed (or a plain recovery settled): the
+    /// app now runs `current` workers.  Clears the in-flight resize,
+    /// records the acknowledged count, and stamps the grow cooldown.
+    pub fn note_resized(&self, id: ApplicationId, current: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        let was_resizing = inner.resizing.remove(&id).is_some();
+        if inner.scheduler.elastic_profile(id).is_none() {
+            return;
+        }
+        inner.scheduler.set_elastic_current(id, current);
+        let until = self.clock.now_ms() + self.sched.elastic_cooldown_ms;
+        inner.elastic_cooldown_until.insert(id, until);
+        if was_resizing {
+            tinfo!("rm", "{id} resize settled at {current} worker(s)");
+            // The wave may have freed capacity a waiting gang needs.
+            self.schedule_locked(&mut inner);
+        }
+    }
+
+    /// Cooperative shrink release: the AM hands back `cids` mid-wave.
+    /// Their NM exits are rewritten to [`ExitStatus::Released`] so they
+    /// never read as task faults (mirrors the preemption rewrite).
+    pub fn release_workers(&self, id: ApplicationId, cids: &[ContainerId]) {
+        let mut to_stop: Vec<(Arc<NodeHandle>, ContainerId)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            for &cid in cids {
+                match inner.containers.get(&cid) {
+                    Some(live) if live.app == id => {
+                        if live.started {
+                            let node =
+                                inner.nodes.iter().find(|n| n.spec.id == live.node).cloned();
+                            inner.released.insert(cid);
+                            if let Some(node) = node {
+                                to_stop.push((node, cid));
+                            }
+                        } else {
+                            // Never launched: plain release, no exit to
+                            // rewrite.
+                            self.release_container_locked(&mut inner, cid);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Kill outside the lock: the NM completion callback re-enters
+        // `on_container_complete`, which takes `inner`.
+        for (node, cid) in to_stop {
+            tdebug!("rm", "releasing {cid} for {id} (elastic shrink)");
+            node.stop_container(cid);
+        }
+    }
+
+    /// True while a *shrink* command is in flight (its capacity is
+    /// already on its way back, so preemption planning stands down).
+    fn shrink_in_flight(&self, inner: &Inner) -> bool {
+        inner.resizing.iter().any(|(app, &target)| {
+            inner.scheduler.elastic_profile(*app).map_or(false, |p| target < p.current)
+        })
+    }
+
+    /// Queue a resize command for `id`'s next allocate round.
+    fn queue_resize_locked(&self, inner: &mut Inner, id: ApplicationId, target: u32) {
+        if let Some(app) = inner.apps.get_mut(&id) {
+            app.resize_ready = Some(target);
+            inner.resizing.insert(id, target);
+            tinfo!("rm", "{id} resize -> {target} worker(s) queued");
+            if let Some(bus) = inner.am_wakers.get(&id) {
+                bus.notify(tag::RESIZE);
+            }
+        }
+    }
+
+    /// The elasticity pass, run after every placement pass: plan at most
+    /// one shrink round (demand-driven, preferred over preemption) or
+    /// one grow command (idle capacity only, cooldown-gated).  Stands
+    /// down entirely while any resize or preemption is settling.
+    fn elastic_locked(&self, inner: &mut Inner) {
+        if !self.sched.elastic {
+            return;
+        }
+        if !inner.resizing.is_empty() || !inner.preempting.is_empty() {
+            return;
+        }
+        // Shrink first: a blocked gang in an under-guarantee queue takes
+        // cooperative releases over preemption-kills every time.
+        let am_containers: HashSet<ContainerId> = inner
+            .apps
+            .values()
+            .filter_map(|a| a.am_container)
+            .collect();
+        let candidates: Vec<VictimCandidate> = inner
+            .containers
+            .iter()
+            .filter(|(cid, c)| c.started && !am_containers.contains(cid))
+            .filter(|(_, c)| inner.scheduler.elastic_profile(c.app).is_some())
+            .map(|(cid, c)| VictimCandidate {
+                container: *cid,
+                app: c.app,
+                queue: c.queue.clone(),
+                node: c.node,
+                resource: c.resource,
+                gang: c.gang,
+                seq: c.seq,
+            })
+            .collect();
+        let targets = inner.scheduler.elastic_shrink_plan(
+            &candidates,
+            self.sched.preemption_max_victims,
+            self.sched.elastic_max_resize,
+        );
+        if !targets.is_empty() {
+            for (app, target) in targets {
+                self.queue_resize_locked(inner, app, target);
+            }
+            return;
+        }
+        // No shrink demand: grow the neediest eligible job into idle
+        // capacity (quiescence-gated inside the planner).
+        let now = self.clock.now_ms();
+        let plan = {
+            let Inner { scheduler, elastic_cooldown_until, .. } = &mut *inner;
+            let eligible = |app: ApplicationId| {
+                elastic_cooldown_until.get(&app).map_or(true, |&until| now >= until)
+            };
+            scheduler.elastic_grow_plan(self.sched.elastic_max_resize, &eligible)
+        };
+        if let Some((app, target)) = plan {
+            self.queue_resize_locked(inner, app, target);
+        }
     }
 
     /// Launch task code in a granted container (NM `startContainer`).
@@ -657,6 +855,10 @@ impl ResourceManager {
                 pending_gangs: s.pending_gangs,
                 reservations: s.reservations,
                 preemptions: s.preemptions,
+                elastic_jobs: s.elastic_jobs,
+                elastic_workers: s.elastic_workers,
+                elastic_grows: s.elastic_grows,
+                elastic_shrinks: s.elastic_shrinks,
                 name: s.name,
             })
             .collect()
@@ -688,6 +890,10 @@ impl ResourceManager {
             o.set("preemptions", q.preemptions);
             o.set("utilization", q.utilization);
             o.set("guaranteed", q.guaranteed);
+            o.set("elastic_jobs", q.elastic_jobs as u64);
+            o.set("elastic_workers", q.elastic_workers);
+            o.set("elastic_grows", q.elastic_grows);
+            o.set("elastic_shrinks", q.elastic_shrinks);
             queues.push(o);
         }
         let stats = self.scheduler_stats();
@@ -697,6 +903,9 @@ impl ResourceManager {
         s.set("reservations_made", stats.reservations_made);
         s.set("preemption_rounds", stats.preemption_rounds);
         s.set("preemptions", stats.preemptions);
+        s.set("elastic_grows", stats.elastic_grows);
+        s.set("elastic_shrink_rounds", stats.elastic_shrink_rounds);
+        s.set("elastic_released", stats.elastic_released);
         s.set("unknown_queue_asks", stats.unknown_queue_asks);
         s.set("unknown_queue_releases", stats.unknown_queue_releases);
         let mut j = Json::obj();
@@ -805,6 +1014,7 @@ impl ResourceManager {
                 }
             }
         }
+        self.elastic_locked(inner);
         self.preempt_locked(inner);
         self.drain_decisions_locked(inner);
     }
@@ -867,6 +1077,14 @@ impl ResourceManager {
         //    in-flight kills would not see their capacity as free yet and
         //    would select extra victims for the same shortfall.
         if !inner.preempting.is_empty() {
+            return;
+        }
+        //    Same settle logic for an in-flight elastic shrink: its
+        //    capacity is already on its way back cooperatively, so a
+        //    preemption round now would kill containers for a shortfall
+        //    the shrink is about to cover.  (In-flight *grows* don't
+        //    gate preemption — they free nothing.)
+        if self.shrink_in_flight(inner) {
             return;
         }
         //    AM containers are never victims (killing the AM kills the
@@ -1010,8 +1228,15 @@ impl ResourceManager {
         // A kill that lands while the container is under a preemption
         // notice is reported as `Preempted`, so the owning AM can treat
         // it as node-loss-style recovery rather than a task failure.
-        let status = if inner.preempting.remove(&cid).is_some() && status == ExitStatus::Killed {
+        // The same rewrite turns an elastic shrink release's kill into
+        // `Released` — a chaos kill of a survivor is in neither set and
+        // stays `Killed`/`NodeLost`, i.e. a real fault.
+        let was_preempting = inner.preempting.remove(&cid).is_some();
+        let was_released = inner.released.remove(&cid);
+        let status = if was_preempting && status == ExitStatus::Killed {
             ExitStatus::Preempted
+        } else if was_released && status == ExitStatus::Killed {
+            ExitStatus::Released
         } else {
             status
         };
@@ -1070,6 +1295,9 @@ impl ResourceManager {
         app.preempt_ready.clear();
         tinfo!("rm", "{id} -> {state:?} ({diagnostics})");
         inner.scheduler.remove_app(id);
+        inner.resizing.remove(&id);
+        inner.elastic_cooldown_until.remove(&id);
+        inner.released.retain(|cid| cid.app != id);
         // Cancel preemption notices for this app's containers — they are
         // about to die as plain teardown kills, not preemptions.
         let doomed: Vec<ContainerId> = inner

@@ -151,6 +151,16 @@ pub struct SchedulerConf {
     /// Use the per-label free-capacity indexes for candidate selection
     /// (`false` = retained linear reference scan, same semantics).
     pub placement_index: bool,
+    /// Enable the elasticity pass: grow registered elastic jobs into
+    /// idle capacity and plan cooperative shrink waves ahead of
+    /// preemption.  Safe to leave on — rigid jobs never register an
+    /// elastic profile, so the pass is a no-op without one.
+    pub elastic: bool,
+    /// Quiet period after a resize completes before the same job may be
+    /// grown again (shrink is demand-driven and ignores the cooldown).
+    pub elastic_cooldown_ms: u64,
+    /// Largest worker delta one resize command may carry.
+    pub elastic_max_resize: u32,
 }
 
 impl Default for SchedulerConf {
@@ -162,6 +172,9 @@ impl Default for SchedulerConf {
             preemption_grace_ms: 2_000,
             preemption_max_victims: 8,
             placement_index: true,
+            elastic: true,
+            elastic_cooldown_ms: 5_000,
+            elastic_max_resize: 4,
         }
     }
 }
@@ -184,6 +197,10 @@ impl SchedulerConf {
                 d.preemption_max_victims as u64,
             ) as usize,
             placement_index: conf.get_bool("tony.scheduler.placement-index", d.placement_index),
+            elastic: conf.get_bool("tony.elastic.enable", d.elastic),
+            elastic_cooldown_ms: conf.get_u64("tony.elastic.cooldown-ms", d.elastic_cooldown_ms),
+            elastic_max_resize: conf
+                .get_u32("tony.elastic.max-resize-per-round", d.elastic_max_resize),
         }
     }
 }
@@ -262,6 +279,12 @@ pub struct SchedStats {
     pub preemption_rounds: u64,
     /// Victim containers selected across all rounds.
     pub preemptions: u64,
+    /// Workers granted to elastic jobs by grow commands.
+    pub elastic_grows: u64,
+    /// Shrink rounds that produced a resize plan.
+    pub elastic_shrink_rounds: u64,
+    /// Workers cooperatively released across all shrink rounds.
+    pub elastic_released: u64,
 }
 
 /// Per-queue observability snapshot (feeds `ResourceManager::queue_stats`
@@ -281,6 +304,14 @@ pub struct QueueSnapshot {
     pub reservations: usize,
     /// Victim containers taken *from* this queue since startup.
     pub preemptions: u64,
+    /// Elastic jobs currently registered in this queue.
+    pub elastic_jobs: usize,
+    /// Sum of those jobs' current worker counts.
+    pub elastic_workers: u64,
+    /// Workers granted to this queue's elastic jobs by grow commands.
+    pub elastic_grows: u64,
+    /// Workers cooperatively released from this queue by shrink waves.
+    pub elastic_shrinks: u64,
 }
 
 /// Why the scheduler reached a verdict on a gang (decision audit trail —
@@ -301,6 +332,11 @@ pub enum DecisionReason {
     Demoted,
     /// A preemption round selected victims to unblock this gang.
     PreemptionPlanned,
+    /// The elasticity pass grew an elastic job into idle capacity.
+    ElasticGrow,
+    /// A shrink round planned cooperative releases (either for the
+    /// blocked gang the round unblocks or the elastic job contracting).
+    ElasticShrink,
 }
 
 impl DecisionReason {
@@ -312,6 +348,8 @@ impl DecisionReason {
             DecisionReason::Reserved => "RESERVED",
             DecisionReason::Demoted => "DEMOTED",
             DecisionReason::PreemptionPlanned => "PREEMPTION_PLANNED",
+            DecisionReason::ElasticGrow => "ELASTIC_GROW",
+            DecisionReason::ElasticShrink => "ELASTIC_SHRINK",
         }
     }
 }
@@ -346,6 +384,23 @@ pub struct VictimCandidate {
     pub seq: u64,
 }
 
+/// One elastic job's registration with the elasticity pass: the shape of
+/// a single worker plus the `[min, max]` band its worker count may move
+/// in.  `current` tracks the *acknowledged* worker count — the RM bumps
+/// it only after the AM's resize wave completes, so at most one resize
+/// per job is ever in flight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticProfile {
+    pub queue: Arc<str>,
+    /// Resource shape of one worker (grow asks are multiples of this).
+    pub resource: Resource,
+    pub node_label: Option<String>,
+    pub min: u32,
+    pub max: u32,
+    /// Acknowledged worker count, always within `[min, max]`.
+    pub current: u32,
+}
+
 #[derive(Debug)]
 struct Queue {
     conf: QueueConf,
@@ -361,6 +416,10 @@ struct Queue {
     rel_usage: f64,
     /// Victims preempted from this queue since startup.
     preemptions: u64,
+    /// Workers granted to this queue's elastic jobs by grow commands.
+    elastic_grows: u64,
+    /// Workers cooperatively released from this queue by shrink waves.
+    elastic_shrinks: u64,
     /// FIFO of pending asks (stable order; higher priority first is
     /// achieved by scanning priorities descending).
     pending: VecDeque<Ask>,
@@ -419,6 +478,9 @@ pub struct CapacityScheduler {
     /// app → number of its gang asks still pending anywhere (O(1)
     /// `has_pending_gang`).
     app_gangs: HashMap<ApplicationId, u32>,
+    /// Elastic job registry (the elasticity pass plans grow/shrink over
+    /// these; BTreeMap for deterministic largest-deficit tie-breaking).
+    elastic: BTreeMap<ApplicationId, ElasticProfile>,
     /// `true` = bypass the indexes and scan nodes linearly (the
     /// reference implementation the property suite compares against;
     /// `tony.scheduler.placement-index=false`).
@@ -458,6 +520,8 @@ impl CapacityScheduler {
                     dom_share: 0.0,
                     rel_usage: 0.0,
                     preemptions: 0,
+                    elastic_grows: 0,
+                    elastic_shrinks: 0,
                     pending: VecDeque::new(),
                     gang_asks: BTreeMap::new(),
                     reserved: 0,
@@ -475,6 +539,7 @@ impl CapacityScheduler {
             stats: SchedStats::default(),
             decisions: Vec::new(),
             app_gangs: HashMap::new(),
+            elastic: BTreeMap::new(),
             linear_reference: false,
             nodes: Vec::new(),
             node_ix: HashMap::new(),
@@ -726,9 +791,18 @@ impl CapacityScheduler {
     /// One observability snapshot per queue — served entirely from the
     /// per-queue counters (no reservation-list or pending scans).
     pub fn queue_snapshots(&self) -> Vec<QueueSnapshot> {
+        let mut elastic_jobs = vec![0usize; self.queues.len()];
+        let mut elastic_workers = vec![0u64; self.queues.len()];
+        for p in self.elastic.values() {
+            if let Some(&qi) = self.qname_ix.get(&*p.queue) {
+                elastic_jobs[qi] += 1;
+                elastic_workers[qi] += p.current as u64;
+            }
+        }
         self.queues
             .iter()
-            .map(|q| QueueSnapshot {
+            .enumerate()
+            .map(|(qi, q)| QueueSnapshot {
                 name: q.name.clone(),
                 capacity: q.conf.capacity,
                 max_capacity: q.conf.max_capacity,
@@ -737,6 +811,10 @@ impl CapacityScheduler {
                 pending_gangs: q.gang_asks.len(),
                 reservations: q.reserved as usize,
                 preemptions: q.preemptions,
+                elastic_jobs: elastic_jobs[qi],
+                elastic_workers: elastic_workers[qi],
+                elastic_grows: q.elastic_grows,
+                elastic_shrinks: q.elastic_shrinks,
             })
             .collect()
     }
@@ -852,6 +930,7 @@ impl CapacityScheduler {
             }
             self.queues[qi].pending = kept;
         }
+        self.elastic.remove(&app);
         self.gc_reservations();
     }
 
@@ -1546,6 +1625,332 @@ impl CapacityScheduler {
         Vec::new()
     }
 
+    /// Register (or re-register, after an AM attempt restart) an elastic
+    /// job with the elasticity pass.  An unknown queue falls back to the
+    /// first configured queue, mirroring [`CapacityScheduler::add_asks_gang`].
+    /// Bounds are sanitized (`min >= 1`, `max >= min`, `current` clamped)
+    /// so the registry invariants hold no matter what the caller sends.
+    pub fn register_elastic(
+        &mut self,
+        app: ApplicationId,
+        queue: &str,
+        resource: Resource,
+        node_label: Option<String>,
+        min: u32,
+        max: u32,
+        current: u32,
+    ) {
+        let qi = match self.qname_ix.get(queue) {
+            Some(&qi) => qi,
+            None => {
+                twarn!(
+                    "sched",
+                    "elastic job {app} names unknown queue '{queue}'; remapped to '{}'",
+                    self.queues[0].name
+                );
+                0
+            }
+        };
+        let min = min.max(1);
+        let max = max.max(min);
+        let current = current.clamp(min, max);
+        self.elastic.insert(
+            app,
+            ElasticProfile { queue: self.queues[qi].name.clone(), resource, node_label, min, max, current },
+        );
+    }
+
+    /// Drop an elastic job from the registry (app teardown).
+    pub fn deregister_elastic(&mut self, app: ApplicationId) {
+        self.elastic.remove(&app);
+    }
+
+    /// Record the acknowledged worker count after a resize wave
+    /// completes (clamped into the job's `[min, max]` band).
+    pub fn set_elastic_current(&mut self, app: ApplicationId, current: u32) {
+        if let Some(p) = self.elastic.get_mut(&app) {
+            p.current = current.clamp(p.min, p.max);
+        }
+    }
+
+    pub fn elastic_profile(&self, app: ApplicationId) -> Option<&ElasticProfile> {
+        self.elastic.get(&app)
+    }
+
+    /// Plan one elastic *grow*: pick the registered elastic job with the
+    /// largest deficit (`max - current`, app id breaking ties) whose
+    /// queue has ceiling headroom for a `+k` worker delta that places on
+    /// current free capacity, and return its new target worker count.
+    ///
+    /// Growth only happens into genuinely idle capacity: the pass is
+    /// gated on a quiescent scheduler (no pending asks and no held
+    /// reservations anywhere), so a grow can never race a blocked gang
+    /// or starve another queue's demand.  `k` is probed largest-first
+    /// (capped by `max_delta`), and feasibility runs through the same
+    /// [`CapacityScheduler::place_asks`] dry-run machinery as real
+    /// placements — byte-identical on the indexed and linear paths.
+    /// `eligible` lets the caller veto jobs (resize cooldown).
+    pub fn elastic_grow_plan(
+        &mut self,
+        max_delta: u32,
+        eligible: &dyn Fn(ApplicationId) -> bool,
+    ) -> Option<(ApplicationId, u32)> {
+        if max_delta == 0 || self.elastic.is_empty() {
+            return None;
+        }
+        if self.queues.iter().any(|q| !q.pending.is_empty()) || !self.reservations.is_empty() {
+            return None; // demand or claims outstanding — not idle capacity
+        }
+        let mut order: Vec<(ApplicationId, u32)> = self
+            .elastic
+            .iter()
+            .filter(|(app, p)| p.current < p.max && eligible(**app))
+            .map(|(app, p)| (*app, p.max - p.current))
+            .collect();
+        order.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (app, deficit) in order {
+            let p = self.elastic[&app].clone();
+            let Some(&qi) = self.qname_ix.get(&*p.queue) else { continue };
+            for k in (1..=deficit.min(max_delta)).rev() {
+                let mut delta = Resource::ZERO;
+                for _ in 0..k {
+                    delta += p.resource;
+                }
+                if !self.queue_headroom_ok(qi, &delta) {
+                    continue;
+                }
+                let asks: Vec<(Resource, Option<String>)> =
+                    (0..k).map(|_| (p.resource, p.node_label.clone())).collect();
+                if self.place_asks(PlaceBase::Free, &BTreeSet::new(), &asks).is_none() {
+                    continue;
+                }
+                self.stats.elastic_grows += k as u64;
+                self.queues[qi].elastic_grows += k as u64;
+                self.audit(
+                    app,
+                    None,
+                    qi,
+                    DecisionReason::ElasticGrow,
+                    format!("for +{k} worker(s) of idle capacity"),
+                );
+                tdebug!(
+                    "sched",
+                    "elastic grow: {app} {} -> {} worker(s) (queue '{}')",
+                    p.current,
+                    p.current + k,
+                    p.queue
+                );
+                return Some((app, p.current + k));
+            }
+        }
+        None
+    }
+
+    /// Plan one elastic *shrink* round: when an under-guarantee queue
+    /// has a gang that is placeable at capacity but blocked at current
+    /// free, select victims from over-allocated *elastic* jobs (newest
+    /// grants first, never below a job's `min`) until a simulated
+    /// placement of the gang succeeds — exactly the
+    /// [`CapacityScheduler::preemption_plan`] walk, but the "victims"
+    /// are cooperative releases the owning AM performs itself, so no
+    /// container is killed and no restart budget burns.  Returns the new
+    /// target worker count per shrinking job (empty when no round
+    /// qualifies); on success the demanding gang is force-reserved onto
+    /// the simulated nodes, mirroring preemption.  The RM runs this
+    /// *before* [`CapacityScheduler::preemption_plan`] each pass, which
+    /// is what makes shrink strictly preferred over preemption-kill.
+    pub fn elastic_shrink_plan(
+        &mut self,
+        candidates: &[VictimCandidate],
+        max_victims: usize,
+        max_per_app: u32,
+    ) -> Vec<(ApplicationId, u32)> {
+        if max_victims == 0 || max_per_app == 0 || candidates.is_empty() || self.elastic.is_empty()
+        {
+            return Vec::new();
+        }
+        let total = self.cluster_total;
+        // How many workers each elastic job may hand back this round:
+        // down to its floor, capped per resize command.
+        let full_budget: HashMap<ApplicationId, u32> = self
+            .elastic
+            .iter()
+            .filter(|(_, p)| p.current > p.min)
+            .map(|(app, p)| (*app, (p.current - p.min).min(max_per_app)))
+            .collect();
+        if full_budget.is_empty() {
+            return Vec::new();
+        }
+        let mut order: Vec<usize> = (0..self.queues.len())
+            .filter(|&i| !self.queues[i].pending.is_empty())
+            .filter(|&i| self.queues[i].dom_share + EPS < self.queues[i].conf.capacity)
+            .collect();
+        order.sort_by(|&a, &b| self.queues[a].rel_usage.total_cmp(&self.queues[b].rel_usage));
+        for qi in order {
+            for unit in self.units(qi) {
+                let Some(gang) = unit.gang else { continue };
+                let unit_app = self.queues[qi].pending[unit.first].app;
+                let asks = self.asks_of(qi, &unit);
+                let total_ask = asks.iter().fold(Resource::ZERO, |a, (r, _)| a + *r);
+                // Like preemption, shrink only restores a queue *up to*
+                // its guarantee.
+                if (self.queues[qi].used + total_ask).dominant_share(&total)
+                    > self.queues[qi].conf.capacity + EPS
+                {
+                    continue;
+                }
+                let blocked = self.reserved_by_others(Some(gang));
+                if self.place_asks(PlaceBase::Free, &blocked, &asks).is_some() {
+                    continue; // not blocked — the next schedule pass lands it
+                }
+                if self.place_asks(PlaceBase::Capacity, &blocked, &asks).is_none() {
+                    continue; // not placeable even at capacity
+                }
+                let free: Vec<Resource> = self.nodes.iter().map(|n| n.free).collect();
+                let allowed: Vec<bool> =
+                    self.nodes.iter().map(|n| !blocked.contains(&n.id)).collect();
+                let node_idx: HashMap<NodeId, usize> =
+                    self.nodes.iter().enumerate().map(|(i, n)| (n.id, i)).collect();
+                let labels: BTreeSet<Option<String>> =
+                    asks.iter().map(|(_, l)| l.clone()).collect();
+                let mut pool: Vec<&VictimCandidate> = candidates
+                    .iter()
+                    .filter(|c| full_budget.contains_key(&c.app))
+                    .filter(|c| self.queue_over_guarantee(&c.queue))
+                    .filter(|c| {
+                        node_idx
+                            .get(&c.node)
+                            .map(|&ni| labels.contains(&self.nodes[ni].label))
+                            .unwrap_or(false)
+                    })
+                    .collect();
+                // Newest grants first: in grant order those are the
+                // highest-index workers — the ones the AM's shrink wave
+                // releases.
+                pool.sort_by(|a, b| b.seq.cmp(&a.seq));
+                let free_after = |vs: &[VictimCandidate], skip: Option<usize>| -> Vec<Resource> {
+                    let mut f = free.clone();
+                    for (k, v) in vs.iter().enumerate() {
+                        if Some(k) != skip {
+                            f[node_idx[&v.node]] += v.resource;
+                        }
+                    }
+                    f
+                };
+                let mut budget = full_budget.clone();
+                let mut sim_used: BTreeMap<Arc<str>, Resource> = BTreeMap::new();
+                let mut victims: Vec<VictimCandidate> = Vec::new();
+                for c in pool {
+                    if victims.len() >= max_victims {
+                        break;
+                    }
+                    let Some(&vqi) = self.qname_ix.get(&*c.queue) else {
+                        continue;
+                    };
+                    let b = budget.get_mut(&c.app).expect("pool filtered to budgeted apps");
+                    if *b == 0 {
+                        continue; // this job is already at its floor
+                    }
+                    let cur =
+                        sim_used.get(&c.queue).copied().unwrap_or(self.queues[vqi].used);
+                    let after = cur - c.resource;
+                    // Never drive the shrinking queue below its own guarantee.
+                    if after.dominant_share(&total) + EPS < self.queues[vqi].conf.capacity {
+                        continue;
+                    }
+                    let Some(&ni) = node_idx.get(&c.node) else { continue };
+                    if !allowed[ni] {
+                        continue;
+                    }
+                    *b -= 1;
+                    sim_used.insert(c.queue.clone(), after);
+                    victims.push(c.clone());
+                    if place_with(&self.nodes, &free_after(&victims, None), &allowed, &asks)
+                        .is_none()
+                    {
+                        continue;
+                    }
+                    // The gang fits; prune releases the placement does
+                    // not actually need, exactly like preemption.
+                    let mut i = 0;
+                    while i < victims.len() {
+                        if place_with(
+                            &self.nodes,
+                            &free_after(&victims, Some(i)),
+                            &allowed,
+                            &asks,
+                        )
+                        .is_some()
+                        {
+                            victims.remove(i);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    let chosen =
+                        place_with(&self.nodes, &free_after(&victims, None), &allowed, &asks)
+                            .expect("placement held after pruning");
+                    // Hold the placement for the demanding gang so the
+                    // released capacity cannot be stolen before it lands.
+                    let set: BTreeSet<NodeId> =
+                        chosen.iter().map(|&ni| self.nodes[ni].id).collect();
+                    self.drop_reservation(gang);
+                    self.push_reservation(gang, qi, set.into_iter().collect());
+                    self.stats.elastic_shrink_rounds += 1;
+                    self.stats.elastic_released += victims.len() as u64;
+                    self.audit(
+                        unit_app,
+                        Some(gang),
+                        qi,
+                        DecisionReason::ElasticShrink,
+                        format!(
+                            "{} cooperative release(s) planned to open the gang's hole",
+                            victims.len()
+                        ),
+                    );
+                    let mut per_app: BTreeMap<ApplicationId, u32> = BTreeMap::new();
+                    for v in &victims {
+                        *per_app.entry(v.app).or_insert(0) += 1;
+                        if let Some(&vqi) = self.qname_ix.get(&*v.queue) {
+                            self.queues[vqi].elastic_shrinks += 1;
+                        }
+                    }
+                    let mut targets: Vec<(ApplicationId, u32)> = Vec::new();
+                    for (app, n) in per_app {
+                        let (target, pqueue) = {
+                            let p = &self.elastic[&app];
+                            (p.current.saturating_sub(n).max(p.min), p.queue.clone())
+                        };
+                        if let Some(&vqi) = self.qname_ix.get(&*pqueue) {
+                            let demand_q = self.queues[qi].name.clone();
+                            self.audit(
+                                app,
+                                None,
+                                vqi,
+                                DecisionReason::ElasticShrink,
+                                format!(
+                                    "shrinking {n} worker(s) toward queue '{demand_q}' guarantee"
+                                ),
+                            );
+                        }
+                        targets.push((app, target));
+                    }
+                    tdebug!(
+                        "sched",
+                        "elastic shrink: {} release(s) across {} job(s) unblock gang {gang} in queue '{}'",
+                        victims.len(),
+                        targets.len(),
+                        self.queues[qi].name
+                    );
+                    return targets;
+                }
+                // Budget exhausted without unblocking the gang: propose
+                // nothing (all-or-nothing rounds) and try the next unit.
+            }
+        }
+        Vec::new()
+    }
+
     /// Check every index/cache against a from-scratch recompute.  Test
     /// hook (the property suite calls this after every mutation); panics
     /// on the first inconsistency.  Cached shares must be *bit-identical*
@@ -1614,6 +2019,25 @@ impl CapacityScheduler {
             assert_eq!(q.reserved as usize, reserved, "queue '{}' reservation counter", q.name);
         }
         assert_eq!(self.app_gangs, app_gangs, "per-app gang-ask counters");
+        // Elastic registry: bounds sane, current inside the band, queue
+        // known (registration remaps unknown names, so drift here means
+        // a mutation bypassed register_elastic/set_elastic_current).
+        for (app, p) in &self.elastic {
+            assert!(p.min >= 1, "elastic {app}: min must be >= 1");
+            assert!(p.min <= p.max, "elastic {app}: min {} > max {}", p.min, p.max);
+            assert!(
+                (p.min..=p.max).contains(&p.current),
+                "elastic {app}: current {} outside [{}, {}]",
+                p.current,
+                p.min,
+                p.max
+            );
+            assert!(
+                self.qname_ix.contains_key(&*p.queue),
+                "elastic {app}: unknown queue '{}'",
+                p.queue
+            );
+        }
     }
 }
 

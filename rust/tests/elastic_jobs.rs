@@ -1,0 +1,453 @@
+//! Elastic-job integration tests (docs/SCHEDULING.md "Elasticity"):
+//! the RM grows an elastic job into idle capacity, then plans a
+//! cooperative *shrink* — never a preemption kill — when a rigid gang
+//! arrives in an under-guarantee queue.  Asserted resize invariants:
+//! survivor ContainerIds are stable across both waves, released workers
+//! exit `Released` (never `Killed`/`Preempted`), chaos kills of
+//! survivors keep their real `Killed` status, and no capacity leaks.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tony::util::clock::SystemClock;
+use tony::util::event::WakeupBus;
+use tony::util::ids::{ApplicationId, ContainerId};
+use tony::yarn::{
+    AppState, ContainerCtx, ContainerRequest, ExitStatus, NodeSpec, QueueConf, Resource,
+    ResourceManager, RmConf, SchedulerConf, SubmissionContext,
+};
+
+/// Task body that blocks (event-driven) until its container is killed.
+fn run_until_killed(ctx: ContainerCtx) -> i32 {
+    let clock = SystemClock::new();
+    let bus = Arc::new(WakeupBus::new());
+    ctx.kill_switch().register(&bus);
+    while !ctx.killed() {
+        bus.wait_until(&clock, clock.now_ms() + 10_000);
+    }
+    0
+}
+
+fn submission(name: &str, queue: &str, am_mb: u64) -> SubmissionContext {
+    SubmissionContext {
+        name: name.into(),
+        queue: queue.into(),
+        am_resource: Resource::new(am_mb, 1, 0),
+    }
+}
+
+fn elastic_sched() -> SchedulerConf {
+    SchedulerConf {
+        preemption: true,
+        preemption_grace_ms: 0,
+        // One grow per scenario: a completed resize parks the job for
+        // the rest of the test (shrink ignores the cooldown by design).
+        elastic_cooldown_ms: 600_000,
+        ..Default::default()
+    }
+}
+
+/// What the elastic mini-AM reports back to the test thread after each
+/// wave.
+struct ShrinkReport {
+    target: u32,
+    survivors: Vec<ContainerId>,
+    released: Vec<ContainerId>,
+    /// Exits observed for containers we did NOT release (must stay
+    /// empty: shrink never touches survivors).
+    survivor_exits: Vec<(ContainerId, ExitStatus)>,
+    /// Exit statuses observed for the released set (must all be
+    /// `Released`).
+    released_exits: Vec<(ContainerId, ExitStatus)>,
+}
+
+/// The tentpole scenario: an elastic job in `ml` grows 2 -> 6 workers
+/// into idle capacity, then is shrunk (not preempted) to make room for
+/// a rigid gang in the under-guarantee `etl` queue.
+#[test]
+fn elastic_job_grows_idle_then_shrinks_for_rigid_gang() {
+    // One node keeps the arithmetic exact: after the grow the cluster
+    // holds AM(512) + 6 workers (6144) + the rigid job's AM (512),
+    // leaving 1024 MB free — its 3-worker gang (3072 MB) needs exactly
+    // two cooperative releases, and ml's 25% guarantee floor (2048 MB)
+    // still holds after both.
+    let queues = vec![QueueConf::new("ml", 0.25, 1.0), QueueConf::new("etl", 0.75, 1.0)];
+    let rm = ResourceManager::start_with(
+        vec![NodeSpec::new(0, Resource::new(8192, 16, 0))],
+        queues,
+        RmConf { scheduler: elastic_sched(), ..Default::default() },
+    );
+
+    let worker = Resource::new(1024, 1, 0);
+    let (grown_tx, grown_rx) = mpsc::channel::<Vec<ContainerId>>();
+    let (shrunk_tx, shrunk_rx) = mpsc::channel::<ShrinkReport>();
+    let (finish_tx, finish_rx) = mpsc::channel::<()>();
+    let rm2 = rm.clone();
+    let a = rm
+        .submit_application(
+            submission("elastic-ml", "ml", 512),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                rm2.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm2.clock());
+                rm2.register_am_waker(app, &bus);
+                let clock = rm2.clock().clone();
+                rm2.register_elastic(app, worker, None, 2, 6, 2).unwrap();
+
+                // Initial rigid-looking wave of 2, then serve the
+                // allocate protocol: grow when commanded, shrink when
+                // commanded, release survivors when told to finish.
+                let mut held: Vec<ContainerId> = Vec::new();
+                let mut expected = 2u32;
+                let mut asks = vec![ContainerRequest::new(worker, 2)];
+                let mut grow_acked = false;
+                let mut doomed: Vec<ContainerId> = Vec::new();
+                let mut shrink_target = 0u32;
+                let mut released_exits: Vec<(ContainerId, ExitStatus)> = Vec::new();
+                let mut survivor_exits: Vec<(ContainerId, ExitStatus)> = Vec::new();
+                loop {
+                    let send = std::mem::take(&mut asks);
+                    let resp = rm2.allocate(app, &send, &[]).unwrap();
+                    for c in resp.allocated {
+                        rm2.start_container(&c, BTreeMap::new(), Box::new(run_until_killed))
+                            .unwrap();
+                        held.push(c.id);
+                    }
+                    for st in resp.completed {
+                        if doomed.contains(&st.id) {
+                            released_exits.push((st.id, st.exit));
+                        } else {
+                            survivor_exits.push((st.id, st.exit));
+                        }
+                    }
+                    if let Some(t) = resp.resize_target {
+                        if t > expected {
+                            asks.push(ContainerRequest::new(worker, t - expected));
+                            expected = t;
+                        } else if t < expected && doomed.is_empty() {
+                            // Cooperative release of the highest-index
+                            // (newest) workers, exactly like the real AM.
+                            doomed = held.split_off(t as usize);
+                            shrink_target = t;
+                            rm2.release_workers(app, &doomed);
+                            expected = t;
+                        }
+                    }
+                    // Grow wave complete?
+                    if !grow_acked && expected > 2 && held.len() as u32 == expected {
+                        grow_acked = true;
+                        rm2.note_resized(app, expected);
+                        grown_tx.send(held.clone()).unwrap();
+                    }
+                    // Shrink wave complete once every doomed container
+                    // reported its exit?
+                    if !doomed.is_empty() && released_exits.len() == doomed.len() {
+                        rm2.note_resized(app, shrink_target);
+                        shrunk_tx
+                            .send(ShrinkReport {
+                                target: shrink_target,
+                                survivors: held.clone(),
+                                released: std::mem::take(&mut doomed),
+                                survivor_exits: survivor_exits.clone(),
+                                released_exits: std::mem::take(&mut released_exits),
+                            })
+                            .unwrap();
+                        break;
+                    }
+                    bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                }
+
+                // Hold the survivors until the rigid gang is done, then
+                // drain and finish.
+                finish_rx.recv().unwrap();
+                let mut done = 0;
+                let mut released = false;
+                while done < held.len() {
+                    let rel: &[ContainerId] = if released { &[] } else { &held };
+                    let resp = rm2.allocate(app, &[], rel).unwrap();
+                    released = true;
+                    done += resp.completed.len();
+                    if done < held.len() {
+                        bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                    }
+                }
+                rm2.finish_application(app, true, "elastic job survived both waves");
+                0
+            }),
+        )
+        .unwrap();
+
+    // ---- wave 1: grow into idle capacity ----
+    let after_grow = grown_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("elastic job never received its grow command");
+    assert_eq!(after_grow.len(), 6, "deficit 4 within max-resize-per-round 4: 2 -> 6");
+    let ml = rm.queue_stats().into_iter().find(|q| &*q.name == "ml").unwrap();
+    assert_eq!(ml.elastic_jobs, 1);
+    assert_eq!(ml.elastic_workers, 6, "acknowledged count after the grow wave");
+    assert_eq!(ml.elastic_grows, 4);
+
+    // ---- wave 2: a rigid gang in under-guarantee etl forces a shrink ----
+    let rm3 = rm.clone();
+    let b = rm
+        .submit_application(
+            submission("rigid-etl", "etl", 512),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm3.cluster_ts, seq: 2 };
+                rm3.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm3.clock());
+                rm3.register_am_waker(app, &bus);
+                let clock = rm3.clock().clone();
+                let asks = vec![ContainerRequest::new(Resource::new(1024, 1, 0), 3)];
+                let mut asked = false;
+                let mut done = 0;
+                while done < 3 {
+                    let send: &[ContainerRequest] = if asked { &[] } else { &asks };
+                    let resp = rm3.allocate(app, send, &[]).unwrap();
+                    asked = true;
+                    for c in resp.allocated {
+                        rm3.start_container(&c, BTreeMap::new(), Box::new(|_| 0)).unwrap();
+                    }
+                    done += resp.completed.iter().filter(|s| s.exit.is_success()).count();
+                    if done < 3 {
+                        bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                    }
+                }
+                rm3.finish_application(app, true, "rigid gang ran on released capacity");
+                0
+            }),
+        )
+        .unwrap();
+
+    let report = shrunk_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("elastic job never received its shrink command");
+    // Released workers are the newest ones; survivors keep their exact
+    // ContainerIds from before the shrink (stability invariant).
+    assert_eq!(report.target, 4, "zero-benefit pruning releases exactly what the gang needs");
+    assert_eq!(report.released.len(), 2);
+    assert_eq!(report.survivors, after_grow[..report.target as usize].to_vec());
+    assert_eq!(report.released, after_grow[report.target as usize..].to_vec());
+    for (cid, exit) in &report.released_exits {
+        assert_eq!(
+            *exit,
+            ExitStatus::Released,
+            "cooperatively released {cid} must exit Released, not a fault"
+        );
+    }
+    assert!(
+        report.survivor_exits.is_empty(),
+        "shrink must not touch survivors: {:?}",
+        report.survivor_exits
+    );
+
+    let rb = rm.wait_for_completion(b, Duration::from_secs(60)).unwrap();
+    assert_eq!(rb.state, AppState::Finished, "{}", rb.diagnostics);
+    finish_tx.send(()).unwrap();
+    let ra = rm.wait_for_completion(a, Duration::from_secs(60)).unwrap();
+    assert_eq!(ra.state, AppState::Finished, "{}", ra.diagnostics);
+
+    // Shrink was preferred over preemption: zero kills, zero rounds.
+    let stats = rm.scheduler_stats();
+    assert_eq!(stats.preemptions, 0, "no preemption kill may happen when shrink suffices");
+    assert_eq!(stats.preemption_rounds, 0);
+    assert_eq!(stats.elastic_grows, 4);
+    assert_eq!(stats.elastic_shrink_rounds, 1);
+    assert_eq!(stats.elastic_released as usize, report.released.len());
+    let ml = rm.queue_stats().into_iter().find(|q| &*q.name == "ml").unwrap();
+    assert_eq!(ml.elastic_shrinks as usize, report.released.len());
+    assert_eq!(ml.preemptions, 0);
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leaked");
+    }
+}
+
+/// Chaos mid-shrink: a *survivor* killed while a release wave is in
+/// flight must come back `Killed` (a real fault signal), never
+/// `Released` — and the released set must not leak or double-fire.
+#[test]
+fn chaos_kill_mid_shrink_is_not_mistaken_for_release() {
+    let rm = ResourceManager::start_with(
+        vec![NodeSpec::new(0, Resource::new(8192, 16, 0))],
+        QueueConf::default_only(),
+        RmConf { scheduler: elastic_sched(), ..Default::default() },
+    );
+    let worker = Resource::new(1024, 1, 0);
+    let (exits_tx, exits_rx) = mpsc::channel::<Vec<(ContainerId, ExitStatus)>>();
+    let rm2 = rm.clone();
+    let a = rm
+        .submit_application(
+            submission("elastic-chaos", "default", 512),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                rm2.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm2.clock());
+                rm2.register_am_waker(app, &bus);
+                let clock = rm2.clock().clone();
+                rm2.register_elastic(app, worker, None, 1, 4, 4).unwrap();
+
+                let mut held: Vec<ContainerId> = Vec::new();
+                let mut asked = false;
+                while held.len() < 4 {
+                    let asks = vec![ContainerRequest::new(worker, 4)];
+                    let send: &[ContainerRequest] = if asked { &[] } else { &asks };
+                    let resp = rm2.allocate(app, send, &[]).unwrap();
+                    asked = true;
+                    for c in resp.allocated {
+                        rm2.start_container(&c, BTreeMap::new(), Box::new(run_until_killed))
+                            .unwrap();
+                        held.push(c.id);
+                    }
+                    if held.len() < 4 {
+                        bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                    }
+                }
+
+                // Shrink wave: cooperatively release the two newest
+                // workers... and mid-wave, chaos kills a survivor.
+                let doomed = held.split_off(2);
+                rm2.release_workers(app, &doomed);
+                rm2.stop_container(held[1]); // the chaos kill
+                let mut exits: Vec<(ContainerId, ExitStatus)> = Vec::new();
+                while exits.len() < 3 {
+                    let resp = rm2.allocate(app, &[], &[]).unwrap();
+                    for st in resp.completed {
+                        exits.push((st.id, st.exit));
+                    }
+                    if exits.len() < 3 {
+                        bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                    }
+                }
+                rm2.note_resized(app, 2);
+                exits_tx.send(exits).unwrap();
+
+                // Drain the last survivor and finish.
+                let last = vec![held[0]];
+                let mut done = 0;
+                let mut released = false;
+                while done < 1 {
+                    let rel: &[ContainerId] = if released { &[] } else { &last };
+                    let resp = rm2.allocate(app, &[], rel).unwrap();
+                    released = true;
+                    done += resp.completed.len();
+                    if done < 1 {
+                        bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                    }
+                }
+                rm2.finish_application(app, true, "reconciled after chaos mid-shrink");
+                0
+            }),
+        )
+        .unwrap();
+
+    let exits = exits_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("shrink + chaos exits never arrived");
+    let released: Vec<_> =
+        exits.iter().filter(|(_, e)| *e == ExitStatus::Released).collect();
+    let killed: Vec<_> = exits.iter().filter(|(_, e)| *e == ExitStatus::Killed).collect();
+    assert_eq!(released.len(), 2, "exactly the two released workers exit Released: {exits:?}");
+    assert_eq!(killed.len(), 1, "the chaos-killed survivor keeps its real Killed status");
+    let ra = rm.wait_for_completion(a, Duration::from_secs(60)).unwrap();
+    assert_eq!(ra.state, AppState::Finished, "{}", ra.diagnostics);
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leaked");
+    }
+}
+
+/// Attempt-restart / re-attach semantics: re-registering the elastic
+/// profile mid-resize clears the in-flight command (the dead attempt's
+/// wave can no longer complete) and the job re-converges to the planned
+/// target from scratch.
+#[test]
+fn reregistration_clears_inflight_resize_and_reconverges() {
+    let sched = SchedulerConf {
+        preemption: true,
+        preemption_grace_ms: 0,
+        elastic_cooldown_ms: 0, // replan immediately after the reset
+        ..Default::default()
+    };
+    let rm = ResourceManager::start_with(
+        vec![NodeSpec::new(0, Resource::new(8192, 16, 0))],
+        QueueConf::default_only(),
+        RmConf { scheduler: sched, ..Default::default() },
+    );
+    let worker = Resource::new(1024, 1, 0);
+    let (done_tx, done_rx) = mpsc::channel::<usize>();
+    let rm2 = rm.clone();
+    let a = rm
+        .submit_application(
+            submission("elastic-restart", "default", 512),
+            Box::new(move |_| {
+                let app = ApplicationId { cluster_ts: rm2.cluster_ts, seq: 1 };
+                rm2.register_am(app, None).unwrap();
+                let bus = WakeupBus::for_clock(rm2.clock());
+                rm2.register_am_waker(app, &bus);
+                let clock = rm2.clock().clone();
+                rm2.register_elastic(app, worker, None, 2, 6, 2).unwrap();
+
+                let mut held: Vec<ContainerId> = Vec::new();
+                let mut expected = 2u32;
+                let mut asks = vec![ContainerRequest::new(worker, 2)];
+                let mut reregistered = false;
+                loop {
+                    let send = std::mem::take(&mut asks);
+                    let resp = rm2.allocate(app, &send, &[]).unwrap();
+                    for c in resp.allocated {
+                        rm2.start_container(&c, BTreeMap::new(), Box::new(run_until_killed))
+                            .unwrap();
+                        held.push(c.id);
+                    }
+                    if let Some(t) = resp.resize_target {
+                        if !reregistered {
+                            // Simulate the attempt restart: the wave the
+                            // RM just commanded dies with the attempt;
+                            // re-registration resets resize state.
+                            reregistered = true;
+                            rm2.register_elastic(app, worker, None, 2, 6, 2).unwrap();
+                        } else if t > expected {
+                            asks.push(ContainerRequest::new(worker, t - expected));
+                            expected = t;
+                        }
+                    }
+                    if reregistered && expected > 2 && held.len() as u32 == expected {
+                        rm2.note_resized(app, expected);
+                        break;
+                    }
+                    bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                }
+                done_tx.send(held.len()).unwrap();
+
+                // Drain and finish.
+                let mut done = 0;
+                let mut released = false;
+                while done < held.len() {
+                    let rel: &[ContainerId] = if released { &[] } else { &held };
+                    let resp = rm2.allocate(app, &[], rel).unwrap();
+                    released = true;
+                    done += resp.completed.len();
+                    if done < held.len() {
+                        bus.wait_until(&*clock, clock.now_ms() + 2_000);
+                    }
+                }
+                rm2.finish_application(app, true, "reconverged after mid-resize restart");
+                0
+            }),
+        )
+        .unwrap();
+
+    let held = done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("job never reconverged after the restart");
+    assert_eq!(held, 6, "the replanned grow converges to the same target, not double-applied");
+    let q = rm.queue_stats().into_iter().find(|q| &*q.name == "default").unwrap();
+    assert_eq!(q.elastic_workers, 6);
+    let ra = rm.wait_for_completion(a, Duration::from_secs(60)).unwrap();
+    assert_eq!(ra.state, AppState::Finished, "{}", ra.diagnostics);
+    assert_eq!(rm.scheduler_stats().preemptions, 0);
+    for (_, free, cap) in rm.node_usage() {
+        assert_eq!(free, cap, "capacity leaked");
+    }
+}

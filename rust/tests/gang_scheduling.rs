@@ -176,6 +176,7 @@ fn preemption_restores_starved_queue_to_its_guarantee() {
         preemption: true,
         preemption_grace_ms: 0,
         preemption_max_victims: 8,
+        ..Default::default()
     };
     let rm = ResourceManager::start_with(
         vec![

@@ -419,6 +419,15 @@ enum Op {
     KillNode { k: usize },
     /// Plan a preemption round over the current live containers.
     Preempt { max_victims: usize },
+    /// Register the k-th seen app (mod app count) as elastic with a
+    /// random `[min, max]` band around its current registration count.
+    RegisterElastic { k: usize, min: u32, span: u32 },
+    /// Plan one elastic grow (everyone cooldown-eligible).
+    ElasticGrow { max_delta: u32 },
+    /// Plan one elastic shrink round over the current live containers,
+    /// then apply it the way the RM/AM pair would: newest containers of
+    /// each shrunk app are released.
+    ElasticShrink { max_victims: usize, max_per_app: u32 },
 }
 
 fn gen_script(g: &mut Gen, n_queues: usize) -> Vec<Op> {
@@ -426,7 +435,7 @@ fn gen_script(g: &mut Gen, n_queues: usize) -> Vec<Op> {
     let mut gang = 1u64;
     let mut app = 1u64;
     (0..n_ops)
-        .map(|_| match g.usize_up_to(9) {
+        .map(|_| match g.usize_up_to(12) {
             0 | 1 => {
                 app += 1;
                 Op::Singles {
@@ -450,6 +459,16 @@ fn gen_script(g: &mut Gen, n_queues: usize) -> Vec<Op> {
             4 | 5 | 6 => Op::Schedule,
             7 => Op::Release { k: g.usize_up_to(31) },
             8 => Op::Preempt { max_victims: g.range(1, 8) as usize },
+            9 => Op::RegisterElastic {
+                k: g.usize_up_to(31),
+                min: g.range(1, 3) as u32,
+                span: g.range(0, 6) as u32,
+            },
+            10 => Op::ElasticGrow { max_delta: g.range(1, 5) as u32 },
+            11 => Op::ElasticShrink {
+                max_victims: g.range(1, 8) as usize,
+                max_per_app: g.range(1, 5) as u32,
+            },
             _ => Op::KillNode { k: g.usize_up_to(31) },
         })
         .collect()
@@ -550,6 +569,74 @@ fn replay(
                     sched.release_container(&qnames[qi], node, r);
                 }
             }
+            Op::RegisterElastic { k, min, span } => {
+                if !live.is_empty() {
+                    let (_, app, qi, _, r, _) = live[k % live.len()].clone();
+                    let current = live.iter().filter(|c| c.1 == app).count() as u32;
+                    let mn = (*min).min(current).max(1);
+                    let mx = (current + span).max(mn);
+                    let a = ApplicationId { cluster_ts: 1, seq: app };
+                    sched.register_elastic(a, &qnames[qi], r, None, mn, mx, current);
+                    trace.push(format!("elastic {app} {mn}..{mx} @{current}"));
+                }
+            }
+            Op::ElasticGrow { max_delta } => {
+                if let Some((app, target)) = sched.elastic_grow_plan(*max_delta, &|_| true) {
+                    let p = sched.elastic_profile(app).expect("grow target for unregistered app");
+                    assert!(
+                        target > p.current && target <= p.max,
+                        "grow target {target} outside ({}, {}] for app {}",
+                        p.current,
+                        p.max,
+                        app.seq
+                    );
+                    // The AM would launch the delta wave; the replay only
+                    // acknowledges the new target (worker containers land
+                    // through ordinary asks, which later ops may add).
+                    sched.set_elastic_current(app, target);
+                    trace.push(format!("grow {} -> {target}", app.seq));
+                }
+            }
+            Op::ElasticShrink { max_victims, max_per_app } => {
+                let candidates: Vec<VictimCandidate> = live
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (cid, app, qi, node, r, gang))| VictimCandidate {
+                        container: *cid,
+                        app: ApplicationId { cluster_ts: 1, seq: *app },
+                        queue: std::sync::Arc::from(qnames[*qi].as_str()),
+                        node: *node,
+                        resource: *r,
+                        gang: *gang,
+                        seq: i as u64 + 1,
+                    })
+                    .collect();
+                for (app, target) in sched.elastic_shrink_plan(&candidates, *max_victims, *max_per_app)
+                {
+                    let p = sched.elastic_profile(app).expect("shrink target for unregistered app");
+                    assert!(
+                        target >= p.min && target <= p.max,
+                        "shrink target {target} outside [{}, {}] for app {}",
+                        p.min,
+                        p.max,
+                        app.seq
+                    );
+                    let old = p.current;
+                    sched.set_elastic_current(app, target);
+                    trace.push(format!("shrink {} {old} -> {target}", app.seq));
+                    // The owning AM releases its newest workers; capacity
+                    // returns exactly as a cooperative release would.
+                    for _ in target..old {
+                        let pos = match live.iter().rposition(|c| c.1 == app.seq) {
+                            Some(p) => p,
+                            None => break,
+                        };
+                        let (_, _, qi, node, r, _) = live.remove(pos);
+                        sched.release_container(&qnames[qi], node, r);
+                        trace.push(format!("eshrink-release {} {}", node.0, r.memory_mb));
+                    }
+                }
+            }
         }
         verify(&sched);
     }
@@ -594,6 +681,94 @@ fn index_invariants_hold_after_every_mutation() {
         // cached-share / counter inconsistency after any step.
         replay(&script, &queues, &nodes, total, false, true);
         replay(&script, &queues, &nodes, total, true, true);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PR 10 elasticity: whenever a kill-based preemption round would fire
+// against an elastic job with release budget for every victim, the
+// cooperative shrink planner must find a plan too — the RM runs shrink
+// first, so those kills never happen.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shrink_plan_exists_whenever_preemption_would_kill_an_elastic_job() {
+    check("shrink preferred over preemption", 150, |g| {
+        // Slot-uniform cluster so the victim arithmetic is exact: one
+        // node of `n_slots` identical slots, fully occupied by queue b's
+        // elastic app; queue a's blocked gang needs `k` of them, with
+        // `k` inside both b's elastic release budget and a's guarantee.
+        let slot = Resource::new(1024, 1, 0);
+        let n_slots = g.range(3, 8) as u32;
+        let mn = g.range(1, n_slots as u64 - 1) as u32;
+        let k = g.range(1, (n_slots - mn) as u64) as u32;
+        // a's guarantee must cover the gang (k/n slots) and b's must
+        // survive losing k slots — both reduce to cap_a >= k/n.
+        let cap_a = ((k as f64 / n_slots as f64) + g.f64() * 0.3).min(0.95);
+        let queues = vec![
+            QueueConf::new("a", cap_a, 1.0),
+            QueueConf::new("b", 1.0 - cap_a, 1.0),
+        ];
+        let cap = Resource::new(1024 * n_slots as u64, n_slots, 0);
+        let max_victims = g.range(k as u64, 8) as usize;
+        let max_per_app = g.range(k as u64, 8) as u32;
+        let app_a = ApplicationId { cluster_ts: 1, seq: 1 };
+        let app_b = ApplicationId { cluster_ts: 1, seq: 2 };
+        // Two identically-built schedulers (placement is deterministic —
+        // tested above): one answers "would preemption kill?", the other
+        // "does a cooperative shrink plan exist?".  Both planners mutate
+        // reservations on success, so they cannot share an instance.
+        let build = || {
+            let mut sched = CapacityScheduler::new(queues.clone(), cap);
+            sched.set_nodes(vec![SchedNode::new(0, None, cap)]);
+            sched.add_asks(app_b, "b", &[ContainerRequest::new(slot, n_slots)], 0);
+            let grants = sched.schedule();
+            assert_eq!(grants.len(), n_slots as usize, "b fills the node exactly");
+            let candidates: Vec<VictimCandidate> = grants
+                .iter()
+                .enumerate()
+                .map(|(i, gr)| VictimCandidate {
+                    container: ContainerId { app: app_b, seq: i as u64 + 1 },
+                    app: app_b,
+                    queue: std::sync::Arc::from("b"),
+                    node: gr.node,
+                    resource: gr.ask.resource,
+                    gang: None,
+                    seq: i as u64 + 1,
+                })
+                .collect();
+            sched.register_elastic(app_b, "b", slot, None, mn, n_slots, n_slots);
+            sched.add_asks_gang(app_a, "a", &[ContainerRequest::new(slot, k)], 1000, Some(1));
+            (sched, candidates)
+        };
+
+        let (mut s_kill, cands) = build();
+        let victims = s_kill.preemption_plan(&cands, max_victims);
+        prop_assert_eq!(victims.len(), k as usize, "preemption frees exactly the gang's hole");
+
+        let (mut s_coop, cands2) = build();
+        let plan = s_coop.elastic_shrink_plan(&cands2, max_victims, max_per_app);
+        prop_assert!(
+            !plan.is_empty(),
+            "preemption would kill {} container(s) of an elastic job with budget {} — \
+             shrink must offer a plan first",
+            victims.len(),
+            (n_slots - mn).min(max_per_app)
+        );
+        prop_assert_eq!(&plan, &vec![(app_b, n_slots - k)]);
+        for (app, target) in &plan {
+            let p = s_coop.elastic_profile(*app).unwrap();
+            prop_assert!(
+                *target >= p.min && *target <= p.max,
+                "shrink target {} outside [{}, {}]",
+                target,
+                p.min,
+                p.max
+            );
+        }
+        s_kill.verify_invariants();
+        s_coop.verify_invariants();
         Ok(())
     });
 }

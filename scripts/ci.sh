@@ -26,7 +26,7 @@ TONY_BENCH_SMOKE=1 cargo bench --bench bench_recovery
 echo "==> latency bench smoke (event-driven vs poll fallback + trace overhead <5%)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_latency
 
-echo "==> contention bench smoke (gang mode deadlock-freedom at 2/8 jobs)"
+echo "==> contention bench smoke (gang deadlock-freedom + elastic goodput >= rigid-only at 2/8 jobs)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_contention
 
 echo "==> scheduler bench smoke (10k-node scenario: p99 allocate bound + indexed >= 10x linear)"
@@ -40,6 +40,11 @@ echo "==> crash-recovery suite (WAL crash points + mid-allocate-wave restart)"
 # durability regression is named in CI output, not buried in the batch.
 cargo test -q --test crash_recovery
 cargo test -q --test prop_wal
+
+echo "==> elastic-jobs suite (grow/shrink waves, released exits, shrink-over-preempt)"
+# Also in the batch above; named so a resize-invariant regression is
+# visible in CI output.
+cargo test -q --test elastic_jobs
 
 echo "==> gateway bench smoke (multi-tenant throughput + WAL submit-path overhead)"
 TONY_BENCH_SMOKE=1 cargo bench --bench bench_gateway
